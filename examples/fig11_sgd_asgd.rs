@@ -1,0 +1,27 @@
+//! Fig. 11: ImageNet validation accuracy vs (virtual) time — dist-SGD vs
+//! mpi-SGD vs dist-ASGD vs mpi-ASGD on the testbed1 configuration
+//! (12 workers, 2 servers; MPI modes group them into 2 clients of 6).
+//!
+//!     cargo run --release --example fig11_sgd_asgd [epochs]
+
+use std::path::PathBuf;
+
+fn main() -> anyhow::Result<()> {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let epochs = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(8);
+    let runs = mxnet_mpi::figures::fig11(&root.join("artifacts"), &root.join("results"), epochs)?;
+    mxnet_mpi::figures::print_acc_vs_time("Fig 11: dist-vs-MPI SGD optimizations", &runs);
+    // Paper shape: mpi-SGD trains significantly faster than dist-SGD and
+    // mpi-ASGD faster than dist-ASGD (acc-vs-time dominance).
+    let at = |label: &str| runs.iter().find(|r| r.label == label).unwrap();
+    for (mpi, dist) in [("mpi-SGD", "dist-SGD"), ("mpi-ASGD", "dist-ASGD")] {
+        let (m, d) = (at(mpi), at(dist));
+        println!(
+            "{mpi}: final acc {:.3} @ {:.0}s | {dist}: final acc {:.3} @ {:.0}s",
+            m.final_acc(), m.records.last().unwrap().vtime,
+            d.final_acc(), d.records.last().unwrap().vtime
+        );
+    }
+    println!("CSV -> results/fig11_sgd_asgd.csv");
+    Ok(())
+}

@@ -1,0 +1,26 @@
+//! Fig. 12: ImageNet average epoch time (virtual seconds) for all six
+//! parallelization modes. The paper reports ~6x improvement of the MPI
+//! modes over the dist (pure PS) modes.
+//!
+//!     cargo run --release --example fig12_epoch_time [epochs]
+
+use mxnet_mpi::metrics::Table;
+use std::path::PathBuf;
+
+fn main() -> anyhow::Result<()> {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let epochs = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(3);
+    let bars = mxnet_mpi::figures::fig12(&root.join("artifacts"), &root.join("results"), epochs)?;
+    let mut t = Table::new(&["mode", "avg epoch time (s)"]);
+    for (label, s) in &bars {
+        t.row(vec![label.clone(), format!("{s:.1}")]);
+    }
+    println!("== Fig 12: Imagenet Avg Epoch time ==\n{}", t.render());
+    let get = |l: &str| bars.iter().find(|(x, _)| x == l).unwrap().1;
+    println!(
+        "dist-SGD / mpi-SGD epoch-time factor: {:.1}x (paper: ~6x)",
+        get("dist-SGD") / get("mpi-SGD")
+    );
+    println!("CSV -> results/fig12_epoch_time.csv");
+    Ok(())
+}

@@ -1,0 +1,21 @@
+//! Fig. 13: KVStore-MPI based SGD optimizations — mpi-ESGD vs dist-ESGD vs
+//! mpi-SGD vs mpi-ASGD, validation accuracy vs virtual time. The paper's
+//! claim: mpi-ESGD performs best (communication-avoiding lazy sync),
+//! dist-ESGD worst despite similar epoch time (12 one-worker clients
+//! suffer staleness).
+//!
+//!     cargo run --release --example fig13_esgd [epochs]
+
+use std::path::PathBuf;
+
+fn main() -> anyhow::Result<()> {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let epochs = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(8);
+    let runs = mxnet_mpi::figures::fig13(&root.join("artifacts"), &root.join("results"), epochs)?;
+    mxnet_mpi::figures::print_acc_vs_time("Fig 13: KVStore-MPI based SGD optimizations", &runs);
+    for r in &runs {
+        println!("{:>10}: final acc {:.3}, avg epoch {:.1}s", r.label, r.final_acc(), r.avg_epoch_time);
+    }
+    println!("CSV -> results/fig13_esgd.csv");
+    Ok(())
+}

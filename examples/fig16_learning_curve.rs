@@ -1,0 +1,18 @@
+//! Fig. 16: Resnet-50 learning curve in the pure-MPI configuration
+//! (#servers = 0, mpi-SGD, testbed2 cost model, doubled learning rate for
+//! the larger effective batch — the paper uses 0.5 instead of 0.1 and
+//! reaches 0.72 validation accuracy).
+//!
+//!     cargo run --release --example fig16_learning_curve [epochs]
+
+use std::path::PathBuf;
+
+fn main() -> anyhow::Result<()> {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let epochs = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(16);
+    let runs = mxnet_mpi::figures::fig16(&root.join("artifacts"), &root.join("results"), epochs)?;
+    mxnet_mpi::figures::print_acc_vs_time("Fig 16: Resnet-50 Learning curves (pure MPI)", &runs);
+    println!("final accuracy: {:.3}", runs[0].final_acc());
+    println!("CSV -> results/fig16_learning_curve.csv");
+    Ok(())
+}

@@ -1,0 +1,1 @@
+"""Build-time compile package: L2 JAX models + L1 Pallas kernels + AOT."""

@@ -1,0 +1,145 @@
+"""AOT pipeline: lower L2/L1 to HLO **text** + metadata for the Rust runtime.
+
+Python runs exactly once, at build time (``make artifacts``); the Rust
+coordinator is self-contained afterwards. Interchange is HLO *text*, not a
+serialized ``HloModuleProto``: jax >= 0.5 emits protos with 64-bit
+instruction ids that xla_extension 0.5.1 rejects, while the text parser
+reassigns ids (see /opt/xla-example/README.md).
+
+Per model variant we emit:
+
+    {name}_grad.hlo.txt     (params, x, y) -> (loss, grads)
+    {name}_eval.hlo.txt     (params, x, y) -> (loss, n_correct)
+    {name}_init.bin         f32 LE initial flat parameters
+    sgd_{n}.hlo.txt         (hyper[4], w, g, m) -> (w', m')
+    elastic1_{n}.hlo.txt    (alpha[1], center, w) -> center'
+    elastic2_{n}.hlo.txt    (alpha[1], w, center) -> w'
+    elastic_fused_{n}.hlo.txt (alpha[1], w, center) -> (w', center')
+    tensor_reduce_{k}x{n}.hlo.txt  f32[k, n] -> f32[n]
+
+plus ``meta.json`` describing shapes, per-layer segments (KVStore keys) and
+artifact filenames.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import kernels as K
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _write(out_dir: str, fname: str, text: str) -> str:
+    path = os.path.join(out_dir, fname)
+    with open(path, "w") as f:
+        f.write(text)
+    return fname
+
+
+def lower_variant(cfg, out_dir: str, tensor_ks=(2, 4)) -> dict:
+    grad_step, eval_step, segs, x_spec, y_spec = M.make_model(cfg)
+    n = M.total_size(segs)
+    p_spec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    name = cfg.name
+
+    arts = {}
+    arts["grad"] = _write(
+        out_dir, f"{name}_grad.hlo.txt",
+        to_hlo_text(jax.jit(grad_step).lower(p_spec, x_spec, y_spec)),
+    )
+    arts["eval"] = _write(
+        out_dir, f"{name}_eval.hlo.txt",
+        to_hlo_text(jax.jit(eval_step).lower(p_spec, x_spec, y_spec)),
+    )
+
+    init = M.init_params(cfg, seed=0)
+    init_name = f"{name}_init.bin"
+    init.astype("<f4").tofile(os.path.join(out_dir, init_name))
+    arts["init"] = init_name
+
+    # Optimizer / collective-math artifacts sized to this parameter count.
+    v = jax.ShapeDtypeStruct((n,), jnp.float32)
+    h4 = jax.ShapeDtypeStruct((4,), jnp.float32)
+    a1 = jax.ShapeDtypeStruct((1,), jnp.float32)
+
+    arts["sgd"] = _write(
+        out_dir, f"sgd_{n}.hlo.txt",
+        to_hlo_text(jax.jit(lambda h, w, g, m: K.sgd_update(w, g, m, h)).lower(h4, v, v, v)),
+    )
+    arts["elastic1"] = _write(
+        out_dir, f"elastic1_{n}.hlo.txt",
+        to_hlo_text(jax.jit(lambda a, c, w: (K.elastic1(c, w, a),)).lower(a1, v, v)),
+    )
+    arts["elastic2"] = _write(
+        out_dir, f"elastic2_{n}.hlo.txt",
+        to_hlo_text(jax.jit(lambda a, w, c: (K.elastic2(w, c, a),)).lower(a1, v, v)),
+    )
+    arts["elastic_fused"] = _write(
+        out_dir, f"elastic_fused_{n}.hlo.txt",
+        to_hlo_text(jax.jit(lambda a, w, c: K.elastic_fused(w, c, a)).lower(a1, v, v)),
+    )
+    for k in tensor_ks:
+        kv = jax.ShapeDtypeStruct((k, n), jnp.float32)
+        arts[f"tensor_reduce{k}"] = _write(
+            out_dir, f"tensor_reduce_{k}x{n}.hlo.txt",
+            to_hlo_text(jax.jit(lambda s: (K.tensor_reduce(s),)).lower(kv)),
+        )
+
+    def spec_json(s):
+        return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+    return {
+        "params": n,
+        "kind": type(cfg).__name__,
+        "config": {k_: v_ for k_, v_ in cfg.__dict__.items()},
+        "x": spec_json(x_spec),
+        "y": spec_json(y_spec),
+        "segments": [
+            {"name": s.name, "offset": s.offset, "size": s.size, "shape": list(s.shape)}
+            for s in segs
+        ],
+        "artifacts": arts,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--variants",
+        default="mlp_tiny,mlp,transformer_tiny,transformer",
+        help="comma-separated subset of " + ",".join(M.VARIANTS),
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    meta = {"variants": {}}
+    for vname in args.variants.split(","):
+        vname = vname.strip()
+        cfg = M.VARIANTS[vname]
+        print(f"[aot] lowering {vname} ...", flush=True)
+        meta["variants"][vname] = lower_variant(cfg, args.out_dir)
+
+    meta_path = os.path.join(args.out_dir, "meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=2)
+    sizes = {v: meta["variants"][v]["params"] for v in meta["variants"]}
+    print(f"[aot] wrote {meta_path}; param counts: {sizes}")
+
+
+if __name__ == "__main__":
+    main()

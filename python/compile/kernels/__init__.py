@@ -1,0 +1,17 @@
+"""L1 Pallas kernels for the MXNET-MPI reproduction (build-time only)."""
+
+from .elastic_update import elastic1, elastic2, elastic_fused
+from .matmul import matmul, matmul_pallas
+from .sgd_update import sgd_update
+from .tensor_reduce import reduce_pair, tensor_reduce
+
+__all__ = [
+    "elastic1",
+    "elastic2",
+    "elastic_fused",
+    "matmul",
+    "matmul_pallas",
+    "sgd_update",
+    "reduce_pair",
+    "tensor_reduce",
+]

@@ -1,0 +1,81 @@
+"""L1 Pallas kernels: elastic-averaging SGD updates (paper eqs. 2-3).
+
+Elastic averaging (Zhang et al. 2015, paper §2.2) keeps *center variables*
+w~ on the PS and applies, every INTERVAL iterations:
+
+    server (Elastic1):  w~ <- w~ + alpha * (w - w~)      (eq. 2)
+    client (Elastic2):  w  <- w  - alpha * (w - w~)      (eq. 3)
+
+Both sides read the *pre-update* (w - w~) difference, so the fused kernel
+computes the difference once and emits both outputs; the split kernels
+mirror the paper's deployment (Elastic1 shipped to the PS via
+set_optimizer, Elastic2 run by the MPI client, Fig. 8 lines 2/12).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Single grid step whenever the vector fits; first vector argument
+# aliases the first output (in-place update). See sgd_update.py.
+BLOCK = 1 << 20
+
+
+def _elastic1_kernel(a_ref, c_ref, w_ref, c_out):
+    alpha = a_ref[0]
+    c_out[...] = c_ref[...] + alpha * (w_ref[...] - c_ref[...])
+
+
+def _elastic2_kernel(a_ref, w_ref, c_ref, w_out):
+    alpha = a_ref[0]
+    w_out[...] = w_ref[...] - alpha * (w_ref[...] - c_ref[...])
+
+
+def _elastic_fused_kernel(a_ref, w_ref, c_ref, w_out, c_out):
+    alpha = a_ref[0]
+    diff = w_ref[...] - c_ref[...]
+    c_out[...] = c_ref[...] + alpha * diff
+    w_out[...] = w_ref[...] - alpha * diff
+
+
+def _blocked_1d(kernel, n_out, args, *, block=BLOCK, aliases=None):
+    """Run an elementwise 1-D kernel over equally-shaped flat vectors.
+
+    args[0] is the f32[1] scalar block (broadcast); the rest are f32[n].
+    """
+    n = args[1].shape[0]
+    blk = min(block, n)
+    pad = (-n) % blk
+    vecs = [jnp.pad(v, (0, pad)) if pad else v for v in args[1:]]
+    np_ = n + pad
+    grid = (np_ // blk,)
+    vec_spec = pl.BlockSpec((blk,), lambda i: (i,))
+    outs = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1,), lambda i: (0,))] + [vec_spec] * len(vecs),
+        out_specs=[vec_spec] * n_out if n_out > 1 else vec_spec,
+        out_shape=[jax.ShapeDtypeStruct((np_,), jnp.float32)] * n_out
+        if n_out > 1
+        else jax.ShapeDtypeStruct((np_,), jnp.float32),
+        input_output_aliases=aliases or {},
+        interpret=True,
+    )(args[0], *vecs)
+    if n_out == 1:
+        return outs[:n]
+    return tuple(o[:n] for o in outs)
+
+
+def elastic1(center, w, alpha):
+    """Server-side center update (eq. 2). alpha: f32[1]."""
+    return _blocked_1d(_elastic1_kernel, 1, (alpha, center, w), aliases={1: 0})
+
+
+def elastic2(w, center, alpha):
+    """Client-side parameter update (eq. 3). alpha: f32[1]."""
+    return _blocked_1d(_elastic2_kernel, 1, (alpha, w, center), aliases={1: 0})
+
+
+def elastic_fused(w, center, alpha):
+    """Both updates from the shared pre-update difference -> (w', center')."""
+    return _blocked_1d(_elastic_fused_kernel, 2, (alpha, w, center), aliases={1: 0, 2: 1})

@@ -1,0 +1,107 @@
+"""L1 Pallas matmul kernel — the model's dense-layer hot spot.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's CUDA
+matmuls (cuBLAS under MXNET) map on TPU to an MXU-targeted tiled matmul.
+Tiles are chosen MXU/VMEM friendly: (bm, bk) x (bk, bn) blocks, with the
+output block revisited across the K grid dimension as the accumulator —
+the classic Pallas schedule where BlockSpec index maps express the
+HBM<->VMEM movement that the paper's thread blocks expressed in CUDA.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls, so the kernel lowers to plain HLO; structure (BlockSpec
+schedule, VMEM footprint) is what we optimize, not CPU wall-clock.
+
+Autodiff: ``pallas_call`` has no VJP, so ``matmul`` carries a custom VJP
+whose backward pass reuses the same kernel (dA = dY @ B^T, dB = A^T @ dY).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. 128 matches the MXU systolic array edge; a
+# (128,128)x(128,128) step holds 3 f32 tiles = 192 KiB in VMEM, leaving
+# ample room for double buffering within the ~16 MiB budget.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, *, n_k: int):
+    """One (i, j, k) grid step: o += A[i,k] @ B[k,j], o zeroed at k == 0."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad_to(x, mult_r, mult_c):
+    r, c = x.shape
+    pr = (-r) % mult_r
+    pc = (-c) % mult_c
+    if pr or pc:
+        x = jnp.pad(x, ((0, pr), (0, pc)))
+    return x
+
+
+def _tile(dim, pref, align):
+    """Largest multiple of ``align`` <= min(pref, dim), or dim if tiny."""
+    if dim <= align:
+        return dim
+    t = min(pref, dim)
+    return max(align, t - t % align)
+
+
+def matmul_pallas(a, b, *, bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK):
+    """C = A @ B via the Pallas kernel, padding ragged edges to tile size."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {a.shape} @ {b.shape}"
+    bm_ = _tile(m, bm, 8)
+    bn_ = _tile(n, bn, 128)
+    bk_ = _tile(k, bk, 128)
+    a_p = _pad_to(a, bm_, bk_)
+    b_p = _pad_to(b, bk_, bn_)
+    mp, kp = a_p.shape
+    _, np_ = b_p.shape
+    n_k = kp // bk_
+    grid = (mp // bm_, np_ // bn_, n_k)
+    res = pl.pallas_call(
+        partial(_matmul_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(a_p, b_p)
+    return res[:m, :n]
+
+
+@jax.custom_vjp
+def matmul(a, b):
+    """Differentiable Pallas matmul (f32)."""
+    return matmul_pallas(a, b)
+
+
+def _matmul_fwd(a, b):
+    return matmul_pallas(a, b), (a, b)
+
+
+def _matmul_bwd(res, g):
+    a, b = res
+    da = matmul_pallas(g, b.T)
+    db = matmul_pallas(a.T, g)
+    return da, db
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

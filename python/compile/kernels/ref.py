@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for every Pallas kernel (correctness reference)."""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b):
+    return jnp.matmul(a, b)
+
+
+def sgd_update_ref(w, g, m, hyper):
+    lr, mu, wd, rescale = hyper[0], hyper[1], hyper[2], hyper[3]
+    g_eff = rescale * g + wd * w
+    m_new = mu * m + g_eff
+    return w - lr * m_new, m_new
+
+
+def elastic1_ref(center, w, alpha):
+    return center + alpha[0] * (w - center)
+
+
+def elastic2_ref(w, center, alpha):
+    return w - alpha[0] * (w - center)
+
+
+def elastic_fused_ref(w, center, alpha):
+    diff = w - center
+    return w - alpha[0] * diff, center + alpha[0] * diff
+
+
+def tensor_reduce_ref(stacked):
+    return jnp.sum(stacked, axis=0)
+
+
+def reduce_pair_ref(x, y):
+    return x + y

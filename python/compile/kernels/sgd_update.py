@@ -1,0 +1,77 @@
+"""L1 Pallas kernel: fused SGD update with momentum + weight decay.
+
+The paper ships the optimizer to the PS via ``KVStore.set_optimizer`` (§3.2)
+and rescales gradients by 1/mini_batch_size (§5). This kernel fuses the
+whole parameter update into one pass over the flat parameter vector:
+
+    g'  = rescale * g + wd * w
+    m'  = mu * m + g'
+    w'  = w - lr * m'        (mu = 0 degrades to plain SGD)
+
+Scalars (lr, mu, wd, rescale) arrive as a single f32[4] operand so the Rust
+coordinator can drive learning-rate schedules without recompiling.
+
+The vectors are blocked 1-D; each grid step streams one VMEM-resident block
+of w/g/m — the TPU analog of the paper's "112 thread blocks keeping multiple
+read/write requests in flight" (IBMGpu kernels, §7.3).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Perf (EXPERIMENTS.md §Perf): one grid step per call whenever the vector
+# fits (interpret-mode grid steps cost ~2 ms each on CPU-PJRT); on a real
+# TPU the 1M-f32 block (4 MiB x 3 streams = 12 MiB VMEM) still fits, and
+# larger models fall back to the grid. Outputs alias their inputs (w->w',
+# m->m') so XLA can update in place.
+BLOCK = 1 << 20
+
+
+def _sgd_kernel(h_ref, w_ref, g_ref, m_ref, w_out, m_out):
+    lr, mu, wd, rescale = h_ref[0], h_ref[1], h_ref[2], h_ref[3]
+    g = rescale * g_ref[...] + wd * w_ref[...]
+    m_new = mu * m_ref[...] + g
+    m_out[...] = m_new
+    w_out[...] = w_ref[...] - lr * m_new
+
+
+def sgd_update(w, g, m, hyper, *, block=BLOCK):
+    """Fused momentum-SGD step on flat f32 vectors.
+
+    Args:
+      w, g, m: f32[n] parameters, gradients, momentum buffer.
+      hyper:   f32[4] = (lr, mu, wd, rescale).
+    Returns:
+      (w_new, m_new), both f32[n].
+    """
+    (n,) = w.shape
+    blk = min(block, n)
+    pad = (-n) % blk
+    if pad:
+        w = jnp.pad(w, (0, pad))
+        g = jnp.pad(g, (0, pad))
+        m = jnp.pad(m, (0, pad))
+    np_ = n + pad
+    grid = (np_ // blk,)
+    w_new, m_new = pl.pallas_call(
+        _sgd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((4,), lambda i: (0,)),  # hyper broadcast to all steps
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_,), jnp.float32),
+            jax.ShapeDtypeStruct((np_,), jnp.float32),
+        ],
+        input_output_aliases={1: 0, 3: 1},  # w -> w', m -> m'
+        interpret=True,
+    )(hyper, w, g, m)
+    return w_new[:n], m_new[:n]

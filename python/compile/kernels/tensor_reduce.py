@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: tensor reduction — sum a *group of vectors*.
+
+This is the compute core of the paper's tensor collectives (§6.1/§7.3):
+the per-node "tensor" is the group of per-GPU vectors treated as one
+object, and the IBMGpu kernel reduces them into host memory at 30 GB/s by
+keeping many read/write requests in flight (112 thread blocks x 1024
+threads). The TPU adaptation streams (k, BLOCK) tiles through VMEM and
+reduces over the k (vector-group) axis per tile — grid parallelism over
+the flat length replaces CUDA thread blocks (DESIGN.md
+§Hardware-Adaptation).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Single grid step for paper-scale vectors (see sgd_update.py).
+BLOCK = 1 << 20
+
+
+def _reduce_kernel(x_ref, o_ref):
+    o_ref[...] = jnp.sum(x_ref[...], axis=0)
+
+
+def tensor_reduce(stacked, *, block=BLOCK):
+    """Sum k stacked vectors: f32[k, n] -> f32[n]."""
+    k, n = stacked.shape
+    blk = min(block, n)
+    pad = (-n) % blk
+    if pad:
+        stacked = jnp.pad(stacked, ((0, 0), (0, pad)))
+    np_ = n + pad
+    grid = (np_ // blk,)
+    out = pl.pallas_call(
+        _reduce_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((k, blk), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((np_,), jnp.float32),
+        interpret=True,
+    )(stacked)
+    return out[:n]
+
+
+def _axpy_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = x_ref[...] + y_ref[...]
+
+
+def reduce_pair(x, y, *, block=BLOCK):
+    """Elementwise x + y on flat f32 vectors — one ring-step reduction."""
+    (n,) = x.shape
+    blk = min(block, n)
+    pad = (-n) % blk
+    if pad:
+        x = jnp.pad(x, (0, pad))
+        y = jnp.pad(y, (0, pad))
+    np_ = n + pad
+    spec = pl.BlockSpec((blk,), lambda i: (i,))
+    out = pl.pallas_call(
+        _axpy_kernel,
+        grid=(np_ // blk,),
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((np_,), jnp.float32),
+        interpret=True,
+    )(x, y)
+    return out[:n]

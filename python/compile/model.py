@@ -1,0 +1,266 @@
+"""L2 JAX models for the MXNET-MPI reproduction (build-time only).
+
+The paper trains ResNet-50 on ImageNet-1K. Substitutions (DESIGN.md §2):
+
+* ``ResidualMLP`` — a residual-block image classifier over synthetic
+  Gaussian-mixture "images"; plays ResNet's role in every convergence
+  experiment (Figs 11-14, 16).
+* ``TransformerLM`` — a small decoder-only LM for the end-to-end driver
+  (system-prompt requirement: train a transformer and log the loss curve).
+
+Both models:
+* route every dense layer through the L1 Pallas ``matmul`` kernel so the
+  paper's compute hot spot lowers into the exported HLO;
+* operate on a single **flat f32 parameter vector**. The per-layer
+  (per-"key") segment table is exported in ``meta.json`` so the Rust
+  KVStore can treat each layer as a separate key, exactly like MXNET's
+  per-ndarray keys (§3.2), while the AOT artifacts keep one signature:
+
+      grad_step(params, x, y)  -> (loss, grads)
+      eval_step(params, x, y)  -> (loss, n_correct)
+"""
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import matmul
+
+
+# --------------------------------------------------------------------------
+# Parameter flattening
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class Segment:
+    """One KVStore key: a named slice of the flat parameter vector."""
+
+    name: str
+    offset: int
+    size: int
+    shape: Tuple[int, ...]
+
+
+def build_segments(shapes: List[Tuple[str, Tuple[int, ...]]]) -> List[Segment]:
+    segs, off = [], 0
+    for name, shape in shapes:
+        size = int(np.prod(shape))
+        segs.append(Segment(name, off, size, tuple(shape)))
+        off += size
+    return segs
+
+
+def total_size(segs: List[Segment]) -> int:
+    return segs[-1].offset + segs[-1].size if segs else 0
+
+
+def unflatten(flat: jnp.ndarray, segs: List[Segment]) -> Dict[str, jnp.ndarray]:
+    return {
+        s.name: flat[s.offset : s.offset + s.size].reshape(s.shape) for s in segs
+    }
+
+
+# --------------------------------------------------------------------------
+# Residual MLP classifier (the "ResNet" stand-in)
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class MlpConfig:
+    name: str = "mlp"
+    input_dim: int = 768  # 16x16x3 synthetic image
+    hidden: int = 256
+    blocks: int = 2
+    classes: int = 16
+    batch: int = 64
+
+    def param_shapes(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        shapes = [
+            ("in.w", (self.input_dim, self.hidden)),
+            ("in.b", (self.hidden,)),
+        ]
+        for i in range(self.blocks):
+            shapes += [
+                (f"block{i}.w1", (self.hidden, self.hidden)),
+                (f"block{i}.b1", (self.hidden,)),
+                (f"block{i}.w2", (self.hidden, self.hidden)),
+                (f"block{i}.b2", (self.hidden,)),
+            ]
+        shapes += [
+            ("head.w", (self.hidden, self.classes)),
+            ("head.b", (self.classes,)),
+        ]
+        return shapes
+
+
+def mlp_logits(cfg: MlpConfig, p: Dict[str, jnp.ndarray], x: jnp.ndarray):
+    h = jax.nn.relu(matmul(x, p["in.w"]) + p["in.b"])
+    for i in range(cfg.blocks):
+        z = jax.nn.relu(matmul(h, p[f"block{i}.w1"]) + p[f"block{i}.b1"])
+        z = matmul(z, p[f"block{i}.w2"]) + p[f"block{i}.b2"]
+        h = jax.nn.relu(h + z)
+    return matmul(h, p["head.w"]) + p["head.b"]
+
+
+# --------------------------------------------------------------------------
+# Transformer LM (end-to-end driver model)
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class TransformerConfig:
+    name: str = "transformer"
+    vocab: int = 512
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 2
+    seq: int = 64
+    batch: int = 8
+    d_ff: int = field(default=0)  # 0 -> 4*d_model
+
+    def __post_init__(self):
+        if self.d_ff == 0:
+            self.d_ff = 4 * self.d_model
+
+    def param_shapes(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        d, f = self.d_model, self.d_ff
+        shapes = [
+            ("embed", (self.vocab, d)),
+            ("pos", (self.seq, d)),
+        ]
+        for i in range(self.n_layers):
+            shapes += [
+                (f"layer{i}.ln1.scale", (d,)),
+                (f"layer{i}.ln1.bias", (d,)),
+                (f"layer{i}.qkv", (d, 3 * d)),
+                (f"layer{i}.attn_out", (d, d)),
+                (f"layer{i}.ln2.scale", (d,)),
+                (f"layer{i}.ln2.bias", (d,)),
+                (f"layer{i}.ff1", (d, f)),
+                (f"layer{i}.ff1_b", (f,)),
+                (f"layer{i}.ff2", (f, d)),
+                (f"layer{i}.ff2_b", (d,)),
+            ]
+        shapes += [("lnf.scale", (d,)), ("lnf.bias", (d,))]
+        return shapes
+
+
+def _layernorm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def _dense(x, w):
+    """Apply a weight matrix to the trailing dim via the Pallas matmul."""
+    lead = x.shape[:-1]
+    y = matmul(x.reshape(-1, x.shape[-1]), w)
+    return y.reshape(*lead, w.shape[-1])
+
+
+def transformer_logits(cfg: TransformerConfig, p: Dict[str, jnp.ndarray], tokens):
+    b, s = tokens.shape
+    d, h = cfg.d_model, cfg.n_heads
+    hd = d // h
+    x = p["embed"][tokens] + p["pos"][None, :s, :]
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    for i in range(cfg.n_layers):
+        ln = _layernorm(x, p[f"layer{i}.ln1.scale"], p[f"layer{i}.ln1.bias"])
+        qkv = _dense(ln, p[f"layer{i}.qkv"]).reshape(b, s, 3, h, hd)
+        q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(hd)
+        att = jnp.where(mask[None, None], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b, s, d)
+        x = x + _dense(o, p[f"layer{i}.attn_out"])
+        ln = _layernorm(x, p[f"layer{i}.ln2.scale"], p[f"layer{i}.ln2.bias"])
+        ff = jax.nn.gelu(_dense(ln, p[f"layer{i}.ff1"]) + p[f"layer{i}.ff1_b"])
+        x = x + _dense(ff, p[f"layer{i}.ff2"]) + p[f"layer{i}.ff2_b"]
+    x = _layernorm(x, p["lnf.scale"], p["lnf.bias"])
+    # Tied output head: logits = x @ embed^T.
+    return _dense(x, p["embed"].T)
+
+
+# --------------------------------------------------------------------------
+# Losses / step functions
+# --------------------------------------------------------------------------
+
+
+def _xent(logits, y):
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def make_model(cfg):
+    """Return (loss_fn(flat, x, y), acc_fn(flat, x, y), segments, x/y specs)."""
+    segs = build_segments(cfg.param_shapes())
+
+    if isinstance(cfg, MlpConfig):
+        x_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.input_dim), jnp.float32)
+        y_spec = jax.ShapeDtypeStruct((cfg.batch,), jnp.int32)
+
+        def loss_fn(flat, x, y):
+            return _xent(mlp_logits(cfg, unflatten(flat, segs), x), y)
+
+        def correct_fn(flat, x, y):
+            logits = mlp_logits(cfg, unflatten(flat, segs), x)
+            return jnp.sum((jnp.argmax(logits, -1) == y).astype(jnp.int32))
+
+    elif isinstance(cfg, TransformerConfig):
+        x_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.seq), jnp.int32)
+        y_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.seq), jnp.int32)
+
+        def loss_fn(flat, x, y):
+            return _xent(transformer_logits(cfg, unflatten(flat, segs), x), y)
+
+        def correct_fn(flat, x, y):
+            logits = transformer_logits(cfg, unflatten(flat, segs), x)
+            return jnp.sum((jnp.argmax(logits, -1) == y).astype(jnp.int32))
+
+    else:  # pragma: no cover
+        raise TypeError(f"unknown config {cfg!r}")
+
+    def grad_step(flat, x, y):
+        loss, grads = jax.value_and_grad(loss_fn)(flat, x, y)
+        return loss, grads
+
+    def eval_step(flat, x, y):
+        return loss_fn(flat, x, y), correct_fn(flat, x, y)
+
+    return grad_step, eval_step, segs, x_spec, y_spec
+
+
+def init_params(cfg, seed: int = 0) -> np.ndarray:
+    """He-style init over the flat vector (numpy, deterministic)."""
+    rng = np.random.default_rng(seed)
+    segs = build_segments(cfg.param_shapes())
+    flat = np.zeros(total_size(segs), np.float32)
+    for s in segs:
+        base = s.name.rsplit(".", 1)[-1]
+        if base in ("b", "b1", "b2", "bias", "ff1_b", "ff2_b"):
+            val = np.zeros(s.shape, np.float32)
+        elif base == "scale":
+            val = np.ones(s.shape, np.float32)
+        elif s.name in ("embed", "pos"):
+            val = rng.normal(0, 0.02, s.shape).astype(np.float32)
+        else:
+            fan_in = s.shape[0]
+            val = rng.normal(0, np.sqrt(2.0 / fan_in), s.shape).astype(np.float32)
+        flat[s.offset : s.offset + s.size] = val.ravel()
+    return flat
+
+
+# Named model variants exposed to aot.py / tests.
+VARIANTS = {
+    "mlp_tiny": MlpConfig(name="mlp_tiny", input_dim=64, hidden=32, blocks=1, classes=4, batch=8),
+    "mlp": MlpConfig(name="mlp"),
+    "transformer_tiny": TransformerConfig(
+        name="transformer_tiny", vocab=64, d_model=32, n_heads=2, n_layers=1, seq=16, batch=4
+    ),
+    "transformer": TransformerConfig(name="transformer"),
+}

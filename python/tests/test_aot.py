@@ -1,0 +1,76 @@
+"""AOT pipeline: lowered HLO text + metadata round-trip sanity."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+
+@pytest.fixture(scope="module")
+def lowered(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    cfg = M.VARIANTS["mlp_tiny"]
+    meta = aot.lower_variant(cfg, out, tensor_ks=(2,))
+    return out, cfg, meta
+
+
+def test_artifact_files_exist_and_are_hlo_text(lowered):
+    out, cfg, meta = lowered
+    for kind, fname in meta["artifacts"].items():
+        path = os.path.join(out, fname)
+        assert os.path.exists(path), fname
+        if fname.endswith(".hlo.txt"):
+            text = open(path).read()
+            assert text.startswith("HloModule"), f"{fname} is not HLO text"
+            assert "ENTRY" in text
+
+
+def test_init_bin_matches_param_count(lowered):
+    out, cfg, meta = lowered
+    init = np.fromfile(os.path.join(out, meta["artifacts"]["init"]), "<f4")
+    assert init.shape[0] == meta["params"]
+    ref = M.init_params(cfg, seed=0)
+    np.testing.assert_array_equal(init, ref)
+
+
+def test_meta_segments_cover_params(lowered):
+    _, cfg, meta = lowered
+    off = 0
+    for s in meta["segments"]:
+        assert s["offset"] == off
+        assert s["size"] == int(np.prod(s["shape"]))
+        off += s["size"]
+    assert off == meta["params"]
+
+
+def test_meta_shapes_match_config(lowered):
+    _, cfg, meta = lowered
+    assert meta["x"]["shape"] == [cfg.batch, cfg.input_dim]
+    assert meta["y"]["shape"] == [cfg.batch]
+    assert meta["x"]["dtype"] == "float32"
+    assert meta["y"]["dtype"] == "int32"
+
+
+def test_grad_hlo_has_tuple_root_with_loss_and_grads(lowered):
+    out, cfg, meta = lowered
+    text = open(os.path.join(out, meta["artifacts"]["grad"])).read()
+    n = meta["params"]
+    # root tuple carries (f32[] loss, f32[n] grads)
+    assert f"f32[{n}]" in text
+
+
+def test_full_meta_json_written(tmp_path):
+    """main() writes a meta.json covering all requested variants."""
+    import sys
+    from unittest import mock
+
+    out = str(tmp_path / "arts")
+    argv = ["aot", "--out-dir", out, "--variants", "mlp_tiny"]
+    with mock.patch.object(sys, "argv", argv):
+        aot.main()
+    meta = json.load(open(os.path.join(out, "meta.json")))
+    assert "mlp_tiny" in meta["variants"]
+    assert meta["variants"]["mlp_tiny"]["params"] == 4324

@@ -1,0 +1,210 @@
+"""L1 kernel correctness: every Pallas kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes (including ragged, non-tile-multiple sizes) and
+block-size parameters — the CORE correctness signal for the kernels that
+end up inside the exported HLO.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref
+
+TOL = dict(rtol=1e-4, atol=1e-4)
+
+
+def _arr(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+# ----------------------------------------------------------------- matmul
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    n=st.integers(1, 70),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref_small(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a, b = _arr(rng, m, k), _arr(rng, k, n)
+    np.testing.assert_allclose(K.matmul(a, b), ref.matmul_ref(a, b), **TOL)
+
+
+@pytest.mark.parametrize(
+    "m,k,n", [(128, 128, 128), (64, 3072, 512), (200, 300, 260), (8, 512, 16)]
+)
+def test_matmul_matches_ref_tileable(m, k, n):
+    rng = np.random.default_rng(m * 1000 + k + n)
+    a, b = _arr(rng, m, k), _arr(rng, k, n)
+    np.testing.assert_allclose(K.matmul(a, b), ref.matmul_ref(a, b), **TOL)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 128, 128), (32, 128, 256), (128, 256, 128)])
+def test_matmul_block_shapes(bm, bn, bk):
+    rng = np.random.default_rng(7)
+    a, b = _arr(rng, 96, 384), _arr(rng, 384, 256)
+    got = K.matmul_pallas(a, b, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(got, ref.matmul_ref(a, b), **TOL)
+
+
+def test_matmul_grad_matches_ref_grad():
+    rng = np.random.default_rng(11)
+    a, b = _arr(rng, 17, 40), _arr(rng, 40, 23)
+
+    def f_pal(a, b):
+        return jnp.sum(jnp.tanh(K.matmul(a, b)))
+
+    def f_ref(a, b):
+        return jnp.sum(jnp.tanh(ref.matmul_ref(a, b)))
+
+    ga_p, gb_p = jax.grad(f_pal, argnums=(0, 1))(a, b)
+    ga_r, gb_r = jax.grad(f_ref, argnums=(0, 1))(a, b)
+    np.testing.assert_allclose(ga_p, ga_r, **TOL)
+    np.testing.assert_allclose(gb_p, gb_r, **TOL)
+
+
+def test_matmul_jit_and_vmap_compose():
+    rng = np.random.default_rng(3)
+    a, b = _arr(rng, 12, 20), _arr(rng, 20, 8)
+    np.testing.assert_allclose(jax.jit(K.matmul)(a, b), ref.matmul_ref(a, b), **TOL)
+
+
+# ------------------------------------------------------------- sgd_update
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 200_000),
+    lr=st.floats(1e-4, 1.0),
+    mu=st.floats(0.0, 0.99),
+    wd=st.floats(0.0, 1e-2),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sgd_update_matches_ref(n, lr, mu, wd, seed):
+    rng = np.random.default_rng(seed)
+    w, g, m = _arr(rng, n), _arr(rng, n), _arr(rng, n)
+    hyper = jnp.array([lr, mu, wd, 1.0 / 256], jnp.float32)
+    w1, m1 = K.sgd_update(w, g, m, hyper)
+    w2, m2 = ref.sgd_update_ref(w, g, m, hyper)
+    np.testing.assert_allclose(w1, w2, **TOL)
+    np.testing.assert_allclose(m1, m2, **TOL)
+
+
+@pytest.mark.parametrize("block", [64, 1024, 65_536])
+def test_sgd_update_block_sizes(block):
+    rng = np.random.default_rng(5)
+    n = 10_000
+    w, g, m = _arr(rng, n), _arr(rng, n), _arr(rng, n)
+    hyper = jnp.array([0.1, 0.9, 1e-4, 1.0], jnp.float32)
+    w1, m1 = K.sgd_update(w, g, m, hyper, block=block)
+    w2, m2 = ref.sgd_update_ref(w, g, m, hyper)
+    np.testing.assert_allclose(w1, w2, **TOL)
+    np.testing.assert_allclose(m1, m2, **TOL)
+
+
+def test_sgd_zero_momentum_is_plain_sgd():
+    rng = np.random.default_rng(9)
+    n = 1000
+    w, g = _arr(rng, n), _arr(rng, n)
+    m = jnp.zeros(n, jnp.float32)
+    hyper = jnp.array([0.5, 0.0, 0.0, 1.0], jnp.float32)
+    w1, _ = K.sgd_update(w, g, m, hyper)
+    np.testing.assert_allclose(w1, w - 0.5 * g, **TOL)
+
+
+# ---------------------------------------------------------- elastic_update
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 200_000),
+    alpha=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_elastic_matches_ref(n, alpha, seed):
+    rng = np.random.default_rng(seed)
+    w, c = _arr(rng, n), _arr(rng, n)
+    a = jnp.array([alpha], jnp.float32)
+    np.testing.assert_allclose(K.elastic1(c, w, a), ref.elastic1_ref(c, w, a), **TOL)
+    np.testing.assert_allclose(K.elastic2(w, c, a), ref.elastic2_ref(w, c, a), **TOL)
+    wf, cf = K.elastic_fused(w, c, a)
+    wr, cr = ref.elastic_fused_ref(w, c, a)
+    np.testing.assert_allclose(wf, wr, **TOL)
+    np.testing.assert_allclose(cf, cr, **TOL)
+
+
+def test_elastic_fused_equals_split():
+    """Fused kernel must equal applying eq.2 and eq.3 from the SAME w, c."""
+    rng = np.random.default_rng(17)
+    n = 4096
+    w, c = _arr(rng, n), _arr(rng, n)
+    a = jnp.array([0.25], jnp.float32)
+    wf, cf = K.elastic_fused(w, c, a)
+    np.testing.assert_allclose(wf, K.elastic2(w, c, a), **TOL)
+    np.testing.assert_allclose(cf, K.elastic1(c, w, a), **TOL)
+
+
+def test_elastic_alpha_zero_is_identity():
+    rng = np.random.default_rng(2)
+    w, c = _arr(rng, 512), _arr(rng, 512)
+    a = jnp.zeros(1, jnp.float32)
+    np.testing.assert_allclose(K.elastic2(w, c, a), w, **TOL)
+    np.testing.assert_allclose(K.elastic1(c, w, a), c, **TOL)
+
+
+def test_elastic_alpha_one_swaps_roles():
+    rng = np.random.default_rng(4)
+    w, c = _arr(rng, 512), _arr(rng, 512)
+    a = jnp.ones(1, jnp.float32)
+    np.testing.assert_allclose(K.elastic2(w, c, a), c, **TOL)  # w -> center
+    np.testing.assert_allclose(K.elastic1(c, w, a), w, **TOL)  # center -> w
+
+
+# ---------------------------------------------------------- tensor_reduce
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    k=st.integers(1, 8),
+    n=st.integers(1, 100_000),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_tensor_reduce_matches_ref(k, n, seed):
+    rng = np.random.default_rng(seed)
+    s = _arr(rng, k, n)
+    np.testing.assert_allclose(
+        K.tensor_reduce(s), ref.tensor_reduce_ref(s), rtol=1e-4, atol=1e-3
+    )
+
+
+@pytest.mark.parametrize("block", [128, 8192, 32_768])
+def test_tensor_reduce_block_sizes(block):
+    rng = np.random.default_rng(6)
+    s = _arr(rng, 4, 50_000)
+    np.testing.assert_allclose(
+        K.tensor_reduce(s, block=block), ref.tensor_reduce_ref(s), rtol=1e-4, atol=1e-3
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 100_000), seed=st.integers(0, 2**31 - 1))
+def test_reduce_pair_matches_ref(n, seed):
+    rng = np.random.default_rng(seed)
+    x, y = _arr(rng, n), _arr(rng, n)
+    np.testing.assert_allclose(K.reduce_pair(x, y), x + y, **TOL)
+
+
+def test_reduce_pair_is_commutative_associative_on_ints():
+    """With integer-valued f32 data the reduction is exact: order-free."""
+    rng = np.random.default_rng(8)
+    vals = [jnp.asarray(rng.integers(-100, 100, 1000).astype(np.float32)) for _ in range(4)]
+    acc1 = K.reduce_pair(K.reduce_pair(vals[0], vals[1]), K.reduce_pair(vals[2], vals[3]))
+    acc2 = K.reduce_pair(vals[3], K.reduce_pair(vals[2], K.reduce_pair(vals[1], vals[0])))
+    np.testing.assert_array_equal(np.asarray(acc1), np.asarray(acc2))

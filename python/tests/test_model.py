@@ -1,0 +1,138 @@
+"""L2 model correctness: flattening, shapes, loss/grad vs pure-jnp model."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+TOL = dict(rtol=2e-4, atol=2e-4)
+
+
+def _mlp_ref_loss(cfg, flat, x, y):
+    """Pure-jnp reimplementation of the residual MLP (no Pallas)."""
+    segs = M.build_segments(cfg.param_shapes())
+    p = M.unflatten(flat, segs)
+    h = jax.nn.relu(x @ p["in.w"] + p["in.b"])
+    for i in range(cfg.blocks):
+        z = jax.nn.relu(h @ p[f"block{i}.w1"] + p[f"block{i}.b1"])
+        z = z @ p[f"block{i}.w2"] + p[f"block{i}.b2"]
+        h = jax.nn.relu(h + z)
+    logits = h @ p["head.w"] + p["head.b"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = M.VARIANTS["mlp_tiny"]
+    grad_step, eval_step, segs, x_spec, y_spec = M.make_model(cfg)
+    return cfg, grad_step, eval_step, segs, x_spec, y_spec
+
+
+def _batch(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(cfg.batch, cfg.input_dim)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, cfg.classes, cfg.batch).astype(np.int32))
+    return x, y
+
+
+def test_segments_are_contiguous_and_cover_vector(tiny):
+    cfg, _, _, segs, _, _ = tiny
+    off = 0
+    for s in segs:
+        assert s.offset == off
+        assert s.size == int(np.prod(s.shape))
+        off += s.size
+    assert off == M.total_size(segs)
+
+
+def test_init_params_deterministic_and_finite():
+    cfg = M.VARIANTS["mlp_tiny"]
+    a = M.init_params(cfg, seed=0)
+    b = M.init_params(cfg, seed=0)
+    np.testing.assert_array_equal(a, b)
+    assert np.all(np.isfinite(a))
+    c = M.init_params(cfg, seed=1)
+    assert not np.array_equal(a, c)
+
+
+def test_init_biases_zero_scales_one():
+    cfg = M.VARIANTS["transformer_tiny"]
+    flat = M.init_params(cfg, seed=0)
+    segs = M.build_segments(cfg.param_shapes())
+    for s in segs:
+        v = flat[s.offset : s.offset + s.size]
+        if s.name.endswith(".bias") or s.name.endswith("_b"):
+            assert np.all(v == 0), s.name
+        if s.name.endswith(".scale"):
+            assert np.all(v == 1), s.name
+
+
+def test_mlp_loss_and_grad_match_pure_jnp(tiny):
+    cfg, grad_step, _, segs, _, _ = tiny
+    flat = jnp.asarray(M.init_params(cfg, seed=0))
+    x, y = _batch(cfg)
+    loss, grads = grad_step(flat, x, y)
+    loss_ref, grads_ref = jax.value_and_grad(
+        lambda f: _mlp_ref_loss(cfg, f, x, y)
+    )(flat)
+    np.testing.assert_allclose(loss, loss_ref, **TOL)
+    np.testing.assert_allclose(grads, grads_ref, rtol=1e-3, atol=1e-3)
+
+
+def test_eval_step_counts_correct(tiny):
+    cfg, _, eval_step, _, _, _ = tiny
+    flat = jnp.asarray(M.init_params(cfg, seed=0))
+    x, y = _batch(cfg)
+    loss, correct = eval_step(flat, x, y)
+    assert 0 <= int(correct) <= cfg.batch
+    assert np.isfinite(float(loss))
+
+
+def test_mlp_one_sgd_step_reduces_loss(tiny):
+    cfg, grad_step, _, _, _, _ = tiny
+    flat = jnp.asarray(M.init_params(cfg, seed=0))
+    x, y = _batch(cfg)
+    loss0, g = grad_step(flat, x, y)
+    loss1, _ = grad_step(flat - 0.05 * g, x, y)
+    assert float(loss1) < float(loss0)
+
+
+def test_transformer_loss_finite_and_trains():
+    cfg = M.VARIANTS["transformer_tiny"]
+    grad_step, _, segs, _, _ = M.make_model(cfg)
+    rng = np.random.default_rng(0)
+    flat = jnp.asarray(M.init_params(cfg, seed=0))
+    x = jnp.asarray(rng.integers(0, cfg.vocab, (cfg.batch, cfg.seq)).astype(np.int32))
+    y = jnp.asarray(rng.integers(0, cfg.vocab, (cfg.batch, cfg.seq)).astype(np.int32))
+    loss0, g = grad_step(flat, x, y)
+    assert np.isfinite(float(loss0))
+    # near-uniform logits at init => loss ~ log(vocab)
+    assert abs(float(loss0) - np.log(cfg.vocab)) < 1.0
+    loss1, _ = grad_step(flat - 0.5 * g, x, y)
+    assert float(loss1) < float(loss0)
+
+
+def test_transformer_causality():
+    """Changing a future token must not change past logits."""
+    cfg = M.VARIANTS["transformer_tiny"]
+    segs = M.build_segments(cfg.param_shapes())
+    flat = jnp.asarray(M.init_params(cfg, seed=0))
+    p = M.unflatten(flat, segs)
+    rng = np.random.default_rng(1)
+    x = rng.integers(0, cfg.vocab, (1, cfg.seq)).astype(np.int32)
+    x2 = x.copy()
+    x2[0, -1] = (x2[0, -1] + 1) % cfg.vocab
+    l1 = M.transformer_logits(cfg, p, jnp.asarray(x))
+    l2 = M.transformer_logits(cfg, p, jnp.asarray(x2))
+    np.testing.assert_allclose(l1[0, :-1], l2[0, :-1], rtol=1e-5, atol=1e-5)
+    assert not np.allclose(l1[0, -1], l2[0, -1])
+
+
+def test_all_variants_build():
+    for name, cfg in M.VARIANTS.items():
+        segs = M.build_segments(cfg.param_shapes())
+        assert M.total_size(segs) > 0, name

@@ -1,0 +1,249 @@
+//! Micro-benchmarks of the *real* (data-moving) substrates: ring
+//! allreduce / tensor allreduce over mpisim, the dependency engine, the
+//! PS round path and PJRT kernel dispatch. Wall-clock, own harness (the
+//! offline build has no criterion); each measurement reports the median
+//! of `REPS` runs after warmup.
+//!
+//!     cargo bench --bench collectives
+
+use mxnet_mpi::collectives::{multi_ring_allreduce, ring_allreduce};
+use mxnet_mpi::engine::Engine;
+use mxnet_mpi::metrics::Table;
+use mxnet_mpi::mpisim::World;
+use mxnet_mpi::tensor::NodeTensor;
+use std::sync::Arc;
+use std::time::Instant;
+
+const REPS: usize = 7;
+
+fn median(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.total_cmp(b));
+    xs[xs.len() / 2]
+}
+
+/// Run `f` REPS times (plus one warmup); return median seconds.
+fn bench<F: FnMut()>(mut f: F) -> f64 {
+    f();
+    median(
+        (0..REPS)
+            .map(|_| {
+                let t = Instant::now();
+                f();
+                t.elapsed().as_secs_f64()
+            })
+            .collect(),
+    )
+}
+
+fn bench_ring_allreduce(t: &mut Table) {
+    for p in [2usize, 4, 8] {
+        for len in [1 << 14, 1 << 18, 1 << 21] {
+            let s = bench(|| {
+                let comms = World::create(p);
+                let hs: Vec<_> = comms
+                    .into_iter()
+                    .map(|mut c| {
+                        std::thread::spawn(move || {
+                            let mut d = vec![c.rank() as f32; len];
+                            ring_allreduce(&mut c, &mut d);
+                            d[0]
+                        })
+                    })
+                    .collect();
+                for h in hs {
+                    h.join().unwrap();
+                }
+            });
+            let bytes = len * 4;
+            t.row(vec![
+                format!("ring_allreduce p={p}"),
+                mxnet_mpi::util::fmt_bytes(bytes),
+                format!("{:.3}", s * 1e3),
+                format!("{:.2}", bytes as f64 * 2.0 / s / 1e9),
+            ]);
+        }
+    }
+}
+
+fn bench_multi_ring(t: &mut Table) {
+    let len = 1 << 21;
+    for rings in [1usize, 2, 4] {
+        let s = bench(|| {
+            let comms = World::create(4);
+            let hs: Vec<_> = comms
+                .into_iter()
+                .map(|mut c| {
+                    std::thread::spawn(move || {
+                        let mut d = vec![c.rank() as f32; len];
+                        multi_ring_allreduce(&mut c, &mut d, rings);
+                    })
+                })
+                .collect();
+            for h in hs {
+                h.join().unwrap();
+            }
+        });
+        t.row(vec![
+            format!("multi_ring rings={rings} p=4"),
+            mxnet_mpi::util::fmt_bytes(len * 4),
+            format!("{:.3}", s * 1e3),
+            format!("{:.2}", (len * 4) as f64 * 2.0 / s / 1e9),
+        ]);
+    }
+}
+
+fn bench_tensor_allreduce(t: &mut Table) {
+    let len = 1 << 20;
+    let s = bench(|| {
+        let comms = World::create(4);
+        let hs: Vec<_> = comms
+            .into_iter()
+            .map(|mut c| {
+                std::thread::spawn(move || {
+                    let mut nt = NodeTensor::from_vecs(vec![vec![1.0f32; len]; 2]);
+                    mxnet_mpi::collectives::tensor_allreduce(
+                        &mut c,
+                        &mut nt,
+                        2,
+                        mxnet_mpi::collectives::HostReduce::Host,
+                    );
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+    });
+    t.row(vec![
+        "tensor_allreduce p=4 g=2".into(),
+        mxnet_mpi::util::fmt_bytes(len * 4),
+        format!("{:.3}", s * 1e3),
+        format!("{:.2}", (len * 4) as f64 * 2.0 / s / 1e9),
+    ]);
+}
+
+fn bench_engine(t: &mut Table) {
+    for threads in [1usize, 2, 4] {
+        let n_ops = 20_000;
+        let s = bench(|| {
+            let e = Engine::new(threads);
+            let vars: Vec<_> = (0..64).map(|_| e.new_var()).collect();
+            let sink = Arc::new(std::sync::atomic::AtomicU64::new(0));
+            for i in 0..n_ops {
+                let s = sink.clone();
+                let r = vars[i % 64];
+                let m = vars[(i * 7 + 3) % 64];
+                e.push(
+                    move || {
+                        s.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    },
+                    &[r],
+                    &[m],
+                );
+            }
+            e.wait_all();
+        });
+        t.row(vec![
+            format!("engine threads={threads}"),
+            format!("{n_ops} ops"),
+            format!("{:.3}", s * 1e3),
+            format!("{:.2} Mops/s", n_ops as f64 / s / 1e6),
+        ]);
+    }
+}
+
+fn bench_ps_round(t: &mut Table) {
+    use mxnet_mpi::optimizer::{Sgd, SgdHyper};
+    use mxnet_mpi::ps::{ServerGroup, SyncMode};
+    let len = 1 << 18;
+    for workers in [2usize, 4, 8] {
+        let s = bench(|| {
+            let group = ServerGroup::spawn(2, SyncMode::Sync, workers);
+            let c0 = group.client();
+            for k in 0..4 {
+                c0.init(k, vec![0.0; len]);
+            }
+            c0.set_optimizer(|| Box::new(Sgd::new(SgdHyper::plain(0.1, 1.0))));
+            let hs: Vec<_> = (0..workers)
+                .map(|_| {
+                    let mut c = group.client();
+                    std::thread::spawn(move || {
+                        for _ in 0..4 {
+                            for k in 0..4 {
+                                c.push(k, vec![1.0; len]);
+                            }
+                            for k in 0..4 {
+                                let _ = c.pull(k);
+                            }
+                        }
+                    })
+                })
+                .collect();
+            for h in hs {
+                h.join().unwrap();
+            }
+            group.shutdown();
+        });
+        t.row(vec![
+            format!("ps_sync_round w={workers} s=2 k=4"),
+            mxnet_mpi::util::fmt_bytes(len * 4),
+            format!("{:.3}", s * 1e3),
+            format!("{:.1} rounds/s", 4.0 / s),
+        ]);
+    }
+}
+
+fn bench_pjrt(t: &mut Table) {
+    use mxnet_mpi::runtime::{Model, Runtime, XData};
+    let arts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let rt = Runtime::cpu().expect("pjrt");
+    for variant in ["mlp_tiny", "mlp"] {
+        let model = match Model::load(&rt, &arts, variant) {
+            Ok(m) => m,
+            Err(_) => continue, // artifacts not built for this variant
+        };
+        let params = model.meta.init_params().unwrap();
+        let data = mxnet_mpi::data::GaussianMixture::new(
+            model.meta.x_shape[1] as usize,
+            16,
+            1.0,
+            1,
+        );
+        let b = data.batch(0, model.meta.batch_size());
+        let x = XData::F32(b.x);
+        let s = bench(|| {
+            let _ = model.grad_step(&params, &x, &b.y).unwrap();
+        });
+        t.row(vec![
+            format!("pjrt grad_step {variant}"),
+            format!("{} params", model.meta.params),
+            format!("{:.3}", s * 1e3),
+            format!("{:.2} steps/s", 1.0 / s),
+        ]);
+        let mut w = params.clone();
+        let g = params.clone();
+        let mut m = vec![0.0; w.len()];
+        let hyper = mxnet_mpi::optimizer::SgdHyper::plain(0.1, 1.0);
+        let s = bench(|| {
+            model.sgd_update(&mut w, &g, &mut m, &hyper).unwrap();
+        });
+        t.row(vec![
+            format!("pjrt sgd_update {variant}"),
+            format!("{} params", model.meta.params),
+            format!("{:.3}", s * 1e3),
+            format!("{:.2} steps/s", 1.0 / s),
+        ]);
+    }
+}
+
+fn main() {
+    println!("== real-substrate microbenchmarks (median of {REPS}) ==");
+    let mut t = Table::new(&["bench", "size", "median ms", "rate"]);
+    bench_ring_allreduce(&mut t);
+    bench_multi_ring(&mut t);
+    bench_tensor_allreduce(&mut t);
+    bench_engine(&mut t);
+    bench_ps_round(&mut t);
+    bench_pjrt(&mut t);
+    println!("{}", t.render());
+}

@@ -1,0 +1,130 @@
+//! Figure benches: regenerate the paper's collective-performance figures
+//! (15, 17–19, 20) and the §7.3 intra-node bandwidth table from the §6
+//! cost models, printing paper-style rows and writing CSVs under
+//! `results/`.
+//!
+//!     cargo bench --bench figures
+
+use mxnet_mpi::figures;
+use mxnet_mpi::metrics::Table;
+use std::path::PathBuf;
+
+fn main() -> anyhow::Result<()> {
+    let out = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("results");
+
+    // --- Figs 17-19: tensor allreduce bandwidth at 4/16/64 MB ----------
+    for (fig, mb) in [(17usize, 4usize), (18, 16), (19, 64)] {
+        let rows = figures::fig17_19(mb << 20, Some(&out))?;
+        let mut t = Table::new(&["design", "workers", "seconds", "GB/s"]);
+        for r in &rows {
+            t.row(vec![
+                r.design_label.clone(),
+                r.p.to_string(),
+                format!("{:.6}", r.seconds),
+                format!("{:.2}", r.gbps),
+            ]);
+        }
+        println!("== Fig {fig}: tensor allreduce @ {mb} MB ==\n{}", t.render());
+    }
+
+    // --- Fig 20: IBM ring vs Baidu ring --------------------------------
+    let rows = figures::fig20(Some(&out))?;
+    let mut t = Table::new(&["message MB", "IBM ring (s)", "Baidu ring (s)", "factor"]);
+    for (mb, i, b, f) in &rows {
+        t.row(vec![
+            mb.to_string(),
+            format!("{i:.5}"),
+            format!("{b:.5}"),
+            format!("{f:.1}x"),
+        ]);
+    }
+    println!("== Fig 20: IBMRing-vs-BaiduRing (32 GPUs) ==\n{}", t.render());
+
+    // --- Fig 15: ResNet-50 scaling --------------------------------------
+    let rows = figures::fig15(Some(&out))?;
+    let mut t = Table::new(&[
+        "nodes",
+        "weak ring (s/epoch)",
+        "strong ring",
+        "weak reg",
+        "strong reg",
+    ]);
+    for (n, w, s, rw, rs) in &rows {
+        t.row(vec![
+            n.to_string(),
+            format!("{w:.0}"),
+            format!("{s:.0}"),
+            format!("{rw:.0}"),
+            format!("{rs:.0}"),
+        ]);
+    }
+    println!("== Fig 15: Resnet-50 Scaling behavior ==\n{}", t.render());
+
+    // --- §7.3 intra-node tensor op bandwidths ---------------------------
+    let mut t = Table::new(&["operation", "GB/s (paper §7.3)"]);
+    for (name, gbps) in figures::intranode_table() {
+        t.row(vec![name.to_string(), format!("{gbps:.1}")]);
+    }
+    println!("== §7.3 intra-node tensor collectives ==\n{}", t.render());
+
+    // --- Ablations (DESIGN.md design choices) ---------------------------
+    ablations(&out)?;
+
+    println!("CSVs -> {}", out.display());
+    Ok(())
+}
+
+/// Ablation studies over the §6 design knobs: ring count (the Fig. 9
+/// multi-ring overlap), the TCP-incast coefficient (the §2.3 hot-spot
+/// mechanism) and the PS-transport bandwidth, each swept in isolation.
+fn ablations(out: &std::path::PathBuf) -> anyhow::Result<()> {
+    use mxnet_mpi::collectives::sim::{simulate, Design};
+    use mxnet_mpi::netsim::{CostParams, PsFabric};
+
+    // 1. Ring count: diminishing returns past 2 rings (latency terms grow
+    //    linearly while the hidden reduction is already hidden).
+    let params = CostParams::minsky();
+    let mut t = Table::new(&["rings", "allreduce 64MB p=16 (ms)", "vs 1 ring"]);
+    let base = simulate(Design::RingIbm { rings: 1 }, 16, 64 << 20, &params).seconds;
+    for rings in [1usize, 2, 4, 8] {
+        let s = simulate(Design::RingIbm { rings }, 16, 64 << 20, &params).seconds;
+        t.row(vec![
+            rings.to_string(),
+            format!("{:.3}", s * 1e3),
+            format!("{:.2}x", base / s),
+        ]);
+    }
+    println!("== Ablation: multi-ring count ==\n{}", t.render());
+
+    // 2. Incast coefficient: how much of the dist-vs-mpi epoch gap comes
+    //    from fan-in collapse vs plain serialization.
+    let mut t = Table::new(&["incast", "12-worker push wave (ms)", "vs mpi (2 masters)"]);
+    for incast in [0.0f64, 0.25, 0.5, 1.0] {
+        let mut p = CostParams::testbed1();
+        p.ps_incast = incast;
+        let wave = |workers: usize| {
+            let mut f = PsFabric::new(2, workers, p.clone());
+            let mut last: f64 = 0.0;
+            for w in 0..workers {
+                last = last.max(f.push(0.0, w, 102 << 20));
+            }
+            last
+        };
+        t.row(vec![
+            format!("{incast:.2}"),
+            format!("{:.0}", wave(12) * 1e3),
+            format!("{:.1}x", wave(12) / wave(2)),
+        ]);
+    }
+    println!("== Ablation: PS ingress incast ==\n{}", t.render());
+
+    let mut csv = mxnet_mpi::metrics::Csv::create(
+        &out.join("ablation_rings.csv"),
+        "rings,seconds",
+    )?;
+    for rings in [1usize, 2, 4, 8] {
+        let s = simulate(Design::RingIbm { rings }, 16, 64 << 20, &params).seconds;
+        csv.row(&[rings.to_string(), format!("{s:.6}")])?;
+    }
+    Ok(())
+}

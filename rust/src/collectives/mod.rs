@@ -1,0 +1,296 @@
+//! Tensor collectives (paper §6): bucket ring algorithms over node tensors.
+//!
+//! Two halves:
+//!
+//! * **Real data movement** (this file) — ring reduce-scatter / allgather /
+//!   allreduce built on [`crate::mpisim`] point-to-point sends, plus the
+//!   tensor variants that pre-reduce the per-device vector group into host
+//!   memory and broadcast the result back (§6.3). These run on the actual
+//!   training path of the threaded framework and are the correctness-
+//!   critical code.
+//! * **Timing simulation** ([`sim`]) — the α-β-γ cost models that regenerate
+//!   the paper's bandwidth/scaling figures (Figs 15, 17–20) on the
+//!   [`crate::netsim`] substrate.
+
+pub mod sim;
+
+use crate::mpisim::Comm;
+use crate::tensor::{add_assign, NodeTensor};
+
+/// Tag base for ring steps; mpisim collectives use the high bit, rings use
+/// plain user tags namespaced per call via an internal counter.
+const RING_TAG: u64 = 0x5247; // "RG"
+
+/// Partition `len` into `p` near-equal chunks; returns (start, end) of `i`.
+pub fn chunk_bounds(len: usize, p: usize, i: usize) -> (usize, usize) {
+    let base = len / p;
+    let rem = len % p;
+    let start = i * base + i.min(rem);
+    let end = start + base + usize::from(i < rem);
+    (start, end)
+}
+
+/// Bucket ring reduce-scatter (§6.2): after the call, rank `r` holds the
+/// fully reduced chunk `(r + 1) % p` of `data`; other chunks are garbage
+/// (partial sums). Returns the owned chunk index.
+pub fn ring_reduce_scatter(comm: &mut Comm, data: &mut [f32]) -> usize {
+    let p = comm.size();
+    let r = comm.rank();
+    if p == 1 {
+        return 0;
+    }
+    let right = (r + 1) % p;
+    let left = (r + p - 1) % p;
+    for step in 0..p - 1 {
+        let send_idx = (r + p - step) % p;
+        let recv_idx = (r + p - step - 1) % p;
+        let (ss, se) = chunk_bounds(data.len(), p, send_idx);
+        let (rs, re) = chunk_bounds(data.len(), p, recv_idx);
+        let incoming = comm.sendrecv(
+            right,
+            RING_TAG + step as u64,
+            data[ss..se].to_vec(),
+            left,
+            RING_TAG + step as u64,
+        );
+        add_assign(&mut data[rs..re], &incoming);
+    }
+    (r + 1) % p
+}
+
+/// Bucket ring allgather (§6.3.1): rank `r` enters owning chunk
+/// `(r + 1) % p` (the reduce-scatter output) and exits with every chunk.
+pub fn ring_allgather(comm: &mut Comm, data: &mut [f32]) {
+    let p = comm.size();
+    let r = comm.rank();
+    if p == 1 {
+        return;
+    }
+    let right = (r + 1) % p;
+    let left = (r + p - 1) % p;
+    for step in 0..p - 1 {
+        let send_idx = (r + 1 + p - step) % p;
+        let recv_idx = (r + p - step) % p;
+        let (ss, se) = chunk_bounds(data.len(), p, send_idx);
+        let (rs, re) = chunk_bounds(data.len(), p, recv_idx);
+        let incoming = comm.sendrecv(
+            right,
+            RING_TAG + 100 + step as u64,
+            data[ss..se].to_vec(),
+            left,
+            RING_TAG + 100 + step as u64,
+        );
+        data[rs..re].copy_from_slice(&incoming);
+    }
+}
+
+/// Bandwidth-optimal ring allreduce = reduce-scatter + allgather (§6.2).
+/// Cost: (p-1)α·2 + 2·(p-1)/p·nβ + (p-1)/p·nγ — the §6.2 lower bound.
+pub fn ring_allreduce(comm: &mut Comm, data: &mut [f32]) {
+    ring_reduce_scatter(comm, data);
+    ring_allgather(comm, data);
+}
+
+/// Multi-ring allreduce (§6.3.2, Fig. 9): the buffer is split equally among
+/// `rings` logical rings, each running the bucket algorithm on its slice.
+///
+/// In the paper the rings exist to *overlap* the NVLink reduction of ring i
+/// with the network transfer of ring i+1; data-wise the result is identical
+/// to a single ring, which is exactly what this implementation (and its
+/// tests) asserts. The timing benefit is modelled in [`sim`].
+pub fn multi_ring_allreduce(comm: &mut Comm, data: &mut [f32], rings: usize) {
+    let rings = rings.max(1).min(data.len().max(1));
+    let len = data.len();
+    for ring in 0..rings {
+        let (s, e) = chunk_bounds(len, rings, ring);
+        ring_allreduce(comm, &mut data[s..e]);
+    }
+}
+
+/// Strategy for the intra-node (device group -> host) reduction of a
+/// tensor collective. On the paper's hardware this is the IBMGpu or NCCL
+/// kernel; on the training path it can be the AOT-compiled `tensor_reduce`
+/// Pallas kernel via a caller-supplied closure.
+pub enum HostReduce<'a> {
+    /// Plain Rust f32 summation (host memory, the omp_ring analog).
+    Host,
+    /// Caller-supplied reducer, e.g. the compiled HLO `tensor_reduce`.
+    Custom(&'a dyn Fn(&NodeTensor) -> Vec<f32>),
+}
+
+/// Tensor allreduce (§6.3): intra-node reduce of the vector group into host
+/// memory, host-memory multi-ring bucket allreduce across workers, then
+/// intra-node broadcast back to every device vector.
+///
+/// This is the paper's headline collective: rings run over *host* memories
+/// (GPU memory is unreachable from the NIC on Minsky), and grouping the
+/// per-socket GPUs under one worker halves the ring hop count.
+pub fn tensor_allreduce(
+    comm: &mut Comm,
+    tensor: &mut NodeTensor,
+    rings: usize,
+    reduce: HostReduce<'_>,
+) {
+    let mut host = match reduce {
+        HostReduce::Host => tensor.reduce_to_host(),
+        HostReduce::Custom(f) => f(tensor),
+    };
+    multi_ring_allreduce(comm, &mut host, rings);
+    tensor.broadcast_from_host(&host);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpisim::World;
+    use std::thread;
+
+    fn run_world<F, R>(size: usize, f: F) -> Vec<R>
+    where
+        F: Fn(Comm) -> R + Clone + Send + 'static,
+        R: Send + 'static,
+    {
+        let comms = World::create(size);
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|c| {
+                let f = f.clone();
+                thread::spawn(move || f(c))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    fn payload(rank: usize, len: usize) -> Vec<f32> {
+        (0..len)
+            .map(|i| (rank * 1000 + i) as f32 * 0.25)
+            .collect()
+    }
+
+    fn expected_sum(p: usize, len: usize) -> Vec<f32> {
+        let mut out = vec![0.0; len];
+        for r in 0..p {
+            add_assign(&mut out, &payload(r, len));
+        }
+        out
+    }
+
+    #[test]
+    fn chunk_bounds_cover_exactly() {
+        for len in [0, 1, 7, 64, 65] {
+            for p in [1, 2, 3, 8] {
+                let mut total = 0;
+                let mut prev_end = 0;
+                for i in 0..p {
+                    let (s, e) = chunk_bounds(len, p, i);
+                    assert_eq!(s, prev_end);
+                    total += e - s;
+                    prev_end = e;
+                }
+                assert_eq!(total, len);
+            }
+        }
+    }
+
+    #[test]
+    fn ring_allreduce_matches_sum() {
+        for p in [1, 2, 3, 4, 6] {
+            for len in [1, 5, 64, 257] {
+                let out = run_world(p, move |mut c| {
+                    let mut d = payload(c.rank(), len);
+                    ring_allreduce(&mut c, &mut d);
+                    d
+                });
+                let want = expected_sum(p, len);
+                for d in out {
+                    assert_eq!(d, want, "p={p} len={len}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_owned_chunk_is_reduced() {
+        let p = 4;
+        let len = 64;
+        let out = run_world(p, move |mut c| {
+            let mut d = payload(c.rank(), len);
+            let owned = ring_reduce_scatter(&mut c, &mut d);
+            let (s, e) = chunk_bounds(len, p, owned);
+            (owned, d[s..e].to_vec())
+        });
+        let want = expected_sum(p, len);
+        for (r, (owned, chunk)) in out.iter().enumerate() {
+            assert_eq!(*owned, (r + 1) % p);
+            let (s, e) = chunk_bounds(len, p, *owned);
+            assert_eq!(chunk[..], want[s..e], "rank {r}");
+        }
+    }
+
+    #[test]
+    fn multi_ring_equals_single_ring() {
+        let p = 3;
+        let len = 100;
+        for rings in [1, 2, 4, 7] {
+            let out = run_world(p, move |mut c| {
+                let mut d = payload(c.rank(), len);
+                multi_ring_allreduce(&mut c, &mut d, rings);
+                d
+            });
+            let want = expected_sum(p, len);
+            for d in out {
+                assert_eq!(d, want, "rings={rings}");
+            }
+        }
+    }
+
+    #[test]
+    fn tensor_allreduce_sums_all_devices_all_workers() {
+        let p = 3;
+        let g = 2;
+        let len = 50;
+        let out = run_world(p, move |mut c| {
+            let vecs: Vec<Vec<f32>> = (0..g)
+                .map(|d| payload(c.rank() * g + d, len))
+                .collect();
+            let mut t = NodeTensor::from_vecs(vecs);
+            tensor_allreduce(&mut c, &mut t, 2, HostReduce::Host);
+            t
+        });
+        let mut want = vec![0.0; len];
+        for v in 0..p * g {
+            add_assign(&mut want, &payload(v, len));
+        }
+        for t in out {
+            for v in &t.vecs {
+                assert_eq!(*v, want);
+            }
+        }
+    }
+
+    #[test]
+    fn tensor_allreduce_custom_reducer_used() {
+        let p = 2;
+        let out = run_world(p, move |mut c| {
+            let mut t = NodeTensor::from_vecs(vec![vec![1.0; 8], vec![2.0; 8]]);
+            let reducer = |t: &NodeTensor| t.reduce_to_host();
+            tensor_allreduce(&mut c, &mut t, 1, HostReduce::Custom(&reducer));
+            t.vecs[0][0]
+        });
+        // 2 workers x (1+2) = 6.
+        assert!(out.iter().all(|&x| x == 6.0));
+    }
+
+    #[test]
+    fn ring_allreduce_len_smaller_than_ranks() {
+        let p = 5;
+        let out = run_world(p, move |mut c| {
+            let mut d = vec![c.rank() as f32 + 1.0; 2]; // len < p
+            ring_allreduce(&mut c, &mut d);
+            d
+        });
+        for d in out {
+            assert_eq!(d, vec![15.0, 15.0]);
+        }
+    }
+}

@@ -1,0 +1,295 @@
+//! α-β-γ timing models of the §6/§7.3 allreduce designs.
+//!
+//! These regenerate Figures 15 and 17–20. Costs follow the paper's own
+//! formalism (§6.2: ring allreduce = (p-1)α + 2·(p-1)/p·nβ + (p-1)/p·nγ),
+//! extended with the intra-node tensor phases of §6.3 and the multi-ring
+//! overlap of Fig. 9. Absolute seconds come from the [`CostParams`]
+//! bandwidth constants (taken from the paper where stated); what must hold
+//! is the *shape*: who wins, by what factor, where crossovers fall.
+
+use crate::netsim::CostParams;
+
+
+/// The §7.3 design space, one variant per curve in Figs 17–20.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Design {
+    /// a) ring-IBMGpu: tensor rings from host memory, IBMGpu reduction
+    /// kernels, `rings` logical rings overlapping NVLink math with network.
+    RingIbm { rings: usize },
+    /// b) ring-NCCL: one ring (NCCL ops are blocking), NCCL reduction BW.
+    RingNccl,
+    /// c) omp_ring-IBMGpu: reduce whole buffer to host, host bucket ring
+    /// with 8 OMP threads for the per-step reductions, copy back.
+    OmpRing,
+    /// d) reg-IBMGpu: host reduce + default MPI_Allreduce + bcast,
+    /// pipelined across the three stages.
+    Reg,
+    /// Baidu's ring over *every GPU* (Fig. 20 baseline): no node-tensor
+    /// grouping, host-staging copies on every hop, non-topology-aware rank
+    /// order so every hop crosses the node NIC.
+    BaiduRing,
+}
+
+impl Design {
+    pub fn label(&self) -> String {
+        match self {
+            Design::RingIbm { rings } => format!("ring-IBMGpu({rings})"),
+            Design::RingNccl => "ring-NCCL".into(),
+            Design::OmpRing => "omp_ring-IBMGpu".into(),
+            Design::Reg => "reg-IBMGpu".into(),
+            Design::BaiduRing => "Baidu-ring".into(),
+        }
+    }
+}
+
+/// Result of one simulated allreduce.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub design_label: String,
+    /// Workers (ring participants; 2 per Minsky node).
+    pub p: usize,
+    /// Message bytes per device vector.
+    pub bytes: usize,
+    /// Virtual seconds for the full tensor allreduce.
+    pub seconds: f64,
+    /// Effective bandwidth: bytes / seconds (the Figs 17–19 y-axis).
+    pub gbps: f64,
+}
+
+/// Ring phase cost on host memories: 2(p-1) steps of (α + chunk·β) plus the
+/// per-step reduction γ over the reduce-scatter half; `overlap` subtracts
+/// whatever reduction time hides under the network transfer (multi-ring).
+fn ring_phase(p: usize, n: f64, alpha: f64, beta: f64, gamma: f64, overlap: bool) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    let pf = p as f64;
+    let steps = 2.0 * (pf - 1.0);
+    let net = steps * alpha + 2.0 * (pf - 1.0) / pf * n * beta;
+    let red = (pf - 1.0) / pf * n * gamma;
+    if overlap {
+        // Reduction of ring i hides under transfer of ring i+1 (Fig. 9);
+        // only whatever exceeds the network time is exposed.
+        net + (red - net).max(0.0)
+    } else {
+        net + red
+    }
+}
+
+/// Simulate one tensor allreduce of `bytes` per device vector across `p`
+/// workers (each grouping `params.gpus_per_worker` device vectors).
+pub fn simulate(design: Design, p: usize, bytes: usize, params: &CostParams) -> SimResult {
+    let n = bytes as f64;
+    let a = params.alpha_net;
+    let seconds = match design {
+        Design::RingIbm { rings } => {
+            let r = rings.max(1) as f64;
+            // Startup: the first ring's slice must be tensor-reduced into
+            // host memory before its network phase can start; subsequent
+            // slices overlap with the previous ring's transfer.
+            let startup = n / r * params.gamma_gpu_ibm;
+            // Per-ring latency terms multiply; bytes are shared by the NIC.
+            let net = 2.0 * (p as f64 - 1.0) * r * a
+                + if p > 1 {
+                    2.0 * (p as f64 - 1.0) / p as f64 * n * params.beta_net
+                } else {
+                    0.0
+                };
+            // Per-step NVLink reductions overlap with network when r >= 2.
+            let red = if p > 1 {
+                (p as f64 - 1.0) / p as f64 * n * params.gamma_gpu_ibm
+            } else {
+                0.0
+            };
+            let exposed_red = if rings >= 2 { (red - net).max(0.0) } else { red };
+            // Final intra-node broadcast back to the device vectors.
+            let bcast = n * params.beta_gpu_bcast;
+            // GpuStart/GpuWait pipelining (Fig. 9): one launch+sync pair per
+            // ring, not per step.
+            let sync = 2.0 * r * params.gpu_sync;
+            startup + net + exposed_red + bcast + sync
+        }
+        Design::RingNccl => {
+            // Blocking NCCL ops: no overlap anywhere, NCCL reduce BW, and a
+            // kernel launch + sync on every ring step (§7.3).
+            let reduce = n * params.gamma_gpu_nccl + params.gpu_sync;
+            let ring = ring_phase(p, n, a, params.beta_net, params.gamma_gpu_nccl, false)
+                + 2.0 * (p.saturating_sub(1)) as f64 * params.gpu_sync;
+            let bcast = n * params.beta_gpu_bcast + params.gpu_sync;
+            reduce + ring + bcast
+        }
+        Design::OmpRing => {
+            // Whole buffer reduced into host first (IBMGpu kernels), then a
+            // host bucket ring whose per-step math runs on 8 OMP threads
+            // (an OMP fork/join barrier per step).
+            let omp_barrier = 5e-6;
+            let reduce = n * params.gamma_gpu_ibm + params.gpu_sync;
+            let ring = ring_phase(p, n, a, params.beta_net, params.gamma_omp, false)
+                + (p.saturating_sub(1)) as f64 * omp_barrier;
+            let copy_back = n * params.beta_gpu_bcast + params.gpu_sync;
+            reduce + ring + copy_back
+        }
+        Design::Reg => {
+            // Three stages pipelined over CHUNKS chunks: steady state is
+            // bounded by the slowest stage, plus pipeline fill.
+            const CHUNKS: f64 = 4.0;
+            let s1 = n * params.gamma_gpu_ibm;
+            // "default MPI_Allreduce": recursive doubling — log2(p) rounds
+            // each moving the FULL buffer and reducing it at host speed
+            // (not bandwidth-optimal; this is exactly what the paper's
+            // bucket rings replace, §6.2).
+            let rounds = (p.max(2) as f64).log2().ceil();
+            let s2 = if p > 1 {
+                rounds * (a + n * params.beta_net + n * params.gamma_host)
+            } else {
+                0.0
+            };
+            let s3 = n * params.beta_gpu_bcast;
+            let max = s1.max(s2).max(s3);
+            // Per-chunk stage handoffs are blocking syncs.
+            let sync = 3.0 * CHUNKS * params.gpu_sync;
+            (s1 + s2 + s3) / CHUNKS + max * (CHUNKS - 1.0) / CHUNKS + sync
+        }
+        Design::BaiduRing => {
+            // Ring over every GPU: pg participants, each hop staged through
+            // host memory (2 extra copies, §6.3) and — with non-topology-
+            // aware ordering — crossing the node NIC, which therefore
+            // carries g concurrent chunk flows per step.
+            let g = params.gpus_per_worker as f64;
+            let pg = p as f64 * g;
+            if pg <= 1.0 {
+                0.0
+            } else {
+                let chunk = n / pg;
+                let steps = 2.0 * (pg - 1.0);
+                let per_step = a
+                    + params.gpu_sync
+                    + chunk * (g * params.beta_net + 2.0 * params.beta_h2d);
+                // Per-step GPU math (no IBMGpu kernels: NCCL-class BW),
+                // blocking within each step.
+                let red_steps = pg - 1.0;
+                steps * per_step + red_steps * chunk * params.gamma_gpu_nccl
+            }
+        }
+    };
+    SimResult {
+        design_label: design.label(),
+        p,
+        bytes,
+        seconds,
+        gbps: bytes as f64 / seconds.max(1e-12) / 1e9,
+    }
+}
+
+/// Sweep helper: all designs at one (p, bytes) point.
+pub fn compare_designs(p: usize, bytes: usize, params: &CostParams) -> Vec<SimResult> {
+    [
+        Design::RingIbm { rings: 2 },
+        Design::RingNccl,
+        Design::OmpRing,
+        Design::Reg,
+    ]
+    .into_iter()
+    .map(|d| simulate(d, p, bytes, params))
+    .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn minsky() -> CostParams {
+        CostParams::minsky()
+    }
+
+    #[test]
+    fn ring_ibm_beats_all_at_mid_sizes() {
+        // Figs 17-19: the IBMGpu multi-ring is best at 4/16/64 MB.
+        for bytes in [4 << 20, 16 << 20, 64 << 20] {
+            let res = compare_designs(16, bytes, &minsky());
+            let best = res
+                .iter()
+                .min_by(|a, b| a.seconds.total_cmp(&b.seconds))
+                .unwrap();
+            assert_eq!(best.design_label, "ring-IBMGpu(2)", "at {bytes}: {res:?}");
+        }
+    }
+
+    #[test]
+    fn gap_narrows_at_large_messages() {
+        // §7.3: "for very large messages, the performance gap diminishes
+        // across the three" (the three ring designs a/b/c), as fixed
+        // per-step costs amortize and all hit the bandwidth wall.
+        let m = minsky();
+        let ratio = |bytes: usize| {
+            let ibm = simulate(Design::RingIbm { rings: 2 }, 16, bytes, &m).seconds;
+            let nccl = simulate(Design::RingNccl, 16, bytes, &m).seconds;
+            let omp = simulate(Design::OmpRing, 16, bytes, &m).seconds;
+            nccl.max(omp) / ibm
+        };
+        assert!(ratio(256 << 20) < ratio(4 << 20));
+    }
+
+    #[test]
+    fn ibm_vs_baidu_factor_is_paper_scale() {
+        // Fig 20: ~6x for the same number of GPUs.
+        let p = 16; // 32 GPUs
+        let bytes = 16 << 20;
+        let ibm = simulate(Design::RingIbm { rings: 2 }, p, bytes, &minsky());
+        let baidu = simulate(Design::BaiduRing, p, bytes, &minsky());
+        let factor = baidu.seconds / ibm.seconds;
+        assert!(factor > 3.0 && factor < 10.0, "factor {factor}");
+    }
+
+    #[test]
+    fn cost_monotone_in_bytes_and_p() {
+        let m = minsky();
+        for d in [
+            Design::RingIbm { rings: 2 },
+            Design::RingNccl,
+            Design::OmpRing,
+            Design::Reg,
+            Design::BaiduRing,
+        ] {
+            let t1 = simulate(d, 8, 1 << 20, &m).seconds;
+            let t2 = simulate(d, 8, 4 << 20, &m).seconds;
+            assert!(t2 > t1, "{d:?} not monotone in bytes");
+            let t3 = simulate(d, 16, 4 << 20, &m).seconds;
+            assert!(t3 > t1, "{d:?} not monotone in p");
+        }
+    }
+
+    #[test]
+    fn single_worker_has_no_network_cost() {
+        let m = minsky();
+        let r = simulate(Design::RingIbm { rings: 2 }, 1, 16 << 20, &m);
+        // Only intra-node reduce + bcast (+ per-ring syncs) remain.
+        let n = (16 << 20) as f64;
+        let expect = n / 2.0 * m.gamma_gpu_ibm + n * m.beta_gpu_bcast + 4.0 * m.gpu_sync;
+        assert!((r.seconds - expect).abs() / expect < 1e-9);
+    }
+
+    #[test]
+    fn multi_ring_overlap_helps() {
+        let m = minsky();
+        let one = simulate(Design::RingIbm { rings: 1 }, 16, 64 << 20, &m);
+        let two = simulate(Design::RingIbm { rings: 2 }, 16, 64 << 20, &m);
+        assert!(two.seconds < one.seconds, "{} !< {}", two.seconds, one.seconds);
+    }
+
+    #[test]
+    fn reg_allreduce_degrades_with_scale() {
+        // The recursive-doubling "default MPI_Allreduce" moves the full
+        // buffer log2(p) times, so its gap to the bandwidth-optimal ring
+        // widens with p (Fig. 15's end-to-end "nearly twice as fast" —
+        // with compute in the denominator — is asserted in figures.rs).
+        let m = minsky();
+        let f_at = |p: usize| {
+            let ring = simulate(Design::RingIbm { rings: 2 }, p, 100 << 20, &m);
+            let reg = simulate(Design::Reg, p, 100 << 20, &m);
+            reg.seconds / ring.seconds
+        };
+        assert!(f_at(8) > 1.5, "{}", f_at(8));
+        assert!(f_at(32) > f_at(8));
+    }
+}

@@ -1,0 +1,306 @@
+//! Experiment configuration: the six §7 parallelization modes, testbed
+//! presets and JSON round-trip (hand-rolled: no serde offline).
+
+use crate::jsonlite::Value;
+use crate::kvstore::KvType;
+use crate::netsim::CostParams;
+use crate::ps::SyncMode;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// The §7 algorithm modes (Figs 11–14).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algo {
+    DistSgd,
+    DistAsgd,
+    DistEsgd,
+    MpiSgd,
+    MpiAsgd,
+    MpiEsgd,
+}
+
+impl Algo {
+    pub const ALL: [Algo; 6] = [
+        Algo::DistSgd,
+        Algo::DistAsgd,
+        Algo::DistEsgd,
+        Algo::MpiSgd,
+        Algo::MpiAsgd,
+        Algo::MpiEsgd,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::DistSgd => "dist-SGD",
+            Algo::DistAsgd => "dist-ASGD",
+            Algo::DistEsgd => "dist-ESGD",
+            Algo::MpiSgd => "mpi-SGD",
+            Algo::MpiAsgd => "mpi-ASGD",
+            Algo::MpiEsgd => "mpi-ESGD",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Self::ALL.into_iter().find(|a| a.name().eq_ignore_ascii_case(s))
+    }
+
+    pub fn is_mpi(&self) -> bool {
+        matches!(self, Algo::MpiSgd | Algo::MpiAsgd | Algo::MpiEsgd)
+    }
+
+    pub fn is_elastic(&self) -> bool {
+        matches!(self, Algo::DistEsgd | Algo::MpiEsgd)
+    }
+
+    /// PS server aggregation discipline for this mode.
+    pub fn server_mode(&self) -> SyncMode {
+        match self {
+            Algo::DistSgd | Algo::MpiSgd => SyncMode::Sync,
+            // ASGD and elastic averaging both use the async PS (§5).
+            _ => SyncMode::Async,
+        }
+    }
+
+    /// KVStore type string of §4.2.1.
+    pub fn kv_type(&self) -> KvType {
+        match self {
+            Algo::DistSgd => KvType::DistSync,
+            Algo::DistAsgd | Algo::DistEsgd => KvType::DistAsync,
+            Algo::MpiSgd => KvType::SyncMpi,
+            Algo::MpiAsgd | Algo::MpiEsgd => KvType::AsyncMpi,
+        }
+    }
+}
+
+/// Everything one experiment run needs.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// Model variant in `artifacts/meta.json`.
+    pub variant: String,
+    pub algo: Algo,
+    /// Total DL workers (12 on testbed1).
+    pub workers: usize,
+    /// PS servers (2 on testbed1; 0 = pure MPI).
+    pub servers: usize,
+    /// MPI clients; workers are split evenly across them. `clients ==
+    /// workers` degrades MPI modes to dist modes — the paper's knob.
+    pub clients: usize,
+    pub epochs: usize,
+    /// Samples per epoch (the synthetic "ImageNet" scale).
+    pub samples_per_epoch: u64,
+    /// Per-worker scheduling batch (128 in the paper; here the model's
+    /// compiled batch).
+    pub batch: usize,
+    pub lr: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    /// Elastic averaging coefficient.
+    pub alpha: f32,
+    /// Elastic lazy-sync interval (64 in §5).
+    pub interval: usize,
+    /// Multi-ring count for tensor collectives.
+    pub rings: usize,
+    pub seed: u64,
+    /// Cost-model preset: "testbed1" or "minsky".
+    pub testbed: String,
+    /// Virtual compute seconds per batch (the modeled GPU fwd+bwd; the
+    /// *numerics* run for real, this sets the virtual time axis).
+    pub compute_s_per_batch: f64,
+    /// Relative per-worker compute jitter (stragglers; drives staleness).
+    pub jitter: f64,
+    /// Gaussian-mixture noise level and class count.
+    pub noise: f32,
+    pub classes: usize,
+    /// Held-out samples for validation accuracy.
+    pub eval_samples: u64,
+    /// Bytes of the *virtual* model moved per push/pull/allreduce on the
+    /// netsim clock. The convergence numerics use the compiled small
+    /// model; the time axis uses paper-scale traffic (ResNet-50 ≈ 102 MB
+    /// of f32 parameters) so the compute:communication ratio matches §7.
+    pub virtual_model_bytes: usize,
+}
+
+impl ExperimentConfig {
+    /// testbed1 defaults (§7.1): 12 workers, 2 servers, 2 MPI clients,
+    /// batch 128-analog, ResNet-analog "mlp" variant.
+    pub fn testbed1(algo: Algo) -> Self {
+        let clients = if algo.is_mpi() { 2 } else { 12 };
+        Self {
+            variant: "mlp".into(),
+            algo,
+            workers: 12,
+            servers: 2,
+            clients,
+            epochs: 10,
+            samples_per_epoch: 12 * 16 * 64, // 16 batches/worker/epoch
+            batch: 64,
+            lr: 0.1,
+            // §5's pseudo-code ships *plain* SGD everywhere; momentum stays
+            // available as a knob but defaults off so the six modes differ
+            // only in their distribution strategy.
+            momentum: 0.0,
+            weight_decay: 1e-4,
+            alpha: 0.2,
+            interval: 8,
+            rings: 2,
+            seed: 42,
+            testbed: "testbed1".into(),
+            // ResNet-50 on K80-class GPUs: ~0.35 s per 128-batch; we keep
+            // the same compute:comm ratio for the 460k-param analog.
+            compute_s_per_batch: 0.35,
+            jitter: 0.15,
+            noise: 8.0,
+            classes: 16,
+            eval_samples: 512,
+            virtual_model_bytes: 102 << 20, // ResNet-50 f32 params
+        }
+    }
+
+    pub fn workers_per_client(&self) -> usize {
+        (self.workers / self.clients.max(1)).max(1)
+    }
+
+    /// The algorithm mini-batch (§5): workers aggregated × batch.
+    pub fn mini_batch(&self) -> usize {
+        match self.algo {
+            Algo::DistSgd | Algo::MpiSgd => self.workers * self.batch,
+            _ => self.workers_per_client() * self.batch,
+        }
+    }
+
+    pub fn cost_params(&self) -> CostParams {
+        match self.testbed.as_str() {
+            "minsky" | "testbed2" => CostParams::minsky(),
+            _ => CostParams::testbed1(),
+        }
+    }
+
+    /// Serialize to JSON (results provenance).
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("variant", Value::str(&self.variant)),
+            ("algo", Value::str(self.algo.name())),
+            ("workers", Value::num(self.workers as f64)),
+            ("servers", Value::num(self.servers as f64)),
+            ("clients", Value::num(self.clients as f64)),
+            ("epochs", Value::num(self.epochs as f64)),
+            ("samples_per_epoch", Value::num(self.samples_per_epoch as f64)),
+            ("batch", Value::num(self.batch as f64)),
+            ("lr", Value::num(self.lr as f64)),
+            ("momentum", Value::num(self.momentum as f64)),
+            ("weight_decay", Value::num(self.weight_decay as f64)),
+            ("alpha", Value::num(self.alpha as f64)),
+            ("interval", Value::num(self.interval as f64)),
+            ("rings", Value::num(self.rings as f64)),
+            ("seed", Value::num(self.seed as f64)),
+            ("testbed", Value::str(&self.testbed)),
+            ("compute_s_per_batch", Value::num(self.compute_s_per_batch)),
+            ("jitter", Value::num(self.jitter)),
+            ("noise", Value::num(self.noise as f64)),
+            ("classes", Value::num(self.classes as f64)),
+            ("eval_samples", Value::num(self.eval_samples as f64)),
+            ("virtual_model_bytes", Value::num(self.virtual_model_bytes as f64)),
+        ])
+    }
+
+    /// Load from a JSON file; missing fields fall back to testbed1
+    /// defaults for the given algo.
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let algo = Algo::parse(v.req("algo")?.as_str().context("algo")?)
+            .context("unknown algo")?;
+        let mut c = Self::testbed1(algo);
+        let getn = |k: &str, d: f64| v.get(k).and_then(|x| x.as_f64()).unwrap_or(d);
+        let gets = |k: &str, d: &str| {
+            v.get(k)
+                .and_then(|x| x.as_str())
+                .unwrap_or(d)
+                .to_string()
+        };
+        c.variant = gets("variant", &c.variant);
+        c.workers = getn("workers", c.workers as f64) as usize;
+        c.servers = getn("servers", c.servers as f64) as usize;
+        c.clients = getn("clients", c.clients as f64) as usize;
+        c.epochs = getn("epochs", c.epochs as f64) as usize;
+        c.samples_per_epoch = getn("samples_per_epoch", c.samples_per_epoch as f64) as u64;
+        c.batch = getn("batch", c.batch as f64) as usize;
+        c.lr = getn("lr", c.lr as f64) as f32;
+        c.momentum = getn("momentum", c.momentum as f64) as f32;
+        c.weight_decay = getn("weight_decay", c.weight_decay as f64) as f32;
+        c.alpha = getn("alpha", c.alpha as f64) as f32;
+        c.interval = getn("interval", c.interval as f64) as usize;
+        c.rings = getn("rings", c.rings as f64) as usize;
+        c.seed = getn("seed", c.seed as f64) as u64;
+        c.testbed = gets("testbed", &c.testbed);
+        c.compute_s_per_batch = getn("compute_s_per_batch", c.compute_s_per_batch);
+        c.jitter = getn("jitter", c.jitter);
+        c.noise = getn("noise", c.noise as f64) as f32;
+        c.classes = getn("classes", c.classes as f64) as usize;
+        c.eval_samples = getn("eval_samples", c.eval_samples as f64) as u64;
+        c.virtual_model_bytes = getn("virtual_model_bytes", c.virtual_model_bytes as f64) as usize;
+        Ok(c)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::from_json(&crate::jsonlite::parse_file(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn algo_names_round_trip() {
+        for a in Algo::ALL {
+            assert_eq!(Algo::parse(a.name()), Some(a));
+        }
+        assert_eq!(Algo::parse("nope"), None);
+    }
+
+    #[test]
+    fn server_modes_match_paper() {
+        assert_eq!(Algo::DistSgd.server_mode(), SyncMode::Sync);
+        assert_eq!(Algo::MpiSgd.server_mode(), SyncMode::Sync);
+        for a in [Algo::DistAsgd, Algo::DistEsgd, Algo::MpiAsgd, Algo::MpiEsgd] {
+            assert_eq!(a.server_mode(), SyncMode::Async);
+        }
+    }
+
+    #[test]
+    fn dist_modes_are_one_worker_clients() {
+        let c = ExperimentConfig::testbed1(Algo::DistSgd);
+        assert_eq!(c.clients, 12);
+        assert_eq!(c.workers_per_client(), 1);
+        let c = ExperimentConfig::testbed1(Algo::MpiSgd);
+        assert_eq!(c.clients, 2);
+        assert_eq!(c.workers_per_client(), 6);
+    }
+
+    #[test]
+    fn mini_batch_follows_section5() {
+        // sync SGD: num_workers * batch; async/elastic: per-client workers.
+        let sync = ExperimentConfig::testbed1(Algo::MpiSgd);
+        assert_eq!(sync.mini_batch(), 12 * 64);
+        let esgd = ExperimentConfig::testbed1(Algo::MpiEsgd);
+        assert_eq!(esgd.mini_batch(), 6 * 64);
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let c = ExperimentConfig::testbed1(Algo::MpiEsgd);
+        let v = c.to_json();
+        let c2 = ExperimentConfig::from_json(&v).unwrap();
+        assert_eq!(c2.algo, c.algo);
+        assert_eq!(c2.workers, c.workers);
+        assert_eq!(c2.interval, c.interval);
+        assert!((c2.alpha - c.alpha).abs() < 1e-9);
+    }
+
+    #[test]
+    fn partial_json_falls_back_to_defaults() {
+        let v = crate::jsonlite::parse(r#"{"algo": "mpi-SGD", "workers": 4}"#).unwrap();
+        let c = ExperimentConfig::from_json(&v).unwrap();
+        assert_eq!(c.workers, 4);
+        assert_eq!(c.servers, 2);
+    }
+}

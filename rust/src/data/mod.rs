@@ -1,0 +1,290 @@
+//! Synthetic datasets — the ImageNet-1K substitute (DESIGN.md §2).
+//!
+//! The paper trains ResNet-50 on ImageNet (1.2M images / 1000 classes).
+//! Neither the data nor the GPUs to chew it exist here, so convergence
+//! experiments use a deterministic **Gaussian-mixture image classifier
+//! task**: class-conditional Gaussian blobs in pixel space, separable but
+//! noisy, so SGD shows a real learning curve whose dynamics (variance
+//! reduction from bigger effective mini-batches, staleness penalties for
+//! async updates) are the properties the paper's figures exercise.
+//!
+//! For the transformer end-to-end driver there is a tiny synthetic corpus
+//! with learnable bigram/trigram structure.
+
+use crate::util::Rng;
+
+/// A batch of dense features + integer labels.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub batch: usize,
+}
+
+/// Class-conditional Gaussian mixture over `dim` "pixels".
+///
+/// Deterministic: sample `i` of the dataset is fully determined by
+/// `(seed, i)`, so any worker can materialize any shard without storing
+/// 336 GB of JPEGs.
+#[derive(Debug, Clone)]
+pub struct GaussianMixture {
+    pub dim: usize,
+    pub classes: usize,
+    pub noise: f32,
+    pub seed: u64,
+    centers: Vec<f32>, // classes x dim
+}
+
+impl GaussianMixture {
+    pub fn new(dim: usize, classes: usize, noise: f32, seed: u64) -> Self {
+        // Class centers: unit-ish random directions, fixed by the seed.
+        let mut rng = Rng::new(seed).fork(0xC0FFEE);
+        let mut centers = vec![0.0f32; classes * dim];
+        rng.fill_normal(&mut centers, 0.0, 1.0);
+        // Normalize each center to comparable energy.
+        for c in 0..classes {
+            let row = &mut centers[c * dim..(c + 1) * dim];
+            let norm = (row.iter().map(|v| v * v).sum::<f32>()).sqrt().max(1e-6);
+            for v in row.iter_mut() {
+                *v /= norm / (dim as f32).sqrt();
+            }
+        }
+        Self { dim, classes, noise, seed, centers }
+    }
+
+    /// Materialize sample `i`: label is `i % classes`; features are the
+    /// class center *attenuated by the noise level* plus unit Gaussian
+    /// noise: `x = center/noise + N(0, 1)`.
+    ///
+    /// Keeping the additive noise at unit scale keeps inputs ~N(0,1) (so
+    /// learning rates stay comparable across difficulty levels) while
+    /// `noise` controls the signal-to-noise ratio — large values make the
+    /// task take many epochs, like ImageNet does. `noise == 0` yields the
+    /// exact centers (useful in tests).
+    pub fn sample(&self, i: u64, x: &mut [f32]) -> i32 {
+        debug_assert_eq!(x.len(), self.dim);
+        let label = (i % self.classes as u64) as usize;
+        let mut rng = Rng::new(self.seed).fork(i.wrapping_mul(0x9E3779B97F4A7C15) | 1);
+        let center = &self.centers[label * self.dim..(label + 1) * self.dim];
+        if self.noise <= 0.0 {
+            x.copy_from_slice(center);
+            return label as i32;
+        }
+        let signal = 1.0 / self.noise;
+        for (j, v) in x.iter_mut().enumerate() {
+            *v = center[j] * signal + rng.normal() as f32;
+        }
+        label as i32
+    }
+
+    /// Materialize a batch of consecutive sample indices.
+    pub fn batch(&self, start: u64, batch: usize) -> Batch {
+        let mut x = vec![0.0f32; batch * self.dim];
+        let mut y = vec![0i32; batch];
+        for b in 0..batch {
+            y[b] = self.sample(start + b as u64, &mut x[b * self.dim..(b + 1) * self.dim]);
+        }
+        Batch { x, y, batch }
+    }
+}
+
+/// A worker's shard of an epoch: which sample indices it owns.
+///
+/// Mirrors MXNET data-parallel sharding: the epoch's `total` samples are
+/// split contiguously across `n_workers`; each worker iterates its shard in
+/// `batch`-sized steps (the *batch size* is MXNET's scheduling unit, §5 —
+/// distinct from the algorithm's mini_batch_size).
+#[derive(Debug, Clone)]
+pub struct Shard {
+    pub worker: usize,
+    pub n_workers: usize,
+    pub total: u64,
+    pub batch: usize,
+    pub epoch: u64,
+}
+
+impl Shard {
+    /// Number of batches this worker runs per epoch.
+    pub fn batches_per_epoch(&self) -> u64 {
+        let per_worker = self.total / self.n_workers as u64;
+        per_worker / self.batch as u64
+    }
+
+    /// Start index of batch `b` in epoch `epoch` for this worker.
+    /// Epochs rotate the shard assignment so every worker eventually sees
+    /// different data (a cheap stand-in for reshuffling).
+    pub fn batch_start(&self, b: u64) -> u64 {
+        let per_worker = self.total / self.n_workers as u64;
+        let rotated = (self.worker as u64 + self.epoch) % self.n_workers as u64;
+        rotated * per_worker + (b * self.batch as u64) % per_worker.max(1)
+    }
+}
+
+/// Synthetic token corpus for the transformer: a seeded random walk over a
+/// cyclic vocabulary with strong local structure (next token is one of a
+/// few seeded successors), so an LM can actually reduce loss below uniform.
+#[derive(Debug, Clone)]
+pub struct TinyCorpus {
+    pub vocab: usize,
+    pub seed: u64,
+    succ: Vec<u32>, // vocab x BRANCH successor table
+}
+
+const BRANCH: usize = 4;
+
+impl TinyCorpus {
+    pub fn new(vocab: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed).fork(0x7E47);
+        let succ = (0..vocab * BRANCH)
+            .map(|_| rng.below(vocab as u64) as u32)
+            .collect();
+        Self { vocab, seed, succ }
+    }
+
+    /// Generate a (tokens, next-tokens) pair of length `seq` for sample `i`.
+    pub fn sample(&self, i: u64, seq: usize) -> (Vec<i32>, Vec<i32>) {
+        let mut rng = Rng::new(self.seed).fork(i.wrapping_mul(0xD1B54A32D192ED03) | 1);
+        let mut tok = rng.below(self.vocab as u64) as u32;
+        let mut xs = Vec::with_capacity(seq);
+        let mut ys = Vec::with_capacity(seq);
+        for _ in 0..seq {
+            xs.push(tok as i32);
+            let next = self.succ[tok as usize * BRANCH + rng.below(BRANCH as u64) as usize];
+            ys.push(next as i32);
+            tok = next;
+        }
+        (xs, ys)
+    }
+
+    /// Batch of `batch` sequences starting at sample index `start`.
+    pub fn batch(&self, start: u64, batch: usize, seq: usize) -> Batch {
+        let mut x = Vec::with_capacity(batch * seq);
+        let mut y = Vec::with_capacity(batch * seq);
+        for b in 0..batch {
+            let (xs, ys) = self.sample(start + b as u64, seq);
+            x.extend(xs);
+            y.extend(ys);
+        }
+        Batch {
+            x: x.iter().map(|&t| t as f32).collect(), // carried as f32 slots
+            y,
+            batch,
+        }
+    }
+
+    /// Same as [`batch`] but keeping tokens as i32 (the model's input dtype).
+    pub fn batch_tokens(&self, start: u64, batch: usize, seq: usize) -> (Vec<i32>, Vec<i32>) {
+        let mut x = Vec::with_capacity(batch * seq);
+        let mut y = Vec::with_capacity(batch * seq);
+        for b in 0..batch {
+            let (xs, ys) = self.sample(start + b as u64, seq);
+            x.extend(xs);
+            y.extend(ys);
+        }
+        (x, y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gaussian_mixture_deterministic() {
+        let d = GaussianMixture::new(16, 4, 0.5, 42);
+        let mut a = vec![0.0; 16];
+        let mut b = vec![0.0; 16];
+        let la = d.sample(7, &mut a);
+        let lb = d.sample(7, &mut b);
+        assert_eq!(la, lb);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn labels_cycle_over_classes() {
+        let d = GaussianMixture::new(8, 4, 0.1, 1);
+        let mut x = vec![0.0; 8];
+        assert_eq!(d.sample(0, &mut x), 0);
+        assert_eq!(d.sample(5, &mut x), 1);
+        assert_eq!(d.sample(11, &mut x), 3);
+    }
+
+    #[test]
+    fn noise_zero_gives_exact_centers() {
+        let d = GaussianMixture::new(8, 2, 0.0, 3);
+        let mut a = vec![0.0; 8];
+        let mut b = vec![0.0; 8];
+        d.sample(0, &mut a); // class 0
+        d.sample(2, &mut b); // class 0 again
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn different_samples_differ() {
+        let d = GaussianMixture::new(8, 2, 0.5, 3);
+        let mut a = vec![0.0; 8];
+        let mut b = vec![0.0; 8];
+        d.sample(0, &mut a);
+        d.sample(2, &mut b); // same class, different noise
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn batch_layout() {
+        let d = GaussianMixture::new(4, 2, 0.1, 5);
+        let b = d.batch(10, 3);
+        assert_eq!(b.x.len(), 12);
+        assert_eq!(b.y.len(), 3);
+        assert_eq!(b.y, vec![0, 1, 0]);
+    }
+
+    #[test]
+    fn shard_partitions_epoch() {
+        let total = 1200u64;
+        let nw = 12;
+        let batch = 10;
+        let sh = |w| Shard { worker: w, n_workers: nw, total, batch, epoch: 0 };
+        assert_eq!(sh(0).batches_per_epoch(), 10);
+        // Worker starts are disjoint contiguous ranges at epoch 0.
+        let starts: Vec<u64> = (0..nw).map(|w| sh(w).batch_start(0)).collect();
+        for (w, s) in starts.iter().enumerate() {
+            assert_eq!(*s, w as u64 * 100);
+        }
+    }
+
+    #[test]
+    fn shard_rotates_across_epochs() {
+        let a = Shard { worker: 0, n_workers: 4, total: 400, batch: 10, epoch: 0 };
+        let b = Shard { worker: 0, n_workers: 4, total: 400, batch: 10, epoch: 1 };
+        assert_ne!(a.batch_start(0), b.batch_start(0));
+    }
+
+    #[test]
+    fn corpus_deterministic_and_learnable() {
+        let c = TinyCorpus::new(64, 9);
+        let (x1, y1) = c.sample(3, 32);
+        let (x2, y2) = c.sample(3, 32);
+        assert_eq!(x1, x2);
+        assert_eq!(y1, y2);
+        // Chain property: x[t+1] == y[t].
+        for t in 0..31 {
+            assert_eq!(x1[t + 1], y1[t]);
+        }
+        // Every successor is from the token's BRANCH-entry table => the
+        // conditional entropy is at most log2(BRANCH) << log2(vocab).
+        for t in 0..32 {
+            let tok = x1[t] as usize;
+            let succs = &c.succ[tok * BRANCH..(tok + 1) * BRANCH];
+            assert!(succs.contains(&(y1[t] as u32)));
+        }
+    }
+
+    #[test]
+    fn corpus_batch_tokens_shapes() {
+        let c = TinyCorpus::new(32, 1);
+        let (x, y) = c.batch_tokens(0, 4, 16);
+        assert_eq!(x.len(), 64);
+        assert_eq!(y.len(), 64);
+        assert!(x.iter().all(|&t| t >= 0 && t < 32));
+    }
+}

@@ -1,0 +1,369 @@
+//! MXNET-style dataflow dependency engine (paper §3.1).
+//!
+//! The paper's central implementation trick is that *communication is data*:
+//! KVStore push/pull enqueue C++11 lambdas into MXNET's dependency engine
+//! with explicit read/mutate tags (Figs 4–5), so MPI collectives interleave
+//! with compute exactly as the data-flow graph allows. This module is that
+//! engine: operations are closures tagged with the [`Var`]s they read and
+//! mutate; the scheduler grants **concurrent readers / exclusive writers per
+//! var, in push (program) order** — MXNET's exact rule — and runs ready
+//! operations on a small thread pool.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+/// A dependency tag ("variable") — identifies a piece of state, e.g. one
+/// KVStore key's gradient buffer. Cheap to copy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Var(usize);
+
+type OpFn = Box<dyn FnOnce() + Send + 'static>;
+
+struct OpState {
+    func: Option<OpFn>,
+    /// Dependency grants still outstanding.
+    pending: usize,
+    read: Vec<Var>,
+    mutate: Vec<Var>,
+}
+
+#[derive(Default)]
+struct VarState {
+    /// FIFO of (op id, is_write) requests — program order per var.
+    queue: VecDeque<(usize, bool)>,
+    running_reads: usize,
+    running_write: bool,
+}
+
+#[derive(Default)]
+struct Shared {
+    ops: Vec<Option<OpState>>,
+    /// Recycled op slots (long trainings push millions of ops).
+    free_slots: Vec<usize>,
+    vars: Vec<VarState>,
+    ready: VecDeque<usize>,
+    outstanding: usize,
+    shutdown: bool,
+}
+
+/// The threaded dependency engine.
+pub struct Engine {
+    shared: Arc<(Mutex<Shared>, Condvar, Condvar)>, // (state, worker_cv, idle_cv)
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl Engine {
+    /// Create an engine with `threads` worker threads (>= 1).
+    pub fn new(threads: usize) -> Self {
+        let shared = Arc::new((Mutex::new(Shared::default()), Condvar::new(), Condvar::new()));
+        let workers = (0..threads.max(1))
+            .map(|_| {
+                let sh = shared.clone();
+                thread::spawn(move || Self::worker_loop(&sh))
+            })
+            .collect();
+        Self { shared, workers }
+    }
+
+    fn worker_loop(sh: &Arc<(Mutex<Shared>, Condvar, Condvar)>) {
+        let (lock, worker_cv, idle_cv) = &**sh;
+        loop {
+            let (op_id, func) = {
+                let mut st = lock.lock().unwrap();
+                loop {
+                    if let Some(id) = st.ready.pop_front() {
+                        let op = st.ops[id].as_mut().unwrap();
+                        let f = op.func.take().unwrap();
+                        break (id, f);
+                    }
+                    if st.shutdown {
+                        return;
+                    }
+                    st = worker_cv.wait(st).unwrap();
+                }
+            };
+            func();
+            // Release dependencies and grant successors.
+            let mut st = lock.lock().unwrap();
+            let op = st.ops[op_id].take().unwrap();
+            st.free_slots.push(op_id);
+            let mut to_grant: Vec<Var> = Vec::new();
+            for v in &op.read {
+                st.vars[v.0].running_reads -= 1;
+                to_grant.push(*v);
+            }
+            for v in &op.mutate {
+                st.vars[v.0].running_write = false;
+                to_grant.push(*v);
+            }
+            for v in to_grant {
+                Self::try_grant(&mut st, v);
+            }
+            st.outstanding -= 1;
+            if !st.ready.is_empty() {
+                worker_cv.notify_all();
+            }
+            if st.outstanding == 0 {
+                idle_cv.notify_all();
+            }
+        }
+    }
+
+    /// Grant queued requests at the head of `v`'s FIFO while legal:
+    /// consecutive reads share; a write requires exclusivity.
+    fn try_grant(st: &mut Shared, v: Var) {
+        loop {
+            let vs = &mut st.vars[v.0];
+            let Some(&(op_id, is_write)) = vs.queue.front() else { break };
+            let can = if is_write {
+                !vs.running_write && vs.running_reads == 0
+            } else {
+                !vs.running_write
+            };
+            if !can {
+                break;
+            }
+            vs.queue.pop_front();
+            if is_write {
+                vs.running_write = true;
+            } else {
+                vs.running_reads += 1;
+            }
+            let op = st.ops[op_id].as_mut().unwrap();
+            op.pending -= 1;
+            if op.pending == 0 {
+                st.ready.push_back(op_id);
+            }
+        }
+    }
+
+    /// Allocate a new dependency variable.
+    pub fn new_var(&self) -> Var {
+        let (lock, ..) = &*self.shared;
+        let mut st = lock.lock().unwrap();
+        st.vars.push(VarState::default());
+        Var(st.vars.len() - 1)
+    }
+
+    /// Enqueue `func` with the given read/mutate dependencies.
+    ///
+    /// Mirrors `Engine.Push(lambda, read_deps, mutate_deps)` from §3.1. A
+    /// var listed in both sets is treated as mutate (MXNET dedups the same
+    /// way); duplicates within a set are collapsed.
+    pub fn push<F: FnOnce() + Send + 'static>(&self, func: F, read: &[Var], mutate: &[Var]) {
+        let mut mut_v: Vec<Var> = mutate.to_vec();
+        mut_v.sort();
+        mut_v.dedup();
+        let mut read_v: Vec<Var> = read
+            .iter()
+            .copied()
+            .filter(|v| !mut_v.contains(v))
+            .collect();
+        read_v.sort();
+        read_v.dedup();
+
+        let (lock, worker_cv, _) = &*self.shared;
+        let mut st = lock.lock().unwrap();
+        let pending = read_v.len() + mut_v.len();
+        let op = OpState {
+            func: Some(Box::new(func)),
+            pending,
+            read: read_v.clone(),
+            mutate: mut_v.clone(),
+        };
+        let op_id = match st.free_slots.pop() {
+            Some(slot) => {
+                st.ops[slot] = Some(op);
+                slot
+            }
+            None => {
+                st.ops.push(Some(op));
+                st.ops.len() - 1
+            }
+        };
+        st.outstanding += 1;
+        if pending == 0 {
+            st.ready.push_back(op_id);
+        } else {
+            for v in &read_v {
+                st.vars[v.0].queue.push_back((op_id, false));
+            }
+            for v in &mut_v {
+                st.vars[v.0].queue.push_back((op_id, true));
+            }
+            // Grant in var order; each var's FIFO preserves program order
+            // because pushes hold the same lock.
+            for v in read_v.iter().chain(mut_v.iter()) {
+                Self::try_grant(&mut st, *v);
+            }
+        }
+        worker_cv.notify_all();
+    }
+
+    /// Block until every pushed operation has completed (MXNET's
+    /// `WaitForAll`).
+    pub fn wait_all(&self) {
+        let (lock, _, idle_cv) = &*self.shared;
+        let mut st = lock.lock().unwrap();
+        while st.outstanding > 0 {
+            st = idle_cv.wait(st).unwrap();
+        }
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        self.wait_all();
+        {
+            let (lock, worker_cv, _) = &*self.shared;
+            let mut st = lock.lock().unwrap();
+            st.shutdown = true;
+            worker_cv.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::mpsc;
+
+    #[test]
+    fn runs_zero_dep_op() {
+        let e = Engine::new(2);
+        let hit = Arc::new(AtomicUsize::new(0));
+        let h = hit.clone();
+        e.push(move || { h.fetch_add(1, Ordering::SeqCst); }, &[], &[]);
+        e.wait_all();
+        assert_eq!(hit.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn writes_to_same_var_serialize_in_push_order() {
+        let e = Engine::new(4);
+        let v = e.new_var();
+        let log = Arc::new(Mutex::new(Vec::new()));
+        for i in 0..50 {
+            let log = log.clone();
+            e.push(move || log.lock().unwrap().push(i), &[], &[v]);
+        }
+        e.wait_all();
+        assert_eq!(*log.lock().unwrap(), (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn concurrent_readers_overlap() {
+        // Two readers of the same var hand a token to each other; if the
+        // engine serialized reads this would deadlock.
+        let e = Engine::new(2);
+        let v = e.new_var();
+        let (tx1, rx1) = mpsc::channel::<()>();
+        let (tx2, rx2) = mpsc::channel::<()>();
+        e.push(
+            move || {
+                tx1.send(()).unwrap();
+                rx2.recv().unwrap();
+            },
+            &[v],
+            &[],
+        );
+        e.push(
+            move || {
+                rx1.recv().unwrap();
+                tx2.send(()).unwrap();
+            },
+            &[v],
+            &[],
+        );
+        e.wait_all();
+    }
+
+    #[test]
+    fn writer_waits_for_readers_and_blocks_later_readers() {
+        let e = Engine::new(4);
+        let v = e.new_var();
+        let log = Arc::new(Mutex::new(Vec::new()));
+        for (i, kind) in [(0, "r"), (1, "r"), (2, "w"), (3, "r")] {
+            let log = log.clone();
+            let f = move || log.lock().unwrap().push((i, kind));
+            match kind {
+                "r" => e.push(f, &[v], &[]),
+                _ => e.push(f, &[], &[v]),
+            }
+        }
+        e.wait_all();
+        let got = log.lock().unwrap().clone();
+        let pos = |i| got.iter().position(|&(j, _)| j == i).unwrap();
+        // Write (2) after both leading reads, read (3) after the write.
+        assert!(pos(2) > pos(0) && pos(2) > pos(1));
+        assert!(pos(3) > pos(2));
+    }
+
+    #[test]
+    fn read_and_mutate_same_var_treated_as_mutate() {
+        let e = Engine::new(2);
+        let v = e.new_var();
+        let log = Arc::new(Mutex::new(Vec::new()));
+        for i in 0..10 {
+            let log = log.clone();
+            // read + mutate the same var; must still serialize in order.
+            e.push(move || log.lock().unwrap().push(i), &[v], &[v]);
+        }
+        e.wait_all();
+        assert_eq!(*log.lock().unwrap(), (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn independent_vars_do_not_interfere() {
+        let e = Engine::new(4);
+        let a = e.new_var();
+        let b = e.new_var();
+        let count = Arc::new(AtomicUsize::new(0));
+        for i in 0..40 {
+            let c = count.clone();
+            let var = if i % 2 == 0 { a } else { b };
+            e.push(move || { c.fetch_add(1, Ordering::SeqCst); }, &[], &[var]);
+        }
+        e.wait_all();
+        assert_eq!(count.load(Ordering::SeqCst), 40);
+    }
+
+    #[test]
+    fn chain_read_after_write_sees_value() {
+        let e = Engine::new(2);
+        let v = e.new_var();
+        let cell = Arc::new(Mutex::new(0u64));
+        let out = Arc::new(Mutex::new(0u64));
+        {
+            let cell = cell.clone();
+            e.push(move || *cell.lock().unwrap() = 42, &[], &[v]);
+        }
+        {
+            let cell = cell.clone();
+            let out = out.clone();
+            e.push(move || *out.lock().unwrap() = *cell.lock().unwrap(), &[v], &[]);
+        }
+        e.wait_all();
+        assert_eq!(*out.lock().unwrap(), 42);
+    }
+
+    #[test]
+    fn wait_all_with_many_ops_and_vars() {
+        let e = Engine::new(3);
+        let vars: Vec<Var> = (0..8).map(|_| e.new_var()).collect();
+        let count = Arc::new(AtomicUsize::new(0));
+        for i in 0..500 {
+            let c = count.clone();
+            let r = vars[i % 8];
+            let m = vars[(i * 3 + 1) % 8];
+            e.push(move || { c.fetch_add(1, Ordering::SeqCst); }, &[r], &[m]);
+        }
+        e.wait_all();
+        assert_eq!(count.load(Ordering::SeqCst), 500);
+    }
+}

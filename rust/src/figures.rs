@@ -1,0 +1,318 @@
+//! Drivers that regenerate every table and figure of the paper's §7.
+//!
+//! Each `figNN` function returns the data series and (optionally) writes a
+//! tidy CSV under `results/`. Convergence figures (11/13/14/16) run the
+//! virtual-time trainer with real PJRT numerics; collective figures
+//! (15/17–20) evaluate the §6 cost models. The `examples/` binaries and
+//! the bench harness are thin wrappers around these.
+
+use crate::collectives::sim::{simulate as csim, Design, SimResult};
+use crate::config::{Algo, ExperimentConfig};
+use crate::metrics::{write_runs_csv, RunResult, Table};
+use crate::netsim::CostParams;
+use anyhow::Result;
+use std::path::Path;
+
+/// Shared testbed1 configuration for the convergence figures (Figs 11–14):
+/// 12 workers, 2 servers, 2 MPI clients, ResNet-analog model.
+pub fn fig_base(algo: Algo, epochs: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::testbed1(algo);
+    cfg.epochs = epochs;
+    cfg
+}
+
+fn run_modes(
+    algos: &[Algo],
+    epochs: usize,
+    artifacts: &Path,
+    tweak: impl Fn(&mut ExperimentConfig),
+) -> Result<Vec<RunResult>> {
+    let mut runs = Vec::new();
+    for &algo in algos {
+        let mut cfg = fig_base(algo, epochs);
+        tweak(&mut cfg);
+        eprintln!("[fig] running {} ({} epochs)...", algo.name(), cfg.epochs);
+        runs.push(crate::trainer::sim::simulate(&cfg, artifacts)?);
+    }
+    Ok(runs)
+}
+
+/// Render acc-vs-time series the way the paper plots them.
+pub fn print_acc_vs_time(title: &str, runs: &[RunResult]) {
+    println!("== {title} ==");
+    let mut t = Table::new(&["mode", "epoch", "vtime_s", "val_acc", "train_loss"]);
+    for run in runs {
+        for r in &run.records {
+            t.row(vec![
+                run.label.clone(),
+                r.epoch.to_string(),
+                format!("{:.1}", r.vtime),
+                format!("{:.3}", r.val_acc),
+                format!("{:.3}", r.train_loss),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+}
+
+/// Fig. 11: validation accuracy vs time, dist-vs-mpi {SGD, ASGD}.
+pub fn fig11(artifacts: &Path, out_dir: &Path, epochs: usize) -> Result<Vec<RunResult>> {
+    let runs = run_modes(
+        &[Algo::DistSgd, Algo::MpiSgd, Algo::DistAsgd, Algo::MpiAsgd],
+        epochs,
+        artifacts,
+        |_| {},
+    )?;
+    write_runs_csv(&out_dir.join("fig11_sgd_asgd.csv"), &runs)?;
+    Ok(runs)
+}
+
+/// Fig. 12: average epoch time (seconds) for all six modes.
+pub fn fig12(artifacts: &Path, out_dir: &Path, epochs: usize) -> Result<Vec<(String, f64)>> {
+    let runs = run_modes(&Algo::ALL, epochs, artifacts, |_| {})?;
+    let bars: Vec<(String, f64)> = runs
+        .iter()
+        .map(|r| (r.label.clone(), r.avg_epoch_time))
+        .collect();
+    let mut csv = crate::metrics::Csv::create(
+        &out_dir.join("fig12_epoch_time.csv"),
+        "mode,avg_epoch_time_s",
+    )?;
+    for (label, t) in &bars {
+        csv.row(&[label.clone(), format!("{t:.3}")])?;
+    }
+    write_runs_csv(&out_dir.join("fig12_runs.csv"), &runs)?;
+    Ok(bars)
+}
+
+/// Fig. 13: ESGD family — mpi-ESGD vs dist-ESGD vs mpi-SGD vs mpi-ASGD.
+pub fn fig13(artifacts: &Path, out_dir: &Path, epochs: usize) -> Result<Vec<RunResult>> {
+    let runs = run_modes(
+        &[Algo::MpiEsgd, Algo::DistEsgd, Algo::MpiSgd, Algo::MpiAsgd],
+        epochs,
+        artifacts,
+        |_| {},
+    )?;
+    write_runs_csv(&out_dir.join("fig13_esgd.csv"), &runs)?;
+    Ok(runs)
+}
+
+/// Fig. 14: multi-epoch run, mpi-ESGD vs mpi-SGD (paper reaches 0.67).
+pub fn fig14(artifacts: &Path, out_dir: &Path, epochs: usize) -> Result<Vec<RunResult>> {
+    let runs = run_modes(&[Algo::MpiEsgd, Algo::MpiSgd], epochs, artifacts, |_| {})?;
+    write_runs_csv(&out_dir.join("fig14_esgd_epochs.csv"), &runs)?;
+    Ok(runs)
+}
+
+/// Fig. 16: learning curve in the pure-MPI configuration of testbed2
+/// (#servers = 0, mpi-SGD over one client of all workers).
+pub fn fig16(artifacts: &Path, out_dir: &Path, epochs: usize) -> Result<Vec<RunResult>> {
+    let runs = run_modes(&[Algo::MpiSgd], epochs, artifacts, |cfg| {
+        cfg.servers = 0;
+        cfg.clients = 1;
+        cfg.testbed = "minsky".into();
+        // Larger effective batch => larger lr (paper: 0.5 instead of 0.1).
+        cfg.lr *= 2.0;
+    })?;
+    write_runs_csv(&out_dir.join("fig16_learning_curve.csv"), &runs)?;
+    Ok(runs)
+}
+
+// ---------------------------------------------------------------------------
+// Cost-model figures (no artifacts needed)
+// ---------------------------------------------------------------------------
+
+/// Figs 17–19: tensor-allreduce bandwidth for the four §7.3 designs at a
+/// given message size, swept over worker count.
+pub fn fig17_19(bytes: usize, out_dir: Option<&Path>) -> Result<Vec<SimResult>> {
+    let params = CostParams::minsky();
+    let designs = [
+        Design::RingIbm { rings: 2 },
+        Design::RingNccl,
+        Design::OmpRing,
+        Design::Reg,
+    ];
+    let mut rows = Vec::new();
+    for p in [2usize, 4, 8, 16, 32] {
+        for d in designs {
+            rows.push(csim(d, p, bytes, &params));
+        }
+    }
+    if let Some(dir) = out_dir {
+        let mb = bytes >> 20;
+        let mut csv = crate::metrics::Csv::create(
+            &dir.join(format!("fig17_19_allreduce_{mb}MB.csv")),
+            "design,workers,bytes,seconds,gbps",
+        )?;
+        for r in &rows {
+            csv.row(&[
+                r.design_label.clone(),
+                r.p.to_string(),
+                r.bytes.to_string(),
+                format!("{:.6}", r.seconds),
+                format!("{:.3}", r.gbps),
+            ])?;
+        }
+    }
+    Ok(rows)
+}
+
+/// Fig. 20: IBM node-tensor ring vs Baidu every-GPU ring, same GPU count.
+pub fn fig20(out_dir: Option<&Path>) -> Result<Vec<(usize, f64, f64, f64)>> {
+    let params = CostParams::minsky();
+    let p = 16; // 16 workers x 2 GPUs = 32 GPUs
+    let mut rows = Vec::new();
+    for mb in [1usize, 4, 16, 64, 128] {
+        let bytes = mb << 20;
+        let ibm = csim(Design::RingIbm { rings: 2 }, p, bytes, &params);
+        let baidu = csim(Design::BaiduRing, p, bytes, &params);
+        rows.push((mb, ibm.seconds, baidu.seconds, baidu.seconds / ibm.seconds));
+    }
+    if let Some(dir) = out_dir {
+        let mut csv = crate::metrics::Csv::create(
+            &dir.join("fig20_baidu.csv"),
+            "mb,ibm_ring_s,baidu_ring_s,factor",
+        )?;
+        for (mb, i, b, f) in &rows {
+            csv.row(&[mb.to_string(), format!("{i:.6}"), format!("{b:.6}"), format!("{f:.2}")])?;
+        }
+    }
+    Ok(rows)
+}
+
+/// One Fig. 15 data point: virtual epoch seconds for ResNet-50-scale
+/// training at `nodes` Minsky nodes (2 workers/node), pure MPI.
+fn fig15_epoch_time(
+    nodes: usize,
+    weak: bool,
+    design: Design,
+    params: &CostParams,
+) -> f64 {
+    let p = nodes * 2; // workers (one per socket)
+    let bytes = 102 << 20; // ResNet-50 f32 parameters
+    let base_batch = 128.0;
+    let compute_per_128 = 0.35; // s, P100-class fwd+bwd
+    let samples = 1_281_167.0; // ImageNet-1K epoch
+    let (batch, _global) = if weak {
+        (base_batch, base_batch * p as f64)
+    } else {
+        // Strong scaling: global batch fixed at 32 workers' worth; the
+        // per-worker batch halves as nodes double (§7.3).
+        let global = base_batch * 8.0;
+        ((global / p as f64).max(1.0), global)
+    };
+    let batches_per_worker = samples / (p as f64 * batch);
+    let compute = compute_per_128 * batch / base_batch;
+    // Gradients are aggregated per layer as the backward pass emits them
+    // (§2.1): ResNet-50's ~100 tensors batched into ~32 bucketed
+    // messages, each paying the collective's fixed costs.
+    let n_msgs = 32;
+    let ar = n_msgs as f64 * csim(design, p, bytes / n_msgs, params).seconds;
+    batches_per_worker * (compute + ar)
+}
+
+/// Fig. 15: ResNet-50 scaling behaviour on testbed2 (strong vs weak
+/// scaling, optimized ring vs the reg-IBMGpu baseline), epoch seconds vs
+/// node count.
+pub fn fig15(out_dir: Option<&Path>) -> Result<Vec<(usize, f64, f64, f64, f64)>> {
+    let params = CostParams::minsky();
+    let mut rows = Vec::new();
+    for nodes in [2usize, 4, 8, 16, 32] {
+        let weak = fig15_epoch_time(nodes, true, Design::RingIbm { rings: 2 }, &params);
+        let strong = fig15_epoch_time(nodes, false, Design::RingIbm { rings: 2 }, &params);
+        let weak_reg = fig15_epoch_time(nodes, true, Design::Reg, &params);
+        let strong_reg = fig15_epoch_time(nodes, false, Design::Reg, &params);
+        rows.push((nodes, weak, strong, weak_reg, strong_reg));
+    }
+    if let Some(dir) = out_dir {
+        let mut csv = crate::metrics::Csv::create(
+            &dir.join("fig15_scaling.csv"),
+            "nodes,weak_ring_s,strong_ring_s,weak_reg_s,strong_reg_s",
+        )?;
+        for (n, w, s, rw, rs) in &rows {
+            csv.row(&[
+                n.to_string(),
+                format!("{w:.1}"),
+                format!("{s:.1}"),
+                format!("{rw:.1}"),
+                format!("{rs:.1}"),
+            ])?;
+        }
+    }
+    Ok(rows)
+}
+
+/// §7.3 intra-node table: tensor reduce/broadcast bandwidths (GB/s).
+pub fn intranode_table() -> Vec<(&'static str, f64)> {
+    let m = CostParams::minsky();
+    vec![
+        ("IBMGpu reduce -> host", 1e-9 / m.gamma_gpu_ibm),
+        ("NCCL reduce (1 comm set)", 1e-9 / m.gamma_gpu_nccl),
+        ("NCCL reduce (2 comm sets)", 1.25e-9 / m.gamma_gpu_nccl),
+        ("broadcast host -> GPUs", 1e-9 / m.beta_gpu_bcast),
+        ("host write BW bound", 1e-9 / m.beta_hostmem),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig15_weak_scaling_flatter_than_strong() {
+        let rows = fig15(None).unwrap();
+        let (first, last) = (rows.first().unwrap(), rows.last().unwrap());
+        let weak_growth = last.1 / first.1;
+        let strong_growth = last.2 / first.2;
+        // Weak scaling stays near-flat; strong scaling blows up in
+        // comm-bound territory as the per-worker batch shrinks.
+        assert!(weak_growth < 1.3, "weak grew {weak_growth}");
+        assert!(strong_growth > weak_growth);
+    }
+
+    #[test]
+    fn fig15_ring_beats_reg_about_2x_when_comm_bound() {
+        // §7.3: "our optimizations are nearly twice as fast than using the
+        // default, reg-IBMGpu approach" — visible in the strong-scaling
+        // (communication-bound) regime at full machine scale.
+        let rows = fig15(None).unwrap();
+        let (_, _, strong_ring, _, strong_reg) = rows.last().unwrap();
+        let f = strong_reg / strong_ring;
+        assert!(f > 1.4 && f < 4.5, "factor {f}");
+    }
+
+    #[test]
+    fn fig17_19_ibm_wins_and_bandwidth_positive() {
+        for bytes in [4 << 20, 16 << 20, 64 << 20] {
+            let rows = fig17_19(bytes, None).unwrap();
+            assert!(rows.iter().all(|r| r.gbps > 0.0));
+            // At every worker count, ring-IBMGpu(2) has the max bandwidth.
+            for p in [2usize, 4, 8, 16, 32] {
+                let at_p: Vec<_> = rows.iter().filter(|r| r.p == p).collect();
+                let best = at_p
+                    .iter()
+                    .max_by(|a, b| a.gbps.total_cmp(&b.gbps))
+                    .unwrap();
+                assert_eq!(best.design_label, "ring-IBMGpu(2)", "p={p} bytes={bytes}");
+            }
+        }
+    }
+
+    #[test]
+    fn fig20_factor_in_paper_range() {
+        let rows = fig20(None).unwrap();
+        // Mid-size messages show the ~6x factor (3-10 accepted).
+        let (_, _, _, f) = rows[2]; // 16 MB
+        assert!(f > 3.0 && f < 10.0, "factor {f}");
+    }
+
+    #[test]
+    fn intranode_numbers_match_paper() {
+        let t = intranode_table();
+        let get = |name: &str| t.iter().find(|(n, _)| *n == name).unwrap().1;
+        assert!((get("IBMGpu reduce -> host") - 30.0).abs() < 0.1);
+        assert!((get("NCCL reduce (1 comm set)") - 12.0).abs() < 0.1);
+        assert!((get("broadcast host -> GPUs") - 28.0).abs() < 0.1);
+        assert!((get("host write BW bound") - 38.4).abs() < 0.1);
+    }
+}

@@ -1,0 +1,511 @@
+//! KVStore-MPI: the paper's hybrid API (§4.2).
+//!
+//! `KVStore.create("type")` supports the paper's five types:
+//!
+//! | type            | push                              | pull              |
+//! |-----------------|-----------------------------------|-------------------|
+//! | `local`         | in-process accumulate             | read              |
+//! | `dist_sync`     | ZPush to PS (server aggregates)   | ZPull             |
+//! | `dist_async`    | ZPush, applied immediately        | ZPull             |
+//! | `sync_mpi`      | ring-allreduce in client, master ZPush | master ZPull + bcast |
+//! | `async_mpi`     | same, but the PS side is async    | same              |
+//!
+//! With `#servers == 0` the fused [`KvWorker::pushpull`] degrades to a pure
+//! MPI tensor allreduce (§4.2.4) — the `mpi-SGD` pure mode of Fig. 15/16.
+//!
+//! Faithful to Figs 4–5, every operation is a closure pushed into the
+//! dataflow [`Engine`](crate::engine::Engine) with explicit dependencies:
+//! per-key vars order operations on the same key, and a per-worker *comm
+//! var* serializes all MPI/PS communication in program order — the paper's
+//! "operations are enqueued in order to avoid deadlocks" (§4.2).
+
+use crate::collectives::{multi_ring_allreduce, tensor_allreduce, HostReduce};
+use crate::engine::{Engine, Var};
+use crate::mpisim::Comm;
+use crate::optimizer::Optimizer;
+use crate::ps::{Key, PsClient};
+use crate::tensor::NodeTensor;
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Mutex};
+
+/// KVStore flavor (KVStore.create("type"), §4.2.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvType {
+    Local,
+    DistSync,
+    DistAsync,
+    SyncMpi,
+    AsyncMpi,
+}
+
+impl KvType {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "local" => KvType::Local,
+            "dist_sync" => KvType::DistSync,
+            "dist_async" => KvType::DistAsync,
+            "sync_mpi" | "Synchronous-MPI" => KvType::SyncMpi,
+            "async_mpi" | "Asynchronous-MPI" => KvType::AsyncMpi,
+            _ => return None,
+        })
+    }
+
+    pub fn is_mpi(&self) -> bool {
+        matches!(self, KvType::SyncMpi | KvType::AsyncMpi)
+    }
+}
+
+/// A value still being produced by the engine; `wait()` blocks for it.
+pub struct Pending<T>(Receiver<T>);
+
+impl<T> Pending<T> {
+    pub fn wait(self) -> T {
+        self.0.recv().expect("engine op dropped reply")
+    }
+}
+
+/// One worker's KVStore endpoint.
+pub struct KvWorker {
+    pub ktype: KvType,
+    engine: Arc<Engine>,
+    /// This worker's MPI endpoint within its client (None for dist/local).
+    comm: Option<Arc<Mutex<Comm>>>,
+    /// PS endpoint (None for local or pure-MPI jobs).
+    ps: Option<Arc<Mutex<PsClient>>>,
+    /// Local store (Local type).
+    local: Arc<Mutex<HashMap<Key, Vec<f32>>>>,
+    /// Serializes all communication ops in program order (§4.2).
+    comm_var: Var,
+    /// Per-key dependency tags.
+    key_vars: Mutex<HashMap<Key, Var>>,
+    /// Rings for the multi-ring tensor allreduce (§6.3.2).
+    pub n_rings: usize,
+}
+
+impl KvWorker {
+    /// Create a worker endpoint. `comm` is its communicator inside its MPI
+    /// client (required for MPI types), `ps` its PS client (required for
+    /// dist types; optional for MPI types — None means pure MPI).
+    pub fn create(
+        ktype: KvType,
+        engine: Arc<Engine>,
+        comm: Option<Comm>,
+        ps: Option<PsClient>,
+    ) -> Self {
+        assert!(
+            !ktype.is_mpi() || comm.is_some(),
+            "MPI kvstore types need a communicator"
+        );
+        assert!(
+            !matches!(ktype, KvType::DistSync | KvType::DistAsync) || ps.is_some(),
+            "dist kvstore types need a PS client"
+        );
+        let comm_var = engine.new_var();
+        Self {
+            ktype,
+            engine,
+            comm: comm.map(|c| Arc::new(Mutex::new(c))),
+            ps: ps.map(|p| Arc::new(Mutex::new(p))),
+            local: Arc::new(Mutex::new(HashMap::new())),
+            comm_var,
+            key_vars: Mutex::new(HashMap::new()),
+            n_rings: 2,
+        }
+    }
+
+    fn key_var(&self, key: Key) -> Var {
+        *self
+            .key_vars
+            .lock()
+            .unwrap()
+            .entry(key)
+            .or_insert_with(|| self.engine.new_var())
+    }
+
+    pub fn rank(&self) -> usize {
+        self.comm.as_ref().map(|c| c.lock().unwrap().rank()).unwrap_or(0)
+    }
+
+    pub fn client_size(&self) -> usize {
+        self.comm.as_ref().map(|c| c.lock().unwrap().size()).unwrap_or(1)
+    }
+
+    /// Initialize a key. PS rank 0 initializes the servers (§4.2.1); with
+    /// no servers the value is broadcast inside the MPI client instead.
+    /// `is_root` = this worker is rank 0 in the PS namespace.
+    pub fn init(&self, key: Key, value: Vec<f32>, is_root: bool) {
+        match self.ktype {
+            KvType::Local => {
+                self.local.lock().unwrap().insert(key, value);
+            }
+            KvType::DistSync | KvType::DistAsync => {
+                if is_root {
+                    self.ps.as_ref().unwrap().lock().unwrap().init(key, value);
+                }
+            }
+            KvType::SyncMpi | KvType::AsyncMpi => {
+                if let Some(ps) = &self.ps {
+                    if is_root {
+                        ps.lock().unwrap().init(key, value);
+                    }
+                } else {
+                    // Pure MPI: MPI_Bcast from rank 0 of the client.
+                    let comm = self.comm.as_ref().unwrap();
+                    let mut c = comm.lock().unwrap();
+                    let mut v = value;
+                    c.bcast(0, &mut v);
+                    self.local.lock().unwrap().insert(key, v);
+                }
+            }
+        }
+    }
+
+    /// KVStore.push (Fig. 4): enqueue the client-side aggregation +
+    /// master ZPush as an engine op reading the key var and mutating the
+    /// comm var.
+    pub fn push(&self, key: Key, data: Vec<f32>) {
+        let kv = self.key_var(key);
+        match self.ktype {
+            KvType::Local => {
+                let store = self.local.clone();
+                self.engine.push(
+                    move || {
+                        let mut s = store.lock().unwrap();
+                        match s.get_mut(&key) {
+                            Some(v) => crate::tensor::add_assign(v, &data),
+                            None => {
+                                s.insert(key, data);
+                            }
+                        }
+                    },
+                    &[],
+                    &[kv],
+                );
+            }
+            KvType::DistSync | KvType::DistAsync => {
+                let ps = self.ps.clone().unwrap();
+                self.engine.push(
+                    move || ps.lock().unwrap().push(key, data),
+                    &[kv],
+                    &[self.comm_var],
+                );
+            }
+            KvType::SyncMpi | KvType::AsyncMpi => {
+                let comm = self.comm.clone().unwrap();
+                let ps = self.ps.clone();
+                let rings = self.n_rings;
+                self.engine.push(
+                    move || {
+                        let mut c = comm.lock().unwrap();
+                        let mut buf = data;
+                        // Aggregate across the MPI client first (§4.2.2)...
+                        multi_ring_allreduce(&mut c, &mut buf, rings);
+                        // ...then only the master talks to the servers.
+                        if c.rank() == 0 {
+                            if let Some(ps) = &ps {
+                                ps.lock().unwrap().push(key, buf);
+                            }
+                        }
+                    },
+                    &[kv],
+                    &[self.comm_var],
+                );
+            }
+        }
+    }
+
+    /// KVStore.pull (Fig. 5): master ZPulls and broadcasts inside the
+    /// client; everyone else receives the broadcast.
+    pub fn pull(&self, key: Key) -> Pending<Vec<f32>> {
+        let (reply, rx) = channel();
+        let kv = self.key_var(key);
+        match self.ktype {
+            KvType::Local => {
+                let store = self.local.clone();
+                self.engine.push(
+                    move || {
+                        let _ = reply.send(store.lock().unwrap()[&key].clone());
+                    },
+                    &[kv],
+                    &[],
+                );
+            }
+            KvType::DistSync | KvType::DistAsync => {
+                let ps = self.ps.clone().unwrap();
+                self.engine.push(
+                    move || {
+                        let _ = reply.send(ps.lock().unwrap().pull(key));
+                    },
+                    &[],
+                    &[self.comm_var, kv],
+                );
+            }
+            KvType::SyncMpi | KvType::AsyncMpi => {
+                let comm = self.comm.clone().unwrap();
+                let ps = self.ps.clone();
+                let local = self.local.clone();
+                self.engine.push(
+                    move || {
+                        let mut c = comm.lock().unwrap();
+                        let mut buf = Vec::new();
+                        if c.rank() == 0 {
+                            buf = match &ps {
+                                Some(ps) => ps.lock().unwrap().pull(key),
+                                // Pure MPI: the "value" lives locally
+                                // (pushpull is the natural API there).
+                                None => local.lock().unwrap()[&key].clone(),
+                            };
+                        }
+                        c.bcast(0, &mut buf);
+                        let _ = reply.send(buf);
+                    },
+                    &[],
+                    &[self.comm_var, kv],
+                );
+            }
+        }
+        Pending(rx)
+    }
+
+    /// KVStore.pushpull (§4.2.4, added to MXNET for MPI acceleration):
+    /// fuses push+pull into one tensor allreduce — no PS round-trip when
+    /// there are no servers.
+    pub fn pushpull(&self, key: Key, data: Vec<f32>) -> Pending<Vec<f32>> {
+        let (reply, rx) = channel();
+        match self.ktype {
+            KvType::SyncMpi | KvType::AsyncMpi if self.ps.is_none() => {
+                let kv = self.key_var(key);
+                let comm = self.comm.clone().unwrap();
+                let rings = self.n_rings;
+                self.engine.push(
+                    move || {
+                        let mut c = comm.lock().unwrap();
+                        let mut buf = data;
+                        multi_ring_allreduce(&mut c, &mut buf, rings);
+                        let _ = reply.send(buf);
+                    },
+                    &[],
+                    &[self.comm_var, kv],
+                );
+                Pending(rx)
+            }
+            _ => {
+                // Fallback composition: push then pull.
+                self.push(key, data);
+                self.pull(key)
+            }
+        }
+    }
+
+    /// Intra-client gradient aggregation (sync SGD *within* the
+    /// communicator, §5 ESGD): a plain multi-ring allreduce across the MPI
+    /// client, never touching the PS.
+    pub fn client_allreduce(&self, data: Vec<f32>) -> Pending<Vec<f32>> {
+        let (reply, rx) = channel();
+        let comm = self.comm.clone().expect("client_allreduce needs MPI");
+        let rings = self.n_rings;
+        self.engine.push(
+            move || {
+                let mut c = comm.lock().unwrap();
+                let mut buf = data;
+                multi_ring_allreduce(&mut c, &mut buf, rings);
+                let _ = reply.send(buf);
+            },
+            &[],
+            &[self.comm_var],
+        );
+        Pending(rx)
+    }
+
+    /// Tensor-variant pushpull: allreduce a whole [`NodeTensor`] (the group
+    /// of per-device vectors, §6.1) with the multi-ring schedule.
+    pub fn pushpull_tensor(&self, key: Key, tensor: NodeTensor) -> Pending<NodeTensor> {
+        let (reply, rx) = channel();
+        let kv = self.key_var(key);
+        let comm = self.comm.clone().expect("tensor pushpull needs MPI");
+        let rings = self.n_rings;
+        self.engine.push(
+            move || {
+                let mut c = comm.lock().unwrap();
+                let mut t = tensor;
+                tensor_allreduce(&mut c, &mut t, rings, HostReduce::Host);
+                let _ = reply.send(t);
+            },
+            &[],
+            &[self.comm_var, kv],
+        );
+        Pending(rx)
+    }
+
+    /// Ship an optimizer to the PS (KVStore.set_optimizer, §3.2). Only the
+    /// PS root should call this once.
+    pub fn set_optimizer<F>(&self, factory: F)
+    where
+        F: Fn() -> Box<dyn Optimizer>,
+    {
+        if let Some(ps) = &self.ps {
+            ps.lock().unwrap().set_optimizer(factory);
+        }
+    }
+
+    /// Block until every enqueued op of this worker's engine completed.
+    pub fn wait_all(&self) {
+        self.engine.wait_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpisim::World;
+    use crate::optimizer::{Sgd, SgdHyper};
+    use crate::ps::{ServerGroup, SyncMode};
+    use std::thread;
+
+    #[test]
+    fn local_push_accumulates_pull_reads() {
+        let engine = Arc::new(Engine::new(2));
+        let kv = KvWorker::create(KvType::Local, engine, None, None);
+        kv.init(0, vec![1.0, 1.0], true);
+        kv.push(0, vec![2.0, 3.0]);
+        kv.push(0, vec![1.0, 1.0]);
+        assert_eq!(kv.pull(0).wait(), vec![4.0, 5.0]);
+    }
+
+    #[test]
+    fn dist_sync_via_engine_matches_ps_semantics() {
+        let group = ServerGroup::spawn(2, SyncMode::Sync, 3);
+        let c0 = group.client();
+        c0.init(0, vec![0.0]);
+        c0.init(1, vec![10.0]);
+        c0.set_optimizer(|| Box::new(Sgd::new(SgdHyper::plain(1.0, 1.0))));
+        let hs: Vec<_> = (0..3)
+            .map(|w| {
+                let ps = group.client();
+                thread::spawn(move || {
+                    let engine = Arc::new(Engine::new(1));
+                    let kv = KvWorker::create(KvType::DistSync, engine, None, Some(ps));
+                    kv.push(0, vec![1.0]);
+                    kv.push(1, vec![2.0]);
+                    let a = kv.pull(0).wait();
+                    let b = kv.pull(1).wait();
+                    (w, a[0], b[0])
+                })
+            })
+            .collect();
+        for h in hs {
+            let (_, a, b) = h.join().unwrap();
+            assert_eq!(a, -3.0); // 0 - 1*sum(1,1,1)
+            assert_eq!(b, 4.0); // 10 - 1*sum(2,2,2)
+        }
+        group.shutdown();
+    }
+
+    #[test]
+    fn sync_mpi_aggregates_in_client_then_master_pushes() {
+        // 1 client of 4 workers; server expects exactly 1 push per round.
+        let group = ServerGroup::spawn(1, SyncMode::Sync, 1);
+        let c0 = group.client();
+        c0.init(0, vec![0.0, 0.0]);
+        c0.set_optimizer(|| Box::new(Sgd::new(SgdHyper::plain(1.0, 1.0))));
+        let comms = World::create(4);
+        let hs: Vec<_> = comms
+            .into_iter()
+            .map(|comm| {
+                let ps = group.client();
+                thread::spawn(move || {
+                    let engine = Arc::new(Engine::new(1));
+                    let kv =
+                        KvWorker::create(KvType::SyncMpi, engine, Some(comm), Some(ps));
+                    kv.push(0, vec![1.0, 2.0]);
+                    kv.pull(0).wait()
+                })
+            })
+            .collect();
+        for h in hs {
+            // Client aggregate = [4, 8]; server: 0 - [4,8] = [-4,-8].
+            assert_eq!(h.join().unwrap(), vec![-4.0, -8.0]);
+        }
+        group.shutdown();
+    }
+
+    #[test]
+    fn pure_mpi_pushpull_is_allreduce() {
+        let comms = World::create(3);
+        let hs: Vec<_> = comms
+            .into_iter()
+            .map(|comm| {
+                thread::spawn(move || {
+                    let engine = Arc::new(Engine::new(1));
+                    let kv = KvWorker::create(KvType::SyncMpi, engine, Some(comm), None);
+                    kv.pushpull(7, vec![1.0, 10.0]).wait()
+                })
+            })
+            .collect();
+        for h in hs {
+            assert_eq!(h.join().unwrap(), vec![3.0, 30.0]);
+        }
+    }
+
+    #[test]
+    fn pure_mpi_init_broadcasts_from_rank0() {
+        let comms = World::create(3);
+        let hs: Vec<_> = comms
+            .into_iter()
+            .map(|comm| {
+                thread::spawn(move || {
+                    let rank = comm.rank();
+                    let engine = Arc::new(Engine::new(1));
+                    let kv = KvWorker::create(KvType::SyncMpi, engine, Some(comm), None);
+                    let value = if rank == 0 { vec![5.0, 6.0] } else { Vec::new() };
+                    kv.init(0, value, rank == 0);
+                    kv.pull(0).wait()
+                })
+            })
+            .collect();
+        for h in hs {
+            assert_eq!(h.join().unwrap(), vec![5.0, 6.0]);
+        }
+    }
+
+    #[test]
+    fn tensor_pushpull_sums_device_groups() {
+        let comms = World::create(2);
+        let hs: Vec<_> = comms
+            .into_iter()
+            .map(|comm| {
+                thread::spawn(move || {
+                    let r = comm.rank() as f32;
+                    let engine = Arc::new(Engine::new(1));
+                    let kv = KvWorker::create(KvType::SyncMpi, engine, Some(comm), None);
+                    let t = NodeTensor::from_vecs(vec![
+                        vec![r + 1.0; 4],
+                        vec![10.0 * (r + 1.0); 4],
+                    ]);
+                    kv.pushpull_tensor(0, t).wait()
+                })
+            })
+            .collect();
+        for h in hs {
+            let t = h.join().unwrap();
+            // (1 + 10) + (2 + 20) = 33 on every device vector.
+            assert!(t.vecs.iter().all(|v| v.iter().all(|&x| x == 33.0)));
+        }
+    }
+
+    #[test]
+    fn engine_pipelines_independent_keys() {
+        // Pushing many keys enqueues without blocking; wait_all drains.
+        let engine = Arc::new(Engine::new(2));
+        let kv = KvWorker::create(KvType::Local, engine, None, None);
+        for k in 0..32 {
+            kv.init(k, vec![0.0; 8], true);
+            kv.push(k, vec![1.0; 8]);
+        }
+        kv.wait_all();
+        for k in 0..32 {
+            assert_eq!(kv.pull(k).wait(), vec![1.0; 8]);
+        }
+    }
+}

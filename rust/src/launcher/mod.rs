@@ -1,0 +1,257 @@
+//! Job launcher — the LSF/`bsub` substitution (§4.1.2).
+//!
+//! The paper's launcher runs on the cluster front end: it starts the MXNET
+//! scheduler first, broadcasts its address, then submits each MPI client as
+//! a separate `mpirun` job, with `#servers` tunable down to zero for pure
+//! MPI. This launcher does the same with threads: scheduler, PS server
+//! group, then one [`World`](crate::mpisim::World) per client whose worker
+//! threads each get a fully wired [`WorkerCtx`] (PS rank, client id, MPI
+//! communicator, KVStore endpoint).
+
+use crate::config::Algo;
+use crate::engine::Engine;
+use crate::kvstore::{KvType, KvWorker};
+use crate::mpisim::{Comm, World};
+use crate::ps::{PsClient, Role, Scheduler, ServerGroup, SyncMode};
+use std::sync::Arc;
+
+/// Shape of a job: the launcher's CLI parameters (§4.1.2).
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub workers: usize,
+    pub servers: usize,
+    pub clients: usize,
+    pub ktype: KvType,
+    pub server_mode: SyncMode,
+    /// Engine threads per worker.
+    pub engine_threads: usize,
+}
+
+impl JobSpec {
+    pub fn from_algo(algo: Algo, workers: usize, servers: usize, clients: usize) -> Self {
+        Self {
+            workers,
+            servers,
+            clients: if algo.is_mpi() { clients } else { workers },
+            ktype: algo.kv_type(),
+            server_mode: algo.server_mode(),
+            engine_threads: 1,
+        }
+    }
+
+    /// Pushes per key per sync round: clients for MPI modes (only masters
+    /// push), workers for dist modes.
+    pub fn expected_pushes(&self) -> usize {
+        if self.ktype.is_mpi() {
+            self.clients
+        } else {
+            self.workers
+        }
+    }
+}
+
+/// Everything a worker thread receives from the launcher.
+pub struct WorkerCtx {
+    /// Rank in the PS namespace (0..workers).
+    pub ps_rank: usize,
+    /// Which MPI client (job) this worker belongs to.
+    pub client_id: usize,
+    /// Rank within the client's MPI_COMM_WORLD.
+    pub mpi_rank: usize,
+    pub workers_per_client: usize,
+    pub n_workers: usize,
+    pub n_clients: usize,
+    /// The wired KVStore endpoint (owns comm + PS client).
+    pub kv: KvWorker,
+    pub engine: Arc<Engine>,
+}
+
+/// Launch a job and run `worker_fn` on every worker thread; returns each
+/// worker's result (indexed by PS rank). Servers/scheduler shut down after
+/// all workers finish.
+pub fn launch<F, R>(spec: &JobSpec, worker_fn: F) -> Vec<R>
+where
+    F: Fn(WorkerCtx) -> R + Clone + Send + 'static,
+    R: Send + 'static,
+{
+    assert!(spec.workers >= 1);
+    assert!(spec.clients >= 1 && spec.clients <= spec.workers);
+    assert_eq!(
+        spec.workers % spec.clients,
+        0,
+        "workers must divide evenly into clients"
+    );
+    let wpc = spec.workers / spec.clients;
+
+    // 1. Scheduler first (§4.1.2): it must be up before anyone connects.
+    let scheduler = Scheduler::new(spec.workers, spec.servers);
+
+    // 2. PS servers (skipped entirely for pure-MPI jobs).
+    let servers = if spec.servers > 0 {
+        let group = ServerGroup::spawn(spec.servers, spec.server_mode, spec.expected_pushes());
+        // Register server tasks with the scheduler (they run on their own
+        // threads already; registration is what unblocks the job).
+        for _ in 0..spec.servers {
+            let s = scheduler.handle();
+            std::thread::spawn(move || s.register(Role::Server));
+        }
+        Some(group)
+    } else {
+        None
+    };
+
+    // 3. One MPI_COMM_WORLD per client (each client is a separate mpirun
+    // job in the paper); dist modes get single-rank worlds.
+    let mut handles = Vec::with_capacity(spec.workers);
+    for client_id in 0..spec.clients {
+        let comms: Vec<Comm> = if spec.ktype.is_mpi() {
+            World::create(wpc)
+        } else {
+            // Dist modes: no MPI; workers are standalone.
+            (0..wpc).flat_map(|_| World::create(1)).collect()
+        };
+        for (mpi_rank, comm) in comms.into_iter().enumerate() {
+            let ps_rank = client_id * wpc + mpi_rank;
+            let ps_client: Option<PsClient> = servers.as_ref().map(|g| g.client());
+            let sched = scheduler.handle();
+            let f = worker_fn.clone();
+            let ktype = spec.ktype;
+            let engine_threads = spec.engine_threads;
+            let (workers, clients) = (spec.workers, spec.clients);
+            handles.push(std::thread::Builder::new()
+                .name(format!("worker-{ps_rank}"))
+                .spawn(move || {
+                    sched.register(Role::Worker);
+                    let engine = Arc::new(Engine::new(engine_threads));
+                    let comm_opt = if ktype.is_mpi() { Some(comm) } else { None };
+                    let kv = KvWorker::create(ktype, engine.clone(), comm_opt, ps_client);
+                    let ctx = WorkerCtx {
+                        ps_rank,
+                        client_id,
+                        mpi_rank,
+                        workers_per_client: wpc,
+                        n_workers: workers,
+                        n_clients: clients,
+                        kv,
+                        engine,
+                    };
+                    (ps_rank, f(ctx))
+                })
+                .expect("spawn worker"));
+        }
+    }
+
+    let mut results: Vec<(usize, R)> = handles
+        .into_iter()
+        .map(|h| h.join().expect("worker panicked"))
+        .collect();
+    results.sort_by_key(|(rank, _)| *rank);
+
+    if let Some(group) = servers {
+        group.shutdown();
+    }
+    results.into_iter().map(|(_, r)| r).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn launch_pure_mpi_job_allreduces() {
+        let spec = JobSpec {
+            workers: 4,
+            servers: 0,
+            clients: 1,
+            ktype: KvType::SyncMpi,
+            server_mode: SyncMode::Sync,
+            engine_threads: 1,
+        };
+        let out = launch(&spec, |ctx| {
+            let v = ctx.kv.pushpull(0, vec![1.0, (ctx.ps_rank + 1) as f32]).wait();
+            v
+        });
+        assert_eq!(out.len(), 4);
+        for v in out {
+            assert_eq!(v, vec![4.0, 10.0]);
+        }
+    }
+
+    #[test]
+    fn launch_two_clients_have_separate_worlds() {
+        let spec = JobSpec {
+            workers: 4,
+            servers: 0,
+            clients: 2,
+            ktype: KvType::SyncMpi,
+            server_mode: SyncMode::Sync,
+            engine_threads: 1,
+        };
+        let out = launch(&spec, |ctx| {
+            let v = ctx.kv.pushpull(0, vec![1.0]).wait();
+            (ctx.client_id, ctx.mpi_rank, v[0])
+        });
+        // Each client has 2 workers: allreduce sums within the client only.
+        for (client, rank, sum) in out {
+            assert!(client < 2 && rank < 2);
+            assert_eq!(sum, 2.0);
+        }
+    }
+
+    #[test]
+    fn launch_dist_job_with_servers() {
+        let spec = JobSpec::from_algo(Algo::DistSgd, 3, 2, 3);
+        assert_eq!(spec.expected_pushes(), 3);
+        let out = launch(&spec, |ctx| {
+            if ctx.ps_rank == 0 {
+                ctx.kv.init(0, vec![0.0], true);
+                ctx.kv.set_optimizer(|| {
+                    Box::new(crate::optimizer::Sgd::new(
+                        crate::optimizer::SgdHyper::plain(1.0, 1.0),
+                    ))
+                });
+            }
+            ctx.kv.push(0, vec![1.0]);
+            ctx.kv.pull(0).wait()[0]
+        });
+        for v in out {
+            assert_eq!(v, -3.0);
+        }
+    }
+
+    #[test]
+    fn mpi_job_with_servers_masters_push() {
+        let spec = JobSpec::from_algo(Algo::MpiSgd, 4, 1, 2);
+        assert_eq!(spec.expected_pushes(), 2);
+        let out = launch(&spec, |ctx| {
+            if ctx.ps_rank == 0 {
+                ctx.kv.init(0, vec![0.0], true);
+                ctx.kv.set_optimizer(|| {
+                    Box::new(crate::optimizer::Sgd::new(
+                        crate::optimizer::SgdHyper::plain(1.0, 1.0),
+                    ))
+                });
+            }
+            ctx.kv.push(0, vec![1.0]);
+            ctx.kv.pull(0).wait()[0]
+        });
+        // 2 clients x client-sum 2.0 => server applies w = 0 - 4.
+        for v in out {
+            assert_eq!(v, -4.0);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "divide evenly")]
+    fn uneven_clients_rejected() {
+        let spec = JobSpec {
+            workers: 5,
+            servers: 0,
+            clients: 2,
+            ktype: KvType::SyncMpi,
+            server_mode: SyncMode::Sync,
+            engine_threads: 1,
+        };
+        launch(&spec, |_| ());
+    }
+}

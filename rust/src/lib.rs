@@ -1,0 +1,35 @@
+//! # mxnet-mpi-rs
+//!
+//! Reproduction of *MXNET-MPI: Embedding MPI parallelism in Parameter
+//! Server Task Model for scaling Deep Learning* (Mamidala et al., 2018).
+//!
+//! The crate implements the paper's hybrid **Parameter Server + MPI**
+//! training framework as a three-layer stack:
+//!
+//! * **L3 (this crate)** — PS tasks (scheduler / servers / workers), a
+//!   simulated MPI library ([`mpisim`]), the hybrid [`kvstore`] API with
+//!   communication embedded in a dataflow [`engine`], the paper's tensor
+//!   [`collectives`], an α-β-γ network simulator ([`netsim`]) and the
+//!   distributed SGD [`trainer`]s (dist/mpi × SGD/ASGD/ESGD).
+//! * **L2/L1 (python, build-time only)** — JAX model fwd/bwd + Pallas
+//!   kernels, AOT-lowered to HLO text loaded by [`runtime`] via PJRT.
+//!
+//! See `DESIGN.md` for the system inventory and experiment index.
+
+pub mod collectives;
+pub mod config;
+pub mod jsonlite;
+pub mod data;
+pub mod engine;
+pub mod figures;
+pub mod kvstore;
+pub mod launcher;
+pub mod metrics;
+pub mod mpisim;
+pub mod netsim;
+pub mod optimizer;
+pub mod ps;
+pub mod runtime;
+pub mod tensor;
+pub mod trainer;
+pub mod util;

@@ -1,0 +1,219 @@
+//! `mxnet-mpi` CLI: the launcher front end (§4.1.2).
+//!
+//! Subcommands (hand-rolled parsing: the offline build has no clap):
+//!
+//!   train   --algo mpi-SGD --workers 12 --servers 2 --clients 2 ...
+//!           Run the real threaded framework (wall-clock).
+//!   sim     --algo ... [same flags]
+//!           Run the virtual-time plane (paper-testbed clock).
+//!   figures [--epochs N]
+//!           Regenerate every convergence figure CSV (11-14, 16).
+//!   collectives
+//!           Print the §6 cost-model comparison (Figs 15/17-20 data).
+//!   info
+//!           Show artifact metadata and testbed presets.
+
+use anyhow::{bail, Context, Result};
+use mxnet_mpi::config::{Algo, ExperimentConfig};
+use mxnet_mpi::metrics::Table;
+use std::path::PathBuf;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: mxnet-mpi <train|sim|figures|collectives|info> [flags]\n\
+         flags for train/sim:\n\
+           --algo NAME            one of: {}\n\
+           --variant NAME         model variant (default mlp)\n\
+           --workers N --servers N --clients N\n\
+           --epochs N --batch-epochs SAMPLES --lr F --alpha F --interval N\n\
+           --config FILE.json     load an ExperimentConfig (flags override)\n\
+           --artifacts DIR        (default ./artifacts)\n\
+           --out DIR              results dir (default ./results)",
+        Algo::ALL.map(|a| a.name()).join(", ")
+    );
+    std::process::exit(2);
+}
+
+struct Args {
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Self {
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(name.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                eprintln!("unexpected argument {a:?}");
+                usage();
+            }
+        }
+        Self { flags }
+    }
+
+    fn get(&self, k: &str) -> Option<&str> {
+        self.flags.get(k).map(|s| s.as_str())
+    }
+
+    fn num<T: std::str::FromStr>(&self, k: &str) -> Option<T> {
+        self.get(k).and_then(|v| v.parse().ok())
+    }
+}
+
+fn build_config(args: &Args) -> Result<ExperimentConfig> {
+    let algo = match args.get("algo") {
+        Some(s) => Algo::parse(s).with_context(|| format!("unknown algo {s:?}"))?,
+        None => Algo::MpiSgd,
+    };
+    let mut cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::load(std::path::Path::new(path))?,
+        None => ExperimentConfig::testbed1(algo),
+    };
+    if args.get("config").is_some() && args.get("algo").is_some() {
+        cfg.algo = algo;
+    }
+    if let Some(v) = args.get("variant") {
+        cfg.variant = v.into();
+    }
+    macro_rules! ovr {
+        ($field:ident, $flag:expr, $ty:ty) => {
+            if let Some(v) = args.num::<$ty>($flag) {
+                cfg.$field = v;
+            }
+        };
+    }
+    ovr!(workers, "workers", usize);
+    ovr!(servers, "servers", usize);
+    ovr!(clients, "clients", usize);
+    ovr!(epochs, "epochs", usize);
+    ovr!(samples_per_epoch, "samples-per-epoch", u64);
+    ovr!(lr, "lr", f32);
+    ovr!(alpha, "alpha", f32);
+    ovr!(interval, "interval", usize);
+    ovr!(rings, "rings", usize);
+    ovr!(seed, "seed", u64);
+    Ok(cfg)
+}
+
+fn print_run(run: &mxnet_mpi::metrics::RunResult) {
+    let mut t = Table::new(&["epoch", "time_s", "train_loss", "val_loss", "val_acc"]);
+    for r in &run.records {
+        t.row(vec![
+            r.epoch.to_string(),
+            format!("{:.2}", r.vtime),
+            format!("{:.4}", r.train_loss),
+            format!("{:.4}", r.val_loss),
+            format!("{:.3}", r.val_acc),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "{}: final acc {:.3}, avg epoch time {:.2}s",
+        run.label,
+        run.final_acc(),
+        run.avg_epoch_time
+    );
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else { usage() };
+    let args = Args::parse(&argv[1..]);
+    let artifacts = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+    let out = PathBuf::from(args.get("out").unwrap_or("results"));
+
+    match cmd.as_str() {
+        "train" => {
+            let cfg = build_config(&args)?;
+            println!(
+                "launching threaded job: {} workers={} servers={} clients={} variant={}",
+                cfg.algo.name(),
+                cfg.workers,
+                cfg.servers,
+                cfg.clients,
+                cfg.variant
+            );
+            let run = mxnet_mpi::trainer::threaded::train(&cfg, artifacts)?;
+            print_run(&run);
+        }
+        "sim" => {
+            let cfg = build_config(&args)?;
+            println!(
+                "virtual-time run: {} workers={} servers={} clients={} testbed={}",
+                cfg.algo.name(),
+                cfg.workers,
+                cfg.servers,
+                cfg.clients,
+                cfg.testbed
+            );
+            let run = mxnet_mpi::trainer::sim::simulate(&cfg, &artifacts)?;
+            print_run(&run);
+        }
+        "figures" => {
+            let epochs = args.num::<usize>("epochs").unwrap_or(8);
+            let runs = mxnet_mpi::figures::fig11(&artifacts, &out, epochs)?;
+            mxnet_mpi::figures::print_acc_vs_time("Fig 11", &runs);
+            let bars = mxnet_mpi::figures::fig12(&artifacts, &out, epochs.min(4))?;
+            for (l, s) in &bars {
+                println!("fig12 {l}: {s:.1}s/epoch");
+            }
+            let runs = mxnet_mpi::figures::fig13(&artifacts, &out, epochs)?;
+            mxnet_mpi::figures::print_acc_vs_time("Fig 13", &runs);
+            let runs = mxnet_mpi::figures::fig14(&artifacts, &out, epochs * 2)?;
+            mxnet_mpi::figures::print_acc_vs_time("Fig 14", &runs);
+            let runs = mxnet_mpi::figures::fig16(&artifacts, &out, epochs * 2)?;
+            mxnet_mpi::figures::print_acc_vs_time("Fig 16", &runs);
+        }
+        "collectives" => {
+            for mb in [4usize, 16, 64] {
+                let rows = mxnet_mpi::figures::fig17_19(mb << 20, Some(&out))?;
+                println!("-- allreduce @ {mb} MB --");
+                for r in rows.iter().filter(|r| r.p == 16) {
+                    println!("  {:<18} {:>8.2} GB/s", r.design_label, r.gbps);
+                }
+            }
+            for (mb, i, b, f) in mxnet_mpi::figures::fig20(Some(&out))? {
+                println!("fig20 @ {mb:>3} MB: IBM {i:.5}s  Baidu {b:.5}s  ({f:.1}x)");
+            }
+            for (n, w, s, rw, rs) in mxnet_mpi::figures::fig15(Some(&out))? {
+                println!(
+                    "fig15 nodes={n:>2}: weak {w:.0}s strong {s:.0}s | reg weak {rw:.0}s strong {rs:.0}s"
+                );
+            }
+        }
+        "info" => {
+            let meta = mxnet_mpi::jsonlite::parse_file(&artifacts.join("meta.json"))?;
+            let mut t = Table::new(&["variant", "params", "batch", "keys"]);
+            if let Some(vs) = meta.req("variants")?.as_obj() {
+                for (name, v) in vs {
+                    t.row(vec![
+                        name.clone(),
+                        v.req("params")?.as_usize().unwrap_or(0).to_string(),
+                        v.req("x")?
+                            .req("shape")?
+                            .idx(0)
+                            .and_then(|x| x.as_usize())
+                            .unwrap_or(0)
+                            .to_string(),
+                        v.req("segments")?.as_arr().map(|a| a.len()).unwrap_or(0).to_string(),
+                    ]);
+                }
+            }
+            println!("artifacts: {}\n{}", artifacts.display(), t.render());
+        }
+        other => {
+            eprintln!("unknown command {other:?}");
+            bail!("unknown command");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,173 @@
+//! Metrics: per-epoch training records, CSV emission and the small table
+//! formatter used by the figure benches and EXPERIMENTS.md.
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+/// One validation point (paper metrics §7: epoch time + validation acc).
+#[derive(Debug, Clone)]
+pub struct EpochRecord {
+    pub epoch: usize,
+    /// Virtual seconds since training start (netsim clock) — the x-axis of
+    /// Figs 11/13/14.
+    pub vtime: f64,
+    pub train_loss: f64,
+    pub val_loss: f64,
+    pub val_acc: f64,
+}
+
+/// A full run: config label + per-epoch records.
+#[derive(Debug, Clone, Default)]
+pub struct RunResult {
+    pub label: String,
+    pub records: Vec<EpochRecord>,
+    /// Mean virtual seconds per epoch (Fig. 12 bar).
+    pub avg_epoch_time: f64,
+}
+
+impl RunResult {
+    pub fn finish(label: &str, records: Vec<EpochRecord>) -> Self {
+        let avg = if records.is_empty() {
+            0.0
+        } else {
+            records.last().unwrap().vtime / records.len() as f64
+        };
+        Self { label: label.to_string(), records, avg_epoch_time: avg }
+    }
+
+    pub fn final_acc(&self) -> f64 {
+        self.records.last().map(|r| r.val_acc).unwrap_or(0.0)
+    }
+
+    /// Virtual time to first reach accuracy `target` (Figs 11/13 compare
+    /// "rate of convergence" = acc-vs-time).
+    pub fn time_to_acc(&self, target: f64) -> Option<f64> {
+        self.records
+            .iter()
+            .find(|r| r.val_acc >= target)
+            .map(|r| r.vtime)
+    }
+}
+
+/// Write one or more runs as a tidy CSV: label,epoch,vtime,...
+pub fn write_runs_csv(path: &Path, runs: &[RunResult]) -> anyhow::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "label,epoch,vtime_s,train_loss,val_loss,val_acc")?;
+    for run in runs {
+        for r in &run.records {
+            writeln!(
+                f,
+                "{},{},{:.4},{:.5},{:.5},{:.4}",
+                run.label, r.epoch, r.vtime, r.train_loss, r.val_loss, r.val_acc
+            )?;
+        }
+    }
+    Ok(())
+}
+
+/// Generic CSV writer for sweep-style results.
+pub struct Csv {
+    out: std::fs::File,
+}
+
+impl Csv {
+    pub fn create(path: &Path, header: &str) -> anyhow::Result<Self> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut out = std::fs::File::create(path)?;
+        writeln!(out, "{header}")?;
+        Ok(Self { out })
+    }
+
+    pub fn row(&mut self, fields: &[String]) -> anyhow::Result<()> {
+        writeln!(self.out, "{}", fields.join(","))?;
+        Ok(())
+    }
+}
+
+/// Fixed-width console table (the benches print paper-style rows).
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, fields: Vec<String>) {
+        assert_eq!(fields.len(), self.header.len());
+        self.rows.push(fields);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |out: &mut String, cells: &[String]| {
+            for (i, c) in cells.iter().enumerate() {
+                let _ = write!(out, "{:>w$}  ", c, w = widths[i]);
+            }
+            out.push('\n');
+        };
+        line(&mut out, &self.header);
+        let _ = writeln!(out, "{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(epoch: usize, vtime: f64, acc: f64) -> EpochRecord {
+        EpochRecord { epoch, vtime, train_loss: 1.0, val_loss: 1.0, val_acc: acc }
+    }
+
+    #[test]
+    fn run_result_summary() {
+        let r = RunResult::finish("x", vec![rec(0, 10.0, 0.3), rec(1, 20.0, 0.6)]);
+        assert_eq!(r.avg_epoch_time, 10.0);
+        assert_eq!(r.final_acc(), 0.6);
+        assert_eq!(r.time_to_acc(0.5), Some(20.0));
+        assert_eq!(r.time_to_acc(0.9), None);
+    }
+
+    #[test]
+    fn csv_round_trip() {
+        let dir = std::env::temp_dir().join("mxnetmpi_test_csv");
+        let path = dir.join("runs.csv");
+        let runs = vec![RunResult::finish("a", vec![rec(0, 1.0, 0.5)])];
+        write_runs_csv(&path, &runs).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("label,epoch"));
+        assert!(text.contains("a,0,1.0000"));
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["mode", "time"]);
+        t.row(vec!["mpi-SGD".into(), "1.5".into()]);
+        t.row(vec!["dist-SGD".into(), "9.0".into()]);
+        let s = t.render();
+        assert!(s.contains("mpi-SGD"));
+        assert!(s.lines().count() == 4);
+    }
+}

@@ -1,0 +1,328 @@
+//! Simulated MPI: communicators, point-to-point and collectives.
+//!
+//! A from-scratch MPI subset over lossless ordered in-process channels —
+//! the substitution for OpenMPI (DESIGN.md §2). Each MPI *client* in the
+//! paper's hybrid model is an independent `MPI_COMM_WORLD` (§4.2.1); here
+//! the launcher creates one [`World`] per client and hands each worker
+//! thread its [`Comm`].
+//!
+//! Semantics mirrored from MPI: blocking `send`/`recv` with (source, tag)
+//! matching and out-of-order buffering, dissemination `barrier`, binomial
+//! `bcast`, and a naive `allreduce` (the bandwidth-optimal bucket/ring
+//! algorithms live in [`crate::collectives`] and are built *on top of*
+//! these point-to-point primitives, exactly like OpenMPI's tuned layer).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+/// A tagged message. `data` is the payload; collectives reserve the high
+/// tag bit and a per-collective sequence number so user traffic can never
+/// be confused with internal rounds.
+#[derive(Debug)]
+struct Msg {
+    from: usize,
+    tag: u64,
+    data: Vec<f32>,
+}
+
+const COLL_BIT: u64 = 1 << 63;
+
+/// One rank's endpoint of a communicator.
+pub struct Comm {
+    rank: usize,
+    size: usize,
+    txs: Vec<Sender<Msg>>,
+    rx: Receiver<Msg>,
+    /// Messages received but not yet matched (MPI unexpected-message queue).
+    unexpected: Vec<Msg>,
+    /// Collective sequence number, advanced identically on all ranks.
+    coll_seq: u64,
+}
+
+/// Factory for a fully-connected group of `Comm`s (one MPI_COMM_WORLD).
+pub struct World;
+
+impl World {
+    /// Create a communicator of `size` ranks; element `i` goes to rank `i`'s
+    /// thread.
+    pub fn create(size: usize) -> Vec<Comm> {
+        assert!(size > 0);
+        let (txs, rxs): (Vec<_>, Vec<_>) = (0..size).map(|_| channel()).unzip();
+        rxs.into_iter()
+            .enumerate()
+            .map(|(rank, rx)| Comm {
+                rank,
+                size,
+                txs: txs.clone(),
+                rx,
+                unexpected: Vec::new(),
+                coll_seq: 0,
+            })
+            .collect()
+    }
+}
+
+impl Comm {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Blocking send (buffered: completes immediately, like MPI_Send on a
+    /// message that fits the eager threshold).
+    pub fn send(&self, to: usize, tag: u64, data: Vec<f32>) {
+        assert!(tag & COLL_BIT == 0, "user tags must not set the collective bit");
+        self.send_raw(to, tag, data);
+    }
+
+    fn send_raw(&self, to: usize, tag: u64, data: Vec<f32>) {
+        self.txs[to]
+            .send(Msg { from: self.rank, tag, data })
+            .expect("peer hung up");
+    }
+
+    /// Blocking receive with (source, tag) matching.
+    pub fn recv(&mut self, from: usize, tag: u64) -> Vec<f32> {
+        assert!(tag & COLL_BIT == 0, "user tags must not set the collective bit");
+        self.recv_raw(from, tag)
+    }
+
+    fn recv_raw(&mut self, from: usize, tag: u64) -> Vec<f32> {
+        if let Some(pos) = self
+            .unexpected
+            .iter()
+            .position(|m| m.from == from && m.tag == tag)
+        {
+            return self.unexpected.remove(pos).data;
+        }
+        loop {
+            let msg = self.rx.recv().expect("world torn down mid-recv");
+            if msg.from == from && msg.tag == tag {
+                return msg.data;
+            }
+            self.unexpected.push(msg);
+        }
+    }
+
+    /// Simultaneous send+recv (deadlock-free ring step).
+    pub fn sendrecv(
+        &mut self,
+        to: usize,
+        send_tag: u64,
+        data: Vec<f32>,
+        from: usize,
+        recv_tag: u64,
+    ) -> Vec<f32> {
+        // Buffered sends complete immediately, so send-then-recv is safe.
+        self.send_raw(to, send_tag, data);
+        self.recv_raw(from, recv_tag)
+    }
+
+    fn next_coll_tag(&mut self, round: u64) -> u64 {
+        COLL_BIT | (self.coll_seq << 16) | round
+    }
+
+    fn finish_collective(&mut self) {
+        self.coll_seq += 1;
+    }
+
+    /// Dissemination barrier: ceil(log2(p)) rounds.
+    pub fn barrier(&mut self) {
+        let p = self.size;
+        if p > 1 {
+            let mut k = 1usize;
+            let mut round = 0u64;
+            while k < p {
+                let tag = self.next_coll_tag(round);
+                let to = (self.rank + k) % p;
+                let from = (self.rank + p - k) % p;
+                self.send_raw(to, tag, Vec::new());
+                let _ = self.recv_raw(from, tag);
+                k <<= 1;
+                round += 1;
+            }
+        }
+        self.finish_collective();
+    }
+
+    /// Binomial-tree broadcast from `root` (the MPICH algorithm). Used to
+    /// initialize weights when there are no PS servers (§4.2.1) and as the
+    /// pull-side fan-out inside an MPI client.
+    pub fn bcast(&mut self, root: usize, data: &mut Vec<f32>) {
+        let p = self.size;
+        if p > 1 {
+            let tag = self.next_coll_tag(0);
+            let vrank = (self.rank + p - root) % p;
+            // Receive phase: wait for the parent (clears our lowest set bit).
+            let mut mask = 1usize;
+            while mask < p {
+                if vrank & mask != 0 {
+                    let parent = ((vrank ^ mask) + root) % p;
+                    *data = self.recv_raw(parent, tag);
+                    break;
+                }
+                mask <<= 1;
+            }
+            // Forward phase: send to children at decreasing bit positions.
+            mask >>= 1;
+            while mask > 0 {
+                let child = vrank + mask;
+                if vrank & mask == 0 && child < p {
+                    self.send_raw((child + root) % p, tag, data.clone());
+                }
+                mask >>= 1;
+            }
+        }
+        self.finish_collective();
+    }
+
+    /// Gather-to-root + reduce + broadcast. The *naive* allreduce the paper
+    /// contrasts with bucket rings; also the correctness oracle in tests.
+    pub fn allreduce_naive(&mut self, data: &mut Vec<f32>) {
+        let p = self.size;
+        if p > 1 {
+            let tag = self.next_coll_tag(0);
+            if self.rank == 0 {
+                for r in 1..p {
+                    let part = self.recv_raw(r, tag);
+                    crate::tensor::add_assign(data, &part);
+                }
+            } else {
+                self.send_raw(0, tag, data.clone());
+            }
+            self.finish_collective();
+            self.bcast(0, data);
+        } else {
+            self.finish_collective();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn run_world<F, R>(size: usize, f: F) -> Vec<R>
+    where
+        F: Fn(Comm) -> R + Clone + Send + 'static,
+        R: Send + 'static,
+    {
+        let comms = World::create(size);
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|c| {
+                let f = f.clone();
+                thread::spawn(move || f(c))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn p2p_send_recv() {
+        let out = run_world(2, |mut c| {
+            if c.rank() == 0 {
+                c.send(1, 7, vec![1.0, 2.0]);
+                vec![]
+            } else {
+                c.recv(0, 7)
+            }
+        });
+        assert_eq!(out[1], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn recv_matches_tag_out_of_order() {
+        let out = run_world(2, |mut c| {
+            if c.rank() == 0 {
+                c.send(1, 1, vec![1.0]);
+                c.send(1, 2, vec![2.0]);
+                vec![]
+            } else {
+                // Receive tag 2 first even though tag 1 arrived first.
+                let b = c.recv(0, 2);
+                let a = c.recv(0, 1);
+                vec![a[0], b[0]]
+            }
+        });
+        assert_eq!(out[1], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn barrier_completes_all_sizes() {
+        for p in [1, 2, 3, 5, 8] {
+            run_world(p, |mut c| {
+                for _ in 0..3 {
+                    c.barrier();
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn bcast_all_sizes_all_roots() {
+        for p in [1, 2, 3, 4, 7] {
+            for root in 0..p {
+                let out = run_world(p, move |mut c| {
+                    let mut data = if c.rank() == root {
+                        vec![3.5, -1.0, root as f32]
+                    } else {
+                        Vec::new()
+                    };
+                    c.bcast(root, &mut data);
+                    data
+                });
+                for d in out {
+                    assert_eq!(d, vec![3.5, -1.0, root as f32]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_naive_sums() {
+        for p in [1, 2, 3, 6] {
+            let out = run_world(p, move |mut c| {
+                let mut data = vec![c.rank() as f32 + 1.0; 5];
+                c.allreduce_naive(&mut data);
+                data
+            });
+            let expect = (p * (p + 1) / 2) as f32;
+            for d in out {
+                assert!(d.iter().all(|&x| x == expect), "{d:?} != {expect}");
+            }
+        }
+    }
+
+    #[test]
+    fn consecutive_collectives_do_not_cross_talk() {
+        let out = run_world(3, |mut c| {
+            let mut a = vec![c.rank() as f32];
+            c.allreduce_naive(&mut a);
+            let mut b = vec![10.0 * c.rank() as f32];
+            c.allreduce_naive(&mut b);
+            c.barrier();
+            (a[0], b[0])
+        });
+        for (a, b) in out {
+            assert_eq!(a, 3.0);
+            assert_eq!(b, 30.0);
+        }
+    }
+
+    #[test]
+    fn sendrecv_ring_rotates() {
+        let p = 4;
+        let out = run_world(p, move |mut c| {
+            let right = (c.rank() + 1) % p;
+            let left = (c.rank() + p - 1) % p;
+            c.sendrecv(right, 9, vec![c.rank() as f32], left, 9)
+        });
+        for (r, d) in out.iter().enumerate() {
+            assert_eq!(d[0], ((r + p - 1) % p) as f32);
+        }
+    }
+}

@@ -1,0 +1,428 @@
+//! Network/compute cost model + virtual clock (the hardware substitute).
+//!
+//! The paper's timing results come from Power8 testbeds (IB CX-4/CX-5
+//! fabrics, NVLink'd P100s, 38.4 GB/s host write bandwidth per socket).
+//! None of that hardware exists here, so every *timing* figure is driven by
+//! this module: an α-β-γ cost model (the same formalism the paper uses in
+//! §6.2 to analyse bucket algorithms) plus explicit link objects whose
+//! serialization reproduces contention (the PS ingress hot spot of §2.3).
+//!
+//! Convergence numerics are *real* (PJRT-executed SGD); only the time axis
+//! is virtual. See DESIGN.md §2 for the substitution table.
+
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Seconds, on the virtual clock.
+pub type VTime = f64;
+
+/// α-β-γ parameters for the two paper testbeds.
+///
+/// β/γ values are seconds-per-byte (1/bandwidth); α is per-message latency.
+/// Bandwidths are taken from the paper's §7.3 measurements where given.
+#[derive(Debug, Clone)]
+pub struct CostParams {
+    /// Per-message network latency (MPI p2p), seconds.
+    pub alpha_net: f64,
+    /// Inter-node network for MPI (verbs/RDMA), s/byte (IB EDR ~12.5 GB/s).
+    pub beta_net: f64,
+    /// PS transport, s/byte. MXNET's ps-lite runs ZMQ over TCP — far below
+    /// line rate on IB and prone to ingress incast — which is exactly why
+    /// the paper moves aggregation into MPI cliques (§2.3, Fig. 12).
+    pub beta_ps: f64,
+    /// TCP incast coefficient at the PS ingress/egress: each additional
+    /// concurrent flow queued on the link inflates its per-byte cost by
+    /// this fraction (goodput collapse under fan-in, the §2.3 hot spot;
+    /// cf. Project Adam [27]). MPI links (verbs) use 0.
+    pub ps_incast: f64,
+    /// Host memory write bandwidth, s/byte (38.4 GB/s per socket, §7.3).
+    pub beta_hostmem: f64,
+    /// Host-side single-thread reduction, s/byte.
+    pub gamma_host: f64,
+    /// Host-side 8-thread (OMP) reduction, s/byte (omp_ring design).
+    pub gamma_omp: f64,
+    /// GPU tensor reduction into host memory, IBMGpu kernels: 30 GB/s (§7.3).
+    pub gamma_gpu_ibm: f64,
+    /// Same via NCCL: 12 GB/s, one communicator set (§7.3).
+    pub gamma_gpu_nccl: f64,
+    /// GPU broadcast from host: 28 GB/s for both IBMGpu and NCCL (§7.3).
+    pub beta_gpu_bcast: f64,
+    /// Plain host<->device copy (the extra hops of the Baidu ring, §6.3).
+    pub beta_h2d: f64,
+    /// Per blocking GPU-op overhead (kernel launch + sync). NCCL ops are
+    /// blocking (§7.3: "NCCL operations are blocking in nature"), so they
+    /// pay this on every ring step; the IBMGpu design's GpuStart/GpuWait
+    /// pipeline (Fig. 9) amortizes it per ring instead.
+    pub gpu_sync: f64,
+    /// GPUs per node-tensor (2 per Minsky socket-worker).
+    pub gpus_per_worker: usize,
+}
+
+impl CostParams {
+    /// testbed2: IBM Minsky, P100 + NVLink, IB CX-5 (§7).
+    pub fn minsky() -> Self {
+        Self {
+            alpha_net: 1.3e-6,
+            beta_net: 1.0 / 12.5e9,
+            beta_ps: 1.0 / 1.0e9,
+            ps_incast: 0.4,
+            beta_hostmem: 1.0 / 38.4e9,
+            gamma_host: 1.0 / 3.0e9,
+            gamma_omp: 1.0 / 19.2e9,
+            gamma_gpu_ibm: 1.0 / 30.0e9,
+            gamma_gpu_nccl: 1.0 / 12.0e9,
+            beta_gpu_bcast: 1.0 / 28.0e9,
+            beta_h2d: 1.0 / 16.0e9, // PCIe-class staging copy
+            gpu_sync: 20e-6,
+            gpus_per_worker: 2,
+        }
+    }
+
+    /// testbed1: Power8 + Kepler, IB CX-4 (§7). Older GPUs: slower device
+    /// math and PCIe attach instead of NVLink.
+    pub fn testbed1() -> Self {
+        Self {
+            alpha_net: 1.5e-6,
+            beta_net: 1.0 / 12.5e9,
+            beta_ps: 1.0 / 1.0e9,
+            ps_incast: 0.5,
+            beta_hostmem: 1.0 / 25.6e9,
+            gamma_host: 1.0 / 3.0e9,
+            gamma_omp: 1.0 / 12.8e9,
+            gamma_gpu_ibm: 1.0 / 10.0e9,
+            gamma_gpu_nccl: 1.0 / 6.0e9,
+            beta_gpu_bcast: 1.0 / 10.0e9,
+            beta_h2d: 1.0 / 10.0e9,
+            gpu_sync: 25e-6,
+            gpus_per_worker: 2,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Links and contention
+// ---------------------------------------------------------------------------
+
+/// A serialized network link: one transfer at a time, FIFO.
+///
+/// This is the contention model: concurrent transfers queue, so k workers
+/// pushing to one PS ingress link take ~k times as long — the §2.3 hot spot.
+#[derive(Debug, Clone)]
+pub struct Link {
+    pub alpha: f64,
+    pub beta: f64,
+    /// Incast coefficient: queued flows inflate per-byte cost (TCP fan-in
+    /// collapse). 0 for RDMA/verbs links.
+    pub incast: f64,
+    /// Congestion depth saturates here (at most `fan_in - 1` flows can
+    /// actually share the link).
+    pub incast_cap: u64,
+    busy_until: VTime,
+    /// Consecutive transfers that found the link busy (congestion depth).
+    depth: u64,
+    /// Total bytes ever moved (for utilization reporting).
+    pub bytes_moved: u64,
+}
+
+impl Link {
+    pub fn new(alpha: f64, beta: f64) -> Self {
+        Self {
+            alpha,
+            beta,
+            incast: 0.0,
+            incast_cap: 0,
+            busy_until: 0.0,
+            depth: 0,
+            bytes_moved: 0,
+        }
+    }
+
+    pub fn with_incast(alpha: f64, beta: f64, incast: f64, cap: u64) -> Self {
+        Self { incast, incast_cap: cap, ..Self::new(alpha, beta) }
+    }
+
+    /// Per-byte cost for a transfer requested at `now`: if the link is
+    /// already busy the flow joins an incast fan-in and goodput degrades.
+    fn effective_beta(&mut self, now: VTime) -> f64 {
+        if self.busy_until > now {
+            self.depth = (self.depth + 1).min(self.incast_cap);
+        } else {
+            self.depth = 0;
+        }
+        self.beta * (1.0 + self.incast * self.depth as f64)
+    }
+
+    /// Schedule a transfer of `bytes` requested at `now`; returns finish time.
+    pub fn transfer(&mut self, now: VTime, bytes: usize) -> VTime {
+        let beta = self.effective_beta(now);
+        let start = now.max(self.busy_until);
+        let finish = start + self.alpha + bytes as f64 * beta;
+        self.busy_until = finish;
+        self.bytes_moved += bytes as u64;
+        finish
+    }
+
+    /// Time the link frees up.
+    pub fn busy_until(&self) -> VTime {
+        self.busy_until
+    }
+
+    pub fn reset(&mut self) {
+        self.busy_until = 0.0;
+        self.depth = 0;
+        self.bytes_moved = 0;
+    }
+}
+
+/// Cut-through transfer across a two-link path (worker NIC -> server
+/// ingress): the flow occupies *both* links for the duration, paced by the
+/// slower one. Avoids the store-and-forward double-count a naive
+/// link-by-link model would charge.
+pub fn path_transfer(a: &mut Link, b: &mut Link, now: VTime, bytes: usize) -> VTime {
+    let beta = a.effective_beta(now).max(b.effective_beta(now));
+    let start = now.max(a.busy_until).max(b.busy_until);
+    let finish = start + a.alpha + b.alpha + bytes as f64 * beta;
+    a.busy_until = finish;
+    a.bytes_moved += bytes as u64;
+    b.busy_until = finish;
+    b.bytes_moved += bytes as u64;
+    finish
+}
+
+/// The PS-side fabric: per-server ingress/egress links shared by all
+/// workers, per-worker NICs. Keys are sharded across servers (MXNET shards
+/// the KVStore), so a full push touches every server.
+#[derive(Debug, Clone)]
+pub struct PsFabric {
+    pub server_in: Vec<Link>,
+    pub server_out: Vec<Link>,
+    pub worker_nic: Vec<Link>,
+    pub params: CostParams,
+}
+
+impl PsFabric {
+    pub fn new(n_servers: usize, n_workers: usize, params: CostParams) -> Self {
+        // PS traffic rides the TCP-class transport, not MPI verbs; the
+        // shared server links suffer incast under fan-in.
+        let cap = n_workers.saturating_sub(1) as u64;
+        let mk_srv =
+            || Link::with_incast(params.alpha_net, params.beta_ps, params.ps_incast, cap);
+        let mk_nic = || Link::new(params.alpha_net, params.beta_ps);
+        Self {
+            server_in: (0..n_servers).map(|_| mk_srv()).collect(),
+            server_out: (0..n_servers).map(|_| mk_srv()).collect(),
+            worker_nic: (0..n_workers).map(|_| mk_nic()).collect(),
+            params,
+        }
+    }
+
+    /// Worker `w` pushes `bytes` split evenly across all servers at `now`.
+    /// Returns completion time (all shards delivered).
+    ///
+    /// Each shard flows cut-through over (worker NIC, server ingress); the
+    /// per-server ingress link serializes across workers — the §2.3 hot
+    /// spot.
+    pub fn push(&mut self, now: VTime, w: usize, bytes: usize) -> VTime {
+        let shard = bytes / self.server_in.len().max(1);
+        let mut done = now;
+        for s in self.server_in.iter_mut() {
+            let t = path_transfer(&mut self.worker_nic[w], s, now, shard);
+            done = done.max(t);
+        }
+        done
+    }
+
+    /// Worker `w` pulls `bytes` split across servers at `now`.
+    pub fn pull(&mut self, now: VTime, w: usize, bytes: usize) -> VTime {
+        let shard = bytes / self.server_out.len().max(1);
+        let mut done = now;
+        for s in self.server_out.iter_mut() {
+            let t = path_transfer(s, &mut self.worker_nic[w], now, shard);
+            done = done.max(t);
+        }
+        done
+    }
+
+    pub fn reset(&mut self) {
+        for l in self
+            .server_in
+            .iter_mut()
+            .chain(self.server_out.iter_mut())
+            .chain(self.worker_nic.iter_mut())
+        {
+            l.reset();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Discrete-event queue (used by the virtual-time trainer)
+// ---------------------------------------------------------------------------
+
+/// Min-heap event queue keyed by virtual time.
+#[derive(Debug)]
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Ev<E>>,
+    seq: u64,
+}
+
+#[derive(Debug)]
+struct Ev<E> {
+    at: VTime,
+    seq: u64,
+    payload: E,
+}
+
+impl<E> PartialEq for Ev<E> {
+    fn eq(&self, o: &Self) -> bool {
+        self.at == o.at && self.seq == o.seq
+    }
+}
+impl<E> Eq for Ev<E> {}
+impl<E> PartialOrd for Ev<E> {
+    fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl<E> Ord for Ev<E> {
+    fn cmp(&self, o: &Self) -> Ordering {
+        // Reverse for min-heap; break time ties by insertion order so the
+        // simulation is fully deterministic.
+        o.at.total_cmp(&self.at).then(o.seq.cmp(&self.seq))
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        Self { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    pub fn push(&mut self, at: VTime, payload: E) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Ev { at, seq, payload });
+    }
+
+    pub fn pop(&mut self) -> Option<(VTime, E)> {
+        self.heap.pop().map(|e| (e.at, e.payload))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn link_serializes_transfers() {
+        let mut l = Link::new(1e-6, 1e-9); // 1 GB/s
+        let t1 = l.transfer(0.0, 1_000_000); // 1 ms + 1 us
+        let t2 = l.transfer(0.0, 1_000_000); // queued behind t1
+        assert!((t1 - 1.001e-3).abs() < 1e-12);
+        assert!((t2 - 2.002e-3).abs() < 1e-12);
+        assert_eq!(l.bytes_moved, 2_000_000);
+    }
+
+    #[test]
+    fn link_idle_gap_not_backfilled() {
+        let mut l = Link::new(0.0, 1e-9);
+        let t1 = l.transfer(0.0, 1000);
+        let t2 = l.transfer(1.0, 1000); // arrives after idle gap
+        assert!(t1 < 1.0);
+        assert!((t2 - 1.000001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ps_fabric_hot_spot_scales_superlinearly() {
+        // k workers pushing simultaneously to 1 server: serialization on
+        // the ingress + TCP incast collapse make the last push finish
+        // *worse* than k x the solo time (the §2.3 hot spot).
+        let p = CostParams::testbed1();
+        let bytes = 10 << 20;
+        let mut f1 = PsFabric::new(1, 1, p.clone());
+        let solo = f1.push(0.0, 0, bytes);
+        let mut f12 = PsFabric::new(1, 12, p);
+        let mut last = 0.0f64;
+        for w in 0..12 {
+            last = last.max(f12.push(0.0, w, bytes));
+        }
+        let ratio = last / solo;
+        assert!(ratio > 12.0 && ratio < 60.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn incast_depth_saturates_under_sustained_load() {
+        // Continuous traffic must reach a steady per-transfer cost, not
+        // diverge (the cap = fan-in - 1).
+        let mut l = Link::with_incast(0.0, 1e-9, 0.5, 3);
+        let mut prev_finish = 0.0f64;
+        let mut prev_cost = 0.0f64;
+        for i in 0..50 {
+            let fin = l.transfer(0.0, 1_000_000); // permanently congested
+            let cost = fin - prev_finish;
+            if i > 10 {
+                assert!((cost - prev_cost).abs() < 1e-12, "diverging at {i}");
+            }
+            prev_cost = cost;
+            prev_finish = fin;
+        }
+        // Steady multiplier = 1 + 0.5 * 3.
+        assert!((prev_cost - 2.5e-3).abs() < 1e-9, "{prev_cost}");
+    }
+
+    #[test]
+    fn more_servers_relieve_contention() {
+        let p = CostParams::testbed1();
+        let bytes = 10 << 20;
+        let run = |servers: usize| {
+            let mut f = PsFabric::new(servers, 12, p.clone());
+            let mut last = 0.0f64;
+            for w in 0..12 {
+                last = last.max(f.push(0.0, w, bytes));
+            }
+            last
+        };
+        assert!(run(4) < run(2));
+        assert!(run(2) < run(1));
+    }
+
+    #[test]
+    fn event_queue_orders_by_time_then_seq() {
+        let mut q = EventQueue::new();
+        q.push(2.0, "b");
+        q.push(1.0, "a");
+        q.push(2.0, "c");
+        assert_eq!(q.pop().unwrap().1, "a");
+        assert_eq!(q.pop().unwrap().1, "b"); // same time: FIFO by seq
+        assert_eq!(q.pop().unwrap().1, "c");
+        assert!(q.pop().is_none());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn cost_presets_sane() {
+        for p in [CostParams::minsky(), CostParams::testbed1()] {
+            assert!(p.alpha_net > 0.0 && p.beta_net > 0.0);
+            // GPU reduce faster than single-thread host reduce.
+            assert!(p.gamma_gpu_ibm < p.gamma_host);
+        }
+        // Paper: IBMGpu reduce 30 GB/s ~ 2.5x NCCL's 12 GB/s.
+        let m = CostParams::minsky();
+        let r = m.gamma_gpu_nccl / m.gamma_gpu_ibm;
+        assert!(r > 2.0 && r < 3.0);
+    }
+}

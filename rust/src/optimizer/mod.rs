@@ -1,0 +1,239 @@
+//! Optimizers: worker- and server-side update rules (paper §2, §5).
+//!
+//! The KVStore ships an optimizer to the servers (`set_optimizer`, §3.2):
+//! per-key updates run where the paper runs them — `SgdScaled` on the PS for
+//! dist/mpi-(A)SGD, `Elastic1` (eq. 2) on the PS for ESGD — while workers
+//! apply `Sgd` locally (pure-MPI mode) and `Elastic2` (eq. 3) inside the
+//! MPI client. These Rust implementations are the per-key reference used by
+//! the PS servers; on the full-flat-vector training path the AOT-compiled
+//! Pallas kernels (`sgd_*.hlo.txt`, `elastic*_*.hlo.txt`) do the same math
+//! through PJRT, and tests cross-check the two.
+
+
+
+/// Hyper-parameters of the fused SGD kernel: `(lr, momentum, wd, rescale)`.
+#[derive(Debug, Clone, Copy)]
+pub struct SgdHyper {
+    pub lr: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    /// 1 / mini_batch_size (§5: gradients are rescaled by the *algorithm*
+    /// mini-batch, which grows with the number of workers aggregated).
+    pub rescale: f32,
+}
+
+impl SgdHyper {
+    pub fn plain(lr: f32, rescale: f32) -> Self {
+        Self { lr, momentum: 0.0, weight_decay: 0.0, rescale }
+    }
+
+    pub fn as_vec(&self) -> Vec<f32> {
+        vec![self.lr, self.momentum, self.weight_decay, self.rescale]
+    }
+}
+
+/// A stateful per-key update rule, applied where the algorithm places it.
+pub trait Optimizer: Send {
+    /// Apply an update to `weights` given an aggregated `grad`.
+    fn update(&mut self, key: usize, weights: &mut [f32], grad: &[f32]);
+    fn name(&self) -> &'static str;
+}
+
+/// Fused momentum SGD with weight decay and gradient rescale — the math of
+/// the `sgd_update` Pallas kernel.
+pub struct Sgd {
+    pub hyper: SgdHyper,
+    momentum_buf: std::collections::HashMap<usize, Vec<f32>>,
+}
+
+impl Sgd {
+    pub fn new(hyper: SgdHyper) -> Self {
+        Self { hyper, momentum_buf: Default::default() }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn update(&mut self, key: usize, weights: &mut [f32], grad: &[f32]) {
+        let h = self.hyper;
+        let m = self
+            .momentum_buf
+            .entry(key)
+            .or_insert_with(|| vec![0.0; weights.len()]);
+        assert_eq!(m.len(), weights.len());
+        for i in 0..weights.len() {
+            let g_eff = h.rescale * grad[i] + h.weight_decay * weights[i];
+            m[i] = h.momentum * m[i] + g_eff;
+            weights[i] -= h.lr * m[i];
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+}
+
+/// "Optimizer" that just stores the aggregated value. This is MXNET's
+/// default dist-sync server behaviour in the Fig. 6 algorithm: the server
+/// only *aggregates* gradients; workers pull the sum back and run
+/// `SGD.Update` locally with `rescale = 1/mini_batch_size`.
+pub struct Assign;
+
+impl Optimizer for Assign {
+    fn update(&mut self, _key: usize, value: &mut [f32], agg: &[f32]) {
+        value.copy_from_slice(agg);
+    }
+
+    fn name(&self) -> &'static str {
+        "assign"
+    }
+}
+
+/// AdaGrad (§3.2 lists it among the optimizers the KVStore can ship).
+pub struct AdaGrad {
+    pub lr: f32,
+    pub rescale: f32,
+    pub eps: f32,
+    accum: std::collections::HashMap<usize, Vec<f32>>,
+}
+
+impl AdaGrad {
+    pub fn new(lr: f32, rescale: f32) -> Self {
+        Self { lr, rescale, eps: 1e-8, accum: Default::default() }
+    }
+}
+
+impl Optimizer for AdaGrad {
+    fn update(&mut self, key: usize, weights: &mut [f32], grad: &[f32]) {
+        let a = self
+            .accum
+            .entry(key)
+            .or_insert_with(|| vec![0.0; weights.len()]);
+        for i in 0..weights.len() {
+            let g = self.rescale * grad[i];
+            a[i] += g * g;
+            weights[i] -= self.lr * g / (a[i].sqrt() + self.eps);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "adagrad"
+    }
+}
+
+/// Server-side elastic update (eq. 2): treats the *pushed value* as the
+/// client's current weights `w` and moves the stored center variables
+/// towards them: `c <- c + alpha (w - c)`.
+pub struct Elastic1 {
+    pub alpha: f32,
+}
+
+impl Optimizer for Elastic1 {
+    fn update(&mut self, _key: usize, center: &mut [f32], w: &[f32]) {
+        for i in 0..center.len() {
+            center[i] += self.alpha * (w[i] - center[i]);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "elastic1"
+    }
+}
+
+/// Client-side elastic update (eq. 3): `w <- w - alpha (w - c)`, where `c`
+/// is the center pulled from the PS *before* the server applied eq. 2 —
+/// both sides use the same pre-update difference (Fig. 8).
+pub fn elastic2(w: &mut [f32], center: &[f32], alpha: f32) {
+    for i in 0..w.len() {
+        w[i] -= alpha * (w[i] - center[i]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_plain_matches_formula() {
+        let mut o = Sgd::new(SgdHyper::plain(0.5, 1.0));
+        let mut w = vec![1.0, 2.0];
+        o.update(0, &mut w, &[0.2, -0.4]);
+        assert_eq!(w, vec![0.9, 2.2]);
+    }
+
+    #[test]
+    fn sgd_momentum_accumulates() {
+        let mut o = Sgd::new(SgdHyper { lr: 1.0, momentum: 0.5, weight_decay: 0.0, rescale: 1.0 });
+        let mut w = vec![0.0];
+        o.update(0, &mut w, &[1.0]); // m=1, w=-1
+        o.update(0, &mut w, &[1.0]); // m=1.5, w=-2.5
+        assert!((w[0] + 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sgd_rescale_divides_batch() {
+        let mut o = Sgd::new(SgdHyper::plain(1.0, 1.0 / 4.0));
+        let mut w = vec![0.0];
+        o.update(0, &mut w, &[8.0]);
+        assert_eq!(w, vec![-2.0]);
+    }
+
+    #[test]
+    fn sgd_weight_decay_pulls_to_zero() {
+        let mut o = Sgd::new(SgdHyper { lr: 0.1, momentum: 0.0, weight_decay: 0.5, rescale: 1.0 });
+        let mut w = vec![2.0];
+        o.update(0, &mut w, &[0.0]);
+        assert!((w[0] - 1.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sgd_separate_keys_have_separate_momentum() {
+        let mut o = Sgd::new(SgdHyper { lr: 1.0, momentum: 0.9, weight_decay: 0.0, rescale: 1.0 });
+        let mut w0 = vec![0.0];
+        let mut w1 = vec![0.0];
+        o.update(0, &mut w0, &[1.0]);
+        o.update(1, &mut w1, &[1.0]);
+        assert_eq!(w0, w1); // first step identical => buffers independent
+    }
+
+    #[test]
+    fn adagrad_decreases_effective_lr() {
+        let mut o = AdaGrad::new(1.0, 1.0);
+        let mut w = vec![0.0];
+        o.update(0, &mut w, &[1.0]);
+        let step1 = -w[0];
+        let before = w[0];
+        o.update(0, &mut w, &[1.0]);
+        let step2 = before - w[0];
+        assert!(step2 < step1);
+    }
+
+    #[test]
+    fn elastic_updates_match_equations() {
+        let alpha = 0.25;
+        let mut c = vec![0.0, 4.0];
+        let w = vec![4.0, 0.0];
+        Elastic1 { alpha }.update(0, &mut c, &w);
+        assert_eq!(c, vec![1.0, 3.0]);
+
+        let mut w2 = vec![4.0, 0.0];
+        let c2 = vec![0.0, 4.0];
+        elastic2(&mut w2, &c2, alpha);
+        assert_eq!(w2, vec![3.0, 1.0]);
+    }
+
+    #[test]
+    fn elastic_is_symmetric_attraction() {
+        // After eq.2 + eq.3 from the same (w, c), the pair moves towards
+        // each other by the same amount: w' - c' = (1 - 2a)(w - c).
+        let alpha = 0.3f32;
+        let w0 = 5.0f32;
+        let c0 = 1.0f32;
+        let mut c = vec![c0];
+        Elastic1 { alpha }.update(0, &mut c, &[w0]);
+        let mut w = vec![w0];
+        elastic2(&mut w, &[c0], alpha);
+        let got = w[0] - c[0];
+        let want = (1.0 - 2.0 * alpha) * (w0 - c0);
+        assert!((got - want).abs() < 1e-6);
+    }
+}

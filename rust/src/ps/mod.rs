@@ -1,0 +1,473 @@
+//! Parameter-server substrate: scheduler, servers, worker-side client.
+//!
+//! Mirrors MXNET's PS architecture (§3.2, §4.1): a *scheduler* task that
+//! every worker/server registers with, N *server* tasks each owning a shard
+//! of the KVStore (key -> server by modulo, like ps-lite key sharding), and
+//! worker-side `ZPush`/`ZPull` primitives. Transport is in-process channels
+//! (the LSF/TCP substitution, DESIGN.md §2); the protocol — registration,
+//! per-key aggregation rounds, optimizer shipped to the server via
+//! `set_optimizer` — follows the paper.
+//!
+//! Synchronous mode: a server aggregates `expected_pushes` gradients per
+//! key per round, applies the shipped optimizer once, then answers the
+//! round's pulls. Pulls carry the worker's push round so a fast worker
+//! can never steal a slow worker's round (no deadlock, no silent
+//! staleness) — see `ServerMsg::Pull::after_round`.
+//!
+//! Asynchronous mode: every push is applied immediately (the §2.3
+//! staleness regime); pulls answer with whatever is current.
+
+use crate::optimizer::Optimizer;
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+pub type Key = usize;
+
+/// Server aggregation discipline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyncMode {
+    /// Aggregate `expected_pushes` per key, update once, release pulls.
+    Sync,
+    /// Apply every push immediately.
+    Async,
+}
+
+enum ServerMsg {
+    /// Initialize a key (rank 0 in the PS namespace does this, §4.2.1).
+    Init { key: Key, value: Vec<f32> },
+    /// Push a gradient (or weights, for elastic averaging) for a key.
+    Push { key: Key, data: Vec<f32> },
+    /// Pull the value of a key once `after_round` rounds have completed
+    /// (workers pass their own push count; async mode ignores it).
+    Pull { key: Key, after_round: u64, reply: Sender<Vec<f32>> },
+    /// Ship an optimizer to the server (KVStore.set_optimizer, §3.2).
+    SetOptimizer(Box<dyn Optimizer>),
+    Shutdown,
+}
+
+/// One PS server task: owns its key shard, runs on its own thread.
+struct ServerState {
+    mode: SyncMode,
+    expected_pushes: usize,
+    optimizer: Box<dyn Optimizer>,
+    store: HashMap<Key, Vec<f32>>,
+    /// Per-key gradient aggregation buffer + count (sync mode).
+    agg: HashMap<Key, (Vec<f32>, usize)>,
+    /// Completed aggregation rounds per key.
+    rounds: HashMap<Key, u64>,
+    /// Pulls parked until their round completes: key -> (round, reply).
+    parked: HashMap<Key, Vec<(u64, Sender<Vec<f32>>)>>,
+    /// Messages that raced ahead of their key's Init (workers may push as
+    /// soon as the scheduler releases the job, §4.1.2); replayed on Init.
+    pre_init: HashMap<Key, Vec<ServerMsg>>,
+}
+
+impl ServerState {
+    fn on_push(&mut self, key: Key, data: Vec<f32>) {
+        match self.mode {
+            SyncMode::Async => {
+                let w = self.store.get_mut(&key).expect("push before init");
+                self.optimizer.update(key, w, &data);
+                *self.rounds.entry(key).or_insert(0) += 1;
+                self.release(key);
+            }
+            SyncMode::Sync => {
+                let (buf, count) = self.agg.entry(key).or_insert_with(|| (Vec::new(), 0));
+                if buf.is_empty() {
+                    *buf = data;
+                } else {
+                    crate::tensor::add_assign(buf, &data);
+                }
+                *count += 1;
+                if *count >= self.expected_pushes {
+                    let (buf, _) = self.agg.remove(&key).unwrap();
+                    let w = self.store.get_mut(&key).expect("push before init");
+                    self.optimizer.update(key, w, &buf);
+                    *self.rounds.entry(key).or_insert(0) += 1;
+                    self.release(key);
+                }
+            }
+        }
+    }
+
+    fn release(&mut self, key: Key) {
+        let done = *self.rounds.get(&key).unwrap_or(&0);
+        if let Some(parked) = self.parked.get_mut(&key) {
+            let mut keep = Vec::new();
+            for (round, reply) in parked.drain(..) {
+                if round <= done {
+                    let _ = reply.send(self.store[&key].clone());
+                } else {
+                    keep.push((round, reply));
+                }
+            }
+            *parked = keep;
+        }
+    }
+
+    fn on_pull(&mut self, key: Key, after_round: u64, reply: Sender<Vec<f32>>) {
+        let done = *self.rounds.get(&key).unwrap_or(&0);
+        let ready = match self.mode {
+            SyncMode::Async => true,
+            SyncMode::Sync => after_round <= done,
+        };
+        if ready {
+            let _ = reply.send(self.store.get(&key).expect("pull before init").clone());
+        } else {
+            self.parked.entry(key).or_default().push((after_round, reply));
+        }
+    }
+
+    fn handle(&mut self, msg: ServerMsg) -> bool {
+        match msg {
+            ServerMsg::Init { key, value } => {
+                self.store.insert(key, value);
+                // Replay anything that raced ahead of the init.
+                if let Some(queued) = self.pre_init.remove(&key) {
+                    for m in queued {
+                        self.handle(m);
+                    }
+                }
+            }
+            ServerMsg::Push { key, data } => {
+                if self.store.contains_key(&key) {
+                    self.on_push(key, data);
+                } else {
+                    self.pre_init
+                        .entry(key)
+                        .or_default()
+                        .push(ServerMsg::Push { key, data });
+                }
+            }
+            ServerMsg::Pull { key, after_round, reply } => {
+                if self.store.contains_key(&key) {
+                    self.on_pull(key, after_round, reply);
+                } else {
+                    self.pre_init
+                        .entry(key)
+                        .or_default()
+                        .push(ServerMsg::Pull { key, after_round, reply });
+                }
+            }
+            ServerMsg::SetOptimizer(opt) => self.optimizer = opt,
+            ServerMsg::Shutdown => return false,
+        }
+        true
+    }
+
+    fn run(mut self, rx: Receiver<ServerMsg>) {
+        while let Ok(msg) = rx.recv() {
+            if !self.handle(msg) {
+                break;
+            }
+        }
+    }
+}
+
+/// Handle to a running group of PS server threads.
+pub struct ServerGroup {
+    txs: Vec<Sender<ServerMsg>>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl ServerGroup {
+    /// Spawn `n_servers` server tasks. `expected_pushes` is the number of
+    /// pushes per key per sync round (= #workers for dist modes, #clients
+    /// for MPI modes — the §4 contention knob).
+    pub fn spawn(n_servers: usize, mode: SyncMode, expected_pushes: usize) -> Self {
+        let mut txs = Vec::new();
+        let mut threads = Vec::new();
+        for s in 0..n_servers {
+            let (tx, rx) = channel();
+            let state = ServerState {
+                mode,
+                expected_pushes: expected_pushes.max(1),
+                optimizer: Box::new(crate::optimizer::Sgd::new(
+                    crate::optimizer::SgdHyper::plain(0.1, 1.0),
+                )),
+                store: HashMap::new(),
+                agg: HashMap::new(),
+                rounds: HashMap::new(),
+                parked: HashMap::new(),
+                pre_init: HashMap::new(),
+            };
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("ps-server-{s}"))
+                    .spawn(move || state.run(rx))
+                    .expect("spawn server"),
+            );
+            txs.push(tx);
+        }
+        Self { txs, threads }
+    }
+
+    pub fn n_servers(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// A worker-side client endpoint.
+    pub fn client(&self) -> PsClient {
+        PsClient { servers: self.txs.clone(), push_rounds: HashMap::new() }
+    }
+
+    /// Stop all server threads (remaining messages are processed first).
+    pub fn shutdown(mut self) {
+        for tx in &self.txs {
+            let _ = tx.send(ServerMsg::Shutdown);
+        }
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Worker-side PS endpoint: ZPush / ZPull over the sharded servers.
+///
+/// Keys are routed `key % n_servers` (ps-lite style). The client tracks its
+/// own per-key push count so synchronous pulls wait for exactly the round
+/// this worker contributed to.
+#[derive(Clone)]
+pub struct PsClient {
+    servers: Vec<Sender<ServerMsg>>,
+    push_rounds: HashMap<Key, u64>,
+}
+
+impl PsClient {
+    fn server(&self, key: Key) -> &Sender<ServerMsg> {
+        &self.servers[key % self.servers.len()]
+    }
+
+    /// Initialize a key on its server (call once, from PS rank 0).
+    pub fn init(&self, key: Key, value: Vec<f32>) {
+        self.server(key)
+            .send(ServerMsg::Init { key, value })
+            .expect("server gone");
+    }
+
+    /// ZPush: send a gradient/weight contribution for `key`.
+    pub fn push(&mut self, key: Key, data: Vec<f32>) {
+        *self.push_rounds.entry(key).or_insert(0) += 1;
+        self.server(key)
+            .send(ServerMsg::Push { key, data })
+            .expect("server gone");
+    }
+
+    /// ZPull: fetch the value of `key`; in sync mode waits until the round
+    /// containing this worker's last push has been applied.
+    pub fn pull(&mut self, key: Key) -> Vec<f32> {
+        let (reply, rx) = channel();
+        let after_round = *self.push_rounds.get(&key).unwrap_or(&0);
+        self.server(key)
+            .send(ServerMsg::Pull { key, after_round, reply })
+            .expect("server gone");
+        rx.recv().expect("server dropped pull")
+    }
+
+    /// Ship an optimizer to every server (KVStore.set_optimizer).
+    pub fn set_optimizer<F>(&self, factory: F)
+    where
+        F: Fn() -> Box<dyn Optimizer>,
+    {
+        for tx in &self.servers {
+            tx.send(ServerMsg::SetOptimizer(factory())).expect("server gone");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler — the registration/rendezvous task (§4.1.2)
+// ---------------------------------------------------------------------------
+
+/// The MXNET scheduler task: launched first, listens for every worker and
+/// server, assigns ranks in the PS namespace and releases the job once the
+/// expected population is connected. In-process the "address broadcast" is
+/// the `Arc` itself; the protocol (register -> barrier until complete) is
+/// the paper's.
+pub struct Scheduler {
+    inner: Arc<(Mutex<SchedState>, std::sync::Condvar)>,
+}
+
+#[derive(Default)]
+struct SchedState {
+    workers: usize,
+    servers: usize,
+    expect_workers: usize,
+    expect_servers: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    Worker,
+    Server,
+}
+
+impl Scheduler {
+    pub fn new(expect_workers: usize, expect_servers: usize) -> Self {
+        Self {
+            inner: Arc::new((
+                Mutex::new(SchedState {
+                    expect_workers,
+                    expect_servers,
+                    ..Default::default()
+                }),
+                std::sync::Condvar::new(),
+            )),
+        }
+    }
+
+    /// Register a task; returns its rank within its role's namespace.
+    /// Blocks until the whole job population has registered (the paper's
+    /// connection-establishment barrier).
+    pub fn register(&self, role: Role) -> usize {
+        let (lock, cv) = &*self.inner;
+        let mut st = lock.lock().unwrap();
+        let rank = match role {
+            Role::Worker => {
+                st.workers += 1;
+                st.workers - 1
+            }
+            Role::Server => {
+                st.servers += 1;
+                st.servers - 1
+            }
+        };
+        cv.notify_all();
+        while st.workers < st.expect_workers || st.servers < st.expect_servers {
+            st = cv.wait(st).unwrap();
+        }
+        rank
+    }
+
+    pub fn handle(&self) -> Scheduler {
+        Scheduler { inner: self.inner.clone() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::{Elastic1, Sgd, SgdHyper};
+    use std::thread;
+
+    #[test]
+    fn sync_server_aggregates_before_update() {
+        let group = ServerGroup::spawn(1, SyncMode::Sync, 3);
+        let clients: Vec<PsClient> = (0..3).map(|_| group.client()).collect();
+        clients[0].init(0, vec![1.0, 1.0]);
+        // Plain SGD lr=0.1, rescale=1: w -= 0.1 * sum(grads).
+        clients[0].set_optimizer(|| Box::new(Sgd::new(SgdHyper::plain(0.1, 1.0))));
+        let hs: Vec<_> = clients
+            .into_iter()
+            .map(|mut c| {
+                thread::spawn(move || {
+                    c.push(0, vec![1.0, 2.0]);
+                    c.pull(0)
+                })
+            })
+            .collect();
+        for h in hs {
+            let v = h.join().unwrap();
+            // sum = [3, 6]; w = [1,1] - 0.1*[3,6] = [0.7, 0.4]
+            assert!((v[0] - 0.7).abs() < 1e-6 && (v[1] - 0.4).abs() < 1e-6, "{v:?}");
+        }
+        group.shutdown();
+    }
+
+    #[test]
+    fn sync_rounds_do_not_deadlock_with_fast_worker() {
+        // Two workers race multiple rounds; round accounting must keep
+        // every pull matched to its own round (no deadlock, exact result).
+        let group = ServerGroup::spawn(1, SyncMode::Sync, 2);
+        let c0 = group.client();
+        c0.init(0, vec![0.0]);
+        c0.set_optimizer(|| Box::new(Sgd::new(SgdHyper::plain(1.0, 1.0))));
+        let hs: Vec<_> = (0..2)
+            .map(|_| {
+                let mut c = group.client();
+                thread::spawn(move || {
+                    let mut outs = Vec::new();
+                    for _ in 0..3 {
+                        c.push(0, vec![1.0]);
+                        outs.push(c.pull(0)[0]);
+                    }
+                    outs
+                })
+            })
+            .collect();
+        for h in hs {
+            let outs = h.join().unwrap();
+            // Each round subtracts 2.0; values are monotone non-increasing
+            // and the final round is exact.
+            assert!(outs.windows(2).all(|w| w[1] <= w[0]), "{outs:?}");
+            assert_eq!(outs[2], -6.0);
+        }
+        group.shutdown();
+    }
+
+    #[test]
+    fn async_server_applies_immediately() {
+        let group = ServerGroup::spawn(1, SyncMode::Async, 99);
+        let mut c = group.client();
+        c.init(0, vec![0.0]);
+        c.set_optimizer(|| Box::new(Sgd::new(SgdHyper::plain(1.0, 1.0))));
+        c.push(0, vec![2.0]);
+        assert_eq!(c.pull(0), vec![-2.0]);
+        c.push(0, vec![1.0]);
+        assert_eq!(c.pull(0), vec![-3.0]);
+        group.shutdown();
+    }
+
+    #[test]
+    fn keys_shard_across_servers() {
+        let group = ServerGroup::spawn(2, SyncMode::Async, 1);
+        let mut c = group.client();
+        for k in 0..6 {
+            c.init(k, vec![k as f32]);
+        }
+        for k in 0..6 {
+            assert_eq!(c.pull(k), vec![k as f32]);
+        }
+        group.shutdown();
+    }
+
+    #[test]
+    fn elastic1_on_server_moves_center() {
+        let group = ServerGroup::spawn(1, SyncMode::Async, 1);
+        let mut c = group.client();
+        c.init(0, vec![0.0, 0.0]); // center
+        c.set_optimizer(|| Box::new(Elastic1 { alpha: 0.5 }));
+        c.push(0, vec![4.0, -2.0]); // client weights
+        assert_eq!(c.pull(0), vec![2.0, -1.0]); // c + 0.5(w - c)
+        group.shutdown();
+    }
+
+    #[test]
+    fn initial_pull_without_push_answers_immediately() {
+        let group = ServerGroup::spawn(1, SyncMode::Sync, 4);
+        let mut c = group.client();
+        c.init(3, vec![7.0]);
+        assert_eq!(c.pull(3), vec![7.0]);
+        group.shutdown();
+    }
+
+    #[test]
+    fn scheduler_assigns_ranks_and_barriers() {
+        let sched = Scheduler::new(3, 1);
+        let hs: Vec<_> = (0..3)
+            .map(|_| {
+                let s = sched.handle();
+                thread::spawn(move || s.register(Role::Worker))
+            })
+            .chain(std::iter::once({
+                let s = sched.handle();
+                thread::spawn(move || 100 + s.register(Role::Server))
+            }))
+            .collect();
+        let mut ranks: Vec<usize> = hs.into_iter().map(|h| h.join().unwrap()).collect();
+        ranks.sort();
+        assert_eq!(ranks, vec![0, 1, 2, 100]);
+    }
+}

@@ -1,0 +1,334 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! This is the only place Python's output touches Rust: `make artifacts`
+//! lowers the L2/L1 JAX+Pallas stack to `artifacts/*.hlo.txt`; here we
+//! parse that text into an `HloModuleProto`, compile it on the PJRT CPU
+//! client and execute it from the training hot path. Text (never
+//! `.serialize()`d protos) is the interchange format — jax >= 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects, while the text
+//! parser reassigns ids.
+//!
+//! `PjRtClient` is `Rc`-backed (not `Send`), so multi-threaded users go
+//! through [`service::ModelService`], a dedicated thread that owns every
+//! executable (the "device service" — the analog of the GPUs all workers
+//! on a node share).
+
+pub mod service;
+
+use crate::jsonlite::{self, Value};
+use crate::tensor::{Segment, SegmentTable};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled HLO module ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+/// Typed input buffer for [`Executable::run`].
+pub enum Input<'a> {
+    F32(&'a [f32], &'a [i64]),
+    I32(&'a [i32], &'a [i64]),
+}
+
+impl Input<'_> {
+    /// Upload to a device buffer. We deliberately avoid
+    /// `PjRtLoadedExecutable::execute` (xla 0.1.6 leaks every input device
+    /// buffer it creates from host literals — `release()` without a
+    /// matching free in `xla_rs.cc::execute`); `buffer_from_host_buffer` +
+    /// `execute_b` keeps ownership on the Rust side, where `PjRtBuffer`'s
+    /// `Drop` frees it.
+    fn to_buffer(&self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
+        let dims_usize = |dims: &[i64]| dims.iter().map(|&d| d as usize).collect::<Vec<_>>();
+        Ok(match self {
+            Input::F32(data, dims) => {
+                client.buffer_from_host_buffer(data, &dims_usize(dims), None)?
+            }
+            Input::I32(data, dims) => {
+                client.buffer_from_host_buffer(data, &dims_usize(dims), None)?
+            }
+        })
+    }
+}
+
+impl Executable {
+    /// Execute with host inputs; returns the elements of the root tuple
+    /// (aot.py lowers everything with `return_tuple=True`).
+    pub fn run(&self, inputs: &[Input<'_>]) -> Result<Vec<xla::Literal>> {
+        let client = self.exe.client();
+        let bufs: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|i| i.to_buffer(client))
+            .collect::<Result<_>>()?;
+        let out = self.exe.execute_b::<xla::PjRtBuffer>(&bufs)?;
+        let root = out[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        Ok(root.to_tuple()?)
+    }
+}
+
+/// The PJRT CPU client + executable loader.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        Ok(Self { client: xla::PjRtClient::cpu()? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO text artifact.
+    pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable {
+            exe,
+            name: path
+                .file_name()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Model metadata (artifacts/meta.json)
+// ---------------------------------------------------------------------------
+
+/// Input batch for a model variant: dense features or token ids.
+#[derive(Debug, Clone)]
+pub enum XData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Parsed per-variant metadata from `meta.json`.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub variant: String,
+    pub params: usize,
+    pub x_shape: Vec<i64>,
+    pub x_dtype: String,
+    pub y_shape: Vec<i64>,
+    pub segments: SegmentTable,
+    pub artifacts: HashMap<String, String>,
+    /// The variant's Python-side config dict (vocab, hidden, classes, ...).
+    pub config: Value,
+    pub dir: PathBuf,
+}
+
+impl ModelMeta {
+    /// Load variant metadata from `artifacts/meta.json`.
+    pub fn load(artifacts_dir: &Path, variant: &str) -> Result<Self> {
+        let meta = jsonlite::parse_file(&artifacts_dir.join("meta.json"))?;
+        let v = meta
+            .req("variants")?
+            .get(variant)
+            .with_context(|| format!("variant {variant:?} not in meta.json"))?;
+        let shape = |spec: &Value| -> Result<Vec<i64>> {
+            Ok(spec
+                .req("shape")?
+                .as_arr()
+                .context("shape not array")?
+                .iter()
+                .map(|x| x.as_f64().unwrap_or(0.0) as i64)
+                .collect())
+        };
+        let segments = SegmentTable::new(
+            v.req("segments")?
+                .as_arr()
+                .context("segments not array")?
+                .iter()
+                .map(|s| -> Result<Segment> {
+                    Ok(Segment {
+                        name: s.req("name")?.as_str().context("name")?.to_string(),
+                        offset: s.req("offset")?.as_usize().context("offset")?,
+                        size: s.req("size")?.as_usize().context("size")?,
+                        shape: s
+                            .req("shape")?
+                            .as_arr()
+                            .context("shape")?
+                            .iter()
+                            .map(|x| x.as_usize().unwrap_or(0))
+                            .collect(),
+                    })
+                })
+                .collect::<Result<_>>()?,
+        );
+        segments.validate()?;
+        let artifacts = v
+            .req("artifacts")?
+            .as_obj()
+            .context("artifacts not object")?
+            .iter()
+            .map(|(k, val)| (k.clone(), val.as_str().unwrap_or("").to_string()))
+            .collect();
+        Ok(Self {
+            variant: variant.to_string(),
+            params: v.req("params")?.as_usize().context("params")?,
+            x_shape: shape(v.req("x")?)?,
+            x_dtype: v.req("x")?.req("dtype")?.as_str().context("dtype")?.to_string(),
+            y_shape: shape(v.req("y")?)?,
+            segments,
+            artifacts,
+            config: v.get("config").cloned().unwrap_or(Value::Null),
+            dir: artifacts_dir.to_path_buf(),
+        })
+    }
+
+    /// Numeric field of the variant config (e.g. "vocab", "classes").
+    pub fn config_num(&self, key: &str) -> Option<f64> {
+        self.config.get(key).and_then(|v| v.as_f64())
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.x_shape.first().copied().unwrap_or(0) as usize
+    }
+
+    pub fn artifact_path(&self, kind: &str) -> Result<PathBuf> {
+        let f = self
+            .artifacts
+            .get(kind)
+            .with_context(|| format!("artifact kind {kind:?} missing"))?;
+        Ok(self.dir.join(f))
+    }
+
+    /// Read the deterministic initial flat parameter vector.
+    pub fn init_params(&self) -> Result<Vec<f32>> {
+        let bytes = std::fs::read(self.artifact_path("init")?)?;
+        anyhow::ensure!(bytes.len() == self.params * 4, "init.bin size mismatch");
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Model: all executables of one variant, single-threaded
+// ---------------------------------------------------------------------------
+
+/// All compiled entry points for one model variant (single-thread use; see
+/// [`service::ModelService`] for the shared-thread version).
+pub struct Model {
+    pub meta: ModelMeta,
+    grad: Executable,
+    eval: Executable,
+    sgd: Executable,
+    elastic1: Executable,
+    elastic2: Executable,
+}
+
+impl Model {
+    pub fn load(rt: &Runtime, artifacts_dir: &Path, variant: &str) -> Result<Self> {
+        let meta = ModelMeta::load(artifacts_dir, variant)?;
+        Ok(Self {
+            grad: rt.load_hlo(&meta.artifact_path("grad")?)?,
+            eval: rt.load_hlo(&meta.artifact_path("eval")?)?,
+            sgd: rt.load_hlo(&meta.artifact_path("sgd")?)?,
+            elastic1: rt.load_hlo(&meta.artifact_path("elastic1")?)?,
+            elastic2: rt.load_hlo(&meta.artifact_path("elastic2")?)?,
+            meta,
+        })
+    }
+
+    fn x_input<'a>(&'a self, x: &'a XData) -> Result<Input<'a>> {
+        Ok(match x {
+            XData::F32(d) => {
+                anyhow::ensure!(self.meta.x_dtype == "float32", "x dtype mismatch");
+                Input::F32(d, &self.meta.x_shape)
+            }
+            XData::I32(d) => {
+                anyhow::ensure!(self.meta.x_dtype == "int32", "x dtype mismatch");
+                Input::I32(d, &self.meta.x_shape)
+            }
+        })
+    }
+
+    /// Forward+backward: returns (loss, flat gradients).
+    pub fn grad_step(&self, params: &[f32], x: &XData, y: &[i32]) -> Result<(f32, Vec<f32>)> {
+        let n = self.meta.params as i64;
+        let out = self.grad.run(&[
+            Input::F32(params, &[n]),
+            self.x_input(x)?,
+            Input::I32(y, &self.meta.y_shape),
+        ])?;
+        let loss = out[0].get_first_element::<f32>()?;
+        let grads = out[1].to_vec::<f32>()?;
+        Ok((loss, grads))
+    }
+
+    /// Evaluation: returns (loss, #correct predictions in batch).
+    pub fn eval_step(&self, params: &[f32], x: &XData, y: &[i32]) -> Result<(f32, i32)> {
+        let n = self.meta.params as i64;
+        let out = self.eval.run(&[
+            Input::F32(params, &[n]),
+            self.x_input(x)?,
+            Input::I32(y, &self.meta.y_shape),
+        ])?;
+        Ok((
+            out[0].get_first_element::<f32>()?,
+            out[1].get_first_element::<i32>()?,
+        ))
+    }
+
+    /// Fused SGD update via the compiled Pallas kernel:
+    /// `(w, m) <- sgd(hyper, w, g, m)`.
+    pub fn sgd_update(
+        &self,
+        w: &mut Vec<f32>,
+        g: &[f32],
+        m: &mut Vec<f32>,
+        hyper: &crate::optimizer::SgdHyper,
+    ) -> Result<()> {
+        let n = self.meta.params as i64;
+        let h = hyper.as_vec();
+        let out = self.sgd.run(&[
+            Input::F32(&h, &[4]),
+            Input::F32(w, &[n]),
+            Input::F32(g, &[n]),
+            Input::F32(m, &[n]),
+        ])?;
+        *w = out[0].to_vec::<f32>()?;
+        *m = out[1].to_vec::<f32>()?;
+        Ok(())
+    }
+
+    /// Server-side elastic update (eq. 2): `center <- elastic1(alpha, center, w)`.
+    pub fn elastic1(&self, center: &mut Vec<f32>, w: &[f32], alpha: f32) -> Result<()> {
+        let n = self.meta.params as i64;
+        let out = self.elastic1.run(&[
+            Input::F32(&[alpha], &[1]),
+            Input::F32(center, &[n]),
+            Input::F32(w, &[n]),
+        ])?;
+        *center = out[0].to_vec::<f32>()?;
+        Ok(())
+    }
+
+    /// Client-side elastic update (eq. 3): `w <- elastic2(alpha, w, center)`.
+    pub fn elastic2(&self, w: &mut Vec<f32>, center: &[f32], alpha: f32) -> Result<()> {
+        let n = self.meta.params as i64;
+        let out = self.elastic2.run(&[
+            Input::F32(&[alpha], &[1]),
+            Input::F32(w, &[n]),
+            Input::F32(center, &[n]),
+        ])?;
+        *w = out[0].to_vec::<f32>()?;
+        Ok(())
+    }
+}

@@ -1,0 +1,202 @@
+//! Thread-safe front-end to the (single-threaded) PJRT model.
+//!
+//! `PjRtClient` is not `Send`, so one dedicated thread owns the compiled
+//! executables and serves requests over a channel. Every worker thread
+//! holds a cloneable [`ModelHandle`]. On this 1-core testbed the service
+//! thread also faithfully models the paper's setup, where all DL workers of
+//! a node share its GPUs through a device queue.
+
+use super::{Model, ModelMeta, Runtime, XData};
+use crate::optimizer::SgdHyper;
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Sender};
+use std::thread::JoinHandle;
+
+enum Req {
+    Grad {
+        params: Vec<f32>,
+        x: XData,
+        y: Vec<i32>,
+        reply: Sender<Result<(f32, Vec<f32>)>>,
+    },
+    Eval {
+        params: Vec<f32>,
+        x: XData,
+        y: Vec<i32>,
+        reply: Sender<Result<(f32, i32)>>,
+    },
+    Sgd {
+        w: Vec<f32>,
+        g: Vec<f32>,
+        m: Vec<f32>,
+        hyper: SgdHyper,
+        reply: Sender<Result<(Vec<f32>, Vec<f32>)>>,
+    },
+    Elastic1 {
+        center: Vec<f32>,
+        w: Vec<f32>,
+        alpha: f32,
+        reply: Sender<Result<Vec<f32>>>,
+    },
+    Elastic2 {
+        w: Vec<f32>,
+        center: Vec<f32>,
+        alpha: f32,
+        reply: Sender<Result<Vec<f32>>>,
+    },
+    Shutdown,
+}
+
+/// Owns the PJRT thread; dropped last.
+pub struct ModelService {
+    tx: Sender<Req>,
+    pub meta: ModelMeta,
+    thread: Option<JoinHandle<()>>,
+}
+
+/// Cloneable handle used by worker threads.
+#[derive(Clone)]
+pub struct ModelHandle {
+    tx: Sender<Req>,
+    pub meta: ModelMeta,
+}
+
+impl ModelService {
+    /// Spawn the service thread, loading `variant` from `artifacts_dir`.
+    pub fn spawn(artifacts_dir: PathBuf, variant: &str) -> Result<Self> {
+        let (tx, rx) = channel::<Req>();
+        let (meta_tx, meta_rx) = channel::<Result<ModelMeta>>();
+        let variant = variant.to_string();
+        let thread = std::thread::Builder::new()
+            .name("pjrt-service".into())
+            .spawn(move || {
+                let model = (|| -> Result<Model> {
+                    let rt = Runtime::cpu()?;
+                    Model::load(&rt, &artifacts_dir, &variant)
+                })();
+                let model = match model {
+                    Ok(m) => {
+                        let _ = meta_tx.send(Ok(m.meta.clone()));
+                        m
+                    }
+                    Err(e) => {
+                        let _ = meta_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Req::Grad { params, x, y, reply } => {
+                            let _ = reply.send(model.grad_step(&params, &x, &y));
+                        }
+                        Req::Eval { params, x, y, reply } => {
+                            let _ = reply.send(model.eval_step(&params, &x, &y));
+                        }
+                        Req::Sgd { mut w, g, mut m, hyper, reply } => {
+                            let r = model
+                                .sgd_update(&mut w, &g, &mut m, &hyper)
+                                .map(|()| (w, m));
+                            let _ = reply.send(r);
+                        }
+                        Req::Elastic1 { mut center, w, alpha, reply } => {
+                            let r = model.elastic1(&mut center, &w, alpha).map(|()| center);
+                            let _ = reply.send(r);
+                        }
+                        Req::Elastic2 { mut w, center, alpha, reply } => {
+                            let r = model.elastic2(&mut w, &center, alpha).map(|()| w);
+                            let _ = reply.send(r);
+                        }
+                        Req::Shutdown => break,
+                    }
+                }
+            })?;
+        let meta = meta_rx
+            .recv()
+            .context("pjrt service thread died during load")??;
+        Ok(Self { tx, meta, thread: Some(thread) })
+    }
+
+    pub fn handle(&self) -> ModelHandle {
+        ModelHandle { tx: self.tx.clone(), meta: self.meta.clone() }
+    }
+}
+
+impl Drop for ModelService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Req::Shutdown);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl ModelHandle {
+    pub fn grad_step(&self, params: &[f32], x: XData, y: Vec<i32>) -> Result<(f32, Vec<f32>)> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Req::Grad { params: params.to_vec(), x, y, reply })
+            .context("pjrt service gone")?;
+        rx.recv().context("pjrt service dropped request")?
+    }
+
+    pub fn eval_step(&self, params: &[f32], x: XData, y: Vec<i32>) -> Result<(f32, i32)> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Req::Eval { params: params.to_vec(), x, y, reply })
+            .context("pjrt service gone")?;
+        rx.recv().context("pjrt service dropped request")?
+    }
+
+    /// `(w, m) <- fused_sgd(hyper, w, g, m)` on the service thread.
+    pub fn sgd_update(
+        &self,
+        w: &mut Vec<f32>,
+        g: &[f32],
+        m: &mut Vec<f32>,
+        hyper: &SgdHyper,
+    ) -> Result<()> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Req::Sgd {
+                w: std::mem::take(w),
+                g: g.to_vec(),
+                m: std::mem::take(m),
+                hyper: *hyper,
+                reply,
+            })
+            .context("pjrt service gone")?;
+        let (nw, nm) = rx.recv().context("pjrt service dropped request")??;
+        *w = nw;
+        *m = nm;
+        Ok(())
+    }
+
+    pub fn elastic1(&self, center: &mut Vec<f32>, w: &[f32], alpha: f32) -> Result<()> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Req::Elastic1 {
+                center: std::mem::take(center),
+                w: w.to_vec(),
+                alpha,
+                reply,
+            })
+            .context("pjrt service gone")?;
+        *center = rx.recv().context("pjrt service dropped request")??;
+        Ok(())
+    }
+
+    pub fn elastic2(&self, w: &mut Vec<f32>, center: &[f32], alpha: f32) -> Result<()> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Req::Elastic2 {
+                w: std::mem::take(w),
+                center: center.to_vec(),
+                alpha,
+                reply,
+            })
+            .context("pjrt service gone")?;
+        *w = rx.recv().context("pjrt service dropped request")??;
+        Ok(())
+    }
+}

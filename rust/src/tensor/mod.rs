@@ -1,0 +1,255 @@
+//! Flat f32 buffers, KVStore segments and the paper's *node tensor*.
+//!
+//! MXNET expresses parameters/gradients as per-layer `ndarray`s keyed in the
+//! KVStore (§3.2). We keep the model's parameters as one flat `f32` vector
+//! (the AOT artifacts' calling convention) plus a [`SegmentTable`] mapping
+//! each KVStore key to its slice — so the Rust side sees per-layer keys
+//! exactly like MXNET while the compiled HLO sees one vector.
+//!
+//! [`NodeTensor`] is the paper's §6.1 "tensor": the *group of per-GPU
+//! vectors on one node*, treated as a single object by the tensor
+//! collectives.
+
+
+
+/// A named slice of the flat parameter vector — one KVStore key.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Segment {
+    pub name: String,
+    pub offset: usize,
+    pub size: usize,
+    pub shape: Vec<usize>,
+}
+
+/// Per-layer key -> slice mapping, loaded from `artifacts/meta.json`.
+#[derive(Debug, Clone, Default)]
+pub struct SegmentTable {
+    pub segments: Vec<Segment>,
+}
+
+impl SegmentTable {
+    pub fn new(segments: Vec<Segment>) -> Self {
+        Self { segments }
+    }
+
+    /// Total flat length covered by the table.
+    pub fn total_size(&self) -> usize {
+        self.segments.last().map(|s| s.offset + s.size).unwrap_or(0)
+    }
+
+    pub fn len(&self) -> usize {
+        self.segments.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.segments.is_empty()
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&Segment> {
+        self.segments.iter().find(|s| s.name == name)
+    }
+
+    /// Slice a flat vector by key index.
+    pub fn slice<'a>(&self, flat: &'a [f32], key: usize) -> &'a [f32] {
+        let s = &self.segments[key];
+        &flat[s.offset..s.offset + s.size]
+    }
+
+    pub fn slice_mut<'a>(&self, flat: &'a mut [f32], key: usize) -> &'a mut [f32] {
+        let s = &self.segments[key];
+        &mut flat[s.offset..s.offset + s.size]
+    }
+
+    /// Validate invariants: contiguous, non-overlapping, sizes match shapes.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let mut off = 0;
+        for s in &self.segments {
+            anyhow::ensure!(s.offset == off, "segment {} not contiguous", s.name);
+            let prod: usize = s.shape.iter().product();
+            anyhow::ensure!(prod == s.size, "segment {} size/shape mismatch", s.name);
+            off += s.size;
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Elementwise f32 math on flat buffers (the host-memory reduction path).
+// ---------------------------------------------------------------------------
+
+/// dst += src (the ring-step reduction on host memory).
+pub fn add_assign(dst: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d += s;
+    }
+}
+
+/// dst = a * x + dst.
+pub fn axpy(dst: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(dst.len(), x.len());
+    for (d, s) in dst.iter_mut().zip(x) {
+        *d += a * s;
+    }
+}
+
+/// dst *= a.
+pub fn scale(dst: &mut [f32], a: f32) {
+    for d in dst.iter_mut() {
+        *d *= a;
+    }
+}
+
+/// Euclidean norm.
+pub fn l2(xs: &[f32]) -> f64 {
+    xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+}
+
+/// Max absolute difference between two buffers.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+// ---------------------------------------------------------------------------
+// NodeTensor — the paper's §6.1 group-of-vectors object.
+// ---------------------------------------------------------------------------
+
+/// The group of per-device vectors on one node, treated as a single object.
+///
+/// In the paper each Minsky socket contributes 2 GPUs; the tensor collective
+/// reduces/broadcasts *all* vectors of a node as one unit, using the
+/// intra-node links (NVLink there, the AOT `tensor_reduce` kernel here).
+#[derive(Debug, Clone)]
+pub struct NodeTensor {
+    pub vecs: Vec<Vec<f32>>,
+}
+
+impl NodeTensor {
+    pub fn new(devices: usize, len: usize) -> Self {
+        Self {
+            vecs: vec![vec![0.0; len]; devices],
+        }
+    }
+
+    pub fn from_vecs(vecs: Vec<Vec<f32>>) -> Self {
+        assert!(!vecs.is_empty());
+        let len = vecs[0].len();
+        assert!(vecs.iter().all(|v| v.len() == len), "ragged node tensor");
+        Self { vecs }
+    }
+
+    pub fn devices(&self) -> usize {
+        self.vecs.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.vecs.first().map(|v| v.len()).unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Intra-node reduction: sum all device vectors into a host buffer.
+    /// (The IBMGpu/NCCL kernel of §7.3; here plain f32 math — the compiled
+    /// `tensor_reduce` HLO kernel is used on the training path instead.)
+    pub fn reduce_to_host(&self) -> Vec<f32> {
+        let mut out = self.vecs[0].clone();
+        for v in &self.vecs[1..] {
+            add_assign(&mut out, v);
+        }
+        out
+    }
+
+    /// Intra-node broadcast: copy a host buffer to every device vector.
+    pub fn broadcast_from_host(&mut self, host: &[f32]) {
+        for v in self.vecs.iter_mut() {
+            v.copy_from_slice(host);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> SegmentTable {
+        SegmentTable::new(vec![
+            Segment { name: "a".into(), offset: 0, size: 6, shape: vec![2, 3] },
+            Segment { name: "b".into(), offset: 6, size: 4, shape: vec![4] },
+        ])
+    }
+
+    #[test]
+    fn segment_table_total_and_lookup() {
+        let t = table();
+        assert_eq!(t.total_size(), 10);
+        assert_eq!(t.by_name("b").unwrap().offset, 6);
+        assert!(t.by_name("zz").is_none());
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn segment_slicing() {
+        let t = table();
+        let mut flat: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        assert_eq!(t.slice(&flat, 1), &[6.0, 7.0, 8.0, 9.0]);
+        t.slice_mut(&mut flat, 0)[0] = 99.0;
+        assert_eq!(flat[0], 99.0);
+    }
+
+    #[test]
+    fn validate_rejects_gap() {
+        let t = SegmentTable::new(vec![Segment {
+            name: "a".into(),
+            offset: 4,
+            size: 2,
+            shape: vec![2],
+        }]);
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_shape_mismatch() {
+        let t = SegmentTable::new(vec![Segment {
+            name: "a".into(),
+            offset: 0,
+            size: 5,
+            shape: vec![2, 3],
+        }]);
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn elementwise_math() {
+        let mut d = vec![1.0, 2.0];
+        add_assign(&mut d, &[3.0, 4.0]);
+        assert_eq!(d, vec![4.0, 6.0]);
+        axpy(&mut d, 0.5, &[2.0, 2.0]);
+        assert_eq!(d, vec![5.0, 7.0]);
+        scale(&mut d, 2.0);
+        assert_eq!(d, vec![10.0, 14.0]);
+        assert!((l2(&[3.0, 4.0]) - 5.0).abs() < 1e-9);
+        assert_eq!(max_abs_diff(&[1.0, 5.0], &[2.0, 3.0]), 2.0);
+    }
+
+    #[test]
+    fn node_tensor_reduce_and_broadcast() {
+        let mut t = NodeTensor::from_vecs(vec![vec![1.0, 2.0], vec![10.0, 20.0]]);
+        assert_eq!(t.reduce_to_host(), vec![11.0, 22.0]);
+        t.broadcast_from_host(&[7.0, 8.0]);
+        assert_eq!(t.vecs[0], vec![7.0, 8.0]);
+        assert_eq!(t.vecs[1], vec![7.0, 8.0]);
+        assert_eq!(t.devices(), 2);
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn node_tensor_rejects_ragged() {
+        NodeTensor::from_vecs(vec![vec![1.0], vec![1.0, 2.0]]);
+    }
+}

@@ -1,0 +1,58 @@
+//! Distributed SGD trainers (paper §5).
+//!
+//! Two execution planes share the same algorithm semantics:
+//!
+//! * [`threaded`] — the *deployable framework*: real PS server threads,
+//!   real simulated-MPI clients, the KVStore-MPI API over the dependency
+//!   engine, gradients through PJRT. Wall-clock timing. This is what the
+//!   quickstart / e2e examples run.
+//! * [`sim`] — the *paper-figure plane*: identical algorithm semantics and
+//!   identical (real) gradient numerics, but the time axis is the
+//!   [`netsim`](crate::netsim) virtual clock with the paper's testbed
+//!   α-β-γ constants, so Figs 11–14/16 regenerate deterministically on
+//!   hardware the paper's cluster does not resemble.
+
+pub mod sim;
+pub mod threaded;
+
+use crate::runtime::XData;
+
+/// First sample index of the held-out validation shard. Training shards
+/// draw from [0, samples_per_epoch); validation draws from here up — same
+/// generative distribution, guaranteed-disjoint samples.
+pub const EVAL_OFFSET: u64 = 1 << 40;
+
+/// Batch provider shared by both trainers: synthetic Gaussian-mixture
+/// images (f32 models) or the tiny token corpus (i32 models).
+pub enum TrainData {
+    Gaussian(crate::data::GaussianMixture),
+    Corpus { corpus: crate::data::TinyCorpus, seq: usize },
+}
+
+impl TrainData {
+    /// Build from a model's metadata + experiment config.
+    pub fn for_model(meta: &crate::runtime::ModelMeta, noise: f32, classes: usize, seed: u64) -> Self {
+        if meta.x_dtype == "int32" {
+            let vocab = meta.config_num("vocab").unwrap_or(64.0) as usize;
+            let seq = meta.x_shape[1] as usize;
+            TrainData::Corpus { corpus: crate::data::TinyCorpus::new(vocab, seed), seq }
+        } else {
+            let dim = meta.x_shape[1] as usize;
+            TrainData::Gaussian(crate::data::GaussianMixture::new(dim, classes, noise, seed))
+        }
+    }
+
+    /// Materialize the batch starting at sample index `start`.
+    pub fn batch(&self, start: u64, batch: usize) -> (XData, Vec<i32>) {
+        match self {
+            TrainData::Gaussian(g) => {
+                let b = g.batch(start, batch);
+                (XData::F32(b.x), b.y)
+            }
+            TrainData::Corpus { corpus, seq } => {
+                let (x, y) = corpus.batch_tokens(start, batch, *seq);
+                (XData::I32(x), y)
+            }
+        }
+    }
+}

@@ -1,0 +1,279 @@
+//! The deployable threaded trainer: §5's three algorithms over the real
+//! KVStore-MPI stack (launcher -> scheduler/servers/MPI clients -> engine
+//! -> PJRT).
+//!
+//! Faithful to the paper's pseudo-code:
+//!
+//! * **SGD** (Fig. 6): push per-key gradients, pull the *aggregated
+//!   gradient* back (server runs `Assign`), `SGD.Update` locally with
+//!   `rescale = 1/mini_batch_size`. MPI modes pre-aggregate inside the
+//!   client ring, and only masters talk to the PS.
+//! * **ASGD** (Fig. 7): `set_optimizer(SGD, rescale)` ships the update to
+//!   the server; workers push gradients and pull *parameters*.
+//! * **ESGD** (Fig. 8): server runs `Elastic1` on pushed *weights*; every
+//!   `INTERVAL` iterations the worker pushes params, pulls centers and
+//!   applies `Elastic2`; plain SGD locally in between.
+
+use crate::config::{Algo, ExperimentConfig};
+use crate::launcher::{launch, JobSpec, WorkerCtx};
+use crate::metrics::{EpochRecord, RunResult};
+use crate::optimizer::{Assign, Elastic1, Sgd, SgdHyper};
+use crate::runtime::service::{ModelHandle, ModelService};
+use crate::tensor::SegmentTable;
+use crate::trainer::TrainData;
+use anyhow::Result;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Train with the given config on the threaded stack; returns per-epoch
+/// records (wall-clock time axis) as measured on worker 0.
+pub fn train(cfg: &ExperimentConfig, artifacts_dir: PathBuf) -> Result<RunResult> {
+    let service = ModelService::spawn(artifacts_dir, &cfg.variant)?;
+    let spec = JobSpec::from_algo(cfg.algo, cfg.workers, cfg.servers, cfg.clients);
+    let cfg = Arc::new(cfg.clone());
+    let handle = service.handle();
+
+    let cfg2 = cfg.clone();
+    let results = launch(&spec, move |ctx| {
+        worker_loop(&cfg2, handle.clone(), ctx)
+    });
+
+    // Worker 0 carries the validation records.
+    let records = results.into_iter().next().unwrap()?;
+    Ok(RunResult::finish(cfg.algo.name(), records))
+}
+
+/// Per-key slices of a flat vector, in key order.
+fn split_keys(segs: &SegmentTable, flat: &[f32]) -> Vec<Vec<f32>> {
+    (0..segs.len()).map(|k| segs.slice(flat, k).to_vec()).collect()
+}
+
+fn join_keys(segs: &SegmentTable, parts: &[Vec<f32>], flat: &mut [f32]) {
+    for (k, part) in parts.iter().enumerate() {
+        segs.slice_mut(flat, k).copy_from_slice(part);
+    }
+}
+
+fn worker_loop(
+    cfg: &ExperimentConfig,
+    model: ModelHandle,
+    ctx: WorkerCtx,
+) -> Result<Vec<EpochRecord>> {
+    let meta = model.meta.clone();
+    let segs = meta.segments.clone();
+    let n_keys = segs.len();
+    let data = TrainData::for_model(&meta, cfg.noise, cfg.classes, cfg.seed);
+    let batch = meta.batch_size();
+
+    // --- Init: PS rank 0 initializes every key; pure MPI broadcasts.
+    let mut w = meta.init_params()?;
+    let is_root = ctx.ps_rank == 0;
+    let init_parts = split_keys(&segs, &w);
+    match cfg.algo {
+        Algo::DistSgd | Algo::MpiSgd => {
+            // Keys hold aggregated gradients (Fig. 6): init zeros.
+            for k in 0..n_keys {
+                ctx.kv.init(k, vec![0.0; segs.segments[k].size], is_root);
+            }
+            if is_root {
+                ctx.kv.set_optimizer(|| Box::new(Assign));
+            }
+        }
+        Algo::DistAsgd | Algo::MpiAsgd => {
+            // Keys hold parameters; server runs the shipped SGD (Fig. 7).
+            // Each push is one client's aggregate of `workers_per_client`
+            // per-batch *mean* gradients, so the server rescales by the
+            // worker count it aggregates (§5: 1/mini_batch_size, with our
+            // gradients already averaged over the batch dimension).
+            for (k, part) in init_parts.iter().enumerate() {
+                ctx.kv.init(k, part.clone(), is_root);
+            }
+            if is_root {
+                // Fig. 7 ships plain SGD: with several clients updating
+                // asynchronously, momentum would compound their (stale)
+                // gradients and diverge.
+                // lr is divided by the client count so the *aggregate*
+                // async step rate matches the synchronous one (standard
+                // async-SGD stabilization).
+                let hyper = SgdHyper {
+                    lr: cfg.lr / cfg.clients as f32,
+                    momentum: 0.0,
+                    weight_decay: cfg.weight_decay,
+                    rescale: 1.0 / cfg.workers_per_client() as f32,
+                };
+                ctx.kv.set_optimizer(move || Box::new(Sgd::new(hyper)));
+            }
+        }
+        Algo::DistEsgd | Algo::MpiEsgd => {
+            // Keys hold center variables (Fig. 8).
+            for (k, part) in init_parts.iter().enumerate() {
+                ctx.kv.init(k, part.clone(), is_root);
+            }
+            if is_root {
+                let alpha = cfg.alpha;
+                ctx.kv.set_optimizer(move || Box::new(Elastic1 { alpha }));
+            }
+        }
+    }
+
+    let shard = crate::data::Shard {
+        worker: ctx.ps_rank,
+        n_workers: ctx.n_workers,
+        total: cfg.samples_per_epoch,
+        batch,
+        epoch: 0,
+    };
+    let batches = shard.batches_per_epoch().max(1);
+    // Our gradients are per-batch *means*, so the local rescale divides by
+    // the number of workers whose gradients were aggregated before the
+    // update (§5's 1/mini_batch_size in sample terms).
+    let aggregated_workers = match cfg.algo {
+        Algo::DistSgd | Algo::MpiSgd => cfg.workers,
+        Algo::MpiEsgd => cfg.workers_per_client(),
+        _ => 1,
+    };
+    // Momentum is used only by the synchronous modes (Fig. 6's local
+    // SGD.Update on the exact aggregated gradient); ESGD's local updates
+    // follow Fig. 8's plain SGD.
+    let local_momentum = match cfg.algo {
+        Algo::DistSgd | Algo::MpiSgd => cfg.momentum,
+        _ => 0.0,
+    };
+    let local_hyper = SgdHyper {
+        lr: cfg.lr,
+        momentum: local_momentum,
+        weight_decay: cfg.weight_decay,
+        rescale: 1.0 / aggregated_workers as f32,
+    };
+    let mut momentum = vec![0.0f32; meta.params];
+    let mut records = Vec::new();
+    let start = Instant::now();
+    let mut iter = 0usize;
+
+    for epoch in 0..cfg.epochs {
+        let mut shard = shard.clone();
+        shard.epoch = epoch as u64;
+        let mut train_loss_sum = 0.0f64;
+        for b in 0..batches {
+            let (x, y) = data.batch(shard.batch_start(b), batch);
+            let (loss, grads) = model.grad_step(&w, x, y)?;
+            train_loss_sum += loss as f64;
+
+            match cfg.algo {
+                Algo::DistSgd | Algo::MpiSgd => {
+                    // Fig. 6: push grads per key, pull aggregated grads.
+                    // With no servers, PushPull degrades to the pure-MPI
+                    // tensor allreduce (§4.2.4).
+                    let parts = split_keys(&segs, &grads);
+                    let agg: Vec<Vec<f32>> = if cfg.servers == 0 {
+                        let pend: Vec<_> = parts
+                            .into_iter()
+                            .enumerate()
+                            .map(|(k, part)| ctx.kv.pushpull(k, part))
+                            .collect();
+                        pend.into_iter().map(|p| p.wait()).collect()
+                    } else {
+                        for (k, part) in parts.into_iter().enumerate() {
+                            ctx.kv.push(k, part);
+                        }
+                        let pulls: Vec<_> = (0..n_keys).map(|k| ctx.kv.pull(k)).collect();
+                        pulls.into_iter().map(|p| p.wait()).collect()
+                    };
+                    let mut g_sum = vec![0.0f32; meta.params];
+                    join_keys(&segs, &agg, &mut g_sum);
+                    model.sgd_update(&mut w, &g_sum, &mut momentum, &local_hyper)?;
+                }
+                Algo::DistAsgd | Algo::MpiAsgd => {
+                    // Fig. 7: push grads, pull params.
+                    let parts = split_keys(&segs, &grads);
+                    for (k, part) in parts.into_iter().enumerate() {
+                        ctx.kv.push(k, part);
+                    }
+                    let pulls: Vec<_> = (0..n_keys).map(|k| ctx.kv.pull(k)).collect();
+                    let parts: Vec<Vec<f32>> = pulls.into_iter().map(|p| p.wait()).collect();
+                    join_keys(&segs, &parts, &mut w);
+                }
+                Algo::DistEsgd | Algo::MpiEsgd => {
+                    // Fig. 8. For MPI clients, keep replicas in lockstep by
+                    // averaging gradients inside the client each iteration
+                    // (sync SGD within the communicator, §5) — pushpull on
+                    // a pure-MPI kvstore is the allreduce; with servers we
+                    // reuse pushpull composition only at INTERVALs, so the
+                    // intra-client allreduce here goes through the comm.
+                    let mut g = grads;
+                    if cfg.algo == Algo::MpiEsgd && ctx.workers_per_client > 1 {
+                        // Aggregate inside the client (ring allreduce).
+                        g = ctx.kv.client_allreduce(g).wait();
+                    }
+                    model.sgd_update(&mut w, &g, &mut momentum, &local_hyper)?;
+                    if iter % cfg.interval == 0 {
+                        // Push params (Fig. 8 l.10). The MPI kvstore's push
+                        // ring-SUMS across the client; replicas are kept in
+                        // lockstep, so pre-scale by 1/m to push the client
+                        // average (= w) rather than m*w.
+                        let scale = 1.0 / ctx.workers_per_client as f32;
+                        let mut w_avg = w.clone();
+                        crate::tensor::scale(&mut w_avg, scale);
+                        let parts = split_keys(&segs, &w_avg);
+                        for (k, part) in parts.into_iter().enumerate() {
+                            ctx.kv.push(k, part);
+                        }
+                        let pulls: Vec<_> = (0..n_keys).map(|k| ctx.kv.pull(k)).collect();
+                        let centers: Vec<Vec<f32>> =
+                            pulls.into_iter().map(|p| p.wait()).collect();
+                        let mut c = vec![0.0f32; meta.params];
+                        join_keys(&segs, &centers, &mut c);
+                        model.elastic2(&mut w, &c, cfg.alpha)?; // Fig. 8 l.12
+                    }
+                }
+            }
+            iter += 1;
+        }
+
+        // Validation on worker 0 (paper: after every epoch).
+        if ctx.ps_rank == 0 {
+            let (vl, va) = evaluate(cfg, &model, &data, &w)?;
+            records.push(EpochRecord {
+                epoch,
+                vtime: start.elapsed().as_secs_f64(),
+                train_loss: train_loss_sum / batches as f64,
+                val_loss: vl,
+                val_acc: va,
+            });
+        }
+    }
+    ctx.kv.wait_all();
+    Ok(records)
+}
+
+/// Validation loss/accuracy over `cfg.eval_samples` held-out samples.
+///
+/// Same distribution as training (same mixture centers / successor
+/// table), disjoint sample indices: the held-out shard lives past
+/// [`crate::trainer::EVAL_OFFSET`].
+pub fn evaluate(
+    cfg: &ExperimentConfig,
+    model: &ModelHandle,
+    data: &TrainData,
+    w: &[f32],
+) -> Result<(f64, f64)> {
+    let batch = model.meta.batch_size();
+    let n_batches = (cfg.eval_samples as usize / batch).max(1);
+    let mut loss = 0.0f64;
+    let mut correct = 0i64;
+    let mut total = 0i64;
+    let per = match data {
+        TrainData::Gaussian(_) => 1,
+        TrainData::Corpus { seq, .. } => *seq as i64,
+    };
+    for b in 0..n_batches {
+        let start = crate::trainer::EVAL_OFFSET + (b * batch) as u64;
+        let (x, y) = data.batch(start, batch);
+        let (l, c) = model.eval_step(w, x, y)?;
+        loss += l as f64;
+        correct += c as i64;
+        total += batch as i64 * per;
+    }
+    Ok((loss / n_batches as f64, correct as f64 / total as f64))
+}

@@ -1,0 +1,234 @@
+//! Property-based tests (own harness: the offline build has no proptest).
+//!
+//! Each property runs `CASES` random cases from the deterministic
+//! SplitMix64 generator; a failing case prints its seed so it can be
+//! replayed by fixing the loop index.
+
+use mxnet_mpi::collectives::{chunk_bounds, multi_ring_allreduce, ring_allreduce};
+use mxnet_mpi::engine::Engine;
+use mxnet_mpi::jsonlite::{self, Value};
+use mxnet_mpi::mpisim::{Comm, World};
+use mxnet_mpi::util::Rng;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+const CASES: u64 = 40;
+
+fn run_world<F, R>(size: usize, f: F) -> Vec<R>
+where
+    F: Fn(Comm) -> R + Clone + Send + 'static,
+    R: Send + 'static,
+{
+    let comms = World::create(size);
+    let hs: Vec<_> = comms
+        .into_iter()
+        .map(|c| {
+            let f = f.clone();
+            thread::spawn(move || f(c))
+        })
+        .collect();
+    hs.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+/// Property: bucket ring allreduce == the naive gather-reduce-bcast
+/// allreduce, for random rank counts, lengths and payloads.
+#[test]
+fn prop_ring_allreduce_equals_naive() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(0xA11CE ^ case);
+        let p = 1 + rng.below(6) as usize;
+        let len = rng.below(300) as usize;
+        let rings = 1 + rng.below(4) as usize;
+        // Integer-valued payloads: f32 sums are exact, so equality is
+        // bitwise regardless of reduction order.
+        let payload = move |rank: usize| -> Vec<f32> {
+            let mut r = Rng::new(case * 1000 + rank as u64);
+            (0..len).map(|_| (r.below(201) as i64 - 100) as f32).collect()
+        };
+        let ring = run_world(p, move |mut c| {
+            let mut d = payload(c.rank());
+            multi_ring_allreduce(&mut c, &mut d, rings);
+            d
+        });
+        let naive = run_world(p, move |mut c| {
+            let mut d = payload(c.rank());
+            c.allreduce_naive(&mut d);
+            d
+        });
+        assert_eq!(ring, naive, "case {case} p={p} len={len} rings={rings}");
+    }
+}
+
+/// Property: repeated collectives on the same comm never cross-talk.
+#[test]
+fn prop_repeated_collectives_consistent() {
+    for case in 0..CASES / 4 {
+        let mut rng = Rng::new(0xBEEF ^ case);
+        let p = 2 + rng.below(4) as usize;
+        let iters = 1 + rng.below(5) as usize;
+        let out = run_world(p, move |mut c| {
+            let mut acc = Vec::new();
+            for i in 0..iters {
+                let mut d = vec![(c.rank() + i) as f32; 7];
+                ring_allreduce(&mut c, &mut d);
+                acc.push(d[0]);
+            }
+            acc
+        });
+        for i in 0..iters {
+            let expect: f32 = (0..p).map(|r| (r + i) as f32).sum();
+            for o in &out {
+                assert_eq!(o[i], expect, "case {case} iter {i}");
+            }
+        }
+    }
+}
+
+/// Property: chunk_bounds is a partition for any (len, p).
+#[test]
+fn prop_chunk_bounds_partition() {
+    for case in 0..CASES * 10 {
+        let mut rng = Rng::new(case);
+        let len = rng.below(10_000) as usize;
+        let p = 1 + rng.below(64) as usize;
+        let mut prev = 0;
+        let mut sizes = Vec::new();
+        for i in 0..p {
+            let (s, e) = chunk_bounds(len, p, i);
+            assert_eq!(s, prev);
+            assert!(e >= s);
+            sizes.push(e - s);
+            prev = e;
+        }
+        assert_eq!(prev, len);
+        // Near-equal: max-min <= 1.
+        let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+        assert!(mx - mn <= 1);
+    }
+}
+
+/// Property: the engine serializes mutations per var in push order, for
+/// random dependency graphs.
+#[test]
+fn prop_engine_mutation_order_per_var() {
+    for case in 0..CASES / 2 {
+        let mut rng = Rng::new(0xE16 ^ case);
+        let threads = 1 + rng.below(4) as usize;
+        let n_vars = 1 + rng.below(6) as usize;
+        let n_ops = 50 + rng.below(100) as usize;
+        let e = Engine::new(threads);
+        let vars: Vec<_> = (0..n_vars).map(|_| e.new_var()).collect();
+        let logs: Vec<Arc<Mutex<Vec<usize>>>> =
+            (0..n_vars).map(|_| Arc::new(Mutex::new(Vec::new()))).collect();
+        let mut expected: Vec<Vec<usize>> = vec![Vec::new(); n_vars];
+        for op in 0..n_ops {
+            let m = rng.below(n_vars as u64) as usize;
+            let r = rng.below(n_vars as u64) as usize;
+            expected[m].push(op);
+            let log = logs[m].clone();
+            e.push(move || log.lock().unwrap().push(op), &[vars[r]], &[vars[m]]);
+        }
+        e.wait_all();
+        for v in 0..n_vars {
+            assert_eq!(*logs[v].lock().unwrap(), expected[v], "case {case} var {v}");
+        }
+    }
+}
+
+/// Property: jsonlite round-trips random values exactly.
+#[test]
+fn prop_jsonlite_roundtrip() {
+    fn gen(rng: &mut Rng, depth: usize) -> Value {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Value::Null,
+            1 => Value::Bool(rng.below(2) == 1),
+            2 => Value::Num((rng.below(2_000_001) as i64 - 1_000_000) as f64 / 64.0),
+            3 => {
+                let n = rng.below(12) as usize;
+                Value::Str(
+                    (0..n)
+                        .map(|_| {
+                            let c = rng.below(96) as u8 + 32;
+                            c as char
+                        })
+                        .collect(),
+                )
+            }
+            4 => Value::Arr((0..rng.below(5)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => Value::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for case in 0..CASES * 5 {
+        let mut rng = Rng::new(0x15A ^ case);
+        let v = gen(&mut rng, 3);
+        for text in [v.to_json(), v.to_json_pretty()] {
+            let back = jsonlite::parse(&text).unwrap_or_else(|e| {
+                panic!("case {case}: parse failed: {e}\n{text}")
+            });
+            assert_eq!(back, v, "case {case}");
+        }
+    }
+}
+
+/// Property: PS sync rounds compute exactly sum-of-pushes regardless of
+/// worker interleaving (threads race freely).
+#[test]
+fn prop_ps_sync_round_exact() {
+    use mxnet_mpi::optimizer::{Sgd, SgdHyper};
+    use mxnet_mpi::ps::{ServerGroup, SyncMode};
+    for case in 0..CASES / 4 {
+        let mut rng = Rng::new(0x95 ^ case);
+        let workers = 2 + rng.below(5) as usize;
+        let rounds = 1 + rng.below(4) as usize;
+        let group = ServerGroup::spawn(1 + rng.below(3) as usize, SyncMode::Sync, workers);
+        let c0 = group.client();
+        c0.init(0, vec![0.0]);
+        c0.set_optimizer(|| Box::new(Sgd::new(SgdHyper::plain(1.0, 1.0))));
+        let hs: Vec<_> = (0..workers)
+            .map(|w| {
+                let mut c = group.client();
+                thread::spawn(move || {
+                    let mut last = 0.0;
+                    for _ in 0..rounds {
+                        c.push(0, vec![(w + 1) as f32]);
+                        last = c.pull(0)[0];
+                    }
+                    last
+                })
+            })
+            .collect();
+        let per_round: f32 = (1..=workers).map(|w| w as f32).sum();
+        let finals: Vec<f32> = hs.into_iter().map(|h| h.join().unwrap()).collect();
+        // Every worker's final pull reflects at least its own last round
+        // and at most the global last round.
+        for f in finals {
+            assert_eq!(f, -per_round * rounds as f32, "case {case}");
+        }
+        group.shutdown();
+    }
+}
+
+/// Property: Gaussian-mixture data is bitwise reproducible and batches
+/// agree with per-sample materialization.
+#[test]
+fn prop_data_batches_match_samples() {
+    use mxnet_mpi::data::GaussianMixture;
+    for case in 0..CASES {
+        let mut rng = Rng::new(0xDA7A ^ case);
+        let dim = 1 + rng.below(32) as usize;
+        let classes = 1 + rng.below(8) as usize;
+        let d = GaussianMixture::new(dim, classes, 0.7, case);
+        let start = rng.below(1000);
+        let b = d.batch(start, 5);
+        for i in 0..5 {
+            let mut x = vec![0.0; dim];
+            let y = d.sample(start + i as u64, &mut x);
+            assert_eq!(&b.x[i * dim..(i + 1) * dim], &x[..], "case {case}");
+            assert_eq!(b.y[i], y);
+        }
+    }
+}

@@ -1,0 +1,118 @@
+//! End-to-end training: the full stack on the transformer LM, plus
+//! virtual-time plane determinism and paper-shape checks.
+
+use mxnet_mpi::config::{Algo, ExperimentConfig};
+use std::path::PathBuf;
+
+fn artifacts() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[test]
+fn transformer_lm_trains_end_to_end_pure_mpi() {
+    // 2 workers, one MPI client, no servers: pushpull == allreduce.
+    let mut cfg = ExperimentConfig::testbed1(Algo::MpiSgd);
+    cfg.variant = "transformer_tiny".into();
+    cfg.workers = 2;
+    cfg.clients = 1;
+    cfg.servers = 0;
+    cfg.epochs = 3;
+    cfg.samples_per_epoch = 2 * 10 * 4; // 10 batches per worker per epoch
+    cfg.lr = 0.4; // plain SGD (no momentum): a small LM needs a hot lr
+
+    cfg.eval_samples = 32;
+    let run = mxnet_mpi::trainer::threaded::train(&cfg, artifacts()).unwrap();
+    let first = run.records.first().unwrap().train_loss;
+    let last = run.records.last().unwrap().train_loss;
+    // Uniform loss = ln(64) ~ 4.16; the corpus has ~2 bits of conditional
+    // entropy, so the loss must fall measurably within 3 epochs.
+    assert!(first > 3.0, "init loss {first}");
+    assert!(last < first - 0.3, "loss {first} -> {last}");
+}
+
+#[test]
+fn sim_plane_is_deterministic() {
+    let mut cfg = ExperimentConfig::testbed1(Algo::MpiEsgd);
+    cfg.variant = "mlp_tiny".into();
+    cfg.workers = 4;
+    cfg.clients = 2;
+    cfg.servers = 1;
+    cfg.epochs = 2;
+    cfg.samples_per_epoch = 4 * 4 * 8;
+    cfg.classes = 4;
+        cfg.noise = 1.0;
+    let a = mxnet_mpi::trainer::sim::simulate(&cfg, &artifacts()).unwrap();
+    let b = mxnet_mpi::trainer::sim::simulate(&cfg, &artifacts()).unwrap();
+    assert_eq!(a.records.len(), b.records.len());
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(ra.vtime, rb.vtime);
+        assert_eq!(ra.train_loss, rb.train_loss);
+        assert_eq!(ra.val_acc, rb.val_acc);
+    }
+}
+
+#[test]
+fn paper_shape_mpi_modes_faster_per_epoch() {
+    // Fig. 12 shape at reduced scale: MPI grouping beats pure PS on epoch
+    // time for both SGD and ASGD.
+    let runs: Vec<_> = [Algo::DistSgd, Algo::MpiSgd, Algo::DistAsgd, Algo::MpiAsgd]
+        .into_iter()
+        .map(|algo| {
+            let mut cfg = ExperimentConfig::testbed1(algo);
+            cfg.variant = "mlp_tiny".into();
+            cfg.epochs = 1;
+            cfg.samples_per_epoch = 12 * 4 * 8;
+            cfg.classes = 4;
+        cfg.noise = 1.0;
+            mxnet_mpi::trainer::sim::simulate(&cfg, &artifacts()).unwrap()
+        })
+        .collect();
+    let t = |i: usize| runs[i].avg_epoch_time;
+    assert!(t(1) < t(0) / 2.0, "mpi-SGD {} !<< dist-SGD {}", t(1), t(0));
+    assert!(t(3) < t(2) / 2.0, "mpi-ASGD {} !<< dist-ASGD {}", t(3), t(2));
+}
+
+#[test]
+fn paper_shape_fewer_clients_reduce_staleness() {
+    // §2.3 / Fig. 11: grouping async workers into fewer MPI clients
+    // reduces parameter staleness — mpi-ASGD (2 clients of 6) must not
+    // converge worse than dist-ASGD (12 one-worker clients) at equal
+    // epochs.
+    let acc = |algo: Algo| {
+        let mut cfg = ExperimentConfig::testbed1(algo);
+        cfg.variant = "mlp_tiny".into();
+        cfg.epochs = 3;
+        cfg.samples_per_epoch = 12 * 4 * 8;
+        cfg.classes = 4;
+        cfg.noise = 1.0;
+        cfg.lr = 0.1;
+        mxnet_mpi::trainer::sim::simulate(&cfg, &artifacts())
+            .unwrap()
+            .final_acc()
+    };
+    let grouped = acc(Algo::MpiAsgd);
+    let scattered = acc(Algo::DistAsgd);
+    assert!(
+        grouped >= scattered - 0.02,
+        "mpi-ASGD {grouped} trails dist-ASGD {scattered}"
+    );
+}
+
+#[test]
+fn virtual_time_axis_monotone_and_positive() {
+    for algo in [Algo::DistEsgd, Algo::MpiEsgd] {
+        let mut cfg = ExperimentConfig::testbed1(algo);
+        cfg.variant = "mlp_tiny".into();
+        cfg.epochs = 3;
+        cfg.samples_per_epoch = 12 * 2 * 8;
+        cfg.classes = 4;
+        cfg.noise = 1.0;
+        let run = mxnet_mpi::trainer::sim::simulate(&cfg, &artifacts()).unwrap();
+        assert_eq!(run.records.len(), 3, "{}", algo.name());
+        let mut prev = 0.0;
+        for r in &run.records {
+            assert!(r.vtime > prev, "{}: vtime not monotone", algo.name());
+            prev = r.vtime;
+        }
+    }
+}
