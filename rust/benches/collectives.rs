@@ -6,10 +6,13 @@
 //!
 //!     cargo bench --bench collectives
 
-use mxnet_mpi::collectives::{multi_ring_allreduce, ring_allreduce};
+use mxnet_mpi::collectives::{
+    multi_ring_allreduce, ring_allreduce, sim as csim, AlgoKind,
+};
 use mxnet_mpi::engine::Engine;
 use mxnet_mpi::metrics::Table;
 use mxnet_mpi::mpisim::World;
+use mxnet_mpi::netsim::CostParams;
 use mxnet_mpi::tensor::NodeTensor;
 use std::sync::Arc;
 use std::time::Instant;
@@ -90,6 +93,70 @@ fn bench_multi_ring(t: &mut Table) {
             format!("{:.2}", (len * 4) as f64 * 2.0 / s / 1e9),
         ]);
     }
+}
+
+/// Wall-clock comparison of the three pluggable schedules on the real
+/// mpisim data path (ring / halving-doubling / hierarchical).
+fn bench_algo_schedules(t: &mut Table) {
+    let params = CostParams::testbed1();
+    for p in [4usize, 8] {
+        for len in [1 << 10, 1 << 16, 1 << 20] {
+            for kind in AlgoKind::DATA_PATH {
+                let pr = params.clone();
+                let s = bench(|| {
+                    let comms = World::create(p);
+                    let hs: Vec<_> = comms
+                        .into_iter()
+                        .map(|mut c| {
+                            let pr = pr.clone();
+                            std::thread::spawn(move || {
+                                let mut d = vec![c.rank() as f32; len];
+                                mxnet_mpi::collectives::allreduce_with(
+                                    kind, &mut c, &mut d, 2, 2, &pr,
+                                );
+                                d[0]
+                            })
+                        })
+                        .collect();
+                    for h in hs {
+                        h.join().unwrap();
+                    }
+                });
+                let bytes = len * 4;
+                t.row(vec![
+                    format!("{} p={p}", kind.name()),
+                    mxnet_mpi::util::fmt_bytes(bytes),
+                    format!("{:.3}", s * 1e3),
+                    format!("{:.2}", bytes as f64 * 2.0 / s / 1e9),
+                ]);
+            }
+        }
+    }
+}
+
+/// Modeled seconds per schedule across message sizes (α-β-γ cost models):
+/// prints the select_best winner per row, making the small-message
+/// halving-doubling → large-message ring crossover visible.
+fn report_modeled_crossover() {
+    let params = CostParams::minsky();
+    let p = 16;
+    let mut t = Table::new(&["bytes", "ring s", "halving-doubling s", "hierarchical s", "best"]);
+    for shift in [10usize, 12, 14, 16, 18, 20, 22, 24, 26] {
+        let bytes = 1usize << shift;
+        let secs: Vec<f64> = AlgoKind::DATA_PATH
+            .into_iter()
+            .map(|k| csim::network_allreduce_seconds(k, p, bytes, &params))
+            .collect();
+        let (best, _) = csim::select_best(bytes, p, &params);
+        t.row(vec![
+            mxnet_mpi::util::fmt_bytes(bytes),
+            format!("{:.3e}", secs[0]),
+            format!("{:.3e}", secs[1]),
+            format!("{:.3e}", secs[2]),
+            best.name().to_string(),
+        ]);
+    }
+    println!("== modeled allreduce seconds, p={p} (select_best winner) ==\n{}", t.render());
 }
 
 fn bench_tensor_allreduce(t: &mut Table) {
@@ -237,10 +304,12 @@ fn bench_pjrt(t: &mut Table) {
 }
 
 fn main() {
+    report_modeled_crossover();
     println!("== real-substrate microbenchmarks (median of {REPS}) ==");
     let mut t = Table::new(&["bench", "size", "median ms", "rate"]);
     bench_ring_allreduce(&mut t);
     bench_multi_ring(&mut t);
+    bench_algo_schedules(&mut t);
     bench_tensor_allreduce(&mut t);
     bench_engine(&mut t);
     bench_ps_round(&mut t);

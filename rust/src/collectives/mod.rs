@@ -1,25 +1,53 @@
-//! Tensor collectives (paper §6): bucket ring algorithms over node tensors.
+//! Tensor collectives (paper §6): pluggable allreduce algorithms over node
+//! tensors.
 //!
 //! Two halves:
 //!
-//! * **Real data movement** (this file) — ring reduce-scatter / allgather /
-//!   allreduce built on [`crate::mpisim`] point-to-point sends, plus the
-//!   tensor variants that pre-reduce the per-device vector group into host
-//!   memory and broadcast the result back (§6.3). These run on the actual
+//! * **Real data movement** (this file) — the [`CollectiveAlgo`] strategy
+//!   layer with three algorithms built on [`crate::mpisim`] point-to-point
+//!   sends: the bucket **ring** (bandwidth-optimal, §6.2), recursive
+//!   **halving-doubling** (latency-optimal for small tensors; the MPICH
+//!   reduce-scatter + allgather schedule with non-power-of-two fold-in),
+//!   and a **two-level hierarchical** allreduce (intra-group reduce →
+//!   leader ring → intra-group broadcast, the §6.3 node-grouping idea
+//!   applied inside a client). Plus the tensor variants that pre-reduce
+//!   the per-device vector group into host memory and broadcast back
+//!   (§6.3), and gradient **fusion** ([`fused_allreduce`]) that coalesces
+//!   small keys into one message before dispatch. These run on the actual
 //!   training path of the threaded framework and are the correctness-
 //!   critical code.
 //! * **Timing simulation** ([`sim`]) — the α-β-γ cost models that regenerate
 //!   the paper's bandwidth/scaling figures (Figs 15, 17–20) on the
-//!   [`crate::netsim`] substrate.
+//!   [`crate::netsim`] substrate, one per algorithm, with
+//!   [`sim::select_best`] auto-tuning the choice per message size
+//!   (cf. Shi et al., arXiv:1711.05979).
 
 pub mod sim;
 
 use crate::mpisim::Comm;
+use crate::netsim::CostParams;
 use crate::tensor::{add_assign, NodeTensor};
 
 /// Tag base for ring steps; mpisim collectives use the high bit, rings use
 /// plain user tags namespaced per call via an internal counter.
 const RING_TAG: u64 = 0x5247; // "RG"
+/// Tag bases for the other algorithm families. Distinct ranges keep the
+/// (source, tag) matching of interleaved steps unambiguous; across
+/// consecutive calls the per-pair FIFO of [`crate::mpisim`] preserves order.
+const SUBSET_TAG: u64 = 0x5300;
+const HD_TAG: u64 = 0x5400;
+const HIER_TAG: u64 = 0x5500;
+
+/// Largest power of two <= `p` — the halving-doubling survivor count. The
+/// data path and the cost model ([`sim`]) must agree on this for the
+/// fold-in accounting to match reality, so it exists exactly once.
+pub(crate) fn pow2_floor(p: usize) -> usize {
+    let mut q = 1usize;
+    while q * 2 <= p {
+        q *= 2;
+    }
+    q
+}
 
 /// Partition `len` into `p` near-equal chunks; returns (start, end) of `i`.
 pub fn chunk_bounds(len: usize, p: usize, i: usize) -> (usize, usize) {
@@ -30,31 +58,52 @@ pub fn chunk_bounds(len: usize, p: usize, i: usize) -> (usize, usize) {
     (start, end)
 }
 
+/// One bucket-ring phase over an arbitrary rank list: the reduce-scatter
+/// schedule (`gather == false`, incoming chunks are summed) or the
+/// allgather schedule (`gather == true`, incoming chunks are copied).
+/// `idx` is this rank's position in the logical ring of `l` members whose
+/// physical neighbors are `right`/`left`. Shared by the full-communicator
+/// ring and the subset ring so the correctness-critical step/chunk/tag
+/// logic exists exactly once.
+fn ring_steps(
+    comm: &mut Comm,
+    right: usize,
+    left: usize,
+    idx: usize,
+    l: usize,
+    data: &mut [f32],
+    tag_base: u64,
+    gather: bool,
+) {
+    if l <= 1 {
+        return;
+    }
+    let n = data.len();
+    for step in 0..l - 1 {
+        let (si, ri) = if gather {
+            ((idx + 1 + l - step) % l, (idx + l - step) % l)
+        } else {
+            ((idx + l - step) % l, (idx + l - step - 1) % l)
+        };
+        let (ss, se) = chunk_bounds(n, l, si);
+        let (rs, re) = chunk_bounds(n, l, ri);
+        let tag = tag_base + step as u64;
+        let incoming = comm.sendrecv(right, tag, data[ss..se].to_vec(), left, tag);
+        if gather {
+            data[rs..re].copy_from_slice(&incoming);
+        } else {
+            add_assign(&mut data[rs..re], &incoming);
+        }
+    }
+}
+
 /// Bucket ring reduce-scatter (§6.2): after the call, rank `r` holds the
 /// fully reduced chunk `(r + 1) % p` of `data`; other chunks are garbage
 /// (partial sums). Returns the owned chunk index.
 pub fn ring_reduce_scatter(comm: &mut Comm, data: &mut [f32]) -> usize {
     let p = comm.size();
     let r = comm.rank();
-    if p == 1 {
-        return 0;
-    }
-    let right = (r + 1) % p;
-    let left = (r + p - 1) % p;
-    for step in 0..p - 1 {
-        let send_idx = (r + p - step) % p;
-        let recv_idx = (r + p - step - 1) % p;
-        let (ss, se) = chunk_bounds(data.len(), p, send_idx);
-        let (rs, re) = chunk_bounds(data.len(), p, recv_idx);
-        let incoming = comm.sendrecv(
-            right,
-            RING_TAG + step as u64,
-            data[ss..se].to_vec(),
-            left,
-            RING_TAG + step as u64,
-        );
-        add_assign(&mut data[rs..re], &incoming);
-    }
+    ring_steps(comm, (r + 1) % p, (r + p - 1) % p, r, p, data, RING_TAG, false);
     (r + 1) % p
 }
 
@@ -63,25 +112,7 @@ pub fn ring_reduce_scatter(comm: &mut Comm, data: &mut [f32]) -> usize {
 pub fn ring_allgather(comm: &mut Comm, data: &mut [f32]) {
     let p = comm.size();
     let r = comm.rank();
-    if p == 1 {
-        return;
-    }
-    let right = (r + 1) % p;
-    let left = (r + p - 1) % p;
-    for step in 0..p - 1 {
-        let send_idx = (r + 1 + p - step) % p;
-        let recv_idx = (r + p - step) % p;
-        let (ss, se) = chunk_bounds(data.len(), p, send_idx);
-        let (rs, re) = chunk_bounds(data.len(), p, recv_idx);
-        let incoming = comm.sendrecv(
-            right,
-            RING_TAG + 100 + step as u64,
-            data[ss..se].to_vec(),
-            left,
-            RING_TAG + 100 + step as u64,
-        );
-        data[rs..re].copy_from_slice(&incoming);
-    }
+    ring_steps(comm, (r + 1) % p, (r + p - 1) % p, r, p, data, RING_TAG + 100, true);
 }
 
 /// Bandwidth-optimal ring allreduce = reduce-scatter + allgather (§6.2).
@@ -104,6 +135,318 @@ pub fn multi_ring_allreduce(comm: &mut Comm, data: &mut [f32], rings: usize) {
     for ring in 0..rings {
         let (s, e) = chunk_bounds(len, rings, ring);
         ring_allreduce(comm, &mut data[s..e]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pluggable allreduce algorithms
+// ---------------------------------------------------------------------------
+
+/// Bucket ring allreduce over an explicit subset of ranks (used as the
+/// leader phase of [`hierarchical_allreduce`]). Every rank in `ranks` must
+/// call this with the same list; ranks outside the subset must not call it.
+pub fn ring_allreduce_subset(comm: &mut Comm, ranks: &[usize], data: &mut [f32]) {
+    let l = ranks.len();
+    if l <= 1 {
+        return;
+    }
+    let idx = ranks
+        .iter()
+        .position(|&r| r == comm.rank())
+        .expect("rank not in subset");
+    let right = ranks[(idx + 1) % l];
+    let left = ranks[(idx + l - 1) % l];
+    ring_steps(comm, right, left, idx, l, data, SUBSET_TAG, false);
+    ring_steps(comm, right, left, idx, l, data, SUBSET_TAG + 100, true);
+}
+
+/// Recursive vector halving-doubling allreduce (Thakur/Rabenseifner): a
+/// vector-halving reduce-scatter followed by a vector-doubling allgather —
+/// 2·⌈lg p⌉ latency terms against the ring's 2(p-1), which makes it the
+/// small-tensor algorithm of choice (see [`sim::select_best`]).
+///
+/// Non-power-of-two rank counts fold the `p - 2^⌊lg p⌋` extra ranks into
+/// their partners up front and replay the result to them at the end
+/// (the MPICH scheme).
+pub fn halving_doubling_allreduce(comm: &mut Comm, data: &mut [f32]) {
+    let p = comm.size();
+    let r = comm.rank();
+    if p == 1 {
+        return;
+    }
+    let n = data.len();
+    let q = pow2_floor(p);
+    let extras = p - q;
+    if r >= q {
+        // Extra rank: contribute the vector, receive the final result.
+        comm.send(r - q, HD_TAG, data.to_vec());
+        let result = comm.recv(r - q, HD_TAG + 1);
+        data.copy_from_slice(&result);
+        return;
+    }
+    if r < extras {
+        let incoming = comm.recv(r + q, HD_TAG);
+        add_assign(data, &incoming);
+    }
+    // Vector-halving reduce-scatter among the power-of-two survivors: at
+    // each step the pair splits the live window, keeps one half and sends
+    // the other; both sides compute the same split from the shared window.
+    let (mut lo, mut hi) = (0usize, n);
+    let mut windows: Vec<(usize, usize)> = Vec::new();
+    let mut mask = q >> 1;
+    let mut step = 0u64;
+    while mask > 0 {
+        let partner = r ^ mask;
+        let mid = lo + (hi - lo) / 2;
+        let (keep, send) = if r & mask == 0 {
+            ((lo, mid), (mid, hi))
+        } else {
+            ((mid, hi), (lo, mid))
+        };
+        let tag = HD_TAG + 8 + step;
+        let incoming = comm.sendrecv(partner, tag, data[send.0..send.1].to_vec(), partner, tag);
+        add_assign(&mut data[keep.0..keep.1], &incoming);
+        windows.push((lo, hi));
+        lo = keep.0;
+        hi = keep.1;
+        mask >>= 1;
+        step += 1;
+    }
+    // Vector-doubling allgather: replay the window splits in reverse, each
+    // pair exchanging its owned window to reassemble the parent window.
+    let mut mask = 1usize;
+    while mask < q {
+        let partner = r ^ mask;
+        let (plo, phi) = windows.pop().expect("window stack underflow");
+        let tag = HD_TAG + 64 + step;
+        let incoming = comm.sendrecv(partner, tag, data[lo..hi].to_vec(), partner, tag);
+        if lo == plo {
+            data[hi..phi].copy_from_slice(&incoming);
+        } else {
+            data[plo..lo].copy_from_slice(&incoming);
+        }
+        lo = plo;
+        hi = phi;
+        mask <<= 1;
+        step += 1;
+    }
+    if r < extras {
+        comm.send(r + q, HD_TAG + 1, data.to_vec());
+    }
+}
+
+/// Two-level hierarchical allreduce: ranks are grouped into blocks of
+/// `group` consecutive ranks (the intra-client analog of §6.3's node
+/// grouping); each group reduces onto its leader, the leaders run a bucket
+/// ring among themselves, and the result is broadcast back into the groups.
+pub fn hierarchical_allreduce(comm: &mut Comm, data: &mut [f32], group: usize) {
+    let p = comm.size();
+    let r = comm.rank();
+    if p == 1 {
+        return;
+    }
+    let g = group.clamp(1, p);
+    let leader = r - r % g;
+    let last = (leader + g).min(p);
+    if r != leader {
+        comm.send(leader, HIER_TAG, data.to_vec());
+        let result = comm.recv(leader, HIER_TAG + 1);
+        data.copy_from_slice(&result);
+        return;
+    }
+    for m in leader + 1..last {
+        let incoming = comm.recv(m, HIER_TAG);
+        add_assign(data, &incoming);
+    }
+    let leaders: Vec<usize> = (0..p).step_by(g).collect();
+    ring_allreduce_subset(comm, &leaders, data);
+    for m in leader + 1..last {
+        comm.send(m, HIER_TAG + 1, data.to_vec());
+    }
+}
+
+/// Which allreduce schedule a job uses (the `collective` config knob).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AlgoKind {
+    /// Bucket multi-ring (§6.2/§6.3.2) — bandwidth-optimal.
+    Ring,
+    /// Recursive vector halving-doubling — latency-optimal small tensors.
+    HalvingDoubling,
+    /// Two-level: intra-group reduce → leader ring → intra-group bcast.
+    Hierarchical,
+    /// Pick per message with the α-β-γ model ([`sim::select_best`]).
+    Auto,
+}
+
+impl AlgoKind {
+    /// The three real-data schedules (everything but `Auto`).
+    pub const DATA_PATH: [AlgoKind; 3] =
+        [AlgoKind::Ring, AlgoKind::HalvingDoubling, AlgoKind::Hierarchical];
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "ring" => AlgoKind::Ring,
+            "hd" | "halving_doubling" | "halving-doubling" => AlgoKind::HalvingDoubling,
+            "hierarchical" | "two_level" | "two-level" => AlgoKind::Hierarchical,
+            "auto" => AlgoKind::Auto,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AlgoKind::Ring => "ring",
+            AlgoKind::HalvingDoubling => "halving_doubling",
+            AlgoKind::Hierarchical => "hierarchical",
+            AlgoKind::Auto => "auto",
+        }
+    }
+}
+
+/// Object-safe strategy interface over the three schedules, for callers
+/// that want to hold a boxed algorithm rather than dispatch on
+/// [`AlgoKind`] (the KVStore uses the enum; benches use this).
+pub trait CollectiveAlgo: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn allreduce(&self, comm: &mut Comm, data: &mut [f32]);
+}
+
+/// The §6.2 bucket multi-ring.
+pub struct BucketRing {
+    pub rings: usize,
+}
+
+impl CollectiveAlgo for BucketRing {
+    fn name(&self) -> &'static str {
+        "ring"
+    }
+    fn allreduce(&self, comm: &mut Comm, data: &mut [f32]) {
+        multi_ring_allreduce(comm, data, self.rings);
+    }
+}
+
+/// Recursive vector halving-doubling.
+pub struct HalvingDoubling;
+
+impl CollectiveAlgo for HalvingDoubling {
+    fn name(&self) -> &'static str {
+        "halving_doubling"
+    }
+    fn allreduce(&self, comm: &mut Comm, data: &mut [f32]) {
+        halving_doubling_allreduce(comm, data);
+    }
+}
+
+/// Two-level hierarchical allreduce with a fixed group size.
+pub struct Hierarchical {
+    pub group: usize,
+}
+
+impl CollectiveAlgo for Hierarchical {
+    fn name(&self) -> &'static str {
+        "hierarchical"
+    }
+    fn allreduce(&self, comm: &mut Comm, data: &mut [f32]) {
+        hierarchical_allreduce(comm, data, self.group);
+    }
+}
+
+/// Resolve `Auto` for a message of `bytes` across `p` ranks. Returns the
+/// concrete schedule plus the hierarchical group size to run it with: an
+/// autotuned choice uses `params.gpus_per_worker` — the grouping the cost
+/// model priced — while an explicit choice keeps the caller's `group`.
+fn resolve_kind(
+    kind: AlgoKind,
+    bytes: usize,
+    p: usize,
+    group: usize,
+    params: &CostParams,
+) -> (AlgoKind, usize) {
+    match kind {
+        AlgoKind::Auto => (
+            sim::select_best(bytes, p, params).0,
+            params.gpus_per_worker.max(1),
+        ),
+        k => (k, group),
+    }
+}
+
+/// Instantiate a boxed schedule; `Auto` resolves against `bytes_hint`.
+pub fn build_algo(
+    kind: AlgoKind,
+    rings: usize,
+    group: usize,
+    bytes_hint: usize,
+    p: usize,
+    params: &CostParams,
+) -> Box<dyn CollectiveAlgo> {
+    let (kind, group) = resolve_kind(kind, bytes_hint, p, group, params);
+    match kind {
+        AlgoKind::Ring => Box::new(BucketRing { rings }),
+        AlgoKind::HalvingDoubling => Box::new(HalvingDoubling),
+        AlgoKind::Hierarchical => Box::new(Hierarchical { group }),
+        AlgoKind::Auto => unreachable!("select_best never returns Auto"),
+    }
+}
+
+/// Run one allreduce with the given schedule. `Auto` consults the α-β-γ
+/// autotuner per message: every rank sees the same (bytes, p, params), so
+/// the choice is identical across the communicator.
+pub fn allreduce_with(
+    kind: AlgoKind,
+    comm: &mut Comm,
+    data: &mut [f32],
+    rings: usize,
+    group: usize,
+    params: &CostParams,
+) {
+    let (kind, group) = resolve_kind(kind, data.len() * 4, comm.size(), group, params);
+    match kind {
+        AlgoKind::Ring => multi_ring_allreduce(comm, data, rings),
+        AlgoKind::HalvingDoubling => halving_doubling_allreduce(comm, data),
+        AlgoKind::Hierarchical => hierarchical_allreduce(comm, data, group),
+        AlgoKind::Auto => unreachable!("select_best never returns Auto"),
+    }
+}
+
+/// Gradient fusion (§2.1's per-layer bucketing, Horovod-style): coalesce
+/// consecutive buffers into buckets of at most `fusion_bytes` bytes (a
+/// buffer larger than the cap forms its own bucket; `fusion_bytes == 0`
+/// disables coalescing), allreduce each bucket as one message, and scatter
+/// the results back in place. Small per-layer keys thus pay the
+/// per-message α once per bucket instead of once per key.
+pub fn fused_allreduce(
+    kind: AlgoKind,
+    comm: &mut Comm,
+    bufs: &mut [Vec<f32>],
+    fusion_bytes: usize,
+    rings: usize,
+    group: usize,
+    params: &CostParams,
+) {
+    let mut i = 0;
+    while i < bufs.len() {
+        let mut bytes = bufs[i].len() * 4;
+        let mut j = i + 1;
+        while j < bufs.len() && fusion_bytes > 0 && bytes + bufs[j].len() * 4 <= fusion_bytes {
+            bytes += bufs[j].len() * 4;
+            j += 1;
+        }
+        if j == i + 1 {
+            allreduce_with(kind, comm, &mut bufs[i], rings, group, params);
+        } else {
+            let mut fused = Vec::with_capacity(bytes / 4);
+            for b in &bufs[i..j] {
+                fused.extend_from_slice(b);
+            }
+            allreduce_with(kind, comm, &mut fused, rings, group, params);
+            let mut off = 0;
+            for b in bufs[i..j].iter_mut() {
+                b.copy_from_slice(&fused[off..off + b.len()]);
+                off += b.len();
+            }
+        }
+        i = j;
     }
 }
 
@@ -136,6 +479,26 @@ pub fn tensor_allreduce(
         HostReduce::Custom(f) => f(tensor),
     };
     multi_ring_allreduce(comm, &mut host, rings);
+    tensor.broadcast_from_host(&host);
+}
+
+/// [`tensor_allreduce`] with a pluggable inter-node schedule: intra-node
+/// reduce into host memory, any [`AlgoKind`] across workers, intra-node
+/// broadcast back.
+pub fn tensor_allreduce_with(
+    kind: AlgoKind,
+    comm: &mut Comm,
+    tensor: &mut NodeTensor,
+    rings: usize,
+    group: usize,
+    params: &CostParams,
+    reduce: HostReduce<'_>,
+) {
+    let mut host = match reduce {
+        HostReduce::Host => tensor.reduce_to_host(),
+        HostReduce::Custom(f) => f(tensor),
+    };
+    allreduce_with(kind, comm, &mut host, rings, group, params);
     tensor.broadcast_from_host(&host);
 }
 
@@ -291,6 +654,170 @@ mod tests {
         });
         for d in out {
             assert_eq!(d, vec![15.0, 15.0]);
+        }
+    }
+
+    #[test]
+    fn halving_doubling_matches_sum_all_sizes() {
+        for p in [1, 2, 3, 4, 5, 6, 7, 8] {
+            for len in [0, 1, 2, 5, 64, 257] {
+                let out = run_world(p, move |mut c| {
+                    let mut d = payload(c.rank(), len);
+                    halving_doubling_allreduce(&mut c, &mut d);
+                    d
+                });
+                let want = expected_sum(p, len);
+                for d in out {
+                    assert_eq!(d, want, "p={p} len={len}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hierarchical_matches_sum_all_groupings() {
+        for p in [1, 2, 3, 4, 6, 8] {
+            for group in [1, 2, 3, 4, 16] {
+                let len = 77;
+                let out = run_world(p, move |mut c| {
+                    let mut d = payload(c.rank(), len);
+                    hierarchical_allreduce(&mut c, &mut d, group);
+                    d
+                });
+                let want = expected_sum(p, len);
+                for d in out {
+                    assert_eq!(d, want, "p={p} group={group}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn subset_ring_reduces_only_members() {
+        // Leaders {0, 2} of a 4-rank world allreduce among themselves;
+        // ranks 1 and 3 stay untouched.
+        let out = run_world(4, move |mut c| {
+            let mut d = vec![(c.rank() + 1) as f32; 8];
+            if c.rank() % 2 == 0 {
+                ring_allreduce_subset(&mut c, &[0, 2], &mut d);
+            }
+            d
+        });
+        assert_eq!(out[0], vec![4.0; 8]); // 1 + 3
+        assert_eq!(out[2], vec![4.0; 8]);
+        assert_eq!(out[1], vec![2.0; 8]);
+        assert_eq!(out[3], vec![4.0; 8]);
+    }
+
+    #[test]
+    fn back_to_back_mixed_algorithms_no_cross_talk() {
+        let p = 6;
+        let out = run_world(p, move |mut c| {
+            let mut a = payload(c.rank(), 33);
+            halving_doubling_allreduce(&mut c, &mut a);
+            let mut b = payload(c.rank() + 10, 17);
+            hierarchical_allreduce(&mut c, &mut b, 2);
+            let mut d = payload(c.rank(), 9);
+            multi_ring_allreduce(&mut c, &mut d, 2);
+            (a, b, d)
+        });
+        let wa = expected_sum(p, 33);
+        let wb: Vec<f32> = {
+            let mut out = vec![0.0; 17];
+            for r in 0..p {
+                add_assign(&mut out, &payload(r + 10, 17));
+            }
+            out
+        };
+        let wd = expected_sum(p, 9);
+        for (a, b, d) in out {
+            assert_eq!(a, wa);
+            assert_eq!(b, wb);
+            assert_eq!(d, wd);
+        }
+    }
+
+    #[test]
+    fn fused_allreduce_matches_per_key() {
+        let p = 3;
+        for fusion_bytes in [0usize, 64, 1 << 20] {
+            let out = run_world(p, move |mut c| {
+                let mut bufs: Vec<Vec<f32>> = (0..5)
+                    .map(|k| payload(c.rank() * 10 + k, 3 + k * 7))
+                    .collect();
+                fused_allreduce(
+                    AlgoKind::Ring,
+                    &mut c,
+                    &mut bufs,
+                    fusion_bytes,
+                    2,
+                    2,
+                    &CostParams::testbed1(),
+                );
+                bufs
+            });
+            for k in 0..5usize {
+                let len = 3 + k * 7;
+                let mut want = vec![0.0f32; len];
+                for r in 0..p {
+                    add_assign(&mut want, &payload(r * 10 + k, len));
+                }
+                for bufs in &out {
+                    assert_eq!(bufs[k], want, "fusion={fusion_bytes} key={k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_with_auto_resolves_and_sums() {
+        let p = 4;
+        let params = CostParams::minsky();
+        for len in [4usize, 100_000] {
+            let pr = params.clone();
+            let out = run_world(p, move |mut c| {
+                let mut d = payload(c.rank(), len);
+                allreduce_with(AlgoKind::Auto, &mut c, &mut d, 2, 2, &pr);
+                d
+            });
+            let want = expected_sum(p, len);
+            for d in out {
+                assert_eq!(d, want, "len={len}");
+            }
+        }
+    }
+
+    #[test]
+    fn algo_kind_parse_round_trip() {
+        for k in [
+            AlgoKind::Ring,
+            AlgoKind::HalvingDoubling,
+            AlgoKind::Hierarchical,
+            AlgoKind::Auto,
+        ] {
+            assert_eq!(AlgoKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(AlgoKind::parse("hd"), Some(AlgoKind::HalvingDoubling));
+        assert_eq!(AlgoKind::parse("two_level"), Some(AlgoKind::Hierarchical));
+        assert_eq!(AlgoKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn boxed_strategies_all_sum() {
+        let p = 4;
+        let params = CostParams::testbed1();
+        for kind in AlgoKind::DATA_PATH {
+            let pr = params.clone();
+            let out = run_world(p, move |mut c| {
+                let algo = build_algo(kind, 2, 2, 1024, p, &pr);
+                let mut d = payload(c.rank(), 50);
+                algo.allreduce(&mut c, &mut d);
+                d
+            });
+            let want = expected_sum(p, 50);
+            for d in out {
+                assert_eq!(d, want, "{}", kind.name());
+            }
         }
     }
 }

@@ -7,8 +7,112 @@
 //! bandwidth constants (taken from the paper where stated); what must hold
 //! is the *shape*: who wins, by what factor, where crossovers fall.
 
+use super::{pow2_floor, AlgoKind};
 use crate::netsim::CostParams;
 
+// ---------------------------------------------------------------------------
+// Per-algorithm α-β-γ models + the select_best autotuner
+// ---------------------------------------------------------------------------
+
+/// Network-level cost of one host-memory allreduce of `bytes` across `p`
+/// ranks under the given schedule (the §6.2 formalism, one formula per
+/// [`AlgoKind`]):
+///
+/// * ring — `2(p-1)α + 2·(p-1)/p·nβ + (p-1)/p·nγ` (bandwidth-optimal);
+/// * halving-doubling — `2·lg q·α + 2·(q-1)/q·nβ·(1+δ) + (q-1)/q·nγ`
+///   plus a `2(α + nβ) + nγ` fold-in when `p` is not a power of two.
+///   `δ = hd_contention` models the fabric congestion of the distance-2^k
+///   exchanges (ring traffic stays on neighbor links; halving-doubling
+///   does not — Shi et al., arXiv:1711.05979, §IV);
+/// * hierarchical — intra-group gather+bcast over host memory, plus the
+///   leader ring over `⌈p/g⌉` ranks with `g = gpus_per_worker`.
+///
+/// `Auto` returns the minimum ([`select_best`]).
+pub fn network_allreduce_seconds(
+    kind: AlgoKind,
+    p: usize,
+    bytes: usize,
+    params: &CostParams,
+) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    let n = bytes as f64;
+    let a = params.alpha_net;
+    let b = params.beta_net;
+    let gh = params.gamma_omp;
+    match kind {
+        AlgoKind::Ring => {
+            let pf = p as f64;
+            2.0 * (pf - 1.0) * a
+                + 2.0 * (pf - 1.0) / pf * n * b
+                + (pf - 1.0) / pf * n * gh
+        }
+        AlgoKind::HalvingDoubling => {
+            let q = pow2_floor(p);
+            let qf = q as f64;
+            let mut t = 2.0 * qf.log2() * a
+                + 2.0 * (qf - 1.0) / qf * n * b * (1.0 + params.hd_contention)
+                + (qf - 1.0) / qf * n * gh;
+            if p > q {
+                t += 2.0 * (a + n * b) + n * gh;
+            }
+            t
+        }
+        AlgoKind::Hierarchical => {
+            let g = params.gpus_per_worker.clamp(1, p);
+            let leaders = (p + g - 1) / g;
+            let gf = g as f64;
+            let intra = 2.0 * (gf - 1.0) * (a + n * params.beta_hostmem)
+                + (gf - 1.0) * n * params.gamma_host;
+            intra + network_allreduce_seconds(AlgoKind::Ring, leaders, bytes, params)
+        }
+        AlgoKind::Auto => select_best(bytes, p, params).1,
+    }
+}
+
+/// Autotuner: the cheapest data-path schedule for `(bytes, p)` under the
+/// α-β-γ model. Below the α/β crossover the latency-optimal
+/// halving-doubling wins; past it the bandwidth-optimal ring does.
+pub fn select_best(bytes: usize, p: usize, params: &CostParams) -> (AlgoKind, f64) {
+    if p <= 1 {
+        return (AlgoKind::Ring, 0.0);
+    }
+    AlgoKind::DATA_PATH
+        .into_iter()
+        .map(|k| (k, network_allreduce_seconds(k, p, bytes, params)))
+        .min_by(|x, y| x.1.total_cmp(&y.1))
+        .expect("non-empty algorithm set")
+}
+
+/// Full tensor-allreduce seconds for a schedule: the ring reproduces the
+/// [`Design::RingIbm`] model (multi-ring overlap and all) exactly, so a
+/// `collective = "ring"` run is bit-identical to the pre-autotuner
+/// trainer; the other schedules pay the same intra-node phases (tensor
+/// reduce to host, broadcast back, one GpuStart/GpuWait pair each way)
+/// around their own network phase.
+pub fn tensor_allreduce_seconds(
+    kind: AlgoKind,
+    p: usize,
+    bytes: usize,
+    rings: usize,
+    params: &CostParams,
+) -> f64 {
+    match kind {
+        AlgoKind::Ring => simulate(Design::RingIbm { rings }, p, bytes, params).seconds,
+        AlgoKind::Auto => {
+            let (k, _) = select_best(bytes, p, params);
+            tensor_allreduce_seconds(k, p, bytes, rings, params)
+        }
+        k => {
+            let n = bytes as f64;
+            n * params.gamma_gpu_ibm
+                + network_allreduce_seconds(k, p, bytes, params)
+                + n * params.beta_gpu_bcast
+                + 2.0 * params.gpu_sync
+        }
+    }
+}
 
 /// The §7.3 design space, one variant per curve in Figs 17–20.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -275,6 +379,72 @@ mod tests {
         let one = simulate(Design::RingIbm { rings: 1 }, 16, 64 << 20, &m);
         let two = simulate(Design::RingIbm { rings: 2 }, 16, 64 << 20, &m);
         assert!(two.seconds < one.seconds, "{} !< {}", two.seconds, one.seconds);
+    }
+
+    #[test]
+    fn select_best_picks_hd_small_ring_large() {
+        // Below the α/β crossover the latency-optimal halving-doubling
+        // wins; above it the bandwidth-optimal ring does (the acceptance
+        // shape of the autotuner).
+        let m = minsky();
+        let p = 16;
+        assert_eq!(select_best(4 << 10, p, &m).0, AlgoKind::HalvingDoubling);
+        assert_eq!(select_best(64 << 20, p, &m).0, AlgoKind::Ring);
+        // The winner changes at least once over the sweep, and the two
+        // regimes are contiguous (no flip-flopping back to HD at the top).
+        let mut last_hd = 0usize;
+        let mut first_ring_after = usize::MAX;
+        for shift in 10..28 {
+            let bytes = 1usize << shift;
+            match select_best(bytes, p, &m).0 {
+                AlgoKind::HalvingDoubling => last_hd = bytes,
+                AlgoKind::Ring if first_ring_after == usize::MAX => first_ring_after = bytes,
+                _ => {}
+            }
+        }
+        assert!(last_hd > 0 && first_ring_after < usize::MAX);
+        assert!(last_hd < 64 << 20, "hd still winning at huge messages");
+    }
+
+    #[test]
+    fn network_costs_monotone_and_positive() {
+        let m = minsky();
+        for k in AlgoKind::DATA_PATH {
+            let t1 = network_allreduce_seconds(k, 8, 1 << 16, &m);
+            let t2 = network_allreduce_seconds(k, 8, 1 << 22, &m);
+            assert!(t1 > 0.0 && t2 > t1, "{k:?}");
+            assert_eq!(network_allreduce_seconds(k, 1, 1 << 20, &m), 0.0);
+        }
+    }
+
+    #[test]
+    fn hd_pays_fold_in_for_non_power_of_two() {
+        let m = minsky();
+        let t8 = network_allreduce_seconds(AlgoKind::HalvingDoubling, 8, 1 << 20, &m);
+        let t9 = network_allreduce_seconds(AlgoKind::HalvingDoubling, 9, 1 << 20, &m);
+        assert!(t9 > t8);
+    }
+
+    #[test]
+    fn tensor_seconds_ring_matches_design_ring_ibm() {
+        // collective = "ring" must keep the exact pre-autotuner numbers.
+        let m = minsky();
+        for (p, bytes, rings) in [(6, 102 << 20, 2), (16, 4 << 20, 1), (2, 1 << 16, 4)] {
+            let a = tensor_allreduce_seconds(AlgoKind::Ring, p, bytes, rings, &m);
+            let b = simulate(Design::RingIbm { rings }, p, bytes, &m).seconds;
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn auto_never_beats_its_own_components() {
+        let m = minsky();
+        for bytes in [1 << 12, 1 << 18, 1 << 24] {
+            let auto = network_allreduce_seconds(AlgoKind::Auto, 12, bytes, &m);
+            for k in AlgoKind::DATA_PATH {
+                assert!(auto <= network_allreduce_seconds(k, 12, bytes, &m) + 1e-15);
+            }
+        }
     }
 
     #[test]

@@ -18,10 +18,24 @@
 //! per-key vars order operations on the same key, and a per-worker *comm
 //! var* serializes all MPI/PS communication in program order — the paper's
 //! "operations are enqueued in order to avoid deadlocks" (§4.2).
+//!
+//! Intra-client aggregation goes through the pluggable collective layer
+//! ([`crate::collectives::AlgoKind`]): ring, halving-doubling,
+//! hierarchical, or the per-message autotuner (`Auto`). Small per-key
+//! gradients can be coalesced into fused buckets before dispatch
+//! ([`KvWorker::pushpull_fused`], cap [`KvWorker::fusion_bytes`]).
+//!
+//! Init discipline (matching the PS servers' pre_init replay): a `push`
+//! that races ahead of its key's `init` is buffered and folded into the
+//! init value; a `pull` of a never-initialized key is a programming error
+//! and panics with a clear message.
 
-use crate::collectives::{multi_ring_allreduce, tensor_allreduce, HostReduce};
+use crate::collectives::{
+    allreduce_with, fused_allreduce, tensor_allreduce_with, AlgoKind, HostReduce,
+};
 use crate::engine::{Engine, Var};
 use crate::mpisim::Comm;
+use crate::netsim::CostParams;
 use crate::optimizer::Optimizer;
 use crate::ps::{Key, PsClient};
 use crate::tensor::NodeTensor;
@@ -75,12 +89,26 @@ pub struct KvWorker {
     ps: Option<Arc<Mutex<PsClient>>>,
     /// Local store (Local type).
     local: Arc<Mutex<HashMap<Key, Vec<f32>>>>,
+    /// Pushes that raced ahead of their key's `init` (mirrors the PS
+    /// servers' pre_init replay, §4.1.2): buffered and folded in on init.
+    /// Lock order is always `local` then `local_pre_init`.
+    local_pre_init: Arc<Mutex<HashMap<Key, Vec<Vec<f32>>>>>,
     /// Serializes all communication ops in program order (§4.2).
     comm_var: Var,
     /// Per-key dependency tags.
     key_vars: Mutex<HashMap<Key, Var>>,
     /// Rings for the multi-ring tensor allreduce (§6.3.2).
     pub n_rings: usize,
+    /// Allreduce schedule for intra-client aggregation (`Auto` consults
+    /// the α-β-γ autotuner per message).
+    pub algo: AlgoKind,
+    /// Group size for the hierarchical schedule (workers per node analog).
+    pub group: usize,
+    /// Gradient-fusion bucket cap in bytes for [`KvWorker::pushpull_fused`]
+    /// (0 disables coalescing).
+    pub fusion_bytes: usize,
+    /// Cost-model constants the `Auto` schedule tunes against.
+    pub cost: CostParams,
 }
 
 impl KvWorker {
@@ -108,10 +136,36 @@ impl KvWorker {
             comm: comm.map(|c| Arc::new(Mutex::new(c))),
             ps: ps.map(|p| Arc::new(Mutex::new(p))),
             local: Arc::new(Mutex::new(HashMap::new())),
+            local_pre_init: Arc::new(Mutex::new(HashMap::new())),
             comm_var,
             key_vars: Mutex::new(HashMap::new()),
             n_rings: 2,
+            algo: AlgoKind::Ring,
+            group: 2,
+            fusion_bytes: 0,
+            cost: CostParams::testbed1(),
         }
+    }
+
+    /// Configure the collective layer in one call (used by the launcher).
+    pub fn configure_collective(
+        &mut self,
+        algo: AlgoKind,
+        rings: usize,
+        group: usize,
+        fusion_bytes: usize,
+        cost: CostParams,
+    ) {
+        self.algo = algo;
+        self.n_rings = rings.max(1);
+        self.group = group.max(1);
+        self.fusion_bytes = fusion_bytes;
+        self.cost = cost;
+    }
+
+    /// Capture the collective parameters for use inside an engine op.
+    fn algo_params(&self) -> (AlgoKind, usize, usize, CostParams) {
+        (self.algo, self.n_rings, self.group, self.cost.clone())
     }
 
     fn key_var(&self, key: Key) -> Var {
@@ -131,13 +185,28 @@ impl KvWorker {
         self.comm.as_ref().map(|c| c.lock().unwrap().size()).unwrap_or(1)
     }
 
+    /// Insert an initialized value into the local store, folding in any
+    /// pushes that raced ahead of the init (the PS servers' pre_init
+    /// replay discipline, kept consistent here).
+    fn local_init_insert(&self, key: Key, value: Vec<f32>) {
+        let mut store = self.local.lock().unwrap();
+        let mut pre = self.local_pre_init.lock().unwrap();
+        let mut v = value;
+        if let Some(pushes) = pre.remove(&key) {
+            for pdata in pushes {
+                crate::tensor::add_assign(&mut v, &pdata);
+            }
+        }
+        store.insert(key, v);
+    }
+
     /// Initialize a key. PS rank 0 initializes the servers (§4.2.1); with
     /// no servers the value is broadcast inside the MPI client instead.
     /// `is_root` = this worker is rank 0 in the PS namespace.
     pub fn init(&self, key: Key, value: Vec<f32>, is_root: bool) {
         match self.ktype {
             KvType::Local => {
-                self.local.lock().unwrap().insert(key, value);
+                self.local_init_insert(key, value);
             }
             KvType::DistSync | KvType::DistAsync => {
                 if is_root {
@@ -155,7 +224,8 @@ impl KvWorker {
                     let mut c = comm.lock().unwrap();
                     let mut v = value;
                     c.bcast(0, &mut v);
-                    self.local.lock().unwrap().insert(key, v);
+                    drop(c);
+                    self.local_init_insert(key, v);
                 }
             }
         }
@@ -169,13 +239,17 @@ impl KvWorker {
         match self.ktype {
             KvType::Local => {
                 let store = self.local.clone();
+                let pre = self.local_pre_init.clone();
                 self.engine.push(
                     move || {
                         let mut s = store.lock().unwrap();
                         match s.get_mut(&key) {
                             Some(v) => crate::tensor::add_assign(v, &data),
                             None => {
-                                s.insert(key, data);
+                                // Same discipline as the PS servers
+                                // (§4.1.2): a push racing ahead of init is
+                                // buffered and replayed onto the init value.
+                                pre.lock().unwrap().entry(key).or_default().push(data);
                             }
                         }
                     },
@@ -194,13 +268,13 @@ impl KvWorker {
             KvType::SyncMpi | KvType::AsyncMpi => {
                 let comm = self.comm.clone().unwrap();
                 let ps = self.ps.clone();
-                let rings = self.n_rings;
+                let (kind, rings, group, cost) = self.algo_params();
                 self.engine.push(
                     move || {
                         let mut c = comm.lock().unwrap();
                         let mut buf = data;
                         // Aggregate across the MPI client first (§4.2.2)...
-                        multi_ring_allreduce(&mut c, &mut buf, rings);
+                        allreduce_with(kind, &mut c, &mut buf, rings, group, &cost);
                         // ...then only the master talks to the servers.
                         if c.rank() == 0 {
                             if let Some(ps) = &ps {
@@ -225,7 +299,19 @@ impl KvWorker {
                 let store = self.local.clone();
                 self.engine.push(
                     move || {
-                        let _ = reply.send(store.lock().unwrap()[&key].clone());
+                        let v = store
+                            .lock()
+                            .unwrap()
+                            .get(&key)
+                            .unwrap_or_else(|| {
+                                panic!(
+                                    "KVStore pull on uninitialized key {key}: \
+                                     call init() before pull() (pushes before \
+                                     init are buffered, not implicit inits)"
+                                )
+                            })
+                            .clone();
+                        let _ = reply.send(v);
                     },
                     &[kv],
                     &[],
@@ -254,7 +340,17 @@ impl KvWorker {
                                 Some(ps) => ps.lock().unwrap().pull(key),
                                 // Pure MPI: the "value" lives locally
                                 // (pushpull is the natural API there).
-                                None => local.lock().unwrap()[&key].clone(),
+                                None => local
+                                    .lock()
+                                    .unwrap()
+                                    .get(&key)
+                                    .unwrap_or_else(|| {
+                                        panic!(
+                                            "KVStore pull on uninitialized key \
+                                             {key} (pure MPI): call init() first"
+                                        )
+                                    })
+                                    .clone(),
                             };
                         }
                         c.bcast(0, &mut buf);
@@ -277,12 +373,12 @@ impl KvWorker {
             KvType::SyncMpi | KvType::AsyncMpi if self.ps.is_none() => {
                 let kv = self.key_var(key);
                 let comm = self.comm.clone().unwrap();
-                let rings = self.n_rings;
+                let (kind, rings, group, cost) = self.algo_params();
                 self.engine.push(
                     move || {
                         let mut c = comm.lock().unwrap();
                         let mut buf = data;
-                        multi_ring_allreduce(&mut c, &mut buf, rings);
+                        allreduce_with(kind, &mut c, &mut buf, rings, group, &cost);
                         let _ = reply.send(buf);
                     },
                     &[],
@@ -298,18 +394,68 @@ impl KvWorker {
         }
     }
 
+    /// Fused pushpull (§2.1 gradient bucketing): allreduce a whole batch
+    /// of per-key gradients in one engine op, coalescing consecutive small
+    /// keys into buckets of at most `fusion_bytes` bytes so each bucket
+    /// pays the per-message latency once. Results come back in input
+    /// order. On non-pure-MPI stores this degrades to per-key pushpull
+    /// composition.
+    pub fn pushpull_fused(&self, keyed: Vec<(Key, Vec<f32>)>) -> Pending<Vec<Vec<f32>>> {
+        let (reply, rx) = channel();
+        match self.ktype {
+            KvType::SyncMpi | KvType::AsyncMpi if self.ps.is_none() => {
+                let mut mutates = vec![self.comm_var];
+                mutates.extend(keyed.iter().map(|(k, _)| self.key_var(*k)));
+                let comm = self.comm.clone().unwrap();
+                let (kind, rings, group, cost) = self.algo_params();
+                let fusion_bytes = self.fusion_bytes;
+                self.engine.push(
+                    move || {
+                        let mut c = comm.lock().unwrap();
+                        let mut bufs: Vec<Vec<f32>> =
+                            keyed.into_iter().map(|(_, v)| v).collect();
+                        fused_allreduce(
+                            kind,
+                            &mut c,
+                            &mut bufs,
+                            fusion_bytes,
+                            rings,
+                            group,
+                            &cost,
+                        );
+                        let _ = reply.send(bufs);
+                    },
+                    &[],
+                    &mutates,
+                );
+                Pending(rx)
+            }
+            _ => {
+                let pends: Vec<Pending<Vec<f32>>> = keyed
+                    .into_iter()
+                    .map(|(k, v)| self.pushpull(k, v))
+                    .collect();
+                std::thread::spawn(move || {
+                    let out: Vec<Vec<f32>> = pends.into_iter().map(|p| p.wait()).collect();
+                    let _ = reply.send(out);
+                });
+                Pending(rx)
+            }
+        }
+    }
+
     /// Intra-client gradient aggregation (sync SGD *within* the
     /// communicator, §5 ESGD): a plain multi-ring allreduce across the MPI
     /// client, never touching the PS.
     pub fn client_allreduce(&self, data: Vec<f32>) -> Pending<Vec<f32>> {
         let (reply, rx) = channel();
         let comm = self.comm.clone().expect("client_allreduce needs MPI");
-        let rings = self.n_rings;
+        let (kind, rings, group, cost) = self.algo_params();
         self.engine.push(
             move || {
                 let mut c = comm.lock().unwrap();
                 let mut buf = data;
-                multi_ring_allreduce(&mut c, &mut buf, rings);
+                allreduce_with(kind, &mut c, &mut buf, rings, group, &cost);
                 let _ = reply.send(buf);
             },
             &[],
@@ -324,12 +470,12 @@ impl KvWorker {
         let (reply, rx) = channel();
         let kv = self.key_var(key);
         let comm = self.comm.clone().expect("tensor pushpull needs MPI");
-        let rings = self.n_rings;
+        let (kind, rings, group, cost) = self.algo_params();
         self.engine.push(
             move || {
                 let mut c = comm.lock().unwrap();
                 let mut t = tensor;
-                tensor_allreduce(&mut c, &mut t, rings, HostReduce::Host);
+                tensor_allreduce_with(kind, &mut c, &mut t, rings, group, &cost, HostReduce::Host);
                 let _ = reply.send(t);
             },
             &[],
@@ -492,6 +638,71 @@ mod tests {
             // (1 + 10) + (2 + 20) = 33 on every device vector.
             assert!(t.vecs.iter().all(|v| v.iter().all(|&x| x == 33.0)));
         }
+    }
+
+    #[test]
+    fn local_push_before_init_replays_on_init() {
+        // Same discipline as the PS pre_init queue: the racing push is
+        // folded into the init value, not treated as an implicit init.
+        let engine = Arc::new(Engine::new(1));
+        let kv = KvWorker::create(KvType::Local, engine, None, None);
+        kv.push(0, vec![2.0, 3.0]);
+        kv.wait_all();
+        kv.init(0, vec![10.0, 10.0], true);
+        assert_eq!(kv.pull(0).wait(), vec![12.0, 13.0]);
+    }
+
+    #[test]
+    fn pushpull_fused_pure_mpi_matches_per_key() {
+        for (algo, fusion) in [
+            (AlgoKind::Ring, 0usize),
+            (AlgoKind::Ring, 1 << 20),
+            (AlgoKind::HalvingDoubling, 1 << 20),
+            (AlgoKind::Hierarchical, 256),
+            (AlgoKind::Auto, 1 << 20),
+        ] {
+            let comms = World::create(3);
+            let hs: Vec<_> = comms
+                .into_iter()
+                .map(|comm| {
+                    thread::spawn(move || {
+                        let engine = Arc::new(Engine::new(1));
+                        let mut kv =
+                            KvWorker::create(KvType::SyncMpi, engine, Some(comm), None);
+                        kv.algo = algo;
+                        kv.fusion_bytes = fusion;
+                        let keyed: Vec<(usize, Vec<f32>)> = (0..4)
+                            .map(|k| (k, vec![(k + 1) as f32; 5 + k]))
+                            .collect();
+                        kv.pushpull_fused(keyed).wait()
+                    })
+                })
+                .collect();
+            for h in hs {
+                let out = h.join().unwrap();
+                assert_eq!(out.len(), 4);
+                for (k, buf) in out.iter().enumerate() {
+                    assert_eq!(buf.len(), 5 + k);
+                    assert!(
+                        buf.iter().all(|&x| x == 3.0 * (k + 1) as f32),
+                        "algo {algo:?} fusion {fusion} key {k}: {buf:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pushpull_fused_falls_back_without_mpi() {
+        let engine = Arc::new(Engine::new(1));
+        let kv = KvWorker::create(KvType::Local, engine, None, None);
+        kv.init(0, vec![0.0; 2], true);
+        kv.init(1, vec![1.0; 3], true);
+        let out = kv
+            .pushpull_fused(vec![(0, vec![2.0; 2]), (1, vec![2.0; 3])])
+            .wait();
+        assert_eq!(out[0], vec![2.0; 2]);
+        assert_eq!(out[1], vec![3.0; 3]);
     }
 
     #[test]

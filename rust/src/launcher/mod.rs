@@ -8,10 +8,12 @@
 //! threads each get a fully wired [`WorkerCtx`] (PS rank, client id, MPI
 //! communicator, KVStore endpoint).
 
-use crate::config::Algo;
+use crate::collectives::AlgoKind;
+use crate::config::{Algo, ExperimentConfig};
 use crate::engine::Engine;
 use crate::kvstore::{KvType, KvWorker};
 use crate::mpisim::{Comm, World};
+use crate::netsim::CostParams;
 use crate::ps::{PsClient, Role, Scheduler, ServerGroup, SyncMode};
 use std::sync::Arc;
 
@@ -25,6 +27,16 @@ pub struct JobSpec {
     pub server_mode: SyncMode,
     /// Engine threads per worker.
     pub engine_threads: usize,
+    /// Intra-client allreduce schedule (the `collective` config knob).
+    pub collective: AlgoKind,
+    /// Gradient-fusion bucket cap in bytes (0 disables).
+    pub fusion_bytes: usize,
+    /// Rings for the multi-ring tensor allreduce (§6.3.2).
+    pub rings: usize,
+    /// Group size for the hierarchical schedule.
+    pub group: usize,
+    /// Cost-model constants the `Auto` schedule tunes against.
+    pub cost: CostParams,
 }
 
 impl JobSpec {
@@ -36,7 +48,25 @@ impl JobSpec {
             ktype: algo.kv_type(),
             server_mode: algo.server_mode(),
             engine_threads: 1,
+            collective: AlgoKind::Ring,
+            fusion_bytes: 0,
+            rings: 2,
+            group: 2,
+            cost: CostParams::testbed1(),
         }
+    }
+
+    /// Full wiring from an experiment config, collective layer included:
+    /// schedule, fusion cap, ring count, hierarchical group size and the
+    /// testbed cost constants the `Auto` autotuner consults.
+    pub fn from_config(cfg: &ExperimentConfig) -> Self {
+        let mut spec = Self::from_algo(cfg.algo, cfg.workers, cfg.servers, cfg.clients);
+        spec.collective = cfg.collective_kind();
+        spec.fusion_bytes = cfg.fusion_bytes;
+        spec.rings = cfg.rings.max(1);
+        spec.cost = cfg.cost_params();
+        spec.group = spec.cost.gpus_per_worker.max(1);
+        spec
     }
 
     /// Pushes per key per sync round: clients for MPI modes (only masters
@@ -118,13 +148,16 @@ where
             let ktype = spec.ktype;
             let engine_threads = spec.engine_threads;
             let (workers, clients) = (spec.workers, spec.clients);
+            let (collective, fusion_bytes) = (spec.collective, spec.fusion_bytes);
+            let (rings, group, cost) = (spec.rings, spec.group, spec.cost.clone());
             handles.push(std::thread::Builder::new()
                 .name(format!("worker-{ps_rank}"))
                 .spawn(move || {
                     sched.register(Role::Worker);
                     let engine = Arc::new(Engine::new(engine_threads));
                     let comm_opt = if ktype.is_mpi() { Some(comm) } else { None };
-                    let kv = KvWorker::create(ktype, engine.clone(), comm_opt, ps_client);
+                    let mut kv = KvWorker::create(ktype, engine.clone(), comm_opt, ps_client);
+                    kv.configure_collective(collective, rings, group, fusion_bytes, cost);
                     let ctx = WorkerCtx {
                         ps_rank,
                         client_id,
@@ -166,6 +199,11 @@ mod tests {
             ktype: KvType::SyncMpi,
             server_mode: SyncMode::Sync,
             engine_threads: 1,
+            collective: AlgoKind::Ring,
+            fusion_bytes: 0,
+            rings: 2,
+            group: 2,
+            cost: CostParams::testbed1(),
         };
         let out = launch(&spec, |ctx| {
             let v = ctx.kv.pushpull(0, vec![1.0, (ctx.ps_rank + 1) as f32]).wait();
@@ -186,6 +224,11 @@ mod tests {
             ktype: KvType::SyncMpi,
             server_mode: SyncMode::Sync,
             engine_threads: 1,
+            collective: AlgoKind::Ring,
+            fusion_bytes: 0,
+            rings: 2,
+            group: 2,
+            cost: CostParams::testbed1(),
         };
         let out = launch(&spec, |ctx| {
             let v = ctx.kv.pushpull(0, vec![1.0]).wait();
@@ -251,6 +294,11 @@ mod tests {
             ktype: KvType::SyncMpi,
             server_mode: SyncMode::Sync,
             engine_threads: 1,
+            collective: AlgoKind::Ring,
+            fusion_bytes: 0,
+            rings: 2,
+            group: 2,
+            cost: CostParams::testbed1(),
         };
         launch(&spec, |_| ());
     }

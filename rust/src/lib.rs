@@ -8,11 +8,15 @@
 //!
 //! * **L3 (this crate)** — PS tasks (scheduler / servers / workers), a
 //!   simulated MPI library ([`mpisim`]), the hybrid [`kvstore`] API with
-//!   communication embedded in a dataflow [`engine`], the paper's tensor
-//!   [`collectives`], an α-β-γ network simulator ([`netsim`]) and the
-//!   distributed SGD [`trainer`]s (dist/mpi × SGD/ASGD/ESGD).
+//!   communication embedded in a dataflow [`engine`], the paper's
+//!   pluggable tensor [`collectives`] (ring / halving-doubling /
+//!   hierarchical + α-β-γ autotuner and gradient fusion), a network
+//!   simulator ([`netsim`]) and the distributed SGD [`trainer`]s
+//!   (dist/mpi × SGD/ASGD/ESGD).
 //! * **L2/L1 (python, build-time only)** — JAX model fwd/bwd + Pallas
-//!   kernels, AOT-lowered to HLO text loaded by [`runtime`] via PJRT.
+//!   kernels. The AOT artifacts (`meta.json`, `init.bin`) feed
+//!   [`runtime`], whose native CPU kernels mirror the JAX models exactly
+//!   (the offline image has no PJRT; see `runtime/native.rs`).
 //!
 //! See `DESIGN.md` for the system inventory and experiment index.
 

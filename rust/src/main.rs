@@ -26,6 +26,8 @@ fn usage() -> ! {
            --variant NAME         model variant (default mlp)\n\
            --workers N --servers N --clients N\n\
            --epochs N --batch-epochs SAMPLES --lr F --alpha F --interval N\n\
+           --collective ring|halving_doubling|hierarchical|auto\n\
+           --fusion-bytes N       gradient-fusion bucket cap (0 = off)\n\
            --config FILE.json     load an ExperimentConfig (flags override)\n\
            --artifacts DIR        (default ./artifacts)\n\
            --out DIR              results dir (default ./results)",
@@ -84,6 +86,13 @@ fn build_config(args: &Args) -> Result<ExperimentConfig> {
     if let Some(v) = args.get("variant") {
         cfg.variant = v.into();
     }
+    if let Some(v) = args.get("collective") {
+        anyhow::ensure!(
+            mxnet_mpi::collectives::AlgoKind::parse(v).is_some(),
+            "unknown collective {v:?} (valid: ring, halving_doubling, hierarchical, auto)"
+        );
+        cfg.collective = v.into();
+    }
     macro_rules! ovr {
         ($field:ident, $flag:expr, $ty:ty) => {
             if let Some(v) = args.num::<$ty>($flag) {
@@ -100,6 +109,7 @@ fn build_config(args: &Args) -> Result<ExperimentConfig> {
     ovr!(alpha, "alpha", f32);
     ovr!(interval, "interval", usize);
     ovr!(rings, "rings", usize);
+    ovr!(fusion_bytes, "fusion-bytes", usize);
     ovr!(seed, "seed", u64);
     Ok(cfg)
 }

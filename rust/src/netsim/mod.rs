@@ -57,6 +57,12 @@ pub struct CostParams {
     pub gpu_sync: f64,
     /// GPUs per node-tensor (2 per Minsky socket-worker).
     pub gpus_per_worker: usize,
+    /// Fabric-contention surcharge on the per-byte cost of recursive
+    /// halving-doubling: its distance-2^k exchanges cross shared switch
+    /// links, while bucket-ring traffic stays on neighbor links (Shi et
+    /// al., arXiv:1711.05979). Drives the small/large-message crossover in
+    /// [`crate::collectives::sim::select_best`].
+    pub hd_contention: f64,
 }
 
 impl CostParams {
@@ -76,6 +82,7 @@ impl CostParams {
             beta_h2d: 1.0 / 16.0e9, // PCIe-class staging copy
             gpu_sync: 20e-6,
             gpus_per_worker: 2,
+            hd_contention: 0.3,
         }
     }
 
@@ -96,6 +103,7 @@ impl CostParams {
             beta_h2d: 1.0 / 10.0e9,
             gpu_sync: 25e-6,
             gpus_per_worker: 2,
+            hd_contention: 0.35,
         }
     }
 }

@@ -1,107 +1,41 @@
-//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//! Model runtime: load AOT artifacts (`meta.json` + `*_init.bin`) and
+//! execute the model variants.
 //!
-//! This is the only place Python's output touches Rust: `make artifacts`
-//! lowers the L2/L1 JAX+Pallas stack to `artifacts/*.hlo.txt`; here we
-//! parse that text into an `HloModuleProto`, compile it on the PJRT CPU
-//! client and execute it from the training hot path. Text (never
-//! `.serialize()`d protos) is the interchange format — jax >= 0.5 emits
-//! 64-bit instruction ids that xla_extension 0.5.1 rejects, while the text
-//! parser reassigns ids.
+//! Historically this was a PJRT bridge that compiled HLO text lowered by
+//! `python/compile/aot.py`. The offline build image has neither the `xla`
+//! crate nor a network to fetch one, so execution now goes through
+//! [`native`]: hand-written CPU kernels mirroring the JAX models
+//! bit-for-bit in architecture and loss convention (validated against
+//! `jax.value_and_grad`, see `native.rs`). The artifact *interface* is
+//! unchanged — `meta.json` still carries shapes, per-layer segments
+//! (KVStore keys) and the deterministic `init.bin` produced by the Python
+//! side — so `make artifacts` regenerating them stays compatible.
 //!
-//! `PjRtClient` is `Rc`-backed (not `Send`), so multi-threaded users go
-//! through [`service::ModelService`], a dedicated thread that owns every
-//! executable (the "device service" — the analog of the GPUs all workers
-//! on a node share).
+//! Worker threads share one model through [`service::ModelService`], the
+//! analog of the node's device queue (all DL workers of a node share its
+//! GPUs in the paper).
 
+pub mod native;
 pub mod service;
 
 use crate::jsonlite::{self, Value};
 use crate::tensor::{Segment, SegmentTable};
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
+use native::{MlpModel, NativeModel, TransformerModel};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-/// A compiled HLO module ready to execute.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    pub name: String,
-}
-
-/// Typed input buffer for [`Executable::run`].
-pub enum Input<'a> {
-    F32(&'a [f32], &'a [i64]),
-    I32(&'a [i32], &'a [i64]),
-}
-
-impl Input<'_> {
-    /// Upload to a device buffer. We deliberately avoid
-    /// `PjRtLoadedExecutable::execute` (xla 0.1.6 leaks every input device
-    /// buffer it creates from host literals — `release()` without a
-    /// matching free in `xla_rs.cc::execute`); `buffer_from_host_buffer` +
-    /// `execute_b` keeps ownership on the Rust side, where `PjRtBuffer`'s
-    /// `Drop` frees it.
-    fn to_buffer(&self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
-        let dims_usize = |dims: &[i64]| dims.iter().map(|&d| d as usize).collect::<Vec<_>>();
-        Ok(match self {
-            Input::F32(data, dims) => {
-                client.buffer_from_host_buffer(data, &dims_usize(dims), None)?
-            }
-            Input::I32(data, dims) => {
-                client.buffer_from_host_buffer(data, &dims_usize(dims), None)?
-            }
-        })
-    }
-}
-
-impl Executable {
-    /// Execute with host inputs; returns the elements of the root tuple
-    /// (aot.py lowers everything with `return_tuple=True`).
-    pub fn run(&self, inputs: &[Input<'_>]) -> Result<Vec<xla::Literal>> {
-        let client = self.exe.client();
-        let bufs: Vec<xla::PjRtBuffer> = inputs
-            .iter()
-            .map(|i| i.to_buffer(client))
-            .collect::<Result<_>>()?;
-        let out = self.exe.execute_b::<xla::PjRtBuffer>(&bufs)?;
-        let root = out[0][0]
-            .to_literal_sync()
-            .with_context(|| format!("fetching result of {}", self.name))?;
-        Ok(root.to_tuple()?)
-    }
-}
-
-/// The PJRT CPU client + executable loader.
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
+/// The execution backend handle. Kept as an explicit object so the PJRT
+/// client can slot back in behind the same API when the toolchain has it.
+pub struct Runtime;
 
 impl Runtime {
     pub fn cpu() -> Result<Self> {
-        Ok(Self { client: xla::PjRtClient::cpu()? })
+        Ok(Self)
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile one HLO text artifact.
-    pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 path")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        Ok(Executable {
-            exe,
-            name: path
-                .file_name()
-                .map(|s| s.to_string_lossy().into_owned())
-                .unwrap_or_default(),
-        })
+        "native-cpu".to_string()
     }
 }
 
@@ -120,6 +54,8 @@ pub enum XData {
 #[derive(Debug, Clone)]
 pub struct ModelMeta {
     pub variant: String,
+    /// Python config class name ("MlpConfig" / "TransformerConfig").
+    pub kind: String,
     pub params: usize,
     pub x_shape: Vec<i64>,
     pub x_dtype: String,
@@ -177,11 +113,26 @@ impl ModelMeta {
             .iter()
             .map(|(k, val)| (k.clone(), val.as_str().unwrap_or("").to_string()))
             .collect();
+        let x_dtype = v.req("x")?.req("dtype")?.as_str().context("dtype")?.to_string();
+        let kind = v
+            .get("kind")
+            .and_then(|k| k.as_str())
+            .map(|s| s.to_string())
+            // Older meta.json files carry no kind; the input dtype
+            // distinguishes the two families.
+            .unwrap_or_else(|| {
+                if x_dtype == "int32" {
+                    "TransformerConfig".to_string()
+                } else {
+                    "MlpConfig".to_string()
+                }
+            });
         Ok(Self {
             variant: variant.to_string(),
+            kind,
             params: v.req("params")?.as_usize().context("params")?,
             x_shape: shape(v.req("x")?)?,
-            x_dtype: v.req("x")?.req("dtype")?.as_str().context("dtype")?.to_string(),
+            x_dtype,
             y_shape: shape(v.req("y")?)?,
             segments,
             artifacts,
@@ -219,75 +170,161 @@ impl ModelMeta {
 }
 
 // ---------------------------------------------------------------------------
-// Model: all executables of one variant, single-threaded
+// Model: all entry points of one variant, single-threaded
 // ---------------------------------------------------------------------------
 
-/// All compiled entry points for one model variant (single-thread use; see
+/// All entry points of one model variant (single-thread use; see
 /// [`service::ModelService`] for the shared-thread version).
 pub struct Model {
     pub meta: ModelMeta,
-    grad: Executable,
-    eval: Executable,
-    sgd: Executable,
-    elastic1: Executable,
-    elastic2: Executable,
+    native: NativeModel,
 }
 
 impl Model {
-    pub fn load(rt: &Runtime, artifacts_dir: &Path, variant: &str) -> Result<Self> {
+    pub fn load(_rt: &Runtime, artifacts_dir: &Path, variant: &str) -> Result<Self> {
         let meta = ModelMeta::load(artifacts_dir, variant)?;
-        Ok(Self {
-            grad: rt.load_hlo(&meta.artifact_path("grad")?)?,
-            eval: rt.load_hlo(&meta.artifact_path("eval")?)?,
-            sgd: rt.load_hlo(&meta.artifact_path("sgd")?)?,
-            elastic1: rt.load_hlo(&meta.artifact_path("elastic1")?)?,
-            elastic2: rt.load_hlo(&meta.artifact_path("elastic2")?)?,
-            meta,
-        })
+        let native = Self::build_native(&meta)?;
+        Ok(Self { meta, native })
     }
 
-    fn x_input<'a>(&'a self, x: &'a XData) -> Result<Input<'a>> {
-        Ok(match x {
-            XData::F32(d) => {
-                anyhow::ensure!(self.meta.x_dtype == "float32", "x dtype mismatch");
-                Input::F32(d, &self.meta.x_shape)
+    fn build_native(meta: &ModelMeta) -> Result<NativeModel> {
+        let num = |key: &str| -> Result<usize> {
+            meta.config_num(key)
+                .map(|v| v as usize)
+                .with_context(|| format!("config key {key:?} missing for {}", meta.variant))
+        };
+        let batch = meta.batch_size();
+        anyhow::ensure!(batch > 0, "empty batch dimension");
+        anyhow::ensure!(
+            meta.x_shape.len() == 2 && meta.x_shape[1] > 0,
+            "x shape must be [batch, dim/seq], got {:?}",
+            meta.x_shape
+        );
+        let model = match meta.kind.as_str() {
+            "MlpConfig" => {
+                anyhow::ensure!(meta.x_dtype == "float32", "MLP expects float32 inputs");
+                NativeModel::Mlp(MlpModel {
+                    batch,
+                    input_dim: meta.x_shape[1] as usize,
+                    hidden: num("hidden")?,
+                    blocks: num("blocks")?,
+                    classes: num("classes")?,
+                })
             }
-            XData::I32(d) => {
-                anyhow::ensure!(self.meta.x_dtype == "int32", "x dtype mismatch");
-                Input::I32(d, &self.meta.x_shape)
+            "TransformerConfig" => {
+                anyhow::ensure!(meta.x_dtype == "int32", "transformer expects int32 tokens");
+                let d_model = num("d_model")?;
+                let n_heads = num("n_heads")?;
+                anyhow::ensure!(
+                    n_heads > 0 && d_model % n_heads == 0,
+                    "d_model must divide into heads"
+                );
+                let d_ff = match num("d_ff") {
+                    Ok(f) if f > 0 => f,
+                    _ => 4 * d_model,
+                };
+                NativeModel::Transformer(TransformerModel {
+                    batch,
+                    seq: meta.x_shape[1] as usize,
+                    vocab: num("vocab")?,
+                    d_model,
+                    n_heads,
+                    n_layers: num("n_layers")?,
+                    d_ff,
+                })
             }
-        })
+            other => bail!("unknown model kind {other:?} for {}", meta.variant),
+        };
+        // Fail at load time (not first step) if the segment table does not
+        // carry the parameters the kernels will address.
+        for name in Self::required_segments(&model) {
+            anyhow::ensure!(
+                meta.segments.by_name(&name).is_some(),
+                "segment {name:?} missing from meta.json for {}",
+                meta.variant
+            );
+        }
+        Ok(model)
+    }
+
+    fn required_segments(model: &NativeModel) -> Vec<String> {
+        match model {
+            NativeModel::Mlp(m) => {
+                let mut names = vec!["in.w".into(), "in.b".into()];
+                for i in 0..m.blocks {
+                    for part in ["w1", "b1", "w2", "b2"] {
+                        names.push(format!("block{i}.{part}"));
+                    }
+                }
+                names.push("head.w".into());
+                names.push("head.b".into());
+                names
+            }
+            NativeModel::Transformer(t) => {
+                let mut names = vec!["embed".into(), "pos".into()];
+                for i in 0..t.n_layers {
+                    for part in [
+                        "ln1.scale", "ln1.bias", "qkv", "attn_out", "ln2.scale", "ln2.bias",
+                        "ff1", "ff1_b", "ff2", "ff2_b",
+                    ] {
+                        names.push(format!("layer{i}.{part}"));
+                    }
+                }
+                names.push("lnf.scale".into());
+                names.push("lnf.bias".into());
+                names
+            }
+        }
+    }
+
+    fn check_inputs(&self, params: &[f32], x: &XData, y: &[i32]) -> Result<()> {
+        anyhow::ensure!(
+            params.len() == self.meta.params,
+            "params length {} != {}",
+            params.len(),
+            self.meta.params
+        );
+        let want_x: usize = self.meta.x_shape.iter().map(|&d| d as usize).product();
+        let got_x = match x {
+            XData::F32(d) => d.len(),
+            XData::I32(d) => d.len(),
+        };
+        anyhow::ensure!(got_x == want_x, "x length {got_x} != {want_x}");
+        let want_y: usize = self.meta.y_shape.iter().map(|&d| d as usize).product();
+        anyhow::ensure!(y.len() == want_y, "labels length {} != {}", y.len(), want_y);
+        Ok(())
     }
 
     /// Forward+backward: returns (loss, flat gradients).
     pub fn grad_step(&self, params: &[f32], x: &XData, y: &[i32]) -> Result<(f32, Vec<f32>)> {
-        let n = self.meta.params as i64;
-        let out = self.grad.run(&[
-            Input::F32(params, &[n]),
-            self.x_input(x)?,
-            Input::I32(y, &self.meta.y_shape),
-        ])?;
-        let loss = out[0].get_first_element::<f32>()?;
-        let grads = out[1].to_vec::<f32>()?;
-        Ok((loss, grads))
+        self.check_inputs(params, x, y)?;
+        match (&self.native, x) {
+            (NativeModel::Mlp(m), XData::F32(d)) => {
+                Ok(m.grad_step(&self.meta.segments, params, d, y))
+            }
+            (NativeModel::Transformer(t), XData::I32(d)) => {
+                Ok(t.grad_step(&self.meta.segments, params, d, y))
+            }
+            _ => bail!("x dtype mismatch for variant {}", self.meta.variant),
+        }
     }
 
     /// Evaluation: returns (loss, #correct predictions in batch).
     pub fn eval_step(&self, params: &[f32], x: &XData, y: &[i32]) -> Result<(f32, i32)> {
-        let n = self.meta.params as i64;
-        let out = self.eval.run(&[
-            Input::F32(params, &[n]),
-            self.x_input(x)?,
-            Input::I32(y, &self.meta.y_shape),
-        ])?;
-        Ok((
-            out[0].get_first_element::<f32>()?,
-            out[1].get_first_element::<i32>()?,
-        ))
+        self.check_inputs(params, x, y)?;
+        match (&self.native, x) {
+            (NativeModel::Mlp(m), XData::F32(d)) => {
+                Ok(m.eval_step(&self.meta.segments, params, d, y))
+            }
+            (NativeModel::Transformer(t), XData::I32(d)) => {
+                Ok(t.eval_step(&self.meta.segments, params, d, y))
+            }
+            _ => bail!("x dtype mismatch for variant {}", self.meta.variant),
+        }
     }
 
-    /// Fused SGD update via the compiled Pallas kernel:
-    /// `(w, m) <- sgd(hyper, w, g, m)`.
+    /// Fused SGD update (the math of the `sgd_update` Pallas kernel):
+    /// `g_eff = rescale*g + wd*w; m = momentum*m + g_eff; w -= lr*m`.
     pub fn sgd_update(
         &self,
         w: &mut Vec<f32>,
@@ -295,40 +332,30 @@ impl Model {
         m: &mut Vec<f32>,
         hyper: &crate::optimizer::SgdHyper,
     ) -> Result<()> {
-        let n = self.meta.params as i64;
-        let h = hyper.as_vec();
-        let out = self.sgd.run(&[
-            Input::F32(&h, &[4]),
-            Input::F32(w, &[n]),
-            Input::F32(g, &[n]),
-            Input::F32(m, &[n]),
-        ])?;
-        *w = out[0].to_vec::<f32>()?;
-        *m = out[1].to_vec::<f32>()?;
+        anyhow::ensure!(w.len() == g.len() && w.len() == m.len(), "sgd length mismatch");
+        for i in 0..w.len() {
+            let g_eff = hyper.rescale * g[i] + hyper.weight_decay * w[i];
+            m[i] = hyper.momentum * m[i] + g_eff;
+            w[i] -= hyper.lr * m[i];
+        }
         Ok(())
     }
 
-    /// Server-side elastic update (eq. 2): `center <- elastic1(alpha, center, w)`.
+    /// Server-side elastic update (eq. 2): `center += alpha (w - center)`.
     pub fn elastic1(&self, center: &mut Vec<f32>, w: &[f32], alpha: f32) -> Result<()> {
-        let n = self.meta.params as i64;
-        let out = self.elastic1.run(&[
-            Input::F32(&[alpha], &[1]),
-            Input::F32(center, &[n]),
-            Input::F32(w, &[n]),
-        ])?;
-        *center = out[0].to_vec::<f32>()?;
+        anyhow::ensure!(center.len() == w.len(), "elastic1 length mismatch");
+        for i in 0..center.len() {
+            center[i] += alpha * (w[i] - center[i]);
+        }
         Ok(())
     }
 
-    /// Client-side elastic update (eq. 3): `w <- elastic2(alpha, w, center)`.
+    /// Client-side elastic update (eq. 3): `w -= alpha (w - center)`.
     pub fn elastic2(&self, w: &mut Vec<f32>, center: &[f32], alpha: f32) -> Result<()> {
-        let n = self.meta.params as i64;
-        let out = self.elastic2.run(&[
-            Input::F32(&[alpha], &[1]),
-            Input::F32(w, &[n]),
-            Input::F32(center, &[n]),
-        ])?;
-        *w = out[0].to_vec::<f32>()?;
+        anyhow::ensure!(w.len() == center.len(), "elastic2 length mismatch");
+        for i in 0..w.len() {
+            w[i] -= alpha * (w[i] - center[i]);
+        }
         Ok(())
     }
 }

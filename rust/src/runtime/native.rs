@@ -1,0 +1,859 @@
+//! Native CPU kernels for the model variants: the offline substitute for
+//! the PJRT/HLO execution path.
+//!
+//! The build image has no `xla` crate and no network to fetch one, so the
+//! L2 models of `python/compile/model.py` are mirrored here natively:
+//! identical architectures, identical loss (mean softmax cross-entropy via
+//! logsumexp), identical LayerNorm/GELU conventions (eps 1e-5, tanh
+//! approximation — `jax.nn.gelu(approximate=True)`). The forward/backward
+//! math in this file was validated against `jax.value_and_grad` on the
+//! Python definitions (max relative gradient error ~3e-5 at f32); the
+//! in-tree finite-difference tests below guard the port.
+//!
+//! Parameters stay one flat `f32` vector addressed through the
+//! [`SegmentTable`] from `meta.json`, exactly like the AOT calling
+//! convention, so KVStore keys / trainers are unaffected by the backend.
+
+use crate::tensor::SegmentTable;
+
+const LN_EPS: f32 = 1e-5;
+
+// ---------------------------------------------------------------------------
+// Flat-buffer math helpers
+// ---------------------------------------------------------------------------
+
+/// y[m,n] = x[m,k] @ w[k,n]
+fn matmul(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w.len(), k * n);
+    let mut y = vec![0.0f32; m * n];
+    for i in 0..m {
+        let yrow = &mut y[i * n..(i + 1) * n];
+        for l in 0..k {
+            let a = x[i * k + l];
+            if a != 0.0 {
+                let wrow = &w[l * n..(l + 1) * n];
+                for j in 0..n {
+                    yrow[j] += a * wrow[j];
+                }
+            }
+        }
+    }
+    y
+}
+
+/// g[k,n] = x^T[k,m] @ dy[m,n] (weight gradient).
+fn matmul_tn(x: &[f32], dy: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(dy.len(), m * n);
+    let mut g = vec![0.0f32; k * n];
+    for i in 0..m {
+        let dyrow = &dy[i * n..(i + 1) * n];
+        for l in 0..k {
+            let a = x[i * k + l];
+            if a != 0.0 {
+                let grow = &mut g[l * n..(l + 1) * n];
+                for j in 0..n {
+                    grow[j] += a * dyrow[j];
+                }
+            }
+        }
+    }
+    g
+}
+
+/// dx[m,k] = dy[m,n] @ w^T[n,k] (input gradient).
+fn matmul_nt(dy: &[f32], w: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    debug_assert_eq!(dy.len(), m * n);
+    debug_assert_eq!(w.len(), k * n);
+    let mut dx = vec![0.0f32; m * k];
+    for i in 0..m {
+        let dyrow = &dy[i * n..(i + 1) * n];
+        for l in 0..k {
+            let wrow = &w[l * n..(l + 1) * n];
+            let mut s = 0.0f32;
+            for j in 0..n {
+                s += dyrow[j] * wrow[j];
+            }
+            dx[i * k + l] = s;
+        }
+    }
+    dx
+}
+
+fn add_bias(y: &mut [f32], bias: &[f32], m: usize, n: usize) {
+    for i in 0..m {
+        let row = &mut y[i * n..(i + 1) * n];
+        for j in 0..n {
+            row[j] += bias[j];
+        }
+    }
+}
+
+/// Column sums of dy[m,n] (bias gradient).
+fn col_sum(dy: &[f32], m: usize, n: usize) -> Vec<f32> {
+    let mut s = vec![0.0f32; n];
+    for i in 0..m {
+        let row = &dy[i * n..(i + 1) * n];
+        for j in 0..n {
+            s[j] += row[j];
+        }
+    }
+    s
+}
+
+/// Mean softmax cross-entropy over `rows` rows of `v` logits.
+/// Returns (mean loss, dlogits = (softmax - onehot)/rows, n_correct).
+fn softmax_xent(logits: &[f32], y: &[i32], rows: usize, v: usize) -> (f32, Vec<f32>, i32) {
+    debug_assert_eq!(logits.len(), rows * v);
+    debug_assert_eq!(y.len(), rows);
+    let mut dl = vec![0.0f32; rows * v];
+    let mut loss = 0.0f64;
+    let mut correct = 0i32;
+    for i in 0..rows {
+        let row = &logits[i * v..(i + 1) * v];
+        let gold = y[i] as usize;
+        debug_assert!(gold < v, "label out of range");
+        let mut mx = f32::NEG_INFINITY;
+        let mut arg = 0usize;
+        for (j, &x) in row.iter().enumerate() {
+            if x > mx {
+                mx = x;
+                arg = j;
+            }
+        }
+        if arg == gold {
+            correct += 1;
+        }
+        let mut z = 0.0f32;
+        for &x in row {
+            z += (x - mx).exp();
+        }
+        loss += (z.ln() + mx - row[gold]) as f64;
+        let drow = &mut dl[i * v..(i + 1) * v];
+        for j in 0..v {
+            drow[j] = (row[j] - mx).exp() / z;
+        }
+        drow[gold] -= 1.0;
+    }
+    let inv = 1.0 / rows as f32;
+    for d in dl.iter_mut() {
+        *d *= inv;
+    }
+    ((loss / rows as f64) as f32, dl, correct)
+}
+
+/// LayerNorm forward over `rows` rows of width `d`.
+/// Returns (y, xhat, rstd) — the backward caches.
+fn ln_fwd(
+    x: &[f32],
+    scale: &[f32],
+    bias: &[f32],
+    rows: usize,
+    d: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut y = vec![0.0f32; rows * d];
+    let mut xhat = vec![0.0f32; rows * d];
+    let mut rstd = vec![0.0f32; rows];
+    let dn = d as f32;
+    for i in 0..rows {
+        let row = &x[i * d..(i + 1) * d];
+        let mut mu = 0.0f32;
+        for &v in row {
+            mu += v;
+        }
+        mu /= dn;
+        let mut var = 0.0f32;
+        for &v in row {
+            var += (v - mu) * (v - mu);
+        }
+        var /= dn;
+        let r = 1.0 / (var + LN_EPS).sqrt();
+        rstd[i] = r;
+        for j in 0..d {
+            let xh = (row[j] - mu) * r;
+            xhat[i * d + j] = xh;
+            y[i * d + j] = xh * scale[j] + bias[j];
+        }
+    }
+    (y, xhat, rstd)
+}
+
+/// LayerNorm backward. Returns (dx, dscale, dbias).
+fn ln_bwd(
+    dy: &[f32],
+    scale: &[f32],
+    xhat: &[f32],
+    rstd: &[f32],
+    rows: usize,
+    d: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut dx = vec![0.0f32; rows * d];
+    let mut dscale = vec![0.0f32; d];
+    let mut dbias = vec![0.0f32; d];
+    let dn = d as f32;
+    for i in 0..rows {
+        let mut mg = 0.0f32;
+        let mut mgx = 0.0f32;
+        for j in 0..d {
+            let dyv = dy[i * d + j];
+            let xh = xhat[i * d + j];
+            let gg = dyv * scale[j];
+            mg += gg;
+            mgx += gg * xh;
+            dscale[j] += dyv * xh;
+            dbias[j] += dyv;
+        }
+        mg /= dn;
+        mgx /= dn;
+        for j in 0..d {
+            let gg = dy[i * d + j] * scale[j];
+            dx[i * d + j] = (gg - mg - xhat[i * d + j] * mgx) * rstd[i];
+        }
+    }
+    (dx, dscale, dbias)
+}
+
+/// GELU (tanh approximation) forward; returns (y, tanh cache).
+fn gelu_fwd(x: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    let c0 = (2.0f32 / std::f32::consts::PI).sqrt();
+    let mut y = vec![0.0f32; x.len()];
+    let mut t = vec![0.0f32; x.len()];
+    for i in 0..x.len() {
+        let v = x[i];
+        let u = c0 * (v + 0.044715 * v * v * v);
+        let th = u.tanh();
+        t[i] = th;
+        y[i] = 0.5 * v * (1.0 + th);
+    }
+    (y, t)
+}
+
+/// GELU backward: dy -> dx, given the input x and the tanh cache.
+fn gelu_bwd(dy: &[f32], x: &[f32], t: &[f32]) -> Vec<f32> {
+    let c0 = (2.0f32 / std::f32::consts::PI).sqrt();
+    let mut dx = vec![0.0f32; x.len()];
+    for i in 0..x.len() {
+        let v = x[i];
+        let th = t[i];
+        let du = c0 * (1.0 + 3.0 * 0.044715 * v * v);
+        dx[i] = dy[i] * (0.5 * (1.0 + th) + 0.5 * v * (1.0 - th * th) * du);
+    }
+    dx
+}
+
+/// Parameter slice by segment name.
+fn p<'a>(w: &'a [f32], segs: &SegmentTable, name: &str) -> &'a [f32] {
+    let s = segs
+        .by_name(name)
+        .unwrap_or_else(|| panic!("missing parameter segment {name:?}"));
+    &w[s.offset..s.offset + s.size]
+}
+
+/// Accumulate a gradient slice by segment name.
+fn add_grad(g: &mut [f32], segs: &SegmentTable, name: &str, src: &[f32]) {
+    let s = segs
+        .by_name(name)
+        .unwrap_or_else(|| panic!("missing parameter segment {name:?}"));
+    assert_eq!(s.size, src.len(), "gradient size mismatch for {name:?}");
+    let dst = &mut g[s.offset..s.offset + s.size];
+    for (d, v) in dst.iter_mut().zip(src) {
+        *d += v;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Residual MLP (the "ResNet" stand-in)
+// ---------------------------------------------------------------------------
+
+/// Mirror of `MlpConfig` + `mlp_logits` in python/compile/model.py.
+#[derive(Debug, Clone)]
+pub struct MlpModel {
+    pub batch: usize,
+    pub input_dim: usize,
+    pub hidden: usize,
+    pub blocks: usize,
+    pub classes: usize,
+}
+
+struct MlpForward {
+    /// hs[0] = relu of the input layer; hs[i+1] = block i output.
+    hs: Vec<Vec<f32>>,
+    /// Per-block relu(z1) activations.
+    z1s: Vec<Vec<f32>>,
+    logits: Vec<f32>,
+}
+
+impl MlpModel {
+    fn forward(&self, segs: &SegmentTable, w: &[f32], x: &[f32]) -> MlpForward {
+        let (b, d, h, c) = (self.batch, self.input_dim, self.hidden, self.classes);
+        let mut h0 = matmul(x, p(w, segs, "in.w"), b, d, h);
+        add_bias(&mut h0, p(w, segs, "in.b"), b, h);
+        for v in h0.iter_mut() {
+            *v = v.max(0.0);
+        }
+        let mut hs = vec![h0];
+        let mut z1s = Vec::with_capacity(self.blocks);
+        for i in 0..self.blocks {
+            let (z1, hout) = {
+                let hin = &hs[i];
+                let mut a1 = matmul(hin, p(w, segs, &format!("block{i}.w1")), b, h, h);
+                add_bias(&mut a1, p(w, segs, &format!("block{i}.b1")), b, h);
+                for v in a1.iter_mut() {
+                    *v = v.max(0.0);
+                }
+                let mut a2 = matmul(&a1, p(w, segs, &format!("block{i}.w2")), b, h, h);
+                add_bias(&mut a2, p(w, segs, &format!("block{i}.b2")), b, h);
+                for (j, v) in a2.iter_mut().enumerate() {
+                    *v = (hin[j] + *v).max(0.0);
+                }
+                (a1, a2)
+            };
+            z1s.push(z1);
+            hs.push(hout);
+        }
+        let mut logits = matmul(&hs[self.blocks], p(w, segs, "head.w"), b, h, c);
+        add_bias(&mut logits, p(w, segs, "head.b"), b, c);
+        MlpForward { hs, z1s, logits }
+    }
+
+    pub fn grad_step(
+        &self,
+        segs: &SegmentTable,
+        w: &[f32],
+        x: &[f32],
+        y: &[i32],
+    ) -> (f32, Vec<f32>) {
+        let (b, d, h, c) = (self.batch, self.input_dim, self.hidden, self.classes);
+        let fwd = self.forward(segs, w, x);
+        let (loss, dl, _) = softmax_xent(&fwd.logits, y, b, c);
+
+        let mut g = vec![0.0f32; segs.total_size()];
+        add_grad(&mut g, segs, "head.w", &matmul_tn(&fwd.hs[self.blocks], &dl, b, h, c));
+        add_grad(&mut g, segs, "head.b", &col_sum(&dl, b, c));
+        let mut dh = matmul_nt(&dl, p(w, segs, "head.w"), b, c, h);
+        for i in (0..self.blocks).rev() {
+            let hin = &fwd.hs[i];
+            let hout = &fwd.hs[i + 1];
+            let z1 = &fwd.z1s[i];
+            // h_out = relu(h_in + a2): mask the residual-sum gradient.
+            let mut dsum = dh.clone();
+            for j in 0..b * h {
+                if hout[j] <= 0.0 {
+                    dsum[j] = 0.0;
+                }
+            }
+            let w2 = p(w, segs, &format!("block{i}.w2"));
+            add_grad(&mut g, segs, &format!("block{i}.w2"), &matmul_tn(z1, &dsum, b, h, h));
+            add_grad(&mut g, segs, &format!("block{i}.b2"), &col_sum(&dsum, b, h));
+            let mut da1 = matmul_nt(&dsum, w2, b, h, h);
+            for j in 0..b * h {
+                if z1[j] <= 0.0 {
+                    da1[j] = 0.0;
+                }
+            }
+            let w1 = p(w, segs, &format!("block{i}.w1"));
+            add_grad(&mut g, segs, &format!("block{i}.w1"), &matmul_tn(hin, &da1, b, h, h));
+            add_grad(&mut g, segs, &format!("block{i}.b1"), &col_sum(&da1, b, h));
+            let dh_prev = matmul_nt(&da1, w1, b, h, h);
+            for j in 0..b * h {
+                dh[j] = dsum[j] + dh_prev[j];
+            }
+        }
+        let h0 = &fwd.hs[0];
+        let mut da = dh;
+        for j in 0..b * h {
+            if h0[j] <= 0.0 {
+                da[j] = 0.0;
+            }
+        }
+        add_grad(&mut g, segs, "in.w", &matmul_tn(x, &da, b, d, h));
+        add_grad(&mut g, segs, "in.b", &col_sum(&da, b, h));
+        (loss, g)
+    }
+
+    pub fn eval_step(&self, segs: &SegmentTable, w: &[f32], x: &[f32], y: &[i32]) -> (f32, i32) {
+        let fwd = self.forward(segs, w, x);
+        let (loss, _, correct) = softmax_xent(&fwd.logits, y, self.batch, self.classes);
+        (loss, correct)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Decoder-only transformer LM (tied embedding head)
+// ---------------------------------------------------------------------------
+
+/// Mirror of `TransformerConfig` + `transformer_logits` in model.py.
+#[derive(Debug, Clone)]
+pub struct TransformerModel {
+    pub batch: usize,
+    pub seq: usize,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+}
+
+struct LayerCache {
+    ln1: Vec<f32>,
+    xhat1: Vec<f32>,
+    rstd1: Vec<f32>,
+    qkv: Vec<f32>,
+    /// [b, heads, s, s] attention probabilities (0 above the diagonal).
+    prob: Vec<f32>,
+    o: Vec<f32>,
+    ln2: Vec<f32>,
+    xhat2: Vec<f32>,
+    rstd2: Vec<f32>,
+    a_ff: Vec<f32>,
+    tanh: Vec<f32>,
+    gl: Vec<f32>,
+}
+
+struct TfForward {
+    layers: Vec<LayerCache>,
+    xf: Vec<f32>,
+    xhat_f: Vec<f32>,
+    rstd_f: Vec<f32>,
+    logits: Vec<f32>,
+}
+
+impl TransformerModel {
+    fn forward(&self, segs: &SegmentTable, w: &[f32], tokens: &[i32]) -> TfForward {
+        let (b, s, d, hn, f, v) = (
+            self.batch,
+            self.seq,
+            self.d_model,
+            self.n_heads,
+            self.d_ff,
+            self.vocab,
+        );
+        let hd = d / hn;
+        let inv = 1.0 / (hd as f32).sqrt();
+        let bs = b * s;
+        let embed = p(w, segs, "embed");
+        let pos = p(w, segs, "pos");
+
+        let mut x = vec![0.0f32; bs * d];
+        for i in 0..bs {
+            let t = tokens[i] as usize;
+            debug_assert!(t < v, "token out of range");
+            let si = i % s;
+            for dd in 0..d {
+                x[i * d + dd] = embed[t * d + dd] + pos[si * d + dd];
+            }
+        }
+
+        let mut layers = Vec::with_capacity(self.n_layers);
+        for li in 0..self.n_layers {
+            let (ln1, xhat1, rstd1) = ln_fwd(
+                &x,
+                p(w, segs, &format!("layer{li}.ln1.scale")),
+                p(w, segs, &format!("layer{li}.ln1.bias")),
+                bs,
+                d,
+            );
+            let qkv = matmul(&ln1, p(w, segs, &format!("layer{li}.qkv")), bs, d, 3 * d);
+            let mut prob = vec![0.0f32; b * hn * s * s];
+            let mut o = vec![0.0f32; bs * d];
+            for bb in 0..b {
+                for h in 0..hn {
+                    for qi in 0..s {
+                        let qoff = (bb * s + qi) * 3 * d + h * hd;
+                        let mut row = vec![0.0f32; qi + 1];
+                        let mut mx = f32::NEG_INFINITY;
+                        for (ki, rv) in row.iter_mut().enumerate() {
+                            let koff = (bb * s + ki) * 3 * d + d + h * hd;
+                            let mut dot = 0.0f32;
+                            for e in 0..hd {
+                                dot += qkv[qoff + e] * qkv[koff + e];
+                            }
+                            *rv = dot * inv;
+                            mx = mx.max(*rv);
+                        }
+                        let mut z = 0.0f32;
+                        for rv in row.iter_mut() {
+                            *rv = (*rv - mx).exp();
+                            z += *rv;
+                        }
+                        let pr = &mut prob[((bb * hn + h) * s + qi) * s..][..s];
+                        for (ki, rv) in row.iter().enumerate() {
+                            pr[ki] = rv / z;
+                        }
+                        let ooff = (bb * s + qi) * d + h * hd;
+                        for e in 0..hd {
+                            let mut acc = 0.0f32;
+                            for (ki, pv) in pr[..=qi].iter().enumerate() {
+                                acc += pv * qkv[(bb * s + ki) * 3 * d + 2 * d + h * hd + e];
+                            }
+                            o[ooff + e] = acc;
+                        }
+                    }
+                }
+            }
+            let attn = matmul(&o, p(w, segs, &format!("layer{li}.attn_out")), bs, d, d);
+            let mut x1 = x;
+            for j in 0..bs * d {
+                x1[j] += attn[j];
+            }
+            let (ln2, xhat2, rstd2) = ln_fwd(
+                &x1,
+                p(w, segs, &format!("layer{li}.ln2.scale")),
+                p(w, segs, &format!("layer{li}.ln2.bias")),
+                bs,
+                d,
+            );
+            let mut a_ff = matmul(&ln2, p(w, segs, &format!("layer{li}.ff1")), bs, d, f);
+            add_bias(&mut a_ff, p(w, segs, &format!("layer{li}.ff1_b")), bs, f);
+            let (gl, tanh) = gelu_fwd(&a_ff);
+            let ff_out = matmul(&gl, p(w, segs, &format!("layer{li}.ff2")), bs, f, d);
+            let ff2_b = p(w, segs, &format!("layer{li}.ff2_b"));
+            let mut x2 = x1;
+            for i in 0..bs {
+                for dd in 0..d {
+                    x2[i * d + dd] += ff_out[i * d + dd] + ff2_b[dd];
+                }
+            }
+            layers.push(LayerCache {
+                ln1,
+                xhat1,
+                rstd1,
+                qkv,
+                prob,
+                o,
+                ln2,
+                xhat2,
+                rstd2,
+                a_ff,
+                tanh,
+                gl,
+            });
+            x = x2;
+        }
+        let (xf, xhat_f, rstd_f) =
+            ln_fwd(&x, p(w, segs, "lnf.scale"), p(w, segs, "lnf.bias"), bs, d);
+        // Tied head: logits = xf @ embed^T.
+        let mut logits = vec![0.0f32; bs * v];
+        for i in 0..bs {
+            let xrow = &xf[i * d..(i + 1) * d];
+            let lrow = &mut logits[i * v..(i + 1) * v];
+            for (t, lv) in lrow.iter_mut().enumerate() {
+                let erow = &embed[t * d..(t + 1) * d];
+                let mut dot = 0.0f32;
+                for dd in 0..d {
+                    dot += xrow[dd] * erow[dd];
+                }
+                *lv = dot;
+            }
+        }
+        TfForward { layers, xf, xhat_f, rstd_f, logits }
+    }
+
+    pub fn grad_step(
+        &self,
+        segs: &SegmentTable,
+        w: &[f32],
+        tokens: &[i32],
+        y: &[i32],
+    ) -> (f32, Vec<f32>) {
+        let (b, s, d, hn, f, v) = (
+            self.batch,
+            self.seq,
+            self.d_model,
+            self.n_heads,
+            self.d_ff,
+            self.vocab,
+        );
+        let hd = d / hn;
+        let inv = 1.0 / (hd as f32).sqrt();
+        let bs = b * s;
+        let embed = p(w, segs, "embed");
+        let fwd = self.forward(segs, w, tokens);
+        let (loss, dl, _) = softmax_xent(&fwd.logits, y, bs, v);
+
+        let mut g = vec![0.0f32; segs.total_size()];
+
+        // Tied head: g_embed += dl^T @ xf; dxf = dl @ embed.
+        let mut g_embed = vec![0.0f32; v * d];
+        let mut dxf = vec![0.0f32; bs * d];
+        for i in 0..bs {
+            let dlrow = &dl[i * v..(i + 1) * v];
+            let xrow = &fwd.xf[i * d..(i + 1) * d];
+            let dxrow = &mut dxf[i * d..(i + 1) * d];
+            for (t, &a) in dlrow.iter().enumerate() {
+                if a != 0.0 {
+                    let erow = &embed[t * d..(t + 1) * d];
+                    let grow = &mut g_embed[t * d..(t + 1) * d];
+                    for dd in 0..d {
+                        grow[dd] += a * xrow[dd];
+                        dxrow[dd] += a * erow[dd];
+                    }
+                }
+            }
+        }
+        let (mut dx, dsc, dbi) = ln_bwd(
+            &dxf,
+            p(w, segs, "lnf.scale"),
+            &fwd.xhat_f,
+            &fwd.rstd_f,
+            bs,
+            d,
+        );
+        add_grad(&mut g, segs, "lnf.scale", &dsc);
+        add_grad(&mut g, segs, "lnf.bias", &dbi);
+
+        for li in (0..self.n_layers).rev() {
+            let c = &fwd.layers[li];
+            // x2 = x1 + gelu(ln2 @ ff1 + b1) @ ff2 + b2
+            let ff2 = p(w, segs, &format!("layer{li}.ff2"));
+            let dgl = matmul_nt(&dx, ff2, bs, d, f);
+            add_grad(&mut g, segs, &format!("layer{li}.ff2"), &matmul_tn(&c.gl, &dx, bs, f, d));
+            add_grad(&mut g, segs, &format!("layer{li}.ff2_b"), &col_sum(&dx, bs, d));
+            let da = gelu_bwd(&dgl, &c.a_ff, &c.tanh);
+            add_grad(&mut g, segs, &format!("layer{li}.ff1"), &matmul_tn(&c.ln2, &da, bs, d, f));
+            add_grad(&mut g, segs, &format!("layer{li}.ff1_b"), &col_sum(&da, bs, f));
+            let ff1 = p(w, segs, &format!("layer{li}.ff1"));
+            let dln2 = matmul_nt(&da, ff1, bs, f, d);
+            let (mut dx1, dsc, dbi) = ln_bwd(
+                &dln2,
+                p(w, segs, &format!("layer{li}.ln2.scale")),
+                &c.xhat2,
+                &c.rstd2,
+                bs,
+                d,
+            );
+            add_grad(&mut g, segs, &format!("layer{li}.ln2.scale"), &dsc);
+            add_grad(&mut g, segs, &format!("layer{li}.ln2.bias"), &dbi);
+            for j in 0..bs * d {
+                dx1[j] += dx[j]; // residual around the FF block
+            }
+            // x1 = x0 + o @ attn_out
+            let attn_out = p(w, segs, &format!("layer{li}.attn_out"));
+            let do_ = matmul_nt(&dx1, attn_out, bs, d, d);
+            add_grad(
+                &mut g,
+                segs,
+                &format!("layer{li}.attn_out"),
+                &matmul_tn(&c.o, &dx1, bs, d, d),
+            );
+            // Attention core: do_ -> dqkv.
+            let mut dqkv = vec![0.0f32; bs * 3 * d];
+            for bb in 0..b {
+                for h in 0..hn {
+                    for qi in 0..s {
+                        let pr = &c.prob[((bb * hn + h) * s + qi) * s..][..s];
+                        let dorow = &do_[(bb * s + qi) * d + h * hd..][..hd];
+                        // dprob and sum(dprob * prob) over the causal range.
+                        let mut dp = vec![0.0f32; qi + 1];
+                        let mut sum_dp_p = 0.0f32;
+                        for (ki, dpv) in dp.iter_mut().enumerate() {
+                            let voff = (bb * s + ki) * 3 * d + 2 * d + h * hd;
+                            let mut acc = 0.0f32;
+                            for e in 0..hd {
+                                acc += dorow[e] * c.qkv[voff + e];
+                            }
+                            *dpv = acc;
+                            sum_dp_p += acc * pr[ki];
+                        }
+                        for ki in 0..=qi {
+                            // dv[ki] += prob * do
+                            let pv = pr[ki];
+                            if pv != 0.0 {
+                                let dvoff = (bb * s + ki) * 3 * d + 2 * d + h * hd;
+                                for e in 0..hd {
+                                    dqkv[dvoff + e] += pv * dorow[e];
+                                }
+                            }
+                            // dscore (softmax backward), with the 1/sqrt(hd)
+                            // factor folded in once for both dq and dk.
+                            let ds = pv * (dp[ki] - sum_dp_p) * inv;
+                            if ds != 0.0 {
+                                let qoff = (bb * s + qi) * 3 * d + h * hd;
+                                let koff = (bb * s + ki) * 3 * d + d + h * hd;
+                                for e in 0..hd {
+                                    dqkv[qoff + e] += ds * c.qkv[koff + e];
+                                    dqkv[koff + e] += ds * c.qkv[qoff + e];
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            add_grad(
+                &mut g,
+                segs,
+                &format!("layer{li}.qkv"),
+                &matmul_tn(&c.ln1, &dqkv, bs, d, 3 * d),
+            );
+            let wqkv = p(w, segs, &format!("layer{li}.qkv"));
+            let dln1 = matmul_nt(&dqkv, wqkv, bs, 3 * d, d);
+            let (dx0, dsc, dbi) = ln_bwd(
+                &dln1,
+                p(w, segs, &format!("layer{li}.ln1.scale")),
+                &c.xhat1,
+                &c.rstd1,
+                bs,
+                d,
+            );
+            add_grad(&mut g, segs, &format!("layer{li}.ln1.scale"), &dsc);
+            add_grad(&mut g, segs, &format!("layer{li}.ln1.bias"), &dbi);
+            for j in 0..bs * d {
+                dx[j] = dx0[j] + dx1[j]; // residual around attention
+            }
+        }
+
+        // x = embed[tokens] + pos
+        let mut g_pos = vec![0.0f32; s * d];
+        for i in 0..bs {
+            let t = tokens[i] as usize;
+            let si = i % s;
+            for dd in 0..d {
+                g_embed[t * d + dd] += dx[i * d + dd];
+                g_pos[si * d + dd] += dx[i * d + dd];
+            }
+        }
+        add_grad(&mut g, segs, "embed", &g_embed);
+        add_grad(&mut g, segs, "pos", &g_pos);
+        (loss, g)
+    }
+
+    pub fn eval_step(
+        &self,
+        segs: &SegmentTable,
+        w: &[f32],
+        tokens: &[i32],
+        y: &[i32],
+    ) -> (f32, i32) {
+        let fwd = self.forward(segs, w, tokens);
+        let (loss, _, correct) = softmax_xent(&fwd.logits, y, self.batch * self.seq, self.vocab);
+        (loss, correct)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dispatch
+// ---------------------------------------------------------------------------
+
+/// A model variant executable natively on the CPU.
+#[derive(Debug, Clone)]
+pub enum NativeModel {
+    Mlp(MlpModel),
+    Transformer(TransformerModel),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{Model, Runtime, XData};
+    use crate::util::Rng;
+    use std::path::PathBuf;
+
+    fn artifacts() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// Central finite differences on the highest-|grad| coordinates: the
+    /// backward pass must agree with the loss surface it claims to
+    /// differentiate. Probing the largest entries keeps the f32 forward
+    /// noise well below the measured delta.
+    fn finite_diff_check(model: &Model, x: &XData, y: &[i32]) {
+        let mut w = model.meta.init_params().unwrap();
+        // Perturb away from the symmetric init so grads are generic.
+        let mut rng = Rng::new(0xFD);
+        for v in w.iter_mut() {
+            *v += 0.02 * rng.normal() as f32;
+        }
+        let (_, grads) = model.grad_step(&w, x, y).unwrap();
+        let mut idx: Vec<usize> = (0..grads.len()).collect();
+        idx.sort_by(|&a, &b| grads[b].abs().total_cmp(&grads[a].abs()));
+        let eps = 1e-2f32;
+        for &i in idx.iter().take(16) {
+            let orig = w[i];
+            w[i] = orig + eps;
+            let (lp, _) = model.grad_step(&w, x, y).unwrap();
+            w[i] = orig - eps;
+            let (lm, _) = model.grad_step(&w, x, y).unwrap();
+            w[i] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            let g = grads[i];
+            assert!(
+                (fd - g).abs() <= 0.05 * g.abs().max(0.05),
+                "param {i}: fd {fd} vs grad {g}"
+            );
+        }
+    }
+
+    #[test]
+    fn mlp_grad_matches_finite_difference() {
+        let rt = Runtime::cpu().unwrap();
+        let model = Model::load(&rt, &artifacts(), "mlp_tiny").unwrap();
+        let batch = model.meta.batch_size();
+        let dim = model.meta.x_shape[1] as usize;
+        let data = crate::data::GaussianMixture::new(dim, 4, 0.5, 11);
+        let b = data.batch(0, batch);
+        finite_diff_check(&model, &XData::F32(b.x), &b.y);
+    }
+
+    #[test]
+    fn transformer_grad_matches_finite_difference() {
+        let rt = Runtime::cpu().unwrap();
+        let model = Model::load(&rt, &artifacts(), "transformer_tiny").unwrap();
+        let batch = model.meta.batch_size();
+        let seq = model.meta.x_shape[1] as usize;
+        let corpus = crate::data::TinyCorpus::new(64, 5);
+        let (x, y) = corpus.batch_tokens(0, batch, seq);
+        finite_diff_check(&model, &XData::I32(x), &y);
+    }
+
+    #[test]
+    fn transformer_init_loss_near_uniform() {
+        let rt = Runtime::cpu().unwrap();
+        let model = Model::load(&rt, &artifacts(), "transformer_tiny").unwrap();
+        let w = model.meta.init_params().unwrap();
+        let corpus = crate::data::TinyCorpus::new(64, 5);
+        let (x, y) = corpus.batch_tokens(0, model.meta.batch_size(), model.meta.x_shape[1] as usize);
+        let (loss, _) = model.eval_step(&w, &XData::I32(x), &y).unwrap();
+        assert!((loss - 64f32.ln()).abs() < 0.5, "init loss {loss}");
+    }
+
+    #[test]
+    fn softmax_xent_uniform_and_onehot() {
+        // Uniform logits: loss = ln(v), grad rows sum to 0.
+        let (loss, dl, _) = softmax_xent(&[0.0; 8], &[3, 1], 2, 4);
+        assert!((loss - 4.0f32.ln()).abs() < 1e-6);
+        for i in 0..2 {
+            let s: f32 = dl[i * 4..(i + 1) * 4].iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+        // Confident correct logit: near-zero loss.
+        let (loss, _, correct) = softmax_xent(&[20.0, 0.0, 0.0, 0.0], &[0], 1, 4);
+        assert!(loss < 1e-3);
+        assert_eq!(correct, 1);
+    }
+
+    #[test]
+    fn layernorm_output_normalized() {
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let (y, _, _) = ln_fwd(&x, &[1.0; 4], &[0.0; 4], 1, 4);
+        let mean: f32 = y.iter().sum::<f32>() / 4.0;
+        let var: f32 = y.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-5);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn matmul_shapes_and_values() {
+        // [2,3] @ [3,2]
+        let x = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let w = vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0];
+        let y = matmul(&x, &w, 2, 3, 2);
+        assert_eq!(y, vec![4.0, 5.0, 10.0, 11.0]);
+        // Gradient identities: d(x@w)/dw with dy=1 equals column sums of x.
+        let dy = vec![1.0; 4];
+        let gw = matmul_tn(&x, &dy, 2, 3, 2);
+        assert_eq!(gw, vec![5.0, 5.0, 7.0, 7.0, 9.0, 9.0]);
+        let dx = matmul_nt(&dy, &w, 2, 2, 3);
+        assert_eq!(dx, vec![1.0, 1.0, 2.0, 1.0, 1.0, 2.0]);
+    }
+}

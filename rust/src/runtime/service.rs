@@ -1,10 +1,10 @@
-//! Thread-safe front-end to the (single-threaded) PJRT model.
+//! Thread-safe front-end to the model runtime.
 //!
-//! `PjRtClient` is not `Send`, so one dedicated thread owns the compiled
-//! executables and serves requests over a channel. Every worker thread
-//! holds a cloneable [`ModelHandle`]. On this 1-core testbed the service
-//! thread also faithfully models the paper's setup, where all DL workers of
-//! a node share its GPUs through a device queue.
+//! One dedicated thread owns the loaded model and serves requests over a
+//! channel; every worker thread holds a cloneable [`ModelHandle`]. Besides
+//! matching the original PJRT constraint (`PjRtClient` is not `Send`), the
+//! service thread faithfully models the paper's setup, where all DL
+//! workers of a node share its GPUs through a device queue.
 
 use super::{Model, ModelMeta, Runtime, XData};
 use crate::optimizer::SgdHyper;

@@ -137,14 +137,17 @@ pub fn simulate(cfg: &ExperimentConfig, artifacts_dir: &Path) -> Result<RunResul
     let params = cfg.cost_params();
     let bytes = cfg.virtual_model_bytes;
 
+    // Intra-client allreduce seconds under the configured schedule; the
+    // default "auto" resolves per message size via the α-β-γ autotuner
+    // (select_best) instead of hard-coding the ring.
     let allreduce_s = if m > 1 {
-        crate::collectives::sim::simulate(
-            crate::collectives::sim::Design::RingIbm { rings: cfg.rings },
+        crate::collectives::sim::tensor_allreduce_seconds(
+            cfg.collective_kind(),
             m,
             bytes,
+            cfg.rings,
             &params,
         )
-        .seconds
     } else {
         0.0
     };
@@ -351,7 +354,12 @@ fn run_async(sim: &mut Sim<'_>, elastic: bool) -> Result<()> {
                     sim.model.sgd_update(&mut w, &g, &mut mom, &local_hyper)?;
                     sim.clients[c].w = w;
                     sim.clients[c].momentum = mom;
-                    if iter % cfg.interval as u64 == 0 {
+                    // Fig. 8: elastic sync fires every INTERVAL iterations
+                    // *after* local steps — (iter + 1), not iter, so
+                    // iteration 0 makes local progress before any push;
+                    // interval 0 is clamped to sync every iteration rather
+                    // than dividing by zero.
+                    if (iter + 1) % (cfg.interval.max(1) as u64) == 0 {
                         let arrive = sim.fabric.push(at, c, bytes);
                         q.push(arrive, Ev::PushArrive { c, iter });
                     } else {

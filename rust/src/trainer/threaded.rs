@@ -30,7 +30,7 @@ use std::time::Instant;
 /// records (wall-clock time axis) as measured on worker 0.
 pub fn train(cfg: &ExperimentConfig, artifacts_dir: PathBuf) -> Result<RunResult> {
     let service = ModelService::spawn(artifacts_dir, &cfg.variant)?;
-    let spec = JobSpec::from_algo(cfg.algo, cfg.workers, cfg.servers, cfg.clients);
+    let spec = JobSpec::from_config(cfg);
     let cfg = Arc::new(cfg.clone());
     let handle = service.handle();
 
@@ -164,15 +164,14 @@ fn worker_loop(
                 Algo::DistSgd | Algo::MpiSgd => {
                     // Fig. 6: push grads per key, pull aggregated grads.
                     // With no servers, PushPull degrades to the pure-MPI
-                    // tensor allreduce (§4.2.4).
+                    // allreduce (§4.2.4) — fused: consecutive small keys
+                    // coalesce into fusion_bytes buckets so each bucket
+                    // pays the per-message latency once (§2.1 bucketing).
                     let parts = split_keys(&segs, &grads);
                     let agg: Vec<Vec<f32>> = if cfg.servers == 0 {
-                        let pend: Vec<_> = parts
-                            .into_iter()
-                            .enumerate()
-                            .map(|(k, part)| ctx.kv.pushpull(k, part))
-                            .collect();
-                        pend.into_iter().map(|p| p.wait()).collect()
+                        let keyed: Vec<(usize, Vec<f32>)> =
+                            parts.into_iter().enumerate().collect();
+                        ctx.kv.pushpull_fused(keyed).wait()
                     } else {
                         for (k, part) in parts.into_iter().enumerate() {
                             ctx.kv.push(k, part);
@@ -207,7 +206,10 @@ fn worker_loop(
                         g = ctx.kv.client_allreduce(g).wait();
                     }
                     model.sgd_update(&mut w, &g, &mut momentum, &local_hyper)?;
-                    if iter % cfg.interval == 0 {
+                    // Fig. 8: sync every INTERVAL iterations *after* local
+                    // progress — (iter + 1) so iteration 0 trains locally
+                    // first; interval 0 is clamped to sync every iteration.
+                    if (iter + 1) % cfg.interval.max(1) == 0 {
                         // Push params (Fig. 8 l.10). The MPI kvstore's push
                         // ring-SUMS across the client; replicas are kept in
                         // lockstep, so pre-scale by 1/m to push the client

@@ -1,0 +1,172 @@
+//! Collective-algorithm equivalence suite: every pluggable schedule (and
+//! the fused-bucket path) must produce bitwise-identical sums to the ring
+//! baseline, for adversarial shapes — empty buffers, single elements,
+//! lengths below the rank count, odd lengths, large buffers, and
+//! non-power-of-two worlds. Integer-valued payloads keep f32 sums exact,
+//! so equality is bitwise regardless of reduction order.
+
+use mxnet_mpi::collectives::{
+    allreduce_with, fused_allreduce, ring_allreduce, sim, AlgoKind,
+};
+use mxnet_mpi::mpisim::{Comm, World};
+use mxnet_mpi::netsim::CostParams;
+use mxnet_mpi::util::Rng;
+use std::thread;
+
+fn run_world<F, R>(size: usize, f: F) -> Vec<R>
+where
+    F: Fn(Comm) -> R + Clone + Send + 'static,
+    R: Send + 'static,
+{
+    let comms = World::create(size);
+    let hs: Vec<_> = comms
+        .into_iter()
+        .map(|c| {
+            let f = f.clone();
+            thread::spawn(move || f(c))
+        })
+        .collect();
+    hs.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+/// Integer payload in [-100, 100], deterministic per (case, rank).
+fn payload(case: u64, rank: usize, len: usize) -> Vec<f32> {
+    let mut r = Rng::new(case.wrapping_mul(7919) ^ rank as u64);
+    (0..len)
+        .map(|_| (r.below(201) as i64 - 100) as f32)
+        .collect()
+}
+
+fn ring_oracle(case: u64, p: usize, len: usize) -> Vec<f32> {
+    let out = run_world(p, move |mut c| {
+        let mut d = payload(case, c.rank(), len);
+        ring_allreduce(&mut c, &mut d);
+        d
+    });
+    for d in &out {
+        assert_eq!(d[..], out[0][..], "ring ranks disagree");
+    }
+    out.into_iter().next().unwrap()
+}
+
+#[test]
+fn all_algorithms_match_ring_baseline() {
+    let params = CostParams::testbed1();
+    let mut case = 0u64;
+    for p in [1usize, 2, 3, 4, 8] {
+        // Sizes: 0, 1, < p, odd, large (prime-ish to exercise remainders).
+        for len in [0usize, 1, p.saturating_sub(1), 257, 4113] {
+            case += 1;
+            let want = ring_oracle(case, p, len);
+            for kind in [
+                AlgoKind::Ring,
+                AlgoKind::HalvingDoubling,
+                AlgoKind::Hierarchical,
+                AlgoKind::Auto,
+            ] {
+                let pr = params.clone();
+                let out = run_world(p, move |mut c| {
+                    let mut d = payload(case, c.rank(), len);
+                    allreduce_with(kind, &mut c, &mut d, 2, 2, &pr);
+                    d
+                });
+                for (r, d) in out.iter().enumerate() {
+                    assert_eq!(
+                        d[..],
+                        want[..],
+                        "{} p={p} len={len} rank={r}",
+                        kind.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn randomized_fused_buckets_match_ring_baseline() {
+    // Random key layouts (many tiny keys + occasional big ones) fused at
+    // random caps must equal the unfused per-key ring results.
+    let params = CostParams::testbed1();
+    for case in 0..12u64 {
+        let mut rng = Rng::new(0xF05E ^ case);
+        let p = [1usize, 2, 3, 4, 8][rng.below(5) as usize];
+        let n_keys = 1 + rng.below(7) as usize;
+        let lens: Vec<usize> = (0..n_keys)
+            .map(|_| match rng.below(4) {
+                0 => rng.below(4) as usize,          // 0..3 floats
+                1 => 1 + rng.below(16) as usize,     // tiny
+                2 => 64 + rng.below(512) as usize,   // medium
+                _ => 2048 + rng.below(4096) as usize, // large
+            })
+            .collect();
+        let fusion_bytes = [0usize, 64, 1024, 1 << 20][rng.below(4) as usize];
+        let kind = [
+            AlgoKind::Ring,
+            AlgoKind::HalvingDoubling,
+            AlgoKind::Hierarchical,
+            AlgoKind::Auto,
+        ][rng.below(4) as usize];
+
+        let want: Vec<Vec<f32>> = lens
+            .iter()
+            .enumerate()
+            .map(|(k, &len)| ring_oracle(case * 100 + k as u64, p, len))
+            .collect();
+
+        let lens2 = lens.clone();
+        let pr = params.clone();
+        let out = run_world(p, move |mut c| {
+            let mut bufs: Vec<Vec<f32>> = lens2
+                .iter()
+                .enumerate()
+                .map(|(k, &len)| payload(case * 100 + k as u64, c.rank(), len))
+                .collect();
+            fused_allreduce(kind, &mut c, &mut bufs, fusion_bytes, 2, 2, &pr);
+            bufs
+        });
+        for bufs in &out {
+            for (k, buf) in bufs.iter().enumerate() {
+                assert_eq!(
+                    buf[..],
+                    want[k][..],
+                    "case {case} {} p={p} fusion={fusion_bytes} key {k}",
+                    kind.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn select_best_crossover_hd_small_ring_large() {
+    // The autotuner's acceptance shape: halving-doubling below the α/β
+    // crossover, ring above it (§6.2 cost formalism; Shi et al. 1711.05979).
+    for params in [CostParams::minsky(), CostParams::testbed1()] {
+        let p = 16;
+        let (small, _) = sim::select_best(4 << 10, p, &params);
+        assert_eq!(small, AlgoKind::HalvingDoubling, "small-message winner");
+        let (large, _) = sim::select_best(64 << 20, p, &params);
+        assert_eq!(large, AlgoKind::Ring, "large-message winner");
+    }
+}
+
+#[test]
+fn modeled_seconds_cross_exactly_where_select_best_says() {
+    let params = CostParams::minsky();
+    let p = 16;
+    for shift in 10..27 {
+        let bytes = 1usize << shift;
+        let ring = sim::network_allreduce_seconds(AlgoKind::Ring, p, bytes, &params);
+        let hd =
+            sim::network_allreduce_seconds(AlgoKind::HalvingDoubling, p, bytes, &params);
+        let (best, best_s) = sim::select_best(bytes, p, &params);
+        assert!(best_s <= ring && best_s <= hd);
+        if best == AlgoKind::Ring {
+            assert!(ring <= hd, "select_best says ring but hd is cheaper at {bytes}");
+        }
+        if best == AlgoKind::HalvingDoubling {
+            assert!(hd <= ring, "select_best says hd but ring is cheaper at {bytes}");
+        }
+    }
+}

@@ -2,9 +2,11 @@
 //! engine + PJRT, exercised through the real threaded trainer on the tiny
 //! model, for every §5 algorithm.
 
+use mxnet_mpi::collectives::AlgoKind;
 use mxnet_mpi::config::{Algo, ExperimentConfig};
 use mxnet_mpi::kvstore::{KvType, KvWorker};
 use mxnet_mpi::launcher::{launch, JobSpec};
+use mxnet_mpi::netsim::CostParams;
 use mxnet_mpi::ps::SyncMode;
 use std::path::PathBuf;
 
@@ -70,6 +72,29 @@ fn threaded_pure_mpi_mode_trains() {
 }
 
 #[test]
+fn threaded_training_under_each_collective_schedule() {
+    // The collective knob must be trainable end-to-end for every schedule:
+    // ring, halving-doubling, hierarchical, and the autotuner.
+    for coll in ["ring", "halving_doubling", "hierarchical", "auto"] {
+        let mut cfg = tiny_cfg(Algo::MpiSgd);
+        cfg.servers = 0;
+        cfg.clients = 1;
+        cfg.workers = 4;
+        cfg.epochs = 2;
+        cfg.collective = coll.into();
+        cfg.fusion_bytes = 4096; // force several fused buckets per step
+        let run = mxnet_mpi::trainer::threaded::train(&cfg, artifacts())
+            .unwrap_or_else(|e| panic!("collective {coll} failed: {e}"));
+        assert_eq!(run.records.len(), 2, "{coll}");
+        assert!(
+            run.final_acc() > 0.3,
+            "collective {coll}: no learning signal (acc {})",
+            run.final_acc()
+        );
+    }
+}
+
+#[test]
 fn sync_sgd_is_deterministic_across_runs() {
     // The same job twice must give bit-identical loss curves (sync mode
     // has no nondeterminism despite real threads).
@@ -130,6 +155,11 @@ fn launcher_runs_many_small_jobs_without_leaking() {
             ktype: KvType::SyncMpi,
             server_mode: SyncMode::Sync,
             engine_threads: 1,
+            collective: AlgoKind::Auto,
+            fusion_bytes: 1 << 20,
+            rings: 2,
+            group: 2,
+            cost: CostParams::testbed1(),
         };
         let out = launch(&spec, |ctx| {
             if ctx.ps_rank == 0 {
