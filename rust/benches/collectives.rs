@@ -134,29 +134,87 @@ fn bench_algo_schedules(t: &mut Table) {
     }
 }
 
-/// Modeled seconds per schedule across message sizes (α-β-γ cost models):
-/// prints the select_best winner per row, making the small-message
-/// halving-doubling → large-message ring crossover visible.
+/// Modeled seconds per schedule across message sizes (α-β-γ cost models at
+/// the data path's pipeline depth): prints the select_best winner per row,
+/// making the small-message halving-doubling → large-message ring
+/// crossover visible, plus the blocking (chunks=1) ring for comparison.
 fn report_modeled_crossover() {
     let params = CostParams::minsky();
     let p = 16;
-    let mut t = Table::new(&["bytes", "ring s", "halving-doubling s", "hierarchical s", "best"]);
+    let k = params.pipeline_chunks;
+    let mut t = Table::new(&[
+        "bytes",
+        "ring s",
+        "halving-doubling s",
+        "hierarchical s",
+        "blocking ring s",
+        "best",
+    ]);
     for shift in [10usize, 12, 14, 16, 18, 20, 22, 24, 26] {
         let bytes = 1usize << shift;
         let secs: Vec<f64> = AlgoKind::DATA_PATH
             .into_iter()
             .map(|k| csim::network_allreduce_seconds(k, p, bytes, &params))
             .collect();
+        let blocking =
+            csim::network_allreduce_seconds_chunked(AlgoKind::Ring, p, bytes, 1, &params);
         let (best, _) = csim::select_best(bytes, p, &params);
         t.row(vec![
             mxnet_mpi::util::fmt_bytes(bytes),
             format!("{:.3e}", secs[0]),
             format!("{:.3e}", secs[1]),
             format!("{:.3e}", secs[2]),
+            format!("{:.3e}", blocking),
             best.name().to_string(),
         ]);
     }
-    println!("== modeled allreduce seconds, p={p} (select_best winner) ==\n{}", t.render());
+    println!(
+        "== modeled allreduce seconds, p={p}, pipeline chunks={k} (select_best winner) ==\n{}",
+        t.render()
+    );
+}
+
+/// Blocking vs DAG-embedded-overlapped modeled iteration/epoch time: one
+/// fused allreduce after backward vs per-bucket collectives issued as
+/// gradients become ready (arXiv:1802.06949). ResNet-50-analog traffic
+/// (102 MB, 4 MiB fusion buckets, 0.35 s/batch compute).
+fn report_overlap_epoch_table() {
+    let params = CostParams::testbed1();
+    let bytes = 102usize << 20;
+    let fusion = 4usize << 20;
+    let compute = 0.35f64;
+    let buckets = (bytes + fusion - 1) / fusion;
+    let batches_per_epoch = 16.0; // per worker, testbed1 config analog
+    let mut t = Table::new(&[
+        "workers/client",
+        "blocking step s",
+        "overlapped step s",
+        "blocking epoch s",
+        "overlapped epoch s",
+        "improvement",
+    ]);
+    for m in [2usize, 4, 6, 12] {
+        let blocking_comm =
+            csim::tensor_allreduce_seconds(AlgoKind::Auto, m, bytes, 2, &params);
+        let per_msg = bytes / buckets;
+        let bucketed_comm = buckets as f64
+            * csim::tensor_allreduce_seconds(AlgoKind::Auto, m, per_msg, 2, &params);
+        let blocking_step = compute + blocking_comm;
+        let overlapped_step = csim::overlapped_step_seconds(compute, bucketed_comm, buckets)
+            .min(blocking_step);
+        t.row(vec![
+            m.to_string(),
+            format!("{blocking_step:.4}"),
+            format!("{overlapped_step:.4}"),
+            format!("{:.2}", blocking_step * batches_per_epoch),
+            format!("{:.2}", overlapped_step * batches_per_epoch),
+            format!("{:.1}%", (1.0 - overlapped_step / blocking_step) * 100.0),
+        ]);
+    }
+    println!(
+        "== blocking vs overlapped modeled epoch time (102 MB grads, {buckets} fusion buckets) ==\n{}",
+        t.render()
+    );
 }
 
 fn bench_tensor_allreduce(t: &mut Table) {
@@ -303,12 +361,54 @@ fn bench_pjrt(t: &mut Table) {
     }
 }
 
+/// Wall-clock blocking (chunks=1) vs pipelined (preset chunks) schedules
+/// on the real mpisim data path.
+fn bench_pipelined_vs_blocking(t: &mut Table) {
+    use mxnet_mpi::collectives::{
+        halving_doubling_allreduce_pipelined, multi_ring_allreduce_pipelined,
+    };
+    let p = 4;
+    let len = 1 << 20;
+    for (label, chunks) in [("blocking", 1usize), ("pipelined k=4", 4)] {
+        for algo in ["ring", "hd"] {
+            let s = bench(|| {
+                let comms = World::create(p);
+                let hs: Vec<_> = comms
+                    .into_iter()
+                    .map(|mut c| {
+                        std::thread::spawn(move || {
+                            let mut d = vec![c.rank() as f32; len];
+                            match algo {
+                                "ring" => multi_ring_allreduce_pipelined(&mut c, &mut d, 2, chunks),
+                                _ => halving_doubling_allreduce_pipelined(&mut c, &mut d, chunks),
+                            }
+                            d[0]
+                        })
+                    })
+                    .collect();
+                for h in hs {
+                    h.join().unwrap();
+                }
+            });
+            let bytes = len * 4;
+            t.row(vec![
+                format!("{algo} {label} p={p}"),
+                mxnet_mpi::util::fmt_bytes(bytes),
+                format!("{:.3}", s * 1e3),
+                format!("{:.2}", bytes as f64 * 2.0 / s / 1e9),
+            ]);
+        }
+    }
+}
+
 fn main() {
     report_modeled_crossover();
+    report_overlap_epoch_table();
     println!("== real-substrate microbenchmarks (median of {REPS}) ==");
     let mut t = Table::new(&["bench", "size", "median ms", "rate"]);
     bench_ring_allreduce(&mut t);
     bench_multi_ring(&mut t);
+    bench_pipelined_vs_blocking(&mut t);
     bench_algo_schedules(&mut t);
     bench_tensor_allreduce(&mut t);
     bench_engine(&mut t);

@@ -4,39 +4,58 @@
 //! Two halves:
 //!
 //! * **Real data movement** (this file) — the [`CollectiveAlgo`] strategy
-//!   layer with three algorithms built on [`crate::mpisim`] point-to-point
-//!   sends: the bucket **ring** (bandwidth-optimal, §6.2), recursive
+//!   layer with three algorithms built on the **nonblocking request
+//!   primitives** of [`crate::mpisim`] (`isend`/`irecv`/`wait_any`): the
+//!   bucket **ring** (bandwidth-optimal, §6.2), recursive
 //!   **halving-doubling** (latency-optimal for small tensors; the MPICH
 //!   reduce-scatter + allgather schedule with non-power-of-two fold-in),
 //!   and a **two-level hierarchical** allreduce (intra-group reduce →
 //!   leader ring → intra-group broadcast, the §6.3 node-grouping idea
-//!   applied inside a client). Plus the tensor variants that pre-reduce
-//!   the per-device vector group into host memory and broadcast back
-//!   (§6.3), and gradient **fusion** ([`fused_allreduce`]) that coalesces
-//!   small keys into one message before dispatch. These run on the actual
-//!   training path of the threaded framework and are the correctness-
-//!   critical code.
+//!   applied inside a client). Every schedule is a **k-way chunk-pipelined
+//!   state machine**: each step's message is split into `k` sub-chunks and
+//!   folded in via `wait_any` as each arrives, so step s+1's send overlaps
+//!   step s's remaining receives and reduction (arXiv:1802.06949's
+//!   DAG-embedded collectives; `chunks == 1` is exactly the blocking
+//!   schedule, which stays the correctness baseline). Plus the tensor
+//!   variants that pre-reduce the per-device vector group into host memory
+//!   and broadcast back (§6.3), and gradient **fusion**
+//!   ([`fused_allreduce`] / [`fusion_buckets`]) that coalesces small keys
+//!   into one message before dispatch. These run on the actual training
+//!   path of the threaded framework and are the correctness-critical code.
 //! * **Timing simulation** ([`sim`]) — the α-β-γ cost models that regenerate
 //!   the paper's bandwidth/scaling figures (Figs 15, 17–20) on the
-//!   [`crate::netsim`] substrate, one per algorithm, with
-//!   [`sim::select_best`] auto-tuning the choice per message size
-//!   (cf. Shi et al., arXiv:1711.05979).
+//!   [`crate::netsim`] substrate, one per algorithm (with the chunk
+//!   pipeline's latency/overlap terms), [`sim::select_best`] auto-tuning
+//!   the choice per message size (cf. Shi et al., arXiv:1711.05979), and
+//!   [`sim::overlapped_step_seconds`] pricing compute/communication
+//!   overlap for the virtual-clock trainers.
 
 pub mod sim;
 
-use crate::mpisim::Comm;
+use crate::mpisim::{Comm, Request};
 use crate::netsim::CostParams;
 use crate::tensor::{add_assign, NodeTensor};
 
-/// Tag base for ring steps; mpisim collectives use the high bit, rings use
-/// plain user tags namespaced per call via an internal counter.
-const RING_TAG: u64 = 0x5247; // "RG"
-/// Tag bases for the other algorithm families. Distinct ranges keep the
-/// (source, tag) matching of interleaved steps unambiguous; across
-/// consecutive calls the per-pair FIFO of [`crate::mpisim`] preserves order.
-const SUBSET_TAG: u64 = 0x5300;
-const HD_TAG: u64 = 0x5400;
-const HIER_TAG: u64 = 0x5500;
+/// Tag bases for the algorithm families; mpisim collectives use the high
+/// bit, these use plain user tags. Pipelined schedules consume
+/// `steps * chunks` consecutive tags per phase, so the bases are spaced
+/// [`TAG_SPACING`] apart (debug-asserted); across consecutive calls the
+/// per-pair FIFO of [`crate::mpisim`] plus posting-order matching
+/// preserves correctness.
+const TAG_SPACING: u64 = 1 << 20;
+const RING_RS_TAG: u64 = TAG_SPACING;
+const RING_AG_TAG: u64 = 2 * TAG_SPACING;
+const SUBSET_RS_TAG: u64 = 3 * TAG_SPACING;
+const SUBSET_AG_TAG: u64 = 4 * TAG_SPACING;
+const HD_RS_TAG: u64 = 5 * TAG_SPACING;
+const HD_AG_TAG: u64 = 6 * TAG_SPACING;
+const HD_FOLD_TAG: u64 = 7 * TAG_SPACING;
+const HIER_GATHER_TAG: u64 = 8 * TAG_SPACING;
+const HIER_BCAST_TAG: u64 = 9 * TAG_SPACING;
+
+/// Default sub-chunks per pipelined step when no [`CostParams`] is in
+/// scope (the presets carry their own tuned value).
+pub const DEFAULT_PIPELINE_CHUNKS: usize = 4;
 
 /// Largest power of two <= `p` — the halving-doubling survivor count. The
 /// data path and the cost model ([`sim`]) must agree on this for the
@@ -58,6 +77,12 @@ pub fn chunk_bounds(len: usize, p: usize, i: usize) -> (usize, usize) {
     (start, end)
 }
 
+/// Sub-range `sub` (of `k`) within the half-open range `[lo, hi)`.
+fn sub_bounds(lo: usize, hi: usize, k: usize, sub: usize) -> (usize, usize) {
+    let (s, e) = chunk_bounds(hi - lo, k, sub);
+    (lo + s, lo + e)
+}
+
 /// One bucket-ring phase over an arbitrary rank list: the reduce-scatter
 /// schedule (`gather == false`, incoming chunks are summed) or the
 /// allgather schedule (`gather == true`, incoming chunks are copied).
@@ -65,6 +90,17 @@ pub fn chunk_bounds(len: usize, p: usize, i: usize) -> (usize, usize) {
 /// physical neighbors are `right`/`left`. Shared by the full-communicator
 /// ring and the subset ring so the correctness-critical step/chunk/tag
 /// logic exists exactly once.
+///
+/// The phase runs as a k-way chunk-pipelined state machine over
+/// nonblocking requests: every step's receives are posted up front, each
+/// step's chunk is split into `chunks` sub-chunks, and — because the chunk
+/// received at step s is exactly the chunk sent at step s+1 — each
+/// sub-chunk is forwarded the moment it is folded in, so step s+1's send
+/// overlaps step s's remaining receives and reduction. `chunks == 1`
+/// reproduces the blocking schedule message-for-message (same tags, same
+/// sizes, same per-element reduction order), which keeps every pipelined
+/// variant bitwise sum-equivalent to the baseline.
+#[allow(clippy::too_many_arguments)]
 fn ring_steps(
     comm: &mut Comm,
     right: usize,
@@ -74,25 +110,60 @@ fn ring_steps(
     data: &mut [f32],
     tag_base: u64,
     gather: bool,
+    chunks: usize,
 ) {
     if l <= 1 {
         return;
     }
     let n = data.len();
-    for step in 0..l - 1 {
-        let (si, ri) = if gather {
-            ((idx + 1 + l - step) % l, (idx + l - step) % l)
-        } else {
-            ((idx + l - step) % l, (idx + l - step - 1) % l)
-        };
-        let (ss, se) = chunk_bounds(n, l, si);
-        let (rs, re) = chunk_bounds(n, l, ri);
-        let tag = tag_base + step as u64;
-        let incoming = comm.sendrecv(right, tag, data[ss..se].to_vec(), left, tag);
+    let steps = l - 1;
+    // Clamp the pipeline depth so tags never spill into the next family's
+    // range (identical on every rank: derived only from l and chunks).
+    let k = chunks.max(1).min((TAG_SPACING as usize / steps).max(1));
+    let sub_range = |ci: usize, sub: usize| {
+        let (cs, ce) = chunk_bounds(n, l, ci);
+        sub_bounds(cs, ce, k, sub)
+    };
+    let send_chunk = |step: usize| {
         if gather {
-            data[rs..re].copy_from_slice(&incoming);
+            (idx + 1 + l - step) % l
         } else {
-            add_assign(&mut data[rs..re], &incoming);
+            (idx + l - step) % l
+        }
+    };
+    let recv_chunk = |step: usize| {
+        if gather {
+            (idx + l - step) % l
+        } else {
+            (idx + l - step - 1) % l
+        }
+    };
+    // Post every step's sub-chunk receives up front — tags are unique per
+    // (step, sub), so nothing can mismatch — then kick off step 0.
+    let mut reqs: Vec<Request> = Vec::with_capacity(steps * k);
+    let mut meta: Vec<(usize, usize)> = Vec::with_capacity(steps * k);
+    for step in 0..steps {
+        for sub in 0..k {
+            reqs.push(comm.irecv(left, tag_base + (step * k + sub) as u64));
+            meta.push((step, sub));
+        }
+    }
+    for sub in 0..k {
+        let (s, e) = sub_range(send_chunk(0), sub);
+        comm.send(right, tag_base + sub as u64, data[s..e].to_vec());
+    }
+    // Drain: fold each arriving sub-chunk in and forward it immediately.
+    while !reqs.is_empty() {
+        let (i, incoming) = comm.wait_any(&mut reqs);
+        let (step, sub) = meta.remove(i);
+        let (s, e) = sub_range(recv_chunk(step), sub);
+        if gather {
+            data[s..e].copy_from_slice(&incoming);
+        } else {
+            add_assign(&mut data[s..e], &incoming);
+        }
+        if step + 1 < steps {
+            comm.send(right, tag_base + ((step + 1) * k + sub) as u64, data[s..e].to_vec());
         }
     }
 }
@@ -103,7 +174,7 @@ fn ring_steps(
 pub fn ring_reduce_scatter(comm: &mut Comm, data: &mut [f32]) -> usize {
     let p = comm.size();
     let r = comm.rank();
-    ring_steps(comm, (r + 1) % p, (r + p - 1) % p, r, p, data, RING_TAG, false);
+    ring_steps(comm, (r + 1) % p, (r + p - 1) % p, r, p, data, RING_RS_TAG, false, 1);
     (r + 1) % p
 }
 
@@ -112,14 +183,24 @@ pub fn ring_reduce_scatter(comm: &mut Comm, data: &mut [f32]) -> usize {
 pub fn ring_allgather(comm: &mut Comm, data: &mut [f32]) {
     let p = comm.size();
     let r = comm.rank();
-    ring_steps(comm, (r + 1) % p, (r + p - 1) % p, r, p, data, RING_TAG + 100, true);
+    ring_steps(comm, (r + 1) % p, (r + p - 1) % p, r, p, data, RING_AG_TAG, true, 1);
 }
 
 /// Bandwidth-optimal ring allreduce = reduce-scatter + allgather (§6.2).
 /// Cost: (p-1)α·2 + 2·(p-1)/p·nβ + (p-1)/p·nγ — the §6.2 lower bound.
+/// This (`chunks == 1`) is the correctness baseline every pipelined
+/// schedule is tested against.
 pub fn ring_allreduce(comm: &mut Comm, data: &mut [f32]) {
-    ring_reduce_scatter(comm, data);
-    ring_allgather(comm, data);
+    ring_allreduce_pipelined(comm, data, 1);
+}
+
+/// [`ring_allreduce`] with k-way chunk pipelining: each step's chunk moves
+/// as `chunks` sub-chunks so step s+1's send overlaps step s's reduce.
+pub fn ring_allreduce_pipelined(comm: &mut Comm, data: &mut [f32], chunks: usize) {
+    let p = comm.size();
+    let r = comm.rank();
+    ring_steps(comm, (r + 1) % p, (r + p - 1) % p, r, p, data, RING_RS_TAG, false, chunks);
+    ring_steps(comm, (r + 1) % p, (r + p - 1) % p, r, p, data, RING_AG_TAG, true, chunks);
 }
 
 /// Multi-ring allreduce (§6.3.2, Fig. 9): the buffer is split equally among
@@ -130,11 +211,21 @@ pub fn ring_allreduce(comm: &mut Comm, data: &mut [f32]) {
 /// to a single ring, which is exactly what this implementation (and its
 /// tests) asserts. The timing benefit is modelled in [`sim`].
 pub fn multi_ring_allreduce(comm: &mut Comm, data: &mut [f32], rings: usize) {
+    multi_ring_allreduce_pipelined(comm, data, rings, 1);
+}
+
+/// [`multi_ring_allreduce`] with k-way chunk pipelining per ring.
+pub fn multi_ring_allreduce_pipelined(
+    comm: &mut Comm,
+    data: &mut [f32],
+    rings: usize,
+    chunks: usize,
+) {
     let rings = rings.max(1).min(data.len().max(1));
     let len = data.len();
     for ring in 0..rings {
         let (s, e) = chunk_bounds(len, rings, ring);
-        ring_allreduce(comm, &mut data[s..e]);
+        ring_allreduce_pipelined(comm, &mut data[s..e], chunks);
     }
 }
 
@@ -146,6 +237,16 @@ pub fn multi_ring_allreduce(comm: &mut Comm, data: &mut [f32], rings: usize) {
 /// leader phase of [`hierarchical_allreduce`]). Every rank in `ranks` must
 /// call this with the same list; ranks outside the subset must not call it.
 pub fn ring_allreduce_subset(comm: &mut Comm, ranks: &[usize], data: &mut [f32]) {
+    ring_allreduce_subset_pipelined(comm, ranks, data, 1);
+}
+
+/// [`ring_allreduce_subset`] with k-way chunk pipelining.
+pub fn ring_allreduce_subset_pipelined(
+    comm: &mut Comm,
+    ranks: &[usize],
+    data: &mut [f32],
+    chunks: usize,
+) {
     let l = ranks.len();
     if l <= 1 {
         return;
@@ -156,8 +257,8 @@ pub fn ring_allreduce_subset(comm: &mut Comm, ranks: &[usize], data: &mut [f32])
         .expect("rank not in subset");
     let right = ranks[(idx + 1) % l];
     let left = ranks[(idx + l - 1) % l];
-    ring_steps(comm, right, left, idx, l, data, SUBSET_TAG, false);
-    ring_steps(comm, right, left, idx, l, data, SUBSET_TAG + 100, true);
+    ring_steps(comm, right, left, idx, l, data, SUBSET_RS_TAG, false, chunks);
+    ring_steps(comm, right, left, idx, l, data, SUBSET_AG_TAG, true, chunks);
 }
 
 /// Recursive vector halving-doubling allreduce (Thakur/Rabenseifner): a
@@ -169,6 +270,13 @@ pub fn ring_allreduce_subset(comm: &mut Comm, ranks: &[usize], data: &mut [f32])
 /// their partners up front and replay the result to them at the end
 /// (the MPICH scheme).
 pub fn halving_doubling_allreduce(comm: &mut Comm, data: &mut [f32]) {
+    halving_doubling_allreduce_pipelined(comm, data, 1);
+}
+
+/// [`halving_doubling_allreduce`] with k-way chunk pipelining: each step's
+/// window moves as `chunks` sub-chunks folded in via `wait_any`, so the
+/// pair's reduction overlaps the remaining sub-transfers.
+pub fn halving_doubling_allreduce_pipelined(comm: &mut Comm, data: &mut [f32], chunks: usize) {
     let p = comm.size();
     let r = comm.rank();
     if p == 1 {
@@ -176,16 +284,20 @@ pub fn halving_doubling_allreduce(comm: &mut Comm, data: &mut [f32]) {
     }
     let n = data.len();
     let q = pow2_floor(p);
+    // Clamp so RS+AG tags (up to 2·lg q steps × k subs) stay inside one
+    // tag family; identical on every rank.
+    let lgq = (q.trailing_zeros() as usize).max(1);
+    let k = chunks.max(1).min((TAG_SPACING as usize / (2 * lgq)).max(1));
     let extras = p - q;
     if r >= q {
         // Extra rank: contribute the vector, receive the final result.
-        comm.send(r - q, HD_TAG, data.to_vec());
-        let result = comm.recv(r - q, HD_TAG + 1);
+        comm.send(r - q, HD_FOLD_TAG, data.to_vec());
+        let result = comm.recv(r - q, HD_FOLD_TAG + 1);
         data.copy_from_slice(&result);
         return;
     }
     if r < extras {
-        let incoming = comm.recv(r + q, HD_TAG);
+        let incoming = comm.recv(r + q, HD_FOLD_TAG);
         add_assign(data, &incoming);
     }
     // Vector-halving reduce-scatter among the power-of-two survivors: at
@@ -194,7 +306,8 @@ pub fn halving_doubling_allreduce(comm: &mut Comm, data: &mut [f32]) {
     let (mut lo, mut hi) = (0usize, n);
     let mut windows: Vec<(usize, usize)> = Vec::new();
     let mut mask = q >> 1;
-    let mut step = 0u64;
+    let mut step = 0usize;
+    debug_assert!((q.trailing_zeros() as usize * 2 * k) as u64 <= TAG_SPACING);
     while mask > 0 {
         let partner = r ^ mask;
         let mid = lo + (hi - lo) / 2;
@@ -203,9 +316,22 @@ pub fn halving_doubling_allreduce(comm: &mut Comm, data: &mut [f32]) {
         } else {
             ((mid, hi), (lo, mid))
         };
-        let tag = HD_TAG + 8 + step;
-        let incoming = comm.sendrecv(partner, tag, data[send.0..send.1].to_vec(), partner, tag);
-        add_assign(&mut data[keep.0..keep.1], &incoming);
+        // Exchange the halves sub-chunk by sub-chunk; reduce on arrival.
+        let mut reqs: Vec<Request> = Vec::with_capacity(k);
+        let mut meta: Vec<usize> = Vec::with_capacity(k);
+        for sub in 0..k {
+            let tag = HD_RS_TAG + (step * k + sub) as u64;
+            let (ss, se) = sub_bounds(send.0, send.1, k, sub);
+            comm.send(partner, tag, data[ss..se].to_vec());
+            reqs.push(comm.irecv(partner, tag));
+            meta.push(sub);
+        }
+        while !reqs.is_empty() {
+            let (i, incoming) = comm.wait_any(&mut reqs);
+            let sub = meta.remove(i);
+            let (ks, ke) = sub_bounds(keep.0, keep.1, k, sub);
+            add_assign(&mut data[ks..ke], &incoming);
+        }
         windows.push((lo, hi));
         lo = keep.0;
         hi = keep.1;
@@ -218,12 +344,22 @@ pub fn halving_doubling_allreduce(comm: &mut Comm, data: &mut [f32]) {
     while mask < q {
         let partner = r ^ mask;
         let (plo, phi) = windows.pop().expect("window stack underflow");
-        let tag = HD_TAG + 64 + step;
-        let incoming = comm.sendrecv(partner, tag, data[lo..hi].to_vec(), partner, tag);
-        if lo == plo {
-            data[hi..phi].copy_from_slice(&incoming);
-        } else {
-            data[plo..lo].copy_from_slice(&incoming);
+        // The partner owns exactly the other half of the parent window.
+        let (dlo, dhi) = if lo == plo { (hi, phi) } else { (plo, lo) };
+        let mut reqs: Vec<Request> = Vec::with_capacity(k);
+        let mut meta: Vec<usize> = Vec::with_capacity(k);
+        for sub in 0..k {
+            let tag = HD_AG_TAG + (step * k + sub) as u64;
+            let (ss, se) = sub_bounds(lo, hi, k, sub);
+            comm.send(partner, tag, data[ss..se].to_vec());
+            reqs.push(comm.irecv(partner, tag));
+            meta.push(sub);
+        }
+        while !reqs.is_empty() {
+            let (i, incoming) = comm.wait_any(&mut reqs);
+            let sub = meta.remove(i);
+            let (ds, de) = sub_bounds(dlo, dhi, k, sub);
+            data[ds..de].copy_from_slice(&incoming);
         }
         lo = plo;
         hi = phi;
@@ -231,7 +367,7 @@ pub fn halving_doubling_allreduce(comm: &mut Comm, data: &mut [f32]) {
         step += 1;
     }
     if r < extras {
-        comm.send(r + q, HD_TAG + 1, data.to_vec());
+        comm.send(r + q, HD_FOLD_TAG + 1, data.to_vec());
     }
 }
 
@@ -240,28 +376,65 @@ pub fn halving_doubling_allreduce(comm: &mut Comm, data: &mut [f32]) {
 /// grouping); each group reduces onto its leader, the leaders run a bucket
 /// ring among themselves, and the result is broadcast back into the groups.
 pub fn hierarchical_allreduce(comm: &mut Comm, data: &mut [f32], group: usize) {
+    hierarchical_allreduce_pipelined(comm, data, group, 1);
+}
+
+/// [`hierarchical_allreduce`] with k-way chunk pipelining: members stream
+/// their buffer to the leader in sub-chunks (so the leader's reduction of
+/// member m overlaps member m+1's transfer), the leader phase runs the
+/// pipelined subset ring, and the broadcast back streams the same way.
+/// Members are folded in strictly in rank order, keeping the per-element
+/// float reduction order identical to the blocking schedule.
+pub fn hierarchical_allreduce_pipelined(
+    comm: &mut Comm,
+    data: &mut [f32],
+    group: usize,
+    chunks: usize,
+) {
     let p = comm.size();
     let r = comm.rank();
     if p == 1 {
         return;
     }
+    let k = chunks.max(1).min(data.len().max(1)).min(TAG_SPACING as usize);
+    let n = data.len();
     let g = group.clamp(1, p);
     let leader = r - r % g;
     let last = (leader + g).min(p);
     if r != leader {
-        comm.send(leader, HIER_TAG, data.to_vec());
-        let result = comm.recv(leader, HIER_TAG + 1);
-        data.copy_from_slice(&result);
+        for sub in 0..k {
+            let (s, e) = sub_bounds(0, n, k, sub);
+            comm.send(leader, HIER_GATHER_TAG + sub as u64, data[s..e].to_vec());
+        }
+        let mut reqs: Vec<Request> =
+            (0..k).map(|sub| comm.irecv(leader, HIER_BCAST_TAG + sub as u64)).collect();
+        let mut meta: Vec<usize> = (0..k).collect();
+        while !reqs.is_empty() {
+            let (i, incoming) = comm.wait_any(&mut reqs);
+            let sub = meta.remove(i);
+            let (s, e) = sub_bounds(0, n, k, sub);
+            data[s..e].copy_from_slice(&incoming);
+        }
         return;
     }
     for m in leader + 1..last {
-        let incoming = comm.recv(m, HIER_TAG);
-        add_assign(data, &incoming);
+        let mut reqs: Vec<Request> =
+            (0..k).map(|sub| comm.irecv(m, HIER_GATHER_TAG + sub as u64)).collect();
+        let mut meta: Vec<usize> = (0..k).collect();
+        while !reqs.is_empty() {
+            let (i, incoming) = comm.wait_any(&mut reqs);
+            let sub = meta.remove(i);
+            let (s, e) = sub_bounds(0, n, k, sub);
+            add_assign(&mut data[s..e], &incoming);
+        }
     }
     let leaders: Vec<usize> = (0..p).step_by(g).collect();
-    ring_allreduce_subset(comm, &leaders, data);
+    ring_allreduce_subset_pipelined(comm, &leaders, data, chunks);
     for m in leader + 1..last {
-        comm.send(m, HIER_TAG + 1, data.to_vec());
+        for sub in 0..k {
+            let (s, e) = sub_bounds(0, n, k, sub);
+            comm.send(m, HIER_BCAST_TAG + sub as u64, data[s..e].to_vec());
+        }
     }
 }
 
@@ -311,9 +484,10 @@ pub trait CollectiveAlgo: Send + Sync {
     fn allreduce(&self, comm: &mut Comm, data: &mut [f32]);
 }
 
-/// The §6.2 bucket multi-ring.
+/// The §6.2 bucket multi-ring (`chunks`-way pipelined per ring).
 pub struct BucketRing {
     pub rings: usize,
+    pub chunks: usize,
 }
 
 impl CollectiveAlgo for BucketRing {
@@ -321,25 +495,28 @@ impl CollectiveAlgo for BucketRing {
         "ring"
     }
     fn allreduce(&self, comm: &mut Comm, data: &mut [f32]) {
-        multi_ring_allreduce(comm, data, self.rings);
+        multi_ring_allreduce_pipelined(comm, data, self.rings, self.chunks);
     }
 }
 
-/// Recursive vector halving-doubling.
-pub struct HalvingDoubling;
+/// Recursive vector halving-doubling (`chunks`-way pipelined per step).
+pub struct HalvingDoubling {
+    pub chunks: usize,
+}
 
 impl CollectiveAlgo for HalvingDoubling {
     fn name(&self) -> &'static str {
         "halving_doubling"
     }
     fn allreduce(&self, comm: &mut Comm, data: &mut [f32]) {
-        halving_doubling_allreduce(comm, data);
+        halving_doubling_allreduce_pipelined(comm, data, self.chunks);
     }
 }
 
 /// Two-level hierarchical allreduce with a fixed group size.
 pub struct Hierarchical {
     pub group: usize,
+    pub chunks: usize,
 }
 
 impl CollectiveAlgo for Hierarchical {
@@ -347,7 +524,7 @@ impl CollectiveAlgo for Hierarchical {
         "hierarchical"
     }
     fn allreduce(&self, comm: &mut Comm, data: &mut [f32]) {
-        hierarchical_allreduce(comm, data, self.group);
+        hierarchical_allreduce_pipelined(comm, data, self.group, self.chunks);
     }
 }
 
@@ -372,6 +549,7 @@ fn resolve_kind(
 }
 
 /// Instantiate a boxed schedule; `Auto` resolves against `bytes_hint`.
+/// The chunk-pipeline depth comes from `params.pipeline_chunks`.
 pub fn build_algo(
     kind: AlgoKind,
     rings: usize,
@@ -381,17 +559,19 @@ pub fn build_algo(
     params: &CostParams,
 ) -> Box<dyn CollectiveAlgo> {
     let (kind, group) = resolve_kind(kind, bytes_hint, p, group, params);
+    let chunks = params.pipeline_chunks.max(1);
     match kind {
-        AlgoKind::Ring => Box::new(BucketRing { rings }),
-        AlgoKind::HalvingDoubling => Box::new(HalvingDoubling),
-        AlgoKind::Hierarchical => Box::new(Hierarchical { group }),
+        AlgoKind::Ring => Box::new(BucketRing { rings, chunks }),
+        AlgoKind::HalvingDoubling => Box::new(HalvingDoubling { chunks }),
+        AlgoKind::Hierarchical => Box::new(Hierarchical { group, chunks }),
         AlgoKind::Auto => unreachable!("select_best never returns Auto"),
     }
 }
 
 /// Run one allreduce with the given schedule. `Auto` consults the α-β-γ
 /// autotuner per message: every rank sees the same (bytes, p, params), so
-/// the choice is identical across the communicator.
+/// the choice is identical across the communicator. All schedules run
+/// `params.pipeline_chunks`-way chunk-pipelined (1 = blocking).
 pub fn allreduce_with(
     kind: AlgoKind,
     comm: &mut Comm,
@@ -401,10 +581,11 @@ pub fn allreduce_with(
     params: &CostParams,
 ) {
     let (kind, group) = resolve_kind(kind, data.len() * 4, comm.size(), group, params);
+    let chunks = params.pipeline_chunks.max(1);
     match kind {
-        AlgoKind::Ring => multi_ring_allreduce(comm, data, rings),
-        AlgoKind::HalvingDoubling => halving_doubling_allreduce(comm, data),
-        AlgoKind::Hierarchical => hierarchical_allreduce(comm, data, group),
+        AlgoKind::Ring => multi_ring_allreduce_pipelined(comm, data, rings, chunks),
+        AlgoKind::HalvingDoubling => halving_doubling_allreduce_pipelined(comm, data, chunks),
+        AlgoKind::Hierarchical => hierarchical_allreduce_pipelined(comm, data, group, chunks),
         AlgoKind::Auto => unreachable!("select_best never returns Auto"),
     }
 }
@@ -424,18 +605,12 @@ pub fn fused_allreduce(
     group: usize,
     params: &CostParams,
 ) {
-    let mut i = 0;
-    while i < bufs.len() {
-        let mut bytes = bufs[i].len() * 4;
-        let mut j = i + 1;
-        while j < bufs.len() && fusion_bytes > 0 && bytes + bufs[j].len() * 4 <= fusion_bytes {
-            bytes += bufs[j].len() * 4;
-            j += 1;
-        }
+    let lens: Vec<usize> = bufs.iter().map(|b| b.len()).collect();
+    for (i, j) in fusion_buckets(&lens, fusion_bytes) {
         if j == i + 1 {
             allreduce_with(kind, comm, &mut bufs[i], rings, group, params);
         } else {
-            let mut fused = Vec::with_capacity(bytes / 4);
+            let mut fused = Vec::with_capacity(lens[i..j].iter().sum());
             for b in &bufs[i..j] {
                 fused.extend_from_slice(b);
             }
@@ -446,8 +621,28 @@ pub fn fused_allreduce(
                 off += b.len();
             }
         }
+    }
+}
+
+/// Bucket layout under the fusion cap: `[start, end)` buffer-index ranges
+/// of consecutive buffers coalesced per bucket. A buffer larger than the
+/// cap forms its own bucket; `fusion_bytes == 0` disables coalescing.
+/// Shared by [`fused_allreduce`] and the trainers' per-bucket issue so
+/// data path and issue order agree on the bucketing exactly.
+pub fn fusion_buckets(lens: &[usize], fusion_bytes: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < lens.len() {
+        let mut bytes = lens[i] * 4;
+        let mut j = i + 1;
+        while j < lens.len() && fusion_bytes > 0 && bytes + lens[j] * 4 <= fusion_bytes {
+            bytes += lens[j] * 4;
+            j += 1;
+        }
+        out.push((i, j));
         i = j;
     }
+    out
 }
 
 /// Strategy for the intra-node (device group -> host) reduction of a

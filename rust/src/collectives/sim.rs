@@ -14,48 +14,84 @@ use crate::netsim::CostParams;
 // Per-algorithm α-β-γ models + the select_best autotuner
 // ---------------------------------------------------------------------------
 
+/// One pipelined collective step: a transfer of `bytes` at `(a, b)` split
+/// into `k` sub-chunks whose reduction (`g` per byte) overlaps the
+/// remaining sub-transfers — the pipeline-fill + steady-state formula
+/// `t + (k-1)·max(t, r) + r` with `t = α + nβ/k`, `r = nγ/k`. `k == 1`
+/// degenerates to the blocking `α + nβ + nγ`.
+fn pipelined_step(bytes: f64, k: f64, a: f64, b: f64, g: f64) -> f64 {
+    let t = a + bytes * b / k;
+    let r = bytes * g / k;
+    t + (k - 1.0) * t.max(r) + r
+}
+
 /// Network-level cost of one host-memory allreduce of `bytes` across `p`
-/// ranks under the given schedule (the §6.2 formalism, one formula per
-/// [`AlgoKind`]):
-///
-/// * ring — `2(p-1)α + 2·(p-1)/p·nβ + (p-1)/p·nγ` (bandwidth-optimal);
-/// * halving-doubling — `2·lg q·α + 2·(q-1)/q·nβ·(1+δ) + (q-1)/q·nγ`
-///   plus a `2(α + nβ) + nγ` fold-in when `p` is not a power of two.
-///   `δ = hd_contention` models the fabric congestion of the distance-2^k
-///   exchanges (ring traffic stays on neighbor links; halving-doubling
-///   does not — Shi et al., arXiv:1711.05979, §IV);
-/// * hierarchical — intra-group gather+bcast over host memory, plus the
-///   leader ring over `⌈p/g⌉` ranks with `g = gpus_per_worker`.
-///
-/// `Auto` returns the minimum ([`select_best`]).
+/// ranks under the given schedule at pipeline depth
+/// `params.pipeline_chunks` — the depth the data path actually runs
+/// ([`crate::collectives::allreduce_with`]).
 pub fn network_allreduce_seconds(
     kind: AlgoKind,
     p: usize,
     bytes: usize,
     params: &CostParams,
 ) -> f64 {
+    network_allreduce_seconds_chunked(kind, p, bytes, params.pipeline_chunks, params)
+}
+
+/// Network-level cost of one host-memory allreduce of `bytes` across `p`
+/// ranks under the given schedule, composed per step from
+/// [`pipelined_step`] (the §6.2 formalism extended with k-way chunk
+/// pipelining; `chunks == 1` reproduces the blocking closed forms):
+///
+/// * ring — `2(p-1)` steps of chunk `n/p`; blocking total
+///   `2(p-1)α + 2·(p-1)/p·nβ + (p-1)/p·nγ` (bandwidth-optimal);
+/// * halving-doubling — `lg q` halving exchanges of `n/2^{s+1}` each way;
+///   blocking total `2·lg q·α + 2·(q-1)/q·nβ·(1+δ) + (q-1)/q·nγ` plus a
+///   `2(α + nβ) + nγ` fold-in when `p` is not a power of two.
+///   `δ = hd_contention` models the fabric congestion of the distance-2^k
+///   exchanges (ring traffic stays on neighbor links; halving-doubling
+///   does not — Shi et al., arXiv:1711.05979, §IV);
+/// * hierarchical — intra-group gather+bcast over host memory, plus the
+///   ring over `⌈p/g⌉` leaders with `g = gpus_per_worker`.
+///
+/// `Auto` returns the minimum over the data-path schedules at the same
+/// pipeline depth.
+pub fn network_allreduce_seconds_chunked(
+    kind: AlgoKind,
+    p: usize,
+    bytes: usize,
+    chunks: usize,
+    params: &CostParams,
+) -> f64 {
     if p <= 1 {
         return 0.0;
     }
     let n = bytes as f64;
+    let k = chunks.max(1) as f64;
     let a = params.alpha_net;
     let b = params.beta_net;
     let gh = params.gamma_omp;
     match kind {
         AlgoKind::Ring => {
             let pf = p as f64;
-            2.0 * (pf - 1.0) * a
-                + 2.0 * (pf - 1.0) / pf * n * b
-                + (pf - 1.0) / pf * n * gh
+            let chunk = n / pf;
+            (pf - 1.0) * pipelined_step(chunk, k, a, b, gh)
+                + (pf - 1.0) * pipelined_step(chunk, k, a, b, 0.0)
         }
         AlgoKind::HalvingDoubling => {
             let q = pow2_floor(p);
-            let qf = q as f64;
-            let mut t = 2.0 * qf.log2() * a
-                + 2.0 * (qf - 1.0) / qf * n * b * (1.0 + params.hd_contention)
-                + (qf - 1.0) / qf * n * gh;
+            let bc = b * (1.0 + params.hd_contention);
+            let mut t = 0.0;
+            let mut win = n / 2.0;
+            let mut m = q;
+            while m > 1 {
+                t += pipelined_step(win, k, a, bc, gh); // halving exchange
+                t += pipelined_step(win, k, a, bc, 0.0); // doubling exchange
+                win /= 2.0;
+                m /= 2;
+            }
             if p > q {
-                t += 2.0 * (a + n * b) + n * gh;
+                t += 2.0 * (a + n * b) + n * gh; // non-power-of-two fold-in
             }
             t
         }
@@ -63,26 +99,65 @@ pub fn network_allreduce_seconds(
             let g = params.gpus_per_worker.clamp(1, p);
             let leaders = (p + g - 1) / g;
             let gf = g as f64;
-            let intra = 2.0 * (gf - 1.0) * (a + n * params.beta_hostmem)
-                + (gf - 1.0) * n * params.gamma_host;
-            intra + network_allreduce_seconds(AlgoKind::Ring, leaders, bytes, params)
+            let intra = (gf - 1.0)
+                * (pipelined_step(n, k, a, params.beta_hostmem, params.gamma_host)
+                    + pipelined_step(n, k, a, params.beta_hostmem, 0.0));
+            intra + network_allreduce_seconds_chunked(AlgoKind::Ring, leaders, bytes, chunks, params)
         }
-        AlgoKind::Auto => select_best(bytes, p, params).1,
+        AlgoKind::Auto => select_best_chunked(bytes, p, chunks, params).1,
     }
 }
 
 /// Autotuner: the cheapest data-path schedule for `(bytes, p)` under the
-/// α-β-γ model. Below the α/β crossover the latency-optimal
-/// halving-doubling wins; past it the bandwidth-optimal ring does.
+/// α-β-γ model at the data path's pipeline depth. Below the α/β crossover
+/// the latency-optimal halving-doubling wins; past it the
+/// bandwidth-optimal ring does.
 pub fn select_best(bytes: usize, p: usize, params: &CostParams) -> (AlgoKind, f64) {
+    select_best_chunked(bytes, p, params.pipeline_chunks, params)
+}
+
+/// [`select_best`] at an explicit pipeline depth.
+pub fn select_best_chunked(
+    bytes: usize,
+    p: usize,
+    chunks: usize,
+    params: &CostParams,
+) -> (AlgoKind, f64) {
     if p <= 1 {
         return (AlgoKind::Ring, 0.0);
     }
     AlgoKind::DATA_PATH
         .into_iter()
-        .map(|k| (k, network_allreduce_seconds(k, p, bytes, params)))
+        .map(|k| (k, network_allreduce_seconds_chunked(k, p, bytes, chunks, params)))
         .min_by(|x, y| x.1.total_cmp(&y.1))
         .expect("non-empty algorithm set")
+}
+
+// ---------------------------------------------------------------------------
+// Compute/communication overlap (DAG-embedded collectives)
+// ---------------------------------------------------------------------------
+
+/// Fraction of a training step spent in the backward pass — the window
+/// over which per-bucket gradients become ready for DAG-embedded
+/// collectives (fwd:bwd ≈ 1:2 for the paper's workloads).
+pub const BWD_FRAC: f64 = 0.66;
+
+/// Modeled seconds for one training iteration when each of `buckets`
+/// fusion buckets is issued as a dependency-tracked engine op the moment
+/// its gradients are ready (arXiv:1802.06949), instead of one blocking
+/// allreduce after the full backward pass.
+///
+/// Bucket i's communication hides under the remaining backward compute
+/// (gradients are emitted over the last [`BWD_FRAC`] of `compute_s`) and
+/// under later buckets' update window; only the tail bucket — ready when
+/// backward ends — is necessarily exposed, plus whatever communication
+/// exceeds the overlap window. Never worse than the blocking
+/// `compute_s + comm_s`; with one bucket there is nothing to overlap.
+pub fn overlapped_step_seconds(compute_s: f64, comm_s: f64, buckets: usize) -> f64 {
+    let b = buckets.max(1) as f64;
+    let window = compute_s * BWD_FRAC * (b - 1.0) / b;
+    let tail = comm_s / b;
+    (compute_s + tail + (comm_s - tail - window).max(0.0)).min(compute_s + comm_s)
 }
 
 /// Full tensor-allreduce seconds for a schedule: the ring reproduces the

@@ -107,6 +107,15 @@ pub struct ExperimentConfig {
     /// Gradient-fusion bucket cap in bytes (0 disables): consecutive
     /// small keys coalesce into one allreduce message up to this size.
     pub fusion_bytes: usize,
+    /// Compute/communication overlap (the DAG-embedded collective path,
+    /// arXiv:1802.06949): per-bucket collectives issue as gradients become
+    /// ready, so backward compute hides communication. Affects the virtual
+    /// time axis of the sim plane; the threaded plane always issues
+    /// nonblocking per-bucket ops (results are identical either way).
+    pub overlap: bool,
+    /// Sub-chunks per pipelined collective step; 0 = the testbed preset's
+    /// value ([`CostParams::pipeline_chunks`]), 1 = blocking schedules.
+    pub pipeline_chunks: usize,
     pub seed: u64,
     /// Cost-model preset: "testbed1" or "minsky".
     pub testbed: String,
@@ -152,6 +161,8 @@ impl ExperimentConfig {
             rings: 2,
             collective: "auto".into(),
             fusion_bytes: 4 << 20,
+            overlap: true,
+            pipeline_chunks: 0,
             seed: 42,
             testbed: "testbed1".into(),
             // ResNet-50 on K80-class GPUs: ~0.35 s per 128-batch; we keep
@@ -178,10 +189,14 @@ impl ExperimentConfig {
     }
 
     pub fn cost_params(&self) -> CostParams {
-        match self.testbed.as_str() {
+        let mut p = match self.testbed.as_str() {
             "minsky" | "testbed2" => CostParams::minsky(),
             _ => CostParams::testbed1(),
+        };
+        if self.pipeline_chunks > 0 {
+            p.pipeline_chunks = self.pipeline_chunks;
         }
+        p
     }
 
     /// Parsed `collective` knob; unknown strings fall back to the
@@ -209,6 +224,8 @@ impl ExperimentConfig {
             ("rings", Value::num(self.rings as f64)),
             ("collective", Value::str(&self.collective)),
             ("fusion_bytes", Value::num(self.fusion_bytes as f64)),
+            ("overlap", Value::Bool(self.overlap)),
+            ("pipeline_chunks", Value::num(self.pipeline_chunks as f64)),
             ("seed", Value::num(self.seed as f64)),
             ("testbed", Value::str(&self.testbed)),
             ("compute_s_per_batch", Value::num(self.compute_s_per_batch)),
@@ -253,6 +270,8 @@ impl ExperimentConfig {
             c.collective
         );
         c.fusion_bytes = getn("fusion_bytes", c.fusion_bytes as f64) as usize;
+        c.overlap = v.get("overlap").and_then(|x| x.as_bool()).unwrap_or(c.overlap);
+        c.pipeline_chunks = getn("pipeline_chunks", c.pipeline_chunks as f64) as usize;
         c.seed = getn("seed", c.seed as f64) as u64;
         c.testbed = gets("testbed", &c.testbed);
         c.compute_s_per_batch = getn("compute_s_per_batch", c.compute_s_per_batch);

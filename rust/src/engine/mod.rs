@@ -83,7 +83,19 @@ impl Engine {
                     st = worker_cv.wait(st).unwrap();
                 }
             };
-            func();
+            // A panicking op must not wedge the engine: dependencies are
+            // released either way, so waiters (wait_all / wait_var /
+            // Pending) wake up and see the op produced nothing — the old
+            // reply-channel behavior — instead of parking forever on a
+            // var that can never quiesce.
+            if let Err(payload) = std::panic::catch_unwind(std::panic::AssertUnwindSafe(func)) {
+                let msg = payload
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "non-string panic".into());
+                eprintln!("engine op panicked: {msg}");
+            }
             // Release dependencies and grant successors.
             let mut st = lock.lock().unwrap();
             let op = st.ops[op_id].take().unwrap();
@@ -104,9 +116,9 @@ impl Engine {
             if !st.ready.is_empty() {
                 worker_cv.notify_all();
             }
-            if st.outstanding == 0 {
-                idle_cv.notify_all();
-            }
+            // Wake wait_all *and* wait_var sleepers: the latter care about
+            // individual var quiescence, not global idleness.
+            idle_cv.notify_all();
         }
     }
 
@@ -207,6 +219,24 @@ impl Engine {
         let (lock, _, idle_cv) = &*self.shared;
         let mut st = lock.lock().unwrap();
         while st.outstanding > 0 {
+            st = idle_cv.wait(st).unwrap();
+        }
+    }
+
+    /// Block until every operation *already pushed* that reads or mutates
+    /// `v` has completed (MXNET's `WaitForVar`). Operations pushed after
+    /// this call returns are not waited on. This is what backs
+    /// [`crate::kvstore::Pending`]: a result is ready exactly when its
+    /// dependency var quiesces, so waiting is a dependency-engine
+    /// operation rather than a parked reply channel.
+    pub fn wait_var(&self, v: Var) {
+        let (lock, _, idle_cv) = &*self.shared;
+        let mut st = lock.lock().unwrap();
+        loop {
+            let vs = &st.vars[v.0];
+            if vs.queue.is_empty() && !vs.running_write && vs.running_reads == 0 {
+                return;
+            }
             st = idle_cv.wait(st).unwrap();
         }
     }
@@ -350,6 +380,54 @@ mod tests {
         }
         e.wait_all();
         assert_eq!(*out.lock().unwrap(), 42);
+    }
+
+    #[test]
+    fn wait_var_waits_for_its_ops_only() {
+        // A slow op on `a` must be waited; an unrelated slow op on `b`
+        // must not block wait_var(a).
+        let e = Engine::new(2);
+        let a = e.new_var();
+        let b = e.new_var();
+        let hit = Arc::new(AtomicUsize::new(0));
+        let (gate_tx, gate_rx) = mpsc::channel::<()>();
+        {
+            let h = hit.clone();
+            e.push(
+                move || {
+                    std::thread::sleep(std::time::Duration::from_millis(20));
+                    h.fetch_add(1, Ordering::SeqCst);
+                },
+                &[],
+                &[a],
+            );
+        }
+        e.push(
+            move || {
+                gate_rx.recv().unwrap(); // blocks until after wait_var(a)
+            },
+            &[],
+            &[b],
+        );
+        e.wait_var(a);
+        assert_eq!(hit.load(Ordering::SeqCst), 1, "wait_var returned early");
+        gate_tx.send(()).unwrap();
+        e.wait_all();
+    }
+
+    #[test]
+    fn wait_var_sees_queued_chain() {
+        // Many queued writes to one var: wait_var returns only after the
+        // whole chain drains.
+        let e = Engine::new(3);
+        let v = e.new_var();
+        let count = Arc::new(AtomicUsize::new(0));
+        for _ in 0..50 {
+            let c = count.clone();
+            e.push(move || { c.fetch_add(1, Ordering::SeqCst); }, &[], &[v]);
+        }
+        e.wait_var(v);
+        assert_eq!(count.load(Ordering::SeqCst), 50);
     }
 
     #[test]

@@ -71,11 +71,59 @@ impl KvType {
 }
 
 /// A value still being produced by the engine; `wait()` blocks for it.
-pub struct Pending<T>(Receiver<T>);
+///
+/// The primary backing is a **dependency-engine wait** (Figs 4–5 taken to
+/// their conclusion): the producing op fills a shared slot and `wait()`
+/// blocks on [`Engine::wait_var`] for the op's read/mutate vars — the
+/// caller parks *inside the dependency engine*, not on a reply channel, so
+/// completion is ordered exactly like any other DAG dependency. Fallback
+/// composition paths (e.g. fused pushpull over a PS) still use a channel.
+pub struct Pending<T>(PendingInner<T>);
+
+enum PendingInner<T> {
+    Engine {
+        slot: Arc<Mutex<Option<T>>>,
+        engine: Arc<Engine>,
+        /// Vars whose quiescence signals the producing op completed.
+        vars: Vec<Var>,
+    },
+    Channel(Receiver<T>),
+}
 
 impl<T> Pending<T> {
+    /// Engine-backed pending: returns the handle plus the slot the
+    /// producing op must fill. The op MUST be pushed with every var in
+    /// `vars` among its read/mutate dependencies.
+    fn engine_backed(engine: Arc<Engine>, vars: Vec<Var>) -> (Self, Arc<Mutex<Option<T>>>) {
+        let slot = Arc::new(Mutex::new(None));
+        (Pending(PendingInner::Engine { slot: slot.clone(), engine, vars }), slot)
+    }
+
+    fn channel(rx: Receiver<T>) -> Self {
+        Pending(PendingInner::Channel(rx))
+    }
+
     pub fn wait(self) -> T {
-        self.0.recv().expect("engine op dropped reply")
+        match self.0 {
+            PendingInner::Engine { slot, engine, vars } => {
+                for v in &vars {
+                    engine.wait_var(*v);
+                }
+                slot.lock().unwrap().take().unwrap_or_else(|| {
+                    panic!(
+                        "KVStore engine op completed without producing a result: \
+                         the op panicked or was dropped before filling its slot"
+                    )
+                })
+            }
+            PendingInner::Channel(rx) => rx.recv().unwrap_or_else(|_| {
+                panic!(
+                    "KVStore reply channel disconnected before a value arrived: \
+                     the worker/server thread or engine op backing this Pending \
+                     died (server shutdown, worker panic, or dropped op)"
+                )
+            }),
+        }
     }
 }
 
@@ -290,10 +338,12 @@ impl KvWorker {
     }
 
     /// KVStore.pull (Fig. 5): master ZPulls and broadcasts inside the
-    /// client; everyone else receives the broadcast.
+    /// client; everyone else receives the broadcast. The returned
+    /// [`Pending`] is backed by the key's dependency var: `wait()` blocks
+    /// in the engine, not on a channel.
     pub fn pull(&self, key: Key) -> Pending<Vec<f32>> {
-        let (reply, rx) = channel();
         let kv = self.key_var(key);
+        let (pending, slot) = Pending::engine_backed(self.engine.clone(), vec![kv]);
         match self.ktype {
             KvType::Local => {
                 let store = self.local.clone();
@@ -311,7 +361,7 @@ impl KvWorker {
                                 )
                             })
                             .clone();
-                        let _ = reply.send(v);
+                        *slot.lock().unwrap() = Some(v);
                     },
                     &[kv],
                     &[],
@@ -321,7 +371,7 @@ impl KvWorker {
                 let ps = self.ps.clone().unwrap();
                 self.engine.push(
                     move || {
-                        let _ = reply.send(ps.lock().unwrap().pull(key));
+                        *slot.lock().unwrap() = Some(ps.lock().unwrap().pull(key));
                     },
                     &[],
                     &[self.comm_var, kv],
@@ -354,24 +404,24 @@ impl KvWorker {
                             };
                         }
                         c.bcast(0, &mut buf);
-                        let _ = reply.send(buf);
+                        *slot.lock().unwrap() = Some(buf);
                     },
                     &[],
                     &[self.comm_var, kv],
                 );
             }
         }
-        Pending(rx)
+        pending
     }
 
     /// KVStore.pushpull (§4.2.4, added to MXNET for MPI acceleration):
     /// fuses push+pull into one tensor allreduce — no PS round-trip when
     /// there are no servers.
     pub fn pushpull(&self, key: Key, data: Vec<f32>) -> Pending<Vec<f32>> {
-        let (reply, rx) = channel();
         match self.ktype {
             KvType::SyncMpi | KvType::AsyncMpi if self.ps.is_none() => {
                 let kv = self.key_var(key);
+                let (pending, slot) = Pending::engine_backed(self.engine.clone(), vec![kv]);
                 let comm = self.comm.clone().unwrap();
                 let (kind, rings, group, cost) = self.algo_params();
                 self.engine.push(
@@ -379,12 +429,12 @@ impl KvWorker {
                         let mut c = comm.lock().unwrap();
                         let mut buf = data;
                         allreduce_with(kind, &mut c, &mut buf, rings, group, &cost);
-                        let _ = reply.send(buf);
+                        *slot.lock().unwrap() = Some(buf);
                     },
                     &[],
                     &[self.comm_var, kv],
                 );
-                Pending(rx)
+                pending
             }
             _ => {
                 // Fallback composition: push then pull.
@@ -401,11 +451,19 @@ impl KvWorker {
     /// order. On non-pure-MPI stores this degrades to per-key pushpull
     /// composition.
     pub fn pushpull_fused(&self, keyed: Vec<(Key, Vec<f32>)>) -> Pending<Vec<Vec<f32>>> {
-        let (reply, rx) = channel();
+        if keyed.is_empty() {
+            // Nothing to reduce: resolve immediately (an engine-backed
+            // Pending with no vars would otherwise race the op).
+            let (pending, slot) = Pending::engine_backed(self.engine.clone(), Vec::new());
+            *slot.lock().unwrap() = Some(Vec::new());
+            return pending;
+        }
         match self.ktype {
             KvType::SyncMpi | KvType::AsyncMpi if self.ps.is_none() => {
+                let key_vars: Vec<Var> = keyed.iter().map(|(k, _)| self.key_var(*k)).collect();
                 let mut mutates = vec![self.comm_var];
-                mutates.extend(keyed.iter().map(|(k, _)| self.key_var(*k)));
+                mutates.extend(key_vars.iter().copied());
+                let (pending, slot) = Pending::engine_backed(self.engine.clone(), key_vars);
                 let comm = self.comm.clone().unwrap();
                 let (kind, rings, group, cost) = self.algo_params();
                 let fusion_bytes = self.fusion_bytes;
@@ -423,14 +481,15 @@ impl KvWorker {
                             group,
                             &cost,
                         );
-                        let _ = reply.send(bufs);
+                        *slot.lock().unwrap() = Some(bufs);
                     },
                     &[],
                     &mutates,
                 );
-                Pending(rx)
+                pending
             }
             _ => {
+                let (reply, rx) = channel();
                 let pends: Vec<Pending<Vec<f32>>> = keyed
                     .into_iter()
                     .map(|(k, v)| self.pushpull(k, v))
@@ -439,16 +498,46 @@ impl KvWorker {
                     let out: Vec<Vec<f32>> = pends.into_iter().map(|p| p.wait()).collect();
                     let _ = reply.send(out);
                 });
-                Pending(rx)
+                Pending::channel(rx)
             }
         }
+    }
+
+    /// Per-bucket nonblocking pushpull (the DAG-embedded collective path,
+    /// arXiv:1802.06949): splits `keyed` into fusion buckets (same layout
+    /// as [`crate::collectives::fusion_buckets`]) and issues **one engine
+    /// op per bucket**, returning each bucket's input-index range and
+    /// [`Pending`], in issue order. Buckets are issued in *reverse* key
+    /// order — backprop emits the last layer's gradients first, so that is
+    /// the order in which buckets become ready — and the comm var
+    /// serializes the collectives in that same order (§4.2 deadlock rule);
+    /// a trainer draining the returned list front to back therefore
+    /// overlaps bucket i+1's allreduce with bucket i's wait/update.
+    pub fn pushpull_buckets(
+        &self,
+        keyed: Vec<(Key, Vec<f32>)>,
+    ) -> Vec<((usize, usize), Pending<Vec<Vec<f32>>>)> {
+        let lens: Vec<usize> = keyed.iter().map(|(_, v)| v.len()).collect();
+        let buckets = crate::collectives::fusion_buckets(&lens, self.fusion_bytes);
+        let mut keyed: Vec<Option<(Key, Vec<f32>)>> = keyed.into_iter().map(Some).collect();
+        buckets
+            .into_iter()
+            .rev()
+            .map(|(i, j)| {
+                let bucket: Vec<(Key, Vec<f32>)> =
+                    keyed[i..j].iter_mut().map(|s| s.take().unwrap()).collect();
+                ((i, j), self.pushpull_fused(bucket))
+            })
+            .collect()
     }
 
     /// Intra-client gradient aggregation (sync SGD *within* the
     /// communicator, §5 ESGD): a plain multi-ring allreduce across the MPI
     /// client, never touching the PS.
     pub fn client_allreduce(&self, data: Vec<f32>) -> Pending<Vec<f32>> {
-        let (reply, rx) = channel();
+        // Backed by the comm var: comm ops are serialized in program order
+        // (§4.2), so its quiescence covers this op.
+        let (pending, slot) = Pending::engine_backed(self.engine.clone(), vec![self.comm_var]);
         let comm = self.comm.clone().expect("client_allreduce needs MPI");
         let (kind, rings, group, cost) = self.algo_params();
         self.engine.push(
@@ -456,19 +545,19 @@ impl KvWorker {
                 let mut c = comm.lock().unwrap();
                 let mut buf = data;
                 allreduce_with(kind, &mut c, &mut buf, rings, group, &cost);
-                let _ = reply.send(buf);
+                *slot.lock().unwrap() = Some(buf);
             },
             &[],
             &[self.comm_var],
         );
-        Pending(rx)
+        pending
     }
 
     /// Tensor-variant pushpull: allreduce a whole [`NodeTensor`] (the group
     /// of per-device vectors, §6.1) with the multi-ring schedule.
     pub fn pushpull_tensor(&self, key: Key, tensor: NodeTensor) -> Pending<NodeTensor> {
-        let (reply, rx) = channel();
         let kv = self.key_var(key);
+        let (pending, slot) = Pending::engine_backed(self.engine.clone(), vec![kv]);
         let comm = self.comm.clone().expect("tensor pushpull needs MPI");
         let (kind, rings, group, cost) = self.algo_params();
         self.engine.push(
@@ -476,12 +565,12 @@ impl KvWorker {
                 let mut c = comm.lock().unwrap();
                 let mut t = tensor;
                 tensor_allreduce_with(kind, &mut c, &mut t, rings, group, &cost, HostReduce::Host);
-                let _ = reply.send(t);
+                *slot.lock().unwrap() = Some(t);
             },
             &[],
             &[self.comm_var, kv],
         );
-        Pending(rx)
+        pending
     }
 
     /// Ship an optimizer to the PS (KVStore.set_optimizer, §3.2). Only the
@@ -703,6 +792,84 @@ mod tests {
             .wait();
         assert_eq!(out[0], vec![2.0; 2]);
         assert_eq!(out[1], vec![3.0; 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "reply channel disconnected")]
+    fn channel_pending_panics_clearly_when_backing_dies() {
+        // A channel-backed Pending whose producer died must panic with a
+        // diagnosis, not a bare RecvError unwrap.
+        let (tx, rx) = channel::<Vec<f32>>();
+        drop(tx);
+        Pending::channel(rx).wait();
+    }
+
+    #[test]
+    fn pending_is_engine_backed_for_pure_mpi_pushpull() {
+        // wait() must return after the engine vars quiesce even when the
+        // worker thread never parks on a channel: issue many nonblocking
+        // pushpulls, then wait them all out of order.
+        let comms = World::create(2);
+        let hs: Vec<_> = comms
+            .into_iter()
+            .map(|comm| {
+                thread::spawn(move || {
+                    let engine = Arc::new(Engine::new(2));
+                    let kv = KvWorker::create(KvType::SyncMpi, engine, Some(comm), None);
+                    let pends: Vec<_> =
+                        (0..8).map(|k| kv.pushpull(k, vec![k as f32 + 1.0; 3])).collect();
+                    let mut out: Vec<Vec<f32>> = pends.into_iter().map(|p| p.wait()).collect();
+                    out.reverse();
+                    out
+                })
+            })
+            .collect();
+        for h in hs {
+            let out = h.join().unwrap();
+            for (i, buf) in out.iter().enumerate() {
+                let k = 7 - i;
+                assert_eq!(buf[..], [2.0 * (k as f32 + 1.0); 3][..]);
+            }
+        }
+    }
+
+    #[test]
+    fn pushpull_buckets_matches_fused_and_overlaps_issue() {
+        // Per-bucket issue (reverse key order) must produce the same sums
+        // as one fused call, with bucket ranges tiling the key space.
+        let comms = World::create(3);
+        let hs: Vec<_> = comms
+            .into_iter()
+            .map(|comm| {
+                thread::spawn(move || {
+                    let engine = Arc::new(Engine::new(1));
+                    let mut kv = KvWorker::create(KvType::SyncMpi, engine, Some(comm), None);
+                    kv.fusion_bytes = 64; // several buckets over 6 keys
+                    let keyed: Vec<(usize, Vec<f32>)> =
+                        (0..6).map(|k| (k, vec![(k + 1) as f32; 4 + k])).collect();
+                    let buckets = kv.pushpull_buckets(keyed);
+                    let mut seen = vec![false; 6];
+                    let mut prev_start = usize::MAX;
+                    for ((i, j), pending) in buckets {
+                        assert!(i < j && j <= 6);
+                        // Reverse issue order: ranges descend.
+                        assert!(i < prev_start);
+                        prev_start = i;
+                        let bufs = pending.wait();
+                        assert_eq!(bufs.len(), j - i);
+                        for (k, buf) in (i..j).zip(bufs) {
+                            assert!(!seen[k]);
+                            seen[k] = true;
+                            assert_eq!(buf[..], vec![3.0 * (k + 1) as f32; 4 + k][..]);
+                        }
+                    }
+                    assert!(seen.iter().all(|&s| s));
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
     }
 
     #[test]

@@ -28,6 +28,8 @@ fn usage() -> ! {
            --epochs N --batch-epochs SAMPLES --lr F --alpha F --interval N\n\
            --collective ring|halving_doubling|hierarchical|auto\n\
            --fusion-bytes N       gradient-fusion bucket cap (0 = off)\n\
+           --overlap on|off       compute/communication overlap (sim plane)\n\
+           --pipeline-chunks N    sub-chunks per pipelined collective step\n\
            --config FILE.json     load an ExperimentConfig (flags override)\n\
            --artifacts DIR        (default ./artifacts)\n\
            --out DIR              results dir (default ./results)",
@@ -110,7 +112,11 @@ fn build_config(args: &Args) -> Result<ExperimentConfig> {
     ovr!(interval, "interval", usize);
     ovr!(rings, "rings", usize);
     ovr!(fusion_bytes, "fusion-bytes", usize);
+    ovr!(pipeline_chunks, "pipeline-chunks", usize);
     ovr!(seed, "seed", u64);
+    if let Some(v) = args.get("overlap") {
+        cfg.overlap = v != "off" && v != "false" && v != "0";
+    }
     Ok(cfg)
 }
 

@@ -6,13 +6,18 @@
 //! the launcher creates one [`World`] per client and hands each worker
 //! thread its [`Comm`].
 //!
-//! Semantics mirrored from MPI: blocking `send`/`recv` with (source, tag)
-//! matching and out-of-order buffering, dissemination `barrier`, binomial
-//! `bcast`, and a naive `allreduce` (the bandwidth-optimal bucket/ring
-//! algorithms live in [`crate::collectives`] and are built *on top of*
-//! these point-to-point primitives, exactly like OpenMPI's tuned layer).
+//! Semantics mirrored from MPI. The core is **nonblocking**: `isend` /
+//! `irecv` return [`Request`] handles with `wait` / `wait_any` / `test`
+//! semantics over a posted-receive queue with (source, tag) matching and
+//! out-of-order buffering — receives are matched in posting order, exactly
+//! MPI's rule. The blocking `send`/`recv`/`sendrecv` calls are thin
+//! wrappers over the request layer. On top sit a dissemination `barrier`,
+//! binomial `bcast`, and a naive `allreduce` (the bandwidth-optimal
+//! chunk-pipelined algorithms live in [`crate::collectives`] and are built
+//! *on top of* these request primitives, exactly like OpenMPI's tuned
+//! layer).
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 
 /// A tagged message. `data` is the payload; collectives reserve the high
 /// tag bit and a per-collective sequence number so user traffic can never
@@ -26,6 +31,36 @@ struct Msg {
 
 const COLL_BIT: u64 = 1 << 63;
 
+/// A posted (not yet matched) or matched-but-not-waited receive.
+#[derive(Debug)]
+struct Posted {
+    from: usize,
+    tag: u64,
+    /// `Some` once a message has been matched to this receive.
+    data: Option<Vec<f32>>,
+    /// Posting order — MPI matches arriving messages against posted
+    /// receives in the order they were posted.
+    seq: u64,
+}
+
+/// Handle to an in-flight nonblocking operation (MPI_Request).
+///
+/// Send requests complete immediately (buffered eager sends, like
+/// `MPI_Send` under the eager threshold); receive requests complete when a
+/// matching message arrives. Consume with [`Comm::wait`] (or drop — an
+/// unwaited *send* request costs nothing; an unwaited receive request
+/// leaks its slot for the communicator's lifetime, as in MPI).
+#[derive(Debug)]
+pub struct Request(ReqKind);
+
+#[derive(Debug)]
+enum ReqKind {
+    /// Buffered send: already complete.
+    Send,
+    /// Posted receive: slot index into the communicator's receive slab.
+    Recv(usize),
+}
+
 /// One rank's endpoint of a communicator.
 pub struct Comm {
     rank: usize,
@@ -34,6 +69,10 @@ pub struct Comm {
     rx: Receiver<Msg>,
     /// Messages received but not yet matched (MPI unexpected-message queue).
     unexpected: Vec<Msg>,
+    /// Posted-receive slab; `None` slots are free (recycled).
+    posted: Vec<Option<Posted>>,
+    free_slots: Vec<usize>,
+    post_seq: u64,
     /// Collective sequence number, advanced identically on all ranks.
     coll_seq: u64,
 }
@@ -55,6 +94,9 @@ impl World {
                 txs: txs.clone(),
                 rx,
                 unexpected: Vec::new(),
+                posted: Vec::new(),
+                free_slots: Vec::new(),
+                post_seq: 0,
                 coll_seq: 0,
             })
             .collect()
@@ -70,11 +112,154 @@ impl Comm {
         self.size
     }
 
-    /// Blocking send (buffered: completes immediately, like MPI_Send on a
-    /// message that fits the eager threshold).
-    pub fn send(&self, to: usize, tag: u64, data: Vec<f32>) {
+    // -- nonblocking core ---------------------------------------------------
+
+    /// Nonblocking send. Completes immediately (buffered, like MPI_Send on
+    /// a message that fits the eager threshold); the returned request
+    /// exists for API symmetry with `irecv` in `wait_all` loops.
+    pub fn isend(&mut self, to: usize, tag: u64, data: Vec<f32>) -> Request {
         assert!(tag & COLL_BIT == 0, "user tags must not set the collective bit");
         self.send_raw(to, tag, data);
+        Request(ReqKind::Send)
+    }
+
+    /// Nonblocking receive with (source, tag) matching: posts the receive
+    /// and returns a [`Request`] that completes when a matching message
+    /// arrives. Already-buffered unexpected messages match immediately.
+    pub fn irecv(&mut self, from: usize, tag: u64) -> Request {
+        assert!(tag & COLL_BIT == 0, "user tags must not set the collective bit");
+        self.irecv_raw(from, tag)
+    }
+
+    fn irecv_raw(&mut self, from: usize, tag: u64) -> Request {
+        // Unexpected queue first, in arrival order (per-sender FIFO).
+        let data = self
+            .unexpected
+            .iter()
+            .position(|m| m.from == from && m.tag == tag)
+            .map(|pos| self.unexpected.remove(pos).data);
+        let seq = self.post_seq;
+        self.post_seq += 1;
+        let posted = Posted { from, tag, data, seq };
+        let slot = match self.free_slots.pop() {
+            Some(s) => {
+                self.posted[s] = Some(posted);
+                s
+            }
+            None => {
+                self.posted.push(Some(posted));
+                self.posted.len() - 1
+            }
+        };
+        Request(ReqKind::Recv(slot))
+    }
+
+    /// Match an arriving message against the earliest-posted pending
+    /// receive (MPI's matching rule), or buffer it as unexpected.
+    fn deliver(&mut self, msg: Msg) {
+        let target = self
+            .posted
+            .iter()
+            .enumerate()
+            .filter_map(|(i, p)| p.as_ref().map(|p| (i, p)))
+            .filter(|(_, p)| p.data.is_none() && p.from == msg.from && p.tag == msg.tag)
+            .min_by_key(|(_, p)| p.seq)
+            .map(|(i, _)| i);
+        match target {
+            Some(i) => self.posted[i].as_mut().unwrap().data = Some(msg.data),
+            None => self.unexpected.push(msg),
+        }
+    }
+
+    /// Drain every message already sitting in the channel (nonblocking
+    /// progress, like MPI's internal progress engine).
+    fn progress(&mut self) {
+        loop {
+            match self.rx.try_recv() {
+                Ok(msg) => self.deliver(msg),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => break,
+            }
+        }
+    }
+
+    fn slot_complete(&self, slot: usize) -> bool {
+        self.posted[slot]
+            .as_ref()
+            .map(|p| p.data.is_some())
+            .expect("request slot already consumed")
+    }
+
+    fn take_slot(&mut self, slot: usize) -> Vec<f32> {
+        let data = self.posted[slot]
+            .take()
+            .expect("request slot already consumed")
+            .data
+            .expect("taking incomplete slot");
+        self.free_slots.push(slot);
+        data
+    }
+
+    /// Nonblocking completion test (MPI_Test without the deallocate-on-
+    /// success: the request stays valid until waited).
+    pub fn test(&mut self, req: &Request) -> bool {
+        self.progress();
+        match req.0 {
+            ReqKind::Send => true,
+            ReqKind::Recv(slot) => self.slot_complete(slot),
+        }
+    }
+
+    /// Block until `req` completes; returns its payload (empty for sends).
+    pub fn wait(&mut self, req: Request) -> Vec<f32> {
+        match req.0 {
+            ReqKind::Send => Vec::new(),
+            ReqKind::Recv(slot) => {
+                self.progress();
+                while !self.slot_complete(slot) {
+                    let msg = self.rx.recv().expect("world torn down mid-recv");
+                    self.deliver(msg);
+                }
+                self.take_slot(slot)
+            }
+        }
+    }
+
+    /// Block until *any* request in `reqs` completes; removes it from the
+    /// vec and returns `(index_it_was_at, payload)` (MPI_Waitany). Panics
+    /// on an empty vec.
+    pub fn wait_any(&mut self, reqs: &mut Vec<Request>) -> (usize, Vec<f32>) {
+        assert!(!reqs.is_empty(), "wait_any on no requests");
+        self.progress();
+        loop {
+            let ready = reqs.iter().position(|r| match r.0 {
+                ReqKind::Send => true,
+                ReqKind::Recv(slot) => self.slot_complete(slot),
+            });
+            if let Some(i) = ready {
+                let req = reqs.remove(i);
+                let data = match req.0 {
+                    ReqKind::Send => Vec::new(),
+                    ReqKind::Recv(slot) => self.take_slot(slot),
+                };
+                return (i, data);
+            }
+            let msg = self.rx.recv().expect("world torn down mid-recv");
+            self.deliver(msg);
+        }
+    }
+
+    /// Block until every request completes; payloads in request order.
+    pub fn wait_all(&mut self, reqs: Vec<Request>) -> Vec<Vec<f32>> {
+        reqs.into_iter().map(|r| self.wait(r)).collect()
+    }
+
+    // -- blocking wrappers --------------------------------------------------
+
+    /// Blocking send (thin wrapper over [`Comm::isend`]; buffered sends
+    /// complete immediately).
+    pub fn send(&mut self, to: usize, tag: u64, data: Vec<f32>) {
+        let _ = self.isend(to, tag, data);
     }
 
     fn send_raw(&self, to: usize, tag: u64, data: Vec<f32>) {
@@ -83,27 +268,15 @@ impl Comm {
             .expect("peer hung up");
     }
 
-    /// Blocking receive with (source, tag) matching.
+    /// Blocking receive with (source, tag) matching — `wait(irecv(...))`.
     pub fn recv(&mut self, from: usize, tag: u64) -> Vec<f32> {
         assert!(tag & COLL_BIT == 0, "user tags must not set the collective bit");
         self.recv_raw(from, tag)
     }
 
     fn recv_raw(&mut self, from: usize, tag: u64) -> Vec<f32> {
-        if let Some(pos) = self
-            .unexpected
-            .iter()
-            .position(|m| m.from == from && m.tag == tag)
-        {
-            return self.unexpected.remove(pos).data;
-        }
-        loop {
-            let msg = self.rx.recv().expect("world torn down mid-recv");
-            if msg.from == from && msg.tag == tag {
-                return msg.data;
-            }
-            self.unexpected.push(msg);
-        }
+        let req = self.irecv_raw(from, tag);
+        self.wait(req)
     }
 
     /// Simultaneous send+recv (deadlock-free ring step).
@@ -252,6 +425,85 @@ mod tests {
     }
 
     #[test]
+    fn irecv_wait_round_trip() {
+        let out = run_world(2, |mut c| {
+            if c.rank() == 0 {
+                let r = c.isend(1, 3, vec![9.0]);
+                assert!(c.test(&r)); // buffered sends are instantly done
+                c.wait(r)
+            } else {
+                let r = c.irecv(0, 3);
+                c.wait(r)
+            }
+        });
+        assert_eq!(out[1], vec![9.0]);
+        assert!(out[0].is_empty()); // send request carries no payload
+    }
+
+    #[test]
+    fn wait_any_returns_whichever_completes() {
+        // Rank 0 sends tags in reverse posting order; rank 1 drains with
+        // wait_any and must see every payload exactly once.
+        let out = run_world(2, |mut c| {
+            if c.rank() == 0 {
+                for tag in (0..4u64).rev() {
+                    c.send(1, tag, vec![tag as f32]);
+                }
+                Vec::new()
+            } else {
+                let mut reqs: Vec<Request> = (0..4u64).map(|t| c.irecv(0, t)).collect();
+                let mut got = Vec::new();
+                while !reqs.is_empty() {
+                    let (_, data) = c.wait_any(&mut reqs);
+                    got.push(data[0]);
+                }
+                got.sort_by(|a, b| a.total_cmp(b));
+                got
+            }
+        });
+        assert_eq!(out[1], vec![0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn test_polls_without_blocking() {
+        use std::sync::mpsc::channel as ch;
+        let comms = World::create(2);
+        let mut it = comms.into_iter();
+        let mut c0 = it.next().unwrap();
+        let mut c1 = it.next().unwrap();
+        let (gate_tx, gate_rx) = ch::<()>();
+        let h = thread::spawn(move || {
+            gate_rx.recv().unwrap();
+            c0.send(1, 5, vec![7.0]);
+        });
+        let req = c1.irecv(0, 5);
+        assert!(!c1.test(&req)); // nothing sent yet: must not block
+        gate_tx.send(()).unwrap();
+        assert_eq!(c1.wait(req), vec![7.0]);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn interleaved_irecvs_match_in_posting_order() {
+        // Two messages on the same (source, tag): the first-posted irecv
+        // gets the first-sent payload (MPI posting-order matching).
+        let out = run_world(2, |mut c| {
+            if c.rank() == 0 {
+                c.send(1, 9, vec![1.0]);
+                c.send(1, 9, vec![2.0]);
+                Vec::new()
+            } else {
+                let r1 = c.irecv(0, 9);
+                let r2 = c.irecv(0, 9);
+                let second = c.wait(r2);
+                let first = c.wait(r1);
+                vec![first[0], second[0]]
+            }
+        });
+        assert_eq!(out[1], vec![1.0, 2.0]);
+    }
+
+    #[test]
     fn barrier_completes_all_sizes() {
         for p in [1, 2, 3, 5, 8] {
             run_world(p, |mut c| {
@@ -324,5 +576,25 @@ mod tests {
         for (r, d) in out.iter().enumerate() {
             assert_eq!(d[0], ((r + p - 1) % p) as f32);
         }
+    }
+
+    #[test]
+    fn recv_slots_recycle() {
+        // Many sequential irecv/wait cycles must not grow the slab.
+        let out = run_world(2, |mut c| {
+            if c.rank() == 0 {
+                for i in 0..100u64 {
+                    c.send(1, i % 4, vec![i as f32]);
+                }
+                0
+            } else {
+                for i in 0..100u64 {
+                    let r = c.irecv(0, i % 4);
+                    assert_eq!(c.wait(r), vec![i as f32]);
+                }
+                c.posted.len()
+            }
+        });
+        assert!(out[1] <= 2, "slab grew to {}", out[1]);
     }
 }

@@ -63,6 +63,14 @@ pub struct CostParams {
     /// al., arXiv:1711.05979). Drives the small/large-message crossover in
     /// [`crate::collectives::sim::select_best`].
     pub hd_contention: f64,
+    /// Sub-chunks per pipelined collective step (arXiv:1802.06949's
+    /// chunked nonblocking schedules): each step's message moves as this
+    /// many sub-messages so the per-step reduction overlaps the remaining
+    /// transfers. 1 = blocking schedule. Both the data path
+    /// ([`crate::collectives::allreduce_with`]) and the α-β-γ models /
+    /// `select_best` autotuner read this, so modeled and real schedules
+    /// agree.
+    pub pipeline_chunks: usize,
 }
 
 impl CostParams {
@@ -83,6 +91,7 @@ impl CostParams {
             gpu_sync: 20e-6,
             gpus_per_worker: 2,
             hd_contention: 0.3,
+            pipeline_chunks: 4,
         }
     }
 
@@ -104,6 +113,7 @@ impl CostParams {
             gpu_sync: 25e-6,
             gpus_per_worker: 2,
             hd_contention: 0.35,
+            pipeline_chunks: 4,
         }
     }
 }

@@ -22,6 +22,16 @@ use crate::runtime::XData;
 /// generative distribution, guaranteed-disjoint samples.
 pub const EVAL_OFFSET: u64 = 1 << 40;
 
+/// Whether ESGD's elastic sync fires after iteration `iter` (Fig. 8):
+/// every `interval` iterations *after* local progress — `(iter + 1)`, not
+/// `iter`, so iteration 0 makes local progress before any push — with
+/// `interval == 0` clamped to sync every iteration rather than dividing
+/// by zero. Shared by both execution planes so the lazy-sync schedule
+/// exists exactly once.
+pub fn esgd_sync_due(iter: u64, interval: usize) -> bool {
+    (iter + 1) % (interval.max(1) as u64) == 0
+}
+
 /// Batch provider shared by both trainers: synthetic Gaussian-mixture
 /// images (f32 models) or the tiny token corpus (i32 models).
 pub enum TrainData {

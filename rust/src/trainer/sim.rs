@@ -33,6 +33,11 @@ struct Client {
     /// Static duration of one lockstep batch round (max over the client's
     /// member workers, each with seeded speed jitter).
     compute_s: f64,
+    /// *Exposed* intra-client allreduce seconds per iteration: with the
+    /// DAG-embedded per-bucket collectives (cfg.overlap) only the
+    /// communication that cannot hide under this client's backward
+    /// compute; with overlap off, the full blocking allreduce.
+    comm_s: f64,
     /// Gradient in flight to the PS (ASGD).
     grad_outbox: Option<Vec<f32>>,
     train_loss_accum: f64,
@@ -43,8 +48,6 @@ struct Sim<'a> {
     model: Model,
     data: TrainData,
     clients: Vec<Client>,
-    /// Intra-client tensor-allreduce seconds (multi-ring, §6 cost model).
-    allreduce_s: f64,
     /// Master fan-out seconds after a pull.
     bcast_s: f64,
     fabric: PsFabric,
@@ -126,6 +129,40 @@ impl<'a> Sim<'a> {
     }
 }
 
+/// Per-iteration *exposed* intra-client communication seconds.
+///
+/// With `cfg.overlap` (the DAG-embedded collective path), the model's
+/// gradients move as fusion buckets issued while backward compute is still
+/// running, so only the communication that exceeds the overlap window is
+/// exposed ([`csim::overlapped_step_seconds`]); never worse than the
+/// blocking allreduce. With overlap off (or a single-worker client) the
+/// full blocking cost is exposed.
+fn exposed_comm_seconds(
+    cfg: &ExperimentConfig,
+    m: usize,
+    params: &crate::netsim::CostParams,
+    blocking_s: f64,
+    compute_s: f64,
+) -> f64 {
+    use crate::collectives::sim as csim;
+    if !cfg.overlap || m <= 1 {
+        return blocking_s;
+    }
+    // ResNet-50-analog message count: ~100 per-tensor messages without
+    // fusion, or the bucket count under the fusion cap (§2.1, Fig. 15).
+    let buckets = if cfg.fusion_bytes > 0 {
+        (cfg.virtual_model_bytes + cfg.fusion_bytes - 1) / cfg.fusion_bytes
+    } else {
+        100
+    }
+    .clamp(1, 100);
+    let per_msg = (cfg.virtual_model_bytes / buckets).max(1);
+    let comm = buckets as f64
+        * csim::tensor_allreduce_seconds(cfg.collective_kind(), m, per_msg, cfg.rings, params);
+    let step = csim::overlapped_step_seconds(compute_s, comm, buckets);
+    (step - compute_s).clamp(0.0, blocking_s)
+}
+
 /// Run a virtual-time training experiment; `vtime` in the returned records
 /// is netsim seconds.
 pub fn simulate(cfg: &ExperimentConfig, artifacts_dir: &Path) -> Result<RunResult> {
@@ -167,12 +204,14 @@ pub fn simulate(cfg: &ExperimentConfig, artifacts_dir: &Path) -> Result<RunResul
                     1.0 + cfg.jitter * r.uniform()
                 })
                 .fold(1.0f64, f64::max);
+            let compute_s = cfg.compute_s_per_batch * worst;
             Client {
                 w: w0.clone(),
                 momentum: vec![0.0; n],
                 now: 0.0,
                 iter: 0,
-                compute_s: cfg.compute_s_per_batch * worst,
+                compute_s,
+                comm_s: exposed_comm_seconds(cfg, m, &params, allreduce_s, compute_s),
                 grad_outbox: None,
                 train_loss_accum: 0.0,
             }
@@ -187,7 +226,6 @@ pub fn simulate(cfg: &ExperimentConfig, artifacts_dir: &Path) -> Result<RunResul
         data: TrainData::for_model(&meta, cfg.noise, cfg.classes, cfg.seed),
         model,
         clients,
-        allreduce_s,
         bcast_s,
         fabric: PsFabric::new(cfg.servers.max(1), cfg.clients, params),
         server_w: w0,
@@ -242,7 +280,7 @@ fn run_sync_sgd(sim: &mut Sim<'_>) -> Result<()> {
         let mut arrivals: Vec<(usize, VTime)> = (0..sim.clients.len())
             .map(|c| {
                 let cl = &sim.clients[c];
-                (c, cl.now + cl.compute_s + sim.allreduce_s)
+                (c, cl.now + cl.compute_s + cl.comm_s)
             })
             .collect();
         arrivals.sort_by(|a, b| a.1.total_cmp(&b.1));
@@ -306,7 +344,7 @@ fn finish_iteration(
         sim.record_epoch(epoch, now, &w, tl)?;
     }
     if iter + 1 < n_iters {
-        let t = now + sim.clients[c].compute_s + sim.allreduce_s;
+        let t = now + sim.clients[c].compute_s + sim.clients[c].comm_s;
         q.push(t, Ev::ComputeDone { c, iter: iter + 1 });
     }
     Ok(())
@@ -336,7 +374,7 @@ fn run_async(sim: &mut Sim<'_>, elastic: bool) -> Result<()> {
 
     let mut q: EventQueue<Ev> = EventQueue::new();
     for c in 0..sim.clients.len() {
-        let t = sim.clients[c].now + sim.clients[c].compute_s + sim.allreduce_s;
+        let t = sim.clients[c].now + sim.clients[c].compute_s + sim.clients[c].comm_s;
         q.push(t, Ev::ComputeDone { c, iter: 0 });
     }
 
@@ -354,12 +392,8 @@ fn run_async(sim: &mut Sim<'_>, elastic: bool) -> Result<()> {
                     sim.model.sgd_update(&mut w, &g, &mut mom, &local_hyper)?;
                     sim.clients[c].w = w;
                     sim.clients[c].momentum = mom;
-                    // Fig. 8: elastic sync fires every INTERVAL iterations
-                    // *after* local steps — (iter + 1), not iter, so
-                    // iteration 0 makes local progress before any push;
-                    // interval 0 is clamped to sync every iteration rather
-                    // than dividing by zero.
-                    if (iter + 1) % (cfg.interval.max(1) as u64) == 0 {
+                    // Fig. 8's lazy sync schedule (shared helper).
+                    if crate::trainer::esgd_sync_due(iter, cfg.interval) {
                         let arrive = sim.fabric.push(at, c, bytes);
                         q.push(arrive, Ev::PushArrive { c, iter });
                     } else {

@@ -164,24 +164,43 @@ fn worker_loop(
                 Algo::DistSgd | Algo::MpiSgd => {
                     // Fig. 6: push grads per key, pull aggregated grads.
                     // With no servers, PushPull degrades to the pure-MPI
-                    // allreduce (§4.2.4) — fused: consecutive small keys
-                    // coalesce into fusion_bytes buckets so each bucket
-                    // pays the per-message latency once (§2.1 bucketing).
+                    // allreduce (§4.2.4), issued as one nonblocking engine
+                    // op *per fusion bucket* in backward (reverse-key)
+                    // order — the order backprop emits gradients — so
+                    // bucket i's SGD.Update overlaps bucket i+1's
+                    // allreduce (DAG-embedded collectives,
+                    // arXiv:1802.06949). Results are bitwise identical to
+                    // the old fused-then-update path: the same bucketed
+                    // sums feed the same elementwise update.
                     let parts = split_keys(&segs, &grads);
-                    let agg: Vec<Vec<f32>> = if cfg.servers == 0 {
+                    if cfg.servers == 0 {
                         let keyed: Vec<(usize, Vec<f32>)> =
                             parts.into_iter().enumerate().collect();
-                        ctx.kv.pushpull_fused(keyed).wait()
+                        for ((i, j), pending) in ctx.kv.pushpull_buckets(keyed) {
+                            let agg = pending.wait();
+                            let lo = segs.segments[i].offset;
+                            let hi = segs.segments[j - 1].offset + segs.segments[j - 1].size;
+                            let mut g_seg = Vec::with_capacity(hi - lo);
+                            for part in &agg {
+                                g_seg.extend_from_slice(part);
+                            }
+                            let mut w_seg = w[lo..hi].to_vec();
+                            let mut m_seg = momentum[lo..hi].to_vec();
+                            model.sgd_update(&mut w_seg, &g_seg, &mut m_seg, &local_hyper)?;
+                            w[lo..hi].copy_from_slice(&w_seg);
+                            momentum[lo..hi].copy_from_slice(&m_seg);
+                        }
                     } else {
                         for (k, part) in parts.into_iter().enumerate() {
                             ctx.kv.push(k, part);
                         }
                         let pulls: Vec<_> = (0..n_keys).map(|k| ctx.kv.pull(k)).collect();
-                        pulls.into_iter().map(|p| p.wait()).collect()
-                    };
-                    let mut g_sum = vec![0.0f32; meta.params];
-                    join_keys(&segs, &agg, &mut g_sum);
-                    model.sgd_update(&mut w, &g_sum, &mut momentum, &local_hyper)?;
+                        let agg: Vec<Vec<f32>> =
+                            pulls.into_iter().map(|p| p.wait()).collect();
+                        let mut g_sum = vec![0.0f32; meta.params];
+                        join_keys(&segs, &agg, &mut g_sum);
+                        model.sgd_update(&mut w, &g_sum, &mut momentum, &local_hyper)?;
+                    }
                 }
                 Algo::DistAsgd | Algo::MpiAsgd => {
                     // Fig. 7: push grads, pull params.
@@ -206,10 +225,8 @@ fn worker_loop(
                         g = ctx.kv.client_allreduce(g).wait();
                     }
                     model.sgd_update(&mut w, &g, &mut momentum, &local_hyper)?;
-                    // Fig. 8: sync every INTERVAL iterations *after* local
-                    // progress — (iter + 1) so iteration 0 trains locally
-                    // first; interval 0 is clamped to sync every iteration.
-                    if (iter + 1) % cfg.interval.max(1) == 0 {
+                    // Fig. 8's lazy sync schedule (shared helper).
+                    if crate::trainer::esgd_sync_due(iter as u64, cfg.interval) {
                         // Push params (Fig. 8 l.10). The MPI kvstore's push
                         // ring-SUMS across the client; replicas are kept in
                         // lockstep, so pre-scale by 1/m to push the client

@@ -139,6 +139,41 @@ fn randomized_fused_buckets_match_ring_baseline() {
 }
 
 #[test]
+fn pipelined_depths_match_ring_baseline_bitwise() {
+    // Every schedule at every pipeline depth — including depths exceeding
+    // the chunk size — must equal the blocking (chunks=1) ring bitwise on
+    // adversarial shapes: empty, 1 element, below the rank count, odd,
+    // non-power-of-two worlds.
+    let mut case = 1000u64;
+    for p in [1usize, 2, 3, 5, 8] {
+        for len in [0usize, 1, p.saturating_sub(1), 257] {
+            case += 1;
+            let want = ring_oracle(case, p, len);
+            for chunks in [1usize, 2, 3, 8, 64] {
+                let mut params = CostParams::testbed1();
+                params.pipeline_chunks = chunks;
+                for kind in AlgoKind::DATA_PATH {
+                    let pr = params.clone();
+                    let out = run_world(p, move |mut c| {
+                        let mut d = payload(case, c.rank(), len);
+                        allreduce_with(kind, &mut c, &mut d, 2, 2, &pr);
+                        d
+                    });
+                    for (r, d) in out.iter().enumerate() {
+                        assert_eq!(
+                            d[..],
+                            want[..],
+                            "{} p={p} len={len} chunks={chunks} rank={r}",
+                            kind.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn select_best_crossover_hd_small_ring_large() {
     // The autotuner's acceptance shape: halving-doubling below the α/β
     // crossover, ring above it (§6.2 cost formalism; Shi et al. 1711.05979).

@@ -4,10 +4,13 @@
 //! SplitMix64 generator; a failing case prints its seed so it can be
 //! replayed by fixing the loop index.
 
-use mxnet_mpi::collectives::{chunk_bounds, multi_ring_allreduce, ring_allreduce};
+use mxnet_mpi::collectives::{
+    chunk_bounds, halving_doubling_allreduce_pipelined, hierarchical_allreduce_pipelined,
+    multi_ring_allreduce, multi_ring_allreduce_pipelined, ring_allreduce,
+};
 use mxnet_mpi::engine::Engine;
 use mxnet_mpi::jsonlite::{self, Value};
-use mxnet_mpi::mpisim::{Comm, World};
+use mxnet_mpi::mpisim::{Comm, Request, World};
 use mxnet_mpi::util::Rng;
 use std::sync::{Arc, Mutex};
 use std::thread;
@@ -56,6 +59,164 @@ fn prop_ring_allreduce_equals_naive() {
             d
         });
         assert_eq!(ring, naive, "case {case} p={p} len={len} rings={rings}");
+    }
+}
+
+/// Property: `wait_any` completes every posted irecv exactly once with the
+/// right payload, regardless of the (random) send order — out-of-order
+/// completion of the request set.
+#[test]
+fn prop_wait_any_out_of_order_completion() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(0x3A17 ^ case);
+        let n_msgs = 1 + rng.below(12) as usize;
+        // Random send permutation, shared by both ranks via the seed.
+        let mut order: Vec<usize> = (0..n_msgs).collect();
+        for i in (1..n_msgs).rev() {
+            order.swap(i, rng.below(i as u64 + 1) as usize);
+        }
+        let order = Arc::new(order);
+        let ord = order.clone();
+        let out = run_world(2, move |mut c| {
+            if c.rank() == 0 {
+                for &m in ord.iter() {
+                    c.send(1, m as u64, vec![m as f32, case as f32]);
+                }
+                Vec::new()
+            } else {
+                let mut reqs: Vec<Request> =
+                    (0..n_msgs).map(|m| c.irecv(0, m as u64)).collect();
+                let mut tags: Vec<usize> = (0..n_msgs).collect();
+                let mut got = vec![None; n_msgs];
+                while !reqs.is_empty() {
+                    let (i, data) = c.wait_any(&mut reqs);
+                    let tag = tags.remove(i);
+                    assert!(got[tag].is_none(), "case {case}: tag {tag} completed twice");
+                    got[tag] = Some(data);
+                }
+                got.into_iter().map(Option::unwrap).collect()
+            }
+        });
+        for (m, data) in out[1].iter().enumerate() {
+            assert_eq!(data[..], [m as f32, case as f32], "case {case} msg {m}");
+        }
+    }
+}
+
+/// Property: (source, tag) matching under interleaved irecvs — random
+/// posting order across two senders and several tags, random send
+/// interleave; each (from, tag) stream must match FIFO per posting order.
+#[test]
+fn prop_tag_matching_interleaved_irecvs() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(0x7A6 ^ case);
+        let tags = 1 + rng.below(4) as u64;
+        let per_stream = 1 + rng.below(4) as usize;
+        // Receiver posts, per (sender, tag) stream, `per_stream` irecvs in
+        // a random global interleave; senders send in index order. The
+        // i-th posted irecv of a stream must get the i-th sent payload.
+        let mut posts: Vec<(usize, u64)> = Vec::new();
+        for from in 0..2usize {
+            for t in 0..tags {
+                for _ in 0..per_stream {
+                    posts.push((from, t));
+                }
+            }
+        }
+        for i in (1..posts.len()).rev() {
+            posts.swap(i, rng.below(i as u64 + 1) as usize);
+        }
+        let posts = Arc::new(posts);
+        let ps = posts.clone();
+        let out = run_world(3, move |mut c| {
+            match c.rank() {
+                0 | 1 => {
+                    let from = c.rank();
+                    for t in 0..tags {
+                        for i in 0..per_stream {
+                            c.send(
+                                2,
+                                t,
+                                vec![from as f32, t as f32, i as f32, case as f32],
+                            );
+                        }
+                    }
+                    Vec::new()
+                }
+                _ => {
+                    let mut reqs = Vec::new();
+                    let mut meta = Vec::new();
+                    let mut seen = std::collections::HashMap::new();
+                    for &(from, t) in ps.iter() {
+                        let idx = seen.entry((from, t)).or_insert(0usize);
+                        reqs.push(c.irecv(from, t));
+                        meta.push((from, t, *idx));
+                        *idx += 1;
+                    }
+                    let mut results = Vec::new();
+                    while !reqs.is_empty() {
+                        let (i, data) = c.wait_any(&mut reqs);
+                        let m = meta.remove(i);
+                        results.push((m, data));
+                    }
+                    results
+                        .into_iter()
+                        .map(|((from, t, idx), data)| {
+                            assert_eq!(
+                                data[..],
+                                [from as f32, t as f32, idx as f32, case as f32],
+                                "case {case}: stream ({from},{t}) posting {idx}"
+                            );
+                            data[0]
+                        })
+                        .collect()
+                }
+            }
+        });
+        assert_eq!(out[2].len(), 2 * tags as usize * per_stream);
+    }
+}
+
+/// Property: every chunk-pipelined schedule equals the blocking ring
+/// bitwise on adversarial shapes — empty buffers, 1 element, lengths below
+/// the rank count, odd lengths, non-power-of-two worlds — across random
+/// pipeline depths.
+#[test]
+fn prop_pipelined_schedules_match_blocking_ring_bitwise() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(0x9199 ^ case);
+        let p = [1usize, 2, 3, 4, 5, 7, 8][rng.below(7) as usize];
+        let len = [0usize, 1, p.saturating_sub(1), 2, 17, 257, 1031][rng.below(7) as usize];
+        let chunks = 1 + rng.below(8) as usize;
+        let group = 1 + rng.below(4) as usize;
+        let rings = 1 + rng.below(3) as usize;
+        let payload = move |rank: usize| -> Vec<f32> {
+            let mut r = Rng::new(case * 7919 + rank as u64);
+            (0..len).map(|_| (r.below(201) as i64 - 100) as f32).collect()
+        };
+        let want = run_world(p, move |mut c| {
+            let mut d = payload(c.rank());
+            ring_allreduce(&mut c, &mut d); // blocking baseline
+            d
+        });
+        for algo in 0..3usize {
+            let out = run_world(p, move |mut c| {
+                let mut d = payload(c.rank());
+                match algo {
+                    0 => multi_ring_allreduce_pipelined(&mut c, &mut d, rings, chunks),
+                    1 => halving_doubling_allreduce_pipelined(&mut c, &mut d, chunks),
+                    _ => hierarchical_allreduce_pipelined(&mut c, &mut d, group, chunks),
+                }
+                d
+            });
+            for (r, d) in out.iter().enumerate() {
+                assert_eq!(
+                    d[..],
+                    want[r][..],
+                    "case {case} algo {algo} p={p} len={len} chunks={chunks}"
+                );
+            }
+        }
     }
 }
 
