@@ -5,7 +5,7 @@ use crate::collectives::AlgoKind;
 use crate::jsonlite::Value;
 use crate::kvstore::KvType;
 use crate::netsim::CostParams;
-use crate::ps::SyncMode;
+use crate::ps::{FaultPlan, SyncMode};
 use anyhow::{Context, Result};
 use std::path::Path;
 
@@ -134,6 +134,10 @@ pub struct ExperimentConfig {
     /// model; the time axis uses paper-scale traffic (ResNet-50 ≈ 102 MB
     /// of f32 parameters) so the compute:communication ratio matches §7.
     pub virtual_model_bytes: usize,
+    /// Scripted churn (the `--fault` grammar: `kill:R@N`,
+    /// `straggle:R@NxF`, `join@N`, `join:C@N`, comma-separated; empty =
+    /// static job). MPI modes only — elasticity is the hybrid's story.
+    pub fault: String,
 }
 
 impl ExperimentConfig {
@@ -173,7 +177,14 @@ impl ExperimentConfig {
             classes: 16,
             eval_samples: 512,
             virtual_model_bytes: 102 << 20, // ResNet-50 f32 params
+            fault: String::new(),
         }
+    }
+
+    /// Parsed churn schedule (`Ok(FaultPlan::none())` when `fault` is
+    /// empty).
+    pub fn fault_plan(&self) -> Result<FaultPlan> {
+        FaultPlan::parse(&self.fault)
     }
 
     pub fn workers_per_client(&self) -> usize {
@@ -234,16 +245,34 @@ impl ExperimentConfig {
             ("classes", Value::num(self.classes as f64)),
             ("eval_samples", Value::num(self.eval_samples as f64)),
             ("virtual_model_bytes", Value::num(self.virtual_model_bytes as f64)),
+            ("fault", Value::str(&self.fault)),
         ])
     }
 
     /// Load from a JSON file; missing fields fall back to testbed1
     /// defaults for the given algo.
+    ///
+    /// Count-like fields (`workers`, `servers`, iteration counts, byte
+    /// caps, …) must be non-negative finite numbers: a negative value
+    /// would otherwise truncate silently through the `usize` cast (e.g.
+    /// `servers=-1` reading as a "valid" count), so it errors with the
+    /// offending field named instead.
     pub fn from_json(v: &Value) -> Result<Self> {
         let algo = Algo::parse(v.req("algo")?.as_str().context("algo")?)
             .context("unknown algo")?;
         let mut c = Self::testbed1(algo);
+        // Free-form numerics (may legitimately be any float).
         let getn = |k: &str, d: f64| v.get(k).and_then(|x| x.as_f64()).unwrap_or(d);
+        // Counts and sizes: reject negatives/NaN before the lossy cast.
+        let getu = |k: &str, d: f64| -> Result<f64> {
+            match v.get(k).and_then(|x| x.as_f64()) {
+                None => Ok(d),
+                Some(x) if x.is_finite() && x >= 0.0 => Ok(x),
+                Some(x) => anyhow::bail!(
+                    "config field {k:?} must be a non-negative number, got {x}"
+                ),
+            }
+        };
         let gets = |k: &str, d: &str| {
             v.get(k)
                 .and_then(|x| x.as_str())
@@ -251,35 +280,41 @@ impl ExperimentConfig {
                 .to_string()
         };
         c.variant = gets("variant", &c.variant);
-        c.workers = getn("workers", c.workers as f64) as usize;
-        c.servers = getn("servers", c.servers as f64) as usize;
-        c.clients = getn("clients", c.clients as f64) as usize;
-        c.epochs = getn("epochs", c.epochs as f64) as usize;
-        c.samples_per_epoch = getn("samples_per_epoch", c.samples_per_epoch as f64) as u64;
-        c.batch = getn("batch", c.batch as f64) as usize;
+        c.workers = getu("workers", c.workers as f64)? as usize;
+        c.servers = getu("servers", c.servers as f64)? as usize;
+        c.clients = getu("clients", c.clients as f64)? as usize;
+        c.epochs = getu("epochs", c.epochs as f64)? as usize;
+        c.samples_per_epoch = getu("samples_per_epoch", c.samples_per_epoch as f64)? as u64;
+        c.batch = getu("batch", c.batch as f64)? as usize;
         c.lr = getn("lr", c.lr as f64) as f32;
         c.momentum = getn("momentum", c.momentum as f64) as f32;
         c.weight_decay = getn("weight_decay", c.weight_decay as f64) as f32;
         c.alpha = getn("alpha", c.alpha as f64) as f32;
-        c.interval = getn("interval", c.interval as f64) as usize;
-        c.rings = getn("rings", c.rings as f64) as usize;
+        c.interval = getu("interval", c.interval as f64)? as usize;
+        c.rings = getu("rings", c.rings as f64)? as usize;
         c.collective = gets("collective", &c.collective);
         anyhow::ensure!(
             AlgoKind::parse(&c.collective).is_some(),
             "unknown collective {:?} (valid: ring, halving_doubling, hierarchical, auto)",
             c.collective
         );
-        c.fusion_bytes = getn("fusion_bytes", c.fusion_bytes as f64) as usize;
+        c.fusion_bytes = getu("fusion_bytes", c.fusion_bytes as f64)? as usize;
         c.overlap = v.get("overlap").and_then(|x| x.as_bool()).unwrap_or(c.overlap);
-        c.pipeline_chunks = getn("pipeline_chunks", c.pipeline_chunks as f64) as usize;
-        c.seed = getn("seed", c.seed as f64) as u64;
+        c.pipeline_chunks = getu("pipeline_chunks", c.pipeline_chunks as f64)? as usize;
+        c.seed = getu("seed", c.seed as f64)? as u64;
         c.testbed = gets("testbed", &c.testbed);
-        c.compute_s_per_batch = getn("compute_s_per_batch", c.compute_s_per_batch);
-        c.jitter = getn("jitter", c.jitter);
+        c.compute_s_per_batch = getu("compute_s_per_batch", c.compute_s_per_batch)?;
+        c.jitter = getu("jitter", c.jitter)?;
         c.noise = getn("noise", c.noise as f64) as f32;
-        c.classes = getn("classes", c.classes as f64) as usize;
-        c.eval_samples = getn("eval_samples", c.eval_samples as f64) as u64;
-        c.virtual_model_bytes = getn("virtual_model_bytes", c.virtual_model_bytes as f64) as usize;
+        c.classes = getu("classes", c.classes as f64)? as usize;
+        c.eval_samples = getu("eval_samples", c.eval_samples as f64)? as u64;
+        c.virtual_model_bytes =
+            getu("virtual_model_bytes", c.virtual_model_bytes as f64)? as usize;
+        c.fault = gets("fault", &c.fault);
+        // Surface a malformed churn grammar at the config boundary, not
+        // mid-launch.
+        c.fault_plan()
+            .with_context(|| format!("config field \"fault\" = {:?}", c.fault))?;
         Ok(c)
     }
 
@@ -347,6 +382,42 @@ mod tests {
         assert_eq!(c.servers, 2);
         assert_eq!(c.collective, "auto");
         assert_eq!(c.fusion_bytes, 4 << 20);
+    }
+
+    #[test]
+    fn negative_counts_rejected_with_field_name() {
+        for (field, json) in [
+            ("servers", r#"{"algo": "mpi-SGD", "servers": -1}"#),
+            ("workers", r#"{"algo": "mpi-SGD", "workers": -3}"#),
+            ("fusion_bytes", r#"{"algo": "mpi-SGD", "fusion_bytes": -4096}"#),
+            ("epochs", r#"{"algo": "mpi-SGD", "epochs": -2}"#),
+        ] {
+            let v = crate::jsonlite::parse(json).unwrap();
+            let err = ExperimentConfig::from_json(&v).unwrap_err();
+            assert!(
+                format!("{err:#}").contains(field),
+                "error for {field} does not name it: {err:#}"
+            );
+        }
+        // Zero stays legal (servers=0 is the pure-MPI mode).
+        let v = crate::jsonlite::parse(r#"{"algo": "mpi-SGD", "servers": 0}"#).unwrap();
+        assert_eq!(ExperimentConfig::from_json(&v).unwrap().servers, 0);
+    }
+
+    #[test]
+    fn fault_plan_round_trips_and_validates() {
+        let mut c = ExperimentConfig::testbed1(Algo::MpiSgd);
+        c.fault = "kill:3@200,join@300".into();
+        let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.fault, c.fault);
+        assert_eq!(c2.fault_plan().unwrap().events.len(), 2);
+        assert!(ExperimentConfig::testbed1(Algo::MpiSgd)
+            .fault_plan()
+            .unwrap()
+            .is_empty());
+        // Malformed grammar rejected at the JSON boundary.
+        c.fault = "explode:1@5".into();
+        assert!(ExperimentConfig::from_json(&c.to_json()).is_err());
     }
 
     #[test]

@@ -118,6 +118,56 @@ pub fn fig16(artifacts: &Path, out_dir: &Path, epochs: usize) -> Result<Vec<RunR
     Ok(runs)
 }
 
+/// Convergence under churn: the §2 elasticity argument made measurable.
+///
+/// Three testbed1 runs share one fault plan — a worker killed mid-run plus
+/// a straggler — and differ only in how the membership epoch hits them:
+///
+/// * `mpi-SGD (hybrid)` — sync MPI clients under a PS: the kill is a
+///   *global* membership barrier (every world rebuilds), then training
+///   continues renormalized.
+/// * `mpi-SGD (pure)` — `#servers == 0`, one client of all workers: same
+///   global stall, and until the epoch fires the straggler gates every
+///   lockstep round — the paper's "pure MPI stalls" half.
+/// * `mpi-ESGD (hybrid)` — only the churned client pays the stall; the
+///   others keep training against the PS centers, so the loss keeps
+///   improving *through* the event — the "degrades gracefully" half.
+///
+/// The kill lands mid-run (half the iteration budget); CSV:
+/// `fig_churn.csv`.
+pub fn fig_churn(artifacts: &Path, out_dir: &Path, epochs: usize) -> Result<Vec<RunResult>> {
+    let base = fig_base(Algo::MpiSgd, epochs);
+    let iters_per_epoch =
+        (base.samples_per_epoch / (base.workers as u64 * base.batch as u64)).max(1);
+    // Mid-run kill, earlier straggle; both clear of the final ESGD
+    // interval boundary even at epochs == 1.
+    let kill_at = (iters_per_epoch * epochs as u64 / 2).max(1);
+    let straggle_at = (kill_at / 2).max(1);
+    let fault = format!("kill:11@{kill_at},straggle:1@{straggle_at}x3");
+
+    let mut runs = Vec::new();
+    for (algo, servers, clients, tag) in [
+        (Algo::MpiSgd, 2usize, 2usize, "hybrid"),
+        (Algo::MpiSgd, 0, 1, "pure"),
+        (Algo::MpiEsgd, 2, 2, "hybrid"),
+    ] {
+        let mut cfg = fig_base(algo, epochs);
+        cfg.servers = servers;
+        cfg.clients = clients;
+        cfg.fault = fault.clone();
+        eprintln!(
+            "[fig] running {} ({tag}, fault {fault}, {} epochs)...",
+            algo.name(),
+            cfg.epochs
+        );
+        let mut run = crate::trainer::sim::simulate(&cfg, artifacts)?;
+        run.label = format!("{} ({tag}+churn)", run.label);
+        runs.push(run);
+    }
+    write_runs_csv(&out_dir.join("fig_churn.csv"), &runs)?;
+    Ok(runs)
+}
+
 // ---------------------------------------------------------------------------
 // Cost-model figures (no artifacts needed)
 // ---------------------------------------------------------------------------

@@ -141,6 +141,9 @@ pub struct KvWorker {
     /// servers' pre_init replay, §4.1.2): buffered and folded in on init.
     /// Lock order is always `local` then `local_pre_init`.
     local_pre_init: Arc<Mutex<HashMap<Key, Vec<Vec<f32>>>>>,
+    /// Checkpoint blobs kept in-worker when there is no PS to persist
+    /// them (`#servers == 0` degradation of [`KvWorker::ckpt_save`]).
+    ckpt_local: Mutex<HashMap<Key, Vec<f32>>>,
     /// Serializes all communication ops in program order (§4.2).
     comm_var: Var,
     /// Per-key dependency tags.
@@ -185,6 +188,7 @@ impl KvWorker {
             ps: ps.map(|p| Arc::new(Mutex::new(p))),
             local: Arc::new(Mutex::new(HashMap::new())),
             local_pre_init: Arc::new(Mutex::new(HashMap::new())),
+            ckpt_local: Mutex::new(HashMap::new()),
             comm_var,
             key_vars: Mutex::new(HashMap::new()),
             n_rings: 2,
@@ -531,6 +535,73 @@ impl KvWorker {
             .collect()
     }
 
+    // -- elasticity: epoch-scoped communicators + checkpoint/restore -------
+
+    /// Swap in a rebuilt communicator at a membership-epoch boundary and
+    /// return the old one (the epoch-scoped world story: the client's
+    /// world shrinks or grows without restarting the worker).
+    ///
+    /// Callers must quiesce first (`wait_all`): every engine op captures
+    /// the same `Arc<Mutex<Comm>>`, so ops enqueued after this call run on
+    /// the new world, and an op still in flight would race the swap.
+    pub fn replace_comm(&self, new: Comm) -> Comm {
+        let comm = self
+            .comm
+            .as_ref()
+            .expect("replace_comm on a communicator-less kvstore");
+        std::mem::replace(&mut *comm.lock().unwrap(), new)
+    }
+
+    /// Persist a checkpoint blob through the PS (the master-replica path
+    /// joiners and restarted ranks bootstrap from). With `#servers == 0`
+    /// the blob is kept in this worker's local store instead — a restarted
+    /// rank can reload in place, and a *new* rank bootstraps by peer
+    /// broadcast ([`KvWorker::client_bcast`]) since there is no PS to pull
+    /// from.
+    ///
+    /// Blob keys are a namespace apart from training keys (no rounds, no
+    /// aggregation, last write wins). Called at membership-epoch
+    /// boundaries where the trainer has already quiesced the engine, so it
+    /// talks to the PS directly rather than through the comm var.
+    pub fn ckpt_save(&self, key: Key, data: Vec<f32>) {
+        match &self.ps {
+            Some(ps) => ps.lock().unwrap().save_blob(key, data),
+            None => {
+                self.ckpt_local.lock().unwrap().insert(key, data);
+            }
+        }
+    }
+
+    /// Fetch a checkpoint blob saved by [`KvWorker::ckpt_save`]; `None` if
+    /// nothing was saved under `key`.
+    pub fn ckpt_load(&self, key: Key) -> Option<Vec<f32>> {
+        match &self.ps {
+            Some(ps) => ps.lock().unwrap().load_blob(key),
+            None => self.ckpt_local.lock().unwrap().get(&key).cloned(),
+        }
+    }
+
+    /// Broadcast `data` from the client member with MPI rank `root` to the
+    /// whole client — the peer-bootstrap path a joiner takes when
+    /// `#servers == 0` leaves no PS checkpoint to pull. Every member of
+    /// the client must call it (survivors pass their replica, joiners pass
+    /// anything); runs through the engine comm var like every collective.
+    pub fn client_bcast(&self, root: usize, data: Vec<f32>) -> Pending<Vec<f32>> {
+        let (pending, slot) = Pending::engine_backed(self.engine.clone(), vec![self.comm_var]);
+        let comm = self.comm.clone().expect("client_bcast needs MPI");
+        self.engine.push(
+            move || {
+                let mut c = comm.lock().unwrap();
+                let mut buf = data;
+                c.bcast(root, &mut buf);
+                *slot.lock().unwrap() = Some(buf);
+            },
+            &[],
+            &[self.comm_var],
+        );
+        pending
+    }
+
     /// Intra-client gradient aggregation (sync SGD *within* the
     /// communicator, §5 ESGD): a plain multi-ring allreduce across the MPI
     /// client, never touching the PS.
@@ -869,6 +940,99 @@ mod tests {
             .collect();
         for h in hs {
             h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn replace_comm_shrinks_the_allreduce_world() {
+        // 3 ranks allreduce; rank 2 "dies" at the epoch boundary; the two
+        // survivors swap in a rebuilt 2-rank world and keep reducing —
+        // no deadlock, and the sums now span the survivors only.
+        let comms = World::create(3);
+        let new_world = Arc::new(Mutex::new(World::create(2)));
+        let hs: Vec<_> = comms
+            .into_iter()
+            .map(|comm| {
+                let new_world = new_world.clone();
+                thread::spawn(move || {
+                    let rank = comm.rank();
+                    let engine = Arc::new(Engine::new(1));
+                    let kv = KvWorker::create(KvType::SyncMpi, engine, Some(comm), None);
+                    let a = kv.pushpull(0, vec![rank as f32 + 1.0]).wait();
+                    assert_eq!(a, vec![6.0]);
+                    kv.wait_all(); // quiesce before the epoch boundary
+                    if rank == 2 {
+                        return vec![-1.0]; // fail-stop departure
+                    }
+                    let fresh = new_world.lock().unwrap().pop().unwrap();
+                    // New worlds are handed out highest-rank-first by pop:
+                    // old rank 1 -> new rank 1, old rank 0 -> new rank 0
+                    // is irrelevant for a sum, so any assignment works.
+                    drop(kv.replace_comm(fresh));
+                    kv.pushpull(1, vec![10.0]).wait()
+                })
+            })
+            .collect();
+        let out: Vec<Vec<f32>> = hs.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(out[0], vec![20.0]);
+        assert_eq!(out[1], vec![20.0]);
+        assert_eq!(out[2], vec![-1.0]);
+    }
+
+    #[test]
+    fn checkpoint_blobs_persist_through_ps() {
+        let group = ServerGroup::spawn(2, SyncMode::Sync, 1);
+        let engine = Arc::new(Engine::new(1));
+        let kv = KvWorker::create(KvType::DistSync, engine, None, Some(group.client()));
+        assert_eq!(kv.ckpt_load(0), None);
+        kv.ckpt_save(0, vec![1.0, 2.0]);
+        kv.ckpt_save(1, vec![3.0]);
+        // A different worker endpoint sees the same blobs (PS-backed).
+        let engine2 = Arc::new(Engine::new(1));
+        let kv2 = KvWorker::create(KvType::DistSync, engine2, None, Some(group.client()));
+        assert_eq!(kv2.ckpt_load(0), Some(vec![1.0, 2.0]));
+        assert_eq!(kv2.ckpt_load(1), Some(vec![3.0]));
+        group.shutdown();
+    }
+
+    #[test]
+    fn checkpoint_degrades_to_local_without_servers() {
+        let comms = World::create(1);
+        let engine = Arc::new(Engine::new(1));
+        let kv = KvWorker::create(
+            KvType::SyncMpi,
+            engine,
+            Some(comms.into_iter().next().unwrap()),
+            None,
+        );
+        kv.ckpt_save(7, vec![4.0]);
+        assert_eq!(kv.ckpt_load(7), Some(vec![4.0]));
+        assert_eq!(kv.ckpt_load(8), None);
+    }
+
+    #[test]
+    fn client_bcast_bootstraps_joiner_replica() {
+        // Rank 1 plays a joiner with no state; the bcast hands it rank 0's
+        // replica bitwise.
+        let comms = World::create(3);
+        let hs: Vec<_> = comms
+            .into_iter()
+            .map(|comm| {
+                thread::spawn(move || {
+                    let rank = comm.rank();
+                    let engine = Arc::new(Engine::new(1));
+                    let kv = KvWorker::create(KvType::SyncMpi, engine, Some(comm), None);
+                    let mine = if rank == 1 {
+                        Vec::new() // joiner: nothing yet
+                    } else {
+                        vec![0.25, -1.5, 3.0]
+                    };
+                    kv.client_bcast(0, mine).wait()
+                })
+            })
+            .collect();
+        for h in hs {
+            assert_eq!(h.join().unwrap(), vec![0.25, -1.5, 3.0]);
         }
     }
 

@@ -14,8 +14,10 @@ use crate::engine::Engine;
 use crate::kvstore::{KvType, KvWorker};
 use crate::mpisim::{Comm, World};
 use crate::netsim::CostParams;
-use crate::ps::{PsClient, Role, Scheduler, ServerGroup, SyncMode};
-use std::sync::Arc;
+use crate::ps::{FaultKind, FaultPlan, PsClient, Role, Scheduler, ServerGroup, SyncMode};
+use anyhow::{ensure, Result};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Shape of a job: the launcher's CLI parameters (§4.1.2).
 #[derive(Debug, Clone)]
@@ -37,6 +39,16 @@ pub struct JobSpec {
     pub group: usize,
     /// Cost-model constants the `Auto` schedule tunes against.
     pub cost: CostParams,
+    /// Scripted churn (empty = the static job of the original launcher).
+    /// MPI kvstore types only: elasticity is the PS-task half of the
+    /// hybrid, and dist modes have no client worlds to rebuild.
+    pub fault: FaultPlan,
+    /// Membership-epoch cadence in iterations: churn events take effect at
+    /// the first boundary at/after their iteration. Sync-SGD jobs use 1
+    /// (every iteration is a sync boundary); ESGD jobs use the elastic
+    /// sync INTERVAL so reconfiguration rides the existing lazy-sync
+    /// schedule.
+    pub reconfig_every: u64,
 }
 
 impl JobSpec {
@@ -53,12 +65,16 @@ impl JobSpec {
             rings: 2,
             group: 2,
             cost: CostParams::testbed1(),
+            fault: FaultPlan::none(),
+            reconfig_every: 1,
         }
     }
 
     /// Full wiring from an experiment config, collective layer included:
     /// schedule, fusion cap, ring count, hierarchical group size and the
-    /// testbed cost constants the `Auto` autotuner consults.
+    /// testbed cost constants the `Auto` autotuner consults. The fault
+    /// plan is *not* read here (parsing can fail); callers that want churn
+    /// set `spec.fault` from [`ExperimentConfig::fault_plan`].
     pub fn from_config(cfg: &ExperimentConfig) -> Self {
         let mut spec = Self::from_algo(cfg.algo, cfg.workers, cfg.servers, cfg.clients);
         spec.collective = cfg.collective_kind();
@@ -66,6 +82,11 @@ impl JobSpec {
         spec.rings = cfg.rings.max(1);
         spec.cost = cfg.cost_params();
         spec.group = spec.cost.gpus_per_worker.max(1);
+        spec.reconfig_every = if cfg.algo.is_elastic() {
+            cfg.interval.max(1) as u64
+        } else {
+            1
+        };
         spec
     }
 
@@ -77,6 +98,434 @@ impl JobSpec {
         } else {
             self.workers
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ElasticHub — epoch-scoped membership coordination
+// ---------------------------------------------------------------------------
+
+/// What one worker learns at a membership-epoch boundary: its place in the
+/// rebuilt world plus everything needed to renormalize and (re)bootstrap.
+#[derive(Debug, Clone)]
+pub struct EpochView {
+    /// Completed membership epochs after this boundary (plan index + 1).
+    pub epoch: u64,
+    /// The iteration this boundary rode on.
+    pub boundary_iter: u64,
+    /// This worker's rank in its client's rebuilt MPI_COMM_WORLD.
+    pub mpi_rank: usize,
+    pub client_id: usize,
+    /// Live members of this worker's client (its new world size).
+    pub workers_per_client: usize,
+    /// Live workers across all clients (gradient renormalization).
+    pub live_workers: usize,
+    pub live_clients: usize,
+    /// New sync quorum (the hub has already retargeted the servers).
+    pub expected_pushes: usize,
+    /// This worker's index among all live workers (data resharding).
+    pub shard_index: usize,
+    /// This client's live ps_ranks ascending — index in this list *is*
+    /// the new MPI rank (the rank-translation table).
+    pub members: Vec<usize>,
+    /// ps_ranks admitted at this boundary (bootstrap coordination).
+    pub joined: Vec<usize>,
+    /// This worker's cumulative straggle factor (>= 1.0).
+    pub straggle: f64,
+}
+
+/// A survivor's (or joiner's) barrier result: the view plus its endpoint
+/// of the rebuilt per-client world (None for dist-style 1-rank worlds).
+pub struct Handout {
+    pub view: EpochView,
+    pub comm: Option<Comm>,
+}
+
+/// One planned membership epoch, fully precomputed at launch: the fault
+/// plan is static configuration, so every worker derives the identical
+/// boundary schedule and the barrier needs no dynamic discovery.
+struct EpochPlan {
+    boundary_iter: u64,
+    kills: Vec<usize>,
+    joins: Vec<usize>,
+    /// Survivors whose arrival completes the barrier: (ps_rank, client),
+    /// ascending rank. Kills excluded, joiners not yet included.
+    survivors: Vec<(usize, usize)>,
+    /// Live members after the epoch: (ps_rank, client), ascending rank.
+    members_after: Vec<(usize, usize)>,
+    /// Cumulative straggle factor per affected rank after this epoch.
+    straggle: Vec<(usize, f64)>,
+}
+
+struct HubState {
+    /// Completed epochs (index of the next planned boundary).
+    epoch: usize,
+    /// Survivors arrived at the current barrier.
+    arrived: BTreeSet<usize>,
+    /// Joiners parked and awaiting admission.
+    parked: BTreeSet<usize>,
+    /// Built handouts awaiting pickup.
+    outbox: HashMap<usize, Handout>,
+}
+
+/// The launcher's elastic control plane. Workers hit `reconfigure` at each
+/// planned boundary (dying ranks simply return instead — fail-stop *at*
+/// the boundary, the cloud-preemption model, so no collective ever spans a
+/// dead rank); parked joiners are admitted when their epoch builds. The
+/// last arrival rebuilds one fresh world per surviving client, updates the
+/// scheduler's membership view and retargets the PS sync quorum.
+pub struct ElasticHub {
+    state: Mutex<HubState>,
+    cv: Condvar,
+    epochs: Vec<EpochPlan>,
+    mpi: bool,
+    sched: Scheduler,
+    /// Control endpoint used to retarget `expected_pushes` (None when the
+    /// job runs serverless pure MPI).
+    ps_ctl: Option<PsClient>,
+}
+
+impl ElasticHub {
+    /// Precompute the epoch schedule from a job's fault plan. Fails when
+    /// the plan is inconsistent: killing a rank that is not live, or
+    /// leaving an epoch with no survivors.
+    pub fn new(spec: &JobSpec, sched: Scheduler, ps_ctl: Option<PsClient>) -> Result<Self> {
+        let wpc = spec.workers / spec.clients.max(1);
+        let cadence = spec.reconfig_every.max(1);
+        // Live set evolves as we walk the plan.
+        let mut live: BTreeMap<usize, usize> =
+            (0..spec.workers).map(|r| (r, r / wpc)).collect();
+        let mut straggle: BTreeMap<usize, f64> = BTreeMap::new();
+        let mut next_join_rank = spec.workers;
+
+        // Group events by their effective boundary iteration.
+        let mut grouped: BTreeMap<u64, Vec<FaultKind>> = BTreeMap::new();
+        for ev in &spec.fault.events {
+            let boundary = (ev.at_iter + cadence) / cadence * cadence - 1;
+            grouped.entry(boundary).or_default().push(ev.kind);
+        }
+
+        let mut epochs = Vec::new();
+        for (boundary_iter, kinds) in grouped {
+            let mut kills = Vec::new();
+            let mut joins = Vec::new();
+            for kind in &kinds {
+                match *kind {
+                    FaultKind::Kill { rank } => {
+                        ensure!(
+                            live.contains_key(&rank),
+                            "fault plan kills rank {rank} at iter {boundary_iter}, \
+                             but it is not live there"
+                        );
+                        live.remove(&rank);
+                        kills.push(rank);
+                    }
+                    FaultKind::Straggle { rank, factor } => {
+                        ensure!(
+                            live.contains_key(&rank),
+                            "fault plan straggles rank {rank} at iter {boundary_iter}, \
+                             but it is not live there"
+                        );
+                        *straggle.entry(rank).or_insert(1.0) *= factor;
+                    }
+                    FaultKind::Join { .. } => {}
+                }
+            }
+            let survivors: Vec<(usize, usize)> =
+                live.iter().map(|(&r, &c)| (r, c)).collect();
+            ensure!(
+                !survivors.is_empty(),
+                "fault plan leaves no survivors at iter {boundary_iter}"
+            );
+            ensure!(
+                survivors.iter().any(|&(_, c)| c == 0),
+                "fault plan empties client 0 at iter {boundary_iter}: client 0 \
+                 carries the validation records on both trainer planes"
+            );
+            // Joins admitted after kills: a joiner lands on the *post-kill*
+            // emptiest client (or its explicit hint).
+            for kind in &kinds {
+                if let FaultKind::Join { client } = *kind {
+                    let target = client.unwrap_or_else(|| {
+                        let mut counts: BTreeMap<usize, usize> =
+                            (0..spec.clients).map(|c| (c, 0)).collect();
+                        for &c in live.values() {
+                            *counts.entry(c).or_insert(0) += 1;
+                        }
+                        counts
+                            .iter()
+                            .min_by_key(|&(&c, &n)| (n, c))
+                            .map(|(&c, _)| c)
+                            .unwrap_or(0)
+                    });
+                    ensure!(
+                        target < spec.clients,
+                        "fault plan joins client {target}, but the job has \
+                         {} clients",
+                        spec.clients
+                    );
+                    live.insert(next_join_rank, target);
+                    joins.push(next_join_rank);
+                    next_join_rank += 1;
+                }
+            }
+            let members_after: Vec<(usize, usize)> =
+                live.iter().map(|(&r, &c)| (r, c)).collect();
+            epochs.push(EpochPlan {
+                boundary_iter,
+                kills,
+                joins,
+                survivors,
+                members_after,
+                straggle: straggle.iter().map(|(&r, &f)| (r, f)).collect(),
+            });
+        }
+        Ok(Self {
+            state: Mutex::new(HubState {
+                epoch: 0,
+                arrived: BTreeSet::new(),
+                parked: BTreeSet::new(),
+                outbox: HashMap::new(),
+            }),
+            cv: Condvar::new(),
+            epochs,
+            mpi: spec.ktype.is_mpi(),
+            sched,
+            ps_ctl,
+        })
+    }
+
+    /// The boundary iteration of the next planned epoch after
+    /// `epochs_done` completed ones (None when the plan is exhausted).
+    pub fn boundary_iter(&self, epochs_done: u64) -> Option<u64> {
+        self.epochs.get(epochs_done as usize).map(|e| e.boundary_iter)
+    }
+
+    /// Ranks that leave at the next boundary.
+    pub fn dying_at(&self, epochs_done: u64) -> &[usize] {
+        self.epochs
+            .get(epochs_done as usize)
+            .map(|e| e.kills.as_slice())
+            .unwrap_or(&[])
+    }
+
+    /// The checkpoint master of `client` at the next boundary: its lowest
+    /// *surviving* ps_rank (None when the whole client dies).
+    pub fn ckpt_master(&self, epochs_done: u64, client: usize) -> Option<usize> {
+        self.epochs.get(epochs_done as usize).and_then(|e| {
+            e.survivors
+                .iter()
+                .find(|&&(_, c)| c == client)
+                .map(|&(r, _)| r)
+        })
+    }
+
+    /// (ps_rank, client, admission epoch index) of every planned joiner —
+    /// the launcher pre-spawns one worker thread per entry.
+    pub fn joiner_seeds(&self) -> Vec<(usize, usize, u64)> {
+        let mut seeds = Vec::new();
+        for (k, e) in self.epochs.iter().enumerate() {
+            for &rank in &e.joins {
+                let client = e
+                    .members_after
+                    .iter()
+                    .find(|&&(r, _)| r == rank)
+                    .map(|&(_, c)| c)
+                    .expect("joiner in members_after");
+                seeds.push((rank, client, k as u64));
+            }
+        }
+        seeds
+    }
+
+    pub fn n_epochs(&self) -> usize {
+        self.epochs.len()
+    }
+
+    /// Live members (ps_rank, client) after planned epoch `epoch_idx`
+    /// completes — the sim plane rebuilds its membership tables from this
+    /// so both planes share one boundary schedule.
+    pub fn members_after(&self, epoch_idx: u64) -> &[(usize, usize)] {
+        self.epochs
+            .get(epoch_idx as usize)
+            .map(|e| e.members_after.as_slice())
+            .unwrap_or(&[])
+    }
+
+    /// Ranks admitted at planned epoch `epoch_idx`.
+    pub fn joins_at(&self, epoch_idx: u64) -> &[usize] {
+        self.epochs
+            .get(epoch_idx as usize)
+            .map(|e| e.joins.as_slice())
+            .unwrap_or(&[])
+    }
+
+    /// Cumulative straggle factor of `rank` after planned epoch
+    /// `epoch_idx` completes (1.0 when unaffected).
+    pub fn straggle_after(&self, epoch_idx: u64, rank: usize) -> f64 {
+        self.epochs
+            .get(epoch_idx as usize)
+            .and_then(|e| {
+                e.straggle
+                    .iter()
+                    .find(|&&(r, _)| r == rank)
+                    .map(|&(_, f)| f)
+            })
+            .unwrap_or(1.0)
+    }
+
+    /// Survivor barrier: blocks until every survivor of the current epoch
+    /// arrived and every due joiner parked, then hands each member its
+    /// place in the rebuilt world. Dying ranks must NOT call this — they
+    /// return from their worker instead (their departure is part of the
+    /// precomputed plan, so the barrier never waits on them).
+    pub fn reconfigure(&self, ps_rank: usize) -> Handout {
+        let mut st = self.state.lock().unwrap();
+        assert!(
+            st.epoch < self.epochs.len(),
+            "reconfigure past the last planned epoch"
+        );
+        st.arrived.insert(ps_rank);
+        self.try_build(&mut st);
+        loop {
+            if let Some(h) = st.outbox.remove(&ps_rank) {
+                return h;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Joiner entry point: parks until this rank's admission epoch builds,
+    /// then returns its place in the world it joined.
+    pub fn await_join(&self, ps_rank: usize) -> Handout {
+        let mut st = self.state.lock().unwrap();
+        st.parked.insert(ps_rank);
+        self.try_build(&mut st);
+        loop {
+            if let Some(h) = st.outbox.remove(&ps_rank) {
+                return h;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Build the current epoch if its barrier is complete: one fresh world
+    /// per surviving client, scheduler view published, PS quorum
+    /// retargeted, handouts for every member.
+    fn try_build(&self, st: &mut HubState) {
+        let Some(plan) = self.epochs.get(st.epoch) else { return };
+        if !plan.survivors.iter().all(|&(r, _)| st.arrived.contains(&r)) {
+            return;
+        }
+        if !plan.joins.iter().all(|r| st.parked.contains(r)) {
+            return;
+        }
+        // Membership authority bookkeeping (the scheduler owns the view).
+        for &dead in &plan.kills {
+            self.sched.deregister(dead);
+        }
+        for &j in &plan.joins {
+            self.sched.admit(j);
+            st.parked.remove(&j);
+        }
+        self.sched.publish_view();
+
+        let mut per_client: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for &(r, c) in &plan.members_after {
+            per_client.entry(c).or_default().push(r);
+        }
+        let live_workers = plan.members_after.len();
+        let live_clients = per_client.len();
+        let expected_pushes = if self.mpi { live_clients } else { live_workers };
+        if let Some(ps) = &self.ps_ctl {
+            ps.set_expected_pushes(expected_pushes);
+        }
+        let shard_index = |rank: usize| {
+            plan.members_after
+                .iter()
+                .position(|&(r, _)| r == rank)
+                .expect("member")
+        };
+        let straggle_of = |rank: usize| {
+            plan.straggle
+                .iter()
+                .find(|&&(r, _)| r == rank)
+                .map(|&(_, f)| f)
+                .unwrap_or(1.0)
+        };
+        let epoch = st.epoch as u64 + 1;
+        for (&client_id, members) in &per_client {
+            let comms: Vec<Option<Comm>> = if self.mpi {
+                World::create(members.len()).into_iter().map(Some).collect()
+            } else {
+                members.iter().map(|_| None).collect()
+            };
+            for ((mpi_rank, &rank), comm) in members.iter().enumerate().zip(comms) {
+                let view = EpochView {
+                    epoch,
+                    boundary_iter: plan.boundary_iter,
+                    mpi_rank,
+                    client_id,
+                    workers_per_client: members.len(),
+                    live_workers,
+                    live_clients,
+                    expected_pushes,
+                    shard_index: shard_index(rank),
+                    members: members.clone(),
+                    joined: plan.joins.clone(),
+                    straggle: straggle_of(rank),
+                };
+                st.outbox.insert(rank, Handout { view, comm });
+            }
+        }
+        st.epoch += 1;
+        st.arrived.clear();
+        self.cv.notify_all();
+    }
+}
+
+/// The per-thread clone set of a job's kvstore wiring — one place to add
+/// a knob so original workers and pre-spawned joiners can never diverge.
+#[derive(Clone)]
+struct Wiring {
+    ktype: KvType,
+    engine_threads: usize,
+    workers: usize,
+    clients: usize,
+    collective: AlgoKind,
+    fusion_bytes: usize,
+    rings: usize,
+    group: usize,
+    cost: CostParams,
+}
+
+impl Wiring {
+    fn from_spec(spec: &JobSpec) -> Self {
+        Self {
+            ktype: spec.ktype,
+            engine_threads: spec.engine_threads,
+            workers: spec.workers,
+            clients: spec.clients,
+            collective: spec.collective,
+            fusion_bytes: spec.fusion_bytes,
+            rings: spec.rings,
+            group: spec.group,
+            cost: spec.cost.clone(),
+        }
+    }
+
+    /// Build a worker's engine + configured KVStore endpoint.
+    fn make_kv(&self, comm: Option<Comm>, ps: Option<PsClient>) -> (Arc<Engine>, KvWorker) {
+        let engine = Arc::new(Engine::new(self.engine_threads));
+        let mut kv = KvWorker::create(self.ktype, engine.clone(), comm, ps);
+        kv.configure_collective(
+            self.collective,
+            self.rings,
+            self.group,
+            self.fusion_bytes,
+            self.cost.clone(),
+        );
+        (engine, kv)
     }
 }
 
@@ -94,11 +543,21 @@ pub struct WorkerCtx {
     /// The wired KVStore endpoint (owns comm + PS client).
     pub kv: KvWorker,
     pub engine: Arc<Engine>,
+    /// Elastic control plane (None on static jobs): workers consult it for
+    /// membership-epoch boundaries and rebuilt worlds.
+    pub hub: Option<Arc<ElasticHub>>,
+    /// Set for late joiners: the admission view (start iteration =
+    /// `boundary_iter + 1`, membership, bootstrap coordinates).
+    pub join_view: Option<EpochView>,
 }
 
 /// Launch a job and run `worker_fn` on every worker thread; returns each
-/// worker's result (indexed by PS rank). Servers/scheduler shut down after
-/// all workers finish.
+/// worker's result (indexed by PS rank; planned joiners follow the launch
+/// population). Servers/scheduler shut down after all workers finish.
+///
+/// With a non-empty `spec.fault` the job is *elastic*: an [`ElasticHub`]
+/// is wired into every [`WorkerCtx`] and one extra worker thread is
+/// pre-spawned per planned join, parked until its admission epoch.
 pub fn launch<F, R>(spec: &JobSpec, worker_fn: F) -> Vec<R>
 where
     F: Fn(WorkerCtx) -> R + Clone + Send + 'static,
@@ -110,6 +569,11 @@ where
         spec.workers % spec.clients,
         0,
         "workers must divide evenly into clients"
+    );
+    assert!(
+        spec.fault.is_empty() || spec.ktype.is_mpi(),
+        "fault plans require an MPI kvstore type: elasticity is the \
+         PS+MPI hybrid's story, dist modes have no client worlds to rebuild"
     );
     let wpc = spec.workers / spec.clients;
 
@@ -130,6 +594,20 @@ where
         None
     };
 
+    // 2b. Elastic control plane (only when the plan scripts churn).
+    let hub: Option<Arc<ElasticHub>> = if spec.fault.is_empty() {
+        None
+    } else {
+        Some(Arc::new(
+            ElasticHub::new(
+                spec,
+                scheduler.handle(),
+                servers.as_ref().map(|g| g.client()),
+            )
+            .expect("invalid fault plan for this job"),
+        ))
+    };
+
     // 3. One MPI_COMM_WORLD per client (each client is a separate mpirun
     // job in the paper); dist modes get single-rank worlds.
     let mut handles = Vec::with_capacity(spec.workers);
@@ -145,32 +623,64 @@ where
             let ps_client: Option<PsClient> = servers.as_ref().map(|g| g.client());
             let sched = scheduler.handle();
             let f = worker_fn.clone();
-            let ktype = spec.ktype;
-            let engine_threads = spec.engine_threads;
-            let (workers, clients) = (spec.workers, spec.clients);
-            let (collective, fusion_bytes) = (spec.collective, spec.fusion_bytes);
-            let (rings, group, cost) = (spec.rings, spec.group, spec.cost.clone());
+            let wiring = Wiring::from_spec(spec);
+            let hub = hub.clone();
             handles.push(std::thread::Builder::new()
                 .name(format!("worker-{ps_rank}"))
                 .spawn(move || {
-                    sched.register(Role::Worker);
-                    let engine = Arc::new(Engine::new(engine_threads));
-                    let comm_opt = if ktype.is_mpi() { Some(comm) } else { None };
-                    let mut kv = KvWorker::create(ktype, engine.clone(), comm_opt, ps_client);
-                    kv.configure_collective(collective, rings, group, fusion_bytes, cost);
+                    // Register under the launcher-assigned rank so the
+                    // scheduler's live set speaks ps_ranks.
+                    sched.register_as(ps_rank);
+                    let comm_opt = if wiring.ktype.is_mpi() { Some(comm) } else { None };
+                    let (engine, kv) = wiring.make_kv(comm_opt, ps_client);
                     let ctx = WorkerCtx {
                         ps_rank,
                         client_id,
                         mpi_rank,
                         workers_per_client: wpc,
-                        n_workers: workers,
-                        n_clients: clients,
+                        n_workers: wiring.workers,
+                        n_clients: wiring.clients,
                         kv,
                         engine,
+                        hub,
+                        join_view: None,
                     };
                     (ps_rank, f(ctx))
                 })
                 .expect("spawn worker"));
+        }
+    }
+
+    // 3b. Pre-spawn planned joiners: each parks on the hub until its
+    // admission epoch, then enters `worker_fn` with a wired kvstore on the
+    // world it joined.
+    if let Some(hub) = &hub {
+        for (ps_rank, client_id, _epoch) in hub.joiner_seeds() {
+            let hub = hub.clone();
+            let ps_client: Option<PsClient> = servers.as_ref().map(|g| g.client());
+            let f = worker_fn.clone();
+            let wiring = Wiring::from_spec(spec);
+            handles.push(std::thread::Builder::new()
+                .name(format!("worker-{ps_rank}-joiner"))
+                .spawn(move || {
+                    let handout = hub.await_join(ps_rank);
+                    let (engine, kv) = wiring.make_kv(handout.comm, ps_client);
+                    let view = handout.view;
+                    let ctx = WorkerCtx {
+                        ps_rank,
+                        client_id,
+                        mpi_rank: view.mpi_rank,
+                        workers_per_client: view.workers_per_client,
+                        n_workers: wiring.workers,
+                        n_clients: wiring.clients,
+                        kv,
+                        engine,
+                        hub: Some(hub),
+                        join_view: Some(view),
+                    };
+                    (ps_rank, f(ctx))
+                })
+                .expect("spawn joiner"));
         }
     }
 
@@ -190,12 +700,12 @@ where
 mod tests {
     use super::*;
 
-    #[test]
-    fn launch_pure_mpi_job_allreduces() {
-        let spec = JobSpec {
-            workers: 4,
+    /// Pure-MPI sync spec used across these tests.
+    fn mpi_spec(workers: usize, clients: usize) -> JobSpec {
+        JobSpec {
+            workers,
             servers: 0,
-            clients: 1,
+            clients,
             ktype: KvType::SyncMpi,
             server_mode: SyncMode::Sync,
             engine_threads: 1,
@@ -204,7 +714,14 @@ mod tests {
             rings: 2,
             group: 2,
             cost: CostParams::testbed1(),
-        };
+            fault: FaultPlan::none(),
+            reconfig_every: 1,
+        }
+    }
+
+    #[test]
+    fn launch_pure_mpi_job_allreduces() {
+        let spec = mpi_spec(4, 1);
         let out = launch(&spec, |ctx| {
             let v = ctx.kv.pushpull(0, vec![1.0, (ctx.ps_rank + 1) as f32]).wait();
             v
@@ -217,19 +734,7 @@ mod tests {
 
     #[test]
     fn launch_two_clients_have_separate_worlds() {
-        let spec = JobSpec {
-            workers: 4,
-            servers: 0,
-            clients: 2,
-            ktype: KvType::SyncMpi,
-            server_mode: SyncMode::Sync,
-            engine_threads: 1,
-            collective: AlgoKind::Ring,
-            fusion_bytes: 0,
-            rings: 2,
-            group: 2,
-            cost: CostParams::testbed1(),
-        };
+        let spec = mpi_spec(4, 2);
         let out = launch(&spec, |ctx| {
             let v = ctx.kv.pushpull(0, vec![1.0]).wait();
             (ctx.client_id, ctx.mpi_rank, v[0])
@@ -287,19 +792,171 @@ mod tests {
     #[test]
     #[should_panic(expected = "divide evenly")]
     fn uneven_clients_rejected() {
-        let spec = JobSpec {
-            workers: 5,
-            servers: 0,
-            clients: 2,
-            ktype: KvType::SyncMpi,
-            server_mode: SyncMode::Sync,
-            engine_threads: 1,
-            collective: AlgoKind::Ring,
-            fusion_bytes: 0,
-            rings: 2,
-            group: 2,
-            cost: CostParams::testbed1(),
-        };
+        let spec = mpi_spec(5, 2);
         launch(&spec, |_| ());
+    }
+
+    // -- elasticity ---------------------------------------------------------
+
+    /// Drive a worker through the elastic boundary protocol: allreduce
+    /// once per iteration, reconfigure at planned boundaries, die when the
+    /// plan says so. Returns (iterations run, final allreduce sum).
+    fn elastic_worker(ctx: WorkerCtx, total_iters: u64) -> (u64, f32) {
+        let hub = ctx.hub.as_ref().expect("elastic job");
+        let mut epochs_done = ctx.join_view.as_ref().map_or(0, |v| v.epoch);
+        let mut iter = ctx.join_view.as_ref().map_or(0, |v| v.boundary_iter + 1);
+        let mut ran = 0;
+        let mut last = 0.0;
+        while iter < total_iters {
+            last = ctx.kv.pushpull(0, vec![1.0]).wait()[0];
+            ran += 1;
+            if hub.boundary_iter(epochs_done) == Some(iter) {
+                ctx.kv.wait_all();
+                if hub.dying_at(epochs_done).contains(&ctx.ps_rank) {
+                    return (ran, last);
+                }
+                let handout = hub.reconfigure(ctx.ps_rank);
+                epochs_done = handout.view.epoch;
+                if let Some(comm) = handout.comm {
+                    drop(ctx.kv.replace_comm(comm));
+                }
+            }
+            iter += 1;
+        }
+        (ran, last)
+    }
+
+    #[test]
+    fn elastic_kill_reconfigures_without_deadlock() {
+        // 4 ranks, rank 3 dies at iter 1: survivors' allreduce world
+        // shrinks from 4 to 3 and keeps completing (the static launcher
+        // would deadlock waiting on the dead rank forever).
+        let mut spec = mpi_spec(4, 1);
+        spec.fault = FaultPlan::parse("kill:3@1").unwrap();
+        let out = launch(&spec, |ctx| elastic_worker(ctx, 4));
+        assert_eq!(out.len(), 4);
+        for (rank, (ran, last)) in out.iter().enumerate() {
+            if rank == 3 {
+                assert_eq!(*ran, 2); // died at the iter-1 boundary
+                assert_eq!(*last, 4.0);
+            } else {
+                assert_eq!(*ran, 4);
+                assert_eq!(*last, 3.0, "post-shrink world sums 3 ranks");
+            }
+        }
+    }
+
+    #[test]
+    fn elastic_join_grows_the_world() {
+        // 2 ranks + a joiner at iter 1: iterations 2..4 sum over 3 ranks.
+        let mut spec = mpi_spec(2, 1);
+        spec.fault = FaultPlan::parse("join@1").unwrap();
+        let out = launch(&spec, |ctx| elastic_worker(ctx, 4));
+        assert_eq!(out.len(), 3);
+        for (rank, (ran, last)) in out.iter().enumerate() {
+            if rank == 2 {
+                assert_eq!(*ran, 2, "joiner runs iterations 2 and 3");
+            } else {
+                assert_eq!(*ran, 4);
+            }
+            assert_eq!(*last, 3.0, "rank {rank}");
+        }
+    }
+
+    #[test]
+    fn elastic_kill_and_join_across_two_clients() {
+        // 4 ranks in 2 clients; client 0 loses rank 1, the joiner lands on
+        // the now-emptiest client 0. Client worlds stay 2-rank throughout
+        // for client 1; client 0 goes 2 -> 1 -> 2.
+        let mut spec = mpi_spec(4, 2);
+        spec.fault = FaultPlan::parse("kill:1@0,join@1").unwrap();
+        let out = launch(&spec, |ctx| elastic_worker(ctx, 4));
+        assert_eq!(out.len(), 5);
+        let (ran1, _) = out[1];
+        assert_eq!(ran1, 1); // killed at the iter-0 boundary
+        let (ran4, last4) = out[4];
+        assert_eq!(ran4, 2);
+        assert_eq!(last4, 2.0, "client 0 back to 2 ranks");
+        let (ran0, last0) = out[0];
+        assert_eq!(ran0, 4);
+        assert_eq!(last0, 2.0);
+        let (ran2, last2) = out[2];
+        assert_eq!(ran2, 4);
+        assert_eq!(last2, 2.0, "client 1 untouched");
+    }
+
+    #[test]
+    fn elastic_hub_updates_scheduler_views_and_quorum() {
+        // With servers: the killed rank's missing push must not wedge the
+        // sync round after reconfiguration (quorum retargeted to the live
+        // client count = 1 client here throughout).
+        let mut spec = mpi_spec(3, 1);
+        spec.servers = 1;
+        spec.fault = FaultPlan::parse("kill:2@0").unwrap();
+        let out = launch(&spec, |ctx| {
+            let hub = ctx.hub.clone().expect("elastic");
+            if ctx.ps_rank == 0 {
+                ctx.kv.init(0, vec![0.0], true);
+                ctx.kv.set_optimizer(|| {
+                    Box::new(crate::optimizer::Sgd::new(
+                        crate::optimizer::SgdHyper::plain(1.0, 1.0),
+                    ))
+                });
+            }
+            // Iter 0: all 3 push (client aggregate 3.0), pull.
+            ctx.kv.push(0, vec![1.0]);
+            let v0 = ctx.kv.pull(0).wait()[0];
+            ctx.kv.wait_all();
+            if hub.dying_at(0).contains(&ctx.ps_rank) {
+                return (v0, f32::NAN);
+            }
+            let handout = hub.reconfigure(ctx.ps_rank);
+            if let Some(comm) = handout.comm {
+                drop(ctx.kv.replace_comm(comm));
+            }
+            // Iter 1: the 2 survivors push (aggregate 2.0), pull.
+            ctx.kv.push(0, vec![1.0]);
+            (v0, ctx.kv.pull(0).wait()[0])
+        });
+        assert_eq!(out[0].0, -3.0);
+        assert_eq!(out[1].0, -3.0);
+        assert!(out[2].1.is_nan());
+        assert_eq!(out[0].1, -5.0, "post-shrink round applies 2 pushes");
+        assert_eq!(out[1].1, -5.0);
+    }
+
+    #[test]
+    fn fault_plan_on_dist_mode_rejected() {
+        let mut spec = JobSpec::from_algo(Algo::DistSgd, 2, 1, 2);
+        spec.fault = FaultPlan::parse("kill:1@0").unwrap();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            launch(&spec, |_| ());
+        }));
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn hub_plan_precomputation_is_consistent() {
+        let mut spec = mpi_spec(4, 2);
+        spec.reconfig_every = 8;
+        spec.fault = FaultPlan::parse("kill:1@3,straggle:0@3x2,join@9").unwrap();
+        let sched = Scheduler::new(0, 0);
+        let hub = ElasticHub::new(&spec, sched, None).unwrap();
+        // Events at iters 3 (boundary 7) and 9 (boundary 15): two epochs.
+        assert_eq!(hub.n_epochs(), 2);
+        assert_eq!(hub.boundary_iter(0), Some(7));
+        assert_eq!(hub.boundary_iter(1), Some(15));
+        assert_eq!(hub.boundary_iter(2), None);
+        assert_eq!(hub.dying_at(0), [1usize].as_slice());
+        assert!(hub.dying_at(1).is_empty());
+        // Client 0's checkpoint master at epoch 0 is rank 0 (1 dies).
+        assert_eq!(hub.ckpt_master(0, 0), Some(0));
+        assert_eq!(hub.ckpt_master(0, 1), Some(2));
+        // The joiner (rank 4) lands on client 0 (1 member vs 2) at epoch 1.
+        assert_eq!(hub.joiner_seeds(), vec![(4, 0, 1)]);
+        // Kill at a boundary with no live target fails fast.
+        spec.fault = FaultPlan::parse("kill:9@0").unwrap();
+        let sched = Scheduler::new(0, 0);
+        assert!(ElasticHub::new(&spec, sched, None).is_err());
     }
 }

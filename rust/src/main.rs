@@ -30,6 +30,8 @@ fn usage() -> ! {
            --fusion-bytes N       gradient-fusion bucket cap (0 = off)\n\
            --overlap on|off       compute/communication overlap (sim plane)\n\
            --pipeline-chunks N    sub-chunks per pipelined collective step\n\
+           --fault PLAN           scripted churn, e.g. kill:3@200,join@300\n\
+                                  (kill:R@N | straggle:R@NxF | join[:C]@N)\n\
            --config FILE.json     load an ExperimentConfig (flags override)\n\
            --artifacts DIR        (default ./artifacts)\n\
            --out DIR              results dir (default ./results)",
@@ -117,6 +119,11 @@ fn build_config(args: &Args) -> Result<ExperimentConfig> {
     if let Some(v) = args.get("overlap") {
         cfg.overlap = v != "off" && v != "false" && v != "0";
     }
+    if let Some(v) = args.get("fault") {
+        cfg.fault = v.to_string();
+        cfg.fault_plan()
+            .with_context(|| format!("bad --fault {v:?}"))?;
+    }
     Ok(cfg)
 }
 
@@ -188,6 +195,8 @@ fn main() -> Result<()> {
             mxnet_mpi::figures::print_acc_vs_time("Fig 14", &runs);
             let runs = mxnet_mpi::figures::fig16(&artifacts, &out, epochs * 2)?;
             mxnet_mpi::figures::print_acc_vs_time("Fig 16", &runs);
+            let runs = mxnet_mpi::figures::fig_churn(&artifacts, &out, epochs)?;
+            mxnet_mpi::figures::print_acc_vs_time("Churn (kill+straggle)", &runs);
         }
         "collectives" => {
             for mb in [4usize, 16, 64] {

@@ -18,6 +18,7 @@
 //! layer).
 
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// A tagged message. `data` is the payload; collectives reserve the high
 /// tag bit and a per-collective sequence number so user traffic can never
@@ -47,13 +48,45 @@ struct Posted {
 ///
 /// Send requests complete immediately (buffered eager sends, like
 /// `MPI_Send` under the eager threshold); receive requests complete when a
-/// matching message arrives. Consume with [`Comm::wait`] (or drop — an
-/// unwaited *send* request costs nothing; an unwaited receive request
-/// leaks its slot for the communicator's lifetime, as in MPI).
+/// matching message arrives. Consume with [`Comm::wait`], or just drop it:
+/// dropping an unconsumed *receive* request takes the `MPI_Cancel` path —
+/// the slot is pushed onto the communicator's cancel list and reclaimed at
+/// the next progress call (an already-matched payload is discarded with
+/// the request, exactly like cancelling a matched receive). Dropped send
+/// requests cost nothing.
 #[derive(Debug)]
-pub struct Request(ReqKind);
+pub struct Request {
+    kind: ReqKind,
+    /// Cancel list shared with the owning communicator; `Some` only while
+    /// an unconsumed receive is outstanding (the drop path pushes the slot
+    /// there; consuming the request disarms it).
+    cancel: Option<Arc<Mutex<Vec<usize>>>>,
+}
 
-#[derive(Debug)]
+impl Request {
+    fn send() -> Self {
+        Request { kind: ReqKind::Send, cancel: None }
+    }
+
+    fn recv(slot: usize, cancel: Arc<Mutex<Vec<usize>>>) -> Self {
+        Request { kind: ReqKind::Recv(slot), cancel: Some(cancel) }
+    }
+
+    /// Mark the request consumed so its drop no longer cancels the slot.
+    fn disarm(&mut self) {
+        self.cancel = None;
+    }
+}
+
+impl Drop for Request {
+    fn drop(&mut self) {
+        if let (ReqKind::Recv(slot), Some(cancel)) = (self.kind, &self.cancel) {
+            cancel.lock().unwrap().push(slot);
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
 enum ReqKind {
     /// Buffered send: already complete.
     Send,
@@ -75,6 +108,99 @@ pub struct Comm {
     post_seq: u64,
     /// Collective sequence number, advanced identically on all ranks.
     coll_seq: u64,
+    /// Slots of dropped-without-wait receive requests (the `MPI_Cancel`
+    /// path): reclaimed on the next progress/post call.
+    cancelled: Arc<Mutex<Vec<usize>>>,
+    /// Rendezvous shared by all ranks of this communicator, used by
+    /// [`Comm::split`] to build sub-communicators collectively.
+    split_hub: Arc<SplitHub>,
+}
+
+/// An ordered set of world ranks (MPI_Group): the rank-translation half of
+/// communicator construction. Position in the list *is* the group rank, so
+/// `Group::new(vec![4, 0, 9])` maps group rank 1 to world rank 0.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Group {
+    ranks: Vec<usize>,
+}
+
+impl Group {
+    /// Build from an ordered rank list (must be duplicate-free).
+    pub fn new(ranks: Vec<usize>) -> Self {
+        let mut seen = ranks.clone();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), ranks.len(), "group ranks must be unique");
+        Self { ranks }
+    }
+
+    pub fn size(&self) -> usize {
+        self.ranks.len()
+    }
+
+    /// World rank of group member `group_rank`.
+    pub fn world_rank(&self, group_rank: usize) -> usize {
+        self.ranks[group_rank]
+    }
+
+    /// Group rank of `world_rank` (None if not a member) — the
+    /// MPI_Group_rank translation survivors use after a world rebuild.
+    pub fn rank_of(&self, world_rank: usize) -> Option<usize> {
+        self.ranks.iter().position(|&r| r == world_rank)
+    }
+
+    /// The group minus `dead`, original order preserved — the survivor
+    /// group of a membership epoch.
+    pub fn exclude(&self, dead: &[usize]) -> Group {
+        Group {
+            ranks: self
+                .ranks
+                .iter()
+                .copied()
+                .filter(|r| !dead.contains(r))
+                .collect(),
+        }
+    }
+
+    /// Translate `rank_in_self` to the corresponding rank in `other`
+    /// (MPI_Group_translate_ranks): members are identified by world rank.
+    pub fn translate(&self, other: &Group, rank_in_self: usize) -> Option<usize> {
+        other.rank_of(self.world_rank(rank_in_self))
+    }
+}
+
+/// Collective-split rendezvous: every rank of a world deposits its
+/// (color, key), the last arrival builds one fresh sub-world per color and
+/// distributes the endpoints. Two-phase (collect -> distribute) so the hub
+/// can be reused for repeated splits on the same communicator.
+struct SplitHub {
+    m: Mutex<SplitState>,
+    cv: Condvar,
+}
+
+struct SplitState {
+    /// Per-rank (color, key) entries for the in-flight split round.
+    entries: Vec<Option<(i64, usize)>>,
+    /// Built sub-communicators awaiting pickup (None for negative colors).
+    outbox: Vec<Option<Comm>>,
+    arrived: usize,
+    collected: usize,
+    distributing: bool,
+}
+
+impl SplitHub {
+    fn new(size: usize) -> Self {
+        Self {
+            m: Mutex::new(SplitState {
+                entries: (0..size).map(|_| None).collect(),
+                outbox: (0..size).map(|_| None).collect(),
+                arrived: 0,
+                collected: 0,
+                distributing: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
 }
 
 /// Factory for a fully-connected group of `Comm`s (one MPI_COMM_WORLD).
@@ -86,6 +212,7 @@ impl World {
     pub fn create(size: usize) -> Vec<Comm> {
         assert!(size > 0);
         let (txs, rxs): (Vec<_>, Vec<_>) = (0..size).map(|_| channel()).unzip();
+        let split_hub = Arc::new(SplitHub::new(size));
         rxs.into_iter()
             .enumerate()
             .map(|(rank, rx)| Comm {
@@ -98,6 +225,8 @@ impl World {
                 free_slots: Vec::new(),
                 post_seq: 0,
                 coll_seq: 0,
+                cancelled: Arc::new(Mutex::new(Vec::new())),
+                split_hub: split_hub.clone(),
             })
             .collect()
     }
@@ -112,6 +241,87 @@ impl Comm {
         self.size
     }
 
+    /// The group underlying this communicator (ranks 0..size in order).
+    pub fn group(&self) -> Group {
+        Group::new((0..self.size).collect())
+    }
+
+    // -- communicator construction ------------------------------------------
+
+    /// Collective split (MPI_Comm_split): every rank of this communicator
+    /// must call it. Ranks passing the same non-negative `color` form a
+    /// fresh sub-communicator, ordered by `(key, old rank)`; a negative
+    /// color (MPI_UNDEFINED) yields `None`. The parent communicator stays
+    /// fully usable, and sub-communicators can be split again.
+    ///
+    /// This is the epoch-scoped world-rebuild primitive: survivors of a
+    /// membership epoch split with color 0 (the dying rank passes a
+    /// negative color) and get a compacted world whose rank translation is
+    /// `old_group.translate(new_group, old_rank)`.
+    pub fn split(&mut self, color: i64, key: usize) -> Option<Comm> {
+        if self.size == 1 {
+            // Single-rank world: no rendezvous needed.
+            return if color >= 0 {
+                Some(World::create(1).pop().unwrap())
+            } else {
+                None
+            };
+        }
+        let hub = self.split_hub.clone();
+        let mut st = hub.m.lock().unwrap();
+        // A previous split round may still be distributing: wait it out.
+        while st.distributing {
+            st = hub.cv.wait(st).unwrap();
+        }
+        st.entries[self.rank] = Some((color, key));
+        st.arrived += 1;
+        if st.arrived == self.size {
+            // Last arrival builds every color's sub-world.
+            let entries: Vec<(usize, i64, usize)> = st
+                .entries
+                .iter()
+                .enumerate()
+                .map(|(r, e)| {
+                    let (c, k) = (*e).expect("split entry missing");
+                    (r, c, k)
+                })
+                .collect();
+            let mut colors: Vec<i64> =
+                entries.iter().map(|&(_, c, _)| c).filter(|&c| c >= 0).collect();
+            colors.sort_unstable();
+            colors.dedup();
+            for c in colors {
+                let mut members: Vec<(usize, usize)> = entries
+                    .iter()
+                    .filter(|&&(_, ec, _)| ec == c)
+                    .map(|&(r, _, k)| (k, r))
+                    .collect();
+                members.sort_unstable();
+                let comms = World::create(members.len());
+                for ((_, rank), comm) in members.into_iter().zip(comms) {
+                    st.outbox[rank] = Some(comm);
+                }
+            }
+            st.distributing = true;
+            st.collected = 0;
+            hub.cv.notify_all();
+        } else {
+            while !st.distributing {
+                st = hub.cv.wait(st).unwrap();
+            }
+        }
+        let out = st.outbox[self.rank].take();
+        st.entries[self.rank] = None;
+        st.collected += 1;
+        if st.collected == self.size {
+            // Round complete: reopen the hub for the next split.
+            st.arrived = 0;
+            st.distributing = false;
+        }
+        hub.cv.notify_all();
+        out
+    }
+
     // -- nonblocking core ---------------------------------------------------
 
     /// Nonblocking send. Completes immediately (buffered, like MPI_Send on
@@ -120,7 +330,7 @@ impl Comm {
     pub fn isend(&mut self, to: usize, tag: u64, data: Vec<f32>) -> Request {
         assert!(tag & COLL_BIT == 0, "user tags must not set the collective bit");
         self.send_raw(to, tag, data);
-        Request(ReqKind::Send)
+        Request::send()
     }
 
     /// Nonblocking receive with (source, tag) matching: posts the receive
@@ -132,6 +342,7 @@ impl Comm {
     }
 
     fn irecv_raw(&mut self, from: usize, tag: u64) -> Request {
+        self.reclaim_cancelled();
         // Unexpected queue first, in arrival order (per-sender FIFO).
         let data = self
             .unexpected
@@ -151,7 +362,20 @@ impl Comm {
                 self.posted.len() - 1
             }
         };
-        Request(ReqKind::Recv(slot))
+        Request::recv(slot, self.cancelled.clone())
+    }
+
+    /// Free the slots of receive requests that were dropped unconsumed
+    /// (the `MPI_Cancel` drop path): an unmatched receive is withdrawn
+    /// from the posted queue; a matched-but-unwaited payload is discarded
+    /// with the request.
+    fn reclaim_cancelled(&mut self) {
+        let slots: Vec<usize> = std::mem::take(&mut *self.cancelled.lock().unwrap());
+        for s in slots {
+            if self.posted[s].take().is_some() {
+                self.free_slots.push(s);
+            }
+        }
     }
 
     /// Match an arriving message against the earliest-posted pending
@@ -174,6 +398,7 @@ impl Comm {
     /// Drain every message already sitting in the channel (nonblocking
     /// progress, like MPI's internal progress engine).
     fn progress(&mut self) {
+        self.reclaim_cancelled();
         loop {
             match self.rx.try_recv() {
                 Ok(msg) => self.deliver(msg),
@@ -204,15 +429,16 @@ impl Comm {
     /// success: the request stays valid until waited).
     pub fn test(&mut self, req: &Request) -> bool {
         self.progress();
-        match req.0 {
+        match req.kind {
             ReqKind::Send => true,
             ReqKind::Recv(slot) => self.slot_complete(slot),
         }
     }
 
     /// Block until `req` completes; returns its payload (empty for sends).
-    pub fn wait(&mut self, req: Request) -> Vec<f32> {
-        match req.0 {
+    pub fn wait(&mut self, mut req: Request) -> Vec<f32> {
+        req.disarm(); // consumed here, not by the cancel-on-drop path
+        match req.kind {
             ReqKind::Send => Vec::new(),
             ReqKind::Recv(slot) => {
                 self.progress();
@@ -232,13 +458,14 @@ impl Comm {
         assert!(!reqs.is_empty(), "wait_any on no requests");
         self.progress();
         loop {
-            let ready = reqs.iter().position(|r| match r.0 {
+            let ready = reqs.iter().position(|r| match r.kind {
                 ReqKind::Send => true,
                 ReqKind::Recv(slot) => self.slot_complete(slot),
             });
             if let Some(i) = ready {
-                let req = reqs.remove(i);
-                let data = match req.0 {
+                let mut req = reqs.remove(i);
+                req.disarm();
+                let data = match req.kind {
                     ReqKind::Send => Vec::new(),
                     ReqKind::Recv(slot) => self.take_slot(slot),
                 };
@@ -576,6 +803,151 @@ mod tests {
         for (r, d) in out.iter().enumerate() {
             assert_eq!(d[0], ((r + p - 1) % p) as f32);
         }
+    }
+
+    #[test]
+    fn dropped_recv_requests_reclaim_slots() {
+        // Regression: dropping an unconsumed Request used to leak its
+        // receive-slab slot for the communicator's lifetime. The drop path
+        // now cancels the slot and progress reclaims it.
+        let out = run_world(2, |mut c| {
+            if c.rank() == 0 {
+                // Nothing sent on tag 1: the receives below never match.
+                c.send(1, 0, vec![1.0]);
+                0
+            } else {
+                for _ in 0..100 {
+                    let req = c.irecv(0, 1);
+                    drop(req); // cancelled, never waited
+                }
+                // The matched path still works after mass cancellation...
+                let r = c.irecv(0, 0);
+                assert_eq!(c.wait(r), vec![1.0]);
+                // ...and the slab stayed bounded (reclaim runs on post).
+                c.posted.len()
+            }
+        });
+        assert!(out[1] <= 2, "slab grew to {}", out[1]);
+    }
+
+    #[test]
+    fn dropped_matched_request_discards_payload() {
+        // Cancelling a receive that already matched discards the payload
+        // with the request (MPI_Cancel on a matched recv); the slot is
+        // still reclaimed and later receives are unaffected.
+        let out = run_world(2, |mut c| {
+            if c.rank() == 0 {
+                c.send(1, 7, vec![1.0]);
+                c.send(1, 8, vec![2.0]);
+                Vec::new()
+            } else {
+                let doomed = c.irecv(0, 7);
+                // Force the match before dropping.
+                while !c.test(&doomed) {
+                    std::thread::yield_now();
+                }
+                drop(doomed);
+                let r = c.irecv(0, 8);
+                c.wait(r)
+            }
+        });
+        assert_eq!(out[1], vec![2.0]);
+    }
+
+    #[test]
+    fn group_translates_ranks_across_rebuilds() {
+        let old = Group::new((0..5).collect());
+        let survivors = old.exclude(&[1, 3]);
+        assert_eq!(survivors.size(), 3);
+        // World ranks 0, 2, 4 become new ranks 0, 1, 2.
+        assert_eq!(survivors.rank_of(2), Some(1));
+        assert_eq!(survivors.rank_of(3), None);
+        assert_eq!(survivors.world_rank(2), 4);
+        assert_eq!(old.translate(&survivors, 4), Some(2));
+        assert_eq!(old.translate(&survivors, 1), None);
+    }
+
+    #[test]
+    fn split_by_color_forms_independent_subworlds() {
+        // 6 ranks, color = rank % 2: two 3-rank sub-worlds whose
+        // allreduces never cross-talk, while the parent stays usable.
+        let out = run_world(6, |mut c| {
+            let color = (c.rank() % 2) as i64;
+            let mut sub = c.split(color, c.rank()).expect("non-negative color");
+            let mut d = vec![c.rank() as f32];
+            sub.allreduce_naive(&mut d);
+            let mut parent = vec![1.0f32];
+            c.allreduce_naive(&mut parent);
+            (c.rank(), sub.rank(), sub.size(), d[0], parent[0])
+        });
+        for (rank, sub_rank, sub_size, sum, psum) in out {
+            assert_eq!(sub_size, 3);
+            assert_eq!(sub_rank, rank / 2); // members ordered by old rank
+            let expect = if rank % 2 == 0 { 0.0 + 2.0 + 4.0 } else { 1.0 + 3.0 + 5.0 };
+            assert_eq!(sum, expect, "rank {rank}");
+            assert_eq!(psum, 6.0);
+        }
+    }
+
+    #[test]
+    fn split_orders_by_key_then_negative_color_opts_out() {
+        let out = run_world(4, |mut c| {
+            if c.rank() == 3 {
+                // MPI_UNDEFINED: not a member of any sub-world.
+                assert!(c.split(-1, 0).is_none());
+                usize::MAX
+            } else {
+                // Reverse the order via the key: old rank 2 -> new rank 0.
+                let sub = c.split(0, 10 - c.rank()).unwrap();
+                assert_eq!(sub.size(), 3);
+                sub.rank()
+            }
+        });
+        assert_eq!(out[..3], [2, 1, 0]);
+    }
+
+    #[test]
+    fn split_epoch_scoped_shrink_with_rank_translation() {
+        // The membership-epoch pattern: rank 1 "dies" (negative color);
+        // survivors rebuild a compacted world and translate ranks via the
+        // Group, then allreduce over the new world only.
+        let out = run_world(4, |mut c| {
+            let old_group = c.group();
+            let dead = [1usize];
+            let dying = dead.contains(&c.rank());
+            let sub = c.split(if dying { -1 } else { 0 }, c.rank());
+            match sub {
+                None => {
+                    assert!(dying);
+                    -1.0
+                }
+                Some(mut sub) => {
+                    let survivors = old_group.exclude(&dead);
+                    assert_eq!(
+                        survivors.rank_of(c.rank()),
+                        Some(sub.rank()),
+                        "split rank must equal group translation"
+                    );
+                    let mut d = vec![1.0f32];
+                    sub.allreduce_naive(&mut d);
+                    d[0]
+                }
+            }
+        });
+        assert_eq!(out, vec![3.0, -1.0, 3.0, 3.0]);
+    }
+
+    #[test]
+    fn split_supports_repeated_rounds() {
+        // Two consecutive splits on the same parent reuse the hub.
+        run_world(3, |mut c| {
+            for round in 0..3i64 {
+                let mut sub = c.split(round % 2, c.rank()).unwrap();
+                let mut d = vec![1.0f32];
+                sub.allreduce_naive(&mut d);
+                assert_eq!(d[0], 3.0, "round {round}");
+            }
+        });
     }
 
     #[test]

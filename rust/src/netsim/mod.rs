@@ -71,6 +71,11 @@ pub struct CostParams {
     /// `select_best` autotuner read this, so modeled and real schedules
     /// agree.
     pub pipeline_chunks: usize,
+    /// Fixed cost of a membership epoch: scheduler re-registration round
+    /// trip plus tearing down and rebuilding the per-client MPI worlds
+    /// (`mpirun` respawn scale, not kernel-launch scale — elasticity is a
+    /// cloud-control-plane operation).
+    pub reconfig_alpha: f64,
 }
 
 impl CostParams {
@@ -92,6 +97,7 @@ impl CostParams {
             gpus_per_worker: 2,
             hd_contention: 0.3,
             pipeline_chunks: 4,
+            reconfig_alpha: 0.25,
         }
     }
 
@@ -114,7 +120,28 @@ impl CostParams {
             gpus_per_worker: 2,
             hd_contention: 0.35,
             pipeline_chunks: 4,
+            reconfig_alpha: 0.25,
         }
+    }
+
+    /// Virtual seconds a membership epoch stalls the ranks it touches:
+    /// the fixed rebuild cost, a dissemination barrier over the `p` live
+    /// ranks, and — when a joiner must bootstrap — moving
+    /// `bootstrap_bytes` of checkpoint either from the PS (one pull over
+    /// the TCP-class transport) or, serverless, by peer broadcast over
+    /// the MPI fabric.
+    pub fn reconfig_seconds(&self, p: usize, bootstrap_bytes: usize, servers: usize) -> f64 {
+        let p = p.max(2) as f64;
+        let rounds = p.log2().ceil();
+        let barrier = 2.0 * rounds * self.alpha_net;
+        let bootstrap = if bootstrap_bytes == 0 {
+            0.0
+        } else if servers > 0 {
+            self.alpha_net + bootstrap_bytes as f64 * self.beta_ps
+        } else {
+            rounds * self.alpha_net + bootstrap_bytes as f64 * self.beta_net
+        };
+        self.reconfig_alpha + barrier + bootstrap
     }
 }
 
@@ -429,6 +456,21 @@ mod tests {
         assert_eq!(q.pop().unwrap().1, "c");
         assert!(q.pop().is_none());
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn reconfig_cost_scales_with_bootstrap_and_degrades_gracefully() {
+        let p = CostParams::testbed1();
+        let plain = p.reconfig_seconds(12, 0, 2);
+        // Dominated by the fixed control-plane cost, sub-second scale.
+        assert!(plain >= p.reconfig_alpha && plain < p.reconfig_alpha + 0.01);
+        // A joiner's checkpoint pull prices real bytes over the PS...
+        let with_join = p.reconfig_seconds(12, 102 << 20, 2);
+        assert!(with_join > plain + 0.05, "{with_join} vs {plain}");
+        // ...and the serverless peer bcast rides the faster MPI fabric.
+        let serverless = p.reconfig_seconds(12, 102 << 20, 0);
+        assert!(serverless < with_join);
+        assert!(serverless > plain);
     }
 
     #[test]

@@ -17,8 +17,9 @@
 //! Asynchronous mode: every push is applied immediately (the §2.3
 //! staleness regime); pulls answer with whatever is current.
 
+use anyhow::{bail, Context, Result};
 use crate::optimizer::Optimizer;
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -44,6 +45,18 @@ enum ServerMsg {
     Pull { key: Key, after_round: u64, reply: Sender<Vec<f32>> },
     /// Ship an optimizer to the server (KVStore.set_optimizer, §3.2).
     SetOptimizer(Box<dyn Optimizer>),
+    /// Retarget the sync quorum after a membership epoch (elasticity):
+    /// rounds already satisfied by the new, smaller quorum complete
+    /// immediately, so a shrunken job can never wedge on a dead worker's
+    /// missing push.
+    SetExpectedPushes(usize),
+    /// Persist a checkpoint blob (elastic restore path). Blobs live in a
+    /// namespace separate from the optimizer-managed store: no rounds, no
+    /// aggregation — last write wins, like the master replica files the
+    /// paper's PS keeps for restarted tasks.
+    SaveBlob { key: Key, value: Vec<f32> },
+    /// Fetch a checkpoint blob (None if never saved).
+    LoadBlob { key: Key, reply: Sender<Option<Vec<f32>>> },
     Shutdown,
 }
 
@@ -62,6 +75,8 @@ struct ServerState {
     /// Messages that raced ahead of their key's Init (workers may push as
     /// soon as the scheduler releases the job, §4.1.2); replayed on Init.
     pre_init: HashMap<Key, Vec<ServerMsg>>,
+    /// Checkpoint blobs (elastic restore): outside the optimizer store.
+    blobs: HashMap<Key, Vec<f32>>,
 }
 
 impl ServerState {
@@ -81,14 +96,25 @@ impl ServerState {
                     crate::tensor::add_assign(buf, &data);
                 }
                 *count += 1;
-                if *count >= self.expected_pushes {
-                    let (buf, _) = self.agg.remove(&key).unwrap();
-                    let w = self.store.get_mut(&key).expect("push before init");
-                    self.optimizer.update(key, w, &buf);
-                    *self.rounds.entry(key).or_insert(0) += 1;
-                    self.release(key);
-                }
+                self.maybe_complete_round(key);
             }
+        }
+    }
+
+    /// Complete `key`'s sync round if its aggregation quorum is met —
+    /// either a push arrived (the normal path) or the quorum shrank under
+    /// it (SetExpectedPushes after a membership epoch).
+    fn maybe_complete_round(&mut self, key: Key) {
+        let full = self
+            .agg
+            .get(&key)
+            .is_some_and(|(_, count)| *count >= self.expected_pushes);
+        if full {
+            let (buf, _) = self.agg.remove(&key).unwrap();
+            let w = self.store.get_mut(&key).expect("push before init");
+            self.optimizer.update(key, w, &buf);
+            *self.rounds.entry(key).or_insert(0) += 1;
+            self.release(key);
         }
     }
 
@@ -152,6 +178,21 @@ impl ServerState {
                 }
             }
             ServerMsg::SetOptimizer(opt) => self.optimizer = opt,
+            ServerMsg::SetExpectedPushes(n) => {
+                self.expected_pushes = n.max(1);
+                // A shrink can complete rounds that were waiting on a
+                // departed worker's push: re-check every open aggregation.
+                let open: Vec<Key> = self.agg.keys().copied().collect();
+                for key in open {
+                    self.maybe_complete_round(key);
+                }
+            }
+            ServerMsg::SaveBlob { key, value } => {
+                self.blobs.insert(key, value);
+            }
+            ServerMsg::LoadBlob { key, reply } => {
+                let _ = reply.send(self.blobs.get(&key).cloned());
+            }
             ServerMsg::Shutdown => return false,
         }
         true
@@ -192,6 +233,7 @@ impl ServerGroup {
                 rounds: HashMap::new(),
                 parked: HashMap::new(),
                 pre_init: HashMap::new(),
+                blobs: HashMap::new(),
             };
             threads.push(
                 std::thread::Builder::new()
@@ -214,13 +256,26 @@ impl ServerGroup {
     }
 
     /// Stop all server threads (remaining messages are processed first).
+    /// Idempotent; also runs from `Drop`, so a panicking worker thread
+    /// that unwinds past its `ServerGroup` cannot leave server threads
+    /// parked forever and wedge the test harness.
     pub fn shutdown(mut self) {
-        for tx in &self.txs {
+        self.shutdown_impl();
+    }
+
+    fn shutdown_impl(&mut self) {
+        for tx in self.txs.drain(..) {
             let _ = tx.send(ServerMsg::Shutdown);
         }
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
+    }
+}
+
+impl Drop for ServerGroup {
+    fn drop(&mut self) {
+        self.shutdown_impl();
     }
 }
 
@@ -275,6 +330,32 @@ impl PsClient {
             tx.send(ServerMsg::SetOptimizer(factory())).expect("server gone");
         }
     }
+
+    /// Retarget every server's sync quorum after a membership epoch.
+    /// Rounds already satisfied by the new quorum complete immediately.
+    pub fn set_expected_pushes(&self, n: usize) {
+        for tx in &self.servers {
+            tx.send(ServerMsg::SetExpectedPushes(n)).expect("server gone");
+        }
+    }
+
+    /// Persist a checkpoint blob under `key` (sharded like every key).
+    /// Blobs are a namespace apart from the optimizer store: no rounds, no
+    /// aggregation, last write wins.
+    pub fn save_blob(&self, key: Key, value: Vec<f32>) {
+        self.server(key)
+            .send(ServerMsg::SaveBlob { key, value })
+            .expect("server gone");
+    }
+
+    /// Fetch a checkpoint blob; `None` if nothing was ever saved there.
+    pub fn load_blob(&self, key: Key) -> Option<Vec<f32>> {
+        let (reply, rx) = channel();
+        self.server(key)
+            .send(ServerMsg::LoadBlob { key, reply })
+            .expect("server gone");
+        rx.recv().expect("server dropped blob load")
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -286,6 +367,14 @@ impl PsClient {
 /// expected population is connected. In-process the "address broadcast" is
 /// the `Arc` itself; the protocol (register -> barrier until complete) is
 /// the paper's.
+///
+/// Beyond the launch barrier the scheduler is the job's **membership
+/// authority** (the elasticity half of the PS task model, §1–§2): workers
+/// [`deregister`](Scheduler::deregister) when they leave, late joiners are
+/// [`admit`](Scheduler::admit)ted, and each change is sealed by
+/// [`publish_view`](Scheduler::publish_view) into an epoch-numbered
+/// [`MembershipView`] that the launcher turns into rebuilt per-client
+/// worlds and a recomputed sync quorum.
 pub struct Scheduler {
     inner: Arc<(Mutex<SchedState>, std::sync::Condvar)>,
 }
@@ -296,12 +385,25 @@ struct SchedState {
     servers: usize,
     expect_workers: usize,
     expect_servers: usize,
+    /// Live worker ranks (membership epochs).
+    live: BTreeSet<usize>,
+    /// Completed membership epochs; 0 = the launch population.
+    epoch: u64,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Role {
     Worker,
     Server,
+}
+
+/// An epoch-numbered snapshot of the live worker set, published by the
+/// scheduler at each membership change.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MembershipView {
+    pub epoch: u64,
+    /// Live worker ranks, ascending.
+    pub workers: Vec<usize>,
 }
 
 impl Scheduler {
@@ -327,6 +429,7 @@ impl Scheduler {
         let rank = match role {
             Role::Worker => {
                 st.workers += 1;
+                st.live.insert(st.workers - 1);
                 st.workers - 1
             }
             Role::Server => {
@@ -341,8 +444,182 @@ impl Scheduler {
         rank
     }
 
+    /// Register a worker under a caller-assigned rank (the launcher's
+    /// ps_rank, which is stable across thread scheduling); same barrier as
+    /// [`Scheduler::register`].
+    pub fn register_as(&self, rank: usize) {
+        let (lock, cv) = &*self.inner;
+        let mut st = lock.lock().unwrap();
+        st.workers += 1;
+        st.live.insert(rank);
+        cv.notify_all();
+        while st.workers < st.expect_workers || st.servers < st.expect_servers {
+            st = cv.wait(st).unwrap();
+        }
+    }
+
+    /// Remove a worker from the live set (fail-stop departure or
+    /// cooperative preemption). Takes effect in the next published view.
+    pub fn deregister(&self, rank: usize) {
+        let (lock, _) = &*self.inner;
+        lock.lock().unwrap().live.remove(&rank);
+    }
+
+    /// Admit a late joiner into the live set (no launch barrier: the job
+    /// is already running). Takes effect in the next published view.
+    pub fn admit(&self, rank: usize) {
+        let (lock, _) = &*self.inner;
+        lock.lock().unwrap().live.insert(rank);
+    }
+
+    /// Seal the current live set into a new epoch-numbered view.
+    pub fn publish_view(&self) -> MembershipView {
+        let (lock, cv) = &*self.inner;
+        let mut st = lock.lock().unwrap();
+        st.epoch += 1;
+        cv.notify_all();
+        MembershipView { epoch: st.epoch, workers: st.live.iter().copied().collect() }
+    }
+
+    /// The most recently published view (epoch 0 = launch population).
+    pub fn view(&self) -> MembershipView {
+        let (lock, _) = &*self.inner;
+        let st = lock.lock().unwrap();
+        MembershipView { epoch: st.epoch, workers: st.live.iter().copied().collect() }
+    }
+
     pub fn handle(&self) -> Scheduler {
         Scheduler { inner: self.inner.clone() }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FaultPlan — scripted churn (config/CLI: `--fault kill:3@200,join@300`)
+// ---------------------------------------------------------------------------
+
+/// What happens to the membership at a scripted point in training.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Worker `rank` leaves the job (fail-stop at the next membership
+    /// epoch — the cloud-preemption model).
+    Kill { rank: usize },
+    /// Worker `rank` slows down by `factor` (>= 1.0) from here on.
+    Straggle { rank: usize, factor: f64 },
+    /// A new worker joins, assigned to `client` (None = the client with
+    /// the fewest live members). It bootstraps from the PS checkpoint, or
+    /// by peer broadcast when there are no servers.
+    Join { client: Option<usize> },
+}
+
+/// One scripted churn event, effective at the first membership-epoch
+/// boundary at or after `at_iter`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub at_iter: u64,
+    pub kind: FaultKind,
+}
+
+/// A scripted churn schedule. Grammar (comma-separated events):
+///
+/// ```text
+/// kill:R@N           worker rank R leaves at iteration N
+/// straggle:R@NxF     worker rank R runs F x slower from iteration N
+/// join@N             a worker joins at iteration N (auto-assigned client)
+/// join:C@N           a worker joins client C at iteration N
+/// ```
+///
+/// e.g. `kill:3@200,straggle:2@100x4,join@300`. Events are kept sorted by
+/// iteration (stable for ties).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Parse the `--fault` grammar; empty string = no churn.
+    pub fn parse(s: &str) -> Result<Self> {
+        let mut events = Vec::new();
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            events.push(Self::parse_event(part).with_context(|| {
+                format!(
+                    "bad fault event {part:?} (grammar: kill:R@N | straggle:R@NxF | join@N | join:C@N)"
+                )
+            })?);
+        }
+        events.sort_by_key(|e| e.at_iter);
+        Ok(Self { events })
+    }
+
+    fn parse_event(part: &str) -> Result<FaultEvent> {
+        let (head, at) = part
+            .split_once('@')
+            .context("missing '@iter'")?;
+        if let Some(rank) = head.strip_prefix("kill:") {
+            let rank = rank.trim().parse::<usize>().context("kill rank")?;
+            let at_iter = at.trim().parse::<u64>().context("iteration")?;
+            return Ok(FaultEvent { at_iter, kind: FaultKind::Kill { rank } });
+        }
+        if let Some(rank) = head.strip_prefix("straggle:") {
+            let rank = rank.trim().parse::<usize>().context("straggle rank")?;
+            let (iter, factor) = at
+                .split_once('x')
+                .context("straggle needs '@NxF'")?;
+            let at_iter = iter.trim().parse::<u64>().context("iteration")?;
+            let factor = factor.trim().parse::<f64>().context("straggle factor")?;
+            if !(factor >= 1.0 && factor.is_finite()) {
+                bail!("straggle factor must be >= 1.0, got {factor}");
+            }
+            return Ok(FaultEvent { at_iter, kind: FaultKind::Straggle { rank, factor } });
+        }
+        if head == "join" || head.starts_with("join:") {
+            let client = match head.strip_prefix("join:") {
+                Some(c) if !c.trim().is_empty() => {
+                    Some(c.trim().parse::<usize>().context("join client")?)
+                }
+                _ => None,
+            };
+            let at_iter = at.trim().parse::<u64>().context("iteration")?;
+            return Ok(FaultEvent { at_iter, kind: FaultKind::Join { client } });
+        }
+        bail!("unknown event kind")
+    }
+
+    /// Number of `join` events (the launcher pre-spawns one worker each).
+    pub fn n_joins(&self) -> usize {
+        self.events
+            .iter()
+            .filter(|e| matches!(e.kind, FaultKind::Join { .. }))
+            .count()
+    }
+
+    /// Largest event iteration (None when the plan is empty) — used to
+    /// validate that every event fires within a run's iteration budget.
+    pub fn last_iter(&self) -> Option<u64> {
+        self.events.iter().map(|e| e.at_iter).max()
+    }
+
+    /// Render back to the grammar (config round-trip).
+    pub fn render(&self) -> String {
+        self.events
+            .iter()
+            .map(|e| match e.kind {
+                FaultKind::Kill { rank } => format!("kill:{rank}@{}", e.at_iter),
+                FaultKind::Straggle { rank, factor } => {
+                    format!("straggle:{rank}@{}x{factor}", e.at_iter)
+                }
+                FaultKind::Join { client: Some(c) } => format!("join:{c}@{}", e.at_iter),
+                FaultKind::Join { client: None } => format!("join@{}", e.at_iter),
+            })
+            .collect::<Vec<_>>()
+            .join(",")
     }
 }
 
@@ -451,6 +728,120 @@ mod tests {
         c.init(3, vec![7.0]);
         assert_eq!(c.pull(3), vec![7.0]);
         group.shutdown();
+    }
+
+    #[test]
+    fn shrinking_quorum_completes_waiting_round() {
+        // 3 expected pushes, only 2 arrive (the third worker "died"); a
+        // parked pull would wedge forever. SetExpectedPushes(2) after the
+        // membership epoch must complete the round and release the pull.
+        let group = ServerGroup::spawn(1, SyncMode::Sync, 3);
+        let mut c = group.client();
+        c.init(0, vec![0.0]);
+        c.set_optimizer(|| Box::new(Sgd::new(SgdHyper::plain(1.0, 1.0))));
+        c.push(0, vec![1.0]);
+        let mut c2 = group.client();
+        c2.push(0, vec![1.0]);
+        // Park a pull for round 1 on a helper thread.
+        let h = thread::spawn(move || c.pull(0));
+        thread::sleep(std::time::Duration::from_millis(20));
+        c2.set_expected_pushes(2);
+        assert_eq!(h.join().unwrap(), vec![-2.0]);
+        group.shutdown();
+    }
+
+    #[test]
+    fn growing_quorum_applies_to_next_round() {
+        let group = ServerGroup::spawn(1, SyncMode::Sync, 1);
+        let mut c = group.client();
+        c.init(0, vec![0.0]);
+        c.set_optimizer(|| Box::new(Sgd::new(SgdHyper::plain(1.0, 1.0))));
+        c.push(0, vec![1.0]);
+        assert_eq!(c.pull(0), vec![-1.0]);
+        c.set_expected_pushes(2);
+        let mut c2 = group.client();
+        c.push(0, vec![1.0]);
+        c2.push(0, vec![1.0]);
+        assert_eq!(c.pull(0), vec![-3.0]);
+        group.shutdown();
+    }
+
+    #[test]
+    fn checkpoint_blobs_round_trip_and_overwrite() {
+        let group = ServerGroup::spawn(2, SyncMode::Sync, 1);
+        let c = group.client();
+        assert_eq!(c.load_blob(5), None);
+        c.save_blob(5, vec![1.0, 2.0]);
+        c.save_blob(6, vec![3.0]);
+        assert_eq!(c.load_blob(5), Some(vec![1.0, 2.0]));
+        assert_eq!(c.load_blob(6), Some(vec![3.0]));
+        c.save_blob(5, vec![9.0]); // last write wins
+        assert_eq!(c.load_blob(5), Some(vec![9.0]));
+        // Blobs are a separate namespace: key 5 of the store is untouched.
+        c.init(5, vec![0.5]);
+        let mut c2 = group.client();
+        assert_eq!(c2.pull(5), vec![0.5]);
+        assert_eq!(c2.load_blob(5), Some(vec![9.0]));
+        group.shutdown();
+    }
+
+    #[test]
+    fn server_group_shutdown_is_idempotent_and_drop_safe() {
+        // Dropping without shutdown must join the threads (no wedge)...
+        {
+            let group = ServerGroup::spawn(2, SyncMode::Async, 1);
+            let mut c = group.client();
+            c.init(0, vec![1.0]);
+            assert_eq!(c.pull(0), vec![1.0]);
+        } // ...Drop runs here.
+          // And explicit shutdown followed by Drop must not double-join.
+        let group = ServerGroup::spawn(1, SyncMode::Async, 1);
+        group.shutdown();
+    }
+
+    #[test]
+    fn scheduler_membership_views_track_churn() {
+        let sched = Scheduler::new(0, 0);
+        for r in 0..3 {
+            sched.admit(r);
+        }
+        let v0 = sched.publish_view();
+        assert_eq!(v0.workers, vec![0, 1, 2]);
+        sched.deregister(1);
+        sched.admit(7);
+        let v1 = sched.publish_view();
+        assert_eq!(v1.epoch, v0.epoch + 1);
+        assert_eq!(v1.workers, vec![0, 2, 7]);
+        assert_eq!(sched.view(), v1);
+    }
+
+    #[test]
+    fn fault_plan_parses_and_round_trips() {
+        let p = FaultPlan::parse("kill:3@200, straggle:2@100x4, join@300,join:1@50").unwrap();
+        assert_eq!(p.events.len(), 4);
+        // Sorted by iteration.
+        assert_eq!(p.events[0].kind, FaultKind::Join { client: Some(1) });
+        assert_eq!(p.events[1].kind, FaultKind::Straggle { rank: 2, factor: 4.0 });
+        assert_eq!(p.events[2].kind, FaultKind::Kill { rank: 3 });
+        assert_eq!(p.events[3].kind, FaultKind::Join { client: None });
+        assert_eq!(p.n_joins(), 2);
+        assert_eq!(p.last_iter(), Some(300));
+        let rendered = p.render();
+        assert_eq!(FaultPlan::parse(&rendered).unwrap(), p);
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn fault_plan_rejects_garbage() {
+        for bad in [
+            "kill:3",          // missing @iter
+            "kill:x@5",        // bad rank
+            "straggle:1@5",    // missing factor
+            "straggle:1@5x0.5",// factor < 1
+            "explode:1@5",     // unknown kind
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} parsed");
+        }
     }
 
     #[test]

@@ -11,11 +11,22 @@
 //! interleave on the virtual clock with per-worker compute jitter, so ASGD
 //! staleness and ESGD's lazy synchronisation emerge rather than being
 //! scripted.
+//!
+//! **Churn** rides the same schedule as the threaded plane (the
+//! [`ElasticHub`]'s precomputed membership epochs): kills shrink a
+//! client's member set at the next boundary, joins grow it (pricing the
+//! checkpoint bootstrap), straggles slow a member. Synchronous modes stall
+//! *every* client at a membership epoch (the world rebuild is global —
+//! pure MPI's weakness); ESGD stalls only the touched client while the
+//! rest keep training against the PS — the paper's §2 graceful-degradation
+//! argument, now measurable.
 
 use crate::config::{Algo, ExperimentConfig};
+use crate::launcher::{ElasticHub, JobSpec};
 use crate::metrics::{EpochRecord, RunResult};
-use crate::netsim::{EventQueue, PsFabric, VTime};
+use crate::netsim::{CostParams, EventQueue, PsFabric, VTime};
 use crate::optimizer::SgdHyper;
+use crate::ps::Scheduler;
 use crate::runtime::{Model, ModelMeta, Runtime};
 use crate::trainer::TrainData;
 use crate::util::Rng;
@@ -31,7 +42,7 @@ struct Client {
     /// Iterations completed (drives epoch boundaries + ESGD INTERVAL).
     iter: u64,
     /// Static duration of one lockstep batch round (max over the client's
-    /// member workers, each with seeded speed jitter).
+    /// live member workers, each with seeded speed jitter x straggle).
     compute_s: f64,
     /// *Exposed* intra-client allreduce seconds per iteration: with the
     /// DAG-embedded per-bucket collectives (cfg.overlap) only the
@@ -41,6 +52,11 @@ struct Client {
     /// Gradient in flight to the PS (ASGD).
     grad_outbox: Option<Vec<f32>>,
     train_loss_accum: f64,
+    /// Membership epochs this client has applied (all clients pass every
+    /// boundary, affected or not, so epoch indices stay aligned).
+    epochs_done: u64,
+    /// Live member worker-ids (empty = the whole client left the job).
+    members: Vec<usize>,
 }
 
 struct Sim<'a> {
@@ -55,8 +71,13 @@ struct Sim<'a> {
     server_w: Vec<f32>,
     server_m: Vec<f32>,
     iters_per_epoch: u64,
-    m: usize,
     records: Vec<EpochRecord>,
+    params: CostParams,
+    /// Elastic schedule shared with the threaded plane (None = static).
+    hub: Option<ElasticHub>,
+    /// Per-worker speed factor: seeded jitter x cumulative straggle.
+    jitter: Vec<f64>,
+    rng: Rng,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -67,19 +88,135 @@ enum Ev {
     PushArrive { c: usize, iter: u64 },
 }
 
+/// Compute + exposed-communication seconds for a client whose live
+/// members have the given speed factors.
+fn client_costs(
+    cfg: &ExperimentConfig,
+    params: &CostParams,
+    factors: &[f64],
+) -> (f64, f64) {
+    let mc = factors.len();
+    let worst = factors.iter().fold(1.0f64, |a, &b| a.max(b));
+    let compute_s = cfg.compute_s_per_batch * worst;
+    let allreduce_s = if mc > 1 {
+        crate::collectives::sim::tensor_allreduce_seconds(
+            cfg.collective_kind(),
+            mc,
+            cfg.virtual_model_bytes,
+            cfg.rings,
+            params,
+        )
+    } else {
+        0.0
+    };
+    (compute_s, exposed_comm_seconds(cfg, mc, params, allreduce_s, compute_s))
+}
+
 impl<'a> Sim<'a> {
-    /// Sum of the member workers' per-batch mean gradients (sync inside the
-    /// client, §5). Real PJRT math.
+    /// Base speed factor of worker `id` (seeded jitter, straggle excluded).
+    fn base_jitter(&self, id: usize) -> f64 {
+        let mut r = self.rng.fork(id as u64 + 1);
+        1.0 + self.cfg.jitter * r.uniform()
+    }
+
+    /// Recompute client `c`'s cost constants from its live members.
+    fn refresh_costs(&mut self, c: usize) {
+        let factors: Vec<f64> = self.clients[c]
+            .members
+            .iter()
+            .map(|&id| self.jitter[id])
+            .collect();
+        if factors.is_empty() {
+            return; // dead client: never scheduled again
+        }
+        let (compute_s, comm_s) = client_costs(self.cfg, &self.params, &factors);
+        self.clients[c].compute_s = compute_s;
+        self.clients[c].comm_s = comm_s;
+    }
+
+    /// Total live workers across clients.
+    fn live_workers(&self) -> usize {
+        self.clients.iter().map(|cl| cl.members.len()).sum()
+    }
+
+    /// Apply membership epoch `k` to client `c`'s tables; returns the
+    /// reconfiguration stall this client pays (0 when untouched).
+    fn apply_epoch(&mut self, k: u64, c: usize) -> f64 {
+        // Copy the plan slices out first: the hub borrow must end before
+        // the membership tables are mutated.
+        let (new_members, any_join, factors) = {
+            let Some(hub) = &self.hub else { return 0.0 };
+            let nm: Vec<usize> = hub
+                .members_after(k)
+                .iter()
+                .filter(|&&(_, client)| client == c)
+                .map(|&(r, _)| r)
+                .collect();
+            let any_join = hub.joins_at(k).iter().any(|r| nm.contains(r));
+            let f: Vec<f64> = nm.iter().map(|&id| hub.straggle_after(k, id)).collect();
+            (nm, any_join, f)
+        };
+        let mut touched = false;
+        for (&id, &straggle) in new_members.iter().zip(&factors) {
+            if self.jitter.len() <= id {
+                self.jitter.resize(id + 1, 1.0);
+            }
+            let f = self.base_jitter(id) * straggle;
+            if (self.jitter[id] - f).abs() > 1e-12 && self.clients[c].members.contains(&id) {
+                touched = true; // straggle change on an existing member
+            }
+            self.jitter[id] = f;
+        }
+        if new_members != self.clients[c].members {
+            touched = true;
+        }
+        self.clients[c].members = new_members;
+        self.clients[c].epochs_done = k + 1;
+        if !touched {
+            return 0.0;
+        }
+        self.refresh_costs(c);
+        let bootstrap = if any_join {
+            self.cfg.virtual_model_bytes
+        } else {
+            0
+        };
+        self.params.reconfig_seconds(
+            self.clients[c].members.len().max(1),
+            bootstrap,
+            self.cfg.servers,
+        )
+    }
+
+    /// Sum of the live member workers' per-batch mean gradients (sync
+    /// inside the client, §5). Real PJRT math.
+    ///
+    /// Shards are indexed by each member's position in the *global live*
+    /// worker list (the threaded plane's `shard_index` resharding): with
+    /// the launch population this is the identity mapping, and after
+    /// churn a joiner gets its own shard instead of aliasing worker 0's
+    /// through `Shard::batch_start`'s modulo wrap.
     fn client_grad(&self, c: usize, iter: u64, w: &[f32]) -> Result<(f32, Vec<f32>)> {
         let batch = self.model.meta.batch_size();
         let epoch = iter / self.iters_per_epoch;
         let b_in_epoch = iter % self.iters_per_epoch;
+        let mut all_live: Vec<usize> = self
+            .clients
+            .iter()
+            .flat_map(|cl| cl.members.iter().copied())
+            .collect();
+        all_live.sort_unstable();
+        let members = &self.clients[c].members;
         let mut sum: Vec<f32> = Vec::new();
         let mut loss_sum = 0.0f32;
-        for j in 0..self.m {
+        for &worker in members {
+            let shard_index = all_live
+                .iter()
+                .position(|&id| id == worker)
+                .expect("member is live");
             let shard = crate::data::Shard {
-                worker: c * self.m + j,
-                n_workers: self.cfg.workers,
+                worker: shard_index,
+                n_workers: all_live.len(),
                 total: self.cfg.samples_per_epoch,
                 batch,
                 epoch,
@@ -93,7 +230,7 @@ impl<'a> Sim<'a> {
                 crate::tensor::add_assign(&mut sum, &g);
             }
         }
-        Ok((loss_sum / self.m as f32, sum))
+        Ok((loss_sum / members.len().max(1) as f32, sum))
     }
 
     fn evaluate(&self, w: &[f32]) -> Result<(f64, f64)> {
@@ -174,52 +311,63 @@ pub fn simulate(cfg: &ExperimentConfig, artifacts_dir: &Path) -> Result<RunResul
     let params = cfg.cost_params();
     let bytes = cfg.virtual_model_bytes;
 
-    // Intra-client allreduce seconds under the configured schedule; the
-    // default "auto" resolves per message size via the α-β-γ autotuner
-    // (select_best) instead of hard-coding the ring.
-    let allreduce_s = if m > 1 {
-        crate::collectives::sim::tensor_allreduce_seconds(
-            cfg.collective_kind(),
-            m,
-            bytes,
-            cfg.rings,
-            &params,
-        )
-    } else {
-        0.0
-    };
     let bcast_s = if m > 1 {
         bytes as f64 * params.beta_net + bytes as f64 * params.beta_gpu_bcast
     } else {
         0.0
     };
 
+    // Elastic schedule (shared with the threaded plane so both planes see
+    // identical membership epochs for identical configs).
+    let plan = cfg.fault_plan()?;
+    let hub = if plan.is_empty() {
+        None
+    } else {
+        let mut spec = JobSpec::from_config(cfg);
+        spec.fault = plan;
+        Some(ElasticHub::new(&spec, Scheduler::new(0, 0), None)?)
+    };
+
     let rng = Rng::new(cfg.seed);
     let w0 = meta.init_params()?;
+    let mut jitter: Vec<f64> = Vec::new();
+    for id in 0..cfg.workers {
+        let mut r = rng.fork(id as u64 + 1);
+        jitter.push(1.0 + cfg.jitter * r.uniform());
+    }
     let clients: Vec<Client> = (0..cfg.clients)
         .map(|c| {
-            let worst = (0..m)
-                .map(|j| {
-                    let mut r = rng.fork((c * m + j) as u64 + 1);
-                    1.0 + cfg.jitter * r.uniform()
-                })
-                .fold(1.0f64, f64::max);
-            let compute_s = cfg.compute_s_per_batch * worst;
+            let members: Vec<usize> = (0..m).map(|j| c * m + j).collect();
+            let factors: Vec<f64> = members.iter().map(|&id| jitter[id]).collect();
+            let (compute_s, comm_s) = client_costs(cfg, &params, &factors);
             Client {
                 w: w0.clone(),
                 momentum: vec![0.0; n],
                 now: 0.0,
                 iter: 0,
                 compute_s,
-                comm_s: exposed_comm_seconds(cfg, m, &params, allreduce_s, compute_s),
+                comm_s,
                 grad_outbox: None,
                 train_loss_accum: 0.0,
+                epochs_done: 0,
+                members,
             }
         })
         .collect();
 
     let iters_per_epoch =
         (cfg.samples_per_epoch / (cfg.workers as u64 * meta.batch_size() as u64)).max(1);
+    if let Some(hub) = &hub {
+        let last_idx = hub.n_epochs().saturating_sub(1) as u64;
+        if let Some(last) = hub.boundary_iter(last_idx) {
+            anyhow::ensure!(
+                last < iters_per_epoch * cfg.epochs as u64,
+                "fault plan boundary at iteration {last} never fires: the \
+                 run has only {} iterations",
+                iters_per_epoch * cfg.epochs as u64
+            );
+        }
+    }
 
     let mut sim = Sim {
         cfg,
@@ -227,12 +375,15 @@ pub fn simulate(cfg: &ExperimentConfig, artifacts_dir: &Path) -> Result<RunResul
         model,
         clients,
         bcast_s,
-        fabric: PsFabric::new(cfg.servers.max(1), cfg.clients, params),
+        fabric: PsFabric::new(cfg.servers.max(1), cfg.clients, params.clone()),
         server_w: w0,
         server_m: vec![0.0; n],
         iters_per_epoch,
-        m,
         records: Vec::new(),
+        params,
+        hub,
+        jitter,
+        rng,
     };
 
     match cfg.algo {
@@ -245,21 +396,32 @@ pub fn simulate(cfg: &ExperimentConfig, artifacts_dir: &Path) -> Result<RunResul
 }
 
 /// Synchronous (dist/mpi) SGD: lockstep rounds, Fig. 6 semantics.
+///
+/// Membership epochs are **global barriers** here — pure MPI and sync-PS
+/// jobs rebuild every world at the boundary, so every live client pays the
+/// reconfiguration stall (this is exactly why the paper keeps the loosely
+/// coupled PS around for elasticity).
 fn run_sync_sgd(sim: &mut Sim<'_>) -> Result<()> {
     let cfg = sim.cfg;
     let n_iters = sim.iters_per_epoch * cfg.epochs as u64;
-    let hyper = SgdHyper {
-        lr: cfg.lr,
-        momentum: cfg.momentum,
-        weight_decay: cfg.weight_decay,
-        rescale: 1.0 / cfg.workers as f32,
-    };
     let bytes = cfg.virtual_model_bytes;
     for iter in 0..n_iters {
-        // 1. Real math: global gradient = sum over all clients' sums.
+        let live_workers = sim.live_workers();
+        // Renormalized to the live population (survivors' averages span
+        // the live set, §5's 1/mini_batch in sample terms).
+        let hyper = SgdHyper {
+            lr: cfg.lr,
+            momentum: cfg.momentum,
+            weight_decay: cfg.weight_decay,
+            rescale: 1.0 / live_workers.max(1) as f32,
+        };
+        // 1. Real math: global gradient = sum over live clients' sums.
+        let live: Vec<usize> = (0..sim.clients.len())
+            .filter(|&c| !sim.clients[c].members.is_empty())
+            .collect();
         let mut total_g: Vec<f32> = Vec::new();
         let mut loss_sum = 0.0;
-        for c in 0..sim.clients.len() {
+        for &c in &live {
             let w = sim.server_w.clone();
             let (loss, g) = sim.client_grad(c, iter, &w)?;
             loss_sum += loss as f64;
@@ -277,14 +439,15 @@ fn run_sync_sgd(sim: &mut Sim<'_>) -> Result<()> {
 
         // 2. Virtual time: compute -> intra-client allreduce -> masters
         // push (fabric contention) -> sync server round -> pulls -> bcast.
-        let mut arrivals: Vec<(usize, VTime)> = (0..sim.clients.len())
-            .map(|c| {
+        let mut arrivals: Vec<(usize, VTime)> = live
+            .iter()
+            .map(|&c| {
                 let cl = &sim.clients[c];
                 (c, cl.now + cl.compute_s + cl.comm_s)
             })
             .collect();
         arrivals.sort_by(|a, b| a.1.total_cmp(&b.1));
-        let loss_avg = loss_sum / sim.clients.len() as f64;
+        let loss_avg = loss_sum / live.len().max(1) as f64;
         if cfg.servers == 0 {
             // Pure MPI (#servers = 0, §4.2.4): PushPull *is* the allreduce;
             // no PS round-trip. (Single client: allreduce_s covers comm.)
@@ -306,13 +469,38 @@ fn run_sync_sgd(sim: &mut Sim<'_>) -> Result<()> {
             }
         }
 
+        // 3. Membership epoch: a global barrier for synchronous modes —
+        // every live client stalls for the rebuild (the slowest survivor
+        // gates everyone, plus the reconfiguration itself).
+        let boundary = sim
+            .hub
+            .as_ref()
+            .and_then(|h| h.boundary_iter(sim.clients[live[0]].epochs_done));
+        if boundary == Some(iter) {
+            let k = sim.clients[live[0]].epochs_done;
+            let barrier_at = live
+                .iter()
+                .map(|&c| sim.clients[c].now)
+                .fold(0.0f64, f64::max);
+            let mut stall = 0.0f64;
+            for c in 0..sim.clients.len() {
+                stall = stall.max(sim.apply_epoch(k, c));
+            }
+            for cl in sim.clients.iter_mut() {
+                if !cl.members.is_empty() {
+                    cl.now = barrier_at + stall;
+                }
+            }
+        }
+
         if (iter + 1) % sim.iters_per_epoch == 0 {
             let epoch = iter / sim.iters_per_epoch;
             // The synchronous round (epoch) completes when the *slowest*
-            // client has its pull — epoch time is a barrier quantity.
+            // live client has its pull — epoch time is a barrier quantity.
             let vtime = sim
                 .clients
                 .iter()
+                .filter(|c| !c.members.is_empty())
                 .map(|c| c.now)
                 .fold(0.0f64, f64::max);
             let tl = sim.clients[0].train_loss_accum / sim.iters_per_epoch as f64;
@@ -324,8 +512,8 @@ fn run_sync_sgd(sim: &mut Sim<'_>) -> Result<()> {
     Ok(())
 }
 
-/// Advance a client past iteration `iter`; schedule its next compute and
-/// record epoch boundaries on client 0.
+/// Advance a client past iteration `iter`; apply any membership boundary,
+/// schedule its next compute and record epoch boundaries on client 0.
 fn finish_iteration(
     sim: &mut Sim<'_>,
     q: &mut EventQueue<Ev>,
@@ -334,6 +522,19 @@ fn finish_iteration(
     now: VTime,
 ) -> Result<()> {
     let n_iters = sim.iters_per_epoch * sim.cfg.epochs as u64;
+    let mut now = now;
+    // Membership epochs: each client crosses every boundary at its own
+    // pace; only touched clients stall (the others keep training against
+    // the PS — ESGD's graceful degradation under churn).
+    while sim
+        .hub
+        .as_ref()
+        .and_then(|h| h.boundary_iter(sim.clients[c].epochs_done))
+        == Some(iter)
+    {
+        let k = sim.clients[c].epochs_done;
+        now += sim.apply_epoch(k, c);
+    }
     sim.clients[c].now = now;
     sim.clients[c].iter = iter + 1;
     if c == 0 && (iter + 1) % sim.iters_per_epoch == 0 {
@@ -343,7 +544,7 @@ fn finish_iteration(
         let w = sim.clients[0].w.clone();
         sim.record_epoch(epoch, now, &w, tl)?;
     }
-    if iter + 1 < n_iters {
+    if iter + 1 < n_iters && !sim.clients[c].members.is_empty() {
         let t = now + sim.clients[c].compute_s + sim.clients[c].comm_s;
         q.push(t, Ev::ComputeDone { c, iter: iter + 1 });
     }
@@ -355,12 +556,13 @@ fn run_async(sim: &mut Sim<'_>, elastic: bool) -> Result<()> {
     let cfg = sim.cfg;
     let bytes = cfg.virtual_model_bytes;
     // Plain SGD for the async modes (Figs 7-8): momentum on stale or
-    // locally-diverging gradients compounds and blows up.
-    let local_hyper = SgdHyper {
+    // locally-diverging gradients compounds and blows up. The rescale is
+    // per-client (its live member count — renormalized under churn).
+    let base_hyper = SgdHyper {
         lr: cfg.lr,
         momentum: 0.0,
         weight_decay: cfg.weight_decay,
-        rescale: 1.0 / sim.m as f32,
+        rescale: 1.0,
     };
     // ASGD server updates: C clients fire independently, so the aggregate
     // step per "wave" is C times one update; scale the server lr so the
@@ -368,7 +570,7 @@ fn run_async(sim: &mut Sim<'_>, elastic: bool) -> Result<()> {
     // stabilization; without it the tight synthetic task diverges).
     let server_hyper = SgdHyper {
         lr: cfg.lr / sim.clients.len() as f32,
-        ..local_hyper
+        ..base_hyper
     };
     let alpha = cfg.alpha;
 
@@ -384,6 +586,10 @@ fn run_async(sim: &mut Sim<'_>, elastic: bool) -> Result<()> {
                 let w_snapshot = sim.clients[c].w.clone();
                 let (loss, g) = sim.client_grad(c, iter, &w_snapshot)?;
                 sim.clients[c].train_loss_accum += loss as f64;
+                let local_hyper = SgdHyper {
+                    rescale: 1.0 / sim.clients[c].members.len().max(1) as f32,
+                    ..base_hyper
+                };
 
                 if elastic {
                     // Local SGD step every iteration (Fig. 8 l.13).

@@ -13,26 +13,69 @@
 //! * **ESGD** (Fig. 8): server runs `Elastic1` on pushed *weights*; every
 //!   `INTERVAL` iterations the worker pushes params, pulls centers and
 //!   applies `Elastic2`; plain SGD locally in between.
+//!
+//! **Elasticity** (the PS-task half of the paper's §1–§2 thesis): with a
+//! [`FaultPlan`](crate::ps::FaultPlan) in the config, workers run through
+//! membership-epoch boundaries — dying ranks checkpoint-and-leave at the
+//! boundary (fail-stop, the cloud-preemption model), survivors swap in the
+//! rebuilt client world and renormalize their gradient averages to the
+//! live worker count, and joiners bootstrap from the PS checkpoint blob
+//! (or by peer broadcast when `#servers == 0`), bitwise-identically to a
+//! never-left rank.
 
 use crate::config::{Algo, ExperimentConfig};
-use crate::launcher::{launch, JobSpec, WorkerCtx};
+use crate::launcher::{launch, ElasticHub, EpochView, JobSpec, WorkerCtx};
 use crate::metrics::{EpochRecord, RunResult};
 use crate::optimizer::{Assign, Elastic1, Sgd, SgdHyper};
 use crate::runtime::service::{ModelHandle, ModelService};
 use crate::tensor::SegmentTable;
 use crate::trainer::TrainData;
-use anyhow::Result;
+use anyhow::{ensure, Context, Result};
 use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Instant;
+
+/// Checkpoint blob key for a client's replica: params at `which == 0`,
+/// momentum at `which == 1`. Per-client because ESGD replicas differ
+/// across clients (sync replicas are identical, so per-client is merely
+/// redundant there).
+fn ckpt_key(client: usize, which: usize) -> usize {
+    client * 2 + which
+}
+
+/// Simulated slowdown per iteration per unit of straggle factor (threaded
+/// plane only; the sim plane prices straggle on the virtual clock).
+const STRAGGLE_BASE: std::time::Duration = std::time::Duration::from_millis(1);
 
 /// Train with the given config on the threaded stack; returns per-epoch
 /// records (wall-clock time axis) as measured on worker 0.
 pub fn train(cfg: &ExperimentConfig, artifacts_dir: PathBuf) -> Result<RunResult> {
     let service = ModelService::spawn(artifacts_dir, &cfg.variant)?;
-    let spec = JobSpec::from_config(cfg);
+    let mut spec = JobSpec::from_config(cfg);
+    spec.fault = cfg.fault_plan()?;
     let cfg = Arc::new(cfg.clone());
     let handle = service.handle();
+    if let Some(last) = spec.fault.last_iter() {
+        // Surface a semantically invalid plan (dead rank, emptied client
+        // 0, …) as a clean error here rather than a panic inside launch.
+        ElasticHub::new(&spec, crate::ps::Scheduler::new(0, 0), None)
+            .context("invalid fault plan for this job")?;
+        // A joiner whose admission boundary lies past the final iteration
+        // would park forever and hang the job on shutdown.
+        let shard = crate::data::Shard {
+            worker: 0,
+            n_workers: cfg.workers,
+            total: cfg.samples_per_epoch,
+            batch: handle.meta.batch_size(),
+            epoch: 0,
+        };
+        let total_iters = cfg.epochs as u64 * shard.batches_per_epoch().max(1);
+        ensure!(
+            last < total_iters,
+            "fault plan event at iteration {last} never fires: the run has \
+             only {total_iters} iterations"
+        );
+    }
 
     let cfg2 = cfg.clone();
     let results = launch(&spec, move |ctx| {
@@ -67,10 +110,15 @@ fn worker_loop(
     let batch = meta.batch_size();
 
     // --- Init: PS rank 0 initializes every key; pure MPI broadcasts.
+    // Joiners skip the whole section: every key was initialized at launch,
+    // and the serverless init path is a *collective* bcast the survivors
+    // would never re-enter — a joiner's replica comes from the bootstrap
+    // below instead.
     let mut w = meta.init_params()?;
     let is_root = ctx.ps_rank == 0;
     let init_parts = split_keys(&segs, &w);
     match cfg.algo {
+        _ if ctx.join_view.is_some() => {}
         Algo::DistSgd | Algo::MpiSgd => {
             // Keys hold aggregated gradients (Fig. 6): init zeros.
             for k in 0..n_keys {
@@ -117,22 +165,18 @@ fn worker_loop(
         }
     }
 
-    let shard = crate::data::Shard {
-        worker: ctx.ps_rank,
+    // Iteration schedule: fixed by the launch population (membership
+    // changes re-map shard *contents*, never the boundary schedule, so
+    // every rank agrees on boundary iterations).
+    let batches = (crate::data::Shard {
+        worker: ctx.ps_rank.min(ctx.n_workers - 1),
         n_workers: ctx.n_workers,
         total: cfg.samples_per_epoch,
         batch,
         epoch: 0,
-    };
-    let batches = shard.batches_per_epoch().max(1);
-    // Our gradients are per-batch *means*, so the local rescale divides by
-    // the number of workers whose gradients were aggregated before the
-    // update (§5's 1/mini_batch_size in sample terms).
-    let aggregated_workers = match cfg.algo {
-        Algo::DistSgd | Algo::MpiSgd => cfg.workers,
-        Algo::MpiEsgd => cfg.workers_per_client(),
-        _ => 1,
-    };
+    })
+    .batches_per_epoch()
+    .max(1) as usize;
     // Momentum is used only by the synchronous modes (Fig. 6's local
     // SGD.Update on the exact aggregated gradient); ESGD's local updates
     // follow Fig. 8's plain SGD.
@@ -140,23 +184,89 @@ fn worker_loop(
         Algo::DistSgd | Algo::MpiSgd => cfg.momentum,
         _ => 0.0,
     };
-    let local_hyper = SgdHyper {
+    // Our gradients are per-batch *means*, so the local rescale divides by
+    // the number of workers whose gradients were aggregated before the
+    // update (§5's 1/mini_batch_size in sample terms). Recomputed per
+    // membership epoch: survivors renormalize to the live population.
+    let aggregated_workers = |m_live: usize, live_workers: usize| match cfg.algo {
+        Algo::DistSgd | Algo::MpiSgd => live_workers,
+        Algo::MpiEsgd => m_live,
+        _ => 1,
+    };
+
+    // Live-membership state, advanced at each epoch boundary.
+    let mut m_live = ctx.workers_per_client;
+    let mut live_workers = ctx.n_workers;
+    let mut shard_worker = ctx.ps_rank;
+    let mut epochs_done: u64 = 0;
+    let mut straggle = 1.0f64;
+    let start_iter = match &ctx.join_view {
+        Some(view) => {
+            m_live = view.workers_per_client;
+            live_workers = view.live_workers;
+            shard_worker = view.shard_index;
+            epochs_done = view.epoch;
+            straggle = view.straggle;
+            view.boundary_iter + 1
+        }
+        None => 0,
+    };
+    let mut local_hyper = SgdHyper {
         lr: cfg.lr,
         momentum: local_momentum,
         weight_decay: cfg.weight_decay,
-        rescale: 1.0 / aggregated_workers as f32,
+        rescale: 1.0 / aggregated_workers(m_live, live_workers) as f32,
     };
     let mut momentum = vec![0.0f32; meta.params];
+
+    // Joiner bootstrap: adopt the client replica before the first step —
+    // from the PS checkpoint blob, or by peer broadcast when #servers == 0
+    // (handled by bootstrap_bcast below, which every member runs).
+    if let Some(view) = &ctx.join_view {
+        if cfg.servers > 0 {
+            w = ctx.kv.ckpt_load(ckpt_key(ctx.client_id, 0)).unwrap_or_else(|| {
+                panic!(
+                    "joiner rank {} found no checkpoint for client {}: a \
+                     fresh client needs a PS checkpoint to bootstrap from",
+                    ctx.ps_rank, ctx.client_id
+                )
+            });
+            if local_momentum != 0.0 {
+                momentum = ctx
+                    .kv
+                    .ckpt_load(ckpt_key(ctx.client_id, 1))
+                    .unwrap_or_else(|| vec![0.0f32; meta.params]);
+            }
+        }
+        bootstrap_bcast(cfg, &ctx, view, &mut w, &mut momentum, local_momentum);
+    }
+
     let mut records = Vec::new();
     let start = Instant::now();
-    let mut iter = 0usize;
+    let total_iters = cfg.epochs * batches;
+    let mut iter = start_iter as usize;
+    let mut train_loss_sum = 0.0f64;
 
-    for epoch in 0..cfg.epochs {
-        let mut shard = shard.clone();
-        shard.epoch = epoch as u64;
-        let mut train_loss_sum = 0.0f64;
-        for b in 0..batches {
-            let (x, y) = data.batch(shard.batch_start(b), batch);
+    while iter < total_iters {
+        let epoch = iter / batches;
+        let b = iter % batches;
+        if b == 0 {
+            train_loss_sum = 0.0;
+        }
+        let shard = crate::data::Shard {
+            worker: shard_worker,
+            n_workers: live_workers,
+            total: cfg.samples_per_epoch,
+            batch,
+            epoch: epoch as u64,
+        };
+        if straggle > 1.0 {
+            // Injected slowdown (FaultPlan straggle): the threaded plane's
+            // stand-in for a slow host.
+            std::thread::sleep(STRAGGLE_BASE.mul_f64(straggle - 1.0));
+        }
+        {
+            let (x, y) = data.batch(shard.batch_start(b as u64), batch);
             let (loss, grads) = model.grad_step(&w, x, y)?;
             train_loss_sum += loss as f64;
 
@@ -220,7 +330,7 @@ fn worker_loop(
                     // reuse pushpull composition only at INTERVALs, so the
                     // intra-client allreduce here goes through the comm.
                     let mut g = grads;
-                    if cfg.algo == Algo::MpiEsgd && ctx.workers_per_client > 1 {
+                    if cfg.algo == Algo::MpiEsgd && m_live > 1 {
                         // Aggregate inside the client (ring allreduce).
                         g = ctx.kv.client_allreduce(g).wait();
                     }
@@ -231,7 +341,7 @@ fn worker_loop(
                         // ring-SUMS across the client; replicas are kept in
                         // lockstep, so pre-scale by 1/m to push the client
                         // average (= w) rather than m*w.
-                        let scale = 1.0 / ctx.workers_per_client as f32;
+                        let scale = 1.0 / m_live as f32;
                         let mut w_avg = w.clone();
                         crate::tensor::scale(&mut w_avg, scale);
                         let parts = split_keys(&segs, &w_avg);
@@ -247,11 +357,50 @@ fn worker_loop(
                     }
                 }
             }
-            iter += 1;
+        }
+
+        // --- membership-epoch boundary (elastic jobs only) ---------------
+        if let Some(hub) = &ctx.hub {
+            if hub.boundary_iter(epochs_done) == Some(iter as u64) {
+                // Quiesce: every comm op of this epoch must complete
+                // before the world is torn down or swapped.
+                ctx.kv.wait_all();
+                // The lowest surviving member of each client persists the
+                // client replica through the PS *before* the barrier, so
+                // joiners and restarted ranks bootstrap from this exact
+                // boundary's state.
+                if cfg.servers > 0
+                    && hub.ckpt_master(epochs_done, ctx.client_id) == Some(ctx.ps_rank)
+                {
+                    ctx.kv.ckpt_save(ckpt_key(ctx.client_id, 0), w.clone());
+                    if local_momentum != 0.0 {
+                        ctx.kv.ckpt_save(ckpt_key(ctx.client_id, 1), momentum.clone());
+                    }
+                }
+                if hub.dying_at(epochs_done).contains(&ctx.ps_rank) {
+                    // Fail-stop at the boundary (cooperative preemption):
+                    // no hub call — the barrier never waits on the dead.
+                    return Ok(records);
+                }
+                let handout = hub.reconfigure(ctx.ps_rank);
+                let view = handout.view;
+                if let Some(comm) = handout.comm {
+                    drop(ctx.kv.replace_comm(comm));
+                }
+                // Survivors renormalize: averages span the live set now.
+                m_live = view.workers_per_client;
+                live_workers = view.live_workers;
+                shard_worker = view.shard_index;
+                straggle = view.straggle;
+                epochs_done = view.epoch;
+                local_hyper.rescale =
+                    1.0 / aggregated_workers(m_live, live_workers) as f32;
+                bootstrap_bcast(cfg, &ctx, &view, &mut w, &mut momentum, local_momentum);
+            }
         }
 
         // Validation on worker 0 (paper: after every epoch).
-        if ctx.ps_rank == 0 {
+        if b == batches - 1 && ctx.ps_rank == 0 {
             let (vl, va) = evaluate(cfg, &model, &data, &w)?;
             records.push(EpochRecord {
                 epoch,
@@ -261,9 +410,37 @@ fn worker_loop(
                 val_acc: va,
             });
         }
+        iter += 1;
     }
     ctx.kv.wait_all();
     Ok(records)
+}
+
+/// Peer-bootstrap broadcast for serverless clients: when a client gained
+/// joiners at this boundary and there is no PS checkpoint to pull, every
+/// member broadcasts-in the lowest *survivor*'s replica (joiners receive
+/// it bitwise; survivors pass theirs through unchanged). No-op when the
+/// client has no joiners or a PS exists.
+fn bootstrap_bcast(
+    cfg: &ExperimentConfig,
+    ctx: &WorkerCtx,
+    view: &EpochView,
+    w: &mut Vec<f32>,
+    momentum: &mut Vec<f32>,
+    local_momentum: f32,
+) {
+    if cfg.servers > 0 || !view.members.iter().any(|r| view.joined.contains(r)) {
+        return;
+    }
+    let root = view
+        .members
+        .iter()
+        .position(|r| !view.joined.contains(r))
+        .expect("a client of only joiners needs a PS checkpoint to bootstrap");
+    *w = ctx.kv.client_bcast(root, std::mem::take(w)).wait();
+    if local_momentum != 0.0 {
+        *momentum = ctx.kv.client_bcast(root, std::mem::take(momentum)).wait();
+    }
 }
 
 /// Validation loss/accuracy over `cfg.eval_samples` held-out samples.

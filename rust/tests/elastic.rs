@@ -1,0 +1,348 @@
+//! Elastic-membership integration tests: churn-aware training on both
+//! planes, PS-backed checkpoint/restore, and the bitwise restore/join
+//! properties (hand-rolled proptest harness, as in `proptests.rs`).
+
+use mxnet_mpi::config::{Algo, ExperimentConfig};
+use mxnet_mpi::engine::Engine;
+use mxnet_mpi::kvstore::{KvType, KvWorker};
+use mxnet_mpi::launcher::{launch, JobSpec};
+use mxnet_mpi::mpisim::World;
+use mxnet_mpi::optimizer::Assign;
+use mxnet_mpi::ps::{FaultPlan, ServerGroup, SyncMode};
+use mxnet_mpi::util::Rng;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::thread;
+
+fn artifacts() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+// ---------------------------------------------------------------------------
+// Threaded plane
+// ---------------------------------------------------------------------------
+
+#[test]
+fn threaded_pure_mpi_survives_kill_mid_run() {
+    // The acceptance scenario: pure sync-MPI training with a worker killed
+    // mid-run reconfigures at the next membership epoch and finishes (the
+    // static launcher would deadlock on the first post-kill allreduce).
+    let mut cfg = ExperimentConfig::testbed1(Algo::MpiSgd);
+    cfg.variant = "mlp_tiny".into();
+    cfg.workers = 4;
+    cfg.clients = 1;
+    cfg.servers = 0;
+    cfg.epochs = 4;
+    cfg.samples_per_epoch = 4 * 8 * 8; // 8 batches/worker/epoch -> 32 iters
+    cfg.classes = 4;
+    cfg.noise = 1.0;
+    cfg.fault = "kill:3@10".into();
+    let run = mxnet_mpi::trainer::threaded::train(&cfg, artifacts()).unwrap();
+    assert_eq!(run.records.len(), cfg.epochs, "worker 0 saw every epoch");
+    for r in &run.records {
+        assert!(r.train_loss.is_finite());
+    }
+    let first = run.records.first().unwrap().train_loss;
+    let last = run.records.last().unwrap().train_loss;
+    assert!(last < first, "loss did not improve through churn: {first} -> {last}");
+}
+
+#[test]
+fn threaded_esgd_hybrid_trains_through_kill_and_straggle() {
+    let mut cfg = ExperimentConfig::testbed1(Algo::MpiEsgd);
+    cfg.variant = "mlp_tiny".into();
+    cfg.workers = 4;
+    cfg.clients = 2;
+    cfg.servers = 1;
+    cfg.epochs = 4;
+    cfg.samples_per_epoch = 4 * 4 * 8; // 4 batches/worker/epoch -> 16 iters
+    cfg.classes = 4;
+    cfg.noise = 1.0;
+    cfg.interval = 2;
+    cfg.fault = "kill:3@5,straggle:1@3x2".into();
+    let run = mxnet_mpi::trainer::threaded::train(&cfg, artifacts()).unwrap();
+    assert_eq!(run.records.len(), cfg.epochs);
+    assert!(run.final_acc() > 0.5, "acc {}", run.final_acc());
+}
+
+#[test]
+fn threaded_pure_mpi_joiner_bootstraps_by_peer_bcast() {
+    // Serverless join: the joiner adopts the survivors' replica via the
+    // peer broadcast and the run finishes with full records.
+    let mut cfg = ExperimentConfig::testbed1(Algo::MpiSgd);
+    cfg.variant = "mlp_tiny".into();
+    cfg.workers = 2;
+    cfg.clients = 1;
+    cfg.servers = 0;
+    cfg.epochs = 3;
+    cfg.samples_per_epoch = 2 * 8 * 8;
+    cfg.classes = 4;
+    cfg.noise = 1.0;
+    cfg.fault = "join@8".into();
+    let run = mxnet_mpi::trainer::threaded::train(&cfg, artifacts()).unwrap();
+    assert_eq!(run.records.len(), cfg.epochs);
+    assert!(run.records.iter().all(|r| r.train_loss.is_finite()));
+}
+
+#[test]
+fn fault_past_iteration_budget_rejected() {
+    let mut cfg = ExperimentConfig::testbed1(Algo::MpiSgd);
+    cfg.variant = "mlp_tiny".into();
+    cfg.workers = 2;
+    cfg.clients = 1;
+    cfg.servers = 0;
+    cfg.epochs = 1;
+    cfg.samples_per_epoch = 2 * 2 * 8; // 2 iterations total
+    cfg.fault = "join@1000".into();
+    let err = mxnet_mpi::trainer::threaded::train(&cfg, artifacts());
+    assert!(err.is_err(), "a join that can never fire must be rejected");
+}
+
+/// A joiner admitted through the PS checkpoint ends bitwise identical to
+/// the never-left ranks: hand-rolled sync data-parallel loop over the
+/// elastic launcher, final replicas compared across all live ranks.
+#[test]
+fn joiner_bootstraps_bitwise_identical_to_survivors() {
+    const N: usize = 16;
+    const ITERS: u64 = 6;
+    let mut spec = JobSpec::from_algo(Algo::MpiSgd, 3, 1, 1);
+    spec.fault = FaultPlan::parse("join@2").unwrap();
+    let out = launch(&spec, |ctx| {
+        let hub = ctx.hub.clone().expect("elastic job");
+        let (mut epochs_done, mut live, start_iter) = match &ctx.join_view {
+            Some(v) => (v.epoch, v.live_workers, v.boundary_iter + 1),
+            None => (0, 3usize, 0),
+        };
+        let mut w: Vec<f32>;
+        if ctx.join_view.is_some() {
+            // Bootstrap from the blob the master saved at the boundary.
+            w = ctx.kv.ckpt_load(0).expect("PS checkpoint present");
+        } else {
+            w = (0..N).map(|i| (i as f32) * 0.25 - 1.0).collect();
+            if ctx.ps_rank == 0 {
+                ctx.kv.init(0, vec![0.0; N], true);
+                ctx.kv.set_optimizer(|| Box::new(Assign));
+            }
+        }
+        for iter in start_iter..ITERS {
+            // Deterministic gradient from the (identical) replica.
+            let g: Vec<f32> = w.iter().map(|&x| 0.1 * x + 0.05).collect();
+            ctx.kv.push(0, g);
+            let agg = ctx.kv.pull(0).wait();
+            for (wi, ai) in w.iter_mut().zip(&agg) {
+                // The client pre-sums m replicas of identical gradients;
+                // renormalize by the live count so replicas stay equal
+                // across membership epochs.
+                *wi -= 0.2 * ai / live as f32;
+            }
+            if hub.boundary_iter(epochs_done) == Some(iter) {
+                ctx.kv.wait_all();
+                if hub.ckpt_master(epochs_done, ctx.client_id) == Some(ctx.ps_rank) {
+                    ctx.kv.ckpt_save(0, w.clone());
+                }
+                let handout = hub.reconfigure(ctx.ps_rank);
+                live = handout.view.live_workers;
+                epochs_done = handout.view.epoch;
+                if let Some(comm) = handout.comm {
+                    drop(ctx.kv.replace_comm(comm));
+                }
+            }
+        }
+        w
+    });
+    assert_eq!(out.len(), 4);
+    let reference = &out[0];
+    for (rank, w) in out.iter().enumerate() {
+        assert_eq!(
+            w, reference,
+            "rank {rank} diverged bitwise from the never-left replica"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint/restore bitwise property
+// ---------------------------------------------------------------------------
+
+/// One synchronous data-parallel run over the PS with per-iteration
+/// checkpointing; `kill` = (rank, iter) destroys that rank's local state
+/// right after the iteration and restores it from the PS blob. Returns
+/// every rank's final replica.
+fn sync_run_with_restore(
+    p: usize,
+    n: usize,
+    iters: u64,
+    seed: u64,
+    kill: Option<(usize, u64)>,
+) -> Vec<Vec<f32>> {
+    let group = ServerGroup::spawn(1, SyncMode::Sync, 1);
+    let c0 = group.client();
+    c0.init(0, vec![0.0; n]);
+    c0.set_optimizer(|| Box::new(Assign));
+    let comms = World::create(p);
+    let hs: Vec<_> = comms
+        .into_iter()
+        .map(|comm| {
+            let ps = group.client();
+            thread::spawn(move || {
+                let rank = comm.rank();
+                let engine = Arc::new(Engine::new(1));
+                let kv = KvWorker::create(KvType::SyncMpi, engine, Some(comm), Some(ps));
+                let mut rng = Rng::new(seed);
+                let mut w: Vec<f32> =
+                    (0..n).map(|_| (rng.below(41) as i64 - 20) as f32 / 4.0).collect();
+                let mut mom = vec![0.0f32; n];
+                for iter in 0..iters {
+                    // Deterministic, replica- and rank-dependent gradient.
+                    let g: Vec<f32> = w
+                        .iter()
+                        .enumerate()
+                        .map(|(i, &x)| 0.25 * x + ((rank * 31 + i) % 7) as f32 - 3.0)
+                        .collect();
+                    kv.push(0, g);
+                    let agg = kv.pull(0).wait();
+                    for i in 0..n {
+                        mom[i] = 0.5 * mom[i] + agg[i] / p as f32;
+                        w[i] -= 0.05 * mom[i];
+                    }
+                    // Master persists the replica through the PS, then a
+                    // collective orders the save before any restore load.
+                    if rank == 0 {
+                        kv.ckpt_save(0, w.clone());
+                        kv.ckpt_save(1, mom.clone());
+                    }
+                    let _ = kv.client_allreduce(vec![0.0]).wait();
+                    if kill == Some((rank, iter)) {
+                        // Fail-stop + restart: the local replica is
+                        // discarded wholesale; the rank bootstraps from
+                        // the PS checkpoint blobs.
+                        w = kv.ckpt_load(0).expect("params blob");
+                        mom = kv.ckpt_load(1).expect("momentum blob");
+                    }
+                }
+                kv.wait_all();
+                w
+            })
+        })
+        .collect();
+    let out: Vec<Vec<f32>> = hs.into_iter().map(|h| h.join().unwrap()).collect();
+    group.shutdown();
+    out
+}
+
+/// Property (satellite): a kill-at-arbitrary-iter + PS-checkpoint restore
+/// of sync SGD is bitwise identical to an uninterrupted run, on every
+/// rank's parameters.
+#[test]
+fn prop_kill_restore_bitwise_equals_uninterrupted() {
+    for case in 0..12u64 {
+        let mut rng = Rng::new(0xE1A5 ^ case);
+        let p = 2 + rng.below(3) as usize;
+        let n = 4 + rng.below(12) as usize;
+        let iters = 2 + rng.below(6);
+        let kill_rank = rng.below(p as u64) as usize;
+        let kill_iter = rng.below(iters);
+        let baseline = sync_run_with_restore(p, n, iters, case, None);
+        let restored =
+            sync_run_with_restore(p, n, iters, case, Some((kill_rank, kill_iter)));
+        // Sync replicas agree with each other...
+        for w in &baseline[1..] {
+            assert_eq!(w, &baseline[0], "case {case}: baseline replicas diverged");
+        }
+        // ...and the restored run is bitwise the uninterrupted run.
+        assert_eq!(
+            restored, baseline,
+            "case {case}: p={p} n={n} iters={iters} kill=({kill_rank},{kill_iter})"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sim plane
+// ---------------------------------------------------------------------------
+
+fn sim_churn_cfg(algo: Algo) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::testbed1(algo);
+    cfg.variant = "mlp_tiny".into();
+    cfg.workers = 4;
+    cfg.clients = 2;
+    cfg.servers = 1;
+    cfg.epochs = 4;
+    cfg.samples_per_epoch = 4 * 4 * 8; // 4 iters/epoch -> 16 iters
+    cfg.classes = 4;
+    cfg.noise = 1.0;
+    cfg.interval = 2;
+    cfg.fault = "kill:3@7".into();
+    cfg
+}
+
+#[test]
+fn sim_sync_mpi_reconfigures_and_stays_deterministic() {
+    let cfg = sim_churn_cfg(Algo::MpiSgd);
+    let a = mxnet_mpi::trainer::sim::simulate(&cfg, &artifacts()).unwrap();
+    let b = mxnet_mpi::trainer::sim::simulate(&cfg, &artifacts()).unwrap();
+    assert_eq!(a.records.len(), cfg.epochs);
+    let mut prev = 0.0;
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(ra.vtime, rb.vtime, "churned sim must stay deterministic");
+        assert_eq!(ra.train_loss, rb.train_loss);
+        assert!(ra.vtime > prev);
+        prev = ra.vtime;
+    }
+    // The global membership barrier prices a visible stall: the churn
+    // epoch (epoch 1, kill at iter 7 of 4/epoch) costs more than the
+    // epoch before it on the virtual clock.
+    let d0 = a.records[0].vtime;
+    let d1 = a.records[1].vtime - a.records[0].vtime;
+    assert!(
+        d1 > d0 + cfg.cost_params().reconfig_alpha * 0.5,
+        "no reconfiguration stall visible: epoch0 {d0}s epoch1 {d1}s"
+    );
+}
+
+#[test]
+fn sim_esgd_hybrid_loss_improves_through_churn() {
+    let cfg = sim_churn_cfg(Algo::MpiEsgd);
+    let run = mxnet_mpi::trainer::sim::simulate(&cfg, &artifacts()).unwrap();
+    assert_eq!(run.records.len(), cfg.epochs);
+    // Monotone improvement through the churn event (15% slack for the
+    // plateau near convergence).
+    for pair in run.records.windows(2) {
+        assert!(
+            pair[1].train_loss <= pair[0].train_loss * 1.15,
+            "loss regressed through churn: {} -> {}",
+            pair[0].train_loss,
+            pair[1].train_loss
+        );
+    }
+    let first = run.records.first().unwrap().train_loss;
+    let last = run.records.last().unwrap().train_loss;
+    assert!(last < first);
+    assert!(run.final_acc() > 0.5, "acc {}", run.final_acc());
+}
+
+#[test]
+fn sim_straggler_slows_only_sync_modes_globally() {
+    // A 4x straggler on one worker: sync-MPI epoch time inflates by ~the
+    // straggle factor (lockstep gates on the slowest member); the ESGD
+    // hybrid's *other* client keeps its own pace, so its epoch time grows
+    // far less — §2's decoupling argument priced on the virtual clock.
+    let run = |algo: Algo, fault: &str| {
+        let mut cfg = sim_churn_cfg(algo);
+        cfg.fault = fault.into();
+        mxnet_mpi::trainer::sim::simulate(&cfg, &artifacts())
+            .unwrap()
+            .avg_epoch_time
+    };
+    let sgd_clean = run(Algo::MpiSgd, "");
+    let sgd_straggled = run(Algo::MpiSgd, "straggle:3@0x4");
+    let esgd_clean = run(Algo::MpiEsgd, "");
+    let esgd_straggled = run(Algo::MpiEsgd, "straggle:3@0x4");
+    let sgd_blowup = sgd_straggled / sgd_clean;
+    let esgd_blowup = esgd_straggled / esgd_clean;
+    assert!(sgd_blowup > 1.5, "sync blowup only {sgd_blowup}");
+    assert!(
+        esgd_blowup < sgd_blowup,
+        "hybrid should degrade more gracefully: esgd {esgd_blowup} vs sgd {sgd_blowup}"
+    );
+}

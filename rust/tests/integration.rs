@@ -160,6 +160,8 @@ fn launcher_runs_many_small_jobs_without_leaking() {
             rings: 2,
             group: 2,
             cost: CostParams::testbed1(),
+            fault: mxnet_mpi::ps::FaultPlan::none(),
+            reconfig_every: 1,
         };
         let out = launch(&spec, |ctx| {
             if ctx.ps_rank == 0 {
