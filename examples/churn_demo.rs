@@ -35,7 +35,7 @@ fn main() -> anyhow::Result<()> {
     let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
 
     // --- Part 1: threaded plane, pure MPI, kill + join -------------------
-    let mut cfg = ExperimentConfig::testbed1(Algo::MpiSgd);
+    let mut cfg = ExperimentConfig::testbed1(Algo::named("mpi-SGD"));
     cfg.variant = "mlp_tiny".into();
     cfg.workers = 4;
     cfg.clients = 1;
@@ -63,7 +63,7 @@ fn main() -> anyhow::Result<()> {
     println!("threaded churn OK: survived kill:3@12 and join@30\n");
 
     // --- Part 2: sim plane, sync-MPI vs ESGD hybrid under one kill -------
-    for algo in [Algo::MpiSgd, Algo::MpiEsgd] {
+    for algo in [Algo::named("mpi-SGD"), Algo::named("mpi-ESGD")] {
         let mut cfg = ExperimentConfig::testbed1(algo);
         cfg.variant = "mlp_tiny".into();
         cfg.workers = 4;

@@ -28,7 +28,7 @@ fn main() -> anyhow::Result<()> {
     let steps_per_epoch = 25u64;
     let epochs = (steps / steps_per_epoch).max(1) as usize;
 
-    let mut cfg = ExperimentConfig::testbed1(Algo::MpiSgd);
+    let mut cfg = ExperimentConfig::testbed1(Algo::named("mpi-SGD"));
     cfg.variant = "transformer".into();
     cfg.workers = workers as usize;
     cfg.clients = 1;

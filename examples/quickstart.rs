@@ -15,7 +15,7 @@ use std::path::PathBuf;
 fn main() -> anyhow::Result<()> {
     let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
 
-    let mut cfg = ExperimentConfig::testbed1(Algo::MpiSgd);
+    let mut cfg = ExperimentConfig::testbed1(Algo::named("mpi-SGD"));
     cfg.variant = "mlp_tiny".into();
     cfg.workers = 4;
     cfg.clients = 2;

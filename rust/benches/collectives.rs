@@ -217,6 +217,49 @@ fn report_overlap_epoch_table() {
     );
 }
 
+/// Registry-derived strategy table: sync cadence, PS-bound traffic and a
+/// modeled epoch time per registered algorithm. Rows (including `bmuf` /
+/// `local-sgd`) appear here automatically on registration — the table can
+/// never lag the algorithm set.
+fn report_strategy_table() {
+    use mxnet_mpi::config::{Algo, ExperimentConfig};
+    let mut t = Table::new(&[
+        "algo",
+        "grouping",
+        "server",
+        "syncs/iter",
+        "PS MB/iter/master",
+        "modeled epoch s",
+    ]);
+    for algo in Algo::all() {
+        let cfg = ExperimentConfig::testbed1(algo);
+        let s = algo.strategy();
+        let syncs = s.syncs_per_iter(&cfg);
+        let p = cfg.cost_params();
+        let iters = cfg.samples_per_epoch as f64 / (cfg.workers as f64 * cfg.batch as f64);
+        // Rough α-β epoch model: compute + the PS round-trip traffic the
+        // strategy actually schedules (2x: push + pull).
+        let epoch_s = iters
+            * (cfg.compute_s_per_batch
+                + syncs * 2.0 * cfg.virtual_model_bytes as f64 * p.beta_net);
+        t.row(vec![
+            algo.name().to_string(),
+            algo.grouping().name().to_string(),
+            format!("{:?}", s.server_mode()),
+            format!("{syncs:.3}"),
+            format!(
+                "{:.1}",
+                cfg.virtual_model_bytes as f64 * syncs / (1 << 20) as f64
+            ),
+            format!("{epoch_s:.1}"),
+        ]);
+    }
+    println!(
+        "== registered strategies (registry-derived; comm volume x cadence) ==\n{}",
+        t.render()
+    );
+}
+
 fn bench_tensor_allreduce(t: &mut Table) {
     let len = 1 << 20;
     let s = bench(|| {
@@ -404,6 +447,7 @@ fn bench_pipelined_vs_blocking(t: &mut Table) {
 fn main() {
     report_modeled_crossover();
     report_overlap_epoch_table();
+    report_strategy_table();
     println!("== real-substrate microbenchmarks (median of {REPS}) ==");
     let mut t = Table::new(&["bench", "size", "median ms", "rate"]);
     bench_ring_allreduce(&mut t);

@@ -1,77 +1,20 @@
-//! Experiment configuration: the six §7 parallelization modes, testbed
+//! Experiment configuration: registry-backed algorithm selection, testbed
 //! presets and JSON round-trip (hand-rolled: no serde offline).
+//!
+//! The old closed `Algo` enum is gone: [`Algo`] is now a handle into the
+//! string-keyed algorithm registry
+//! ([`trainer::strategies`](crate::trainer::strategies)), so the config
+//! layer — like the CLI, figures and bench — can never know a different
+//! set of algorithms than the trainers run.
 
 use crate::collectives::AlgoKind;
 use crate::jsonlite::Value;
-use crate::kvstore::KvType;
 use crate::netsim::CostParams;
-use crate::ps::{FaultPlan, SyncMode};
+use crate::ps::FaultPlan;
 use anyhow::{Context, Result};
 use std::path::Path;
 
-/// The §7 algorithm modes (Figs 11–14).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Algo {
-    DistSgd,
-    DistAsgd,
-    DistEsgd,
-    MpiSgd,
-    MpiAsgd,
-    MpiEsgd,
-}
-
-impl Algo {
-    pub const ALL: [Algo; 6] = [
-        Algo::DistSgd,
-        Algo::DistAsgd,
-        Algo::DistEsgd,
-        Algo::MpiSgd,
-        Algo::MpiAsgd,
-        Algo::MpiEsgd,
-    ];
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            Algo::DistSgd => "dist-SGD",
-            Algo::DistAsgd => "dist-ASGD",
-            Algo::DistEsgd => "dist-ESGD",
-            Algo::MpiSgd => "mpi-SGD",
-            Algo::MpiAsgd => "mpi-ASGD",
-            Algo::MpiEsgd => "mpi-ESGD",
-        }
-    }
-
-    pub fn parse(s: &str) -> Option<Self> {
-        Self::ALL.into_iter().find(|a| a.name().eq_ignore_ascii_case(s))
-    }
-
-    pub fn is_mpi(&self) -> bool {
-        matches!(self, Algo::MpiSgd | Algo::MpiAsgd | Algo::MpiEsgd)
-    }
-
-    pub fn is_elastic(&self) -> bool {
-        matches!(self, Algo::DistEsgd | Algo::MpiEsgd)
-    }
-
-    /// PS server aggregation discipline for this mode.
-    pub fn server_mode(&self) -> SyncMode {
-        match self {
-            Algo::DistSgd | Algo::MpiSgd => SyncMode::Sync,
-            // ASGD and elastic averaging both use the async PS (§5).
-            _ => SyncMode::Async,
-        }
-    }
-
-    /// KVStore type string of §4.2.1.
-    pub fn kv_type(&self) -> KvType {
-        match self {
-            Algo::DistSgd => KvType::DistSync,
-            Algo::DistAsgd | Algo::DistEsgd => KvType::DistAsync,
-            Algo::MpiSgd => KvType::SyncMpi,
-            Algo::MpiAsgd | Algo::MpiEsgd => KvType::AsyncMpi,
-        }
-    }
-}
+pub use crate::trainer::strategies::{Algo, Grouping};
 
 /// Everything one experiment run needs.
 #[derive(Debug, Clone)]
@@ -97,8 +40,16 @@ pub struct ExperimentConfig {
     pub weight_decay: f32,
     /// Elastic averaging coefficient.
     pub alpha: f32,
-    /// Elastic lazy-sync interval (64 in §5).
+    /// Lazy-sync interval (64 in §5): ESGD's elastic sync cadence, and the
+    /// model-averaging block length for `local-sgd` / `bmuf`.
     pub interval: usize,
+    /// BMUF block momentum η: the filter coefficient on the block-averaged
+    /// model delta (`Δ = η Δ + (w̄ - G)`; Chen & Huo, ICASSP 2016).
+    pub block_momentum: f32,
+    /// Post-local warmup for `local-sgd` (arXiv:1808.07217): the first
+    /// `warmup_iters` iterations average the model *every* iteration
+    /// before the lazy `interval` schedule takes over. 0 disables.
+    pub warmup_iters: usize,
     /// Multi-ring count for tensor collectives.
     pub rings: usize,
     /// Allreduce schedule: "ring", "halving_doubling", "hierarchical" or
@@ -156,12 +107,14 @@ impl ExperimentConfig {
             batch: 64,
             lr: 0.1,
             // §5's pseudo-code ships *plain* SGD everywhere; momentum stays
-            // available as a knob but defaults off so the six modes differ
+            // available as a knob but defaults off so the modes differ
             // only in their distribution strategy.
             momentum: 0.0,
             weight_decay: 1e-4,
             alpha: 0.2,
             interval: 8,
+            block_momentum: 0.5,
+            warmup_iters: 0,
             rings: 2,
             collective: "auto".into(),
             fusion_bytes: 4 << 20,
@@ -191,12 +144,9 @@ impl ExperimentConfig {
         (self.workers / self.clients.max(1)).max(1)
     }
 
-    /// The algorithm mini-batch (§5): workers aggregated × batch.
+    /// The algorithm mini-batch (§5): declared by the strategy.
     pub fn mini_batch(&self) -> usize {
-        match self.algo {
-            Algo::DistSgd | Algo::MpiSgd => self.workers * self.batch,
-            _ => self.workers_per_client() * self.batch,
-        }
+        self.algo.strategy().mini_batch(self)
     }
 
     pub fn cost_params(&self) -> CostParams {
@@ -232,6 +182,8 @@ impl ExperimentConfig {
             ("weight_decay", Value::num(self.weight_decay as f64)),
             ("alpha", Value::num(self.alpha as f64)),
             ("interval", Value::num(self.interval as f64)),
+            ("block_momentum", Value::num(self.block_momentum as f64)),
+            ("warmup_iters", Value::num(self.warmup_iters as f64)),
             ("rings", Value::num(self.rings as f64)),
             ("collective", Value::str(&self.collective)),
             ("fusion_bytes", Value::num(self.fusion_bytes as f64)),
@@ -258,8 +210,13 @@ impl ExperimentConfig {
     /// `servers=-1` reading as a "valid" count), so it errors with the
     /// offending field named instead.
     pub fn from_json(v: &Value) -> Result<Self> {
-        let algo = Algo::parse(v.req("algo")?.as_str().context("algo")?)
-            .context("unknown algo")?;
+        let algo_name = v.req("algo")?.as_str().context("algo")?;
+        let algo = Algo::parse(algo_name).with_context(|| {
+            format!(
+                "unknown algo {algo_name:?} (registered: {})",
+                Algo::names().join(", ")
+            )
+        })?;
         let mut c = Self::testbed1(algo);
         // Free-form numerics (may legitimately be any float).
         let getn = |k: &str, d: f64| v.get(k).and_then(|x| x.as_f64()).unwrap_or(d);
@@ -291,6 +248,8 @@ impl ExperimentConfig {
         c.weight_decay = getn("weight_decay", c.weight_decay as f64) as f32;
         c.alpha = getn("alpha", c.alpha as f64) as f32;
         c.interval = getu("interval", c.interval as f64)? as usize;
+        c.block_momentum = getn("block_momentum", c.block_momentum as f64) as f32;
+        c.warmup_iters = getu("warmup_iters", c.warmup_iters as f64)? as usize;
         c.rings = getu("rings", c.rings as f64)? as usize;
         c.collective = gets("collective", &c.collective);
         anyhow::ensure!(
@@ -329,27 +288,18 @@ mod tests {
 
     #[test]
     fn algo_names_round_trip() {
-        for a in Algo::ALL {
+        for a in Algo::all() {
             assert_eq!(Algo::parse(a.name()), Some(a));
         }
         assert_eq!(Algo::parse("nope"), None);
     }
 
     #[test]
-    fn server_modes_match_paper() {
-        assert_eq!(Algo::DistSgd.server_mode(), SyncMode::Sync);
-        assert_eq!(Algo::MpiSgd.server_mode(), SyncMode::Sync);
-        for a in [Algo::DistAsgd, Algo::DistEsgd, Algo::MpiAsgd, Algo::MpiEsgd] {
-            assert_eq!(a.server_mode(), SyncMode::Async);
-        }
-    }
-
-    #[test]
     fn dist_modes_are_one_worker_clients() {
-        let c = ExperimentConfig::testbed1(Algo::DistSgd);
+        let c = ExperimentConfig::testbed1(Algo::named("dist-SGD"));
         assert_eq!(c.clients, 12);
         assert_eq!(c.workers_per_client(), 1);
-        let c = ExperimentConfig::testbed1(Algo::MpiSgd);
+        let c = ExperimentConfig::testbed1(Algo::named("mpi-SGD"));
         assert_eq!(c.clients, 2);
         assert_eq!(c.workers_per_client(), 6);
     }
@@ -357,21 +307,47 @@ mod tests {
     #[test]
     fn mini_batch_follows_section5() {
         // sync SGD: num_workers * batch; async/elastic: per-client workers.
-        let sync = ExperimentConfig::testbed1(Algo::MpiSgd);
+        let sync = ExperimentConfig::testbed1(Algo::named("mpi-SGD"));
         assert_eq!(sync.mini_batch(), 12 * 64);
-        let esgd = ExperimentConfig::testbed1(Algo::MpiEsgd);
+        let esgd = ExperimentConfig::testbed1(Algo::named("mpi-ESGD"));
         assert_eq!(esgd.mini_batch(), 6 * 64);
+        let bmuf = ExperimentConfig::testbed1(Algo::named("bmuf"));
+        assert_eq!(bmuf.mini_batch(), 6 * 64);
     }
 
     #[test]
     fn json_round_trip() {
-        let c = ExperimentConfig::testbed1(Algo::MpiEsgd);
+        let c = ExperimentConfig::testbed1(Algo::named("mpi-ESGD"));
         let v = c.to_json();
         let c2 = ExperimentConfig::from_json(&v).unwrap();
         assert_eq!(c2.algo, c.algo);
         assert_eq!(c2.workers, c.workers);
         assert_eq!(c2.interval, c.interval);
         assert!((c2.alpha - c.alpha).abs() < 1e-9);
+    }
+
+    #[test]
+    fn new_strategy_knobs_round_trip() {
+        let mut c = ExperimentConfig::testbed1(Algo::named("bmuf"));
+        c.block_momentum = 0.875;
+        c.warmup_iters = 24;
+        let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert!((c2.block_momentum - 0.875).abs() < 1e-9);
+        assert_eq!(c2.warmup_iters, 24);
+        // Negative warmup is a count: rejected with the field named.
+        let v = crate::jsonlite::parse(r#"{"algo": "local-sgd", "warmup_iters": -4}"#).unwrap();
+        let err = ExperimentConfig::from_json(&v).unwrap_err();
+        assert!(format!("{err:#}").contains("warmup_iters"));
+    }
+
+    #[test]
+    fn unknown_algo_error_lists_registered_names() {
+        let v = crate::jsonlite::parse(r#"{"algo": "turbo-SGD"}"#).unwrap();
+        let err = ExperimentConfig::from_json(&v).unwrap_err();
+        let msg = format!("{err:#}");
+        for name in Algo::names() {
+            assert!(msg.contains(name), "error does not list {name}: {msg}");
+        }
     }
 
     #[test]
@@ -406,12 +382,12 @@ mod tests {
 
     #[test]
     fn fault_plan_round_trips_and_validates() {
-        let mut c = ExperimentConfig::testbed1(Algo::MpiSgd);
+        let mut c = ExperimentConfig::testbed1(Algo::named("mpi-SGD"));
         c.fault = "kill:3@200,join@300".into();
         let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(c2.fault, c.fault);
         assert_eq!(c2.fault_plan().unwrap().events.len(), 2);
-        assert!(ExperimentConfig::testbed1(Algo::MpiSgd)
+        assert!(ExperimentConfig::testbed1(Algo::named("mpi-SGD"))
             .fault_plan()
             .unwrap()
             .is_empty());
@@ -422,7 +398,7 @@ mod tests {
 
     #[test]
     fn collective_knob_round_trips_and_parses() {
-        let mut c = ExperimentConfig::testbed1(Algo::MpiSgd);
+        let mut c = ExperimentConfig::testbed1(Algo::named("mpi-SGD"));
         c.collective = "halving_doubling".into();
         c.fusion_bytes = 123456;
         let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();

@@ -58,7 +58,12 @@ pub fn print_acc_vs_time(title: &str, runs: &[RunResult]) {
 /// Fig. 11: validation accuracy vs time, dist-vs-mpi {SGD, ASGD}.
 pub fn fig11(artifacts: &Path, out_dir: &Path, epochs: usize) -> Result<Vec<RunResult>> {
     let runs = run_modes(
-        &[Algo::DistSgd, Algo::MpiSgd, Algo::DistAsgd, Algo::MpiAsgd],
+        &[
+            Algo::named("dist-SGD"),
+            Algo::named("mpi-SGD"),
+            Algo::named("dist-ASGD"),
+            Algo::named("mpi-ASGD"),
+        ],
         epochs,
         artifacts,
         |_| {},
@@ -67,9 +72,12 @@ pub fn fig11(artifacts: &Path, out_dir: &Path, epochs: usize) -> Result<Vec<RunR
     Ok(runs)
 }
 
-/// Fig. 12: average epoch time (seconds) for all six modes.
+/// Fig. 12: average epoch time (seconds) for all six paper modes. The
+/// sweep is derived from the registry (`paper_mode` entries, dist block
+/// first), so the CSV regenerates identically while new registered
+/// algorithms stay out of the paper figure.
 pub fn fig12(artifacts: &Path, out_dir: &Path, epochs: usize) -> Result<Vec<(String, f64)>> {
-    let runs = run_modes(&Algo::ALL, epochs, artifacts, |_| {})?;
+    let runs = run_modes(&Algo::paper_modes(), epochs, artifacts, |_| {})?;
     let bars: Vec<(String, f64)> = runs
         .iter()
         .map(|r| (r.label.clone(), r.avg_epoch_time))
@@ -88,7 +96,12 @@ pub fn fig12(artifacts: &Path, out_dir: &Path, epochs: usize) -> Result<Vec<(Str
 /// Fig. 13: ESGD family — mpi-ESGD vs dist-ESGD vs mpi-SGD vs mpi-ASGD.
 pub fn fig13(artifacts: &Path, out_dir: &Path, epochs: usize) -> Result<Vec<RunResult>> {
     let runs = run_modes(
-        &[Algo::MpiEsgd, Algo::DistEsgd, Algo::MpiSgd, Algo::MpiAsgd],
+        &[
+            Algo::named("mpi-ESGD"),
+            Algo::named("dist-ESGD"),
+            Algo::named("mpi-SGD"),
+            Algo::named("mpi-ASGD"),
+        ],
         epochs,
         artifacts,
         |_| {},
@@ -99,7 +112,12 @@ pub fn fig13(artifacts: &Path, out_dir: &Path, epochs: usize) -> Result<Vec<RunR
 
 /// Fig. 14: multi-epoch run, mpi-ESGD vs mpi-SGD (paper reaches 0.67).
 pub fn fig14(artifacts: &Path, out_dir: &Path, epochs: usize) -> Result<Vec<RunResult>> {
-    let runs = run_modes(&[Algo::MpiEsgd, Algo::MpiSgd], epochs, artifacts, |_| {})?;
+    let runs = run_modes(
+        &[Algo::named("mpi-ESGD"), Algo::named("mpi-SGD")],
+        epochs,
+        artifacts,
+        |_| {},
+    )?;
     write_runs_csv(&out_dir.join("fig14_esgd_epochs.csv"), &runs)?;
     Ok(runs)
 }
@@ -107,7 +125,7 @@ pub fn fig14(artifacts: &Path, out_dir: &Path, epochs: usize) -> Result<Vec<RunR
 /// Fig. 16: learning curve in the pure-MPI configuration of testbed2
 /// (#servers = 0, mpi-SGD over one client of all workers).
 pub fn fig16(artifacts: &Path, out_dir: &Path, epochs: usize) -> Result<Vec<RunResult>> {
-    let runs = run_modes(&[Algo::MpiSgd], epochs, artifacts, |cfg| {
+    let runs = run_modes(&[Algo::named("mpi-SGD")], epochs, artifacts, |cfg| {
         cfg.servers = 0;
         cfg.clients = 1;
         cfg.testbed = "minsky".into();
@@ -136,7 +154,7 @@ pub fn fig16(artifacts: &Path, out_dir: &Path, epochs: usize) -> Result<Vec<RunR
 /// The kill lands mid-run (half the iteration budget); CSV:
 /// `fig_churn.csv`.
 pub fn fig_churn(artifacts: &Path, out_dir: &Path, epochs: usize) -> Result<Vec<RunResult>> {
-    let base = fig_base(Algo::MpiSgd, epochs);
+    let base = fig_base(Algo::named("mpi-SGD"), epochs);
     let iters_per_epoch =
         (base.samples_per_epoch / (base.workers as u64 * base.batch as u64)).max(1);
     // Mid-run kill, earlier straggle; both clear of the final ESGD
@@ -147,9 +165,9 @@ pub fn fig_churn(artifacts: &Path, out_dir: &Path, epochs: usize) -> Result<Vec<
 
     let mut runs = Vec::new();
     for (algo, servers, clients, tag) in [
-        (Algo::MpiSgd, 2usize, 2usize, "hybrid"),
-        (Algo::MpiSgd, 0, 1, "pure"),
-        (Algo::MpiEsgd, 2, 2, "hybrid"),
+        (Algo::named("mpi-SGD"), 2usize, 2usize, "hybrid"),
+        (Algo::named("mpi-SGD"), 0, 1, "pure"),
+        (Algo::named("mpi-ESGD"), 2, 2, "hybrid"),
     ] {
         let mut cfg = fig_base(algo, epochs);
         cfg.servers = servers;

@@ -82,11 +82,11 @@ impl JobSpec {
         spec.rings = cfg.rings.max(1);
         spec.cost = cfg.cost_params();
         spec.group = spec.cost.gpus_per_worker.max(1);
-        spec.reconfig_every = if cfg.algo.is_elastic() {
-            cfg.interval.max(1) as u64
-        } else {
-            1
-        };
+        // Membership epochs ride the *strategy's* declared sync cadence
+        // (every iteration for sync modes, the lazy INTERVAL for
+        // ESGD/Local SGD/BMUF) — the ElasticHub schedule keys off the
+        // SyncStrategy trait, not off per-algorithm special cases.
+        spec.reconfig_every = cfg.algo.strategy().sync_every(cfg).max(1);
         spec
     }
 
@@ -748,7 +748,7 @@ mod tests {
 
     #[test]
     fn launch_dist_job_with_servers() {
-        let spec = JobSpec::from_algo(Algo::DistSgd, 3, 2, 3);
+        let spec = JobSpec::from_algo(Algo::named("dist-SGD"), 3, 2, 3);
         assert_eq!(spec.expected_pushes(), 3);
         let out = launch(&spec, |ctx| {
             if ctx.ps_rank == 0 {
@@ -769,7 +769,7 @@ mod tests {
 
     #[test]
     fn mpi_job_with_servers_masters_push() {
-        let spec = JobSpec::from_algo(Algo::MpiSgd, 4, 1, 2);
+        let spec = JobSpec::from_algo(Algo::named("mpi-SGD"), 4, 1, 2);
         assert_eq!(spec.expected_pushes(), 2);
         let out = launch(&spec, |ctx| {
             if ctx.ps_rank == 0 {
@@ -927,7 +927,7 @@ mod tests {
 
     #[test]
     fn fault_plan_on_dist_mode_rejected() {
-        let mut spec = JobSpec::from_algo(Algo::DistSgd, 2, 1, 2);
+        let mut spec = JobSpec::from_algo(Algo::named("dist-SGD"), 2, 1, 2);
         spec.fault = FaultPlan::parse("kill:1@0").unwrap();
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             launch(&spec, |_| ());

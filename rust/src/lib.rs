@@ -11,8 +11,10 @@
 //!   communication embedded in a dataflow [`engine`], the paper's
 //!   pluggable tensor [`collectives`] (ring / halving-doubling /
 //!   hierarchical + α-β-γ autotuner and gradient fusion), a network
-//!   simulator ([`netsim`]) and the distributed SGD [`trainer`]s
-//!   (dist/mpi × SGD/ASGD/ESGD).
+//!   simulator ([`netsim`]) and the distributed SGD [`trainer`]s, whose
+//!   algorithms are pluggable [`trainer::strategies`] objects behind a
+//!   string-keyed registry (the paper's dist/mpi × SGD/ASGD/ESGD modes
+//!   plus the communication-avoiding `bmuf` and `local-sgd`).
 //! * **L2/L1 (python, build-time only)** — JAX model fwd/bwd + Pallas
 //!   kernels. The AOT artifacts (`meta.json`, `init.bin`) feed
 //!   [`runtime`], whose native CPU kernels mirror the JAX models exactly

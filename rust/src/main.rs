@@ -19,13 +19,17 @@ use mxnet_mpi::metrics::Table;
 use std::path::PathBuf;
 
 fn usage() -> ! {
+    // The algorithm list is derived from the registry, so this text can
+    // never drift from the set of runnable strategies.
     eprintln!(
         "usage: mxnet-mpi <train|sim|figures|collectives|info> [flags]\n\
          flags for train/sim:\n\
-           --algo NAME            one of: {}\n\
+           --algo NAME            one of: {} (case-insensitive)\n\
            --variant NAME         model variant (default mlp)\n\
            --workers N --servers N --clients N\n\
            --epochs N --batch-epochs SAMPLES --lr F --alpha F --interval N\n\
+           --block-momentum F     BMUF block momentum eta (default 0.5)\n\
+           --warmup-iters N       local-sgd post-local warmup iterations\n\
            --collective ring|halving_doubling|hierarchical|auto\n\
            --fusion-bytes N       gradient-fusion bucket cap (0 = off)\n\
            --overlap on|off       compute/communication overlap (sim plane)\n\
@@ -35,7 +39,7 @@ fn usage() -> ! {
            --config FILE.json     load an ExperimentConfig (flags override)\n\
            --artifacts DIR        (default ./artifacts)\n\
            --out DIR              results dir (default ./results)",
-        Algo::ALL.map(|a| a.name()).join(", ")
+        Algo::names().join(", ")
     );
     std::process::exit(2);
 }
@@ -77,8 +81,13 @@ impl Args {
 
 fn build_config(args: &Args) -> Result<ExperimentConfig> {
     let algo = match args.get("algo") {
-        Some(s) => Algo::parse(s).with_context(|| format!("unknown algo {s:?}"))?,
-        None => Algo::MpiSgd,
+        Some(s) => Algo::parse(s).with_context(|| {
+            format!(
+                "unknown algo {s:?} (registered: {})",
+                Algo::names().join(", ")
+            )
+        })?,
+        None => Algo::named("mpi-SGD"),
     };
     let mut cfg = match args.get("config") {
         Some(path) => ExperimentConfig::load(std::path::Path::new(path))?,
@@ -112,6 +121,8 @@ fn build_config(args: &Args) -> Result<ExperimentConfig> {
     ovr!(lr, "lr", f32);
     ovr!(alpha, "alpha", f32);
     ovr!(interval, "interval", usize);
+    ovr!(block_momentum, "block-momentum", f32);
+    ovr!(warmup_iters, "warmup-iters", usize);
     ovr!(rings, "rings", usize);
     ovr!(fusion_bytes, "fusion-bytes", usize);
     ovr!(pipeline_chunks, "pipeline-chunks", usize);

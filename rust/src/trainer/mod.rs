@@ -11,23 +11,33 @@
 //!   [`netsim`](crate::netsim) virtual clock with the paper's testbed
 //!   α-β-γ constants, so Figs 11–14/16 regenerate deterministically on
 //!   hardware the paper's cluster does not resemble.
+//!
+//! The algorithms themselves live in neither plane: [`strategies`] holds
+//! the plane-agnostic [`SyncStrategy`](strategies::SyncStrategy) objects
+//! and the string-keyed registry both planes (and the CLI, figures, bench
+//! table and CI smoke matrix) dispatch through. Each plane runs **one**
+//! strategy execution loop; for every registered *synchronous* strategy
+//! the two loops produce bitwise-identical weight trajectories from the
+//! same seed/config (property-tested in `tests/strategies.rs`).
 
 pub mod sim;
+pub mod strategies;
 pub mod threaded;
 
 use crate::runtime::XData;
+use anyhow::Result;
 
 /// First sample index of the held-out validation shard. Training shards
 /// draw from [0, samples_per_epoch); validation draws from here up — same
 /// generative distribution, guaranteed-disjoint samples.
 pub const EVAL_OFFSET: u64 = 1 << 40;
 
-/// Whether ESGD's elastic sync fires after iteration `iter` (Fig. 8):
+/// Whether a lazy-interval sync fires after iteration `iter` (Fig. 8):
 /// every `interval` iterations *after* local progress — `(iter + 1)`, not
 /// `iter`, so iteration 0 makes local progress before any push — with
 /// `interval == 0` clamped to sync every iteration rather than dividing
-/// by zero. Shared by both execution planes so the lazy-sync schedule
-/// exists exactly once.
+/// by zero. Shared by every lazy-sync strategy (ESGD, Local SGD, BMUF) so
+/// the schedule exists exactly once.
 pub fn esgd_sync_due(iter: u64, interval: usize) -> bool {
     (iter + 1) % (interval.max(1) as u64) == 0
 }
@@ -65,4 +75,39 @@ impl TrainData {
             }
         }
     }
+}
+
+/// Validation loss/accuracy over `eval_samples` held-out samples — the
+/// one shared implementation both execution planes call (they used to
+/// carry separate copies; a drift here would silently skew every figure).
+///
+/// Same distribution as training (same mixture centers / successor
+/// table), disjoint sample indices: the held-out shard lives past
+/// [`EVAL_OFFSET`]. `eval_step` abstracts over the plane's model access
+/// ([`crate::runtime::Model`] in-process vs the threaded plane's
+/// [`crate::runtime::service::ModelHandle`]).
+pub fn evaluate(
+    data: &TrainData,
+    eval_samples: u64,
+    batch: usize,
+    w: &[f32],
+    mut eval_step: impl FnMut(&[f32], XData, Vec<i32>) -> Result<(f32, i32)>,
+) -> Result<(f64, f64)> {
+    let n_batches = (eval_samples as usize / batch).max(1);
+    let per = match data {
+        TrainData::Gaussian(_) => 1i64,
+        TrainData::Corpus { seq, .. } => *seq as i64,
+    };
+    let mut loss = 0.0f64;
+    let mut correct = 0i64;
+    let mut total = 0i64;
+    for b in 0..n_batches {
+        let start = EVAL_OFFSET + (b * batch) as u64;
+        let (x, y) = data.batch(start, batch);
+        let (l, c) = eval_step(w, x, y)?;
+        loss += l as f64;
+        correct += c as i64;
+        total += batch as i64 * per;
+    }
+    Ok((loss / n_batches as f64, correct as f64 / total as f64))
 }

@@ -7,27 +7,40 @@
 //! — 0.35 s per batch of ResNet-50 fwd+bwd, 102 MB of parameters on the
 //! wire, IB CX-4 links, a shared PS ingress (DESIGN.md §2).
 //!
-//! Asynchrony is genuine: client events (compute-done, push-arrive)
-//! interleave on the virtual clock with per-worker compute jitter, so ASGD
-//! staleness and ESGD's lazy synchronisation emerge rather than being
-//! scripted.
+//! The plane runs one of two generic strategy loops, chosen by
+//! [`SyncStrategy::synchronous`]:
+//!
+//! * **lockstep** — global rounds for deterministic synchronous strategies
+//!   (SGD, Local SGD, BMUF): every live client's gradient is computed,
+//!   the strategy's [`lockstep_round`](SyncStrategy::lockstep_round) does
+//!   the round's numerics, and a PS round is priced only when the
+//!   strategy's sync schedule fired (communication avoidance is visible
+//!   on the clock).
+//! * **event-driven** — genuine asynchrony for ASGD/ESGD: client events
+//!   (compute-done, push-arrive) interleave on the virtual clock with
+//!   per-worker compute jitter, so staleness and lazy synchronisation
+//!   emerge rather than being scripted, through the strategy's
+//!   [`on_compute`](SyncStrategy::on_compute) /
+//!   [`on_push_arrive`](SyncStrategy::on_push_arrive) hooks.
 //!
 //! **Churn** rides the same schedule as the threaded plane (the
 //! [`ElasticHub`]'s precomputed membership epochs): kills shrink a
 //! client's member set at the next boundary, joins grow it (pricing the
-//! checkpoint bootstrap), straggles slow a member. Synchronous modes stall
-//! *every* client at a membership epoch (the world rebuild is global —
-//! pure MPI's weakness); ESGD stalls only the touched client while the
-//! rest keep training against the PS — the paper's §2 graceful-degradation
-//! argument, now measurable.
+//! checkpoint bootstrap), straggles slow a member. Lockstep strategies
+//! stall *every* client at a membership epoch (the world rebuild is
+//! global — pure MPI's weakness); event-driven ones stall only the touched
+//! client while the rest keep training against the PS — the paper's §2
+//! graceful-degradation argument, now measurable.
 
-use crate::config::{Algo, ExperimentConfig};
+use crate::config::ExperimentConfig;
 use crate::launcher::{ElasticHub, JobSpec};
 use crate::metrics::{EpochRecord, RunResult};
 use crate::netsim::{CostParams, EventQueue, PsFabric, VTime};
-use crate::optimizer::SgdHyper;
 use crate::ps::Scheduler;
 use crate::runtime::{Model, ModelMeta, Runtime};
+use crate::trainer::strategies::{
+    AfterCompute, EventStep, LockstepRound, RoundClient, SyncStrategy,
+};
 use crate::trainer::TrainData;
 use crate::util::Rng;
 use anyhow::Result;
@@ -35,11 +48,11 @@ use std::path::Path;
 
 /// Per-client replica state.
 struct Client {
-    /// Local parameters (ASGD: last pulled; ESGD: local model).
+    /// Local parameters (ASGD: last pulled; lazy-sync modes: local model).
     w: Vec<f32>,
     momentum: Vec<f32>,
     now: VTime,
-    /// Iterations completed (drives epoch boundaries + ESGD INTERVAL).
+    /// Iterations completed (drives epoch boundaries + lazy INTERVALs).
     iter: u64,
     /// Static duration of one lockstep batch round (max over the client's
     /// live member workers, each with seeded speed jitter x straggle).
@@ -67,8 +80,10 @@ struct Sim<'a> {
     /// Master fan-out seconds after a pull.
     bcast_s: f64,
     fabric: PsFabric,
-    /// Server value: aggregated grads (SGD), params (ASGD), centers (ESGD).
+    /// Server value: aggregated grads (SGD), params (ASGD), centers
+    /// (ESGD), the global model (Local SGD / BMUF).
     server_w: Vec<f32>,
+    /// Server-side state buffer (momentum / BMUF's block momentum Δ).
     server_m: Vec<f32>,
     iters_per_epoch: u64,
     records: Vec<EpochRecord>,
@@ -233,24 +248,13 @@ impl<'a> Sim<'a> {
         Ok((loss_sum / members.len().max(1) as f32, sum))
     }
 
+    /// Validation through the shared evaluator in trainer/mod.rs (one
+    /// implementation for both planes).
     fn evaluate(&self, w: &[f32]) -> Result<(f64, f64)> {
         let batch = self.model.meta.batch_size();
-        let n_batches = (self.cfg.eval_samples as usize / batch).max(1);
-        let per = match &self.data {
-            TrainData::Gaussian(_) => 1usize,
-            TrainData::Corpus { seq, .. } => *seq,
-        };
-        let (mut loss, mut correct, mut total) = (0.0f64, 0i64, 0i64);
-        for b in 0..n_batches {
-            // Held-out shard: same distribution, disjoint sample indices.
-            let start = crate::trainer::EVAL_OFFSET + (b * batch) as u64;
-            let (x, y) = self.data.batch(start, batch);
-            let (l, c) = self.model.eval_step(w, &x, &y)?;
-            loss += l as f64;
-            correct += c as i64;
-            total += (batch * per) as i64;
-        }
-        Ok((loss / n_batches as f64, correct as f64 / total as f64))
+        crate::trainer::evaluate(&self.data, self.cfg.eval_samples, batch, w, |w, x, y| {
+            self.model.eval_step(w, &x, &y)
+        })
     }
 
     fn record_epoch(&mut self, epoch: u64, vtime: f64, w: &[f32], train_loss: f64) -> Result<()> {
@@ -303,6 +307,17 @@ fn exposed_comm_seconds(
 /// Run a virtual-time training experiment; `vtime` in the returned records
 /// is netsim seconds.
 pub fn simulate(cfg: &ExperimentConfig, artifacts_dir: &Path) -> Result<RunResult> {
+    Ok(simulate_with_weights(cfg, artifacts_dir)?.0)
+}
+
+/// [`simulate`], additionally returning the final evaluated parameters
+/// (client 0's replica for local-model strategies, the server value
+/// otherwise) — the cross-plane bitwise equivalence property is asserted
+/// against these.
+pub fn simulate_with_weights(
+    cfg: &ExperimentConfig,
+    artifacts_dir: &Path,
+) -> Result<(RunResult, Vec<f32>)> {
     let rt = Runtime::cpu()?;
     let model = Model::load(&rt, artifacts_dir, &cfg.variant)?;
     let meta: ModelMeta = model.meta.clone();
@@ -386,59 +401,100 @@ pub fn simulate(cfg: &ExperimentConfig, artifacts_dir: &Path) -> Result<RunResul
         rng,
     };
 
-    match cfg.algo {
-        Algo::DistSgd | Algo::MpiSgd => run_sync_sgd(&mut sim)?,
-        Algo::DistAsgd | Algo::MpiAsgd => run_async(&mut sim, false)?,
-        Algo::DistEsgd | Algo::MpiEsgd => run_async(&mut sim, true)?,
+    // The one strategy dispatch of the plane: the registry object picks
+    // its flow, the flows never inspect the algorithm again.
+    let strategy = cfg.algo.strategy();
+    if strategy.synchronous() {
+        run_lockstep(&mut sim, strategy)?;
+    } else {
+        run_event(&mut sim, strategy)?;
     }
 
-    Ok(RunResult::finish(cfg.algo.name(), sim.records))
+    let w_final = if strategy.local_model() {
+        // First live client (client 0 in practice: the hub refuses plans
+        // that empty it), never a dead client's frozen replica.
+        let c0 = sim
+            .clients
+            .iter()
+            .position(|c| !c.members.is_empty())
+            .unwrap_or(0);
+        sim.clients[c0].w.clone()
+    } else {
+        sim.server_w.clone()
+    };
+    Ok((RunResult::finish(cfg.algo.name(), sim.records), w_final))
 }
 
-/// Synchronous (dist/mpi) SGD: lockstep rounds, Fig. 6 semantics.
+/// Lockstep flow for synchronous strategies (Fig. 6 semantics, plus the
+/// communication-avoiding periodic-averaging family).
 ///
 /// Membership epochs are **global barriers** here — pure MPI and sync-PS
 /// jobs rebuild every world at the boundary, so every live client pays the
 /// reconfiguration stall (this is exactly why the paper keeps the loosely
 /// coupled PS around for elasticity).
-fn run_sync_sgd(sim: &mut Sim<'_>) -> Result<()> {
+fn run_lockstep(sim: &mut Sim<'_>, strategy: &dyn SyncStrategy) -> Result<()> {
     let cfg = sim.cfg;
     let n_iters = sim.iters_per_epoch * cfg.epochs as u64;
     let bytes = cfg.virtual_model_bytes;
     for iter in 0..n_iters {
-        let live_workers = sim.live_workers();
-        // Renormalized to the live population (survivors' averages span
-        // the live set, §5's 1/mini_batch in sample terms).
-        let hyper = SgdHyper {
-            lr: cfg.lr,
-            momentum: cfg.momentum,
-            weight_decay: cfg.weight_decay,
-            rescale: 1.0 / live_workers.max(1) as f32,
-        };
-        // 1. Real math: global gradient = sum over live clients' sums.
         let live: Vec<usize> = (0..sim.clients.len())
             .filter(|&c| !sim.clients[c].members.is_empty())
             .collect();
-        let mut total_g: Vec<f32> = Vec::new();
-        let mut loss_sum = 0.0;
+        let live_workers = sim.live_workers();
+
+        // 1. Real math: every live client's gradient sum, against the
+        // strategy's model choice (one global server value, or the
+        // client's own replica).
+        let mut grads: Vec<Vec<f32>> = Vec::with_capacity(live.len());
+        let mut loss_sum = 0.0f64;
         for &c in &live {
-            let w = sim.server_w.clone();
+            let w = if strategy.local_model() {
+                sim.clients[c].w.clone()
+            } else {
+                sim.server_w.clone()
+            };
             let (loss, g) = sim.client_grad(c, iter, &w)?;
             loss_sum += loss as f64;
-            if total_g.is_empty() {
-                total_g = g;
-            } else {
-                crate::tensor::add_assign(&mut total_g, &g);
-            }
+            grads.push(g);
         }
-        let mut w = std::mem::take(&mut sim.server_w);
-        let mut mom = std::mem::take(&mut sim.server_m);
-        sim.model.sgd_update(&mut w, &total_g, &mut mom, &hyper)?;
-        sim.server_w = w;
-        sim.server_m = mom;
+        let sync = strategy.sync_due(cfg, iter);
 
-        // 2. Virtual time: compute -> intra-client allreduce -> masters
-        // push (fabric contention) -> sync server round -> pulls -> bcast.
+        // 2. Strategy numerics on the assembled round (split borrows: the
+        // round holds the server state and every live client's replica).
+        {
+            let Sim { model, clients, server_w, server_m, .. } = &mut *sim;
+            let mut grads_iter = grads.into_iter();
+            let mut round_clients: Vec<RoundClient<'_>> = Vec::with_capacity(live.len());
+            for (c, cl) in clients.iter_mut().enumerate() {
+                if cl.members.is_empty() {
+                    continue;
+                }
+                let g = grads_iter.next().expect("one gradient per live client");
+                round_clients.push(RoundClient {
+                    idx: c,
+                    members: cl.members.len(),
+                    grad: g,
+                    w: &mut cl.w,
+                    momentum: &mut cl.momentum,
+                });
+            }
+            let mut round = LockstepRound {
+                model,
+                iter,
+                sync_due: sync,
+                live_workers,
+                live_clients: live.len(),
+                servers: cfg.servers,
+                server_w,
+                server_m,
+                clients: round_clients,
+            };
+            strategy.lockstep_round(cfg, &mut round)?;
+        }
+
+        // 3. Virtual time: compute -> intra-client allreduce; on sync
+        // rounds additionally masters push (fabric contention) -> sync
+        // server round -> pulls -> bcast.
         let mut arrivals: Vec<(usize, VTime)> = live
             .iter()
             .map(|&c| {
@@ -448,9 +504,11 @@ fn run_sync_sgd(sim: &mut Sim<'_>) -> Result<()> {
             .collect();
         arrivals.sort_by(|a, b| a.1.total_cmp(&b.1));
         let loss_avg = loss_sum / live.len().max(1) as f64;
-        if cfg.servers == 0 {
-            // Pure MPI (#servers = 0, §4.2.4): PushPull *is* the allreduce;
-            // no PS round-trip. (Single client: allreduce_s covers comm.)
+        if !sync || cfg.servers == 0 {
+            // No PS round: a communication-avoided iteration (lazy
+            // strategies between syncs), or pure MPI (#servers = 0,
+            // §4.2.4) where PushPull *is* the allreduce already priced in
+            // comm_s. (Single client: allreduce_s covers comm.)
             for &(c, at) in &arrivals {
                 sim.clients[c].now = at;
                 sim.clients[c].iter += 1;
@@ -469,7 +527,7 @@ fn run_sync_sgd(sim: &mut Sim<'_>) -> Result<()> {
             }
         }
 
-        // 3. Membership epoch: a global barrier for synchronous modes —
+        // 4. Membership epoch: a global barrier for lockstep strategies —
         // every live client stalls for the rebuild (the slowest survivor
         // gates everyone, plus the reconfiguration itself).
         let boundary = sim
@@ -495,8 +553,9 @@ fn run_sync_sgd(sim: &mut Sim<'_>) -> Result<()> {
 
         if (iter + 1) % sim.iters_per_epoch == 0 {
             let epoch = iter / sim.iters_per_epoch;
-            // The synchronous round (epoch) completes when the *slowest*
-            // live client has its pull — epoch time is a barrier quantity.
+            // The lockstep round (epoch) completes when the *slowest*
+            // live client has its result — epoch time is a barrier
+            // quantity.
             let vtime = sim
                 .clients
                 .iter()
@@ -505,7 +564,15 @@ fn run_sync_sgd(sim: &mut Sim<'_>) -> Result<()> {
                 .fold(0.0f64, f64::max);
             let tl = sim.clients[0].train_loss_accum / sim.iters_per_epoch as f64;
             sim.clients[0].train_loss_accum = 0.0;
-            let w = sim.server_w.clone();
+            // First *live* client's replica (defensive: the ElasticHub
+            // rejects plans that empty client 0, so this is client 0 in
+            // practice — but a frozen dead replica must never be what the
+            // validation curve evaluates).
+            let w = if strategy.local_model() {
+                sim.clients[live[0]].w.clone()
+            } else {
+                sim.server_w.clone()
+            };
             sim.record_epoch(epoch, vtime, &w, tl)?;
         }
     }
@@ -525,7 +592,7 @@ fn finish_iteration(
     let mut now = now;
     // Membership epochs: each client crosses every boundary at its own
     // pace; only touched clients stall (the others keep training against
-    // the PS — ESGD's graceful degradation under churn).
+    // the PS — the lazy-sync family's graceful degradation under churn).
     while sim
         .hub
         .as_ref()
@@ -551,28 +618,47 @@ fn finish_iteration(
     Ok(())
 }
 
-/// Asynchronous modes: ASGD (Fig. 7) and ESGD (Fig. 8) on the event queue.
-fn run_async(sim: &mut Sim<'_>, elastic: bool) -> Result<()> {
+/// Assemble the event-driven strategy context for client `c` (the split
+/// borrows of the sim state both event arms share); `grad` is `Some` at
+/// compute-done, `None` at push-arrival.
+fn event_step<'a>(
+    sim: &'a mut Sim<'_>,
+    c: usize,
+    iter: u64,
+    n_clients: usize,
+    grad: Option<Vec<f32>>,
+) -> EventStep<'a> {
+    let live_workers = sim.live_workers();
+    let live_clients = sim.clients.iter().filter(|cl| !cl.members.is_empty()).count();
+    let servers = sim.cfg.servers;
+    let Sim { model, clients, server_w, server_m, .. } = &mut *sim;
+    let cl = &mut clients[c];
+    EventStep {
+        model,
+        iter,
+        client: c,
+        members: cl.members.len(),
+        n_clients,
+        live_workers,
+        live_clients,
+        servers,
+        w: &mut cl.w,
+        momentum: &mut cl.momentum,
+        server_w,
+        server_m,
+        outbox: &mut cl.grad_outbox,
+        grad,
+    }
+}
+
+/// Event-driven flow for asynchronous strategies (ASGD Fig. 7, ESGD
+/// Fig. 8) on the event queue.
+fn run_event(sim: &mut Sim<'_>, strategy: &dyn SyncStrategy) -> Result<()> {
     let cfg = sim.cfg;
     let bytes = cfg.virtual_model_bytes;
-    // Plain SGD for the async modes (Figs 7-8): momentum on stale or
-    // locally-diverging gradients compounds and blows up. The rescale is
-    // per-client (its live member count — renormalized under churn).
-    let base_hyper = SgdHyper {
-        lr: cfg.lr,
-        momentum: 0.0,
-        weight_decay: cfg.weight_decay,
-        rescale: 1.0,
-    };
-    // ASGD server updates: C clients fire independently, so the aggregate
-    // step per "wave" is C times one update; scale the server lr so the
-    // aggregate matches the synchronous rate (standard async-SGD
-    // stabilization; without it the tight synthetic task diverges).
-    let server_hyper = SgdHyper {
-        lr: cfg.lr / sim.clients.len() as f32,
-        ..base_hyper
-    };
-    let alpha = cfg.alpha;
+    // Launch-time client count: the async server-lr stabilization
+    // denominator stays fixed through churn.
+    let n_clients = sim.clients.len();
 
     let mut q: EventQueue<Ev> = EventQueue::new();
     for c in 0..sim.clients.len() {
@@ -586,60 +672,27 @@ fn run_async(sim: &mut Sim<'_>, elastic: bool) -> Result<()> {
                 let w_snapshot = sim.clients[c].w.clone();
                 let (loss, g) = sim.client_grad(c, iter, &w_snapshot)?;
                 sim.clients[c].train_loss_accum += loss as f64;
-                let local_hyper = SgdHyper {
-                    rescale: 1.0 / sim.clients[c].members.len().max(1) as f32,
-                    ..base_hyper
+                let action = {
+                    let mut st = event_step(sim, c, iter, n_clients, Some(g));
+                    strategy.on_compute(cfg, &mut st)?
                 };
-
-                if elastic {
-                    // Local SGD step every iteration (Fig. 8 l.13).
-                    let mut w = std::mem::take(&mut sim.clients[c].w);
-                    let mut mom = std::mem::take(&mut sim.clients[c].momentum);
-                    sim.model.sgd_update(&mut w, &g, &mut mom, &local_hyper)?;
-                    sim.clients[c].w = w;
-                    sim.clients[c].momentum = mom;
-                    // Fig. 8's lazy sync schedule (shared helper).
-                    if crate::trainer::esgd_sync_due(iter, cfg.interval) {
+                match action {
+                    AfterCompute::Push => {
                         let arrive = sim.fabric.push(at, c, bytes);
                         q.push(arrive, Ev::PushArrive { c, iter });
-                    } else {
-                        finish_iteration(sim, &mut q, c, iter, at)?;
                     }
-                } else {
-                    // ASGD: gradient goes to the PS; applied on arrival.
-                    sim.clients[c].grad_outbox = Some(g);
-                    let arrive = sim.fabric.push(at, c, bytes);
-                    q.push(arrive, Ev::PushArrive { c, iter });
+                    AfterCompute::Local => finish_iteration(sim, &mut q, c, iter, at)?,
                 }
             }
             Ev::PushArrive { c, iter } => {
-                if elastic {
-                    // Server: Elastic1 on the pushed params (eq. 2).
-                    let w_c = sim.clients[c].w.clone();
-                    let mut center = std::mem::take(&mut sim.server_w);
-                    sim.model.elastic1(&mut center, &w_c, alpha)?;
-                    sim.server_w = center;
-                    // Client pulls the updated center, applies Elastic2
-                    // (Fig. 8 l.11-12).
-                    let pulled_at = sim.fabric.pull(at, c, bytes) + sim.bcast_s;
-                    let center = sim.server_w.clone();
-                    let mut w = std::mem::take(&mut sim.clients[c].w);
-                    sim.model.elastic2(&mut w, &center, alpha)?;
-                    sim.clients[c].w = w;
-                    finish_iteration(sim, &mut q, c, iter, pulled_at)?;
-                } else {
-                    // Server applies the gradient in arrival order —
-                    // genuine staleness.
-                    let g = sim.clients[c].grad_outbox.take().expect("grad in flight");
-                    let mut w = std::mem::take(&mut sim.server_w);
-                    let mut mom = std::mem::take(&mut sim.server_m);
-                    sim.model.sgd_update(&mut w, &g, &mut mom, &server_hyper)?;
-                    sim.server_w = w;
-                    sim.server_m = mom;
-                    let pulled_at = sim.fabric.pull(at, c, bytes) + sim.bcast_s;
-                    sim.clients[c].w = sim.server_w.clone();
-                    finish_iteration(sim, &mut q, c, iter, pulled_at)?;
+                // Timing first (the fabric never reads weights), then the
+                // strategy's server-merge + pull-merge numerics.
+                let pulled_at = sim.fabric.pull(at, c, bytes) + sim.bcast_s;
+                {
+                    let mut st = event_step(sim, c, iter, n_clients, None);
+                    strategy.on_push_arrive(cfg, &mut st)?;
                 }
+                finish_iteration(sim, &mut q, c, iter, pulled_at)?;
             }
         }
     }

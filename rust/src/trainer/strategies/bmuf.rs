@@ -1,0 +1,169 @@
+//! BMUF — Blockwise Model Update Filtering (Chen & Huo, ICASSP 2016):
+//! Local SGD's periodic model averaging, with the *server* treating each
+//! block's averaged model delta as a filtered update:
+//!
+//! ```text
+//! w̄    = mean over clients of the block's final replicas
+//! Δ_t  = η Δ_{t-1} + (w̄ - G_{t-1})      (block momentum η = cfg.block_momentum)
+//! G_t  = G_{t-1} + Δ_t
+//! ```
+//!
+//! Plain averaging (η = 0) discards the optimization momentum a block
+//! represents; the filter re-injects it, which is what lets BMUF keep
+//! sync intervals long (communication-avoiding) without the convergence
+//! penalty. Registered as one MPI-grouped name; a single file + one
+//! registration line, no execution-loop edits — the second proof of the
+//! [`SyncStrategy`] seam.
+
+use super::{
+    client_local_step, push_pull_model, round_averaged_model, round_local_steps, AlgoEntry,
+    Grouping, LockstepRound, SyncStrategy, WorkerInit, WorkerStep,
+};
+use crate::config::ExperimentConfig;
+use crate::optimizer::Optimizer;
+use crate::ps::SyncMode;
+use anyhow::Result;
+
+pub struct Bmuf;
+
+pub(crate) fn register(reg: &mut Vec<AlgoEntry>) {
+    reg.push(AlgoEntry {
+        name: "bmuf".to_string(),
+        grouping: Grouping::Mpi,
+        strategy: &Bmuf,
+        paper_mode: false,
+        sync_pattern: "periodic block-momentum-filtered model averaging",
+        comm_per_iter: "full model push+pull / INTERVAL (none between syncs)",
+        reference: "Chen & Huo, ICASSP 2016; paper §7 outlook",
+    });
+}
+
+/// The block-momentum filter, shared verbatim by the PS-side optimizer
+/// (threaded plane) and the lockstep hook (sim plane) so the two planes
+/// cannot drift: `Δ = η Δ + (w̄ - G); G += Δ`, elementwise.
+pub(crate) fn bmuf_apply(g: &mut [f32], delta: &mut [f32], avg: &[f32], eta: f32) {
+    for i in 0..g.len() {
+        delta[i] = eta * delta[i] + (avg[i] - g[i]);
+        g[i] += delta[i];
+    }
+}
+
+/// Server-side BMUF optimizer: the stored value is the filtered global
+/// model `G`; the aggregated push (pre-scaled replicas) is the block
+/// average `w̄`. Per-key Δ buffers, like [`crate::optimizer::Sgd`]'s
+/// momentum.
+pub struct BlockMomentum {
+    pub eta: f32,
+    delta: std::collections::HashMap<usize, Vec<f32>>,
+}
+
+impl BlockMomentum {
+    pub fn new(eta: f32) -> Self {
+        Self { eta, delta: Default::default() }
+    }
+}
+
+impl Optimizer for BlockMomentum {
+    fn update(&mut self, key: usize, stored: &mut [f32], avg: &[f32]) {
+        let d = self
+            .delta
+            .entry(key)
+            .or_insert_with(|| vec![0.0; stored.len()]);
+        assert_eq!(d.len(), stored.len());
+        bmuf_apply(stored, d, avg, self.eta);
+    }
+
+    fn name(&self) -> &'static str {
+        "block-momentum"
+    }
+}
+
+impl SyncStrategy for Bmuf {
+    fn server_mode(&self) -> SyncMode {
+        SyncMode::Sync
+    }
+
+    fn synchronous(&self) -> bool {
+        true
+    }
+
+    fn local_model(&self) -> bool {
+        true
+    }
+
+    fn local_momentum(&self, cfg: &ExperimentConfig) -> f32 {
+        cfg.momentum
+    }
+
+    fn aggregated_workers(&self, m_live: usize, _live_workers: usize) -> usize {
+        m_live
+    }
+
+    fn sync_every(&self, cfg: &ExperimentConfig) -> u64 {
+        cfg.interval.max(1) as u64
+    }
+
+    fn sync_due(&self, cfg: &ExperimentConfig, iter: u64) -> bool {
+        crate::trainer::esgd_sync_due(iter, cfg.interval)
+    }
+
+    // --- threaded plane ----------------------------------------------------
+
+    fn init(&self, cfg: &ExperimentConfig, ini: &mut WorkerInit<'_>) -> Result<()> {
+        // The filtered global model and its Δ buffer live on the PS:
+        // serverless push/pull has no store for them.
+        anyhow::ensure!(
+            cfg.servers > 0,
+            "bmuf requires at least one PS server (the block-momentum \
+             filter runs on the PS)"
+        );
+        // Keys hold the filtered global model G (init = the shared init
+        // params); the PS runs the block-momentum filter on each block's
+        // aggregated average.
+        for (k, part) in ini.init_parts.iter().enumerate() {
+            ini.kv.init(k, part.clone(), ini.is_root);
+        }
+        if ini.is_root {
+            let eta = cfg.block_momentum;
+            ini.kv
+                .set_optimizer(move || Box::new(BlockMomentum::new(eta)));
+        }
+        Ok(())
+    }
+
+    fn step(&self, cfg: &ExperimentConfig, st: &mut WorkerStep<'_>) -> Result<()> {
+        // Identical wire protocol to local-sgd (the shared framework
+        // helpers): only the server-side filter differs, and that was
+        // shipped at init.
+        client_local_step(st)?;
+        if self.sync_due(cfg, st.iter) {
+            push_pull_model(st)?;
+        }
+        Ok(())
+    }
+
+    // --- sim plane ---------------------------------------------------------
+
+    fn lockstep_round(
+        &self,
+        cfg: &ExperimentConfig,
+        round: &mut LockstepRound<'_>,
+    ) -> Result<()> {
+        anyhow::ensure!(
+            round.servers > 0,
+            "bmuf requires at least one PS server (the block-momentum \
+             filter runs on the PS)"
+        );
+        round_local_steps(self, cfg, round)?;
+        if round.sync_due {
+            let avg = round_averaged_model(round);
+            // G lives in server_w, Δ in server_m — the same filter the
+            // threaded PS runs (`bmuf_apply`), bit for bit.
+            bmuf_apply(round.server_w, round.server_m, &avg, cfg.block_momentum);
+            for rc in round.clients.iter_mut() {
+                rc.w.clone_from(round.server_w);
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,123 @@
+//! Elastic Averaging SGD (paper Fig. 8, §5): the server runs `Elastic1`
+//! (eq. 2) on pushed *weights*; every `INTERVAL` iterations the worker
+//! pushes its params, pulls the centers and applies `Elastic2` (eq. 3);
+//! plain SGD locally in between. The first §7 communication-avoiding
+//! algorithm — [`bmuf`](super::bmuf) and [`local_sgd`](super::local_sgd)
+//! follow the trail it blazed.
+
+use super::{
+    client_local_step, local_hyper, push_pull_scaled, AfterCompute, AlgoEntry, EventStep,
+    Grouping, SyncStrategy, WorkerInit, WorkerStep,
+};
+use crate::config::ExperimentConfig;
+use crate::optimizer::Elastic1;
+use crate::ps::SyncMode;
+use anyhow::Result;
+
+pub struct Esgd;
+
+pub(crate) fn register(reg: &mut Vec<AlgoEntry>) {
+    for grouping in [Grouping::Dist, Grouping::Mpi] {
+        reg.push(AlgoEntry {
+            name: format!("{}-ESGD", grouping.name()),
+            grouping,
+            strategy: &Esgd,
+            paper_mode: true,
+            sync_pattern: "async elastic averaging every INTERVAL iterations",
+            comm_per_iter: "full model (params out, centers back) / INTERVAL",
+            reference: "Fig. 8, Figs 13-14",
+        });
+    }
+}
+
+impl SyncStrategy for Esgd {
+    fn server_mode(&self) -> SyncMode {
+        SyncMode::Async
+    }
+
+    fn synchronous(&self) -> bool {
+        false
+    }
+
+    fn local_model(&self) -> bool {
+        true
+    }
+
+    fn aggregated_workers(&self, m_live: usize, _live_workers: usize) -> usize {
+        // Intra-client sync SGD between elastic syncs (§5): the client's
+        // live members' gradients are averaged every iteration (dist
+        // grouping degenerates to m_live == 1).
+        m_live
+    }
+
+    fn sync_every(&self, cfg: &ExperimentConfig) -> u64 {
+        cfg.interval.max(1) as u64
+    }
+
+    fn sync_due(&self, cfg: &ExperimentConfig, iter: u64) -> bool {
+        crate::trainer::esgd_sync_due(iter, cfg.interval)
+    }
+
+    // --- threaded plane ----------------------------------------------------
+
+    fn init(&self, cfg: &ExperimentConfig, ini: &mut WorkerInit<'_>) -> Result<()> {
+        // Keys hold center variables (Fig. 8).
+        for (k, part) in ini.init_parts.iter().enumerate() {
+            ini.kv.init(k, part.clone(), ini.is_root);
+        }
+        if ini.is_root {
+            let alpha = cfg.alpha;
+            ini.kv.set_optimizer(move || Box::new(Elastic1 { alpha }));
+        }
+        Ok(())
+    }
+
+    fn step(&self, cfg: &ExperimentConfig, st: &mut WorkerStep<'_>) -> Result<()> {
+        // Fig. 8. MPI clients keep replicas in lockstep by averaging
+        // gradients inside the client each iteration (sync SGD within the
+        // communicator, §5; the shared framework helper) — dist grouping
+        // has single-member clients, so the allreduce is skipped there.
+        client_local_step(st)?;
+        // Fig. 8's lazy sync schedule (shared helper).
+        if self.sync_due(cfg, st.iter) {
+            // Push params (Fig. 8 l.10) through the shared wire block. The
+            // MPI kvstore's push ring-SUMS across the client; replicas are
+            // kept in lockstep, so pre-scale by 1/m to push the client
+            // average (= w) rather than m*w. The pull returns the centers.
+            let c = push_pull_scaled(st, 1.0 / st.m_live as f32)?;
+            st.model.elastic2(st.w, &c, cfg.alpha)?; // Fig. 8 l.12
+        }
+        Ok(())
+    }
+
+    // --- sim plane ---------------------------------------------------------
+
+    fn on_compute(
+        &self,
+        cfg: &ExperimentConfig,
+        st: &mut EventStep<'_>,
+    ) -> Result<AfterCompute> {
+        // Local SGD step every iteration (Fig. 8 l.13).
+        let hyper = local_hyper(self, cfg, &*st);
+        let g = st.grad.take().expect("gradient at compute-done");
+        st.model.sgd_update(st.w, &g, st.momentum, &hyper)?;
+        // Fig. 8's lazy sync schedule (shared helper).
+        if self.sync_due(cfg, st.iter) {
+            Ok(AfterCompute::Push)
+        } else {
+            Ok(AfterCompute::Local)
+        }
+    }
+
+    fn on_push_arrive(&self, cfg: &ExperimentConfig, st: &mut EventStep<'_>) -> Result<()> {
+        let alpha = cfg.alpha;
+        // Server: Elastic1 on the pushed params (eq. 2).
+        let w_c = st.w.clone();
+        st.model.elastic1(st.server_w, &w_c, alpha)?;
+        // Client pulls the updated center, applies Elastic2 (Fig. 8
+        // l.11-12).
+        let center = st.server_w.clone();
+        st.model.elastic2(st.w, &center, alpha)?;
+        Ok(())
+    }
+}

@@ -1,0 +1,782 @@
+//! The pluggable algorithm layer: a plane-agnostic [`SyncStrategy`] trait
+//! plus a string-keyed registry of algorithms.
+//!
+//! The paper's central API claim (§7) is that embedding MPI groups in the
+//! PS task model "allows for novel communication avoiding algorithms that
+//! do parameter averaging" — Elastic SGD being only the first instance.
+//! This module is that seam made concrete:
+//!
+//! * [`SyncStrategy`] — one trait per *algorithm family member*, with
+//!   hooks for both execution planes: framework wiring (server discipline,
+//!   KVStore type, rescale denominators, sync cadence), the threaded
+//!   plane's per-iteration body ([`SyncStrategy::init`] /
+//!   [`SyncStrategy::step`] against the real KVStore-MPI stack), and the
+//!   sim plane's numerics ([`SyncStrategy::lockstep_round`] for
+//!   deterministic synchronous strategies, [`SyncStrategy::on_compute`] /
+//!   [`SyncStrategy::on_push_arrive`] for event-driven asynchronous ones).
+//! * [`CommPlane`] — the narrow view of an execution plane a strategy is
+//!   allowed to assume: live group/job/client counts and the PS server
+//!   count. Both planes' step contexts implement it, so shared per-update
+//!   logic ([`local_hyper`], [`model_push_scale`]) exists exactly once.
+//! * [`registry`] — the string-keyed algorithm table. One file per
+//!   algorithm; adding an algorithm is one new file plus one registration
+//!   line below. `--algo` parsing, usage text, figure sweeps, the CI
+//!   smoke matrix and the bench table are all derived from this table, so
+//!   none of them can drift from reality.
+//!
+//! The `dist-`/`mpi-` prefix of the paper's six §7 modes is **framework**
+//! state, not algorithm state: a [`Grouping`] on the registry entry. The
+//! three paper algorithms (SGD/ASGD/ESGD) each register a dist+mpi pair
+//! over one shared strategy object; the communication-avoiding additions
+//! ([`bmuf`], [`local_sgd`]) register a single MPI-grouped name.
+
+pub mod asgd;
+pub mod bmuf;
+pub mod esgd;
+pub mod local_sgd;
+pub mod sgd;
+
+use crate::config::ExperimentConfig;
+use crate::kvstore::{KvType, KvWorker};
+use crate::optimizer::SgdHyper;
+use crate::ps::SyncMode;
+use crate::runtime::service::ModelHandle;
+use crate::runtime::Model;
+use crate::tensor::SegmentTable;
+use anyhow::Result;
+use std::sync::OnceLock;
+
+// ---------------------------------------------------------------------------
+// Plane contexts
+// ---------------------------------------------------------------------------
+
+/// The narrow, plane-agnostic view a strategy computes against: who is
+/// live, how the workers are grouped, and whether a PS exists. Implemented
+/// by the threaded plane's [`WorkerStep`] and the sim plane's
+/// [`EventStep`] / [`RoundView`].
+pub trait CommPlane {
+    /// Live member workers of this worker's MPI client (its group).
+    fn group_live(&self) -> usize;
+    /// Live workers across the whole job.
+    fn job_live(&self) -> usize;
+    /// Live MPI clients (the PS push fan-in).
+    fn client_count(&self) -> usize;
+    /// PS servers (0 = pure MPI).
+    fn servers(&self) -> usize;
+}
+
+/// §5 local-update hyper-parameters on any plane: the rescale denominator
+/// is the number of workers whose per-batch *mean* gradients were
+/// aggregated before this update ([`SyncStrategy::aggregated_workers`]).
+pub fn local_hyper(
+    s: &dyn SyncStrategy,
+    cfg: &ExperimentConfig,
+    plane: &dyn CommPlane,
+) -> SgdHyper {
+    local_hyper_counts(s, cfg, plane.group_live(), plane.job_live())
+}
+
+/// [`local_hyper`] from raw live counts — the one place the formula
+/// exists; the threaded worker loop uses this directly (before/without a
+/// step context) so the two planes cannot drift.
+pub fn local_hyper_counts(
+    s: &dyn SyncStrategy,
+    cfg: &ExperimentConfig,
+    group_live: usize,
+    job_live: usize,
+) -> SgdHyper {
+    SgdHyper {
+        lr: cfg.lr,
+        momentum: s.local_momentum(cfg),
+        weight_decay: cfg.weight_decay,
+        rescale: 1.0 / s.aggregated_workers(group_live, job_live).max(1) as f32,
+    }
+}
+
+/// Pre-scale for a *model* push that must arrive at the PS as the global
+/// client average: the MPI kvstore's push ring-SUMS the client's
+/// `group_live` lockstep replicas and the PS sums the `client_count`
+/// master pushes, so each replica pushes `w / (m * C)`. Shared by every
+/// model-averaging strategy on both planes.
+pub fn model_push_scale(plane: &dyn CommPlane) -> f32 {
+    1.0 / (plane.group_live().max(1) * plane.client_count().max(1)) as f32
+}
+
+/// What the threaded plane hands a strategy at key-init time (before
+/// iteration 0; joiners skip this entirely and bootstrap from checkpoint).
+pub struct WorkerInit<'a> {
+    pub kv: &'a KvWorker,
+    pub segs: &'a SegmentTable,
+    /// Initial parameters, already split per key.
+    pub init_parts: &'a [Vec<f32>],
+    /// Whether this worker is PS rank 0 (sets the server optimizer).
+    pub is_root: bool,
+}
+
+/// One iteration of the threaded plane, after forward/backward produced
+/// `grads`: the strategy owns everything between the gradient and the next
+/// batch — pushes, pulls, allreduces, local updates.
+pub struct WorkerStep<'a> {
+    pub kv: &'a KvWorker,
+    pub model: &'a ModelHandle,
+    pub segs: &'a SegmentTable,
+    pub n_keys: usize,
+    pub iter: u64,
+    /// This worker's replica (strategies update it in place).
+    pub w: &'a mut Vec<f32>,
+    pub momentum: &'a mut Vec<f32>,
+    /// This iteration's per-batch mean gradient (take it).
+    pub grads: Vec<f32>,
+    /// Current local hyper (rescale renormalized to the live population).
+    pub hyper: SgdHyper,
+    pub m_live: usize,
+    pub live_workers: usize,
+    pub live_clients: usize,
+    pub servers: usize,
+}
+
+impl CommPlane for WorkerStep<'_> {
+    fn group_live(&self) -> usize {
+        self.m_live
+    }
+    fn job_live(&self) -> usize {
+        self.live_workers
+    }
+    fn client_count(&self) -> usize {
+        self.live_clients
+    }
+    fn servers(&self) -> usize {
+        self.servers
+    }
+}
+
+/// One live client's slot in a sim-plane lockstep round.
+pub struct RoundClient<'a> {
+    /// Client index in the launch population.
+    pub idx: usize,
+    /// Live members (the client's group size).
+    pub members: usize,
+    /// Sum of the members' per-batch mean gradients (member order).
+    pub grad: Vec<f32>,
+    pub w: &'a mut Vec<f32>,
+    pub momentum: &'a mut Vec<f32>,
+}
+
+/// One global round of the sim plane's lockstep flow (synchronous
+/// strategies): every live client's gradient is on the table, and the
+/// strategy owns the round's numerics — server update, model averaging,
+/// local steps.
+pub struct LockstepRound<'a> {
+    pub model: &'a Model,
+    pub iter: u64,
+    /// Whether [`SyncStrategy::sync_due`] fired for this round (the
+    /// generic loop prices the PS round / barrier only when it did).
+    pub sync_due: bool,
+    pub live_workers: usize,
+    pub live_clients: usize,
+    pub servers: usize,
+    /// Server value: aggregated grads (SGD) or the global model
+    /// (Local SGD / BMUF).
+    pub server_w: &'a mut Vec<f32>,
+    /// Server-side state buffer (momentum for SGD, block momentum Δ for
+    /// BMUF).
+    pub server_m: &'a mut Vec<f32>,
+    /// Live clients, ascending index.
+    pub clients: Vec<RoundClient<'a>>,
+}
+
+/// Per-client [`CommPlane`] view of a lockstep round.
+#[derive(Clone, Copy)]
+pub struct RoundView {
+    pub members: usize,
+    pub live_workers: usize,
+    pub live_clients: usize,
+    pub servers: usize,
+}
+
+impl LockstepRound<'_> {
+    /// The [`CommPlane`] view of client slot `i` (index into
+    /// [`LockstepRound::clients`], not the launch population).
+    pub fn view(&self, i: usize) -> RoundView {
+        RoundView {
+            members: self.clients[i].members,
+            live_workers: self.live_workers,
+            live_clients: self.live_clients,
+            servers: self.servers,
+        }
+    }
+}
+
+impl CommPlane for RoundView {
+    fn group_live(&self) -> usize {
+        self.members
+    }
+    fn job_live(&self) -> usize {
+        self.live_workers
+    }
+    fn client_count(&self) -> usize {
+        self.live_clients
+    }
+    fn servers(&self) -> usize {
+        self.servers
+    }
+}
+
+/// One event of the sim plane's event-driven flow (asynchronous
+/// strategies): a single client's compute-done or push-arrival, with the
+/// client replica and the server state both in reach.
+pub struct EventStep<'a> {
+    pub model: &'a Model,
+    pub iter: u64,
+    /// Client index in the launch population.
+    pub client: usize,
+    /// Live members of this client.
+    pub members: usize,
+    /// Launch-time client count (the async server-lr stabilization
+    /// denominator — deliberately *not* the live count, so a kill does not
+    /// change the server step size).
+    pub n_clients: usize,
+    pub live_workers: usize,
+    pub live_clients: usize,
+    pub servers: usize,
+    pub w: &'a mut Vec<f32>,
+    pub momentum: &'a mut Vec<f32>,
+    pub server_w: &'a mut Vec<f32>,
+    pub server_m: &'a mut Vec<f32>,
+    /// Gradient in flight to the PS (set at compute-done, taken at
+    /// push-arrival).
+    pub outbox: &'a mut Option<Vec<f32>>,
+    /// This iteration's gradient sum (Some at compute-done only).
+    pub grad: Option<Vec<f32>>,
+}
+
+impl CommPlane for EventStep<'_> {
+    fn group_live(&self) -> usize {
+        self.members
+    }
+    fn job_live(&self) -> usize {
+        self.live_workers
+    }
+    fn client_count(&self) -> usize {
+        self.live_clients
+    }
+    fn servers(&self) -> usize {
+        self.servers
+    }
+}
+
+/// What an asynchronous strategy does after a client's local compute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AfterCompute {
+    /// Communicate: the generic loop prices a PS push and fires
+    /// [`SyncStrategy::on_push_arrive`] when it lands.
+    Push,
+    /// No communication this iteration (lazy-sync strategies between
+    /// sync points).
+    Local,
+}
+
+// ---------------------------------------------------------------------------
+// The trait
+// ---------------------------------------------------------------------------
+
+/// A distributed-SGD algorithm, plane-agnostic: the same object drives the
+/// threaded KVStore/MPI stack and the netsim cost-model plane.
+///
+/// Wiring hooks (`server_mode`, `aggregated_workers`, `sync_every`, …)
+/// describe the algorithm to the framework; `init`/`step` are its threaded
+/// execution body; `lockstep_round` or `on_compute`/`on_push_arrive` its
+/// sim-plane numerics. Strategies hold **no mutable state** — all state
+/// lives in the plane contexts — so one `&'static` instance serves every
+/// worker thread.
+pub trait SyncStrategy: Send + Sync {
+    /// PS server aggregation discipline for this algorithm (§5).
+    fn server_mode(&self) -> SyncMode;
+
+    /// Deterministic global-lockstep semantics: with the same seed and
+    /// config, both planes produce bitwise-identical weight trajectories
+    /// (property-tested for every registered synchronous strategy in
+    /// configs whose aggregation fan-ins stay order-independent).
+    /// Synchronous strategies run the sim plane's lockstep flow;
+    /// asynchronous ones run the event-driven flow.
+    fn synchronous(&self) -> bool;
+
+    /// Whether workers train on *local replicas* (pulled/averaged models)
+    /// rather than directly against the server value. Decides which
+    /// weights the sim plane evaluates and returns.
+    fn local_model(&self) -> bool;
+
+    /// Momentum of the *local* SGD update (asynchronous strategies ship
+    /// plain SGD: momentum on stale gradients compounds and diverges).
+    fn local_momentum(&self, _cfg: &ExperimentConfig) -> f32 {
+        0.0
+    }
+
+    /// How many workers' per-batch mean gradients are aggregated before
+    /// one local update — the §5 `1/mini_batch` rescale denominator, in
+    /// worker terms. Recomputed per membership epoch under churn.
+    fn aggregated_workers(&self, m_live: usize, live_workers: usize) -> usize;
+
+    /// The algorithm mini-batch in samples (§5).
+    fn mini_batch(&self, cfg: &ExperimentConfig) -> usize {
+        cfg.workers_per_client() * cfg.batch
+    }
+
+    /// Iteration cadence of this strategy's sync boundaries: membership
+    /// epochs (elastic reconfiguration) ride these, so the
+    /// [`ElasticHub`](crate::launcher::ElasticHub) schedule keys off the
+    /// trait rather than off algorithm special cases. `1` = every
+    /// iteration is a boundary.
+    fn sync_every(&self, _cfg: &ExperimentConfig) -> u64 {
+        1
+    }
+
+    /// Whether global synchronization fires after iteration `iter`.
+    /// Must return `true` on every `sync_every` boundary iteration.
+    fn sync_due(&self, _cfg: &ExperimentConfig, _iter: u64) -> bool {
+        true
+    }
+
+    /// Mean global sync events per iteration at steady state — transient
+    /// phases (e.g. Local SGD's warmup, which syncs every iteration) are
+    /// excluded. Cost metadata for the bench table:
+    /// `virtual_model_bytes * syncs_per_iter` is the steady-state PS-bound
+    /// traffic per master per iteration.
+    fn syncs_per_iter(&self, cfg: &ExperimentConfig) -> f64 {
+        1.0 / self.sync_every(cfg).max(1) as f64
+    }
+
+    // --- threaded plane ----------------------------------------------------
+
+    /// Initialize the KVStore keys and (on the root) ship the server
+    /// optimizer. Runs once per worker before iteration 0.
+    fn init(&self, cfg: &ExperimentConfig, ini: &mut WorkerInit<'_>) -> Result<()>;
+
+    /// One iteration on the threaded plane: everything between this
+    /// batch's gradient and the next batch.
+    fn step(&self, cfg: &ExperimentConfig, st: &mut WorkerStep<'_>) -> Result<()>;
+
+    // --- sim plane ---------------------------------------------------------
+
+    /// One global lockstep round (synchronous strategies only).
+    fn lockstep_round(
+        &self,
+        cfg: &ExperimentConfig,
+        round: &mut LockstepRound<'_>,
+    ) -> Result<()> {
+        let _ = (cfg, round);
+        anyhow::bail!("strategy has no lockstep (synchronous) sim implementation")
+    }
+
+    /// Event-driven compute-done numerics (asynchronous strategies only):
+    /// local update and the push/no-push decision.
+    fn on_compute(
+        &self,
+        cfg: &ExperimentConfig,
+        st: &mut EventStep<'_>,
+    ) -> Result<AfterCompute> {
+        let _ = (cfg, st);
+        anyhow::bail!("strategy has no event-driven sim implementation")
+    }
+
+    /// Event-driven push-arrival numerics (asynchronous strategies only):
+    /// server merge plus the client's pull merge.
+    fn on_push_arrive(&self, cfg: &ExperimentConfig, st: &mut EventStep<'_>) -> Result<()> {
+        let _ = (cfg, st);
+        anyhow::bail!("strategy has no event-driven sim implementation")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+/// How a registered algorithm groups its workers — the `dist-`/`mpi-`
+/// prefix of the paper's §7 mode names, factored into the framework.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Grouping {
+    /// One worker per client, every worker talks to the PS (§2.3's
+    /// hot-spot baseline).
+    Dist,
+    /// Workers grouped into MPI clients; only masters talk to the PS.
+    Mpi,
+}
+
+impl Grouping {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Grouping::Dist => "dist",
+            Grouping::Mpi => "mpi",
+        }
+    }
+}
+
+/// One registered algorithm: a name, a grouping, the strategy object and
+/// the documentation metadata the README table / bench rows are built
+/// from.
+pub struct AlgoEntry {
+    pub name: String,
+    pub grouping: Grouping,
+    pub strategy: &'static dyn SyncStrategy,
+    /// One of the six §7 paper modes (the Fig. 12 sweep — new algorithms
+    /// stay out so the paper figures regenerate unchanged).
+    pub paper_mode: bool,
+    /// Human description of the sync pattern (docs/bench).
+    pub sync_pattern: &'static str,
+    /// Human description of communication volume per iteration (docs).
+    pub comm_per_iter: &'static str,
+    /// Paper / figure reference (docs).
+    pub reference: &'static str,
+}
+
+/// The algorithm registry. One registration call per strategy file —
+/// adding an algorithm is a new file in `trainer/strategies/` plus one
+/// line here.
+pub fn registry() -> &'static [AlgoEntry] {
+    static REGISTRY: OnceLock<Vec<AlgoEntry>> = OnceLock::new();
+    REGISTRY.get_or_init(|| {
+        let mut reg = Vec::new();
+        sgd::register(&mut reg);
+        asgd::register(&mut reg);
+        esgd::register(&mut reg);
+        bmuf::register(&mut reg);
+        local_sgd::register(&mut reg);
+        let mut seen = std::collections::HashSet::new();
+        for e in &reg {
+            assert!(
+                seen.insert(e.name.to_ascii_lowercase()),
+                "duplicate algorithm registration: {}",
+                e.name
+            );
+        }
+        reg
+    })
+}
+
+/// A registered algorithm handle — the open-world replacement for the old
+/// closed `Algo` enum. Copyable, comparable, and resolved by *name*
+/// through [`registry`].
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub struct Algo(u16);
+
+impl Algo {
+    /// Case-insensitive name lookup.
+    pub fn parse(s: &str) -> Option<Algo> {
+        registry()
+            .iter()
+            .position(|e| e.name.eq_ignore_ascii_case(s))
+            .map(|i| Algo(i as u16))
+    }
+
+    /// Name lookup that panics (with the registered names) on a miss —
+    /// for code paths where the name is a compile-time literal.
+    pub fn named(s: &str) -> Algo {
+        Self::parse(s).unwrap_or_else(|| {
+            panic!(
+                "unknown algo {s:?} (registered: {})",
+                Self::names().join(", ")
+            )
+        })
+    }
+
+    /// Every registered algorithm, registration order.
+    pub fn all() -> Vec<Algo> {
+        (0..registry().len()).map(|i| Algo(i as u16)).collect()
+    }
+
+    /// Every registered name, registration order (usage text, errors).
+    pub fn names() -> Vec<&'static str> {
+        registry().iter().map(|e| e.name.as_str()).collect()
+    }
+
+    /// The six §7 paper modes in the paper's presentation order (the three
+    /// dist modes, then the three mpi modes) — the Fig. 12 sweep.
+    pub fn paper_modes() -> Vec<Algo> {
+        let mut v: Vec<Algo> = Self::all()
+            .into_iter()
+            .filter(|a| a.entry().paper_mode)
+            .collect();
+        v.sort_by_key(|a| a.grouping());
+        v
+    }
+
+    pub fn entry(&self) -> &'static AlgoEntry {
+        &registry()[self.0 as usize]
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.entry().name.as_str()
+    }
+
+    pub fn strategy(&self) -> &'static dyn SyncStrategy {
+        self.entry().strategy
+    }
+
+    pub fn grouping(&self) -> Grouping {
+        self.entry().grouping
+    }
+
+    pub fn is_mpi(&self) -> bool {
+        self.grouping() == Grouping::Mpi
+    }
+
+    /// PS server aggregation discipline (delegates to the strategy).
+    pub fn server_mode(&self) -> SyncMode {
+        self.strategy().server_mode()
+    }
+
+    /// KVStore type of §4.2.1 — a pure framework mapping of
+    /// (grouping × server discipline), identical for every algorithm.
+    pub fn kv_type(&self) -> KvType {
+        match (self.grouping(), self.server_mode()) {
+            (Grouping::Dist, SyncMode::Sync) => KvType::DistSync,
+            (Grouping::Dist, SyncMode::Async) => KvType::DistAsync,
+            (Grouping::Mpi, SyncMode::Sync) => KvType::SyncMpi,
+            (Grouping::Mpi, SyncMode::Async) => KvType::AsyncMpi,
+        }
+    }
+}
+
+impl std::fmt::Debug for Algo {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared per-key plumbing (used by strategy `step` bodies on the threaded
+// plane; lived in trainer/threaded.rs before the strategy refactor)
+// ---------------------------------------------------------------------------
+
+/// Per-key slices of a flat vector, in key order.
+pub fn split_keys(segs: &SegmentTable, flat: &[f32]) -> Vec<Vec<f32>> {
+    (0..segs.len()).map(|k| segs.slice(flat, k).to_vec()).collect()
+}
+
+/// Inverse of [`split_keys`]: write per-key parts back into a flat vector.
+pub fn join_keys(segs: &SegmentTable, parts: &[Vec<f32>], flat: &mut [f32]) {
+    for (k, part) in parts.iter().enumerate() {
+        segs.slice_mut(flat, k).copy_from_slice(part);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared wire-protocol building blocks (the intra-client-synchronous
+// family: ESGD / Local SGD / BMUF). One implementation each, so strategy
+// files compose them instead of carrying diverging copies.
+// ---------------------------------------------------------------------------
+
+/// Threaded plane: the shared local lockstep step — average gradients
+/// across the client's live members (ring allreduce; a no-op for
+/// single-member clients), then apply the local SGD update to this
+/// worker's replica with the step's renormalized hyper.
+pub fn client_local_step(st: &mut WorkerStep<'_>) -> Result<()> {
+    let mut g = std::mem::take(&mut st.grads);
+    if st.m_live > 1 {
+        g = st.kv.client_allreduce(g).wait();
+    }
+    st.model.sgd_update(st.w, &g, st.momentum, &st.hyper)?;
+    Ok(())
+}
+
+/// Threaded plane: push this worker's replica pre-scaled by `scale` (per
+/// key, through the MPI kvstore: the client ring sums the `m` lockstep
+/// replicas, masters ZPush), then pull the server's merged per-key values
+/// back as one flat vector. The wire block every model-pushing strategy
+/// shares — ESGD pulls *centers* to elastic-merge, Local SGD/BMUF pull
+/// the averaged/filtered global model to adopt.
+pub fn push_pull_scaled(st: &mut WorkerStep<'_>, scale: f32) -> Result<Vec<f32>> {
+    let mut w_push = st.w.clone();
+    crate::tensor::scale(&mut w_push, scale);
+    let parts = split_keys(st.segs, &w_push);
+    for (k, part) in parts.into_iter().enumerate() {
+        st.kv.push(k, part);
+    }
+    let pulls: Vec<_> = (0..st.n_keys).map(|k| st.kv.pull(k)).collect();
+    let parts: Vec<Vec<f32>> = pulls.into_iter().map(|p| p.wait()).collect();
+    let mut flat = vec![0.0f32; st.w.len()];
+    join_keys(st.segs, &parts, &mut flat);
+    Ok(flat)
+}
+
+/// Threaded plane: the model-averaging sync (Local SGD / BMUF) —
+/// [`push_pull_scaled`] with the [`model_push_scale`] pre-scale (landing
+/// the global client average on the server), adopting the merged result
+/// wholesale.
+pub fn push_pull_model(st: &mut WorkerStep<'_>) -> Result<()> {
+    let scale = model_push_scale(&*st);
+    let merged = push_pull_scaled(st, scale)?;
+    *st.w = merged;
+    Ok(())
+}
+
+/// Sim plane: the shared per-client local step of a lockstep round.
+pub fn round_local_steps(
+    s: &dyn SyncStrategy,
+    cfg: &ExperimentConfig,
+    round: &mut LockstepRound<'_>,
+) -> Result<()> {
+    let (live_workers, live_clients, servers) =
+        (round.live_workers, round.live_clients, round.servers);
+    for rc in round.clients.iter_mut() {
+        let view = RoundView { members: rc.members, live_workers, live_clients, servers };
+        let hyper = local_hyper(s, cfg, &view);
+        let g = std::mem::take(&mut rc.grad);
+        round.model.sgd_update(rc.w, &g, rc.momentum, &hyper)?;
+    }
+    Ok(())
+}
+
+/// Sim plane: the mirror of [`push_pull_model`]'s aggregation — every
+/// live client's replica pre-scaled by [`model_push_scale`] and folded
+/// the way the wire folds it (see [`averaged_model`]).
+pub fn round_averaged_model(round: &LockstepRound<'_>) -> Vec<f32> {
+    let mut contribs = Vec::with_capacity(round.clients.len());
+    for (i, rc) in round.clients.iter().enumerate() {
+        let scale = model_push_scale(&round.view(i));
+        let mut t = rc.w.clone();
+        crate::tensor::scale(&mut t, scale);
+        contribs.push((rc.members, t));
+    }
+    averaged_model(contribs)
+}
+
+/// The model-averaging fold both planes share: each replica pushes
+/// `w * 1/(m*C)`, the client ring sums its `m` lockstep replicas, the PS
+/// sums the `C` client pushes. `contribs` is `(members, scaled replica)`
+/// per live client, ascending client order. (Bitwise-faithful to the
+/// threaded wire for fan-ins of <= 2 summands per fold — the cross-plane
+/// property-test domain; beyond that, equal up to f32 fold order.)
+pub fn averaged_model(contribs: Vec<(usize, Vec<f32>)>) -> Vec<f32> {
+    let mut avg: Vec<f32> = Vec::new();
+    for (members, t) in contribs {
+        // The intra-client ring sums `members` identical lockstep replicas
+        // (single-member clients contribute their vector as-is, no copy).
+        let u = if members > 1 {
+            let mut u = t.clone();
+            for _ in 1..members {
+                crate::tensor::add_assign(&mut u, &t);
+            }
+            u
+        } else {
+            t
+        };
+        if avg.is_empty() {
+            avg = u;
+        } else {
+            crate::tensor::add_assign(&mut avg, &u);
+        }
+    }
+    avg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_round_trip_case_insensitive() {
+        for a in Algo::all() {
+            assert_eq!(Algo::parse(a.name()), Some(a));
+            assert_eq!(Algo::parse(&a.name().to_ascii_uppercase()), Some(a));
+            assert_eq!(Algo::parse(&a.name().to_ascii_lowercase()), Some(a));
+        }
+        assert_eq!(Algo::parse("nope"), None);
+    }
+
+    #[test]
+    fn registry_has_all_eight_algorithms() {
+        let names = Algo::names();
+        for want in [
+            "dist-SGD",
+            "dist-ASGD",
+            "dist-ESGD",
+            "mpi-SGD",
+            "mpi-ASGD",
+            "mpi-ESGD",
+            "bmuf",
+            "local-sgd",
+        ] {
+            assert!(names.contains(&want), "missing {want} in {names:?}");
+        }
+        assert_eq!(names.len(), 8);
+    }
+
+    #[test]
+    fn paper_modes_keep_the_fig12_order() {
+        let modes: Vec<&str> = Algo::paper_modes().iter().map(|a| a.name()).collect();
+        assert_eq!(
+            modes,
+            ["dist-SGD", "dist-ASGD", "dist-ESGD", "mpi-SGD", "mpi-ASGD", "mpi-ESGD"]
+        );
+    }
+
+    #[test]
+    fn kv_types_and_server_modes_match_paper() {
+        let m = |n: &str| Algo::named(n);
+        assert_eq!(m("dist-SGD").kv_type(), KvType::DistSync);
+        assert_eq!(m("dist-ASGD").kv_type(), KvType::DistAsync);
+        assert_eq!(m("dist-ESGD").kv_type(), KvType::DistAsync);
+        assert_eq!(m("mpi-SGD").kv_type(), KvType::SyncMpi);
+        assert_eq!(m("mpi-ASGD").kv_type(), KvType::AsyncMpi);
+        assert_eq!(m("mpi-ESGD").kv_type(), KvType::AsyncMpi);
+        assert_eq!(m("bmuf").kv_type(), KvType::SyncMpi);
+        assert_eq!(m("local-sgd").kv_type(), KvType::SyncMpi);
+        assert_eq!(m("dist-SGD").server_mode(), SyncMode::Sync);
+        assert_eq!(m("mpi-SGD").server_mode(), SyncMode::Sync);
+        for a in ["dist-ASGD", "dist-ESGD", "mpi-ASGD", "mpi-ESGD"] {
+            assert_eq!(m(a).server_mode(), SyncMode::Async, "{a}");
+        }
+    }
+
+    #[test]
+    fn sync_boundaries_come_from_the_trait() {
+        let cfg = ExperimentConfig::testbed1(Algo::named("mpi-ESGD"));
+        assert_eq!(
+            Algo::named("mpi-ESGD").strategy().sync_every(&cfg),
+            cfg.interval as u64
+        );
+        assert_eq!(Algo::named("mpi-SGD").strategy().sync_every(&cfg), 1);
+        assert_eq!(Algo::named("mpi-ASGD").strategy().sync_every(&cfg), 1);
+        assert_eq!(
+            Algo::named("local-sgd").strategy().sync_every(&cfg),
+            cfg.interval as u64
+        );
+        assert_eq!(
+            Algo::named("bmuf").strategy().sync_every(&cfg),
+            cfg.interval as u64
+        );
+    }
+
+    #[test]
+    fn synchronous_flags_split_the_sim_flows() {
+        for (name, sync) in [
+            ("dist-SGD", true),
+            ("mpi-SGD", true),
+            ("dist-ASGD", false),
+            ("mpi-ASGD", false),
+            ("dist-ESGD", false),
+            ("mpi-ESGD", false),
+            ("bmuf", true),
+            ("local-sgd", true),
+        ] {
+            assert_eq!(Algo::named(name).strategy().synchronous(), sync, "{name}");
+        }
+    }
+
+    #[test]
+    fn local_sgd_warmup_schedules_every_iteration() {
+        let mut cfg = ExperimentConfig::testbed1(Algo::named("local-sgd"));
+        cfg.interval = 4;
+        cfg.warmup_iters = 3;
+        let s = Algo::named("local-sgd").strategy();
+        // Warmup: every iteration syncs.
+        assert!(s.sync_due(&cfg, 0));
+        assert!(s.sync_due(&cfg, 2));
+        // Post-warmup: only the lazy interval fires.
+        assert!(!s.sync_due(&cfg, 4));
+        assert!(s.sync_due(&cfg, 3)); // (3+1) % 4 == 0
+        assert!(s.sync_due(&cfg, 7));
+        assert!(!s.sync_due(&cfg, 8));
+    }
+}

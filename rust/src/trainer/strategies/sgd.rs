@@ -1,0 +1,141 @@
+//! Synchronous SGD (paper Fig. 6): push per-key gradients, pull the
+//! *aggregated gradient* back (the server runs `Assign`), `SGD.Update`
+//! locally with `rescale = 1/mini_batch_size`. MPI grouping pre-aggregates
+//! inside the client ring and only masters talk to the PS; with
+//! `#servers == 0` PushPull degrades to the pure-MPI allreduce (§4.2.4).
+
+use super::{
+    join_keys, local_hyper_counts, split_keys, AlgoEntry, Grouping, LockstepRound,
+    SyncStrategy, WorkerInit, WorkerStep,
+};
+use crate::config::ExperimentConfig;
+use crate::optimizer::Assign;
+use crate::ps::SyncMode;
+use anyhow::Result;
+
+pub struct Sgd;
+
+pub(crate) fn register(reg: &mut Vec<AlgoEntry>) {
+    for grouping in [Grouping::Dist, Grouping::Mpi] {
+        reg.push(AlgoEntry {
+            name: format!("{}-SGD", grouping.name()),
+            grouping,
+            strategy: &Sgd,
+            paper_mode: true,
+            sync_pattern: "global gradient aggregation every iteration",
+            comm_per_iter: "full model (gradients) push+pull per sync round",
+            reference: "Fig. 6, Figs 11-12",
+        });
+    }
+}
+
+impl SyncStrategy for Sgd {
+    fn server_mode(&self) -> SyncMode {
+        SyncMode::Sync
+    }
+
+    fn synchronous(&self) -> bool {
+        true
+    }
+
+    fn local_model(&self) -> bool {
+        // Every worker applies the identical aggregated update, so the
+        // replica IS the server trajectory.
+        false
+    }
+
+    fn local_momentum(&self, cfg: &ExperimentConfig) -> f32 {
+        // Fig. 6's local SGD.Update runs on the exact aggregated gradient,
+        // so momentum is safe here (and only here among the §5 modes).
+        cfg.momentum
+    }
+
+    fn aggregated_workers(&self, _m_live: usize, live_workers: usize) -> usize {
+        live_workers
+    }
+
+    fn mini_batch(&self, cfg: &ExperimentConfig) -> usize {
+        cfg.workers * cfg.batch
+    }
+
+    // --- threaded plane ----------------------------------------------------
+
+    fn init(&self, _cfg: &ExperimentConfig, ini: &mut WorkerInit<'_>) -> Result<()> {
+        // Keys hold aggregated gradients (Fig. 6): init zeros.
+        for k in 0..ini.init_parts.len() {
+            ini.kv
+                .init(k, vec![0.0; ini.segs.segments[k].size], ini.is_root);
+        }
+        if ini.is_root {
+            ini.kv.set_optimizer(|| Box::new(Assign));
+        }
+        Ok(())
+    }
+
+    fn step(&self, _cfg: &ExperimentConfig, st: &mut WorkerStep<'_>) -> Result<()> {
+        // Fig. 6: push grads per key, pull aggregated grads. With no
+        // servers, PushPull degrades to the pure-MPI allreduce (§4.2.4),
+        // issued as one nonblocking engine op *per fusion bucket* in
+        // backward (reverse-key) order — the order backprop emits
+        // gradients — so bucket i's SGD.Update overlaps bucket i+1's
+        // allreduce (DAG-embedded collectives, arXiv:1802.06949).
+        let grads = std::mem::take(&mut st.grads);
+        let parts = split_keys(st.segs, &grads);
+        if st.servers == 0 {
+            let keyed: Vec<(usize, Vec<f32>)> = parts.into_iter().enumerate().collect();
+            for ((i, j), pending) in st.kv.pushpull_buckets(keyed) {
+                let agg = pending.wait();
+                let lo = st.segs.segments[i].offset;
+                let hi = st.segs.segments[j - 1].offset + st.segs.segments[j - 1].size;
+                let mut g_seg = Vec::with_capacity(hi - lo);
+                for part in &agg {
+                    g_seg.extend_from_slice(part);
+                }
+                let mut w_seg = st.w[lo..hi].to_vec();
+                let mut m_seg = st.momentum[lo..hi].to_vec();
+                st.model.sgd_update(&mut w_seg, &g_seg, &mut m_seg, &st.hyper)?;
+                st.w[lo..hi].copy_from_slice(&w_seg);
+                st.momentum[lo..hi].copy_from_slice(&m_seg);
+            }
+        } else {
+            for (k, part) in parts.into_iter().enumerate() {
+                st.kv.push(k, part);
+            }
+            let pulls: Vec<_> = (0..st.n_keys).map(|k| st.kv.pull(k)).collect();
+            let agg: Vec<Vec<f32>> = pulls.into_iter().map(|p| p.wait()).collect();
+            let mut g_sum = vec![0.0f32; st.w.len()];
+            join_keys(st.segs, &agg, &mut g_sum);
+            st.model.sgd_update(st.w, &g_sum, st.momentum, &st.hyper)?;
+        }
+        Ok(())
+    }
+
+    // --- sim plane ---------------------------------------------------------
+
+    fn lockstep_round(
+        &self,
+        cfg: &ExperimentConfig,
+        round: &mut LockstepRound<'_>,
+    ) -> Result<()> {
+        // Renormalized to the live population (survivors' averages span
+        // the live set, §5's 1/mini_batch in sample terms) — through the
+        // one shared hyper formula; aggregated_workers for SGD is the
+        // global live count, so the group size is irrelevant here.
+        let group_live = round.clients.first().map_or(1, |rc| rc.members);
+        let hyper = local_hyper_counts(self, cfg, group_live, round.live_workers);
+        // Global gradient = sum over live clients' member sums, in client
+        // order (the same fold the pre-refactor trainer used).
+        let mut total_g: Vec<f32> = Vec::new();
+        for rc in &round.clients {
+            if total_g.is_empty() {
+                total_g = rc.grad.clone();
+            } else {
+                crate::tensor::add_assign(&mut total_g, &rc.grad);
+            }
+        }
+        round
+            .model
+            .sgd_update(round.server_w, &total_g, round.server_m, &hyper)?;
+        Ok(())
+    }
+}

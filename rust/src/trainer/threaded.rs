@@ -1,18 +1,13 @@
-//! The deployable threaded trainer: §5's three algorithms over the real
-//! KVStore-MPI stack (launcher -> scheduler/servers/MPI clients -> engine
-//! -> PJRT).
+//! The deployable threaded trainer: one strategy execution loop over the
+//! real KVStore-MPI stack (launcher -> scheduler/servers/MPI clients ->
+//! engine -> PJRT).
 //!
-//! Faithful to the paper's pseudo-code:
-//!
-//! * **SGD** (Fig. 6): push per-key gradients, pull the *aggregated
-//!   gradient* back (server runs `Assign`), `SGD.Update` locally with
-//!   `rescale = 1/mini_batch_size`. MPI modes pre-aggregate inside the
-//!   client ring, and only masters talk to the PS.
-//! * **ASGD** (Fig. 7): `set_optimizer(SGD, rescale)` ships the update to
-//!   the server; workers push gradients and pull *parameters*.
-//! * **ESGD** (Fig. 8): server runs `Elastic1` on pushed *weights*; every
-//!   `INTERVAL` iterations the worker pushes params, pulls centers and
-//!   applies `Elastic2`; plain SGD locally in between.
+//! The per-algorithm behaviour — what the keys hold, which optimizer the
+//! PS runs, what moves on the wire each iteration — lives entirely in
+//! [`SyncStrategy`](crate::trainer::strategies::SyncStrategy) objects
+//! resolved from the algorithm registry; this file only owns what every
+//! algorithm shares: the batch schedule, gradient computation, the
+//! membership-epoch (elasticity) protocol and validation.
 //!
 //! **Elasticity** (the PS-task half of the paper's §1–§2 thesis): with a
 //! [`FaultPlan`](crate::ps::FaultPlan) in the config, workers run through
@@ -21,14 +16,15 @@
 //! rebuilt client world and renormalize their gradient averages to the
 //! live worker count, and joiners bootstrap from the PS checkpoint blob
 //! (or by peer broadcast when `#servers == 0`), bitwise-identically to a
-//! never-left rank.
+//! never-left rank. Boundaries ride the strategy's declared sync cadence
+//! ([`SyncStrategy::sync_every`](crate::trainer::strategies::SyncStrategy::sync_every)),
+//! so elastic scheduling needs no per-algorithm special cases.
 
-use crate::config::{Algo, ExperimentConfig};
+use crate::config::ExperimentConfig;
 use crate::launcher::{launch, ElasticHub, EpochView, JobSpec, WorkerCtx};
 use crate::metrics::{EpochRecord, RunResult};
-use crate::optimizer::{Assign, Elastic1, Sgd, SgdHyper};
 use crate::runtime::service::{ModelHandle, ModelService};
-use crate::tensor::SegmentTable;
+use crate::trainer::strategies::{local_hyper_counts, split_keys, WorkerInit, WorkerStep};
 use crate::trainer::TrainData;
 use anyhow::{ensure, Context, Result};
 use std::path::PathBuf;
@@ -36,7 +32,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 /// Checkpoint blob key for a client's replica: params at `which == 0`,
-/// momentum at `which == 1`. Per-client because ESGD replicas differ
+/// momentum at `which == 1`. Per-client because lazy-sync replicas differ
 /// across clients (sync replicas are identical, so per-client is merely
 /// redundant there).
 fn ckpt_key(client: usize, which: usize) -> usize {
@@ -50,6 +46,15 @@ const STRAGGLE_BASE: std::time::Duration = std::time::Duration::from_millis(1);
 /// Train with the given config on the threaded stack; returns per-epoch
 /// records (wall-clock time axis) as measured on worker 0.
 pub fn train(cfg: &ExperimentConfig, artifacts_dir: PathBuf) -> Result<RunResult> {
+    Ok(train_with_weights(cfg, artifacts_dir)?.0)
+}
+
+/// [`train`], additionally returning worker 0's final parameters — the
+/// cross-plane bitwise equivalence property is asserted against these.
+pub fn train_with_weights(
+    cfg: &ExperimentConfig,
+    artifacts_dir: PathBuf,
+) -> Result<(RunResult, Vec<f32>)> {
     let service = ModelService::spawn(artifacts_dir, &cfg.variant)?;
     let mut spec = JobSpec::from_config(cfg);
     spec.fault = cfg.fault_plan()?;
@@ -83,86 +88,40 @@ pub fn train(cfg: &ExperimentConfig, artifacts_dir: PathBuf) -> Result<RunResult
     });
 
     // Worker 0 carries the validation records.
-    let records = results.into_iter().next().unwrap()?;
-    Ok(RunResult::finish(cfg.algo.name(), records))
-}
-
-/// Per-key slices of a flat vector, in key order.
-fn split_keys(segs: &SegmentTable, flat: &[f32]) -> Vec<Vec<f32>> {
-    (0..segs.len()).map(|k| segs.slice(flat, k).to_vec()).collect()
-}
-
-fn join_keys(segs: &SegmentTable, parts: &[Vec<f32>], flat: &mut [f32]) {
-    for (k, part) in parts.iter().enumerate() {
-        segs.slice_mut(flat, k).copy_from_slice(part);
-    }
+    let (records, w) = results.into_iter().next().unwrap()?;
+    Ok((RunResult::finish(cfg.algo.name(), records), w))
 }
 
 fn worker_loop(
     cfg: &ExperimentConfig,
     model: ModelHandle,
     ctx: WorkerCtx,
-) -> Result<Vec<EpochRecord>> {
+) -> Result<(Vec<EpochRecord>, Vec<f32>)> {
+    let strategy = cfg.algo.strategy();
     let meta = model.meta.clone();
     let segs = meta.segments.clone();
     let n_keys = segs.len();
     let data = TrainData::for_model(&meta, cfg.noise, cfg.classes, cfg.seed);
     let batch = meta.batch_size();
 
-    // --- Init: PS rank 0 initializes every key; pure MPI broadcasts.
-    // Joiners skip the whole section: every key was initialized at launch,
-    // and the serverless init path is a *collective* bcast the survivors
-    // would never re-enter — a joiner's replica comes from the bootstrap
-    // below instead.
+    // --- Init: the strategy decides what the keys hold and which
+    // optimizer the PS runs. Joiners skip the whole section: every key was
+    // initialized at launch, and serverless init paths are *collective*
+    // the survivors would never re-enter — a joiner's replica comes from
+    // the bootstrap below instead.
     let mut w = meta.init_params()?;
     let is_root = ctx.ps_rank == 0;
-    let init_parts = split_keys(&segs, &w);
-    match cfg.algo {
-        _ if ctx.join_view.is_some() => {}
-        Algo::DistSgd | Algo::MpiSgd => {
-            // Keys hold aggregated gradients (Fig. 6): init zeros.
-            for k in 0..n_keys {
-                ctx.kv.init(k, vec![0.0; segs.segments[k].size], is_root);
-            }
-            if is_root {
-                ctx.kv.set_optimizer(|| Box::new(Assign));
-            }
-        }
-        Algo::DistAsgd | Algo::MpiAsgd => {
-            // Keys hold parameters; server runs the shipped SGD (Fig. 7).
-            // Each push is one client's aggregate of `workers_per_client`
-            // per-batch *mean* gradients, so the server rescales by the
-            // worker count it aggregates (§5: 1/mini_batch_size, with our
-            // gradients already averaged over the batch dimension).
-            for (k, part) in init_parts.iter().enumerate() {
-                ctx.kv.init(k, part.clone(), is_root);
-            }
-            if is_root {
-                // Fig. 7 ships plain SGD: with several clients updating
-                // asynchronously, momentum would compound their (stale)
-                // gradients and diverge.
-                // lr is divided by the client count so the *aggregate*
-                // async step rate matches the synchronous one (standard
-                // async-SGD stabilization).
-                let hyper = SgdHyper {
-                    lr: cfg.lr / cfg.clients as f32,
-                    momentum: 0.0,
-                    weight_decay: cfg.weight_decay,
-                    rescale: 1.0 / cfg.workers_per_client() as f32,
-                };
-                ctx.kv.set_optimizer(move || Box::new(Sgd::new(hyper)));
-            }
-        }
-        Algo::DistEsgd | Algo::MpiEsgd => {
-            // Keys hold center variables (Fig. 8).
-            for (k, part) in init_parts.iter().enumerate() {
-                ctx.kv.init(k, part.clone(), is_root);
-            }
-            if is_root {
-                let alpha = cfg.alpha;
-                ctx.kv.set_optimizer(move || Box::new(Elastic1 { alpha }));
-            }
-        }
+    if ctx.join_view.is_none() {
+        let init_parts = split_keys(&segs, &w);
+        strategy.init(
+            cfg,
+            &mut WorkerInit {
+                kv: &ctx.kv,
+                segs: &segs,
+                init_parts: &init_parts,
+                is_root,
+            },
+        )?;
     }
 
     // Iteration schedule: fixed by the launch population (membership
@@ -177,26 +136,15 @@ fn worker_loop(
     })
     .batches_per_epoch()
     .max(1) as usize;
-    // Momentum is used only by the synchronous modes (Fig. 6's local
-    // SGD.Update on the exact aggregated gradient); ESGD's local updates
-    // follow Fig. 8's plain SGD.
-    let local_momentum = match cfg.algo {
-        Algo::DistSgd | Algo::MpiSgd => cfg.momentum,
-        _ => 0.0,
-    };
-    // Our gradients are per-batch *means*, so the local rescale divides by
-    // the number of workers whose gradients were aggregated before the
-    // update (§5's 1/mini_batch_size in sample terms). Recomputed per
-    // membership epoch: survivors renormalize to the live population.
-    let aggregated_workers = |m_live: usize, live_workers: usize| match cfg.algo {
-        Algo::DistSgd | Algo::MpiSgd => live_workers,
-        Algo::MpiEsgd => m_live,
-        _ => 1,
-    };
+    // Momentum policy and the §5 rescale denominator are strategy
+    // declarations; the denominator is recomputed per membership epoch so
+    // survivors renormalize to the live population.
+    let local_momentum = strategy.local_momentum(cfg);
 
     // Live-membership state, advanced at each epoch boundary.
     let mut m_live = ctx.workers_per_client;
     let mut live_workers = ctx.n_workers;
+    let mut live_clients = ctx.n_clients;
     let mut shard_worker = ctx.ps_rank;
     let mut epochs_done: u64 = 0;
     let mut straggle = 1.0f64;
@@ -204,6 +152,7 @@ fn worker_loop(
         Some(view) => {
             m_live = view.workers_per_client;
             live_workers = view.live_workers;
+            live_clients = view.live_clients;
             shard_worker = view.shard_index;
             epochs_done = view.epoch;
             straggle = view.straggle;
@@ -211,12 +160,7 @@ fn worker_loop(
         }
         None => 0,
     };
-    let mut local_hyper = SgdHyper {
-        lr: cfg.lr,
-        momentum: local_momentum,
-        weight_decay: cfg.weight_decay,
-        rescale: 1.0 / aggregated_workers(m_live, live_workers) as f32,
-    };
+    let mut local_hyper = local_hyper_counts(strategy, cfg, m_live, live_workers);
     let mut momentum = vec![0.0f32; meta.params];
 
     // Joiner bootstrap: adopt the client replica before the first step —
@@ -270,93 +214,24 @@ fn worker_loop(
             let (loss, grads) = model.grad_step(&w, x, y)?;
             train_loss_sum += loss as f64;
 
-            match cfg.algo {
-                Algo::DistSgd | Algo::MpiSgd => {
-                    // Fig. 6: push grads per key, pull aggregated grads.
-                    // With no servers, PushPull degrades to the pure-MPI
-                    // allreduce (§4.2.4), issued as one nonblocking engine
-                    // op *per fusion bucket* in backward (reverse-key)
-                    // order — the order backprop emits gradients — so
-                    // bucket i's SGD.Update overlaps bucket i+1's
-                    // allreduce (DAG-embedded collectives,
-                    // arXiv:1802.06949). Results are bitwise identical to
-                    // the old fused-then-update path: the same bucketed
-                    // sums feed the same elementwise update.
-                    let parts = split_keys(&segs, &grads);
-                    if cfg.servers == 0 {
-                        let keyed: Vec<(usize, Vec<f32>)> =
-                            parts.into_iter().enumerate().collect();
-                        for ((i, j), pending) in ctx.kv.pushpull_buckets(keyed) {
-                            let agg = pending.wait();
-                            let lo = segs.segments[i].offset;
-                            let hi = segs.segments[j - 1].offset + segs.segments[j - 1].size;
-                            let mut g_seg = Vec::with_capacity(hi - lo);
-                            for part in &agg {
-                                g_seg.extend_from_slice(part);
-                            }
-                            let mut w_seg = w[lo..hi].to_vec();
-                            let mut m_seg = momentum[lo..hi].to_vec();
-                            model.sgd_update(&mut w_seg, &g_seg, &mut m_seg, &local_hyper)?;
-                            w[lo..hi].copy_from_slice(&w_seg);
-                            momentum[lo..hi].copy_from_slice(&m_seg);
-                        }
-                    } else {
-                        for (k, part) in parts.into_iter().enumerate() {
-                            ctx.kv.push(k, part);
-                        }
-                        let pulls: Vec<_> = (0..n_keys).map(|k| ctx.kv.pull(k)).collect();
-                        let agg: Vec<Vec<f32>> =
-                            pulls.into_iter().map(|p| p.wait()).collect();
-                        let mut g_sum = vec![0.0f32; meta.params];
-                        join_keys(&segs, &agg, &mut g_sum);
-                        model.sgd_update(&mut w, &g_sum, &mut momentum, &local_hyper)?;
-                    }
-                }
-                Algo::DistAsgd | Algo::MpiAsgd => {
-                    // Fig. 7: push grads, pull params.
-                    let parts = split_keys(&segs, &grads);
-                    for (k, part) in parts.into_iter().enumerate() {
-                        ctx.kv.push(k, part);
-                    }
-                    let pulls: Vec<_> = (0..n_keys).map(|k| ctx.kv.pull(k)).collect();
-                    let parts: Vec<Vec<f32>> = pulls.into_iter().map(|p| p.wait()).collect();
-                    join_keys(&segs, &parts, &mut w);
-                }
-                Algo::DistEsgd | Algo::MpiEsgd => {
-                    // Fig. 8. For MPI clients, keep replicas in lockstep by
-                    // averaging gradients inside the client each iteration
-                    // (sync SGD within the communicator, §5) — pushpull on
-                    // a pure-MPI kvstore is the allreduce; with servers we
-                    // reuse pushpull composition only at INTERVALs, so the
-                    // intra-client allreduce here goes through the comm.
-                    let mut g = grads;
-                    if cfg.algo == Algo::MpiEsgd && m_live > 1 {
-                        // Aggregate inside the client (ring allreduce).
-                        g = ctx.kv.client_allreduce(g).wait();
-                    }
-                    model.sgd_update(&mut w, &g, &mut momentum, &local_hyper)?;
-                    // Fig. 8's lazy sync schedule (shared helper).
-                    if crate::trainer::esgd_sync_due(iter as u64, cfg.interval) {
-                        // Push params (Fig. 8 l.10). The MPI kvstore's push
-                        // ring-SUMS across the client; replicas are kept in
-                        // lockstep, so pre-scale by 1/m to push the client
-                        // average (= w) rather than m*w.
-                        let scale = 1.0 / m_live as f32;
-                        let mut w_avg = w.clone();
-                        crate::tensor::scale(&mut w_avg, scale);
-                        let parts = split_keys(&segs, &w_avg);
-                        for (k, part) in parts.into_iter().enumerate() {
-                            ctx.kv.push(k, part);
-                        }
-                        let pulls: Vec<_> = (0..n_keys).map(|k| ctx.kv.pull(k)).collect();
-                        let centers: Vec<Vec<f32>> =
-                            pulls.into_iter().map(|p| p.wait()).collect();
-                        let mut c = vec![0.0f32; meta.params];
-                        join_keys(&segs, &centers, &mut c);
-                        model.elastic2(&mut w, &c, cfg.alpha)?; // Fig. 8 l.12
-                    }
-                }
-            }
+            // The one strategy dispatch of the loop: everything between
+            // this gradient and the next batch belongs to the algorithm.
+            let mut st = WorkerStep {
+                kv: &ctx.kv,
+                model: &model,
+                segs: &segs,
+                n_keys,
+                iter: iter as u64,
+                w: &mut w,
+                momentum: &mut momentum,
+                grads,
+                hyper: local_hyper,
+                m_live,
+                live_workers,
+                live_clients,
+                servers: cfg.servers,
+            };
+            strategy.step(cfg, &mut st)?;
         }
 
         // --- membership-epoch boundary (elastic jobs only) ---------------
@@ -380,7 +255,7 @@ fn worker_loop(
                 if hub.dying_at(epochs_done).contains(&ctx.ps_rank) {
                     // Fail-stop at the boundary (cooperative preemption):
                     // no hub call — the barrier never waits on the dead.
-                    return Ok(records);
+                    return Ok((records, w));
                 }
                 let handout = hub.reconfigure(ctx.ps_rank);
                 let view = handout.view;
@@ -390,18 +265,25 @@ fn worker_loop(
                 // Survivors renormalize: averages span the live set now.
                 m_live = view.workers_per_client;
                 live_workers = view.live_workers;
+                live_clients = view.live_clients;
                 shard_worker = view.shard_index;
                 straggle = view.straggle;
                 epochs_done = view.epoch;
-                local_hyper.rescale =
-                    1.0 / aggregated_workers(m_live, live_workers) as f32;
+                local_hyper = local_hyper_counts(strategy, cfg, m_live, live_workers);
                 bootstrap_bcast(cfg, &ctx, &view, &mut w, &mut momentum, local_momentum);
             }
         }
 
-        // Validation on worker 0 (paper: after every epoch).
+        // Validation on worker 0 (paper: after every epoch), through the
+        // shared evaluator in trainer/mod.rs.
         if b == batches - 1 && ctx.ps_rank == 0 {
-            let (vl, va) = evaluate(cfg, &model, &data, &w)?;
+            let (vl, va) = crate::trainer::evaluate(
+                &data,
+                cfg.eval_samples,
+                batch,
+                &w,
+                |w, x, y| model.eval_step(w, x, y),
+            )?;
             records.push(EpochRecord {
                 epoch,
                 vtime: start.elapsed().as_secs_f64(),
@@ -413,7 +295,7 @@ fn worker_loop(
         iter += 1;
     }
     ctx.kv.wait_all();
-    Ok(records)
+    Ok((records, w))
 }
 
 /// Peer-bootstrap broadcast for serverless clients: when a client gained
@@ -441,35 +323,4 @@ fn bootstrap_bcast(
     if local_momentum != 0.0 {
         *momentum = ctx.kv.client_bcast(root, std::mem::take(momentum)).wait();
     }
-}
-
-/// Validation loss/accuracy over `cfg.eval_samples` held-out samples.
-///
-/// Same distribution as training (same mixture centers / successor
-/// table), disjoint sample indices: the held-out shard lives past
-/// [`crate::trainer::EVAL_OFFSET`].
-pub fn evaluate(
-    cfg: &ExperimentConfig,
-    model: &ModelHandle,
-    data: &TrainData,
-    w: &[f32],
-) -> Result<(f64, f64)> {
-    let batch = model.meta.batch_size();
-    let n_batches = (cfg.eval_samples as usize / batch).max(1);
-    let mut loss = 0.0f64;
-    let mut correct = 0i64;
-    let mut total = 0i64;
-    let per = match data {
-        TrainData::Gaussian(_) => 1,
-        TrainData::Corpus { seq, .. } => *seq as i64,
-    };
-    for b in 0..n_batches {
-        let start = crate::trainer::EVAL_OFFSET + (b * batch) as u64;
-        let (x, y) = data.batch(start, batch);
-        let (l, c) = model.eval_step(w, x, y)?;
-        loss += l as f64;
-        correct += c as i64;
-        total += batch as i64 * per;
-    }
-    Ok((loss / n_batches as f64, correct as f64 / total as f64))
 }

@@ -27,7 +27,7 @@ fn threaded_pure_mpi_survives_kill_mid_run() {
     // The acceptance scenario: pure sync-MPI training with a worker killed
     // mid-run reconfigures at the next membership epoch and finishes (the
     // static launcher would deadlock on the first post-kill allreduce).
-    let mut cfg = ExperimentConfig::testbed1(Algo::MpiSgd);
+    let mut cfg = ExperimentConfig::testbed1(Algo::named("mpi-SGD"));
     cfg.variant = "mlp_tiny".into();
     cfg.workers = 4;
     cfg.clients = 1;
@@ -49,7 +49,7 @@ fn threaded_pure_mpi_survives_kill_mid_run() {
 
 #[test]
 fn threaded_esgd_hybrid_trains_through_kill_and_straggle() {
-    let mut cfg = ExperimentConfig::testbed1(Algo::MpiEsgd);
+    let mut cfg = ExperimentConfig::testbed1(Algo::named("mpi-ESGD"));
     cfg.variant = "mlp_tiny".into();
     cfg.workers = 4;
     cfg.clients = 2;
@@ -69,7 +69,7 @@ fn threaded_esgd_hybrid_trains_through_kill_and_straggle() {
 fn threaded_pure_mpi_joiner_bootstraps_by_peer_bcast() {
     // Serverless join: the joiner adopts the survivors' replica via the
     // peer broadcast and the run finishes with full records.
-    let mut cfg = ExperimentConfig::testbed1(Algo::MpiSgd);
+    let mut cfg = ExperimentConfig::testbed1(Algo::named("mpi-SGD"));
     cfg.variant = "mlp_tiny".into();
     cfg.workers = 2;
     cfg.clients = 1;
@@ -86,7 +86,7 @@ fn threaded_pure_mpi_joiner_bootstraps_by_peer_bcast() {
 
 #[test]
 fn fault_past_iteration_budget_rejected() {
-    let mut cfg = ExperimentConfig::testbed1(Algo::MpiSgd);
+    let mut cfg = ExperimentConfig::testbed1(Algo::named("mpi-SGD"));
     cfg.variant = "mlp_tiny".into();
     cfg.workers = 2;
     cfg.clients = 1;
@@ -105,7 +105,7 @@ fn fault_past_iteration_budget_rejected() {
 fn joiner_bootstraps_bitwise_identical_to_survivors() {
     const N: usize = 16;
     const ITERS: u64 = 6;
-    let mut spec = JobSpec::from_algo(Algo::MpiSgd, 3, 1, 1);
+    let mut spec = JobSpec::from_algo(Algo::named("mpi-SGD"), 3, 1, 1);
     spec.fault = FaultPlan::parse("join@2").unwrap();
     let out = launch(&spec, |ctx| {
         let hub = ctx.hub.clone().expect("elastic job");
@@ -278,7 +278,7 @@ fn sim_churn_cfg(algo: Algo) -> ExperimentConfig {
 
 #[test]
 fn sim_sync_mpi_reconfigures_and_stays_deterministic() {
-    let cfg = sim_churn_cfg(Algo::MpiSgd);
+    let cfg = sim_churn_cfg(Algo::named("mpi-SGD"));
     let a = mxnet_mpi::trainer::sim::simulate(&cfg, &artifacts()).unwrap();
     let b = mxnet_mpi::trainer::sim::simulate(&cfg, &artifacts()).unwrap();
     assert_eq!(a.records.len(), cfg.epochs);
@@ -302,7 +302,7 @@ fn sim_sync_mpi_reconfigures_and_stays_deterministic() {
 
 #[test]
 fn sim_esgd_hybrid_loss_improves_through_churn() {
-    let cfg = sim_churn_cfg(Algo::MpiEsgd);
+    let cfg = sim_churn_cfg(Algo::named("mpi-ESGD"));
     let run = mxnet_mpi::trainer::sim::simulate(&cfg, &artifacts()).unwrap();
     assert_eq!(run.records.len(), cfg.epochs);
     // Monotone improvement through the churn event (15% slack for the
@@ -334,10 +334,10 @@ fn sim_straggler_slows_only_sync_modes_globally() {
             .unwrap()
             .avg_epoch_time
     };
-    let sgd_clean = run(Algo::MpiSgd, "");
-    let sgd_straggled = run(Algo::MpiSgd, "straggle:3@0x4");
-    let esgd_clean = run(Algo::MpiEsgd, "");
-    let esgd_straggled = run(Algo::MpiEsgd, "straggle:3@0x4");
+    let sgd_clean = run(Algo::named("mpi-SGD"), "");
+    let sgd_straggled = run(Algo::named("mpi-SGD"), "straggle:3@0x4");
+    let esgd_clean = run(Algo::named("mpi-ESGD"), "");
+    let esgd_straggled = run(Algo::named("mpi-ESGD"), "straggle:3@0x4");
     let sgd_blowup = sgd_straggled / sgd_clean;
     let esgd_blowup = esgd_straggled / esgd_clean;
     assert!(sgd_blowup > 1.5, "sync blowup only {sgd_blowup}");

@@ -1,0 +1,274 @@
+//! The SyncStrategy API's contract tests: cross-plane bitwise equivalence
+//! for every registered synchronous strategy, the communication-avoiding
+//! behaviour of the new algorithms (BMUF, Local SGD), elastic
+//! compatibility through the trait-declared sync boundaries, and the
+//! registry-derived documentation invariants.
+//!
+//! Hand-rolled proptest harness (no proptest crate offline), as in
+//! `proptests.rs`: each property runs random cases from the deterministic
+//! SplitMix64 generator; a failing case prints its parameters.
+
+use mxnet_mpi::config::{Algo, ExperimentConfig, Grouping};
+use mxnet_mpi::util::Rng;
+use std::path::PathBuf;
+
+fn artifacts() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// A tiny config on the mlp_tiny variant (batch 8): `bpw` batches per
+/// worker per epoch.
+fn tiny(algo: Algo, workers: usize, clients: usize, servers: usize, bpw: u64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::testbed1(algo);
+    cfg.variant = "mlp_tiny".into();
+    cfg.workers = workers;
+    cfg.clients = clients;
+    cfg.servers = servers;
+    cfg.samples_per_epoch = workers as u64 * bpw * 8;
+    cfg.classes = 4;
+    cfg.noise = 1.0;
+    cfg.eval_samples = 32;
+    cfg
+}
+
+/// Job shapes whose aggregation fan-ins are all <= 2 summands, so every
+/// f32 fold on the threaded plane (arrival-order PS sums, ring reductions)
+/// is order-independent bitwise — the domain on which the cross-plane
+/// property is exact rather than approximate.
+fn shapes_for(algo: Algo) -> Vec<(usize, usize, usize)> {
+    match algo.grouping() {
+        // Dist: one worker per client (the framework forces clients ==
+        // workers), two workers, hybrid PS.
+        Grouping::Dist => vec![(2, 2, 1), (2, 2, 2)],
+        Grouping::Mpi => {
+            let mut v = vec![(2, 1, 1), (4, 2, 1), (4, 2, 2)];
+            if algo == Algo::named("mpi-SGD") {
+                // Pure MPI (PushPull == allreduce) only exists for the
+                // gradient-aggregation strategy; the model-averaging
+                // family stores its global model on the PS.
+                v.push((2, 1, 0));
+            }
+            v
+        }
+    }
+}
+
+/// Property (satellite): for every registered *synchronous* strategy, the
+/// sim plane and the threaded plane produce bitwise-identical weight
+/// trajectories from the same seed/config. Until this refactor the
+/// invariant was only claimed in doc comments; now it is the load-bearing
+/// proof that both planes run the same algorithm through one
+/// `SyncStrategy` object.
+#[test]
+fn prop_sync_strategies_bitwise_identical_across_planes() {
+    for algo in Algo::all() {
+        if !algo.strategy().synchronous() {
+            continue;
+        }
+        let shapes = shapes_for(algo);
+        for case in 0..6u64 {
+            let mut rng = Rng::new(0x57A7 ^ case ^ (algo.name().len() as u64) << 8);
+            let (workers, clients, servers) =
+                shapes[rng.below(shapes.len() as u64) as usize];
+            let bpw = 2 + rng.below(3); // 2..=4 batches/worker/epoch
+            let mut cfg = tiny(algo, workers, clients, servers, bpw);
+            cfg.epochs = 1 + rng.below(2) as usize;
+            cfg.lr = [0.05f32, 0.1, 0.2][rng.below(3) as usize];
+            cfg.momentum = [0.0f32, 0.3][rng.below(2) as usize];
+            cfg.interval = 1 + rng.below(3) as usize;
+            cfg.warmup_iters = [0usize, 2][rng.below(2) as usize];
+            cfg.block_momentum = [0.25f32, 0.5][rng.below(2) as usize];
+            cfg.seed = 1000 + case;
+            let label = format!(
+                "{} case {case}: w={workers} c={clients} s={servers} bpw={bpw} \
+                 lr={} mom={} interval={} warmup={}",
+                algo.name(),
+                cfg.lr,
+                cfg.momentum,
+                cfg.interval,
+                cfg.warmup_iters
+            );
+
+            let (t_run, t_w) =
+                mxnet_mpi::trainer::threaded::train_with_weights(&cfg, artifacts())
+                    .unwrap_or_else(|e| panic!("{label}: threaded failed: {e}"));
+            let (s_run, s_w) =
+                mxnet_mpi::trainer::sim::simulate_with_weights(&cfg, &artifacts())
+                    .unwrap_or_else(|e| panic!("{label}: sim failed: {e}"));
+
+            assert_eq!(t_run.records.len(), s_run.records.len(), "{label}");
+            for (tr, sr) in t_run.records.iter().zip(&s_run.records) {
+                // Validation metrics are computed from the epoch-end
+                // weights by the one shared evaluator: bitwise equality
+                // here means the weight *trajectories* agree, epoch by
+                // epoch, not just the final state.
+                assert_eq!(tr.epoch, sr.epoch, "{label}");
+                assert!(
+                    tr.val_loss.to_bits() == sr.val_loss.to_bits(),
+                    "{label}: epoch {} val_loss {} vs {}",
+                    tr.epoch,
+                    tr.val_loss,
+                    sr.val_loss
+                );
+                assert!(
+                    tr.val_acc.to_bits() == sr.val_acc.to_bits(),
+                    "{label}: epoch {} val_acc {} vs {}",
+                    tr.epoch,
+                    tr.val_acc,
+                    sr.val_acc
+                );
+            }
+            assert_eq!(t_w.len(), s_w.len(), "{label}");
+            for (i, (a, b)) in t_w.iter().zip(&s_w).enumerate() {
+                assert!(
+                    a.to_bits() == b.to_bits(),
+                    "{label}: weight {i} diverged: {a} vs {b}"
+                );
+            }
+        }
+    }
+}
+
+/// Both new communication-avoiding strategies learn on both planes with a
+/// genuinely lazy sync schedule.
+#[test]
+fn bmuf_and_local_sgd_learn_on_both_planes() {
+    for name in ["bmuf", "local-sgd"] {
+        let algo = Algo::named(name);
+        let mut cfg = tiny(algo, 4, 2, 1, 6);
+        cfg.epochs = 3;
+        cfg.interval = 4;
+        let sim = mxnet_mpi::trainer::sim::simulate(&cfg, &artifacts())
+            .unwrap_or_else(|e| panic!("{name} sim failed: {e}"));
+        assert_eq!(sim.records.len(), cfg.epochs, "{name}");
+        assert!(sim.final_acc() > 0.5, "{name} sim acc {}", sim.final_acc());
+        let thr = mxnet_mpi::trainer::threaded::train(&cfg, artifacts())
+            .unwrap_or_else(|e| panic!("{name} threaded failed: {e}"));
+        assert_eq!(thr.records.len(), cfg.epochs, "{name}");
+        assert!(thr.final_acc() > 0.5, "{name} threaded acc {}", thr.final_acc());
+    }
+}
+
+/// The communication-avoiding claim, priced on the virtual clock: with a
+/// lazy interval, Local SGD's epoch time beats synchronous SGD's (which
+/// pays a PS round every iteration), and turning the warmup all the way up
+/// (averaging every iteration) gives the time back.
+#[test]
+fn lazy_averaging_avoids_communication_on_the_clock() {
+    let base = |algo: &str| {
+        let mut cfg = tiny(Algo::named(algo), 4, 2, 1, 4);
+        cfg.epochs = 2;
+        cfg.interval = 8;
+        cfg
+    };
+    let t_sgd = mxnet_mpi::trainer::sim::simulate(&base("mpi-SGD"), &artifacts())
+        .unwrap()
+        .avg_epoch_time;
+    let t_lazy = mxnet_mpi::trainer::sim::simulate(&base("local-sgd"), &artifacts())
+        .unwrap()
+        .avg_epoch_time;
+    let mut eager = base("local-sgd");
+    eager.warmup_iters = 10_000; // warmup never ends: average every iteration
+    let t_eager = mxnet_mpi::trainer::sim::simulate(&eager, &artifacts())
+        .unwrap()
+        .avg_epoch_time;
+    assert!(
+        t_lazy < t_sgd * 0.7,
+        "lazy averaging should beat per-iteration sync: {t_lazy} vs {t_sgd}"
+    );
+    assert!(
+        t_lazy < t_eager,
+        "full warmup must cost communication time: lazy {t_lazy} vs eager {t_eager}"
+    );
+    let t_bmuf = mxnet_mpi::trainer::sim::simulate(&base("bmuf"), &artifacts())
+        .unwrap()
+        .avg_epoch_time;
+    assert!(
+        t_bmuf < t_sgd * 0.7,
+        "bmuf should avoid communication too: {t_bmuf} vs {t_sgd}"
+    );
+}
+
+/// The new strategies ride PR 3's elastic membership machinery with no
+/// special cases: boundaries come from `SyncStrategy::sync_every`, so a
+/// kill mid-run reconfigures at the next averaging boundary and training
+/// finishes renormalized — on both planes.
+#[test]
+fn local_sgd_trains_through_a_kill_on_both_planes() {
+    let mut cfg = tiny(Algo::named("local-sgd"), 4, 2, 1, 4);
+    cfg.epochs = 4;
+    cfg.interval = 2;
+    cfg.fault = "kill:3@5".into();
+    let thr = mxnet_mpi::trainer::threaded::train(&cfg, artifacts()).unwrap();
+    assert_eq!(thr.records.len(), cfg.epochs);
+    assert!(thr.records.iter().all(|r| r.train_loss.is_finite()));
+    let a = mxnet_mpi::trainer::sim::simulate(&cfg, &artifacts()).unwrap();
+    let b = mxnet_mpi::trainer::sim::simulate(&cfg, &artifacts()).unwrap();
+    assert_eq!(a.records.len(), cfg.epochs);
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(ra.vtime, rb.vtime, "churned local-sgd sim must stay deterministic");
+        assert_eq!(ra.train_loss, rb.train_loss);
+    }
+}
+
+/// BMUF with η = 0 degenerates to plain Local SGD (no warmup): same wire
+/// protocol, and the filter `Δ = 0·Δ + (w̄ - G); G += Δ` stores
+/// `G + (w̄ - G)` — the average up to one f32 rounding per element, not
+/// bitwise (catastrophic-cancellation corner), so this asserts tight
+/// approximate equality. Cross-strategy sanity for the shared seam.
+#[test]
+fn bmuf_eta_zero_matches_local_sgd() {
+    let mk = |name: &str| {
+        let mut cfg = tiny(Algo::named(name), 4, 2, 1, 3);
+        cfg.epochs = 2;
+        cfg.interval = 2;
+        cfg.block_momentum = 0.0;
+        cfg.warmup_iters = 0;
+        cfg
+    };
+    let (_, w_bmuf) =
+        mxnet_mpi::trainer::sim::simulate_with_weights(&mk("bmuf"), &artifacts()).unwrap();
+    let (_, w_lsgd) =
+        mxnet_mpi::trainer::sim::simulate_with_weights(&mk("local-sgd"), &artifacts())
+            .unwrap();
+    for (i, (a, b)) in w_bmuf.iter().zip(&w_lsgd).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-4 * (1.0 + a.abs().max(b.abs())),
+            "weight {i}: bmuf(eta=0) {a} !~ local-sgd {b}"
+        );
+    }
+}
+
+/// Serverless runs of the model-averaging family must fail loudly (the
+/// global model lives on the PS) rather than silently never syncing.
+#[test]
+fn model_averaging_without_servers_is_rejected() {
+    for name in ["bmuf", "local-sgd"] {
+        let mut cfg = tiny(Algo::named(name), 2, 1, 0, 2);
+        cfg.epochs = 1;
+        assert!(
+            mxnet_mpi::trainer::sim::simulate(&cfg, &artifacts()).is_err(),
+            "{name} sim accepted servers=0"
+        );
+        assert!(
+            mxnet_mpi::trainer::threaded::train(&cfg, artifacts()).is_err(),
+            "{name} threaded accepted servers=0"
+        );
+    }
+}
+
+/// Doc satellite: the README algorithm table must cover every registered
+/// algorithm — derived docs can lag code, this pins them together.
+#[test]
+fn readme_lists_every_registered_algorithm() {
+    let readme = std::fs::read_to_string(
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../README.md"),
+    )
+    .expect("README.md at the repo root");
+    for name in Algo::names() {
+        assert!(
+            readme.contains(name),
+            "README.md algorithm table is missing {name}"
+        );
+    }
+}

@@ -11,7 +11,7 @@ fn artifacts() -> PathBuf {
 #[test]
 fn transformer_lm_trains_end_to_end_pure_mpi() {
     // 2 workers, one MPI client, no servers: pushpull == allreduce.
-    let mut cfg = ExperimentConfig::testbed1(Algo::MpiSgd);
+    let mut cfg = ExperimentConfig::testbed1(Algo::named("mpi-SGD"));
     cfg.variant = "transformer_tiny".into();
     cfg.workers = 2;
     cfg.clients = 1;
@@ -32,7 +32,7 @@ fn transformer_lm_trains_end_to_end_pure_mpi() {
 
 #[test]
 fn sim_plane_is_deterministic() {
-    let mut cfg = ExperimentConfig::testbed1(Algo::MpiEsgd);
+    let mut cfg = ExperimentConfig::testbed1(Algo::named("mpi-ESGD"));
     cfg.variant = "mlp_tiny".into();
     cfg.workers = 4;
     cfg.clients = 2;
@@ -55,7 +55,13 @@ fn sim_plane_is_deterministic() {
 fn paper_shape_mpi_modes_faster_per_epoch() {
     // Fig. 12 shape at reduced scale: MPI grouping beats pure PS on epoch
     // time for both SGD and ASGD.
-    let runs: Vec<_> = [Algo::DistSgd, Algo::MpiSgd, Algo::DistAsgd, Algo::MpiAsgd]
+    let modes = [
+        Algo::named("dist-SGD"),
+        Algo::named("mpi-SGD"),
+        Algo::named("dist-ASGD"),
+        Algo::named("mpi-ASGD"),
+    ];
+    let runs: Vec<_> = modes
         .into_iter()
         .map(|algo| {
             let mut cfg = ExperimentConfig::testbed1(algo);
@@ -90,8 +96,8 @@ fn paper_shape_fewer_clients_reduce_staleness() {
             .unwrap()
             .final_acc()
     };
-    let grouped = acc(Algo::MpiAsgd);
-    let scattered = acc(Algo::DistAsgd);
+    let grouped = acc(Algo::named("mpi-ASGD"));
+    let scattered = acc(Algo::named("dist-ASGD"));
     assert!(
         grouped >= scattered - 0.02,
         "mpi-ASGD {grouped} trails dist-ASGD {scattered}"
@@ -100,7 +106,7 @@ fn paper_shape_fewer_clients_reduce_staleness() {
 
 #[test]
 fn virtual_time_axis_monotone_and_positive() {
-    for algo in [Algo::DistEsgd, Algo::MpiEsgd] {
+    for algo in [Algo::named("dist-ESGD"), Algo::named("mpi-ESGD")] {
         let mut cfg = ExperimentConfig::testbed1(algo);
         cfg.variant = "mlp_tiny".into();
         cfg.epochs = 3;
