@@ -1,10 +1,12 @@
-//! Algorithm smoke matrix: one tiny epoch of EVERY registered strategy on
-//! BOTH execution planes, derived from the algorithm registry — so a
-//! newly registered algorithm is exercised by CI automatically, with no
-//! edits here.
+//! Algorithm × codec smoke matrix: one tiny epoch of EVERY registered
+//! strategy under EVERY registered gradient codec (identity / int8 /
+//! topk) on BOTH execution planes — both sweeps are registry-derived, so
+//! a newly registered algorithm or codec is exercised by CI
+//! automatically, with no edits here.
 //!
 //!     cargo run --release --example algo_smoke
 
+use mxnet_mpi::compress::Codec;
 use mxnet_mpi::config::{Algo, ExperimentConfig};
 use mxnet_mpi::metrics::Table;
 use std::path::PathBuf;
@@ -14,6 +16,7 @@ fn main() -> anyhow::Result<()> {
 
     let mut t = Table::new(&[
         "algo",
+        "codec",
         "grouping",
         "threaded wall_s",
         "threaded acc",
@@ -21,50 +24,63 @@ fn main() -> anyhow::Result<()> {
         "sim acc",
     ]);
     for algo in Algo::all() {
-        let mut cfg = ExperimentConfig::testbed1(algo);
-        cfg.variant = "mlp_tiny".into();
-        cfg.workers = 4;
-        cfg.clients = if algo.is_mpi() { 2 } else { 4 };
-        cfg.servers = 1;
-        cfg.epochs = 1;
-        cfg.samples_per_epoch = 4 * 4 * 8; // 4 batches per worker
-        cfg.classes = 4;
-        cfg.noise = 1.0;
-        cfg.interval = 2;
-        cfg.eval_samples = 64;
+        for codec in Codec::all() {
+            let mut cfg = ExperimentConfig::testbed1(algo);
+            cfg.variant = "mlp_tiny".into();
+            cfg.workers = 4;
+            cfg.clients = if algo.is_mpi() { 2 } else { 4 };
+            cfg.servers = 1;
+            cfg.epochs = 1;
+            cfg.samples_per_epoch = 4 * 4 * 8; // 4 batches per worker
+            cfg.classes = 4;
+            cfg.noise = 1.0;
+            cfg.interval = 2;
+            cfg.eval_samples = 64;
+            cfg.compression = codec.name().into();
+            // Tiny model: keep a meaningful survivor count under topk.
+            cfg.topk_ratio = 0.25;
 
-        eprintln!("[smoke] {} (threaded + sim)...", algo.name());
-        let thr = mxnet_mpi::trainer::threaded::train(&cfg, artifacts.clone())?;
-        anyhow::ensure!(
-            thr.records.len() == cfg.epochs,
-            "{}: threaded produced {} records",
-            algo.name(),
-            thr.records.len()
-        );
-        let sim = mxnet_mpi::trainer::sim::simulate(&cfg, &artifacts)?;
-        anyhow::ensure!(
-            sim.records.len() == cfg.epochs,
-            "{}: sim produced {} records",
-            algo.name(),
-            sim.records.len()
-        );
-        for r in thr.records.iter().chain(&sim.records) {
+            eprintln!("[smoke] {} [{}] (threaded + sim)...", algo.name(), codec.name());
+            let thr = mxnet_mpi::trainer::threaded::train(&cfg, artifacts.clone())?;
             anyhow::ensure!(
-                r.train_loss.is_finite() && r.val_loss.is_finite(),
-                "{}: non-finite loss",
-                algo.name()
+                thr.records.len() == cfg.epochs,
+                "{} [{}]: threaded produced {} records",
+                algo.name(),
+                codec.name(),
+                thr.records.len()
             );
+            let sim = mxnet_mpi::trainer::sim::simulate(&cfg, &artifacts)?;
+            anyhow::ensure!(
+                sim.records.len() == cfg.epochs,
+                "{} [{}]: sim produced {} records",
+                algo.name(),
+                codec.name(),
+                sim.records.len()
+            );
+            for r in thr.records.iter().chain(&sim.records) {
+                anyhow::ensure!(
+                    r.train_loss.is_finite() && r.val_loss.is_finite(),
+                    "{} [{}]: non-finite loss",
+                    algo.name(),
+                    codec.name()
+                );
+            }
+            t.row(vec![
+                algo.name().to_string(),
+                codec.name().to_string(),
+                algo.grouping().name().to_string(),
+                format!("{:.2}", thr.records.last().unwrap().vtime),
+                format!("{:.3}", thr.final_acc()),
+                format!("{:.1}", sim.records.last().unwrap().vtime),
+                format!("{:.3}", sim.final_acc()),
+            ]);
         }
-        t.row(vec![
-            algo.name().to_string(),
-            algo.grouping().name().to_string(),
-            format!("{:.2}", thr.records.last().unwrap().vtime),
-            format!("{:.3}", thr.final_acc()),
-            format!("{:.1}", sim.records.last().unwrap().vtime),
-            format!("{:.3}", sim.final_acc()),
-        ]);
     }
     println!("{}", t.render());
-    println!("algo smoke matrix OK ({} algorithms x 2 planes)", Algo::all().len());
+    println!(
+        "algo smoke matrix OK ({} algorithms x {} codecs x 2 planes)",
+        Algo::all().len(),
+        Codec::all().len()
+    );
     Ok(())
 }

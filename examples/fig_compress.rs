@@ -1,0 +1,27 @@
+//! Compression figure: validation accuracy vs (virtual) time for mpi-SGD
+//! under each registered gradient codec — identity (dense), int8
+//! (per-bucket quantization + error feedback) and topk (sparsification +
+//! error feedback) — on the testbed1 configuration. The codec sweep is
+//! registry-derived, so a newly registered codec appears automatically.
+//!
+//!     cargo run --release --example fig_compress [epochs]
+
+use std::path::PathBuf;
+
+fn main() -> anyhow::Result<()> {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let epochs = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(8);
+    let runs =
+        mxnet_mpi::figures::fig_compress(&root.join("artifacts"), &root.join("results"), epochs)?;
+    mxnet_mpi::figures::print_acc_vs_time("Compression: acc vs time per codec", &runs);
+    for run in &runs {
+        println!(
+            "{}: final acc {:.3} @ {:.0}s virtual",
+            run.label,
+            run.final_acc(),
+            run.records.last().map(|r| r.vtime).unwrap_or(0.0)
+        );
+    }
+    println!("CSV -> results/fig_compress.csv");
+    Ok(())
+}

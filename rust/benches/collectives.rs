@@ -9,6 +9,7 @@
 use mxnet_mpi::collectives::{
     multi_ring_allreduce, ring_allreduce, sim as csim, AlgoKind,
 };
+use mxnet_mpi::compress::Compressor as _;
 use mxnet_mpi::engine::Engine;
 use mxnet_mpi::metrics::Table;
 use mxnet_mpi::mpisim::World;
@@ -220,7 +221,9 @@ fn report_overlap_epoch_table() {
 /// Registry-derived strategy table: sync cadence, PS-bound traffic and a
 /// modeled epoch time per registered algorithm. Rows (including `bmuf` /
 /// `local-sgd`) appear here automatically on registration — the table can
-/// never lag the algorithm set.
+/// never lag the algorithm set. The wire column prices the configured
+/// codec (identity by default: wire == dense; see the compression table
+/// below for the per-codec reductions).
 fn report_strategy_table() {
     use mxnet_mpi::config::{Algo, ExperimentConfig};
     let mut t = Table::new(&[
@@ -229,6 +232,7 @@ fn report_strategy_table() {
         "server",
         "syncs/iter",
         "PS MB/iter/master",
+        "wire MB/iter/master",
         "modeled epoch s",
     ]);
     for algo in Algo::all() {
@@ -237,11 +241,19 @@ fn report_strategy_table() {
         let syncs = s.syncs_per_iter(&cfg);
         let p = cfg.cost_params();
         let iters = cfg.samples_per_epoch as f64 / (cfg.workers as f64 * cfg.batch as f64);
+        // Model-snapshot pushes (ESGD/local-sgd/bmuf syncs) are always
+        // dense; gradient pushes move the configured codec's wire bytes.
+        let wire_bytes = if s.pushes_model() {
+            cfg.virtual_model_bytes as f64
+        } else {
+            cfg.build_compressor()
+                .wire_bytes(cfg.virtual_model_bytes / 4) as f64
+        };
         // Rough α-β epoch model: compute + the PS round-trip traffic the
-        // strategy actually schedules (2x: push + pull).
+        // strategy actually schedules (compressed push + dense pull).
         let epoch_s = iters
             * (cfg.compute_s_per_batch
-                + syncs * 2.0 * cfg.virtual_model_bytes as f64 * p.beta_net);
+                + syncs * (wire_bytes + cfg.virtual_model_bytes as f64) * p.beta_net);
         t.row(vec![
             algo.name().to_string(),
             algo.grouping().name().to_string(),
@@ -251,6 +263,7 @@ fn report_strategy_table() {
                 "{:.1}",
                 cfg.virtual_model_bytes as f64 * syncs / (1 << 20) as f64
             ),
+            format!("{:.1}", wire_bytes * syncs / (1 << 20) as f64),
             format!("{epoch_s:.1}"),
         ]);
     }
@@ -258,6 +271,93 @@ fn report_strategy_table() {
         "== registered strategies (registry-derived; comm volume x cadence) ==\n{}",
         t.render()
     );
+}
+
+/// Registry-derived compression table: dense vs wire bytes per codec for
+/// ResNet-50-scale gradients (102 MB), the reduction factor, and the
+/// modeled PS push seconds (wire transfer + codec γ) against dense — the
+/// bytes-on-the-wire savings the compression plane buys per codec.
+fn report_compression_table() {
+    use mxnet_mpi::compress::{codec_seconds, Codec};
+    let params = CostParams::testbed1();
+    let dense_bytes = 102usize << 20;
+    let n = dense_bytes / 4;
+    let topk_ratio = 0.01;
+    let mut t = Table::new(&[
+        "codec",
+        "dense MB",
+        "wire MB",
+        "reduction",
+        "PS push s (dense)",
+        "PS push s (codec)",
+    ]);
+    let dense_s = dense_bytes as f64 * params.beta_ps;
+    for codec in Codec::all() {
+        let built = codec.build(topk_ratio);
+        let wire = built.wire_bytes(n);
+        let push_s = wire as f64 * params.beta_ps + codec_seconds(&*built, dense_bytes, &params);
+        t.row(vec![
+            codec.name().to_string(),
+            format!("{:.1}", dense_bytes as f64 / (1 << 20) as f64),
+            format!("{:.1}", wire as f64 / (1 << 20) as f64),
+            format!("{:.1}x", dense_bytes as f64 / wire as f64),
+            format!("{dense_s:.4}"),
+            format!("{push_s:.4}"),
+        ]);
+    }
+    println!(
+        "== gradient codecs (registry-derived; 102 MB grads, topk ratio {topk_ratio}) ==\n{}",
+        t.render()
+    );
+}
+
+/// Wall-clock blocking (dense) vs compressed allreduce on the real mpisim
+/// data path, one row per registered codec; the size column shows the
+/// actual wire bytes each rank fans out (what moves through mpisim).
+fn bench_compressed_allreduce(t: &mut Table) {
+    use mxnet_mpi::compress::{Codec, EfState};
+    let p = 4;
+    let len = 1 << 18;
+    let params = CostParams::testbed1();
+    for codec in Codec::all() {
+        let wire_bytes = codec.build(0.01).wire_bytes(len);
+        let pr = params.clone();
+        let s = bench(|| {
+            let comms = World::create(p);
+            let hs: Vec<_> = comms
+                .into_iter()
+                .map(|mut c| {
+                    let pr = pr.clone();
+                    let built = codec.build(0.01);
+                    std::thread::spawn(move || {
+                        let mut ef = EfState::new();
+                        let mut d = vec![c.rank() as f32 + 0.5; len];
+                        mxnet_mpi::collectives::compressed_allreduce(
+                            AlgoKind::Ring,
+                            &mut c,
+                            &mut d,
+                            &*built,
+                            0,
+                            &mut ef,
+                            2,
+                            2,
+                            &pr,
+                        );
+                        d[0]
+                    })
+                })
+                .collect();
+            for h in hs {
+                h.join().unwrap();
+            }
+        });
+        t.row(vec![
+            format!("compressed_allreduce {} p={p}", codec.name()),
+            mxnet_mpi::util::fmt_bytes(wire_bytes),
+            format!("{:.3}", s * 1e3),
+            format!("{:.2}", (len * 4) as f64 * 2.0 / s / 1e9),
+        ]);
+    }
 }
 
 fn bench_tensor_allreduce(t: &mut Table) {
@@ -448,11 +548,13 @@ fn main() {
     report_modeled_crossover();
     report_overlap_epoch_table();
     report_strategy_table();
+    report_compression_table();
     println!("== real-substrate microbenchmarks (median of {REPS}) ==");
     let mut t = Table::new(&["bench", "size", "median ms", "rate"]);
     bench_ring_allreduce(&mut t);
     bench_multi_ring(&mut t);
     bench_pipelined_vs_blocking(&mut t);
+    bench_compressed_allreduce(&mut t);
     bench_algo_schedules(&mut t);
     bench_tensor_allreduce(&mut t);
     bench_engine(&mut t);

@@ -32,6 +32,7 @@
 
 pub mod sim;
 
+use crate::compress::{ef_compress, Compressed, Compressor, EfState};
 use crate::mpisim::{Comm, Request};
 use crate::netsim::CostParams;
 use crate::tensor::{add_assign, NodeTensor};
@@ -52,6 +53,7 @@ const HD_AG_TAG: u64 = 6 * TAG_SPACING;
 const HD_FOLD_TAG: u64 = 7 * TAG_SPACING;
 const HIER_GATHER_TAG: u64 = 8 * TAG_SPACING;
 const HIER_BCAST_TAG: u64 = 9 * TAG_SPACING;
+const COMPRESS_TAG: u64 = 10 * TAG_SPACING;
 
 /// Default sub-chunks per pipelined step when no [`CostParams`] is in
 /// scope (the presets carry their own tuned value).
@@ -590,6 +592,128 @@ pub fn allreduce_with(
     }
 }
 
+/// Compressed allreduce (the gradient-compression plane): error-feedback
+/// compress the local buffer, allgather every rank's *compressed* payload
+/// (that is what moves on the wire — fewer f32 words through mpisim), and
+/// decompress-reduce all `p` payloads locally in rank order, so every rank
+/// computes the bitwise-identical sum of the decoded contributions.
+///
+/// Identity codecs delegate to [`allreduce_with`] — the pre-compression
+/// schedule, bitwise (regression-tested) — so `compression = "identity"`
+/// costs nothing and changes nothing. Lossy codecs use the allgather
+/// exchange because quantized/sparse codes cannot be summed mid-schedule
+/// without recompounding the quantization error at every hop; the EF
+/// residual (`ef_key`-scoped in `ef`) carries what the codec dropped into
+/// the next call.
+#[allow(clippy::too_many_arguments)]
+pub fn compressed_allreduce(
+    kind: AlgoKind,
+    comm: &mut Comm,
+    data: &mut [f32],
+    codec: &dyn Compressor,
+    ef_key: u64,
+    ef: &mut EfState,
+    rings: usize,
+    group: usize,
+    params: &CostParams,
+) {
+    if codec.is_identity() {
+        allreduce_with(kind, comm, data, rings, group, params);
+        return;
+    }
+    let p = comm.size();
+    if p <= 1 {
+        // A 1-rank "allreduce" moves zero wire bytes, so there is nothing
+        // to compress: leave the buffer untouched (exactly what the dense
+        // schedules do at p == 1, and the sim plane's wireless-local-step
+        // rule). Any PS hop that follows compresses separately.
+        return;
+    }
+    let r = comm.rank();
+    let wire = ef_compress(codec, ef_key, data, ef).to_wire();
+    // Post every receive first, then fan the payload out; (source, tag)
+    // matching keeps back-to-back compressed calls on one comm ordered via
+    // the per-pair FIFO.
+    let mut reqs: Vec<Request> = Vec::with_capacity(p.saturating_sub(1));
+    let mut srcs: Vec<usize> = Vec::with_capacity(p.saturating_sub(1));
+    for s in 0..p {
+        if s != r {
+            reqs.push(comm.irecv(s, COMPRESS_TAG));
+            srcs.push(s);
+        }
+    }
+    for s in 0..p {
+        if s != r {
+            comm.send(s, COMPRESS_TAG, wire.clone());
+        }
+    }
+    let mut payloads: Vec<Option<Vec<f32>>> = (0..p).map(|_| None).collect();
+    payloads[r] = Some(wire);
+    while !reqs.is_empty() {
+        let (i, msg) = comm.wait_any(&mut reqs);
+        payloads[srcs.remove(i)] = Some(msg);
+    }
+    // Decompress-reduce in rank order: deterministic and identical on
+    // every rank (same payloads, same fold order).
+    for (s, payload) in payloads.into_iter().enumerate() {
+        let dec = Compressed::from_wire(&payload.expect("payload from every rank"))
+            .expect("malformed compressed allreduce payload")
+            .decompress();
+        debug_assert_eq!(dec.len(), data.len());
+        if s == 0 {
+            data.copy_from_slice(&dec);
+        } else {
+            add_assign(data, &dec);
+        }
+    }
+}
+
+/// [`fused_allreduce`] with a codec: the compressed bucket path. Buckets
+/// form exactly like the dense path ([`fusion_buckets`]); each bucket is
+/// compressed/exchanged/decompress-reduced as one message, with its EF
+/// residual keyed by `ef_keys[bucket start]` so a bucket's dropped mass
+/// returns to the *same* bucket next iteration. Identity codecs delegate
+/// to the dense [`fused_allreduce`], bitwise.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_allreduce_compressed(
+    kind: AlgoKind,
+    comm: &mut Comm,
+    bufs: &mut [Vec<f32>],
+    ef_keys: &[u64],
+    fusion_bytes: usize,
+    codec: &dyn Compressor,
+    ef: &mut EfState,
+    rings: usize,
+    group: usize,
+    params: &CostParams,
+) {
+    if codec.is_identity() {
+        fused_allreduce(kind, comm, bufs, fusion_bytes, rings, group, params);
+        return;
+    }
+    debug_assert_eq!(bufs.len(), ef_keys.len());
+    let lens: Vec<usize> = bufs.iter().map(|b| b.len()).collect();
+    for (i, j) in fusion_buckets(&lens, fusion_bytes) {
+        let ef_key = ef_keys[i];
+        if j == i + 1 {
+            compressed_allreduce(
+                kind, comm, &mut bufs[i], codec, ef_key, ef, rings, group, params,
+            );
+        } else {
+            let mut fused = Vec::with_capacity(lens[i..j].iter().sum());
+            for b in &bufs[i..j] {
+                fused.extend_from_slice(b);
+            }
+            compressed_allreduce(kind, comm, &mut fused, codec, ef_key, ef, rings, group, params);
+            let mut off = 0;
+            for b in bufs[i..j].iter_mut() {
+                b.copy_from_slice(&fused[off..off + b.len()]);
+                off += b.len();
+            }
+        }
+    }
+}
+
 /// Gradient fusion (§2.1's per-layer bucketing, Horovod-style): coalesce
 /// consecutive buffers into buckets of at most `fusion_bytes` bytes (a
 /// buffer larger than the cap forms its own bucket; `fusion_bytes == 0`
@@ -979,6 +1103,122 @@ mod tests {
             for d in out {
                 assert_eq!(d, want, "len={len}");
             }
+        }
+    }
+
+    #[test]
+    fn compressed_allreduce_identity_is_bitwise_plain_path() {
+        use crate::compress::{EfState, Identity};
+        let p = 4;
+        let params = CostParams::testbed1();
+        for kind in AlgoKind::DATA_PATH {
+            let pr = params.clone();
+            let out = run_world(p, move |mut c| {
+                let mut a = payload(c.rank(), 113);
+                let mut b = a.clone();
+                allreduce_with(kind, &mut c, &mut a, 2, 2, &pr);
+                let mut ef = EfState::new();
+                compressed_allreduce(kind, &mut c, &mut b, &Identity, 0, &mut ef, 2, 2, &pr);
+                (a, b)
+            });
+            for (a, b) in out {
+                assert_eq!(a, b, "{}", kind.name());
+            }
+        }
+    }
+
+    #[test]
+    fn compressed_allreduce_consistent_and_close_to_sum() {
+        use crate::compress::{EfState, Int8, TopK};
+        let p = 3;
+        let len = 500;
+        let params = CostParams::testbed1();
+        for lossy in [true, false] {
+            let pr = params.clone();
+            let out = run_world(p, move |mut c| {
+                let mut d = payload(c.rank(), len);
+                let mut ef = EfState::new();
+                if lossy {
+                    compressed_allreduce(
+                        AlgoKind::Ring, &mut c, &mut d,
+                        &TopK { ratio: 0.5 }, 0, &mut ef, 2, 2, &pr,
+                    );
+                } else {
+                    compressed_allreduce(
+                        AlgoKind::Ring, &mut c, &mut d,
+                        &Int8 { bucket: 64 }, 0, &mut ef, 2, 2, &pr,
+                    );
+                }
+                d
+            });
+            // Every rank decoded the identical payload set.
+            for d in &out[1..] {
+                assert_eq!(*d, out[0]);
+            }
+            // Int8 stays within quantization tolerance of the true sum.
+            if !lossy {
+                let want = expected_sum(p, len);
+                let maxabs = want.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+                for (a, b) in out[0].iter().zip(&want) {
+                    assert!((a - b).abs() <= p as f32 * maxabs / 100.0, "{a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_compressed_buckets_conserve_mass_via_residuals() {
+        use crate::compress::{EfState, TopK};
+        // Repeated fused compressed allreduces: the EF books must balance
+        // exactly — cumulative decoded results plus every rank's final
+        // residual equal the cumulative true sums (up to f32 association).
+        let p = 2;
+        let iters = 6usize;
+        let out = run_world(p, move |mut c| {
+            let params = CostParams::testbed1();
+            let mut ef = EfState::new();
+            let codec = TopK { ratio: 0.5 };
+            // One fused bucket: lens 4+5+6 = 15 elems = 60 bytes <= 64.
+            let mut cumulative = vec![0.0f32; 15];
+            for _iter in 0..iters {
+                let mut bufs: Vec<Vec<f32>> = (0..3)
+                    .map(|k| payload(c.rank() * 10 + k, 4 + k))
+                    .collect();
+                let ef_keys: Vec<u64> = (0..3).map(|k| 1000 + k as u64).collect();
+                fused_allreduce_compressed(
+                    AlgoKind::Ring, &mut c, &mut bufs, &ef_keys, 64,
+                    &codec, &mut ef, 2, 2, &params,
+                );
+                let mut flat = Vec::new();
+                for b in &bufs {
+                    flat.extend_from_slice(b);
+                }
+                add_assign(&mut cumulative, &flat);
+            }
+            let residual = ef.residual(1000).expect("bucket residual").to_vec();
+            (cumulative, residual)
+        });
+        // All ranks computed the identical round results.
+        for (cum, _) in &out[1..] {
+            assert_eq!(*cum, out[0].0);
+        }
+        // Books: Sum_t result_t + Sum_r residual_r == iters * true_sum.
+        let mut want = vec![0.0f32; 15];
+        for r in 0..p {
+            let mut flat = Vec::new();
+            for k in 0..3 {
+                flat.extend_from_slice(&payload(r * 10 + k, 4 + k));
+            }
+            add_assign(&mut want, &flat);
+        }
+        let mut lhs = out[0].0.clone();
+        for (_, resid) in &out {
+            add_assign(&mut lhs, resid);
+        }
+        for (i, (&l, &w)) in lhs.iter().zip(&want).enumerate() {
+            let total = iters as f32 * w;
+            let tol = total.abs().max(1.0) * 1e-4;
+            assert!((l - total).abs() <= tol, "elem {i}: {l} vs {total}");
         }
     }
 

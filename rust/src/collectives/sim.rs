@@ -8,6 +8,7 @@
 //! is the *shape*: who wins, by what factor, where crossovers fall.
 
 use super::{pow2_floor, AlgoKind};
+use crate::compress::Compressor;
 use crate::netsim::CostParams;
 
 // ---------------------------------------------------------------------------
@@ -187,6 +188,45 @@ pub fn tensor_allreduce_seconds(
                 + 2.0 * params.gpu_sync
         }
     }
+}
+
+/// Modeled seconds for one *compressed* tensor allreduce of `dense_bytes`
+/// across `p` ranks — the α-β-γ mirror of
+/// [`crate::collectives::compressed_allreduce`]: intra-node reduce +
+/// broadcast around a (p−1)-step allgather of the codec's **wire bytes**
+/// ([`crate::compress::Compressor::wire_bytes`], exactly what mpisim
+/// moves), a decompress-reduce of all `p` decoded payloads at host-reduce
+/// speed, and the codec's own γ (one encode, `p` decodes). Identity
+/// delegates to [`tensor_allreduce_seconds`] — bitwise the pre-compression
+/// pricing, so default-config figures regenerate unchanged.
+pub fn compressed_tensor_allreduce_seconds(
+    kind: AlgoKind,
+    p: usize,
+    dense_bytes: usize,
+    rings: usize,
+    codec: &dyn Compressor,
+    params: &CostParams,
+) -> f64 {
+    if codec.is_identity() {
+        return tensor_allreduce_seconds(kind, p, dense_bytes, rings, params);
+    }
+    let n = dense_bytes as f64;
+    // Intra-node phases as in the non-ring arm of tensor_allreduce_seconds.
+    let intra = n * params.gamma_gpu_ibm + n * params.beta_gpu_bcast + 2.0 * params.gpu_sync;
+    // Encode streams the dense buffer once; decode+fold of a peer payload
+    // is payload-proportional (a sparse payload scatter-adds only its k
+    // elements; a quantized payload streams its byte count) plus one dense
+    // pass to seat our own decoded contribution.
+    let wire = codec.wire_bytes(dense_bytes / 4) as f64;
+    let encode = n * params.gamma_codec;
+    let seat = n * params.gamma_omp + wire * params.gamma_codec;
+    if p <= 1 {
+        return intra + encode + seat;
+    }
+    let pf = p as f64;
+    let net = (pf - 1.0) * (params.alpha_net + wire * params.beta_net);
+    let fold = (pf - 1.0) * wire * (params.gamma_codec + params.gamma_omp);
+    intra + encode + seat + net + fold
 }
 
 /// The §7.3 design space, one variant per curve in Figs 17–20.
@@ -520,6 +560,45 @@ mod tests {
                 assert!(auto <= network_allreduce_seconds(k, 12, bytes, &m) + 1e-15);
             }
         }
+    }
+
+    #[test]
+    fn compressed_model_identity_bitwise_and_sane_shape() {
+        use crate::compress::{Codec, Identity};
+        let m = minsky();
+        // Identity pricing is bitwise the dense pricing (default-config
+        // figures regenerate unchanged).
+        for (p, bytes) in [(6usize, 102usize << 20), (16, 4 << 20), (1, 1 << 16)] {
+            let a = compressed_tensor_allreduce_seconds(AlgoKind::Ring, p, bytes, 2, &Identity, &m);
+            let b = tensor_allreduce_seconds(AlgoKind::Ring, p, bytes, 2, &m);
+            assert_eq!(a, b);
+        }
+        // Lossy codecs: positive, monotone in bytes and p, and the sparser
+        // codec moves less wire so it models cheaper than int8.
+        let int8 = Codec::named("int8").build(0.01);
+        let topk = Codec::named("topk").build(0.01);
+        for codec in [&*int8, &*topk] {
+            let t1 = compressed_tensor_allreduce_seconds(AlgoKind::Ring, 6, 4 << 20, 2, codec, &m);
+            let t2 = compressed_tensor_allreduce_seconds(AlgoKind::Ring, 6, 64 << 20, 2, codec, &m);
+            let t3 = compressed_tensor_allreduce_seconds(AlgoKind::Ring, 12, 4 << 20, 2, codec, &m);
+            assert!(t1 > 0.0 && t2 > t1 && t3 > t1, "{}", codec.name());
+        }
+        let bytes = 102 << 20;
+        let ti = compressed_tensor_allreduce_seconds(AlgoKind::Ring, 6, bytes, 2, &*int8, &m);
+        let tt = compressed_tensor_allreduce_seconds(AlgoKind::Ring, 6, bytes, 2, &*topk, &m);
+        assert!(tt < ti, "{tt} !< {ti}");
+        // On the *fast* MPI fabric the dense bandwidth-optimal ring is
+        // already near the wire bound, so the codec γ keeps compression
+        // from a clean win there; its network term alone must still be a
+        // fraction of the dense schedule's. The end-to-end payoff is on
+        // the TCP-class PS path (PsFabric moves the codec's wire bytes) —
+        // exactly the paper's §2.3 bottleneck story.
+        let wire = topk.wire_bytes(bytes / 4);
+        assert!(wire * 20 < bytes, "topk wire {wire} not << {bytes}");
+        let ps_dense = bytes as f64 * m.beta_ps;
+        let ps_topk = wire as f64 * m.beta_ps
+            + crate::compress::codec_seconds(&*topk, bytes, &m);
+        assert!(ps_topk < ps_dense / 2.0, "{ps_topk} !< {ps_dense}/2");
     }
 
     #[test]

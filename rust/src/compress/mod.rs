@@ -1,0 +1,740 @@
+//! Gradient compression plane: pluggable codecs that shrink the bytes on
+//! the wire (the complement of the §6 collective optimizations — Shi et
+//! al., arXiv:1711.05979, show distributed DL is communication-bound on
+//! exactly the gradient-exchange path this repo models).
+//!
+//! Three halves, mirroring `trainer/strategies/`:
+//!
+//! * [`Compressor`] — one trait per codec, stateless: `compress` maps a
+//!   dense f32 buffer to a [`Compressed`] payload. Shipping codecs:
+//!   `identity` (no-op: every compressed code path delegates to the
+//!   pre-compression implementation, bitwise), `int8` linear quantization
+//!   with a per-bucket scale ([`INT8_BUCKET`] elements per scale), and
+//!   `topk` sparsification (largest-|v| index/value pairs,
+//!   [`TopK::ratio`] of the elements).
+//! * **Error feedback** ([`EfState`] / [`ef_compress`]) — the residual
+//!   `input − decode(compress(input))` is accumulated per buffer and added
+//!   back into the *next* compression of that buffer (Seide et al. 2014;
+//!   Karimireddy et al. 2019), so lossy codecs stay unbiased over time:
+//!   `Σ decodes + residual == Σ inputs` exactly (up to f32 association) —
+//!   the invariant the tests pin.
+//! * **Wire format** — payloads travel as `Vec<f32>` (the
+//!   [`crate::mpisim`] message type) via [`Compressed::to_wire`], packing
+//!   four int8 codes or one u32 index per f32 *bit pattern*, so the wire
+//!   word count is the real compressed size: the data path, the modeled
+//!   cost ([`Compressor::wire_bytes`]) and the bench wire-bytes column all
+//!   agree. [`Compressed::from_wire`] is self-describing — a PS server can
+//!   decode a push without knowing which codec the worker ran.
+//!
+//! The string-keyed [`registry`] drives `--compression` parsing, usage
+//! text, the `fig_compress` sweep and the CI smoke matrix, so none of them
+//! can drift from the set of codecs that actually run.
+
+use crate::netsim::CostParams;
+use crate::tensor::add_assign;
+use anyhow::{bail, ensure, Result};
+use std::collections::HashMap;
+use std::sync::OnceLock;
+
+/// Elements per int8 quantization scale (one f32 scale amortized over this
+/// many codes keeps the header overhead at ~0.2%).
+pub const INT8_BUCKET: usize = 2048;
+
+/// Wire header: [kind, len, kind-specific] as u32 bit patterns.
+const HEADER_WORDS: usize = 3;
+const WIRE_DENSE: u32 = 0;
+const WIRE_INT8: u32 = 1;
+const WIRE_TOPK: u32 = 2;
+
+// ---------------------------------------------------------------------------
+// Compressed payloads + the wire format
+// ---------------------------------------------------------------------------
+
+/// A compressed gradient payload. Decompression is codec-independent (the
+/// payload is self-describing), which is what lets a PS server decode any
+/// worker's push without holding the worker's codec object.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Compressed {
+    /// Uncompressed (the identity codec; also the fallback wire form).
+    Dense(Vec<f32>),
+    /// Per-bucket linear int8: `v ≈ q * scales[i / bucket]`, codes packed
+    /// four per u32 word.
+    Int8 {
+        len: usize,
+        bucket: usize,
+        scales: Vec<f32>,
+        packed: Vec<u32>,
+    },
+    /// Top-k sparsification: `len`-element vector with `idx.len()`
+    /// surviving (index, value) pairs, indices ascending.
+    TopK {
+        len: usize,
+        idx: Vec<u32>,
+        vals: Vec<f32>,
+    },
+}
+
+impl Compressed {
+    /// Dense element count of the original buffer.
+    pub fn len(&self) -> usize {
+        match self {
+            Compressed::Dense(v) => v.len(),
+            Compressed::Int8 { len, .. } | Compressed::TopK { len, .. } => *len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Decode back to a dense buffer.
+    pub fn decompress(&self) -> Vec<f32> {
+        match self {
+            Compressed::Dense(v) => v.clone(),
+            Compressed::Int8 { len, bucket, scales, packed } => {
+                let mut out = vec![0.0f32; *len];
+                for (i, o) in out.iter_mut().enumerate() {
+                    let code = unpack_i8(packed, i);
+                    *o = code as f32 * scales[i / bucket];
+                }
+                out
+            }
+            Compressed::TopK { len, idx, vals } => {
+                let mut out = vec![0.0f32; *len];
+                for (&i, &v) in idx.iter().zip(vals) {
+                    out[i as usize] = v;
+                }
+                out
+            }
+        }
+    }
+
+    /// Payload size in f32 words as it travels through [`crate::mpisim`].
+    pub fn wire_words(&self) -> usize {
+        HEADER_WORDS
+            + match self {
+                Compressed::Dense(v) => v.len(),
+                Compressed::Int8 { scales, packed, .. } => scales.len() + packed.len(),
+                Compressed::TopK { idx, vals, .. } => idx.len() + vals.len(),
+            }
+    }
+
+    /// Payload size in bytes (4 × [`Compressed::wire_words`]).
+    pub fn wire_bytes(&self) -> usize {
+        self.wire_words() * 4
+    }
+
+    /// Serialize into the `Vec<f32>` carrier the mpisim transport moves.
+    /// Non-float words (codes, indices, lengths) ride as raw bit patterns;
+    /// the transport only ever memcpys them, so the bits survive.
+    pub fn to_wire(&self) -> Vec<f32> {
+        let mut w = Vec::with_capacity(self.wire_words());
+        match self {
+            Compressed::Dense(v) => {
+                w.push(f32::from_bits(WIRE_DENSE));
+                w.push(f32::from_bits(v.len() as u32));
+                w.push(f32::from_bits(0));
+                w.extend_from_slice(v);
+            }
+            Compressed::Int8 { len, bucket, scales, packed } => {
+                w.push(f32::from_bits(WIRE_INT8));
+                w.push(f32::from_bits(*len as u32));
+                w.push(f32::from_bits(*bucket as u32));
+                w.extend_from_slice(scales);
+                w.extend(packed.iter().map(|&u| f32::from_bits(u)));
+            }
+            Compressed::TopK { len, idx, vals } => {
+                w.push(f32::from_bits(WIRE_TOPK));
+                w.push(f32::from_bits(*len as u32));
+                w.push(f32::from_bits(idx.len() as u32));
+                w.extend(idx.iter().map(|&u| f32::from_bits(u)));
+                w.extend_from_slice(vals);
+            }
+        }
+        w
+    }
+
+    /// Parse a wire payload (inverse of [`Compressed::to_wire`]).
+    pub fn from_wire(w: &[f32]) -> Result<Compressed> {
+        ensure!(w.len() >= HEADER_WORDS, "compressed payload shorter than its header");
+        let kind = w[0].to_bits();
+        let len = w[1].to_bits() as usize;
+        let aux = w[2].to_bits() as usize;
+        let body = &w[HEADER_WORDS..];
+        match kind {
+            WIRE_DENSE => {
+                ensure!(body.len() == len, "dense payload length mismatch");
+                Ok(Compressed::Dense(body.to_vec()))
+            }
+            WIRE_INT8 => {
+                let bucket = aux;
+                ensure!(bucket > 0, "int8 payload with zero bucket");
+                let nb = len.div_ceil(bucket);
+                let np = len.div_ceil(4);
+                ensure!(body.len() == nb + np, "int8 payload length mismatch");
+                Ok(Compressed::Int8 {
+                    len,
+                    bucket,
+                    scales: body[..nb].to_vec(),
+                    packed: body[nb..].iter().map(|f| f.to_bits()).collect(),
+                })
+            }
+            WIRE_TOPK => {
+                let k = aux;
+                ensure!(k <= len, "topk payload keeps more elements than it has");
+                ensure!(body.len() == 2 * k, "topk payload length mismatch");
+                let idx: Vec<u32> = body[..k].iter().map(|f| f.to_bits()).collect();
+                ensure!(
+                    idx.iter().all(|&i| (i as usize) < len),
+                    "topk index out of range"
+                );
+                Ok(Compressed::TopK { len, idx, vals: body[k..].to_vec() })
+            }
+            other => bail!("unknown compressed payload kind {other}"),
+        }
+    }
+}
+
+fn unpack_i8(packed: &[u32], i: usize) -> i8 {
+    ((packed[i / 4] >> ((i % 4) * 8)) & 0xFF) as u8 as i8
+}
+
+fn pack_i8(packed: &mut [u32], i: usize, code: i8) {
+    packed[i / 4] |= ((code as u8) as u32) << ((i % 4) * 8);
+}
+
+// ---------------------------------------------------------------------------
+// The trait + shipping codecs
+// ---------------------------------------------------------------------------
+
+/// A gradient codec. Stateless (error-feedback residuals live in
+/// [`EfState`], keyed per buffer), so one `Arc` serves every worker thread.
+pub trait Compressor: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Identity codecs make every compressed code path delegate to the
+    /// pre-compression implementation — bitwise-equal, regression-tested.
+    fn is_identity(&self) -> bool {
+        false
+    }
+
+    /// Encode a dense buffer. Must be deterministic.
+    fn compress(&self, data: &[f32]) -> Compressed;
+
+    /// Modeled wire bytes for an `n`-element dense buffer — must equal the
+    /// data path's `compress(..).wire_bytes()` (asserted in tests) so the
+    /// α-β-γ models price exactly what mpisim moves. Identity reports the
+    /// raw dense bytes (no header: its payloads never take the compressed
+    /// wire path).
+    fn wire_bytes(&self, n: usize) -> usize;
+}
+
+/// The no-op codec: dense bytes, pre-compression code paths.
+pub struct Identity;
+
+impl Compressor for Identity {
+    fn name(&self) -> &'static str {
+        "identity"
+    }
+    fn is_identity(&self) -> bool {
+        true
+    }
+    fn compress(&self, data: &[f32]) -> Compressed {
+        Compressed::Dense(data.to_vec())
+    }
+    fn wire_bytes(&self, n: usize) -> usize {
+        n * 4
+    }
+}
+
+/// Per-bucket linear int8 quantization: `scale = max|v| / 127` over each
+/// [`INT8_BUCKET`]-element bucket, `q = round(v / scale)` clamped to
+/// ±127 — 4 bytes → ~1 byte, worst-case per-element error `scale / 2`.
+pub struct Int8 {
+    pub bucket: usize,
+}
+
+impl Compressor for Int8 {
+    fn name(&self) -> &'static str {
+        "int8"
+    }
+    fn compress(&self, data: &[f32]) -> Compressed {
+        let n = data.len();
+        let bucket = self.bucket.max(1);
+        let nb = n.div_ceil(bucket);
+        let mut scales = Vec::with_capacity(nb);
+        let mut packed = vec![0u32; n.div_ceil(4)];
+        for b in 0..nb {
+            let lo = b * bucket;
+            let hi = (lo + bucket).min(n);
+            let maxabs = data[lo..hi].iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+            let scale = maxabs / 127.0;
+            scales.push(scale);
+            if scale > 0.0 {
+                for i in lo..hi {
+                    let q = (data[i] / scale).round().clamp(-127.0, 127.0) as i8;
+                    pack_i8(&mut packed, i, q);
+                }
+            }
+        }
+        Compressed::Int8 { len: n, bucket, scales, packed }
+    }
+    fn wire_bytes(&self, n: usize) -> usize {
+        let bucket = self.bucket.max(1);
+        4 * (HEADER_WORDS + n.div_ceil(bucket) + n.div_ceil(4))
+    }
+}
+
+/// Top-k sparsification: keep the `ratio` fraction of elements with the
+/// largest |v| (at least one), ties broken by index so the selection is
+/// deterministic. Everything dropped lands in the error-feedback residual.
+pub struct TopK {
+    pub ratio: f64,
+}
+
+impl TopK {
+    /// Survivor count for an `n`-element buffer.
+    pub fn k_of(&self, n: usize) -> usize {
+        if n == 0 {
+            return 0;
+        }
+        ((n as f64 * self.ratio).ceil() as usize).clamp(1, n)
+    }
+}
+
+impl Compressor for TopK {
+    fn name(&self) -> &'static str {
+        "topk"
+    }
+    fn compress(&self, data: &[f32]) -> Compressed {
+        let n = data.len();
+        let k = self.k_of(n);
+        // O(n) selection of the k survivors (a full sort of 26M gradient
+        // elements per iteration would dominate the codec): the total
+        // order (|v| desc, index asc) makes the selected *set* unique, so
+        // the partition is deterministic even though select_nth shuffles
+        // within the halves.
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        let cmp = |a: &u32, b: &u32| {
+            data[*b as usize]
+                .abs()
+                .total_cmp(&data[*a as usize].abs())
+                .then(a.cmp(b))
+        };
+        if k > 0 && k < n {
+            order.select_nth_unstable_by(k - 1, cmp);
+            order.truncate(k);
+        }
+        let mut idx = order;
+        idx.sort_unstable();
+        let vals: Vec<f32> = idx.iter().map(|&i| data[i as usize]).collect();
+        Compressed::TopK { len: n, idx, vals }
+    }
+    fn wire_bytes(&self, n: usize) -> usize {
+        4 * (HEADER_WORDS + 2 * self.k_of(n))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Error feedback
+// ---------------------------------------------------------------------------
+
+/// Per-buffer error-feedback residuals, keyed by an opaque u64 the caller
+/// namespaces (KVStore key, fusion-bucket id, master-hop id, …).
+#[derive(Default)]
+pub struct EfState {
+    residual: HashMap<u64, Vec<f32>>,
+}
+
+impl EfState {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current residual for `key` (tests / diagnostics).
+    pub fn residual(&self, key: u64) -> Option<&[f32]> {
+        self.residual.get(&key).map(|v| v.as_slice())
+    }
+
+    pub fn clear(&mut self) {
+        self.residual.clear();
+    }
+}
+
+/// Error-feedback compression of one buffer: add the buffer's accumulated
+/// residual, compress, and store `input + residual − decode` as the new
+/// residual — so what the codec drops this round is carried into the next
+/// (`Σ decodes + residual == Σ inputs`, the EF invariant). Identity codecs
+/// pass through with a forever-zero residual.
+pub fn ef_compress(
+    codec: &dyn Compressor,
+    key: u64,
+    data: &[f32],
+    st: &mut EfState,
+) -> Compressed {
+    if codec.is_identity() {
+        return Compressed::Dense(data.to_vec());
+    }
+    let mut v = data.to_vec();
+    if let Some(r) = st.residual.get(&key) {
+        if r.len() == v.len() {
+            add_assign(&mut v, r);
+        }
+    }
+    let c = codec.compress(&v);
+    let dec = c.decompress();
+    for (vi, di) in v.iter_mut().zip(&dec) {
+        *vi -= di;
+    }
+    st.residual.insert(key, v);
+    c
+}
+
+/// What the receivers decode after an EF compression of `data` — the sim
+/// plane applies this round-trip to its gradients so lossy codecs affect
+/// the *numerics* (convergence curves), not just the wire-byte pricing.
+pub fn ef_roundtrip(
+    codec: &dyn Compressor,
+    key: u64,
+    data: &[f32],
+    st: &mut EfState,
+) -> Vec<f32> {
+    if codec.is_identity() {
+        return data.to_vec();
+    }
+    ef_compress(codec, key, data, st).decompress()
+}
+
+/// Modeled codec compute seconds for one encode + one decode of a
+/// `dense_bytes` buffer (the γ term the cost models add per compressed
+/// hop). Identity is free — its code paths never run a codec.
+pub fn codec_seconds(codec: &dyn Compressor, dense_bytes: usize, params: &CostParams) -> f64 {
+    if codec.is_identity() {
+        0.0
+    } else {
+        2.0 * dense_bytes as f64 * params.gamma_codec
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry — mirrors trainer/strategies: one entry per codec, every
+// consumer (CLI, config, figures, bench, CI matrix) derives from it.
+// ---------------------------------------------------------------------------
+
+/// One registered codec: name, docs metadata and a factory (the `f64`
+/// argument is the config's `topk_ratio`; codecs that don't need it ignore
+/// it).
+pub struct CodecEntry {
+    pub name: &'static str,
+    /// Human description for usage text / docs.
+    pub description: &'static str,
+    pub build: fn(f64) -> Box<dyn Compressor>,
+}
+
+/// The codec registry. Adding a codec is one impl plus one entry here.
+pub fn registry() -> &'static [CodecEntry] {
+    static REGISTRY: OnceLock<Vec<CodecEntry>> = OnceLock::new();
+    REGISTRY.get_or_init(|| {
+        vec![
+            CodecEntry {
+                name: "identity",
+                description: "no compression (bitwise pre-compression paths)",
+                build: |_| Box::new(Identity),
+            },
+            CodecEntry {
+                name: "int8",
+                description: "per-bucket linear int8 quantization + error feedback (~4x)",
+                build: |_| Box::new(Int8 { bucket: INT8_BUCKET }),
+            },
+            CodecEntry {
+                name: "topk",
+                description: "top-k sparsification + error feedback (--topk-ratio)",
+                build: |ratio| Box::new(TopK { ratio }),
+            },
+        ]
+    })
+}
+
+/// A registered codec handle — `Copy`, resolved by name, mirroring
+/// [`crate::config::Algo`].
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub struct Codec(u16);
+
+impl Codec {
+    /// Case-insensitive name lookup ("none" is accepted for "identity").
+    pub fn parse(s: &str) -> Option<Codec> {
+        let s = if s.eq_ignore_ascii_case("none") { "identity" } else { s };
+        registry()
+            .iter()
+            .position(|e| e.name.eq_ignore_ascii_case(s))
+            .map(|i| Codec(i as u16))
+    }
+
+    /// Lookup that panics (listing the registered names) on a miss.
+    pub fn named(s: &str) -> Codec {
+        Self::parse(s).unwrap_or_else(|| {
+            panic!(
+                "unknown compression codec {s:?} (registered: {})",
+                Self::names().join(", ")
+            )
+        })
+    }
+
+    pub fn identity() -> Codec {
+        Self::named("identity")
+    }
+
+    /// Every registered codec, registration order.
+    pub fn all() -> Vec<Codec> {
+        (0..registry().len()).map(|i| Codec(i as u16)).collect()
+    }
+
+    /// Every registered name, registration order (usage text, errors).
+    pub fn names() -> Vec<&'static str> {
+        registry().iter().map(|e| e.name).collect()
+    }
+
+    pub fn entry(&self) -> &'static CodecEntry {
+        &registry()[self.0 as usize]
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.entry().name
+    }
+
+    pub fn is_identity(&self) -> bool {
+        self.name() == "identity"
+    }
+
+    /// Instantiate the codec (`topk_ratio` is ignored by non-topk codecs).
+    pub fn build(&self, topk_ratio: f64) -> Box<dyn Compressor> {
+        (self.entry().build)(topk_ratio)
+    }
+}
+
+impl std::fmt::Debug for Codec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn payload(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = crate::util::Rng::new(seed);
+        (0..n)
+            .map(|_| (r.below(2001) as i64 - 1000) as f32 * 0.01)
+            .collect()
+    }
+
+    #[test]
+    fn registry_round_trips_and_has_three_codecs() {
+        assert_eq!(Codec::names(), vec!["identity", "int8", "topk"]);
+        for c in Codec::all() {
+            assert_eq!(Codec::parse(c.name()), Some(c));
+            assert_eq!(Codec::parse(&c.name().to_ascii_uppercase()), Some(c));
+        }
+        assert_eq!(Codec::parse("none"), Some(Codec::identity()));
+        assert_eq!(Codec::parse("zip9"), None);
+        assert!(Codec::identity().is_identity());
+        assert!(Codec::identity().build(0.5).is_identity());
+    }
+
+    #[test]
+    fn identity_round_trip_is_exact() {
+        let codec = Identity;
+        let data = payload(100, 1);
+        let c = codec.compress(&data);
+        assert_eq!(c.decompress(), data);
+        assert_eq!(codec.wire_bytes(100), 400);
+    }
+
+    #[test]
+    fn int8_error_bounded_by_half_scale() {
+        let codec = Int8 { bucket: 64 };
+        for n in [1usize, 63, 64, 65, 1000] {
+            let data = payload(n, n as u64);
+            let c = codec.compress(&data);
+            let dec = c.decompress();
+            let maxabs = data.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+            // Bucket maxabs <= global maxabs => per-element error <= the
+            // bucket's scale/2 <= global maxabs/254 (plus rounding fuzz).
+            let bound = maxabs / 254.0 * 1.01 + 1e-7;
+            for (d, o) in dec.iter().zip(&data) {
+                assert!((d - o).abs() <= bound, "n={n}: {o} -> {d} (bound {bound})");
+            }
+        }
+    }
+
+    #[test]
+    fn int8_all_zero_bucket_stays_zero() {
+        let codec = Int8 { bucket: 8 };
+        let c = codec.compress(&[0.0; 20]);
+        assert_eq!(c.decompress(), vec![0.0; 20]);
+    }
+
+    #[test]
+    fn topk_keeps_exactly_the_largest() {
+        let codec = TopK { ratio: 0.25 };
+        let data = vec![0.1, -5.0, 0.2, 3.0, -0.3, 0.0, 1.0, -0.05];
+        let c = codec.compress(&data); // k = 2
+        let dec = c.decompress();
+        assert_eq!(dec, vec![0.0, -5.0, 0.0, 3.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn topk_ties_break_by_index_deterministically() {
+        let codec = TopK { ratio: 0.5 };
+        let data = vec![1.0, -1.0, 1.0, -1.0];
+        let c = codec.compress(&data); // k = 2: first two by index
+        assert_eq!(c.decompress(), vec![1.0, -1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn wire_round_trip_bitwise_all_codecs() {
+        let data = payload(300, 7);
+        for codec in Codec::all() {
+            let built = codec.build(0.1);
+            let c = built.compress(&data);
+            let wire = c.to_wire();
+            let back = Compressed::from_wire(&wire).unwrap();
+            assert_eq!(back, c, "{}", codec.name());
+            assert_eq!(back.decompress(), c.decompress());
+            assert_eq!(wire.len() * 4, c.wire_bytes(), "{}", codec.name());
+        }
+    }
+
+    #[test]
+    fn modeled_wire_bytes_match_data_path() {
+        // The α-β-γ models must price exactly what mpisim moves.
+        for n in [1usize, 17, 100, 2048, 5000] {
+            let data = payload(n, n as u64 + 9);
+            for codec in Codec::all() {
+                let built = codec.build(0.05);
+                let modeled = built.wire_bytes(n);
+                let actual = built.compress(&data).wire_bytes();
+                if codec.is_identity() {
+                    // Identity models the raw dense bytes (its payloads
+                    // never take the compressed wire path).
+                    assert_eq!(modeled, n * 4);
+                } else {
+                    assert_eq!(modeled, actual, "{} n={n}", codec.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn compressed_wire_smaller_than_dense() {
+        let n = 100_000;
+        let int8 = Int8 { bucket: INT8_BUCKET };
+        let topk = TopK { ratio: 0.01 };
+        assert!(int8.wire_bytes(n) < n * 4 / 3, "{}", int8.wire_bytes(n));
+        assert!(topk.wire_bytes(n) < n * 4 / 10, "{}", topk.wire_bytes(n));
+    }
+
+    #[test]
+    fn from_wire_rejects_garbage() {
+        assert!(Compressed::from_wire(&[]).is_err());
+        let mut w = Compressed::Dense(vec![1.0; 4]).to_wire();
+        w.pop();
+        assert!(Compressed::from_wire(&w).is_err());
+        let w = vec![f32::from_bits(99), f32::from_bits(1), f32::from_bits(0)];
+        assert!(Compressed::from_wire(&w).is_err());
+        // A zero-length topk payload claiming k=1 must be rejected (its
+        // index would read out of bounds on decompress), as must any
+        // index >= len.
+        let w = vec![
+            f32::from_bits(WIRE_TOPK),
+            f32::from_bits(0),
+            f32::from_bits(1),
+            f32::from_bits(0),
+            1.0,
+        ];
+        assert!(Compressed::from_wire(&w).is_err());
+        let w = vec![
+            f32::from_bits(WIRE_TOPK),
+            f32::from_bits(4),
+            f32::from_bits(1),
+            f32::from_bits(4), // index == len
+            1.0,
+        ];
+        assert!(Compressed::from_wire(&w).is_err());
+    }
+
+    #[test]
+    fn error_feedback_invariant_sum_of_decodes() {
+        // Σ decodes + residual == Σ inputs (up to f32 association): feed T
+        // varying gradients through EF and check the books balance.
+        for codec in [
+            Box::new(Int8 { bucket: 32 }) as Box<dyn Compressor>,
+            Box::new(TopK { ratio: 0.1 }),
+        ] {
+            let mut st = EfState::new();
+            let n = 200;
+            let mut sum_in = vec![0.0f32; n];
+            let mut sum_dec = vec![0.0f32; n];
+            for t in 0..20u64 {
+                let g = payload(n, 100 + t);
+                add_assign(&mut sum_in, &g);
+                let dec = ef_compress(&*codec, 7, &g, &mut st).decompress();
+                add_assign(&mut sum_dec, &dec);
+            }
+            let resid = st.residual(7).unwrap();
+            for i in 0..n {
+                let lhs = sum_dec[i] + resid[i];
+                assert!(
+                    (lhs - sum_in[i]).abs() < 1e-3,
+                    "{}: {} vs {}",
+                    codec.name(),
+                    lhs,
+                    sum_in[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ef_identity_never_accumulates_residual() {
+        let mut st = EfState::new();
+        let g = payload(50, 3);
+        let c = ef_compress(&Identity, 1, &g, &mut st);
+        assert_eq!(c.decompress(), g);
+        assert!(st.residual(1).is_none());
+        assert_eq!(ef_roundtrip(&Identity, 1, &g, &mut st), g);
+    }
+
+    #[test]
+    fn ef_residual_resets_on_length_change() {
+        // A stale residual of the wrong length (key reuse across shapes)
+        // must be ignored, not panic or corrupt.
+        let mut st = EfState::new();
+        let codec = TopK { ratio: 0.5 };
+        ef_compress(&codec, 1, &payload(10, 1), &mut st);
+        let g = payload(6, 2);
+        let dec = ef_compress(&codec, 1, &g, &mut st).decompress();
+        assert_eq!(dec.len(), 6);
+        assert_eq!(st.residual(1).unwrap().len(), 6);
+    }
+
+    #[test]
+    fn codec_seconds_free_for_identity_positive_otherwise() {
+        let p = CostParams::testbed1();
+        assert_eq!(codec_seconds(&Identity, 1 << 20, &p), 0.0);
+        assert!(codec_seconds(&Int8 { bucket: INT8_BUCKET }, 1 << 20, &p) > 0.0);
+    }
+
+    #[test]
+    fn pack_unpack_i8_round_trips() {
+        let mut packed = vec![0u32; 3];
+        let codes: Vec<i8> = vec![-127, -1, 0, 1, 127, 64, -64, 3, -3];
+        for (i, &c) in codes.iter().enumerate() {
+            pack_i8(&mut packed, i, c);
+        }
+        for (i, &c) in codes.iter().enumerate() {
+            assert_eq!(unpack_i8(&packed, i), c);
+        }
+    }
+}

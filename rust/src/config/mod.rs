@@ -8,6 +8,7 @@
 //! set of algorithms than the trainers run.
 
 use crate::collectives::AlgoKind;
+use crate::compress::{Codec, Compressor};
 use crate::jsonlite::Value;
 use crate::netsim::CostParams;
 use crate::ps::FaultPlan;
@@ -67,6 +68,13 @@ pub struct ExperimentConfig {
     /// Sub-chunks per pipelined collective step; 0 = the testbed preset's
     /// value ([`CostParams::pipeline_chunks`]), 1 = blocking schedules.
     pub pipeline_chunks: usize,
+    /// Gradient codec (the compression plane): "identity" (default, the
+    /// bitwise pre-compression paths), "int8" (per-bucket linear
+    /// quantization + error feedback) or "topk" (top-k sparsification +
+    /// error feedback). Registry-validated like `algo`.
+    pub compression: String,
+    /// Fraction of elements the `topk` codec keeps per buffer, in (0, 1].
+    pub topk_ratio: f64,
     pub seed: u64,
     /// Cost-model preset: "testbed1" or "minsky".
     pub testbed: String,
@@ -120,6 +128,8 @@ impl ExperimentConfig {
             fusion_bytes: 4 << 20,
             overlap: true,
             pipeline_chunks: 0,
+            compression: "identity".into(),
+            topk_ratio: 0.01,
             seed: 42,
             testbed: "testbed1".into(),
             // ResNet-50 on K80-class GPUs: ~0.35 s per 128-batch; we keep
@@ -166,6 +176,18 @@ impl ExperimentConfig {
         AlgoKind::parse(&self.collective).unwrap_or(AlgoKind::Auto)
     }
 
+    /// Parsed `compression` knob; unknown strings fall back to identity
+    /// (lossless, so this is safe — the JSON/CLI boundaries reject unknown
+    /// names outright with the registry listed).
+    pub fn codec(&self) -> Codec {
+        Codec::parse(&self.compression).unwrap_or_else(Codec::identity)
+    }
+
+    /// Instantiate the configured codec (`topk_ratio` applied).
+    pub fn build_compressor(&self) -> Box<dyn Compressor> {
+        self.codec().build(self.topk_ratio)
+    }
+
     /// Serialize to JSON (results provenance).
     pub fn to_json(&self) -> Value {
         Value::obj(vec![
@@ -189,6 +211,8 @@ impl ExperimentConfig {
             ("fusion_bytes", Value::num(self.fusion_bytes as f64)),
             ("overlap", Value::Bool(self.overlap)),
             ("pipeline_chunks", Value::num(self.pipeline_chunks as f64)),
+            ("compression", Value::str(&self.compression)),
+            ("topk_ratio", Value::num(self.topk_ratio)),
             ("seed", Value::num(self.seed as f64)),
             ("testbed", Value::str(&self.testbed)),
             ("compute_s_per_batch", Value::num(self.compute_s_per_batch)),
@@ -260,6 +284,19 @@ impl ExperimentConfig {
         c.fusion_bytes = getu("fusion_bytes", c.fusion_bytes as f64)? as usize;
         c.overlap = v.get("overlap").and_then(|x| x.as_bool()).unwrap_or(c.overlap);
         c.pipeline_chunks = getu("pipeline_chunks", c.pipeline_chunks as f64)? as usize;
+        c.compression = gets("compression", &c.compression);
+        anyhow::ensure!(
+            Codec::parse(&c.compression).is_some(),
+            "unknown compression {:?} (registered: {})",
+            c.compression,
+            Codec::names().join(", ")
+        );
+        c.topk_ratio = getn("topk_ratio", c.topk_ratio);
+        anyhow::ensure!(
+            c.topk_ratio.is_finite() && c.topk_ratio > 0.0 && c.topk_ratio <= 1.0,
+            "config field \"topk_ratio\" must be in (0, 1], got {}",
+            c.topk_ratio
+        );
         c.seed = getu("seed", c.seed as f64)? as u64;
         c.testbed = gets("testbed", &c.testbed);
         c.compute_s_per_batch = getu("compute_s_per_batch", c.compute_s_per_batch)?;
@@ -378,6 +415,35 @@ mod tests {
         // Zero stays legal (servers=0 is the pure-MPI mode).
         let v = crate::jsonlite::parse(r#"{"algo": "mpi-SGD", "servers": 0}"#).unwrap();
         assert_eq!(ExperimentConfig::from_json(&v).unwrap().servers, 0);
+    }
+
+    #[test]
+    fn compression_knobs_round_trip_and_validate() {
+        let mut c = ExperimentConfig::testbed1(Algo::named("mpi-SGD"));
+        assert_eq!(c.compression, "identity");
+        assert!(c.codec().is_identity());
+        c.compression = "topk".into();
+        c.topk_ratio = 0.05;
+        let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.compression, "topk");
+        assert!((c2.topk_ratio - 0.05).abs() < 1e-12);
+        assert_eq!(c2.build_compressor().name(), "topk");
+        // Unknown codec names are rejected at the JSON boundary with the
+        // registry listed; direct field mutation degrades to identity.
+        c.compression = "zip9".into();
+        assert!(c.codec().is_identity());
+        let err = ExperimentConfig::from_json(&c.to_json()).unwrap_err();
+        let msg = format!("{err:#}");
+        for name in crate::compress::Codec::names() {
+            assert!(msg.contains(name), "error does not list {name}: {msg}");
+        }
+        // topk_ratio outside (0, 1] is rejected with the field named.
+        c.compression = "topk".into();
+        c.topk_ratio = 0.0;
+        let err = ExperimentConfig::from_json(&c.to_json()).unwrap_err();
+        assert!(format!("{err:#}").contains("topk_ratio"));
+        c.topk_ratio = 1.5;
+        assert!(ExperimentConfig::from_json(&c.to_json()).is_err());
     }
 
     #[test]

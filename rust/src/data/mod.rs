@@ -113,10 +113,26 @@ impl Shard {
     /// Start index of batch `b` in epoch `epoch` for this worker.
     /// Epochs rotate the shard assignment so every worker eventually sees
     /// different data (a cheap stand-in for reshuffling).
+    ///
+    /// Every batch stays inside the training range `[0, total)`, and —
+    /// whenever the shard can hold one batch (`per_worker >= batch`) —
+    /// strictly inside this worker's shard: a batch index past
+    /// [`Shard::batches_per_epoch`] wraps by *whole batches* (re-running
+    /// the shard) and the start is clamped so the final batch never
+    /// crosses the shard boundary. The old `(b * batch) % per_worker`
+    /// wrapped mid-stride when `batch` did not divide `per_worker`,
+    /// sampling a neighbor's shard (double-counted under epoch rotation)
+    /// or past the training range entirely. When the shard is *smaller*
+    /// than one batch (a degenerate config), batches necessarily overlap
+    /// neighbors, but the final clamp keeps them off the held-out range.
     pub fn batch_start(&self, b: u64) -> u64 {
-        let per_worker = self.total / self.n_workers as u64;
+        let per_worker = (self.total / self.n_workers as u64).max(1);
         let rotated = (self.worker as u64 + self.epoch) % self.n_workers as u64;
-        rotated * per_worker + (b * self.batch as u64) % per_worker.max(1)
+        let bpe = (per_worker / self.batch as u64).max(1);
+        let offset = (b % bpe) * self.batch as u64;
+        let offset = offset.min(per_worker.saturating_sub(self.batch as u64));
+        let start = rotated * per_worker + offset;
+        start.min(self.total.saturating_sub(self.batch as u64))
     }
 }
 
@@ -249,6 +265,76 @@ mod tests {
         let starts: Vec<u64> = (0..nw).map(|w| sh(w).batch_start(0)).collect();
         for (w, s) in starts.iter().enumerate() {
             assert_eq!(*s, w as u64 * 100);
+        }
+    }
+
+    #[test]
+    fn shard_batches_disjoint_and_in_range_even_when_batch_misdivides() {
+        // Property: over every worker and every in-epoch batch index, the
+        // [start, start+batch) ranges are pairwise disjoint and inside
+        // [0, total) — including shapes where batch does not divide the
+        // per-worker shard (the old modulo wrapped mid-stride and crossed
+        // shard boundaries) and indices past batches_per_epoch.
+        for (total, nw, batch) in [
+            (1200u64, 12usize, 10usize),
+            (1000, 3, 30),  // per_worker 333, batch !| per_worker
+            (700, 4, 32),   // per_worker 175
+            (64, 5, 7),     // per_worker 12
+            (97, 2, 13),    // odd everything
+        ] {
+            for epoch in [0u64, 1, 3] {
+                let mut ranges: Vec<(u64, u64)> = Vec::new();
+                for w in 0..nw {
+                    let sh = Shard { worker: w, n_workers: nw, total, batch, epoch };
+                    let bpe = sh.batches_per_epoch();
+                    for b in 0..bpe {
+                        let s = sh.batch_start(b);
+                        let e = s + batch as u64;
+                        assert!(
+                            e <= total,
+                            "total={total} nw={nw} batch={batch} w={w} b={b}: \
+                             [{s}, {e}) leaves the training range"
+                        );
+                        ranges.push((s, e));
+                    }
+                    // Past-the-epoch indices wrap by whole batches and stay
+                    // inside this worker's shard.
+                    let per_worker = total / nw as u64;
+                    let lo = ((w as u64 + epoch) % nw as u64) * per_worker;
+                    for b in [bpe, bpe + 1, 2 * bpe + 3] {
+                        let s = sh.batch_start(b);
+                        assert!(
+                            s >= lo && s + (batch as u64) <= lo + per_worker,
+                            "wrapped batch b={b} of worker {w} left its shard"
+                        );
+                    }
+                }
+                ranges.sort_unstable();
+                for pair in ranges.windows(2) {
+                    assert!(
+                        pair[0].1 <= pair[1].0,
+                        "total={total} nw={nw} batch={batch}: overlap {pair:?}"
+                    );
+                }
+            }
+        }
+        // Degenerate shapes (shard smaller than one batch): disjointness
+        // is impossible, but every batch must still stay inside the
+        // training range — never into the held-out indices.
+        for (total, nw, batch) in [(10u64, 4usize, 7usize), (5, 8, 3), (6, 2, 8)] {
+            for epoch in [0u64, 2] {
+                for w in 0..nw {
+                    let sh = Shard { worker: w, n_workers: nw, total, batch, epoch };
+                    for b in [0u64, 1, 5] {
+                        let s = sh.batch_start(b);
+                        assert!(
+                            s + (batch as u64) <= total.max(batch as u64),
+                            "degenerate total={total} nw={nw} batch={batch} w={w}: start {s}"
+                        );
+                        assert!(s <= total.saturating_sub(batch as u64));
+                    }
+                }
+            }
         }
     }
 

@@ -7,6 +7,7 @@
 //! the bench harness are thin wrappers around these.
 
 use crate::collectives::sim::{simulate as csim, Design, SimResult};
+use crate::compress::Compressor as _;
 use crate::config::{Algo, ExperimentConfig};
 use crate::metrics::{write_runs_csv, RunResult, Table};
 use crate::netsim::CostParams;
@@ -183,6 +184,33 @@ pub fn fig_churn(artifacts: &Path, out_dir: &Path, epochs: usize) -> Result<Vec<
         runs.push(run);
     }
     write_runs_csv(&out_dir.join("fig_churn.csv"), &runs)?;
+    Ok(runs)
+}
+
+/// Accuracy vs virtual time under gradient compression: one mpi-SGD run
+/// per registered codec (`identity` / `int8` / `topk`, registry-derived so
+/// a new codec appears here automatically), identical in everything but
+/// the compression knob. The identity curve is bitwise the plain mpi-SGD
+/// run; lossy codecs shift the time axis by the wire-byte savings on the
+/// PS path (minus their codec γ) and the accuracy axis by whatever the
+/// error-feedback round-trip costs convergence. CSV: `fig_compress.csv`.
+pub fn fig_compress(artifacts: &Path, out_dir: &Path, epochs: usize) -> Result<Vec<RunResult>> {
+    let mut runs = Vec::new();
+    for codec in crate::compress::Codec::all() {
+        let mut cfg = fig_base(Algo::named("mpi-SGD"), epochs);
+        cfg.compression = codec.name().into();
+        let wire_mb = cfg.build_compressor().wire_bytes(cfg.virtual_model_bytes / 4) as f64
+            / (1 << 20) as f64;
+        eprintln!(
+            "[fig] running mpi-SGD [{}] ({} epochs, {wire_mb:.1} MB/push on the wire)...",
+            codec.name(),
+            cfg.epochs
+        );
+        let mut run = crate::trainer::sim::simulate(&cfg, artifacts)?;
+        run.label = format!("mpi-SGD [{}]", codec.name());
+        runs.push(run);
+    }
+    write_runs_csv(&out_dir.join("fig_compress.csv"), &runs)?;
     Ok(runs)
 }
 

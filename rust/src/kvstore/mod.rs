@@ -25,14 +25,24 @@
 //! gradients can be coalesced into fused buckets before dispatch
 //! ([`KvWorker::pushpull_fused`], cap [`KvWorker::fusion_bytes`]).
 //!
+//! The gradient-compression plane ([`crate::compress`]) rides the same
+//! paths: with a lossy codec configured
+//! ([`KvWorker::configure_compression`]), intra-client exchanges run the
+//! compressed allgather-reduce, masters push codec wire payloads the
+//! servers decode before aggregating, and every lossy hop keeps an
+//! error-feedback residual. The identity codec (default) is
+//! regression-pinned to the bitwise pre-compression paths.
+//!
 //! Init discipline (matching the PS servers' pre_init replay): a `push`
 //! that races ahead of its key's `init` is buffered and folded into the
 //! init value; a `pull` of a never-initialized key is a programming error
 //! and panics with a clear message.
 
 use crate::collectives::{
-    allreduce_with, fused_allreduce, tensor_allreduce_with, AlgoKind, HostReduce,
+    allreduce_with, compressed_allreduce, fused_allreduce_compressed, tensor_allreduce_with,
+    AlgoKind, HostReduce,
 };
+use crate::compress::{ef_compress, Codec, Compressor, EfState};
 use crate::engine::{Engine, Var};
 use crate::mpisim::Comm;
 use crate::netsim::CostParams;
@@ -160,7 +170,25 @@ pub struct KvWorker {
     pub fusion_bytes: usize,
     /// Cost-model constants the `Auto` schedule tunes against.
     pub cost: CostParams,
+    /// Gradient codec (the compression plane). Identity (the default)
+    /// keeps every path bitwise on the pre-compression implementation;
+    /// lossy codecs shrink both hops — the intra-client exchange runs the
+    /// compressed allgather-reduce, and masters push codec wire payloads
+    /// the PS decodes before aggregating.
+    codec: Arc<dyn Compressor>,
+    /// Error-feedback residuals, one buffer per (namespace | key): what a
+    /// lossy codec drops this round is carried into the next compression
+    /// of the same buffer.
+    ef: Arc<Mutex<EfState>>,
 }
+
+/// EF-residual namespaces (disjoint from plain KVStore keys): the master's
+/// client→PS hop and the fused-bucket path each accumulate their own
+/// residuals per key.
+const EF_MASTER: u64 = 1 << 40;
+const EF_FUSED: u64 = 1 << 41;
+/// Whole-model intra-client allreduce ([`KvWorker::client_allreduce`]).
+const EF_CLIENT: u64 = 1 << 42;
 
 impl KvWorker {
     /// Create a worker endpoint. `comm` is its communicator inside its MPI
@@ -196,7 +224,20 @@ impl KvWorker {
             group: 2,
             fusion_bytes: 0,
             cost: CostParams::testbed1(),
+            codec: Arc::from(Codec::identity().build(0.0)),
+            ef: Arc::new(Mutex::new(EfState::new())),
         }
+    }
+
+    /// Configure the gradient codec (`topk_ratio` is ignored by non-topk
+    /// codecs). Identity restores the bitwise pre-compression paths.
+    pub fn configure_compression(&mut self, codec: Codec, topk_ratio: f64) {
+        self.codec = Arc::from(codec.build(topk_ratio));
+    }
+
+    /// Name of the active codec (bench/diagnostics).
+    pub fn codec_name(&self) -> &'static str {
+        self.codec.name()
     }
 
     /// Configure the collective layer in one call (used by the launcher).
@@ -218,6 +259,11 @@ impl KvWorker {
     /// Capture the collective parameters for use inside an engine op.
     fn algo_params(&self) -> (AlgoKind, usize, usize, CostParams) {
         (self.algo, self.n_rings, self.group, self.cost.clone())
+    }
+
+    /// Capture the compression plane for use inside an engine op.
+    fn codec_params(&self) -> (Arc<dyn Compressor>, Arc<Mutex<EfState>>) {
+        (self.codec.clone(), self.ef.clone())
     }
 
     fn key_var(&self, key: Key) -> Var {
@@ -283,10 +329,46 @@ impl KvWorker {
         }
     }
 
+    /// The PS hop shared by the dist push and the MPI master push: dense
+    /// ZPush, or — on a codec-carrying *gradient* push — EF-compress under
+    /// `ef_key` and ship the wire payload for the server to decode before
+    /// aggregation.
+    fn ps_push(
+        ps: &Arc<Mutex<PsClient>>,
+        codec: &dyn Compressor,
+        ef: &Mutex<EfState>,
+        use_codec: bool,
+        ef_key: u64,
+        key: Key,
+        data: Vec<f32>,
+    ) {
+        if !use_codec || codec.is_identity() {
+            ps.lock().unwrap().push(key, data);
+        } else {
+            let wire = ef_compress(codec, ef_key, &data, &mut ef.lock().unwrap()).to_wire();
+            ps.lock().unwrap().push_compressed(key, wire);
+        }
+    }
+
     /// KVStore.push (Fig. 4): enqueue the client-side aggregation +
     /// master ZPush as an engine op reading the key var and mutating the
-    /// comm var.
+    /// comm var. Payloads are treated as *gradients*: a lossy codec
+    /// compresses both hops (with error feedback).
     pub fn push(&self, key: Key, data: Vec<f32>) {
+        self.push_impl(key, data, true);
+    }
+
+    /// [`KvWorker::push`] for *model-snapshot* payloads (the
+    /// model-averaging family's sync points: ESGD / Local SGD / BMUF push
+    /// replicas the server merges and workers adopt wholesale). Always
+    /// dense: error feedback is an unbiased-over-time *gradient*
+    /// mechanism — sparsifying a snapshot that is adopted outright is
+    /// simply mass loss — so lossy codecs never touch these pushes.
+    pub fn push_model(&self, key: Key, data: Vec<f32>) {
+        self.push_impl(key, data, false);
+    }
+
+    fn push_impl(&self, key: Key, data: Vec<f32>, use_codec: bool) {
         let kv = self.key_var(key);
         match self.ktype {
             KvType::Local => {
@@ -311,8 +393,11 @@ impl KvWorker {
             }
             KvType::DistSync | KvType::DistAsync => {
                 let ps = self.ps.clone().unwrap();
+                let (codec, ef) = self.codec_params();
                 self.engine.push(
-                    move || ps.lock().unwrap().push(key, data),
+                    move || {
+                        Self::ps_push(&ps, &*codec, &ef, use_codec, key as u64, key, data);
+                    },
                     &[kv],
                     &[self.comm_var],
                 );
@@ -321,16 +406,46 @@ impl KvWorker {
                 let comm = self.comm.clone().unwrap();
                 let ps = self.ps.clone();
                 let (kind, rings, group, cost) = self.algo_params();
+                let (codec, ef) = self.codec_params();
                 self.engine.push(
                     move || {
                         let mut c = comm.lock().unwrap();
                         let mut buf = data;
-                        // Aggregate across the MPI client first (§4.2.2)...
-                        allreduce_with(kind, &mut c, &mut buf, rings, group, &cost);
-                        // ...then only the master talks to the servers.
+                        // Aggregate across the MPI client first (§4.2.2);
+                        // a codec-carrying gradient push moves compressed
+                        // payloads (identity delegates to the plain
+                        // schedules inside, bitwise), a model push stays
+                        // on the dense schedules...
+                        if use_codec {
+                            compressed_allreduce(
+                                kind,
+                                &mut c,
+                                &mut buf,
+                                &*codec,
+                                key as u64,
+                                &mut ef.lock().unwrap(),
+                                rings,
+                                group,
+                                &cost,
+                            );
+                        } else {
+                            allreduce_with(kind, &mut c, &mut buf, rings, group, &cost);
+                        }
+                        // ...then only the master talks to the servers,
+                        // re-compressing the client aggregate for the PS
+                        // hop (its own EF residual: the master's dropped
+                        // mass returns on *its* next push of this key).
                         if c.rank() == 0 {
                             if let Some(ps) = &ps {
-                                ps.lock().unwrap().push(key, buf);
+                                Self::ps_push(
+                                    ps,
+                                    &*codec,
+                                    &ef,
+                                    use_codec,
+                                    EF_MASTER | key as u64,
+                                    key,
+                                    buf,
+                                );
                             }
                         }
                     },
@@ -428,11 +543,22 @@ impl KvWorker {
                 let (pending, slot) = Pending::engine_backed(self.engine.clone(), vec![kv]);
                 let comm = self.comm.clone().unwrap();
                 let (kind, rings, group, cost) = self.algo_params();
+                let (codec, ef) = self.codec_params();
                 self.engine.push(
                     move || {
                         let mut c = comm.lock().unwrap();
                         let mut buf = data;
-                        allreduce_with(kind, &mut c, &mut buf, rings, group, &cost);
+                        compressed_allreduce(
+                            kind,
+                            &mut c,
+                            &mut buf,
+                            &*codec,
+                            key as u64,
+                            &mut ef.lock().unwrap(),
+                            rings,
+                            group,
+                            &cost,
+                        );
                         *slot.lock().unwrap() = Some(buf);
                     },
                     &[],
@@ -470,17 +596,27 @@ impl KvWorker {
                 let (pending, slot) = Pending::engine_backed(self.engine.clone(), key_vars);
                 let comm = self.comm.clone().unwrap();
                 let (kind, rings, group, cost) = self.algo_params();
+                let (codec, ef) = self.codec_params();
                 let fusion_bytes = self.fusion_bytes;
                 self.engine.push(
                     move || {
                         let mut c = comm.lock().unwrap();
+                        // Per-bucket EF residuals keyed by the bucket's
+                        // first KVStore key: the bucket layout is a pure
+                        // function of the key lens, so the same bucket
+                        // accumulates the same residual every iteration.
+                        let ef_keys: Vec<u64> =
+                            keyed.iter().map(|(k, _)| EF_FUSED | *k as u64).collect();
                         let mut bufs: Vec<Vec<f32>> =
                             keyed.into_iter().map(|(_, v)| v).collect();
-                        fused_allreduce(
+                        fused_allreduce_compressed(
                             kind,
                             &mut c,
                             &mut bufs,
+                            &ef_keys,
                             fusion_bytes,
+                            &*codec,
+                            &mut ef.lock().unwrap(),
                             rings,
                             group,
                             &cost,
@@ -611,11 +747,23 @@ impl KvWorker {
         let (pending, slot) = Pending::engine_backed(self.engine.clone(), vec![self.comm_var]);
         let comm = self.comm.clone().expect("client_allreduce needs MPI");
         let (kind, rings, group, cost) = self.algo_params();
+        let (codec, ef) = self.codec_params();
         self.engine.push(
             move || {
                 let mut c = comm.lock().unwrap();
                 let mut buf = data;
-                allreduce_with(kind, &mut c, &mut buf, rings, group, &cost);
+                // Whole-model buffer: one EF residual slot of its own.
+                compressed_allreduce(
+                    kind,
+                    &mut c,
+                    &mut buf,
+                    &*codec,
+                    EF_CLIENT,
+                    &mut ef.lock().unwrap(),
+                    rings,
+                    group,
+                    &cost,
+                );
                 *slot.lock().unwrap() = Some(buf);
             },
             &[],
@@ -1034,6 +1182,118 @@ mod tests {
         for h in hs {
             assert_eq!(h.join().unwrap(), vec![0.25, -1.5, 3.0]);
         }
+    }
+
+    #[test]
+    fn identity_codec_pushpull_bitwise_matches_default() {
+        // configure_compression(identity) must leave the pure-MPI pushpull
+        // on the exact pre-compression path: bitwise-equal results.
+        let run = |configure: bool| -> Vec<Vec<f32>> {
+            let comms = World::create(3);
+            let hs: Vec<_> = comms
+                .into_iter()
+                .map(|comm| {
+                    thread::spawn(move || {
+                        let engine = Arc::new(Engine::new(1));
+                        let mut kv = KvWorker::create(KvType::SyncMpi, engine, Some(comm), None);
+                        if configure {
+                            kv.configure_compression(crate::compress::Codec::identity(), 0.01);
+                        }
+                        kv.pushpull(0, vec![0.1 + kv.rank() as f32, -2.5]).wait()
+                    })
+                })
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        };
+        assert_eq!(run(true), run(false));
+    }
+
+    #[test]
+    fn compressed_pushpull_consistent_and_accurate() {
+        for codec in ["int8", "topk"] {
+            let comms = World::create(3);
+            let hs: Vec<_> = comms
+                .into_iter()
+                .map(|comm| {
+                    thread::spawn(move || {
+                        let engine = Arc::new(Engine::new(1));
+                        let mut kv = KvWorker::create(KvType::SyncMpi, engine, Some(comm), None);
+                        kv.configure_compression(crate::compress::Codec::named(codec), 1.0);
+                        // topk ratio 1.0 keeps everything; int8 quantizes.
+                        kv.pushpull(3, vec![1.0, -2.0, 0.5, 4.0]).wait()
+                    })
+                })
+                .collect();
+            let out: Vec<Vec<f32>> = hs.into_iter().map(|h| h.join().unwrap()).collect();
+            for o in &out[1..] {
+                assert_eq!(*o, out[0], "{codec}: ranks disagree");
+            }
+            for (a, want) in out[0].iter().zip([3.0f32, -6.0, 1.5, 12.0]) {
+                assert!((a - want).abs() < 0.1, "{codec}: {a} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn compressed_mpi_push_reaches_ps_decoded() {
+        // 1 client of 2 workers with int8: the client aggregate crosses
+        // the PS hop as a codec payload; the server decodes then applies.
+        let group = ServerGroup::spawn(1, SyncMode::Sync, 1);
+        let c0 = group.client();
+        c0.init(0, vec![0.0, 0.0]);
+        c0.set_optimizer(|| Box::new(Sgd::new(SgdHyper::plain(1.0, 1.0))));
+        let comms = World::create(2);
+        let hs: Vec<_> = comms
+            .into_iter()
+            .map(|comm| {
+                let ps = group.client();
+                thread::spawn(move || {
+                    let engine = Arc::new(Engine::new(1));
+                    let mut kv = KvWorker::create(KvType::SyncMpi, engine, Some(comm), Some(ps));
+                    kv.configure_compression(crate::compress::Codec::named("int8"), 0.01);
+                    kv.push(0, vec![1.0, 2.0]);
+                    kv.pull(0).wait()
+                })
+            })
+            .collect();
+        for h in hs {
+            let v = h.join().unwrap();
+            // Client aggregate [2, 4]; server: 0 - [2, 4] (within int8
+            // tolerance across the two lossy hops).
+            assert!((v[0] + 2.0).abs() < 0.1 && (v[1] + 4.0).abs() < 0.1, "{v:?}");
+        }
+        group.shutdown();
+    }
+
+    #[test]
+    fn push_model_bypasses_the_codec() {
+        // Model-snapshot pushes stay dense even with a lossy codec
+        // configured: the pulled merge must be bit-exact, not sparsified
+        // (topk at this ratio would zero two of the three elements).
+        let group = ServerGroup::spawn(1, SyncMode::Sync, 1);
+        let c0 = group.client();
+        c0.init(0, vec![0.0, 0.0, 0.0]);
+        c0.set_optimizer(|| Box::new(Sgd::new(SgdHyper::plain(1.0, 1.0))));
+        let comms = World::create(2);
+        let hs: Vec<_> = comms
+            .into_iter()
+            .map(|comm| {
+                let ps = group.client();
+                thread::spawn(move || {
+                    let engine = Arc::new(Engine::new(1));
+                    let mut kv = KvWorker::create(KvType::SyncMpi, engine, Some(comm), Some(ps));
+                    kv.configure_compression(crate::compress::Codec::named("topk"), 0.34);
+                    kv.push_model(0, vec![1.0, -2.0, 0.25]);
+                    kv.pull(0).wait()
+                })
+            })
+            .collect();
+        for h in hs {
+            // Client ring sums two replicas exactly; server applies the
+            // dense aggregate: w = 0 - [2, -4, 0.5].
+            assert_eq!(h.join().unwrap(), vec![-2.0, 4.0, -0.5]);
+        }
+        group.shutdown();
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //! communicator, KVStore endpoint).
 
 use crate::collectives::AlgoKind;
+use crate::compress::Codec;
 use crate::config::{Algo, ExperimentConfig};
 use crate::engine::Engine;
 use crate::kvstore::{KvType, KvWorker};
@@ -39,6 +40,10 @@ pub struct JobSpec {
     pub group: usize,
     /// Cost-model constants the `Auto` schedule tunes against.
     pub cost: CostParams,
+    /// Gradient codec (the compression plane; identity = uncompressed).
+    pub codec: Codec,
+    /// `topk` codec keep-ratio (ignored by the other codecs).
+    pub topk_ratio: f64,
     /// Scripted churn (empty = the static job of the original launcher).
     /// MPI kvstore types only: elasticity is the PS-task half of the
     /// hybrid, and dist modes have no client worlds to rebuild.
@@ -65,6 +70,8 @@ impl JobSpec {
             rings: 2,
             group: 2,
             cost: CostParams::testbed1(),
+            codec: Codec::identity(),
+            topk_ratio: 0.01,
             fault: FaultPlan::none(),
             reconfig_every: 1,
         }
@@ -81,6 +88,8 @@ impl JobSpec {
         spec.fusion_bytes = cfg.fusion_bytes;
         spec.rings = cfg.rings.max(1);
         spec.cost = cfg.cost_params();
+        spec.codec = cfg.codec();
+        spec.topk_ratio = cfg.topk_ratio;
         spec.group = spec.cost.gpus_per_worker.max(1);
         // Membership epochs ride the *strategy's* declared sync cadence
         // (every iteration for sync modes, the lazy INTERVAL for
@@ -497,6 +506,8 @@ struct Wiring {
     rings: usize,
     group: usize,
     cost: CostParams,
+    codec: Codec,
+    topk_ratio: f64,
 }
 
 impl Wiring {
@@ -511,6 +522,8 @@ impl Wiring {
             rings: spec.rings,
             group: spec.group,
             cost: spec.cost.clone(),
+            codec: spec.codec,
+            topk_ratio: spec.topk_ratio,
         }
     }
 
@@ -525,6 +538,7 @@ impl Wiring {
             self.fusion_bytes,
             self.cost.clone(),
         );
+        kv.configure_compression(self.codec, self.topk_ratio);
         (engine, kv)
     }
 }
@@ -714,6 +728,8 @@ mod tests {
             rings: 2,
             group: 2,
             cost: CostParams::testbed1(),
+            codec: Codec::identity(),
+            topk_ratio: 0.01,
             fault: FaultPlan::none(),
             reconfig_every: 1,
         }

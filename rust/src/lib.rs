@@ -10,7 +10,9 @@
 //!   simulated MPI library ([`mpisim`]), the hybrid [`kvstore`] API with
 //!   communication embedded in a dataflow [`engine`], the paper's
 //!   pluggable tensor [`collectives`] (ring / halving-doubling /
-//!   hierarchical + α-β-γ autotuner and gradient fusion), a network
+//!   hierarchical + α-β-γ autotuner and gradient fusion), a pluggable
+//!   gradient-compression plane ([`compress`]: identity / int8 / top-k
+//!   with error feedback, priced end to end), a network
 //!   simulator ([`netsim`]) and the distributed SGD [`trainer`]s, whose
 //!   algorithms are pluggable [`trainer::strategies`] objects behind a
 //!   string-keyed registry (the paper's dist/mpi × SGD/ASGD/ESGD modes
@@ -23,6 +25,7 @@
 //! See `DESIGN.md` for the system inventory and experiment index.
 
 pub mod collectives;
+pub mod compress;
 pub mod config;
 pub mod jsonlite;
 pub mod data;

@@ -34,12 +34,15 @@ fn usage() -> ! {
            --fusion-bytes N       gradient-fusion bucket cap (0 = off)\n\
            --overlap on|off       compute/communication overlap (sim plane)\n\
            --pipeline-chunks N    sub-chunks per pipelined collective step\n\
+           --compression NAME     gradient codec, one of: {}\n\
+           --topk-ratio F         fraction the topk codec keeps, in (0, 1]\n\
            --fault PLAN           scripted churn, e.g. kill:3@200,join@300\n\
                                   (kill:R@N | straggle:R@NxF | join[:C]@N)\n\
            --config FILE.json     load an ExperimentConfig (flags override)\n\
            --artifacts DIR        (default ./artifacts)\n\
            --out DIR              results dir (default ./results)",
-        Algo::names().join(", ")
+        Algo::names().join(", "),
+        mxnet_mpi::compress::Codec::names().join(", ")
     );
     std::process::exit(2);
 }
@@ -55,6 +58,9 @@ impl Args {
         while i < argv.len() {
             let a = &argv[i];
             if let Some(name) = a.strip_prefix("--") {
+                // Only a `--`-prefixed token is a flag; anything else —
+                // including `-`-leading numerics like `--block-momentum
+                // -0.5` — is the preceding flag's value.
                 if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
                     flags.insert(name.to_string(), argv[i + 1].clone());
                     i += 2;
@@ -74,8 +80,23 @@ impl Args {
         self.flags.get(k).map(|s| s.as_str())
     }
 
-    fn num<T: std::str::FromStr>(&self, k: &str) -> Option<T> {
-        self.get(k).and_then(|v| v.parse().ok())
+    /// Numeric flag value. A present-but-unparseable value — a negative
+    /// number fed to a count flag (`--workers -3`), a typo, or a flag left
+    /// without a value (recorded as "true") — is a named error here: the
+    /// old `parse().ok()` silently dropped it, so the run proceeded on the
+    /// default as if the flag were missing, which read like a "missing
+    /// value" bug to the user. Config validation then names any field
+    /// whose *parsed* value is out of range.
+    fn num<T: std::str::FromStr>(&self, k: &str) -> Result<Option<T>> {
+        match self.get(k) {
+            None => Ok(None),
+            Some(v) => v.parse().map(Some).map_err(|_| {
+                anyhow::anyhow!(
+                    "flag --{k}: invalid value {v:?} (expected a {})",
+                    std::any::type_name::<T>()
+                )
+            }),
+        }
     }
 }
 
@@ -106,9 +127,17 @@ fn build_config(args: &Args) -> Result<ExperimentConfig> {
         );
         cfg.collective = v.into();
     }
+    if let Some(v) = args.get("compression") {
+        anyhow::ensure!(
+            mxnet_mpi::compress::Codec::parse(v).is_some(),
+            "unknown compression {v:?} (registered: {})",
+            mxnet_mpi::compress::Codec::names().join(", ")
+        );
+        cfg.compression = v.into();
+    }
     macro_rules! ovr {
         ($field:ident, $flag:expr, $ty:ty) => {
-            if let Some(v) = args.num::<$ty>($flag) {
+            if let Some(v) = args.num::<$ty>($flag)? {
                 cfg.$field = v;
             }
         };
@@ -126,7 +155,13 @@ fn build_config(args: &Args) -> Result<ExperimentConfig> {
     ovr!(rings, "rings", usize);
     ovr!(fusion_bytes, "fusion-bytes", usize);
     ovr!(pipeline_chunks, "pipeline-chunks", usize);
+    ovr!(topk_ratio, "topk-ratio", f64);
     ovr!(seed, "seed", u64);
+    anyhow::ensure!(
+        cfg.topk_ratio.is_finite() && cfg.topk_ratio > 0.0 && cfg.topk_ratio <= 1.0,
+        "--topk-ratio must be in (0, 1], got {}",
+        cfg.topk_ratio
+    );
     if let Some(v) = args.get("overlap") {
         cfg.overlap = v != "off" && v != "false" && v != "0";
     }
@@ -193,7 +228,7 @@ fn main() -> Result<()> {
             print_run(&run);
         }
         "figures" => {
-            let epochs = args.num::<usize>("epochs").unwrap_or(8);
+            let epochs = args.num::<usize>("epochs")?.unwrap_or(8);
             let runs = mxnet_mpi::figures::fig11(&artifacts, &out, epochs)?;
             mxnet_mpi::figures::print_acc_vs_time("Fig 11", &runs);
             let bars = mxnet_mpi::figures::fig12(&artifacts, &out, epochs.min(4))?;
@@ -208,6 +243,8 @@ fn main() -> Result<()> {
             mxnet_mpi::figures::print_acc_vs_time("Fig 16", &runs);
             let runs = mxnet_mpi::figures::fig_churn(&artifacts, &out, epochs)?;
             mxnet_mpi::figures::print_acc_vs_time("Churn (kill+straggle)", &runs);
+            let runs = mxnet_mpi::figures::fig_compress(&artifacts, &out, epochs)?;
+            mxnet_mpi::figures::print_acc_vs_time("Compression (acc vs time)", &runs);
         }
         "collectives" => {
             for mb in [4usize, 16, 64] {
@@ -252,4 +289,62 @@ fn main() -> Result<()> {
         }
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn negative_numeric_values_parse_as_flag_values() {
+        // `-0.5` is a value, not a flag: the parser must hand it to the
+        // flag before it, and build_config must land it in the field.
+        let args = Args::parse(&argv(&["--block-momentum", "-0.5", "--algo", "bmuf"]));
+        assert_eq!(args.get("block-momentum"), Some("-0.5"));
+        let cfg = build_config(&args).unwrap();
+        assert_eq!(cfg.block_momentum, -0.5);
+    }
+
+    #[test]
+    fn unparseable_flag_value_is_a_named_error_not_a_silent_default() {
+        // `--workers -3` used to parse-fail silently and run on the
+        // default (reading like a missing value); now the flag is named.
+        let args = Args::parse(&argv(&["--workers", "-3"]));
+        let err = build_config(&args).unwrap_err();
+        assert!(format!("{err:#}").contains("--workers"), "{err:#}");
+        // A flag left without a value errors the same way.
+        let args = Args::parse(&argv(&["--epochs", "--algo", "mpi-SGD"]));
+        let err = build_config(&args).unwrap_err();
+        assert!(format!("{err:#}").contains("--epochs"), "{err:#}");
+    }
+
+    #[test]
+    fn compression_flags_validate_against_the_registry() {
+        let args = Args::parse(&argv(&["--compression", "topk", "--topk-ratio", "0.25"]));
+        let cfg = build_config(&args).unwrap();
+        assert_eq!(cfg.compression, "topk");
+        assert_eq!(cfg.topk_ratio, 0.25);
+        let err = build_config(&Args::parse(&argv(&["--compression", "zip9"]))).unwrap_err();
+        let msg = format!("{err:#}");
+        for name in mxnet_mpi::compress::Codec::names() {
+            assert!(msg.contains(name), "{msg}");
+        }
+        let err =
+            build_config(&Args::parse(&argv(&["--topk-ratio", "0"]))).unwrap_err();
+        assert!(format!("{err:#}").contains("topk-ratio"), "{err:#}");
+    }
+
+    #[test]
+    fn fault_and_collective_flags_still_build() {
+        let args = Args::parse(&argv(&[
+            "--algo", "mpi-ESGD", "--collective", "ring", "--fault", "kill:3@200",
+        ]));
+        let cfg = build_config(&args).unwrap();
+        assert_eq!(cfg.collective, "ring");
+        assert_eq!(cfg.fault, "kill:3@200");
+    }
 }

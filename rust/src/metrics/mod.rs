@@ -27,11 +27,20 @@ pub struct RunResult {
 }
 
 impl RunResult {
+    /// `avg_epoch_time` is the true mean epoch duration. A cold start
+    /// (first record is epoch 0) began at vtime 0, so `last.vtime / len`
+    /// is exact — including epoch 0's own duration. A warm-started /
+    /// churn-restored run (first record deep into both the epoch count
+    /// and the clock) has no epoch-0 anchor; the old unconditional
+    /// `last.vtime / len` inflated its mean by the whole warm-up offset,
+    /// so it averages the successive end-of-epoch deltas instead (a
+    /// single warm record has no delta and falls back to its vtime).
     pub fn finish(label: &str, records: Vec<EpochRecord>) -> Self {
-        let avg = if records.is_empty() {
-            0.0
-        } else {
-            records.last().unwrap().vtime / records.len() as f64
+        let avg = match records.len() {
+            0 => 0.0,
+            n if records[0].epoch == 0 => records[n - 1].vtime / n as f64,
+            1 => records[0].vtime,
+            n => (records[n - 1].vtime - records[0].vtime) / (n - 1) as f64,
         };
         Self { label: label.to_string(), records, avg_epoch_time: avg }
     }
@@ -147,6 +156,28 @@ mod tests {
         assert_eq!(r.final_acc(), 0.6);
         assert_eq!(r.time_to_acc(0.5), Some(20.0));
         assert_eq!(r.time_to_acc(0.9), None);
+    }
+
+    #[test]
+    fn avg_epoch_time_ignores_warm_start_offset() {
+        // A restored run whose first record lands at vtime 110 must report
+        // the per-epoch cadence (10 s), not (130 / 3) ≈ 43 s.
+        let r = RunResult::finish(
+            "warm",
+            vec![rec(11, 110.0, 0.5), rec(12, 120.0, 0.6), rec(13, 130.0, 0.7)],
+        );
+        assert_eq!(r.avg_epoch_time, 10.0);
+        // A cold start keeps the exact last/len mean — epoch 0's own
+        // duration counts even when epochs are non-uniform.
+        let c = RunResult::finish(
+            "cold",
+            vec![rec(0, 15.0, 0.4), rec(1, 20.0, 0.5), rec(2, 30.0, 0.6)],
+        );
+        assert_eq!(c.avg_epoch_time, 10.0);
+        // Degenerate cases stay sane.
+        assert_eq!(RunResult::finish("none", vec![]).avg_epoch_time, 0.0);
+        assert_eq!(RunResult::finish("one", vec![rec(0, 7.0, 0.1)]).avg_epoch_time, 7.0);
+        assert_eq!(RunResult::finish("warm1", vec![rec(9, 7.0, 0.1)]).avg_epoch_time, 7.0);
     }
 
     #[test]

@@ -63,6 +63,12 @@ pub struct CostParams {
     /// al., arXiv:1711.05979). Drives the small/large-message crossover in
     /// [`crate::collectives::sim::select_best`].
     pub hd_contention: f64,
+    /// Gradient-codec compute, s/byte of *dense* payload: one pass of the
+    /// int8 quantization / top-k selection kernel (encode or decode).
+    /// Memory-bandwidth-bound elementwise work, slower than a plain host
+    /// copy but far above the TCP-class PS transport it saves bytes on.
+    /// Identity codecs never pay it (their code paths run no codec).
+    pub gamma_codec: f64,
     /// Sub-chunks per pipelined collective step (arXiv:1802.06949's
     /// chunked nonblocking schedules): each step's message moves as this
     /// many sub-messages so the per-step reduction overlaps the remaining
@@ -95,6 +101,7 @@ impl CostParams {
             beta_h2d: 1.0 / 16.0e9, // PCIe-class staging copy
             gpu_sync: 20e-6,
             gpus_per_worker: 2,
+            gamma_codec: 1.0 / 8.0e9,
             hd_contention: 0.3,
             pipeline_chunks: 4,
             reconfig_alpha: 0.25,
@@ -118,6 +125,7 @@ impl CostParams {
             beta_h2d: 1.0 / 10.0e9,
             gpu_sync: 25e-6,
             gpus_per_worker: 2,
+            gamma_codec: 1.0 / 5.0e9,
             hd_contention: 0.35,
             pipeline_chunks: 4,
             reconfig_alpha: 0.25,
@@ -262,6 +270,19 @@ impl PsFabric {
         }
     }
 
+    /// `bytes` split across `n` key shards: the division remainder is
+    /// folded into the last shard so the modeled traffic conserves the
+    /// requested bytes exactly (plain `bytes / n` silently dropped up to
+    /// `n - 1` bytes per transfer, under-counting every push/pull).
+    fn shard_bytes(bytes: usize, n: usize, i: usize) -> usize {
+        let base = bytes / n;
+        if i == n - 1 {
+            base + bytes % n
+        } else {
+            base
+        }
+    }
+
     /// Worker `w` pushes `bytes` split evenly across all servers at `now`.
     /// Returns completion time (all shards delivered).
     ///
@@ -269,9 +290,10 @@ impl PsFabric {
     /// per-server ingress link serializes across workers — the §2.3 hot
     /// spot.
     pub fn push(&mut self, now: VTime, w: usize, bytes: usize) -> VTime {
-        let shard = bytes / self.server_in.len().max(1);
+        let n = self.server_in.len().max(1);
         let mut done = now;
-        for s in self.server_in.iter_mut() {
+        for (i, s) in self.server_in.iter_mut().enumerate() {
+            let shard = Self::shard_bytes(bytes, n, i);
             let t = path_transfer(&mut self.worker_nic[w], s, now, shard);
             done = done.max(t);
         }
@@ -280,9 +302,10 @@ impl PsFabric {
 
     /// Worker `w` pulls `bytes` split across servers at `now`.
     pub fn pull(&mut self, now: VTime, w: usize, bytes: usize) -> VTime {
-        let shard = bytes / self.server_out.len().max(1);
+        let n = self.server_out.len().max(1);
         let mut done = now;
-        for s in self.server_out.iter_mut() {
+        for (i, s) in self.server_out.iter_mut().enumerate() {
+            let shard = Self::shard_bytes(bytes, n, i);
             let t = path_transfer(s, &mut self.worker_nic[w], now, shard);
             done = done.max(t);
         }
@@ -427,6 +450,26 @@ mod tests {
         }
         // Steady multiplier = 1 + 0.5 * 3.
         assert!((prev_cost - 2.5e-3).abs() < 1e-9, "{prev_cost}");
+    }
+
+    #[test]
+    fn ps_fabric_conserves_bytes_across_shards() {
+        // Sum of modeled shard bytes == requested bytes, even when the
+        // server count does not divide the transfer (the old integer
+        // division silently dropped up to n_servers - 1 bytes).
+        for servers in [1usize, 2, 3, 5, 7] {
+            for bytes in [0usize, 1, 100, 1000 + 3, (10 << 20) + servers - 1] {
+                let mut f = PsFabric::new(servers, 2, CostParams::testbed1());
+                f.push(0.0, 0, bytes);
+                let pushed: u64 = f.server_in.iter().map(|l| l.bytes_moved).sum();
+                assert_eq!(pushed, bytes as u64, "push servers={servers} bytes={bytes}");
+                assert_eq!(f.worker_nic[0].bytes_moved, bytes as u64);
+                f.pull(0.0, 1, bytes);
+                let pulled: u64 = f.server_out.iter().map(|l| l.bytes_moved).sum();
+                assert_eq!(pulled, bytes as u64, "pull servers={servers} bytes={bytes}");
+                assert_eq!(f.worker_nic[1].bytes_moved, bytes as u64);
+            }
+        }
     }
 
     #[test]

@@ -40,6 +40,12 @@ enum ServerMsg {
     Init { key: Key, value: Vec<f32> },
     /// Push a gradient (or weights, for elastic averaging) for a key.
     Push { key: Key, data: Vec<f32> },
+    /// Push a codec-compressed payload (the gradient-compression plane):
+    /// the server decodes *before* aggregation, so compressed and dense
+    /// pushes mix freely within a round. The wire is self-describing
+    /// ([`crate::compress::Compressed::from_wire`]) — the server needs no
+    /// codec object.
+    PushCompressed { key: Key, wire: Vec<f32> },
     /// Pull the value of a key once `after_round` rounds have completed
     /// (workers pass their own push count; async mode ignores it).
     Pull { key: Key, after_round: u64, reply: Sender<Vec<f32>> },
@@ -165,6 +171,19 @@ impl ServerState {
                         .entry(key)
                         .or_default()
                         .push(ServerMsg::Push { key, data });
+                }
+            }
+            ServerMsg::PushCompressed { key, wire } => {
+                if self.store.contains_key(&key) {
+                    let data = crate::compress::Compressed::from_wire(&wire)
+                        .expect("malformed compressed push payload")
+                        .decompress();
+                    self.on_push(key, data);
+                } else {
+                    self.pre_init
+                        .entry(key)
+                        .or_default()
+                        .push(ServerMsg::PushCompressed { key, wire });
                 }
             }
             ServerMsg::Pull { key, after_round, reply } => {
@@ -307,6 +326,17 @@ impl PsClient {
         *self.push_rounds.entry(key).or_insert(0) += 1;
         self.server(key)
             .send(ServerMsg::Push { key, data })
+            .expect("server gone");
+    }
+
+    /// ZPush of a codec-compressed payload (see
+    /// [`crate::compress::Compressed::to_wire`]): counts toward the same
+    /// per-key round as a dense push; the server decodes before
+    /// aggregating.
+    pub fn push_compressed(&mut self, key: Key, wire: Vec<f32>) {
+        *self.push_rounds.entry(key).or_insert(0) += 1;
+        self.server(key)
+            .send(ServerMsg::PushCompressed { key, wire })
             .expect("server gone");
     }
 
@@ -681,6 +711,37 @@ mod tests {
             assert!(outs.windows(2).all(|w| w[1] <= w[0]), "{outs:?}");
             assert_eq!(outs[2], -6.0);
         }
+        group.shutdown();
+    }
+
+    #[test]
+    fn compressed_push_decodes_before_aggregation() {
+        use crate::compress::{Compressor, Int8, TopK, INT8_BUCKET};
+        // A sync round mixing one dense and one compressed push must
+        // aggregate the *decoded* gradient (within codec tolerance).
+        let group = ServerGroup::spawn(1, SyncMode::Sync, 2);
+        let mut c = group.client();
+        c.init(0, vec![0.0, 0.0, 0.0]);
+        c.set_optimizer(|| Box::new(Sgd::new(SgdHyper::plain(1.0, 1.0))));
+        let g = vec![1.0f32, -2.0, 0.5];
+        c.push(0, g.clone());
+        let mut c2 = group.client();
+        let wire = Int8 { bucket: INT8_BUCKET }.compress(&g).to_wire();
+        c2.push_compressed(0, wire);
+        let v = c.pull(0);
+        for (vi, gi) in v.iter().zip(&g) {
+            // w = 0 - (g + decode(g)): decode error <= maxabs/254.
+            let want = -2.0 * gi;
+            assert!((vi - want).abs() < 0.02, "{v:?}");
+        }
+        // Compressed pushes racing ahead of init replay like dense ones.
+        let mut c3 = group.client();
+        let mut c4 = group.client();
+        let wire = TopK { ratio: 1.0 }.compress(&[4.0, 0.0]).to_wire();
+        c3.push_compressed(9, wire);
+        c4.push(9, vec![1.0, 1.0]);
+        c3.init(9, vec![0.0, 0.0]);
+        assert_eq!(c4.pull(9), vec![-5.0, -1.0]);
         group.shutdown();
     }
 

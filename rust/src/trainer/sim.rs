@@ -23,6 +23,16 @@
 //!   [`on_compute`](SyncStrategy::on_compute) /
 //!   [`on_push_arrive`](SyncStrategy::on_push_arrive) hooks.
 //!
+//! **Compression** (the [`crate::compress`] plane): with a lossy codec
+//! configured, every client gradient that crosses a wire (a multi-member
+//! client's intra-client exchange, or the PS hop on sync iterations)
+//! passes the codec's error-feedback round-trip before the strategy's
+//! numerics — the sim-plane mirror of the threaded stack's compressed
+//! gradient exchange, so convergence curves feel the quantization — and
+//! the virtual clock prices the codec's **wire bytes** through the PS
+//! fabric plus a codec γ per compressed hop. The identity codec (default)
+//! leaves every code path bitwise on the pre-compression implementation.
+//!
 //! **Churn** rides the same schedule as the threaded plane (the
 //! [`ElasticHub`]'s precomputed membership epochs): kills shrink a
 //! client's member set at the next boundary, joins grow it (pricing the
@@ -32,6 +42,7 @@
 //! client while the rest keep training against the PS — the paper's §2
 //! graceful-degradation argument, now measurable.
 
+use crate::compress::{self, Compressor, EfState};
 use crate::config::ExperimentConfig;
 use crate::launcher::{ElasticHub, JobSpec};
 use crate::metrics::{EpochRecord, RunResult};
@@ -93,6 +104,45 @@ struct Sim<'a> {
     /// Per-worker speed factor: seeded jitter x cumulative straggle.
     jitter: Vec<f64>,
     rng: Rng,
+    /// Gradient codec (identity = every path bitwise pre-compression).
+    codec: Box<dyn Compressor>,
+    /// Error-feedback residuals, one per client.
+    ef: EfState,
+    /// Bytes one full-model PS push moves on the wire under the codec.
+    push_wire_bytes: usize,
+    /// Codec compute seconds per compressed PS hop (encode + decode).
+    codec_push_s: f64,
+}
+
+impl Sim<'_> {
+    /// EF round-trip a client's gradient through the codec — the
+    /// sim-plane mirror of the compressed gradient exchange, so lossy
+    /// codecs shape the convergence curves, not just the clock. Applied
+    /// only when this iteration's *gradient* actually crosses a wire
+    /// (matching the threaded plane): a multi-member client exchanges
+    /// gradients intra-client every iteration, and `grad_push` marks an
+    /// iteration whose PS hop carries this gradient. A single-member
+    /// client's wireless local step stays uncompressed, as do the
+    /// model-snapshot syncs of the averaging family (their pushes are
+    /// dense on the threaded plane too — `SyncStrategy::pushes_model`).
+    fn codec_roundtrip(&mut self, c: usize, grad_push: bool, g: Vec<f32>) -> Vec<f32> {
+        if self.codec.is_identity() || (self.clients[c].members.len() <= 1 && !grad_push) {
+            g
+        } else {
+            compress::ef_roundtrip(&*self.codec, c as u64, &g, &mut self.ef)
+        }
+    }
+
+    /// (bytes, codec seconds) of one PS push under the strategy's payload
+    /// kind: gradient pushes move the codec's wire bytes and pay its γ;
+    /// model-snapshot pushes are always dense.
+    fn push_cost(&self, strategy: &dyn SyncStrategy) -> (usize, f64) {
+        if strategy.pushes_model() {
+            (self.cfg.virtual_model_bytes, 0.0)
+        } else {
+            (self.push_wire_bytes, self.codec_push_s)
+        }
+    }
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -104,27 +154,35 @@ enum Ev {
 }
 
 /// Compute + exposed-communication seconds for a client whose live
-/// members have the given speed factors.
+/// members have the given speed factors. The intra-client allreduce is
+/// priced under the configured codec
+/// ([`crate::collectives::sim::compressed_tensor_allreduce_seconds`] —
+/// identity delegates to the dense model, bitwise).
 fn client_costs(
     cfg: &ExperimentConfig,
     params: &CostParams,
+    codec: &dyn Compressor,
     factors: &[f64],
 ) -> (f64, f64) {
     let mc = factors.len();
     let worst = factors.iter().fold(1.0f64, |a, &b| a.max(b));
     let compute_s = cfg.compute_s_per_batch * worst;
     let allreduce_s = if mc > 1 {
-        crate::collectives::sim::tensor_allreduce_seconds(
+        crate::collectives::sim::compressed_tensor_allreduce_seconds(
             cfg.collective_kind(),
             mc,
             cfg.virtual_model_bytes,
             cfg.rings,
+            codec,
             params,
         )
     } else {
         0.0
     };
-    (compute_s, exposed_comm_seconds(cfg, mc, params, allreduce_s, compute_s))
+    (
+        compute_s,
+        exposed_comm_seconds(cfg, mc, params, codec, allreduce_s, compute_s),
+    )
 }
 
 impl<'a> Sim<'a> {
@@ -144,7 +202,7 @@ impl<'a> Sim<'a> {
         if factors.is_empty() {
             return; // dead client: never scheduled again
         }
-        let (compute_s, comm_s) = client_costs(self.cfg, &self.params, &factors);
+        let (compute_s, comm_s) = client_costs(self.cfg, &self.params, &*self.codec, &factors);
         self.clients[c].compute_s = compute_s;
         self.clients[c].comm_s = comm_s;
     }
@@ -282,6 +340,7 @@ fn exposed_comm_seconds(
     cfg: &ExperimentConfig,
     m: usize,
     params: &crate::netsim::CostParams,
+    codec: &dyn Compressor,
     blocking_s: f64,
     compute_s: f64,
 ) -> f64 {
@@ -299,7 +358,14 @@ fn exposed_comm_seconds(
     .clamp(1, 100);
     let per_msg = (cfg.virtual_model_bytes / buckets).max(1);
     let comm = buckets as f64
-        * csim::tensor_allreduce_seconds(cfg.collective_kind(), m, per_msg, cfg.rings, params);
+        * csim::compressed_tensor_allreduce_seconds(
+            cfg.collective_kind(),
+            m,
+            per_msg,
+            cfg.rings,
+            codec,
+            params,
+        );
     let step = csim::overlapped_step_seconds(compute_s, comm, buckets);
     (step - compute_s).clamp(0.0, blocking_s)
 }
@@ -350,11 +416,21 @@ pub fn simulate_with_weights(
         let mut r = rng.fork(id as u64 + 1);
         jitter.push(1.0 + cfg.jitter * r.uniform());
     }
+    // The compression plane: lossy codecs shrink the PS wire bytes (and
+    // pay a codec γ per hop); identity keeps all pricing and numerics
+    // bitwise on the pre-compression paths.
+    let codec = cfg.build_compressor();
+    let push_wire_bytes = if codec.is_identity() {
+        cfg.virtual_model_bytes
+    } else {
+        codec.wire_bytes(cfg.virtual_model_bytes / 4)
+    };
+    let codec_push_s = compress::codec_seconds(&*codec, cfg.virtual_model_bytes, &params);
     let clients: Vec<Client> = (0..cfg.clients)
         .map(|c| {
             let members: Vec<usize> = (0..m).map(|j| c * m + j).collect();
             let factors: Vec<f64> = members.iter().map(|&id| jitter[id]).collect();
-            let (compute_s, comm_s) = client_costs(cfg, &params, &factors);
+            let (compute_s, comm_s) = client_costs(cfg, &params, &*codec, &factors);
             Client {
                 w: w0.clone(),
                 momentum: vec![0.0; n],
@@ -399,6 +475,10 @@ pub fn simulate_with_weights(
         hub,
         jitter,
         rng,
+        codec,
+        ef: EfState::new(),
+        push_wire_bytes,
+        codec_push_s,
     };
 
     // The one strategy dispatch of the plane: the registry object picks
@@ -445,6 +525,7 @@ fn run_lockstep(sim: &mut Sim<'_>, strategy: &dyn SyncStrategy) -> Result<()> {
         // 1. Real math: every live client's gradient sum, against the
         // strategy's model choice (one global server value, or the
         // client's own replica).
+        let sync = strategy.sync_due(cfg, iter);
         let mut grads: Vec<Vec<f32>> = Vec::with_capacity(live.len());
         let mut loss_sum = 0.0f64;
         for &c in &live {
@@ -455,9 +536,14 @@ fn run_lockstep(sim: &mut Sim<'_>, strategy: &dyn SyncStrategy) -> Result<()> {
             };
             let (loss, g) = sim.client_grad(c, iter, &w)?;
             loss_sum += loss as f64;
-            grads.push(g);
+            // The compressed gradient exchange: what the round's numerics
+            // see is the codec's EF round-trip (no-op for identity, a
+            // wireless single-member local step, a model-snapshot sync
+            // whose PS push is dense, or a serverless job with no PS hop
+            // at all).
+            let grad_push = sync && !strategy.pushes_model() && cfg.servers > 0;
+            grads.push(sim.codec_roundtrip(c, grad_push, g));
         }
-        let sync = strategy.sync_due(cfg, iter);
 
         // 2. Strategy numerics on the assembled round (split borrows: the
         // round holds the server state and every live client's replica).
@@ -515,9 +601,14 @@ fn run_lockstep(sim: &mut Sim<'_>, strategy: &dyn SyncStrategy) -> Result<()> {
                 sim.clients[c].train_loss_accum += loss_avg;
             }
         } else {
+            // Masters push the codec's wire bytes (+ its encode/decode γ)
+            // for gradient payloads, dense bytes for model snapshots;
+            // pulls come back dense (the server answers with full values).
+            let (push_bytes, push_codec_s) = sim.push_cost(strategy);
             let mut server_done: VTime = 0.0;
             for &(c, at) in &arrivals {
-                server_done = server_done.max(sim.fabric.push(at, c, bytes));
+                server_done =
+                    server_done.max(sim.fabric.push(at + push_codec_s, c, push_bytes));
             }
             for &(c, _) in &arrivals {
                 let pulled = sim.fabric.pull(server_done, c, bytes);
@@ -672,13 +763,22 @@ fn run_event(sim: &mut Sim<'_>, strategy: &dyn SyncStrategy) -> Result<()> {
                 let w_snapshot = sim.clients[c].w.clone();
                 let (loss, g) = sim.client_grad(c, iter, &w_snapshot)?;
                 sim.clients[c].train_loss_accum += loss as f64;
+                // Compressed gradient exchange (no-op for identity, a
+                // wireless single-member local step between syncs, a
+                // strategy whose PS pushes carry model snapshots, or a
+                // serverless job with no PS hop).
+                let grad_push = strategy.sync_due(cfg, iter)
+                    && !strategy.pushes_model()
+                    && cfg.servers > 0;
+                let g = sim.codec_roundtrip(c, grad_push, g);
                 let action = {
                     let mut st = event_step(sim, c, iter, n_clients, Some(g));
                     strategy.on_compute(cfg, &mut st)?
                 };
                 match action {
                     AfterCompute::Push => {
-                        let arrive = sim.fabric.push(at, c, bytes);
+                        let (push_bytes, push_codec_s) = sim.push_cost(strategy);
+                        let arrive = sim.fabric.push(at + push_codec_s, c, push_bytes);
                         q.push(arrive, Ev::PushArrive { c, iter });
                     }
                     AfterCompute::Local => finish_iteration(sim, &mut q, c, iter, at)?,

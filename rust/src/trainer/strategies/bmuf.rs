@@ -91,6 +91,12 @@ impl SyncStrategy for Bmuf {
         true
     }
 
+    fn pushes_model(&self) -> bool {
+        // PS pushes carry replica snapshots, not gradients: they bypass
+        // the lossy gradient codec (see the trait doc).
+        true
+    }
+
     fn local_momentum(&self, cfg: &ExperimentConfig) -> f32 {
         cfg.momentum
     }

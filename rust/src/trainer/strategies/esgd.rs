@@ -43,6 +43,12 @@ impl SyncStrategy for Esgd {
         true
     }
 
+    fn pushes_model(&self) -> bool {
+        // PS pushes carry replica snapshots, not gradients: they bypass
+        // the lossy gradient codec (see the trait doc).
+        true
+    }
+
     fn aggregated_workers(&self, m_live: usize, _live_workers: usize) -> usize {
         // Intra-client sync SGD between elastic syncs (§5): the client's
         // live members' gradients are averaged every iteration (dist

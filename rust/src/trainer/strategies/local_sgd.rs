@@ -55,6 +55,12 @@ impl SyncStrategy for LocalSgd {
         true
     }
 
+    fn pushes_model(&self) -> bool {
+        // PS pushes carry replica snapshots, not gradients: they bypass
+        // the lossy gradient codec (see the trait doc).
+        true
+    }
+
     fn local_momentum(&self, cfg: &ExperimentConfig) -> f32 {
         // Local SGD carries momentum locally (it is exact within the
         // client group's lockstep replicas).

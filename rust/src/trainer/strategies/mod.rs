@@ -306,6 +306,17 @@ pub trait SyncStrategy: Send + Sync {
     /// weights the sim plane evaluates and returns.
     fn local_model(&self) -> bool;
 
+    /// Whether this strategy's PS pushes carry *model snapshots* (the
+    /// elastic/model-averaging family) rather than gradients. Snapshot
+    /// pushes bypass the lossy gradient codec on both planes
+    /// ([`crate::kvstore::KvWorker::push_model`]): error feedback is an
+    /// unbiased-over-time gradient mechanism, and a sparsified snapshot
+    /// adopted wholesale is simply mass loss. The sim plane also prices
+    /// these pushes at dense bytes.
+    fn pushes_model(&self) -> bool {
+        false
+    }
+
     /// Momentum of the *local* SGD update (asynchronous strategies ship
     /// plain SGD: momentum on stale gradients compounds and diverges).
     fn local_momentum(&self, _cfg: &ExperimentConfig) -> f32 {
@@ -584,13 +595,16 @@ pub fn client_local_step(st: &mut WorkerStep<'_>) -> Result<()> {
 /// replicas, masters ZPush), then pull the server's merged per-key values
 /// back as one flat vector. The wire block every model-pushing strategy
 /// shares — ESGD pulls *centers* to elastic-merge, Local SGD/BMUF pull
-/// the averaged/filtered global model to adopt.
+/// the averaged/filtered global model to adopt. Pushes go through
+/// [`KvWorker::push_model`]: these are model *snapshots* the receivers
+/// adopt wholesale, so lossy gradient codecs never touch them (error
+/// feedback cannot repair a sparsified snapshot).
 pub fn push_pull_scaled(st: &mut WorkerStep<'_>, scale: f32) -> Result<Vec<f32>> {
     let mut w_push = st.w.clone();
     crate::tensor::scale(&mut w_push, scale);
     let parts = split_keys(st.segs, &w_push);
     for (k, part) in parts.into_iter().enumerate() {
-        st.kv.push(k, part);
+        st.kv.push_model(k, part);
     }
     let pulls: Vec<_> = (0..st.n_keys).map(|k| st.kv.pull(k)).collect();
     let parts: Vec<Vec<f32>> = pulls.into_iter().map(|p| p.wait()).collect();

@@ -1,0 +1,219 @@
+//! Compression-plane integration tests: the identity-codec bitwise
+//! regression, end-to-end convergence under lossy codecs with error
+//! feedback on both planes, and the wire-byte savings on the virtual
+//! clock.
+
+use mxnet_mpi::compress::Codec;
+use mxnet_mpi::config::{Algo, ExperimentConfig};
+use std::path::PathBuf;
+
+fn artifacts() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Small hybrid (PS + MPI clients) config on the tiny MLP.
+fn tiny_cfg(algo: &str, epochs: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::testbed1(Algo::named(algo));
+    cfg.variant = "mlp_tiny".into();
+    cfg.workers = 4;
+    cfg.clients = 2;
+    cfg.servers = 1;
+    cfg.epochs = epochs;
+    cfg.samples_per_epoch = 4 * 4 * 8; // 4 batches/worker/epoch
+    cfg.classes = 4;
+    cfg.noise = 1.0;
+    cfg.interval = 2;
+    cfg.eval_samples = 64;
+    cfg
+}
+
+#[test]
+fn identity_codec_is_bitwise_the_pre_compression_sim_plane() {
+    // `compression = "identity"` must leave the virtual-time plane on the
+    // exact pre-compression code paths: records bitwise-equal to a config
+    // that never mentions compression (the default), vtime included.
+    let base = tiny_cfg("mpi-SGD", 2);
+    let mut explicit = base.clone();
+    explicit.compression = "identity".into();
+    let a = mxnet_mpi::trainer::sim::simulate(&base, &artifacts()).unwrap();
+    let b = mxnet_mpi::trainer::sim::simulate(&explicit, &artifacts()).unwrap();
+    assert_eq!(a.records.len(), b.records.len());
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(ra.vtime, rb.vtime);
+        assert_eq!(ra.train_loss, rb.train_loss);
+        assert_eq!(ra.val_loss, rb.val_loss);
+        assert_eq!(ra.val_acc, rb.val_acc);
+    }
+}
+
+#[test]
+fn lossy_codecs_converge_within_tolerance_of_dense_sim() {
+    // The acceptance criterion: int8/topk with error feedback reach a
+    // final accuracy within tolerance of the uncompressed run (sim plane:
+    // deterministic, so the comparison is stable run to run).
+    let acc = |compression: &str, ratio: f64| {
+        let mut cfg = tiny_cfg("mpi-SGD", 4);
+        cfg.compression = compression.into();
+        cfg.topk_ratio = ratio;
+        mxnet_mpi::trainer::sim::simulate(&cfg, &artifacts())
+            .unwrap()
+            .final_acc()
+    };
+    let dense = acc("identity", 0.01);
+    assert!(dense > 0.4, "dense baseline too weak to compare: {dense}");
+    let int8 = acc("int8", 0.01);
+    let topk = acc("topk", 0.25);
+    assert!(
+        int8 >= dense - 0.1,
+        "int8 {int8} trails dense {dense} beyond tolerance"
+    );
+    assert!(
+        topk >= dense - 0.2,
+        "topk {topk} trails dense {dense} beyond tolerance"
+    );
+}
+
+#[test]
+fn compressed_pushes_shrink_the_virtual_clock() {
+    // Same training volume, smaller wire: both lossy codecs finish their
+    // epochs in less virtual time than dense (the PS push moves the
+    // codec's wire bytes and pays its γ; dense pays full bytes + incast).
+    let t = |compression: &str| {
+        let mut cfg = tiny_cfg("mpi-SGD", 2);
+        cfg.compression = compression.into();
+        mxnet_mpi::trainer::sim::simulate(&cfg, &artifacts())
+            .unwrap()
+            .records
+            .last()
+            .unwrap()
+            .vtime
+    };
+    let dense = t("identity");
+    let int8 = t("int8");
+    let topk = t("topk");
+    assert!(int8 < dense, "int8 {int8} !< dense {dense}");
+    assert!(topk < dense, "topk {topk} !< dense {dense}");
+}
+
+#[test]
+fn threaded_e2e_transformer_trains_under_int8() {
+    // The threaded e2e path (pure MPI, fused buckets through the engine)
+    // with int8 + error feedback: loss must fall like the dense run's.
+    let mut cfg = ExperimentConfig::testbed1(Algo::named("mpi-SGD"));
+    cfg.variant = "transformer_tiny".into();
+    cfg.workers = 2;
+    cfg.clients = 1;
+    cfg.servers = 0;
+    cfg.epochs = 3;
+    cfg.samples_per_epoch = 2 * 10 * 4;
+    cfg.lr = 0.4;
+    cfg.eval_samples = 32;
+    cfg.compression = "int8".into();
+    let run = mxnet_mpi::trainer::threaded::train(&cfg, artifacts()).unwrap();
+    let first = run.records.first().unwrap().train_loss;
+    let last = run.records.last().unwrap().train_loss;
+    assert!(first > 3.0, "init loss {first}");
+    assert!(last < first - 0.3, "int8 loss {first} -> {last}");
+}
+
+#[test]
+fn threaded_e2e_transformer_trains_under_topk() {
+    // Top-k (25% + error feedback) on the same e2e path: sparser updates,
+    // so a slightly looser bound — but the loss must still fall clearly.
+    let mut cfg = ExperimentConfig::testbed1(Algo::named("mpi-SGD"));
+    cfg.variant = "transformer_tiny".into();
+    cfg.workers = 2;
+    cfg.clients = 1;
+    cfg.servers = 0;
+    cfg.epochs = 3;
+    cfg.samples_per_epoch = 2 * 10 * 4;
+    cfg.lr = 0.4;
+    cfg.eval_samples = 32;
+    cfg.compression = "topk".into();
+    cfg.topk_ratio = 0.25;
+    let run = mxnet_mpi::trainer::threaded::train(&cfg, artifacts()).unwrap();
+    let first = run.records.first().unwrap().train_loss;
+    let last = run.records.last().unwrap().train_loss;
+    assert!(first > 3.0, "init loss {first}");
+    assert!(last < first - 0.2, "topk loss {first} -> {last}");
+}
+
+#[test]
+fn threaded_hybrid_with_servers_trains_compressed() {
+    // Compressed pushes through the real PS servers (decode before
+    // aggregation) on the threaded stack, per codec.
+    for compression in ["int8", "topk"] {
+        let mut cfg = tiny_cfg("mpi-SGD", 2);
+        cfg.compression = compression.into();
+        cfg.topk_ratio = 0.25;
+        let run = mxnet_mpi::trainer::threaded::train(&cfg, artifacts()).unwrap();
+        assert_eq!(run.records.len(), cfg.epochs, "{compression}");
+        for r in &run.records {
+            assert!(r.train_loss.is_finite(), "{compression}: non-finite loss");
+        }
+        let first = run.records.first().unwrap().train_loss;
+        let last = run.records.last().unwrap().train_loss;
+        assert!(
+            last < first,
+            "{compression}: loss did not improve ({first} -> {last})"
+        );
+    }
+}
+
+#[test]
+fn model_averaging_syncs_stay_dense_under_lossy_codecs() {
+    // The averaging family's PS pushes carry model *snapshots* the
+    // workers adopt wholesale; they bypass the codec (KvWorker::push_model)
+    // on both planes. Under topk this is the difference between training
+    // and collapse: a sparsified snapshot would zero ~75% of every
+    // replica at each sync.
+    let mut cfg = tiny_cfg("local-sgd", 4);
+    cfg.compression = "topk".into();
+    cfg.topk_ratio = 0.25;
+    let run = mxnet_mpi::trainer::threaded::train(&cfg, artifacts()).unwrap();
+    let first = run.records.first().unwrap().train_loss;
+    let last = run.records.last().unwrap().train_loss;
+    assert!(last < first, "threaded local-sgd+topk: {first} -> {last}");
+    assert!(run.final_acc() > 0.4, "threaded acc {}", run.final_acc());
+    // Sim plane mirrors the dense-snapshot rule: lossy local-sgd stays
+    // within tolerance of dense local-sgd.
+    let acc = |compression: &str| {
+        let mut cfg = tiny_cfg("local-sgd", 4);
+        cfg.compression = compression.into();
+        cfg.topk_ratio = 0.25;
+        mxnet_mpi::trainer::sim::simulate(&cfg, &artifacts())
+            .unwrap()
+            .final_acc()
+    };
+    let dense = acc("identity");
+    let topk = acc("topk");
+    assert!(topk >= dense - 0.2, "sim local-sgd topk {topk} vs dense {dense}");
+}
+
+#[test]
+fn compression_composes_with_elastic_membership() {
+    // A kill mid-run under a lossy codec: reconfiguration and error
+    // feedback coexist (residuals survive the world swap; the run
+    // finishes renormalized with finite losses).
+    let mut cfg = tiny_cfg("mpi-SGD", 4);
+    cfg.compression = "int8".into();
+    cfg.fault = "kill:3@5".into();
+    let run = mxnet_mpi::trainer::threaded::train(&cfg, artifacts()).unwrap();
+    assert_eq!(run.records.len(), cfg.epochs);
+    let first = run.records.first().unwrap().train_loss;
+    let last = run.records.last().unwrap().train_loss;
+    assert!(last < first, "loss did not improve through churn: {first} -> {last}");
+}
+
+#[test]
+fn codec_registry_drives_config_and_figures_sweep() {
+    // The registry is the single source of codec names: config parses
+    // every registered name, and the fig_compress sweep covers them all.
+    for codec in Codec::all() {
+        let mut cfg = tiny_cfg("mpi-SGD", 1);
+        cfg.compression = codec.name().into();
+        let parsed = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(parsed.codec().name(), codec.name());
+    }
+    assert_eq!(Codec::all().len(), 3);
+}

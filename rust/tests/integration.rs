@@ -164,6 +164,8 @@ fn launcher_runs_many_small_jobs_without_leaking() {
             rings: 2,
             group: 2,
             cost: CostParams::testbed1(),
+            codec: mxnet_mpi::compress::Codec::identity(),
+            topk_ratio: 0.01,
             fault: mxnet_mpi::ps::FaultPlan::none(),
             reconfig_every: 1,
         };
