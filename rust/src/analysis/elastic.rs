@@ -1,0 +1,540 @@
+//! Elastic-epoch safety: exhaustive model checking of `FaultPlan` ×
+//! [`ElasticHub`] for small worlds.
+//!
+//! PR 3's claim — *no collective ever spans a dead rank* — was validated
+//! only by a randomized thread model. This module re-proves it
+//! exhaustively for every enumerated plan: single and paired churn
+//! events (kill, straggle, join) over 2/3/4-worker worlds, both epoch
+//! cadences, every event iteration in a small window. For each plan the
+//! hub's precomputed epoch tables are checked against an independent
+//! model of the membership semantics, invalid plans must be *rejected*
+//! (not silently mangled), and — the trace-level proof — the registered
+//! collectives are run over each epoch's survivor world on the tracing
+//! fabric, asserting that no captured `(src, dst)` event maps to a rank
+//! the plan kills at that boundary.
+//!
+//! The `Comm::split` rule rides along: for every epoch with kills, a
+//! real threaded split is performed over the pre-epoch world; dying
+//! ranks pass a negative color (MPI_UNDEFINED) and must get `None`,
+//! survivors must land at exactly the rank `Group::exclude` translation
+//! predicts.
+
+use super::trace::{run_traced, TraceEvent};
+use super::{CheckKind, Diagnostic, Report, ScheduleId};
+use crate::collectives::AlgoKind;
+use crate::compress::{Codec, EfState};
+use crate::kvstore::KvType;
+use crate::launcher::{ElasticHub, JobSpec};
+use crate::mpisim::{Group, World};
+use crate::netsim::CostParams;
+use crate::ps::{FaultEvent, FaultKind, FaultPlan, Scheduler, SyncMode};
+use std::collections::BTreeMap;
+
+/// The enumerated worlds: (workers, clients). Small enough to be
+/// exhaustive, large enough to cover multi-client kills and joins.
+const WORLDS: &[(usize, usize)] = &[(2, 1), (3, 1), (4, 2)];
+
+/// Epoch cadences (`reconfig_every`): every iteration and lazy-sync.
+const CADENCES: &[u64] = &[1, 2];
+
+/// Event iterations for single-event plans.
+const ITERS: &[u64] = &[0, 1, 2];
+
+/// One enumerated churn event, rendered into the `--fault` grammar so
+/// the check exercises the real parser too.
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    Kill(usize),
+    Straggle(usize),
+    Join,
+}
+
+impl Ev {
+    fn render(&self, at: u64) -> String {
+        match self {
+            Ev::Kill(r) => format!("kill:{r}@{at}"),
+            Ev::Straggle(r) => format!("straggle:{r}@{at}x2"),
+            Ev::Join => format!("join@{at}"),
+        }
+    }
+}
+
+/// Independent model of one epoch's membership tables (the spec the
+/// hub's precomputation is checked against).
+struct ModelEpoch {
+    boundary: u64,
+    kills: Vec<usize>,
+    joins: Vec<usize>,
+    /// Post-kill pre-join live set: (ps_rank, client) ascending.
+    survivors: Vec<(usize, usize)>,
+    /// Post-join live set: (ps_rank, client) ascending.
+    members_after: Vec<(usize, usize)>,
+    straggle: BTreeMap<usize, f64>,
+}
+
+/// Replay the documented membership semantics: events take effect at the
+/// first cadence boundary at/after their iteration, kills must target
+/// live ranks, each boundary must keep at least one survivor and keep
+/// client 0 populated, joins land post-kill on the explicit or emptiest
+/// client with ranks allocated from `workers` upward.
+fn model_epochs(
+    workers: usize,
+    clients: usize,
+    cadence: u64,
+    events: &[FaultEvent],
+) -> Result<Vec<ModelEpoch>, String> {
+    let wpc = workers / clients.max(1);
+    let mut live: BTreeMap<usize, usize> = (0..workers).map(|r| (r, r / wpc)).collect();
+    let mut straggle: BTreeMap<usize, f64> = BTreeMap::new();
+    let mut next_join_rank = workers;
+    let mut grouped: BTreeMap<u64, Vec<FaultKind>> = BTreeMap::new();
+    for ev in events {
+        let boundary = (ev.at_iter + cadence) / cadence * cadence - 1;
+        grouped.entry(boundary).or_default().push(ev.kind);
+    }
+    let mut out = Vec::new();
+    for (boundary, kinds) in grouped {
+        let mut kills = Vec::new();
+        let mut joins = Vec::new();
+        for kind in &kinds {
+            match *kind {
+                FaultKind::Kill { rank } => {
+                    if live.remove(&rank).is_none() {
+                        return Err(format!("kills non-live rank {rank} at {boundary}"));
+                    }
+                    kills.push(rank);
+                }
+                FaultKind::Straggle { rank, factor } => {
+                    if !live.contains_key(&rank) {
+                        return Err(format!("straggles non-live rank {rank} at {boundary}"));
+                    }
+                    *straggle.entry(rank).or_insert(1.0) *= factor;
+                }
+                FaultKind::Join { .. } => {}
+            }
+        }
+        if live.is_empty() {
+            return Err(format!("no survivors at {boundary}"));
+        }
+        if !live.values().any(|&c| c == 0) {
+            return Err(format!("client 0 emptied at {boundary}"));
+        }
+        let survivors: Vec<(usize, usize)> = live.iter().map(|(&r, &c)| (r, c)).collect();
+        for kind in &kinds {
+            if let FaultKind::Join { client } = *kind {
+                let target = client.unwrap_or_else(|| {
+                    let mut counts: BTreeMap<usize, usize> =
+                        (0..clients).map(|c| (c, 0)).collect();
+                    for &c in live.values() {
+                        *counts.entry(c).or_insert(0) += 1;
+                    }
+                    counts
+                        .iter()
+                        .min_by_key(|&(&c, &n)| (n, c))
+                        .map(|(&c, _)| c)
+                        .unwrap_or(0)
+                });
+                if target >= clients {
+                    return Err(format!("join targets client {target} of {clients}"));
+                }
+                live.insert(next_join_rank, target);
+                joins.push(next_join_rank);
+                next_join_rank += 1;
+            }
+        }
+        out.push(ModelEpoch {
+            boundary,
+            kills,
+            joins,
+            survivors,
+            members_after: live.iter().map(|(&r, &c)| (r, c)).collect(),
+            straggle: straggle.clone(),
+        });
+    }
+    Ok(out)
+}
+
+fn spec_for(workers: usize, clients: usize, plan: FaultPlan, cadence: u64) -> JobSpec {
+    JobSpec {
+        workers,
+        servers: 0,
+        clients,
+        ktype: KvType::SyncMpi,
+        server_mode: SyncMode::Sync,
+        engine_threads: 1,
+        collective: AlgoKind::Ring,
+        fusion_bytes: 0,
+        rings: 1,
+        group: 2,
+        cost: CostParams::testbed1(),
+        codec: Codec::identity(),
+        topk_ratio: 0.25,
+        fault: plan,
+        reconfig_every: cadence,
+    }
+}
+
+/// Check one plan end to end; `plan_str` identifies it in diagnostics.
+fn check_plan(
+    workers: usize,
+    clients: usize,
+    cadence: u64,
+    plan_str: &str,
+    report: &mut Report,
+) {
+    report.configs_checked += 1;
+    let diag = |kind: CheckKind, detail: String| Diagnostic {
+        schedule: format!("elastic[{workers}w/{clients}c@{cadence}] {plan_str}"),
+        p: workers,
+        chunks: 0,
+        len: 0,
+        kind,
+        detail,
+    };
+    let plan = match FaultPlan::parse(plan_str) {
+        Ok(p) => p,
+        Err(e) => {
+            report
+                .diagnostics
+                .push(diag(CheckKind::ElasticEpoch, format!("plan failed to parse: {e}")));
+            return;
+        }
+    };
+    let expected = model_epochs(workers, clients, cadence, &plan.events);
+    let spec = spec_for(workers, clients, plan, cadence);
+    let hub = ElasticHub::new(&spec, Scheduler::new(0, 0), None);
+    match (&expected, &hub) {
+        (Err(_), Err(_)) => return, // correctly rejected
+        (Err(why), Ok(_)) => {
+            report.diagnostics.push(diag(
+                CheckKind::ElasticEpoch,
+                format!("hub accepted an inconsistent plan (model rejects it: {why})"),
+            ));
+            return;
+        }
+        (Ok(_), Err(e)) => {
+            report.diagnostics.push(diag(
+                CheckKind::ElasticEpoch,
+                format!("hub rejected a consistent plan: {e}"),
+            ));
+            return;
+        }
+        (Ok(_), Ok(_)) => {}
+    }
+    let expected = expected.expect("checked above");
+    let hub = hub.expect("checked above");
+    if hub.n_epochs() != expected.len() {
+        report.diagnostics.push(diag(
+            CheckKind::ElasticEpoch,
+            format!("hub plans {} epochs, model expects {}", hub.n_epochs(), expected.len()),
+        ));
+        return;
+    }
+    let mut prev_members: Vec<(usize, usize)> = {
+        let wpc = workers / clients.max(1);
+        (0..workers).map(|r| (r, r / wpc)).collect()
+    };
+    let mut prev_boundary: Option<u64> = None;
+    for (e, want) in expected.iter().enumerate() {
+        let eu = e as u64;
+        // -- table equivalence against the independent model ------------
+        if hub.boundary_iter(eu) != Some(want.boundary) {
+            report.diagnostics.push(diag(
+                CheckKind::ElasticEpoch,
+                format!(
+                    "epoch {e}: boundary {:?}, model expects {}",
+                    hub.boundary_iter(eu),
+                    want.boundary
+                ),
+            ));
+        }
+        if let Some(pb) = prev_boundary {
+            if want.boundary <= pb {
+                report.diagnostics.push(diag(
+                    CheckKind::ElasticEpoch,
+                    format!("epoch {e}: boundary {} not after previous {pb}", want.boundary),
+                ));
+            }
+        }
+        prev_boundary = Some(want.boundary);
+        if hub.dying_at(eu) != want.kills.as_slice() {
+            report.diagnostics.push(diag(
+                CheckKind::ElasticEpoch,
+                format!("epoch {e}: kills {:?}, model expects {:?}", hub.dying_at(eu), want.kills),
+            ));
+        }
+        if hub.joins_at(eu) != want.joins.as_slice() {
+            report.diagnostics.push(diag(
+                CheckKind::ElasticEpoch,
+                format!("epoch {e}: joins {:?}, model expects {:?}", hub.joins_at(eu), want.joins),
+            ));
+        }
+        if hub.members_after(eu) != want.members_after.as_slice() {
+            report.diagnostics.push(diag(
+                CheckKind::ElasticEpoch,
+                format!(
+                    "epoch {e}: members {:?}, model expects {:?}",
+                    hub.members_after(eu),
+                    want.members_after
+                ),
+            ));
+            return; // downstream checks would cascade
+        }
+        for client in 0..clients {
+            let model_master = want
+                .survivors
+                .iter()
+                .find(|&&(_, c)| c == client)
+                .map(|&(r, _)| r);
+            if hub.ckpt_master(eu, client) != model_master {
+                report.diagnostics.push(diag(
+                    CheckKind::ElasticEpoch,
+                    format!(
+                        "epoch {e}: ckpt master of client {client} is {:?}, model expects {:?}",
+                        hub.ckpt_master(eu, client),
+                        model_master
+                    ),
+                ));
+            }
+        }
+        for &(r, _) in &want.members_after {
+            let f = hub.straggle_after(eu, r);
+            let wf = want.straggle.get(&r).copied().unwrap_or(1.0);
+            if f != wf || f < 1.0 {
+                report.diagnostics.push(diag(
+                    CheckKind::ElasticEpoch,
+                    format!("epoch {e}: straggle of rank {r} is {f}, model expects {wf}"),
+                ));
+            }
+        }
+        // -- the safety property itself ---------------------------------
+        // Kills must be gone from the post-epoch membership...
+        for k in &want.kills {
+            if hub.members_after(eu).iter().any(|&(r, _)| r == *k) {
+                report.diagnostics.push(diag(
+                    CheckKind::ElasticEpoch,
+                    format!("epoch {e}: killed rank {k} still in members_after"),
+                ));
+            }
+        }
+        // ...and no traced collective event over any rebuilt per-client
+        // world may map back to a killed ps_rank.
+        report
+            .diagnostics
+            .extend(epoch_trace_diags(&hub, eu, clients, &want.kills, &diag));
+        // The split rule for this epoch's world teardown.
+        if !want.kills.is_empty() {
+            report
+                .diagnostics
+                .extend(split_rule_diags(&prev_members, &want.kills, &diag));
+        }
+        prev_members = want.members_after.clone();
+    }
+    // Joiner seeds must agree with the epoch tables they index into.
+    for (rank, client, epoch) in hub.joiner_seeds() {
+        if !hub.joins_at(epoch).contains(&rank)
+            || !hub.members_after(epoch).contains(&(rank, client))
+        {
+            report.diagnostics.push(diag(
+                CheckKind::ElasticEpoch,
+                format!("joiner seed ({rank}, {client}, {epoch}) not in the epoch tables"),
+            ));
+        }
+    }
+}
+
+/// Run the registered collectives over each rebuilt per-client world on
+/// the tracing fabric and map every event endpoint back to ps_ranks: an
+/// event targeting a killed rank is the exact bug class PR 3 guards
+/// against.
+fn epoch_trace_diags(
+    hub: &ElasticHub,
+    epoch: u64,
+    clients: usize,
+    kills: &[usize],
+    diag: &dyn Fn(CheckKind, String) -> Diagnostic,
+) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let schedules = [
+        ScheduleId::Ring { rings: 1 },               // neighbor pattern
+        ScheduleId::Compressed { codec: Codec::named("topk") }, // all-pairs
+    ];
+    for client in 0..clients {
+        let ranks: Vec<usize> = hub
+            .members_after(epoch)
+            .iter()
+            .filter(|&&(_, c)| c == client)
+            .map(|&(r, _)| r)
+            .collect();
+        if ranks.len() < 2 {
+            continue;
+        }
+        for id in &schedules {
+            let run = run_traced(ranks.len(), |c| {
+                let mut bufs = vec![vec![1.0f32; 7]];
+                let mut ef = EfState::new();
+                id.run(c, &mut bufs, 1, &mut ef);
+            });
+            if !run.clean() {
+                out.push(diag(
+                    CheckKind::ElasticEpoch,
+                    format!(
+                        "epoch {epoch}: {} over client {client}'s rebuilt world did not \
+                         run clean",
+                        id.name()
+                    ),
+                ));
+                continue;
+            }
+            'events: for (new_rank, evs) in run.events.iter().enumerate() {
+                for ev in evs {
+                    let peer = match ev {
+                        TraceEvent::Send { to, .. } => *to,
+                        TraceEvent::Recv { from, .. } => *from,
+                        TraceEvent::Cancel { .. } => continue,
+                    };
+                    let ps = ranks[peer];
+                    if kills.contains(&ps) {
+                        out.push(diag(
+                            CheckKind::ElasticEpoch,
+                            format!(
+                                "epoch {epoch}: {} event of new rank {new_rank} targets \
+                                 ps_rank {ps}, which this epoch kills",
+                                id.name()
+                            ),
+                        ));
+                        break 'events;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The negative-color split rule, on the *real* mpisim fabric: over the
+/// pre-epoch world, dying ranks split with MPI_UNDEFINED and must get no
+/// communicator; survivors must land exactly where the `Group::exclude`
+/// translation says, in a world of exactly the survivor count.
+fn split_rule_diags(
+    prev_members: &[(usize, usize)],
+    kills: &[usize],
+    diag: &dyn Fn(CheckKind, String) -> Diagnostic,
+) -> Vec<Diagnostic> {
+    let prev: Vec<usize> = prev_members.iter().map(|&(r, _)| r).collect();
+    let n = prev.len();
+    if n < 2 {
+        return Vec::new();
+    }
+    let prev_group = Group::new(prev.clone());
+    let new_group = prev_group.exclude(kills);
+    let comms = World::create(n);
+    let errors: Vec<Option<String>> = std::thread::scope(|s| {
+        let handles: Vec<_> = comms
+            .into_iter()
+            .enumerate()
+            .map(|(idx, mut comm)| {
+                let ps = prev[idx];
+                let dying = kills.contains(&ps);
+                let new_group = &new_group;
+                s.spawn(move || {
+                    if dying {
+                        match comm.split(-1, 0) {
+                            None => None,
+                            Some(_) => Some(format!(
+                                "dying ps_rank {ps} got a communicator from split(-1)"
+                            )),
+                        }
+                    } else {
+                        let want_rank = new_group.rank_of(ps).expect("survivor in new group");
+                        match comm.split(0, idx) {
+                            None => Some(format!("survivor ps_rank {ps} got None from split(0)")),
+                            Some(sub) if sub.size() != new_group.size() => Some(format!(
+                                "survivor ps_rank {ps}: sub-world size {} != {}",
+                                sub.size(),
+                                new_group.size()
+                            )),
+                            Some(sub) if sub.rank() != want_rank => Some(format!(
+                                "survivor ps_rank {ps}: sub-rank {} != Group::exclude \
+                                 translation {want_rank}",
+                                sub.rank()
+                            )),
+                            Some(_) => None,
+                        }
+                    }
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("split-rule worker panicked"))
+            .collect()
+    });
+    errors
+        .into_iter()
+        .flatten()
+        .map(|e| diag(CheckKind::SplitRule, e))
+        .collect()
+}
+
+/// Exhaustive sweep: single events over every (world, cadence, iter)
+/// cell, plus ordered event pairs over the 2-client world (including
+/// invalid pairs — kill the same rank twice — which must be rejected).
+pub fn check_elastic() -> Report {
+    let mut report = Report::default();
+    for &(workers, clients) in WORLDS {
+        let mut singles: Vec<Ev> = Vec::new();
+        for r in 0..workers {
+            singles.push(Ev::Kill(r));
+            singles.push(Ev::Straggle(r));
+        }
+        singles.push(Ev::Join);
+        for &cadence in CADENCES {
+            for ev in &singles {
+                for &at in ITERS {
+                    check_plan(workers, clients, cadence, &ev.render(at), &mut report);
+                }
+            }
+        }
+    }
+    // Pairs on the multi-client world: kills × kills (same-rank pairs are
+    // invalid and must be rejected), kills × join, join × kills.
+    let (workers, clients) = (4, 2);
+    let mut pair_events: Vec<Ev> = (0..workers).map(Ev::Kill).collect();
+    pair_events.push(Ev::Join);
+    for first in &pair_events {
+        for second in &pair_events {
+            for &(a, b) in &[(0u64, 0u64), (0, 2)] {
+                let plan = format!("{},{}", first.render(a), second.render(b));
+                check_plan(workers, clients, 2, &plan, &mut report);
+            }
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_matches_hub_on_known_plan() {
+        let mut report = Report::default();
+        check_plan(4, 2, 2, "kill:1@0,join@3", &mut report);
+        assert!(report.ok(), "diagnostics: {:?}", report.diagnostics);
+    }
+
+    #[test]
+    fn killing_everyone_is_rejected_by_both() {
+        let mut report = Report::default();
+        check_plan(2, 1, 1, "kill:0@0,kill:1@0", &mut report);
+        assert!(report.ok(), "both model and hub must reject: {:?}", report.diagnostics);
+    }
+
+    #[test]
+    fn full_elastic_sweep_is_clean() {
+        let report = check_elastic();
+        assert!(report.ok(), "elastic diagnostics: {:?}", report.diagnostics);
+        assert!(report.configs_checked > 100);
+    }
+}

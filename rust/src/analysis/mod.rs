@@ -1,0 +1,973 @@
+//! `commcheck` — the static communication-schedule verifier (the CI gate
+//! behind `mxnet-mpi commcheck`).
+//!
+//! Every correctness claim the collective plane makes rests on dynamic
+//! tests of a nondeterministic message-passing system. This module checks
+//! the same claims *symbolically*: each registered schedule runs against
+//! the tracing fabric of [`trace`] — every `(src, dst, tag, len)` event
+//! captured per rank, deadlocks detected instead of hung — and the
+//! captured traces are fed through four analyses:
+//!
+//! 1. **Deadlock / structural** — the cross-rank wait-for graph over
+//!    blocking `recv`/`wait` edges: cycles and unsatisfiable waits are
+//!    reported with their stuck edges; unmatched sends and leaked
+//!    (dropped-while-armed) `Request`s each get their own rule, pinning
+//!    the PR 3 slot-reclamation behavior statically.
+//! 2. **Tag-window lint** — an independent model of each schedule's tag
+//!    layout (family base + `steps × chunks` budget, the contract behind
+//!    [`crate::collectives::TAG_SPACING`]) is checked against every traced
+//!    tag: no event may leave its declared family, exceed the window
+//!    budget, or set the mpisim collective bit. The runtime side of the
+//!    same contract is the checked clamp in `clamp_pipeline_chunks`.
+//! 3. **Coverage / conservation** — element provenance. A weighted run
+//!    (rank r contributes `r·1000 + i` at element i; all sums are exact
+//!    in f32) must produce the exact per-element total on every rank;
+//!    per-source indicator runs (rank j contributes all-ones, others
+//!    zero) prove each rank's contribution reaches every rank *exactly
+//!    once* — 0 = dropped, ≥2 = duplicated. Lossy codecs are checked by
+//!    cross-rank bitwise agreement plus the error-feedback conservation
+//!    law `Σ inputs = result + Σ residuals`. Length mismatches surface
+//!    here too (the traced fabric moves real payloads, so a truncated
+//!    chunk either garbles sums or panics a `copy_from_slice`).
+//! 4. **Elastic-epoch safety** — exhaustive small-world model checking of
+//!    `FaultPlan` × `ElasticHub` in [`elastic`], including the
+//!    negative-color `Comm::split` rule.
+//!
+//! The verifier is itself verified: [`mutants`] injects schedule bugs
+//! (drop a send, shift a tag, truncate a chunk, leak a request) and the
+//! test suite asserts each one is caught with the right diagnostic.
+
+pub mod elastic;
+pub mod mutants;
+pub mod trace;
+
+use crate::collectives::{
+    self, compressed_allreduce, fused_allreduce_compressed, fusion_buckets,
+    halving_doubling_allreduce_pipelined, hierarchical_allreduce_pipelined,
+    multi_ring_allreduce_pipelined, pow2_floor, AlgoKind, HD_AG_TAG, HD_FOLD_TAG, HD_RS_TAG,
+    HIER_BCAST_TAG, HIER_GATHER_TAG, RING_AG_TAG, RING_RS_TAG, SUBSET_AG_TAG, SUBSET_RS_TAG,
+    TAG_SPACING,
+};
+use crate::collectives::COMPRESS_TAG;
+use crate::compress::{Codec, EfState};
+use crate::mpisim::{CommOps, COLL_BIT};
+use crate::netsim::CostParams;
+use std::collections::BTreeSet;
+use std::fmt;
+use trace::{run_traced, TraceEvent, TraceRun};
+
+/// The swept rank counts: every small world (2..=9) plus two sizes that
+/// exercise the non-power-of-two fold (17) and a deeper power of two (16).
+pub const P_SWEEP: &[usize] = &[2, 3, 4, 5, 6, 7, 8, 9, 16, 17];
+
+/// The swept pipeline depths.
+pub const CHUNK_SWEEP: &[usize] = &[1, 2, 4, 8];
+
+/// EF-residual key base used by traced compressed runs (bucket `i` of a
+/// fused schedule uses `EF_KEY_BASE + start-index`).
+const EF_KEY_BASE: u64 = 100;
+
+/// Keep-ratio handed to the `topk` codec when tracing it.
+const TOPK_RATIO: f64 = 0.25;
+
+/// Per-(config, rule) cap on emitted diagnostics, so one broken schedule
+/// doesn't bury the report. The count of *suppressed* findings is always
+/// reported.
+const MAX_DIAGS: usize = 4;
+
+/// EF conservation tolerance, relative: f32 error feedback stores
+/// `acc − decode(code)`, and `decode + residual` re-rounds, so the books
+/// balance only to rounding. Real coverage bugs lose whole contributions
+/// (orders of magnitude above this).
+const EF_REL_TOL: f32 = 1e-3;
+
+// ---------------------------------------------------------------------------
+// Diagnostics
+// ---------------------------------------------------------------------------
+
+/// The verifier rule a diagnostic came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum CheckKind {
+    /// Unsatisfiable cross-rank wait (cycle or missing send).
+    Deadlock,
+    /// A sent message no receive ever consumed.
+    UnmatchedSend,
+    /// A receive request dropped while armed (MPI_Cancel leak).
+    LeakedRequest,
+    /// A tag outside its declared family window or budget.
+    TagWindow,
+    /// An element contribution dropped, duplicated, or garbled.
+    Coverage,
+    /// A rank panicked mid-schedule (e.g. a length-mismatched copy).
+    Panic,
+    /// A traced event targets a rank the fault plan killed, or an
+    /// `ElasticHub` epoch table violates a membership invariant.
+    ElasticEpoch,
+    /// A `Comm::split` outcome disagrees with the group-translation rule.
+    SplitRule,
+    /// The bucket issue plan is non-deterministic or overlapping.
+    EngineDag,
+    /// A key no bucket covers: its `Pending` var would never be signaled.
+    PendingVar,
+}
+
+impl CheckKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CheckKind::Deadlock => "deadlock",
+            CheckKind::UnmatchedSend => "unmatched-send",
+            CheckKind::LeakedRequest => "leaked-request",
+            CheckKind::TagWindow => "tag-window",
+            CheckKind::Coverage => "coverage",
+            CheckKind::Panic => "panic",
+            CheckKind::ElasticEpoch => "elastic-epoch",
+            CheckKind::SplitRule => "split-rule",
+            CheckKind::EngineDag => "engine-dag",
+            CheckKind::PendingVar => "pending-var",
+        }
+    }
+}
+
+/// One verifier finding, tied to the configuration that produced it.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    /// Schedule name (or pseudo-schedule: "elastic", "engine-plan").
+    pub schedule: String,
+    pub p: usize,
+    pub chunks: usize,
+    pub len: usize,
+    pub kind: CheckKind,
+    pub detail: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "[{}] {} (p={}, chunks={}, len={}): {}",
+            self.kind.name(),
+            self.schedule,
+            self.p,
+            self.chunks,
+            self.len,
+            self.detail
+        )
+    }
+}
+
+/// Aggregated verifier result: configuration count plus every finding.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub configs_checked: usize,
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl Report {
+    pub fn ok(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    pub fn merge(&mut self, other: Report) {
+        self.configs_checked += other.configs_checked;
+        self.diagnostics.extend(other.diagnostics);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Schedule registry
+// ---------------------------------------------------------------------------
+
+/// Every collective schedule the verifier knows how to drive — the
+/// checkable counterpart of [`AlgoKind`] plus the compression and fusion
+/// planes. Each variant is a concrete, parameterized schedule; the
+/// registry enumerates the instances the CI gate sweeps.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScheduleId {
+    /// Bucket multi-ring (§6.2/§6.3.2); `rings == 1` is the plain ring.
+    Ring { rings: usize },
+    /// Recursive vector halving-doubling with non-power-of-two fold-in.
+    HalvingDoubling,
+    /// Two-level hierarchical: group gather → leader subset ring → bcast.
+    Hierarchical { group: usize },
+    /// Error-feedback compressed allgather-reduce (identity delegates to
+    /// the dense ring, bitwise).
+    Compressed { codec: Codec },
+    /// Gradient-fusion bucketing over three buffers, compressed per
+    /// bucket.
+    FusedBuckets { fusion_bytes: usize, codec: Codec },
+}
+
+impl ScheduleId {
+    /// Every schedule instance the CI gate verifies: the three dense
+    /// schedules (ring twice — single and multi-ring — and two
+    /// hierarchical group sizes) plus the compressed and fused planes
+    /// under every registered codec.
+    pub fn registry() -> Vec<ScheduleId> {
+        let mut out = vec![
+            ScheduleId::Ring { rings: 1 },
+            ScheduleId::Ring { rings: 2 },
+            ScheduleId::HalvingDoubling,
+            ScheduleId::Hierarchical { group: 2 },
+            ScheduleId::Hierarchical { group: 3 },
+        ];
+        for codec in Codec::all() {
+            out.push(ScheduleId::Compressed { codec });
+            out.push(ScheduleId::FusedBuckets { fusion_bytes: 64, codec });
+        }
+        out
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            ScheduleId::Ring { rings } => format!("ring[x{rings}]"),
+            ScheduleId::HalvingDoubling => "halving_doubling".to_string(),
+            ScheduleId::Hierarchical { group } => format!("hierarchical[g{group}]"),
+            ScheduleId::Compressed { codec } => format!("compressed[{}]", codec.name()),
+            ScheduleId::FusedBuckets { fusion_bytes, codec } => {
+                format!("fused[{}B,{}]", fusion_bytes, codec.name())
+            }
+        }
+    }
+
+    /// True when the schedule's wire payloads are lossy-coded, so exact
+    /// per-element provenance is replaced by the EF conservation law.
+    pub fn is_lossy(&self) -> bool {
+        match self {
+            ScheduleId::Compressed { codec } | ScheduleId::FusedBuckets { codec, .. } => {
+                !codec.is_identity()
+            }
+            _ => false,
+        }
+    }
+
+    /// Buffer lengths for a traced run parameterized by the base `len`.
+    /// Fused schedules carry three buffers so the bucketing logic (merge
+    /// vs own-bucket) actually executes.
+    pub fn buf_lens(&self, len: usize) -> Vec<usize> {
+        match self {
+            ScheduleId::FusedBuckets { .. } => vec![len, (len / 2).max(1), len + 3],
+            _ => vec![len],
+        }
+    }
+
+    /// Run this schedule on `comm` over `bufs` (one buffer per entry of
+    /// [`Self::buf_lens`]). Works on any [`CommOps`] fabric — the real
+    /// mpisim, the tracing fabric, or a mutant wrapper.
+    pub fn run<C: CommOps>(&self, comm: &mut C, bufs: &mut [Vec<f32>], chunks: usize, ef: &mut EfState) {
+        match self {
+            ScheduleId::Ring { rings } => {
+                multi_ring_allreduce_pipelined(comm, &mut bufs[0], *rings, chunks)
+            }
+            ScheduleId::HalvingDoubling => {
+                halving_doubling_allreduce_pipelined(comm, &mut bufs[0], chunks)
+            }
+            ScheduleId::Hierarchical { group } => {
+                hierarchical_allreduce_pipelined(comm, &mut bufs[0], *group, chunks)
+            }
+            ScheduleId::Compressed { codec } => {
+                let mut params = CostParams::testbed1();
+                params.pipeline_chunks = chunks;
+                let boxed = codec.build(TOPK_RATIO);
+                compressed_allreduce(
+                    AlgoKind::Ring,
+                    comm,
+                    &mut bufs[0],
+                    boxed.as_ref(),
+                    EF_KEY_BASE,
+                    ef,
+                    1,
+                    2,
+                    &params,
+                );
+            }
+            ScheduleId::FusedBuckets { fusion_bytes, codec } => {
+                let mut params = CostParams::testbed1();
+                params.pipeline_chunks = chunks;
+                let ef_keys: Vec<u64> =
+                    (0..bufs.len()).map(|i| EF_KEY_BASE + i as u64).collect();
+                let boxed = codec.build(TOPK_RATIO);
+                fused_allreduce_compressed(
+                    AlgoKind::Ring,
+                    comm,
+                    bufs,
+                    &ef_keys,
+                    *fusion_bytes,
+                    boxed.as_ref(),
+                    ef,
+                    1,
+                    2,
+                    &params,
+                );
+            }
+        }
+    }
+
+    /// The schedule's declared tag families: `(base, budget)` windows an
+    /// event tag must fall in. This is an *independent* model of the tag
+    /// layout (recomputed from the schedule's step structure, not read
+    /// back from the code under test) — the lint proves the traced tags
+    /// match it.
+    fn tag_families(&self, p: usize, chunks: usize, len: usize) -> Vec<Family> {
+        match self {
+            ScheduleId::Ring { .. } => ring_families(p, chunks),
+            ScheduleId::HalvingDoubling => {
+                let q = pow2_floor(p);
+                let tz = (q.trailing_zeros() as u64).max(1);
+                let k = clamp_model(chunks, 2 * tz as usize);
+                let mut fams = vec![
+                    Family { base: HD_RS_TAG, budget: tz * k, name: "hd-rs" },
+                    // The AG step counter continues from the RS phase, so
+                    // its offsets live in [tz·k, 2·tz·k).
+                    Family { base: HD_AG_TAG, budget: 2 * tz * k, name: "hd-ag" },
+                ];
+                if p != q {
+                    fams.push(Family { base: HD_FOLD_TAG, budget: 2, name: "hd-fold" });
+                }
+                fams
+            }
+            ScheduleId::Hierarchical { group } => {
+                let g = (*group).clamp(1, p);
+                let kh = clamp_model(chunks.min(len.max(1)), 1);
+                let mut fams = vec![
+                    Family { base: HIER_GATHER_TAG, budget: kh, name: "hier-gather" },
+                    Family { base: HIER_BCAST_TAG, budget: kh, name: "hier-bcast" },
+                ];
+                let leaders = p.div_ceil(g);
+                if leaders > 1 {
+                    let ks = clamp_model(chunks, leaders - 1);
+                    let budget = (leaders - 1) as u64 * ks;
+                    fams.push(Family { base: SUBSET_RS_TAG, budget, name: "subset-rs" });
+                    fams.push(Family { base: SUBSET_AG_TAG, budget, name: "subset-ag" });
+                }
+                fams
+            }
+            ScheduleId::Compressed { codec } | ScheduleId::FusedBuckets { codec, .. } => {
+                if codec.is_identity() {
+                    // Identity codecs delegate to the dense ring path.
+                    ring_families(p, chunks)
+                } else {
+                    vec![Family { base: COMPRESS_TAG, budget: 1, name: "compress" }]
+                }
+            }
+        }
+    }
+}
+
+/// One declared tag window: tags must satisfy
+/// `base <= tag < base + budget` (and `budget <= TAG_SPACING`).
+struct Family {
+    base: u64,
+    budget: u64,
+    name: &'static str,
+}
+
+/// The lint's own copy of the pipeline-depth clamp (pure — no logging, no
+/// assert): `min(requested, TAG_SPACING / steps)`, at least 1.
+fn clamp_model(requested: usize, steps: usize) -> u64 {
+    let limit = (TAG_SPACING as usize / steps.max(1)).max(1);
+    requested.max(1).min(limit) as u64
+}
+
+fn ring_families(p: usize, chunks: usize) -> Vec<Family> {
+    let steps = p.saturating_sub(1).max(1);
+    let budget = steps as u64 * clamp_model(chunks, steps);
+    vec![
+        Family { base: RING_RS_TAG, budget, name: "ring-rs" },
+        Family { base: RING_AG_TAG, budget, name: "ring-ag" },
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// Per-configuration checking
+// ---------------------------------------------------------------------------
+
+/// What each traced rank returns: its final buffers plus, for lossy runs,
+/// the EF residual of every bucket (keyed by bucket-start buffer index).
+pub struct RankOut {
+    pub bufs: Vec<Vec<f32>>,
+    pub residuals: Vec<(usize, Option<Vec<f32>>)>,
+}
+
+/// Buffer lengths swept per (schedule, p, chunks) configuration: one
+/// shorter than the chunk count (degenerate/empty sub-chunks) and one
+/// with an awkward remainder.
+pub fn lens_for(p: usize) -> [usize; 2] {
+    [(p - 1).max(1), 2 * p + 3]
+}
+
+/// The weighted provenance payload: rank `r`'s element at flattened
+/// index `g` is `r·1000 + g`. Integer-valued and small enough that every
+/// partial sum is exact in f32 (p ≤ 17, len ≤ 41 ⇒ sums < 2^24), so a
+/// correct allreduce must reproduce the closed-form total *bitwise*.
+fn weighted(rank: usize, g: usize) -> f32 {
+    (rank * 1000 + g) as f32
+}
+
+fn weighted_total(p: usize, g: usize) -> f32 {
+    (1000 * (p * (p - 1) / 2) + p * g) as f32
+}
+
+/// Trace one (schedule, p, chunks) configuration and run the structural,
+/// tag, and coverage analyses over it.
+pub fn check_config(id: &ScheduleId, p: usize, chunks: usize) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for len in lens_for(p) {
+        let lens = id.buf_lens(len);
+        let run = run_traced(p, |c| {
+            let rank = c.rank();
+            let mut off = 0usize;
+            let mut bufs: Vec<Vec<f32>> = Vec::with_capacity(lens.len());
+            for &l in &lens {
+                bufs.push((0..l).map(|i| weighted(rank, off + i)).collect());
+                off += l;
+            }
+            let mut ef = EfState::new();
+            id.run(c, &mut bufs, chunks, &mut ef);
+            let residuals = collect_residuals(id, &lens, &ef);
+            RankOut { bufs, residuals }
+        });
+        out.extend(structural_diags(id, p, chunks, len, &run));
+        out.extend(tag_lint(id, p, chunks, len, &run.events));
+        if run.clean() && run.results.iter().all(|r| r.is_some()) {
+            if id.is_lossy() {
+                out.extend(lossy_diags(id, p, chunks, len, &lens, &run));
+            } else {
+                out.extend(dense_exact_diags(id, p, chunks, len, &lens, &run));
+            }
+        }
+    }
+    // Per-source indicator passes: exact single-contribution provenance,
+    // dense schedules on the exhaustive small worlds.
+    if !id.is_lossy() && p <= 9 {
+        out.extend(indicator_diags(id, p, chunks));
+    }
+    out
+}
+
+fn collect_residuals(id: &ScheduleId, lens: &[usize], ef: &EfState) -> Vec<(usize, Option<Vec<f32>>)> {
+    match id {
+        ScheduleId::Compressed { codec } if !codec.is_identity() => {
+            vec![(0, ef.residual(EF_KEY_BASE).map(|r| r.to_vec()))]
+        }
+        ScheduleId::FusedBuckets { fusion_bytes, codec } if !codec.is_identity() => {
+            fusion_buckets(lens, *fusion_bytes)
+                .into_iter()
+                .map(|(i, _)| (i, ef.residual(EF_KEY_BASE + i as u64).map(|r| r.to_vec())))
+                .collect()
+        }
+        _ => Vec::new(),
+    }
+}
+
+/// Deadlocks, panics, leaked requests, unmatched sends — the wait-for
+/// graph analysis plus the teardown rules.
+fn structural_diags<R>(
+    id: &ScheduleId,
+    p: usize,
+    chunks: usize,
+    len: usize,
+    run: &TraceRun<R>,
+) -> Vec<Diagnostic> {
+    let diag = |kind: CheckKind, detail: String| Diagnostic {
+        schedule: id.name(),
+        p,
+        chunks,
+        len,
+        kind,
+        detail,
+    };
+    let mut out = Vec::new();
+    if let Some(edges) = &run.deadlock {
+        let shown: Vec<String> = edges
+            .iter()
+            .take(6)
+            .map(|e| format!("rank {} waits on (src={}, tag={:#x})", e.rank, e.from, e.tag))
+            .collect();
+        let more = edges.len().saturating_sub(6);
+        let suffix = if more > 0 { format!(" (+{more} more edges)") } else { String::new() };
+        out.push(diag(
+            CheckKind::Deadlock,
+            format!("unsatisfiable wait-for graph: {}{}", shown.join("; "), suffix),
+        ));
+    }
+    for (rank, msg) in run.panics.iter().take(MAX_DIAGS) {
+        out.push(diag(CheckKind::Panic, format!("rank {rank} panicked: {msg}")));
+    }
+    if run.panics.len() > MAX_DIAGS {
+        out.push(diag(
+            CheckKind::Panic,
+            format!("{} further rank panics suppressed", run.panics.len() - MAX_DIAGS),
+        ));
+    }
+    // Leaked requests are only a finding of their own outside a deadlock:
+    // poisoning unwinds every parked rank, dropping its still-armed
+    // requests as a side effect of the deadlock already reported.
+    if run.deadlock.is_none() {
+        for (rank, from, tag) in run.leaked.iter().take(MAX_DIAGS) {
+            out.push(diag(
+                CheckKind::LeakedRequest,
+                format!("rank {rank} dropped an armed receive for (src={from}, tag={tag:#x})"),
+            ));
+        }
+        if run.leaked.len() > MAX_DIAGS {
+            out.push(diag(
+                CheckKind::LeakedRequest,
+                format!("{} further leaked requests suppressed", run.leaked.len() - MAX_DIAGS),
+            ));
+        }
+    }
+    for (from, to, tag, mlen) in run.unmatched_sends.iter().take(MAX_DIAGS) {
+        out.push(diag(
+            CheckKind::UnmatchedSend,
+            format!("send {from} -> {to} (tag={tag:#x}, len={mlen}) was never received"),
+        ));
+    }
+    if run.unmatched_sends.len() > MAX_DIAGS {
+        out.push(diag(
+            CheckKind::UnmatchedSend,
+            format!(
+                "{} further unmatched sends suppressed",
+                run.unmatched_sends.len() - MAX_DIAGS
+            ),
+        ));
+    }
+    out
+}
+
+/// The tag-window lint: every traced tag must sit inside a declared
+/// family window and inside that family's `steps × chunks` budget, and
+/// must not set the mpisim collective bit.
+fn tag_lint(
+    id: &ScheduleId,
+    p: usize,
+    chunks: usize,
+    len: usize,
+    events: &[Vec<TraceEvent>],
+) -> Vec<Diagnostic> {
+    let families = id.tag_families(p, chunks, len);
+    let mut offenders: BTreeSet<u64> = BTreeSet::new();
+    let mut details: Vec<String> = Vec::new();
+    for evs in events {
+        for ev in evs {
+            let tag = match ev {
+                TraceEvent::Send { tag, .. } | TraceEvent::Recv { tag, .. } => *tag,
+                TraceEvent::Cancel { .. } => continue,
+            };
+            if offenders.contains(&tag) {
+                continue;
+            }
+            if tag & COLL_BIT != 0 {
+                offenders.insert(tag);
+                details.push(format!("tag {tag:#x} sets the mpisim collective bit"));
+                continue;
+            }
+            match families.iter().find(|f| tag >= f.base && tag < f.base + TAG_SPACING) {
+                None => {
+                    offenders.insert(tag);
+                    details.push(format!(
+                        "tag {tag:#x} lies outside every declared family window of {}",
+                        id.name()
+                    ));
+                }
+                Some(f) if tag - f.base >= f.budget => {
+                    offenders.insert(tag);
+                    details.push(format!(
+                        "tag {:#x} exceeds the {} budget: offset {} >= {}",
+                        tag,
+                        f.name,
+                        tag - f.base,
+                        f.budget
+                    ));
+                }
+                Some(_) => {}
+            }
+        }
+    }
+    let total = details.len();
+    let mut out: Vec<Diagnostic> = details
+        .into_iter()
+        .take(MAX_DIAGS)
+        .map(|detail| Diagnostic {
+            schedule: id.name(),
+            p,
+            chunks,
+            len,
+            kind: CheckKind::TagWindow,
+            detail,
+        })
+        .collect();
+    if total > MAX_DIAGS {
+        out.push(Diagnostic {
+            schedule: id.name(),
+            p,
+            chunks,
+            len,
+            kind: CheckKind::TagWindow,
+            detail: format!("{} further tag offenses suppressed", total - MAX_DIAGS),
+        });
+    }
+    out
+}
+
+/// Dense conservation: every rank must hold the exact closed-form total
+/// of the weighted payloads, with the input length preserved.
+fn dense_exact_diags(
+    id: &ScheduleId,
+    p: usize,
+    chunks: usize,
+    len: usize,
+    lens: &[usize],
+    run: &TraceRun<RankOut>,
+) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    'ranks: for (rank, res) in run.results.iter().enumerate() {
+        let res = res.as_ref().expect("clean run has results");
+        let mut g = 0usize;
+        for (b, &l) in lens.iter().enumerate() {
+            if res.bufs[b].len() != l {
+                out.push(Diagnostic {
+                    schedule: id.name(),
+                    p,
+                    chunks,
+                    len,
+                    kind: CheckKind::Coverage,
+                    detail: format!(
+                        "rank {rank} buffer {b}: length {} != input length {l}",
+                        res.bufs[b].len()
+                    ),
+                });
+                break 'ranks;
+            }
+            for (i, &v) in res.bufs[b].iter().enumerate() {
+                let want = weighted_total(p, g + i);
+                if v != want {
+                    out.push(Diagnostic {
+                        schedule: id.name(),
+                        p,
+                        chunks,
+                        len,
+                        kind: CheckKind::Coverage,
+                        detail: format!(
+                            "rank {rank} buffer {b} element {i}: got {v}, want exact sum {want} \
+                             (some contribution dropped, duplicated, or misrouted)"
+                        ),
+                    });
+                    break 'ranks; // one witness per config is enough
+                }
+            }
+            g += l;
+        }
+    }
+    out
+}
+
+/// Lossy conservation: all ranks must agree bitwise (same decoded
+/// payloads folded in the same order), and the error-feedback books must
+/// balance: `Σ_r input_r = result + Σ_r residual_r` per element.
+fn lossy_diags(
+    id: &ScheduleId,
+    p: usize,
+    chunks: usize,
+    len: usize,
+    lens: &[usize],
+    run: &TraceRun<RankOut>,
+) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let diag = |detail: String| Diagnostic {
+        schedule: id.name(),
+        p,
+        chunks,
+        len,
+        kind: CheckKind::Coverage,
+        detail,
+    };
+    let r0 = run.results[0].as_ref().expect("clean run has results");
+    for (rank, res) in run.results.iter().enumerate().skip(1) {
+        let res = res.as_ref().expect("clean run has results");
+        if res.bufs != r0.bufs {
+            out.push(diag(format!(
+                "rank {rank} result diverges from rank 0 (lossy decode-reduce must be \
+                 bitwise identical across ranks)"
+            )));
+            return out;
+        }
+    }
+    // Books per element, flattened across buffers: residual vectors are
+    // keyed by bucket and cover the bucket's fused span.
+    let flat_len: usize = lens.iter().sum();
+    let mut result_flat = Vec::with_capacity(flat_len);
+    for b in r0.bufs.iter() {
+        result_flat.extend_from_slice(b);
+    }
+    if result_flat.len() != flat_len {
+        out.push(diag(format!(
+            "result length {} != input length {flat_len}",
+            result_flat.len()
+        )));
+        return out;
+    }
+    // Per-rank flattened residuals (zero where a bucket has none yet).
+    let bucket_spans: Vec<(usize, usize)> = match id {
+        ScheduleId::FusedBuckets { fusion_bytes, .. } => fusion_buckets(lens, *fusion_bytes)
+            .into_iter()
+            .map(|(i, j)| {
+                let start: usize = lens[..i].iter().sum();
+                let span: usize = lens[i..j].iter().sum();
+                (start, span)
+            })
+            .collect(),
+        _ => vec![(0, flat_len)],
+    };
+    let mut residual_sum = vec![0.0f32; flat_len];
+    for (rank, res) in run.results.iter().enumerate() {
+        let res = res.as_ref().expect("clean run has results");
+        if res.residuals.len() != bucket_spans.len() {
+            out.push(diag(format!(
+                "rank {rank}: {} EF residual buckets recorded, schedule has {}",
+                res.residuals.len(),
+                bucket_spans.len()
+            )));
+            return out;
+        }
+        for ((_, residual), &(start, span)) in res.residuals.iter().zip(&bucket_spans) {
+            match residual {
+                None => {
+                    out.push(diag(format!(
+                        "rank {rank}: no EF residual recorded for the bucket at offset {start} \
+                         (the codec never ran over it)"
+                    )));
+                    return out;
+                }
+                Some(r) if r.len() != span => {
+                    out.push(diag(format!(
+                        "rank {rank}: EF residual length {} != bucket span {span}",
+                        r.len()
+                    )));
+                    return out;
+                }
+                Some(r) => {
+                    for (i, &v) in r.iter().enumerate() {
+                        residual_sum[start + i] += v;
+                    }
+                }
+            }
+        }
+    }
+    for g in 0..flat_len {
+        let inputs: f32 = (0..p).map(|r| weighted(r, g)).sum();
+        let books = result_flat[g] + residual_sum[g];
+        let err = (inputs - books).abs();
+        if err > EF_REL_TOL * inputs.abs().max(1.0) {
+            out.push(diag(format!(
+                "EF conservation violated at element {g}: inputs sum to {inputs} but \
+                 result + residuals = {books} (err {err:.4}) — mass was dropped or duplicated"
+            )));
+            return out;
+        }
+    }
+    out
+}
+
+/// Per-source indicator passes: rank `src` contributes all-ones, every
+/// other rank zero. A correct allreduce leaves exactly 1.0 everywhere on
+/// every rank; 0 means `src`'s contribution was dropped at that element,
+/// 2 means it was folded twice. Run once per source — the columns of the
+/// element-provenance matrix.
+fn indicator_diags(id: &ScheduleId, p: usize, chunks: usize) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let len = 2 * p + 3;
+    let lens = id.buf_lens(len);
+    for src in 0..p {
+        let run = run_traced(p, |c| {
+            let v = if c.rank() == src { 1.0f32 } else { 0.0 };
+            let mut bufs: Vec<Vec<f32>> = lens.iter().map(|&l| vec![v; l]).collect();
+            let mut ef = EfState::new();
+            id.run(c, &mut bufs, chunks, &mut ef);
+            bufs
+        });
+        if !run.clean() || run.results.iter().any(|r| r.is_none()) {
+            // Structural findings were already reported by the weighted
+            // pass; just note the provenance pass could not complete.
+            out.push(Diagnostic {
+                schedule: id.name(),
+                p,
+                chunks,
+                len,
+                kind: CheckKind::Coverage,
+                detail: format!("indicator pass for source rank {src} did not complete cleanly"),
+            });
+            continue;
+        }
+        'ranks: for (rank, bufs) in run.results.iter().enumerate() {
+            let bufs = bufs.as_ref().expect("checked above");
+            for (b, buf) in bufs.iter().enumerate() {
+                for (i, &v) in buf.iter().enumerate() {
+                    if v != 1.0 {
+                        let what = if v == 0.0 {
+                            "dropped"
+                        } else if v >= 2.0 {
+                            "duplicated"
+                        } else {
+                            "garbled"
+                        };
+                        out.push(Diagnostic {
+                            schedule: id.name(),
+                            p,
+                            chunks,
+                            len,
+                            kind: CheckKind::Coverage,
+                            detail: format!(
+                                "contribution of rank {src} was {what} at rank {rank} \
+                                 buffer {b} element {i} (got {v}, want 1)"
+                            ),
+                        });
+                        break 'ranks;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Sweeps
+// ---------------------------------------------------------------------------
+
+/// The schedule-matrix gate: every registered schedule × [`P_SWEEP`] ×
+/// [`CHUNK_SWEEP`], all four trace analyses per cell.
+pub fn check_schedules() -> Report {
+    let mut report = Report::default();
+    for id in ScheduleId::registry() {
+        for &p in P_SWEEP {
+            for &chunks in CHUNK_SWEEP {
+                report.configs_checked += 1;
+                report.diagnostics.extend(check_config(&id, p, chunks));
+            }
+        }
+    }
+    report
+}
+
+/// Engine-DAG checks over the kvstore bucket issue plan: the plan must
+/// cover every key exactly once (a missed key is a `Pending` var no
+/// engine op ever signals), be identical however often it is recomputed
+/// (all ranks derive it independently — divergence deadlocks the
+/// collective), and issue disjoint buckets back-to-front (the engine's
+/// per-bucket ops then form a forest — acyclic by construction).
+pub fn check_engine_plans() -> Report {
+    let mut report = Report::default();
+    let cases: &[&[usize]] = &[
+        &[4, 5, 6],
+        &[10],
+        &[1, 1, 1, 1, 1, 1, 1],
+        &[3, 40, 2, 2, 50, 1],
+    ];
+    for &lens in cases {
+        for &fusion_bytes in &[0usize, 16, 64, 1 << 20] {
+            report.configs_checked += 1;
+            let diag = |kind: CheckKind, detail: String| Diagnostic {
+                schedule: "engine-plan".to_string(),
+                p: 0,
+                chunks: 0,
+                len: lens.len(),
+                kind,
+                detail,
+            };
+            let plan = crate::kvstore::bucket_issue_plan(lens, fusion_bytes);
+            // Determinism: every rank recomputes the plan independently.
+            for _ in 0..2 {
+                if crate::kvstore::bucket_issue_plan(lens, fusion_bytes) != plan {
+                    report.diagnostics.push(diag(
+                        CheckKind::EngineDag,
+                        format!("issue plan is non-deterministic (fusion_bytes={fusion_bytes})"),
+                    ));
+                }
+            }
+            // Coverage: each key in exactly one bucket.
+            let mut hits = vec![0usize; lens.len()];
+            for &(i, j) in &plan {
+                if i >= j || j > lens.len() {
+                    report.diagnostics.push(diag(
+                        CheckKind::EngineDag,
+                        format!("malformed bucket [{i}, {j}) over {} keys", lens.len()),
+                    ));
+                    continue;
+                }
+                for h in hits.iter_mut().take(j).skip(i) {
+                    *h += 1;
+                }
+            }
+            for (k, &h) in hits.iter().enumerate() {
+                if h == 0 {
+                    report.diagnostics.push(diag(
+                        CheckKind::PendingVar,
+                        format!(
+                            "key {k} is in no bucket (fusion_bytes={fusion_bytes}): its \
+                             Pending var would never be signaled"
+                        ),
+                    ));
+                } else if h > 1 {
+                    report.diagnostics.push(diag(
+                        CheckKind::EngineDag,
+                        format!(
+                            "key {k} is in {h} buckets (fusion_bytes={fusion_bytes}): its \
+                             engine var would be signaled twice"
+                        ),
+                    ));
+                }
+            }
+            // Issue order: strictly back-to-front over disjoint ranges,
+            // so no issued bucket waits on a later one (acyclicity).
+            for w in plan.windows(2) {
+                if w[1].1 > w[0].0 {
+                    report.diagnostics.push(diag(
+                        CheckKind::EngineDag,
+                        format!(
+                            "issue order not back-to-front: bucket [{}, {}) issued after \
+                             [{}, {})",
+                            w[1].0, w[1].1, w[0].0, w[0].1
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    report
+}
+
+/// Everything `mxnet-mpi commcheck` gates on: the schedule matrix, the
+/// engine-plan checks, and the exhaustive elastic-epoch model check.
+pub fn full_report() -> Report {
+    let mut report = check_schedules();
+    report.merge(check_engine_plans());
+    report.merge(elastic::check_elastic());
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_family_model_accepts_ring_trace() {
+        let id = ScheduleId::Ring { rings: 1 };
+        assert!(check_config(&id, 4, 2).is_empty());
+    }
+
+    #[test]
+    fn weighted_totals_are_exact() {
+        // Largest configuration in the sweep: sums must be integers that
+        // f32 holds exactly (< 2^24).
+        let p = 17;
+        let len = 2 * p + 3 + (p - 1) + 3; // fused flat length upper bound
+        let worst = 1000 * (p * (p - 1) / 2) + p * len;
+        assert!(worst < (1 << 24));
+        assert_eq!(weighted_total(3, 5), 3015.0);
+    }
+
+    #[test]
+    fn engine_plan_checks_pass_on_real_plan() {
+        assert!(check_engine_plans().ok());
+    }
+}

@@ -1,0 +1,259 @@
+//! Seeded-mutant suite: proof that the verifier catches what it claims
+//! to catch.
+//!
+//! Each mutant wraps the tracing fabric in a [`MutantComm`] that injects
+//! exactly one schedule bug on rank 0 — drop the n-th send, shift its
+//! tag, truncate its payload, or leak an in-flight request — and the
+//! suite asserts the analyses flag it with the *right* diagnostic class.
+//! A verifier that passes its clean matrix but misses a seeded mutant is
+//! worse than no verifier, so `commcheck` (CLI and CI) runs this suite
+//! alongside the clean sweep.
+
+use super::trace::run_traced;
+use super::{
+    dense_exact_diags, structural_diags, tag_lint, CheckKind, Diagnostic, RankOut, ScheduleId,
+    TAG_SPACING,
+};
+use crate::compress::EfState;
+use crate::mpisim::CommOps;
+use std::collections::BTreeSet;
+
+/// One injected schedule bug. `nth` counts the affected operation on the
+/// mutated rank (rank 0), so each mutant is deterministic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mutation {
+    /// Silently skip the n-th send — the classic lost-message deadlock.
+    DropSend { nth: usize },
+    /// Send the n-th message under `tag + delta` instead of `tag`. A
+    /// small delta mismatches within the family (deadlock/misroute); a
+    /// delta of many [`TAG_SPACING`] windows lands in undeclared tag
+    /// space (tag-window lint).
+    ShiftTag { nth: usize, delta: u64 },
+    /// Truncate the n-th send's payload to half its length — the
+    /// mismatched-count bug MPI hides until the buffers disagree.
+    TruncateChunk { nth: usize },
+    /// Drop one pending request out of the n-th `wait_any` set — the
+    /// leaked-`Request` bug the PR 3 slot-reclamation fix closed.
+    LeakRequest { nth: usize },
+}
+
+/// A [`CommOps`] fabric that forwards to `inner`, injecting `mutation`
+/// into this rank's operation stream. Generic over the fabric, so the
+/// same wrapper can corrupt a traced run (here) or a live mpisim run.
+pub struct MutantComm<'a, C: CommOps> {
+    inner: &'a mut C,
+    mutation: Option<Mutation>,
+    sends: usize,
+    waits: usize,
+}
+
+impl<'a, C: CommOps> MutantComm<'a, C> {
+    pub fn new(inner: &'a mut C, mutation: Option<Mutation>) -> Self {
+        Self { inner, mutation, sends: 0, waits: 0 }
+    }
+}
+
+impl<C: CommOps> CommOps for MutantComm<'_, C> {
+    type Req = C::Req;
+
+    fn rank(&self) -> usize {
+        self.inner.rank()
+    }
+
+    fn size(&self) -> usize {
+        self.inner.size()
+    }
+
+    fn send(&mut self, to: usize, tag: u64, data: Vec<f32>) {
+        let n = self.sends;
+        self.sends += 1;
+        match self.mutation {
+            Some(Mutation::DropSend { nth }) if n == nth => {}
+            Some(Mutation::ShiftTag { nth, delta }) if n == nth => {
+                self.inner.send(to, tag.wrapping_add(delta), data)
+            }
+            Some(Mutation::TruncateChunk { nth }) if n == nth => {
+                let keep = data.len() / 2;
+                self.inner.send(to, tag, data[..keep].to_vec())
+            }
+            _ => self.inner.send(to, tag, data),
+        }
+    }
+
+    fn recv(&mut self, from: usize, tag: u64) -> Vec<f32> {
+        self.inner.recv(from, tag)
+    }
+
+    fn irecv(&mut self, from: usize, tag: u64) -> C::Req {
+        self.inner.irecv(from, tag)
+    }
+
+    fn wait(&mut self, req: C::Req) -> Vec<f32> {
+        self.inner.wait(req)
+    }
+
+    fn wait_any(&mut self, reqs: &mut Vec<C::Req>) -> (usize, Vec<f32>) {
+        if let Some(Mutation::LeakRequest { nth }) = self.mutation {
+            let n = self.waits;
+            self.waits += 1;
+            if n == nth && reqs.len() > 1 {
+                // Drop a pending request on the floor; its Drop impl
+                // takes the MPI_Cancel path the verifier must flag.
+                let _leaked = reqs.remove(0);
+            }
+        }
+        self.inner.wait_any(reqs)
+    }
+}
+
+/// One seeded mutant: a (schedule, world, bug) triple and the diagnostic
+/// classes that count as catching it.
+pub struct MutantCase {
+    pub label: &'static str,
+    pub schedule: ScheduleId,
+    pub p: usize,
+    pub chunks: usize,
+    pub mutation: Mutation,
+    /// Catching = at least one diagnostic of one of these kinds.
+    pub expected: &'static [CheckKind],
+}
+
+/// The verdict for one mutant after running the analyses over its trace.
+pub struct MutantOutcome {
+    pub label: &'static str,
+    pub expected: &'static [CheckKind],
+    pub found: Vec<CheckKind>,
+    pub caught: bool,
+}
+
+/// The seeded bug classes from the issue — drop a send, shift a tag
+/// (both within-family and into undeclared space), truncate a chunk,
+/// leak a request — across ring and halving-doubling worlds.
+pub fn seeded_mutants() -> Vec<MutantCase> {
+    vec![
+        MutantCase {
+            label: "ring/drop-send",
+            schedule: ScheduleId::Ring { rings: 1 },
+            p: 4,
+            chunks: 1,
+            mutation: Mutation::DropSend { nth: 1 },
+            expected: &[CheckKind::Deadlock],
+        },
+        MutantCase {
+            label: "hd/drop-send",
+            schedule: ScheduleId::HalvingDoubling,
+            p: 4,
+            chunks: 2,
+            mutation: Mutation::DropSend { nth: 2 },
+            expected: &[CheckKind::Deadlock],
+        },
+        MutantCase {
+            label: "ring/shift-tag-in-family",
+            schedule: ScheduleId::Ring { rings: 1 },
+            p: 4,
+            chunks: 1,
+            // +3 stays inside the ring family but matches a receive
+            // posted for a different step: misroute or deadlock.
+            mutation: Mutation::ShiftTag { nth: 1, delta: 3 },
+            expected: &[CheckKind::Deadlock, CheckKind::Coverage, CheckKind::UnmatchedSend],
+        },
+        MutantCase {
+            label: "ring/shift-tag-out-of-family",
+            schedule: ScheduleId::Ring { rings: 1 },
+            p: 4,
+            chunks: 1,
+            // 42 windows away: undeclared tag space — the lint must fire
+            // even though the run also wedges.
+            mutation: Mutation::ShiftTag { nth: 1, delta: 42 * TAG_SPACING },
+            expected: &[CheckKind::TagWindow],
+        },
+        MutantCase {
+            label: "ring/truncate-chunk",
+            schedule: ScheduleId::Ring { rings: 1 },
+            p: 4,
+            chunks: 1,
+            mutation: Mutation::TruncateChunk { nth: 0 },
+            expected: &[CheckKind::Coverage, CheckKind::Panic],
+        },
+        MutantCase {
+            label: "ring/leak-request",
+            schedule: ScheduleId::Ring { rings: 1 },
+            p: 4,
+            chunks: 2,
+            mutation: Mutation::LeakRequest { nth: 1 },
+            expected: &[CheckKind::LeakedRequest, CheckKind::Deadlock],
+        },
+    ]
+}
+
+/// Run one mutant and collect the diagnostic kinds the analyses emit.
+pub fn run_mutant(case: &MutantCase) -> MutantOutcome {
+    let len = 2 * case.p + 3;
+    let lens = case.schedule.buf_lens(len);
+    let run = run_traced(case.p, |c| {
+        let rank = c.rank();
+        let mutation = if rank == 0 { Some(case.mutation) } else { None };
+        let mut off = 0usize;
+        let mut bufs: Vec<Vec<f32>> = Vec::with_capacity(lens.len());
+        for &l in &lens {
+            bufs.push((0..l).map(|i| super::weighted(rank, off + i)).collect());
+            off += l;
+        }
+        let mut ef = EfState::new();
+        let mut mc = MutantComm::new(c, mutation);
+        case.schedule.run(&mut mc, &mut bufs, case.chunks, &mut ef);
+        RankOut { bufs, residuals: Vec::new() }
+    });
+    let mut diags: Vec<Diagnostic> = Vec::new();
+    diags.extend(structural_diags(&case.schedule, case.p, case.chunks, len, &run));
+    diags.extend(tag_lint(&case.schedule, case.p, case.chunks, len, &run.events));
+    if run.deadlock.is_none() && run.panics.is_empty() && run.results.iter().all(|r| r.is_some())
+    {
+        diags.extend(dense_exact_diags(&case.schedule, case.p, case.chunks, len, &lens, &run));
+    }
+    let found: Vec<CheckKind> = diags
+        .iter()
+        .map(|d| d.kind)
+        .collect::<BTreeSet<_>>()
+        .into_iter()
+        .collect();
+    let caught = case.expected.iter().any(|k| found.contains(k));
+    MutantOutcome { label: case.label, expected: case.expected, found, caught }
+}
+
+/// Run the full suite. The gate fails unless *every* mutant is caught.
+pub fn run_mutant_suite() -> Vec<MutantOutcome> {
+    seeded_mutants().iter().map(run_mutant).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_seeded_mutant_is_caught() {
+        for outcome in run_mutant_suite() {
+            assert!(
+                outcome.caught,
+                "mutant {} escaped: expected one of {:?}, found {:?}",
+                outcome.label, outcome.expected, outcome.found
+            );
+        }
+    }
+
+    #[test]
+    fn mutant_free_wrapper_is_transparent() {
+        // A MutantComm with no mutation must not change the schedule:
+        // the clean config check still passes through the wrapper.
+        let id = ScheduleId::Ring { rings: 1 };
+        let run = run_traced(3, |c| {
+            let mut bufs = vec![(0..9).map(|i| super::super::weighted(c.rank(), i)).collect()];
+            let mut ef = EfState::new();
+            let mut mc = MutantComm::new(c, None);
+            id.run(&mut mc, &mut bufs, 2, &mut ef);
+            RankOut { bufs, residuals: Vec::new() }
+        });
+        assert!(run.clean());
+        assert!(dense_exact_diags(&id, 3, 2, 9, &[9], &run).is_empty());
+    }
+}

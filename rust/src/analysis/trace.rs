@@ -1,0 +1,525 @@
+//! The tracing communicator: runs a real schedule, records every
+//! communication event, and detects deadlocks instead of hanging.
+//!
+//! [`TraceComm`] implements [`CommOps`], so any generic schedule function
+//! from [`crate::collectives`] runs against it unmodified. Payloads do
+//! move (schedules slice and fold real buffers), but everything routes
+//! through one central [`TraceHub`] that keeps, per rank: the unexpected
+//! -message queue, the posted-receive slab with MPI posting-order
+//! matching, the event log, and — the part the real fabric cannot give
+//! us — a **blocked registry**. Sends are eager (buffered, like
+//! [`crate::mpisim`]), so the moment every live rank is parked in a
+//! `wait`/`wait_any` whose slots are all unfilled, no future send can
+//! ever occur and the state is a proven deadlock: the hub poisons
+//! itself, every parked thread unwinds with a [`DeadlockMark`] panic
+//! (silenced by a scoped panic hook), and [`run_traced`] reports the
+//! cross-rank wait-for edges instead of hanging CI.
+//!
+//! Dropped-but-armed receive requests take the `MPI_Cancel` path exactly
+//! like [`crate::mpisim::Request`]: the drop is recorded as a
+//! [`TraceEvent::Cancel`] so the verifier can flag leaked requests — the
+//! static twin of the slot-reclamation regression test.
+
+use crate::mpisim::CommOps;
+use std::cell::Cell;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// One recorded communication event on a rank's timeline.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TraceEvent {
+    /// This rank sent `len` elements to `to` under `tag`.
+    Send { to: usize, tag: u64, len: usize },
+    /// This rank completed a receive of `len` elements from `from`.
+    Recv { from: usize, tag: u64, len: usize },
+    /// A receive request for `(from, tag)` was dropped while still armed
+    /// (the MPI_Cancel path) — a leaked request.
+    Cancel { from: usize, tag: u64 },
+}
+
+/// One blocked receive at deadlock time: `rank` waits on `(from, tag)`.
+/// The set of edges is the cross-rank wait-for graph restricted to the
+/// final (stuck) state; every edge is unsatisfiable by construction.
+#[derive(Debug, Clone)]
+pub struct WaitEdge {
+    pub rank: usize,
+    pub from: usize,
+    pub tag: u64,
+}
+
+/// Panic payload used to unwind parked threads once the hub is poisoned.
+/// Carried through `catch_unwind` and recognized by [`run_traced`]; the
+/// scoped panic hook keeps it off stderr.
+struct DeadlockMark;
+
+struct MailMsg {
+    from: usize,
+    tag: u64,
+    data: Vec<f32>,
+}
+
+struct PostedRec {
+    from: usize,
+    tag: u64,
+    data: Option<Vec<f32>>,
+    seq: u64,
+}
+
+struct HubState {
+    /// Per-destination unexpected-message queues, arrival order.
+    mail: Vec<Vec<MailMsg>>,
+    /// Per-rank posted-receive slabs (`None` = consumed slot).
+    posted: Vec<Vec<Option<PostedRec>>>,
+    post_seq: Vec<u64>,
+    /// Slots each rank is currently parked on (`None` = running).
+    blocked: Vec<Option<Vec<usize>>>,
+    done: Vec<bool>,
+    poisoned: bool,
+    deadlock: Option<Vec<WaitEdge>>,
+    events: Vec<Vec<TraceEvent>>,
+}
+
+/// Central mailbox + blocked registry shared by every [`TraceComm`] of a
+/// traced world.
+pub struct TraceHub {
+    m: Mutex<HubState>,
+    cv: Condvar,
+}
+
+impl TraceHub {
+    fn new(size: usize) -> Arc<Self> {
+        Arc::new(Self {
+            m: Mutex::new(HubState {
+                mail: (0..size).map(|_| Vec::new()).collect(),
+                posted: (0..size).map(|_| Vec::new()).collect(),
+                post_seq: vec![0; size],
+                blocked: (0..size).map(|_| None).collect(),
+                done: vec![false; size],
+                poisoned: false,
+                deadlock: None,
+                events: (0..size).map(|_| Vec::new()).collect(),
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Deadlock iff some rank is still live and every live rank is parked
+    /// on receives that are all unfilled: sends are eager, so a state in
+    /// which nobody can run is a state in which nobody will ever run.
+    fn deadlock_check(st: &mut HubState) {
+        if st.poisoned {
+            return;
+        }
+        let live: Vec<usize> = (0..st.done.len()).filter(|&r| !st.done[r]).collect();
+        if live.is_empty() {
+            return;
+        }
+        let stuck = live.iter().all(|&r| match &st.blocked[r] {
+            None => false,
+            Some(slots) => slots.iter().all(|&s| {
+                st.posted[r][s]
+                    .as_ref()
+                    .map(|p| p.data.is_none())
+                    .unwrap_or(false)
+            }),
+        });
+        if stuck {
+            let mut edges = Vec::new();
+            for &r in &live {
+                for &s in st.blocked[r].as_ref().expect("stuck rank is blocked") {
+                    if let Some(p) = &st.posted[r][s] {
+                        edges.push(WaitEdge { rank: r, from: p.from, tag: p.tag });
+                    }
+                }
+            }
+            st.deadlock = Some(edges);
+            st.poisoned = true;
+        }
+    }
+
+    fn send(&self, from: usize, to: usize, tag: u64, data: Vec<f32>) {
+        let mut st = self.m.lock().expect("trace hub poisoned by panic");
+        st.events[from].push(TraceEvent::Send { to, tag, len: data.len() });
+        // Earliest-posted matching receive wins (MPI's matching rule).
+        let target = st.posted[to]
+            .iter()
+            .enumerate()
+            .filter_map(|(i, p)| p.as_ref().map(|p| (i, p)))
+            .filter(|(_, p)| p.data.is_none() && p.from == from && p.tag == tag)
+            .min_by_key(|(_, p)| p.seq)
+            .map(|(i, _)| i);
+        match target {
+            Some(i) => st.posted[to][i].as_mut().expect("matched slot").data = Some(data),
+            None => st.mail[to].push(MailMsg { from, tag, data }),
+        }
+        self.cv.notify_all();
+    }
+
+    fn post_recv(&self, rank: usize, from: usize, tag: u64) -> usize {
+        let mut st = self.m.lock().expect("trace hub poisoned by panic");
+        // Unexpected queue first, in arrival order.
+        let data = st.mail[rank]
+            .iter()
+            .position(|m| m.from == from && m.tag == tag)
+            .map(|pos| st.mail[rank].remove(pos).data);
+        let seq = st.post_seq[rank];
+        st.post_seq[rank] += 1;
+        st.posted[rank].push(Some(PostedRec { from, tag, data, seq }));
+        st.posted[rank].len() - 1
+    }
+
+    /// Park until one of `slots` has data; returns (position-in-`slots`,
+    /// payload). Panics with [`DeadlockMark`] if the hub poisons while
+    /// parked.
+    fn wait_any_slots(&self, rank: usize, slots: &[usize]) -> (usize, Vec<f32>) {
+        let mut st = self.m.lock().expect("trace hub poisoned by panic");
+        loop {
+            if st.poisoned {
+                panic::panic_any(DeadlockMark);
+            }
+            let ready = slots.iter().position(|&s| {
+                st.posted[rank][s]
+                    .as_ref()
+                    .map(|p| p.data.is_some())
+                    .unwrap_or(false)
+            });
+            if let Some(i) = ready {
+                let rec = st.posted[rank][slots[i]].take().expect("ready slot");
+                let data = rec.data.expect("ready slot has data");
+                st.events[rank].push(TraceEvent::Recv {
+                    from: rec.from,
+                    tag: rec.tag,
+                    len: data.len(),
+                });
+                st.blocked[rank] = None;
+                return (i, data);
+            }
+            st.blocked[rank] = Some(slots.to_vec());
+            Self::deadlock_check(&mut st);
+            if st.poisoned {
+                self.cv.notify_all();
+                panic::panic_any(DeadlockMark);
+            }
+            st = self.cv.wait(st).expect("trace hub poisoned by panic");
+        }
+    }
+
+    /// The MPI_Cancel drop path: withdraw a still-armed receive and log
+    /// it as a leaked request (secondary cancels during deadlock
+    /// unwinding are not logged — the deadlock is the diagnosis).
+    fn cancel(&self, rank: usize, slot: usize) {
+        let mut st = self.m.lock().expect("trace hub poisoned by panic");
+        if st.poisoned {
+            st.posted[rank][slot] = None;
+            return;
+        }
+        if let Some(p) = st.posted[rank][slot].take() {
+            st.events[rank].push(TraceEvent::Cancel { from: p.from, tag: p.tag });
+        }
+    }
+
+    fn mark_done(&self, rank: usize) {
+        let mut st = self.m.lock().expect("trace hub poisoned by panic");
+        st.done[rank] = true;
+        st.blocked[rank] = None;
+        Self::deadlock_check(&mut st);
+        self.cv.notify_all();
+    }
+}
+
+/// One rank's endpoint of a traced world. Implements [`CommOps`], so the
+/// generic schedule functions run against it exactly as against the real
+/// [`crate::mpisim::Comm`].
+pub struct TraceComm {
+    rank: usize,
+    size: usize,
+    hub: Arc<TraceHub>,
+}
+
+/// Request handle of the traced fabric. Dropping it while armed records
+/// a [`TraceEvent::Cancel`] — the leaked-request verifier rule.
+pub struct TraceReq {
+    slot: usize,
+    armed: bool,
+    rank: usize,
+    hub: Arc<TraceHub>,
+}
+
+impl Drop for TraceReq {
+    fn drop(&mut self) {
+        if self.armed {
+            self.hub.cancel(self.rank, self.slot);
+        }
+    }
+}
+
+impl CommOps for TraceComm {
+    type Req = TraceReq;
+
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn size(&self) -> usize {
+        self.size
+    }
+
+    fn send(&mut self, to: usize, tag: u64, data: Vec<f32>) {
+        self.hub.send(self.rank, to, tag, data);
+    }
+
+    fn recv(&mut self, from: usize, tag: u64) -> Vec<f32> {
+        let req = self.irecv(from, tag);
+        self.wait(req)
+    }
+
+    fn irecv(&mut self, from: usize, tag: u64) -> TraceReq {
+        TraceReq {
+            slot: self.hub.post_recv(self.rank, from, tag),
+            armed: true,
+            rank: self.rank,
+            hub: self.hub.clone(),
+        }
+    }
+
+    fn wait(&mut self, mut req: TraceReq) -> Vec<f32> {
+        req.armed = false;
+        let (_, data) = self.hub.wait_any_slots(self.rank, &[req.slot]);
+        data
+    }
+
+    fn wait_any(&mut self, reqs: &mut Vec<TraceReq>) -> (usize, Vec<f32>) {
+        assert!(!reqs.is_empty(), "wait_any on no requests");
+        let slots: Vec<usize> = reqs.iter().map(|r| r.slot).collect();
+        let (i, data) = self.hub.wait_any_slots(self.rank, &slots);
+        let mut req = reqs.remove(i);
+        req.armed = false;
+        (i, data)
+    }
+}
+
+/// Everything captured by one traced run.
+pub struct TraceRun<R> {
+    /// Per-rank closure results; `None` where the rank panicked (or was
+    /// unwound by deadlock poisoning).
+    pub results: Vec<Option<R>>,
+    /// Per-rank event timelines (sends, completed receives, cancels).
+    pub events: Vec<Vec<TraceEvent>>,
+    /// The stuck wait-for edges, when the run deadlocked.
+    pub deadlock: Option<Vec<WaitEdge>>,
+    /// Sends that no receive ever consumed: (from, to, tag, len).
+    pub unmatched_sends: Vec<(usize, usize, u64, usize)>,
+    /// Receive requests dropped while armed: (rank, from, tag).
+    pub leaked: Vec<(usize, usize, u64)>,
+    /// Non-deadlock panics: (rank, message).
+    pub panics: Vec<(usize, String)>,
+}
+
+impl<R> TraceRun<R> {
+    /// True when the schedule ran to completion with nothing left over:
+    /// no deadlock, no panic, no leaked request, no unmatched send.
+    pub fn clean(&self) -> bool {
+        self.deadlock.is_none()
+            && self.panics.is_empty()
+            && self.leaked.is_empty()
+            && self.unmatched_sends.is_empty()
+    }
+}
+
+thread_local! {
+    static COMMCHECK_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Silence panics on commcheck worker threads (deadlock unwinding and
+/// seeded-mutant crashes are *expected* there and reported as
+/// diagnostics); every other thread keeps the previous hook. Installed
+/// once per process.
+fn install_silent_hook() {
+    static INSTALLED: OnceLock<()> = OnceLock::new();
+    INSTALLED.get_or_init(|| {
+        let prev = panic::take_hook();
+        panic::set_hook(Box::new(move |info| {
+            if COMMCHECK_WORKER.with(|w| w.get()) {
+                return;
+            }
+            prev(info);
+        }));
+    });
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Run `f` once per rank of a `p`-rank traced world and collect the
+/// per-rank timelines plus every teardown finding. Deadlocks terminate
+/// (poison + unwind) instead of hanging, which is what makes the traced
+/// interpreter usable as a CI gate.
+pub fn run_traced<R, F>(p: usize, f: F) -> TraceRun<R>
+where
+    R: Send,
+    F: Fn(&mut TraceComm) -> R + Sync,
+{
+    assert!(p > 0);
+    install_silent_hook();
+    let hub = TraceHub::new(p);
+    let mut results: Vec<Option<R>> = Vec::with_capacity(p);
+    let mut panics = Vec::new();
+    let outcomes: Vec<Result<R, Box<dyn std::any::Any + Send>>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..p)
+            .map(|rank| {
+                let hub = hub.clone();
+                let f = &f;
+                s.spawn(move || {
+                    COMMCHECK_WORKER.with(|w| w.set(true));
+                    let mut comm = TraceComm { rank, size: p, hub: hub.clone() };
+                    let out = panic::catch_unwind(AssertUnwindSafe(|| f(&mut comm)));
+                    // Dropping `comm`'s outstanding requests happened
+                    // during unwinding; only now is the rank done.
+                    hub.mark_done(rank);
+                    COMMCHECK_WORKER.with(|w| w.set(false));
+                    out
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("commcheck worker died outside catch_unwind"))
+            .collect()
+    });
+    for (rank, out) in outcomes.into_iter().enumerate() {
+        match out {
+            Ok(r) => results.push(Some(r)),
+            Err(payload) => {
+                results.push(None);
+                if !payload.is::<DeadlockMark>() {
+                    panics.push((rank, panic_message(payload.as_ref())));
+                }
+            }
+        }
+    }
+    let st = hub.m.lock().expect("trace hub poisoned by panic");
+    let events = st.events.clone();
+    let deadlock = st.deadlock.clone();
+    let mut unmatched_sends = Vec::new();
+    for (to, mail) in st.mail.iter().enumerate() {
+        for m in mail {
+            unmatched_sends.push((m.from, to, m.tag, m.data.len()));
+        }
+    }
+    let mut leaked = Vec::new();
+    for (rank, evs) in events.iter().enumerate() {
+        for ev in evs {
+            if let TraceEvent::Cancel { from, tag } = ev {
+                leaked.push((rank, *from, *tag));
+            }
+        }
+    }
+    drop(st);
+    TraceRun { results, events, deadlock, unmatched_sends, leaked, panics }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clean_exchange_traces_events() {
+        let run = run_traced(2, |c| {
+            if c.rank() == 0 {
+                c.send(1, 7, vec![1.0, 2.0]);
+                Vec::new()
+            } else {
+                c.recv(0, 7)
+            }
+        });
+        assert!(run.clean());
+        assert_eq!(run.results[1], Some(vec![1.0, 2.0]));
+        assert_eq!(run.events[0], vec![TraceEvent::Send { to: 1, tag: 7, len: 2 }]);
+        assert_eq!(run.events[1], vec![TraceEvent::Recv { from: 0, tag: 7, len: 2 }]);
+    }
+
+    #[test]
+    fn missing_send_is_reported_as_deadlock_not_hang() {
+        let run = run_traced(2, |c| {
+            if c.rank() == 1 {
+                let _ = c.recv(0, 9); // nobody ever sends tag 9
+            }
+        });
+        let edges = run.deadlock.expect("deadlock detected");
+        assert!(edges.iter().any(|e| e.rank == 1 && e.from == 0 && e.tag == 9));
+        assert!(run.results[1].is_none());
+        assert!(run.panics.is_empty(), "deadlock marks are not panics");
+    }
+
+    #[test]
+    fn cross_wait_cycle_detected() {
+        // 0 waits on 1 and 1 waits on 0, nobody sends first: a 2-cycle.
+        let run = run_traced(2, |c| {
+            let from = 1 - c.rank();
+            let _ = c.recv(from, 5);
+        });
+        let edges = run.deadlock.expect("cycle detected");
+        assert_eq!(edges.len(), 2);
+    }
+
+    #[test]
+    fn unconsumed_send_is_unmatched() {
+        let run = run_traced(2, |c| {
+            if c.rank() == 0 {
+                c.send(1, 3, vec![1.0]);
+            }
+        });
+        assert!(run.deadlock.is_none());
+        assert_eq!(run.unmatched_sends, vec![(0, 1, 3, 1)]);
+    }
+
+    #[test]
+    fn dropped_armed_request_is_leaked() {
+        let run = run_traced(2, |c| {
+            if c.rank() == 0 {
+                c.send(1, 4, vec![2.0]);
+            } else {
+                let req = c.irecv(0, 4);
+                drop(req); // armed: MPI_Cancel path
+            }
+        });
+        assert!(run.leaked.iter().any(|&(r, f, t)| (r, f, t) == (1, 0, 4)));
+    }
+
+    #[test]
+    fn worker_panic_is_captured() {
+        let run = run_traced(2, |c| {
+            if c.rank() == 1 {
+                panic!("seeded crash");
+            }
+        });
+        assert_eq!(run.panics.len(), 1);
+        assert!(run.panics[0].1.contains("seeded crash"));
+        assert!(run.results[0].is_some());
+    }
+
+    #[test]
+    fn posting_order_matching_matches_mpisim() {
+        let run = run_traced(2, |c| {
+            if c.rank() == 0 {
+                c.send(1, 9, vec![1.0]);
+                c.send(1, 9, vec![2.0]);
+                Vec::new()
+            } else {
+                let r1 = c.irecv(0, 9);
+                let r2 = c.irecv(0, 9);
+                let second = c.wait(r2);
+                let first = c.wait(r1);
+                vec![first[0], second[0]]
+            }
+        });
+        assert_eq!(run.results[1], Some(vec![1.0, 2.0]));
+    }
+}

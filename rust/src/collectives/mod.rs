@@ -33,7 +33,7 @@
 pub mod sim;
 
 use crate::compress::{ef_compress, Compressed, Compressor, EfState};
-use crate::mpisim::{Comm, Request};
+use crate::mpisim::{Comm, CommOps};
 use crate::netsim::CostParams;
 use crate::tensor::{add_assign, NodeTensor};
 
@@ -43,17 +43,17 @@ use crate::tensor::{add_assign, NodeTensor};
 /// [`TAG_SPACING`] apart (debug-asserted); across consecutive calls the
 /// per-pair FIFO of [`crate::mpisim`] plus posting-order matching
 /// preserves correctness.
-const TAG_SPACING: u64 = 1 << 20;
-const RING_RS_TAG: u64 = TAG_SPACING;
-const RING_AG_TAG: u64 = 2 * TAG_SPACING;
-const SUBSET_RS_TAG: u64 = 3 * TAG_SPACING;
-const SUBSET_AG_TAG: u64 = 4 * TAG_SPACING;
-const HD_RS_TAG: u64 = 5 * TAG_SPACING;
-const HD_AG_TAG: u64 = 6 * TAG_SPACING;
-const HD_FOLD_TAG: u64 = 7 * TAG_SPACING;
-const HIER_GATHER_TAG: u64 = 8 * TAG_SPACING;
-const HIER_BCAST_TAG: u64 = 9 * TAG_SPACING;
-const COMPRESS_TAG: u64 = 10 * TAG_SPACING;
+pub(crate) const TAG_SPACING: u64 = 1 << 20;
+pub(crate) const RING_RS_TAG: u64 = TAG_SPACING;
+pub(crate) const RING_AG_TAG: u64 = 2 * TAG_SPACING;
+pub(crate) const SUBSET_RS_TAG: u64 = 3 * TAG_SPACING;
+pub(crate) const SUBSET_AG_TAG: u64 = 4 * TAG_SPACING;
+pub(crate) const HD_RS_TAG: u64 = 5 * TAG_SPACING;
+pub(crate) const HD_AG_TAG: u64 = 6 * TAG_SPACING;
+pub(crate) const HD_FOLD_TAG: u64 = 7 * TAG_SPACING;
+pub(crate) const HIER_GATHER_TAG: u64 = 8 * TAG_SPACING;
+pub(crate) const HIER_BCAST_TAG: u64 = 9 * TAG_SPACING;
+pub(crate) const COMPRESS_TAG: u64 = 10 * TAG_SPACING;
 
 /// Default sub-chunks per pipelined step when no [`CostParams`] is in
 /// scope (the presets carry their own tuned value).
@@ -85,6 +85,46 @@ fn sub_bounds(lo: usize, hi: usize, k: usize, sub: usize) -> (usize, usize) {
     (lo + s, lo + e)
 }
 
+/// Clamp the pipeline depth so a `steps`-step schedule never emits a tag
+/// outside its [`TAG_SPACING`] family window, and *prove* it: the fit is a
+/// checked assertion on every build (promoted from a debug-only assert),
+/// and a clamp below the requested depth is reported once per
+/// (schedule, requested, limit) instead of shrinking the pipeline
+/// invisibly. Identical on every rank: derived only from `steps` and
+/// `requested`.
+pub(crate) fn clamp_pipeline_chunks(schedule: &'static str, requested: usize, steps: usize) -> usize {
+    let limit = (TAG_SPACING as usize / steps.max(1)).max(1);
+    let k = requested.max(1).min(limit);
+    assert!(
+        (steps.max(1) as u64).saturating_mul(k as u64) <= TAG_SPACING,
+        "{schedule}: pipeline tags escape the family window: \
+         {steps} steps x {k} chunks > {TAG_SPACING}"
+    );
+    if k < requested {
+        warn_clamp_once(schedule, requested, k);
+    }
+    k
+}
+
+/// Log a pipeline-depth clamp exactly once per distinct triple, so a long
+/// training run reports the silent degradation without spamming stderr.
+fn warn_clamp_once(schedule: &'static str, requested: usize, got: usize) {
+    use std::collections::HashSet;
+    use std::sync::{Mutex, OnceLock};
+    static SEEN: OnceLock<Mutex<HashSet<(&'static str, usize, usize)>>> = OnceLock::new();
+    let seen = SEEN.get_or_init(|| Mutex::new(HashSet::new()));
+    let fresh = seen
+        .lock()
+        .expect("clamp-warning registry poisoned")
+        .insert((schedule, requested, got));
+    if fresh {
+        eprintln!(
+            "[collectives] {schedule}: requested pipeline depth {requested} \
+             clamped to {got} (tag-window limit)"
+        );
+    }
+}
+
 /// One bucket-ring phase over an arbitrary rank list: the reduce-scatter
 /// schedule (`gather == false`, incoming chunks are summed) or the
 /// allgather schedule (`gather == true`, incoming chunks are copied).
@@ -103,8 +143,8 @@ fn sub_bounds(lo: usize, hi: usize, k: usize, sub: usize) -> (usize, usize) {
 /// sizes, same per-element reduction order), which keeps every pipelined
 /// variant bitwise sum-equivalent to the baseline.
 #[allow(clippy::too_many_arguments)]
-fn ring_steps(
-    comm: &mut Comm,
+fn ring_steps<C: CommOps>(
+    comm: &mut C,
     right: usize,
     left: usize,
     idx: usize,
@@ -119,9 +159,7 @@ fn ring_steps(
     }
     let n = data.len();
     let steps = l - 1;
-    // Clamp the pipeline depth so tags never spill into the next family's
-    // range (identical on every rank: derived only from l and chunks).
-    let k = chunks.max(1).min((TAG_SPACING as usize / steps).max(1));
+    let k = clamp_pipeline_chunks("ring", chunks, steps);
     let sub_range = |ci: usize, sub: usize| {
         let (cs, ce) = chunk_bounds(n, l, ci);
         sub_bounds(cs, ce, k, sub)
@@ -142,7 +180,7 @@ fn ring_steps(
     };
     // Post every step's sub-chunk receives up front — tags are unique per
     // (step, sub), so nothing can mismatch — then kick off step 0.
-    let mut reqs: Vec<Request> = Vec::with_capacity(steps * k);
+    let mut reqs: Vec<C::Req> = Vec::with_capacity(steps * k);
     let mut meta: Vec<(usize, usize)> = Vec::with_capacity(steps * k);
     for step in 0..steps {
         for sub in 0..k {
@@ -173,7 +211,7 @@ fn ring_steps(
 /// Bucket ring reduce-scatter (§6.2): after the call, rank `r` holds the
 /// fully reduced chunk `(r + 1) % p` of `data`; other chunks are garbage
 /// (partial sums). Returns the owned chunk index.
-pub fn ring_reduce_scatter(comm: &mut Comm, data: &mut [f32]) -> usize {
+pub fn ring_reduce_scatter<C: CommOps>(comm: &mut C, data: &mut [f32]) -> usize {
     let p = comm.size();
     let r = comm.rank();
     ring_steps(comm, (r + 1) % p, (r + p - 1) % p, r, p, data, RING_RS_TAG, false, 1);
@@ -182,7 +220,7 @@ pub fn ring_reduce_scatter(comm: &mut Comm, data: &mut [f32]) -> usize {
 
 /// Bucket ring allgather (§6.3.1): rank `r` enters owning chunk
 /// `(r + 1) % p` (the reduce-scatter output) and exits with every chunk.
-pub fn ring_allgather(comm: &mut Comm, data: &mut [f32]) {
+pub fn ring_allgather<C: CommOps>(comm: &mut C, data: &mut [f32]) {
     let p = comm.size();
     let r = comm.rank();
     ring_steps(comm, (r + 1) % p, (r + p - 1) % p, r, p, data, RING_AG_TAG, true, 1);
@@ -192,13 +230,13 @@ pub fn ring_allgather(comm: &mut Comm, data: &mut [f32]) {
 /// Cost: (p-1)α·2 + 2·(p-1)/p·nβ + (p-1)/p·nγ — the §6.2 lower bound.
 /// This (`chunks == 1`) is the correctness baseline every pipelined
 /// schedule is tested against.
-pub fn ring_allreduce(comm: &mut Comm, data: &mut [f32]) {
+pub fn ring_allreduce<C: CommOps>(comm: &mut C, data: &mut [f32]) {
     ring_allreduce_pipelined(comm, data, 1);
 }
 
 /// [`ring_allreduce`] with k-way chunk pipelining: each step's chunk moves
 /// as `chunks` sub-chunks so step s+1's send overlaps step s's reduce.
-pub fn ring_allreduce_pipelined(comm: &mut Comm, data: &mut [f32], chunks: usize) {
+pub fn ring_allreduce_pipelined<C: CommOps>(comm: &mut C, data: &mut [f32], chunks: usize) {
     let p = comm.size();
     let r = comm.rank();
     ring_steps(comm, (r + 1) % p, (r + p - 1) % p, r, p, data, RING_RS_TAG, false, chunks);
@@ -212,13 +250,13 @@ pub fn ring_allreduce_pipelined(comm: &mut Comm, data: &mut [f32], chunks: usize
 /// with the network transfer of ring i+1; data-wise the result is identical
 /// to a single ring, which is exactly what this implementation (and its
 /// tests) asserts. The timing benefit is modelled in [`sim`].
-pub fn multi_ring_allreduce(comm: &mut Comm, data: &mut [f32], rings: usize) {
+pub fn multi_ring_allreduce<C: CommOps>(comm: &mut C, data: &mut [f32], rings: usize) {
     multi_ring_allreduce_pipelined(comm, data, rings, 1);
 }
 
 /// [`multi_ring_allreduce`] with k-way chunk pipelining per ring.
-pub fn multi_ring_allreduce_pipelined(
-    comm: &mut Comm,
+pub fn multi_ring_allreduce_pipelined<C: CommOps>(
+    comm: &mut C,
     data: &mut [f32],
     rings: usize,
     chunks: usize,
@@ -238,13 +276,13 @@ pub fn multi_ring_allreduce_pipelined(
 /// Bucket ring allreduce over an explicit subset of ranks (used as the
 /// leader phase of [`hierarchical_allreduce`]). Every rank in `ranks` must
 /// call this with the same list; ranks outside the subset must not call it.
-pub fn ring_allreduce_subset(comm: &mut Comm, ranks: &[usize], data: &mut [f32]) {
+pub fn ring_allreduce_subset<C: CommOps>(comm: &mut C, ranks: &[usize], data: &mut [f32]) {
     ring_allreduce_subset_pipelined(comm, ranks, data, 1);
 }
 
 /// [`ring_allreduce_subset`] with k-way chunk pipelining.
-pub fn ring_allreduce_subset_pipelined(
-    comm: &mut Comm,
+pub fn ring_allreduce_subset_pipelined<C: CommOps>(
+    comm: &mut C,
     ranks: &[usize],
     data: &mut [f32],
     chunks: usize,
@@ -271,14 +309,18 @@ pub fn ring_allreduce_subset_pipelined(
 /// Non-power-of-two rank counts fold the `p - 2^⌊lg p⌋` extra ranks into
 /// their partners up front and replay the result to them at the end
 /// (the MPICH scheme).
-pub fn halving_doubling_allreduce(comm: &mut Comm, data: &mut [f32]) {
+pub fn halving_doubling_allreduce<C: CommOps>(comm: &mut C, data: &mut [f32]) {
     halving_doubling_allreduce_pipelined(comm, data, 1);
 }
 
 /// [`halving_doubling_allreduce`] with k-way chunk pipelining: each step's
 /// window moves as `chunks` sub-chunks folded in via `wait_any`, so the
 /// pair's reduction overlaps the remaining sub-transfers.
-pub fn halving_doubling_allreduce_pipelined(comm: &mut Comm, data: &mut [f32], chunks: usize) {
+pub fn halving_doubling_allreduce_pipelined<C: CommOps>(
+    comm: &mut C,
+    data: &mut [f32],
+    chunks: usize,
+) {
     let p = comm.size();
     let r = comm.rank();
     if p == 1 {
@@ -286,10 +328,10 @@ pub fn halving_doubling_allreduce_pipelined(comm: &mut Comm, data: &mut [f32], c
     }
     let n = data.len();
     let q = pow2_floor(p);
-    // Clamp so RS+AG tags (up to 2·lg q steps × k subs) stay inside one
-    // tag family; identical on every rank.
+    // RS+AG tags (up to 2·lg q steps × k subs) must stay inside one tag
+    // family; identical on every rank.
     let lgq = (q.trailing_zeros() as usize).max(1);
-    let k = chunks.max(1).min((TAG_SPACING as usize / (2 * lgq)).max(1));
+    let k = clamp_pipeline_chunks("halving_doubling", chunks, 2 * lgq);
     let extras = p - q;
     if r >= q {
         // Extra rank: contribute the vector, receive the final result.
@@ -309,7 +351,6 @@ pub fn halving_doubling_allreduce_pipelined(comm: &mut Comm, data: &mut [f32], c
     let mut windows: Vec<(usize, usize)> = Vec::new();
     let mut mask = q >> 1;
     let mut step = 0usize;
-    debug_assert!((q.trailing_zeros() as usize * 2 * k) as u64 <= TAG_SPACING);
     while mask > 0 {
         let partner = r ^ mask;
         let mid = lo + (hi - lo) / 2;
@@ -319,7 +360,7 @@ pub fn halving_doubling_allreduce_pipelined(comm: &mut Comm, data: &mut [f32], c
             ((mid, hi), (lo, mid))
         };
         // Exchange the halves sub-chunk by sub-chunk; reduce on arrival.
-        let mut reqs: Vec<Request> = Vec::with_capacity(k);
+        let mut reqs: Vec<C::Req> = Vec::with_capacity(k);
         let mut meta: Vec<usize> = Vec::with_capacity(k);
         for sub in 0..k {
             let tag = HD_RS_TAG + (step * k + sub) as u64;
@@ -348,7 +389,7 @@ pub fn halving_doubling_allreduce_pipelined(comm: &mut Comm, data: &mut [f32], c
         let (plo, phi) = windows.pop().expect("window stack underflow");
         // The partner owns exactly the other half of the parent window.
         let (dlo, dhi) = if lo == plo { (hi, phi) } else { (plo, lo) };
-        let mut reqs: Vec<Request> = Vec::with_capacity(k);
+        let mut reqs: Vec<C::Req> = Vec::with_capacity(k);
         let mut meta: Vec<usize> = Vec::with_capacity(k);
         for sub in 0..k {
             let tag = HD_AG_TAG + (step * k + sub) as u64;
@@ -377,7 +418,7 @@ pub fn halving_doubling_allreduce_pipelined(comm: &mut Comm, data: &mut [f32], c
 /// `group` consecutive ranks (the intra-client analog of §6.3's node
 /// grouping); each group reduces onto its leader, the leaders run a bucket
 /// ring among themselves, and the result is broadcast back into the groups.
-pub fn hierarchical_allreduce(comm: &mut Comm, data: &mut [f32], group: usize) {
+pub fn hierarchical_allreduce<C: CommOps>(comm: &mut C, data: &mut [f32], group: usize) {
     hierarchical_allreduce_pipelined(comm, data, group, 1);
 }
 
@@ -387,8 +428,8 @@ pub fn hierarchical_allreduce(comm: &mut Comm, data: &mut [f32], group: usize) {
 /// pipelined subset ring, and the broadcast back streams the same way.
 /// Members are folded in strictly in rank order, keeping the per-element
 /// float reduction order identical to the blocking schedule.
-pub fn hierarchical_allreduce_pipelined(
-    comm: &mut Comm,
+pub fn hierarchical_allreduce_pipelined<C: CommOps>(
+    comm: &mut C,
     data: &mut [f32],
     group: usize,
     chunks: usize,
@@ -398,7 +439,9 @@ pub fn hierarchical_allreduce_pipelined(
     if p == 1 {
         return;
     }
-    let k = chunks.max(1).min(data.len().max(1)).min(TAG_SPACING as usize);
+    // The benign data-length clamp (no point in empty sub-chunks) happens
+    // first; only a tag-window clamp below that is worth reporting.
+    let k = clamp_pipeline_chunks("hierarchical", chunks.max(1).min(data.len().max(1)), 1);
     let n = data.len();
     let g = group.clamp(1, p);
     let leader = r - r % g;
@@ -408,7 +451,7 @@ pub fn hierarchical_allreduce_pipelined(
             let (s, e) = sub_bounds(0, n, k, sub);
             comm.send(leader, HIER_GATHER_TAG + sub as u64, data[s..e].to_vec());
         }
-        let mut reqs: Vec<Request> =
+        let mut reqs: Vec<C::Req> =
             (0..k).map(|sub| comm.irecv(leader, HIER_BCAST_TAG + sub as u64)).collect();
         let mut meta: Vec<usize> = (0..k).collect();
         while !reqs.is_empty() {
@@ -420,7 +463,7 @@ pub fn hierarchical_allreduce_pipelined(
         return;
     }
     for m in leader + 1..last {
-        let mut reqs: Vec<Request> =
+        let mut reqs: Vec<C::Req> =
             (0..k).map(|sub| comm.irecv(m, HIER_GATHER_TAG + sub as u64)).collect();
         let mut meta: Vec<usize> = (0..k).collect();
         while !reqs.is_empty() {
@@ -574,9 +617,9 @@ pub fn build_algo(
 /// autotuner per message: every rank sees the same (bytes, p, params), so
 /// the choice is identical across the communicator. All schedules run
 /// `params.pipeline_chunks`-way chunk-pipelined (1 = blocking).
-pub fn allreduce_with(
+pub fn allreduce_with<C: CommOps>(
     kind: AlgoKind,
-    comm: &mut Comm,
+    comm: &mut C,
     data: &mut [f32],
     rings: usize,
     group: usize,
@@ -606,9 +649,9 @@ pub fn allreduce_with(
 /// residual (`ef_key`-scoped in `ef`) carries what the codec dropped into
 /// the next call.
 #[allow(clippy::too_many_arguments)]
-pub fn compressed_allreduce(
+pub fn compressed_allreduce<C: CommOps>(
     kind: AlgoKind,
-    comm: &mut Comm,
+    comm: &mut C,
     data: &mut [f32],
     codec: &dyn Compressor,
     ef_key: u64,
@@ -634,7 +677,7 @@ pub fn compressed_allreduce(
     // Post every receive first, then fan the payload out; (source, tag)
     // matching keeps back-to-back compressed calls on one comm ordered via
     // the per-pair FIFO.
-    let mut reqs: Vec<Request> = Vec::with_capacity(p.saturating_sub(1));
+    let mut reqs: Vec<C::Req> = Vec::with_capacity(p.saturating_sub(1));
     let mut srcs: Vec<usize> = Vec::with_capacity(p.saturating_sub(1));
     for s in 0..p {
         if s != r {
@@ -675,9 +718,9 @@ pub fn compressed_allreduce(
 /// returns to the *same* bucket next iteration. Identity codecs delegate
 /// to the dense [`fused_allreduce`], bitwise.
 #[allow(clippy::too_many_arguments)]
-pub fn fused_allreduce_compressed(
+pub fn fused_allreduce_compressed<C: CommOps>(
     kind: AlgoKind,
-    comm: &mut Comm,
+    comm: &mut C,
     bufs: &mut [Vec<f32>],
     ef_keys: &[u64],
     fusion_bytes: usize,
@@ -720,9 +763,9 @@ pub fn fused_allreduce_compressed(
 /// disables coalescing), allreduce each bucket as one message, and scatter
 /// the results back in place. Small per-layer keys thus pay the
 /// per-message α once per bucket instead of once per key.
-pub fn fused_allreduce(
+pub fn fused_allreduce<C: CommOps>(
     kind: AlgoKind,
-    comm: &mut Comm,
+    comm: &mut C,
     bufs: &mut [Vec<f32>],
     fusion_bytes: usize,
     rings: usize,
@@ -787,8 +830,8 @@ pub enum HostReduce<'a> {
 /// This is the paper's headline collective: rings run over *host* memories
 /// (GPU memory is unreachable from the NIC on Minsky), and grouping the
 /// per-socket GPUs under one worker halves the ring hop count.
-pub fn tensor_allreduce(
-    comm: &mut Comm,
+pub fn tensor_allreduce<C: CommOps>(
+    comm: &mut C,
     tensor: &mut NodeTensor,
     rings: usize,
     reduce: HostReduce<'_>,
@@ -804,9 +847,9 @@ pub fn tensor_allreduce(
 /// [`tensor_allreduce`] with a pluggable inter-node schedule: intra-node
 /// reduce into host memory, any [`AlgoKind`] across workers, intra-node
 /// broadcast back.
-pub fn tensor_allreduce_with(
+pub fn tensor_allreduce_with<C: CommOps>(
     kind: AlgoKind,
-    comm: &mut Comm,
+    comm: &mut C,
     tensor: &mut NodeTensor,
     rings: usize,
     group: usize,

@@ -80,6 +80,21 @@ impl KvType {
     }
 }
 
+/// The engine's per-bucket *issue plan*: [`crate::collectives::fusion_buckets`]
+/// over the key lengths, reversed into issue order. Backprop emits the last
+/// layer's gradients first, so buckets are issued back to front; the comm
+/// var then serializes the collectives in exactly this order (§4.2 deadlock
+/// rule). A pure function of `(lens, fusion_bytes)` so every rank derives
+/// the identical plan — the static verifier
+/// ([`crate::analysis::check_engine_plans`]) proves coverage, disjointness
+/// and issue-order over this function, and [`KvWorker::pushpull_buckets`]
+/// issues engine ops from it.
+pub fn bucket_issue_plan(lens: &[usize], fusion_bytes: usize) -> Vec<(usize, usize)> {
+    let mut plan = crate::collectives::fusion_buckets(lens, fusion_bytes);
+    plan.reverse();
+    plan
+}
+
 /// A value still being produced by the engine; `wait()` blocks for it.
 ///
 /// The primary backing is a **dependency-engine wait** (Figs 4–5 taken to
@@ -119,7 +134,7 @@ impl<T> Pending<T> {
                 for v in &vars {
                     engine.wait_var(*v);
                 }
-                slot.lock().unwrap().take().unwrap_or_else(|| {
+                slot.lock().expect("pending-result slot lock poisoned").take().unwrap_or_else(|| {
                     panic!(
                         "KVStore engine op completed without producing a result: \
                          the op panicked or was dropped before filling its slot"
@@ -270,25 +285,25 @@ impl KvWorker {
         *self
             .key_vars
             .lock()
-            .unwrap()
+            .unwrap_or_else(|_| panic!("key-var table lock poisoned (key {key})"))
             .entry(key)
             .or_insert_with(|| self.engine.new_var())
     }
 
     pub fn rank(&self) -> usize {
-        self.comm.as_ref().map(|c| c.lock().unwrap().rank()).unwrap_or(0)
+        self.comm.as_ref().map(|c| c.lock().expect("client communicator lock poisoned").rank()).unwrap_or(0)
     }
 
     pub fn client_size(&self) -> usize {
-        self.comm.as_ref().map(|c| c.lock().unwrap().size()).unwrap_or(1)
+        self.comm.as_ref().map(|c| c.lock().expect("client communicator lock poisoned").size()).unwrap_or(1)
     }
 
     /// Insert an initialized value into the local store, folding in any
     /// pushes that raced ahead of the init (the PS servers' pre_init
     /// replay discipline, kept consistent here).
     fn local_init_insert(&self, key: Key, value: Vec<f32>) {
-        let mut store = self.local.lock().unwrap();
-        let mut pre = self.local_pre_init.lock().unwrap();
+        let mut store = self.local.lock().expect("local store lock poisoned");
+        let mut pre = self.local_pre_init.lock().expect("pre-init buffer lock poisoned");
         let mut v = value;
         if let Some(pushes) = pre.remove(&key) {
             for pdata in pushes {
@@ -308,18 +323,23 @@ impl KvWorker {
             }
             KvType::DistSync | KvType::DistAsync => {
                 if is_root {
-                    self.ps.as_ref().unwrap().lock().unwrap().init(key, value);
+                    self.ps
+                        .as_ref()
+                        .expect("dist kvstore requires a PS client")
+                        .lock()
+                        .unwrap_or_else(|_| panic!("PS client lock poisoned initializing key {key}"))
+                        .init(key, value);
                 }
             }
             KvType::SyncMpi | KvType::AsyncMpi => {
                 if let Some(ps) = &self.ps {
                     if is_root {
-                        ps.lock().unwrap().init(key, value);
+                        ps.lock().expect("PS client lock poisoned").init(key, value);
                     }
                 } else {
                     // Pure MPI: MPI_Bcast from rank 0 of the client.
-                    let comm = self.comm.as_ref().unwrap();
-                    let mut c = comm.lock().unwrap();
+                    let comm = self.comm.as_ref().expect("MPI kvstore requires a communicator");
+                    let mut c = comm.lock().expect("client communicator lock poisoned");
                     let mut v = value;
                     c.bcast(0, &mut v);
                     drop(c);
@@ -343,10 +363,24 @@ impl KvWorker {
         data: Vec<f32>,
     ) {
         if !use_codec || codec.is_identity() {
-            ps.lock().unwrap().push(key, data);
+            ps.lock()
+                .unwrap_or_else(|_| panic!("PS client lock poisoned pushing key {key}"))
+                .push(key, data);
         } else {
-            let wire = ef_compress(codec, ef_key, &data, &mut ef.lock().unwrap()).to_wire();
-            ps.lock().unwrap().push_compressed(key, wire);
+            let wire = ef_compress(
+                codec,
+                ef_key,
+                &data,
+                &mut ef.lock().unwrap_or_else(|_| {
+                    panic!("EF-residual state lock poisoned (ef_key {ef_key:#x}, key {key})")
+                }),
+            )
+            .to_wire();
+            ps.lock()
+                .unwrap_or_else(|_| {
+                    panic!("PS client lock poisoned pushing compressed key {key}")
+                })
+                .push_compressed(key, wire);
         }
     }
 
@@ -376,14 +410,20 @@ impl KvWorker {
                 let pre = self.local_pre_init.clone();
                 self.engine.push(
                     move || {
-                        let mut s = store.lock().unwrap();
+                        let mut s = store
+                            .lock()
+                            .unwrap_or_else(|_| panic!("local store lock poisoned pushing key {key}"));
                         match s.get_mut(&key) {
                             Some(v) => crate::tensor::add_assign(v, &data),
                             None => {
                                 // Same discipline as the PS servers
                                 // (§4.1.2): a push racing ahead of init is
                                 // buffered and replayed onto the init value.
-                                pre.lock().unwrap().entry(key).or_default().push(data);
+                                pre.lock()
+                                    .expect("pre-init buffer lock poisoned")
+                                    .entry(key)
+                                    .or_default()
+                                    .push(data);
                             }
                         }
                     },
@@ -392,7 +432,7 @@ impl KvWorker {
                 );
             }
             KvType::DistSync | KvType::DistAsync => {
-                let ps = self.ps.clone().unwrap();
+                let ps = self.ps.clone().expect("dist kvstore requires a PS client");
                 let (codec, ef) = self.codec_params();
                 self.engine.push(
                     move || {
@@ -403,13 +443,13 @@ impl KvWorker {
                 );
             }
             KvType::SyncMpi | KvType::AsyncMpi => {
-                let comm = self.comm.clone().unwrap();
+                let comm = self.comm.clone().expect("MPI kvstore requires a communicator");
                 let ps = self.ps.clone();
                 let (kind, rings, group, cost) = self.algo_params();
                 let (codec, ef) = self.codec_params();
                 self.engine.push(
                     move || {
-                        let mut c = comm.lock().unwrap();
+                        let mut c = comm.lock().expect("client communicator lock poisoned");
                         let mut buf = data;
                         // Aggregate across the MPI client first (§4.2.2);
                         // a codec-carrying gradient push moves compressed
@@ -419,17 +459,17 @@ impl KvWorker {
                         if use_codec {
                             compressed_allreduce(
                                 kind,
-                                &mut c,
+                                &mut *c,
                                 &mut buf,
                                 &*codec,
                                 key as u64,
-                                &mut ef.lock().unwrap(),
+                                &mut ef.lock().expect("EF-residual state lock poisoned"),
                                 rings,
                                 group,
                                 &cost,
                             );
                         } else {
-                            allreduce_with(kind, &mut c, &mut buf, rings, group, &cost);
+                            allreduce_with(kind, &mut *c, &mut buf, rings, group, &cost);
                         }
                         // ...then only the master talks to the servers,
                         // re-compressing the client aggregate for the PS
@@ -470,7 +510,9 @@ impl KvWorker {
                     move || {
                         let v = store
                             .lock()
-                            .unwrap()
+                            .unwrap_or_else(|_| {
+                                panic!("local store lock poisoned pulling key {key}")
+                            })
                             .get(&key)
                             .unwrap_or_else(|| {
                                 panic!(
@@ -480,38 +522,40 @@ impl KvWorker {
                                 )
                             })
                             .clone();
-                        *slot.lock().unwrap() = Some(v);
+                        *slot.lock().expect("pending-result slot lock poisoned") = Some(v);
                     },
                     &[kv],
                     &[],
                 );
             }
             KvType::DistSync | KvType::DistAsync => {
-                let ps = self.ps.clone().unwrap();
+                let ps = self.ps.clone().expect("dist kvstore requires a PS client");
                 self.engine.push(
                     move || {
-                        *slot.lock().unwrap() = Some(ps.lock().unwrap().pull(key));
+                        *slot.lock().expect("pending-result slot lock poisoned") = Some(ps.lock().expect("PS client lock poisoned").pull(key));
                     },
                     &[],
                     &[self.comm_var, kv],
                 );
             }
             KvType::SyncMpi | KvType::AsyncMpi => {
-                let comm = self.comm.clone().unwrap();
+                let comm = self.comm.clone().expect("MPI kvstore requires a communicator");
                 let ps = self.ps.clone();
                 let local = self.local.clone();
                 self.engine.push(
                     move || {
-                        let mut c = comm.lock().unwrap();
+                        let mut c = comm.lock().expect("client communicator lock poisoned");
                         let mut buf = Vec::new();
                         if c.rank() == 0 {
                             buf = match &ps {
-                                Some(ps) => ps.lock().unwrap().pull(key),
+                                Some(ps) => ps.lock().expect("PS client lock poisoned").pull(key),
                                 // Pure MPI: the "value" lives locally
                                 // (pushpull is the natural API there).
                                 None => local
                                     .lock()
-                                    .unwrap()
+                                    .unwrap_or_else(|_| {
+                                        panic!("local store lock poisoned pulling key {key}")
+                                    })
                                     .get(&key)
                                     .unwrap_or_else(|| {
                                         panic!(
@@ -523,7 +567,7 @@ impl KvWorker {
                             };
                         }
                         c.bcast(0, &mut buf);
-                        *slot.lock().unwrap() = Some(buf);
+                        *slot.lock().expect("pending-result slot lock poisoned") = Some(buf);
                     },
                     &[],
                     &[self.comm_var, kv],
@@ -541,25 +585,25 @@ impl KvWorker {
             KvType::SyncMpi | KvType::AsyncMpi if self.ps.is_none() => {
                 let kv = self.key_var(key);
                 let (pending, slot) = Pending::engine_backed(self.engine.clone(), vec![kv]);
-                let comm = self.comm.clone().unwrap();
+                let comm = self.comm.clone().expect("MPI kvstore requires a communicator");
                 let (kind, rings, group, cost) = self.algo_params();
                 let (codec, ef) = self.codec_params();
                 self.engine.push(
                     move || {
-                        let mut c = comm.lock().unwrap();
+                        let mut c = comm.lock().expect("client communicator lock poisoned");
                         let mut buf = data;
                         compressed_allreduce(
                             kind,
-                            &mut c,
+                            &mut *c,
                             &mut buf,
                             &*codec,
                             key as u64,
-                            &mut ef.lock().unwrap(),
+                            &mut ef.lock().expect("EF-residual state lock poisoned"),
                             rings,
                             group,
                             &cost,
                         );
-                        *slot.lock().unwrap() = Some(buf);
+                        *slot.lock().expect("pending-result slot lock poisoned") = Some(buf);
                     },
                     &[],
                     &[self.comm_var, kv],
@@ -585,7 +629,7 @@ impl KvWorker {
             // Nothing to reduce: resolve immediately (an engine-backed
             // Pending with no vars would otherwise race the op).
             let (pending, slot) = Pending::engine_backed(self.engine.clone(), Vec::new());
-            *slot.lock().unwrap() = Some(Vec::new());
+            *slot.lock().expect("pending-result slot lock poisoned") = Some(Vec::new());
             return pending;
         }
         match self.ktype {
@@ -594,13 +638,13 @@ impl KvWorker {
                 let mut mutates = vec![self.comm_var];
                 mutates.extend(key_vars.iter().copied());
                 let (pending, slot) = Pending::engine_backed(self.engine.clone(), key_vars);
-                let comm = self.comm.clone().unwrap();
+                let comm = self.comm.clone().expect("MPI kvstore requires a communicator");
                 let (kind, rings, group, cost) = self.algo_params();
                 let (codec, ef) = self.codec_params();
                 let fusion_bytes = self.fusion_bytes;
                 self.engine.push(
                     move || {
-                        let mut c = comm.lock().unwrap();
+                        let mut c = comm.lock().expect("client communicator lock poisoned");
                         // Per-bucket EF residuals keyed by the bucket's
                         // first KVStore key: the bucket layout is a pure
                         // function of the key lens, so the same bucket
@@ -611,17 +655,17 @@ impl KvWorker {
                             keyed.into_iter().map(|(_, v)| v).collect();
                         fused_allreduce_compressed(
                             kind,
-                            &mut c,
+                            &mut *c,
                             &mut bufs,
                             &ef_keys,
                             fusion_bytes,
                             &*codec,
-                            &mut ef.lock().unwrap(),
+                            &mut ef.lock().expect("EF-residual state lock poisoned"),
                             rings,
                             group,
                             &cost,
                         );
-                        *slot.lock().unwrap() = Some(bufs);
+                        *slot.lock().expect("pending-result slot lock poisoned") = Some(bufs);
                     },
                     &[],
                     &mutates,
@@ -658,14 +702,14 @@ impl KvWorker {
         keyed: Vec<(Key, Vec<f32>)>,
     ) -> Vec<((usize, usize), Pending<Vec<Vec<f32>>>)> {
         let lens: Vec<usize> = keyed.iter().map(|(_, v)| v.len()).collect();
-        let buckets = crate::collectives::fusion_buckets(&lens, self.fusion_bytes);
+        let plan = bucket_issue_plan(&lens, self.fusion_bytes);
         let mut keyed: Vec<Option<(Key, Vec<f32>)>> = keyed.into_iter().map(Some).collect();
-        buckets
-            .into_iter()
-            .rev()
+        plan.into_iter()
             .map(|(i, j)| {
-                let bucket: Vec<(Key, Vec<f32>)> =
-                    keyed[i..j].iter_mut().map(|s| s.take().unwrap()).collect();
+                let bucket: Vec<(Key, Vec<f32>)> = keyed[i..j]
+                    .iter_mut()
+                    .map(|s| s.take().expect("bucket_issue_plan ranges must be disjoint"))
+                    .collect();
                 ((i, j), self.pushpull_fused(bucket))
             })
             .collect()
@@ -685,7 +729,7 @@ impl KvWorker {
             .comm
             .as_ref()
             .expect("replace_comm on a communicator-less kvstore");
-        std::mem::replace(&mut *comm.lock().unwrap(), new)
+        std::mem::replace(&mut *comm.lock().expect("client communicator lock poisoned"), new)
     }
 
     /// Persist a checkpoint blob through the PS (the master-replica path
@@ -701,9 +745,9 @@ impl KvWorker {
     /// talks to the PS directly rather than through the comm var.
     pub fn ckpt_save(&self, key: Key, data: Vec<f32>) {
         match &self.ps {
-            Some(ps) => ps.lock().unwrap().save_blob(key, data),
+            Some(ps) => ps.lock().expect("PS client lock poisoned").save_blob(key, data),
             None => {
-                self.ckpt_local.lock().unwrap().insert(key, data);
+                self.ckpt_local.lock().expect("checkpoint store lock poisoned").insert(key, data);
             }
         }
     }
@@ -712,8 +756,8 @@ impl KvWorker {
     /// nothing was saved under `key`.
     pub fn ckpt_load(&self, key: Key) -> Option<Vec<f32>> {
         match &self.ps {
-            Some(ps) => ps.lock().unwrap().load_blob(key),
-            None => self.ckpt_local.lock().unwrap().get(&key).cloned(),
+            Some(ps) => ps.lock().expect("PS client lock poisoned").load_blob(key),
+            None => self.ckpt_local.lock().expect("checkpoint store lock poisoned").get(&key).cloned(),
         }
     }
 
@@ -727,10 +771,10 @@ impl KvWorker {
         let comm = self.comm.clone().expect("client_bcast needs MPI");
         self.engine.push(
             move || {
-                let mut c = comm.lock().unwrap();
+                let mut c = comm.lock().expect("client communicator lock poisoned");
                 let mut buf = data;
                 c.bcast(root, &mut buf);
-                *slot.lock().unwrap() = Some(buf);
+                *slot.lock().expect("pending-result slot lock poisoned") = Some(buf);
             },
             &[],
             &[self.comm_var],
@@ -750,21 +794,21 @@ impl KvWorker {
         let (codec, ef) = self.codec_params();
         self.engine.push(
             move || {
-                let mut c = comm.lock().unwrap();
+                let mut c = comm.lock().expect("client communicator lock poisoned");
                 let mut buf = data;
                 // Whole-model buffer: one EF residual slot of its own.
                 compressed_allreduce(
                     kind,
-                    &mut c,
+                    &mut *c,
                     &mut buf,
                     &*codec,
                     EF_CLIENT,
-                    &mut ef.lock().unwrap(),
+                    &mut ef.lock().expect("EF-residual state lock poisoned"),
                     rings,
                     group,
                     &cost,
                 );
-                *slot.lock().unwrap() = Some(buf);
+                *slot.lock().expect("pending-result slot lock poisoned") = Some(buf);
             },
             &[],
             &[self.comm_var],
@@ -781,10 +825,10 @@ impl KvWorker {
         let (kind, rings, group, cost) = self.algo_params();
         self.engine.push(
             move || {
-                let mut c = comm.lock().unwrap();
+                let mut c = comm.lock().expect("client communicator lock poisoned");
                 let mut t = tensor;
-                tensor_allreduce_with(kind, &mut c, &mut t, rings, group, &cost, HostReduce::Host);
-                *slot.lock().unwrap() = Some(t);
+                tensor_allreduce_with(kind, &mut *c, &mut t, rings, group, &cost, HostReduce::Host);
+                *slot.lock().expect("pending-result slot lock poisoned") = Some(t);
             },
             &[],
             &[self.comm_var, kv],
@@ -799,7 +843,7 @@ impl KvWorker {
         F: Fn() -> Box<dyn Optimizer>,
     {
         if let Some(ps) = &self.ps {
-            ps.lock().unwrap().set_optimizer(factory);
+            ps.lock().expect("PS client lock poisoned").set_optimizer(factory);
         }
     }
 

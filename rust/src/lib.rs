@@ -24,6 +24,14 @@
 //!
 //! See `DESIGN.md` for the system inventory and experiment index.
 
+// Curated allow-list for `cargo clippy --all-targets -- -D warnings` (CI
+// lint gate). The collective/compression entry points deliberately thread
+// (comm, data, codec, ef-state, rings, group, cost) through one call —
+// the paper's API shape — so the arity lint is waived crate-wide rather
+// than per-site.
+#![allow(clippy::too_many_arguments)]
+
+pub mod analysis;
 pub mod collectives;
 pub mod compress;
 pub mod config;

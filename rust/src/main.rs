@@ -10,6 +10,11 @@
 //!           Regenerate every convergence figure CSV (11-14, 16).
 //!   collectives
 //!           Print the §6 cost-model comparison (Figs 15/17-20 data).
+//!   commcheck
+//!           Statically verify every registered communication schedule
+//!           (deadlock / tag-window / coverage / elastic-epoch / engine
+//!           plans) and prove the verifier on the seeded-mutant suite.
+//!           Exits non-zero on any finding — the CI gate.
 //!   info
 //!           Show artifact metadata and testbed presets.
 
@@ -22,7 +27,7 @@ fn usage() -> ! {
     // The algorithm list is derived from the registry, so this text can
     // never drift from the set of runnable strategies.
     eprintln!(
-        "usage: mxnet-mpi <train|sim|figures|collectives|info> [flags]\n\
+        "usage: mxnet-mpi <train|sim|figures|collectives|commcheck|info> [flags]\n\
          flags for train/sim:\n\
            --algo NAME            one of: {} (case-insensitive)\n\
            --variant NAME         model variant (default mlp)\n\
@@ -262,6 +267,44 @@ fn main() -> Result<()> {
                     "fig15 nodes={n:>2}: weak {w:.0}s strong {s:.0}s | reg weak {rw:.0}s strong {rs:.0}s"
                 );
             }
+        }
+        "commcheck" => {
+            println!("commcheck: verifying registered schedules, engine plans, elastic epochs...");
+            let report = mxnet_mpi::analysis::full_report();
+            println!("commcheck: {} configurations checked", report.configs_checked);
+            for d in &report.diagnostics {
+                println!("  FINDING {d}");
+            }
+            let outcomes = mxnet_mpi::analysis::mutants::run_mutant_suite();
+            let mut escaped = 0usize;
+            for o in &outcomes {
+                let found: Vec<&str> = o.found.iter().map(|k| k.name()).collect();
+                if o.caught {
+                    println!("  mutant {:<28} caught ({})", o.label, found.join(", "));
+                } else {
+                    escaped += 1;
+                    let expected: Vec<&str> = o.expected.iter().map(|k| k.name()).collect();
+                    println!(
+                        "  mutant {:<28} ESCAPED: expected one of [{}], found [{}]",
+                        o.label,
+                        expected.join(", "),
+                        found.join(", ")
+                    );
+                }
+            }
+            if !report.ok() || escaped > 0 {
+                bail!(
+                    "commcheck failed: {} finding(s), {} escaped mutant(s)",
+                    report.diagnostics.len(),
+                    escaped
+                );
+            }
+            println!(
+                "commcheck: OK ({} configurations clean, {}/{} seeded mutants caught)",
+                report.configs_checked,
+                outcomes.len(),
+                outcomes.len()
+            );
         }
         "info" => {
             let meta = mxnet_mpi::jsonlite::parse_file(&artifacts.join("meta.json"))?;

@@ -30,7 +30,7 @@ struct Msg {
     data: Vec<f32>,
 }
 
-const COLL_BIT: u64 = 1 << 63;
+pub(crate) const COLL_BIT: u64 = 1 << 63;
 
 /// A posted (not yet matched) or matched-but-not-waited receive.
 #[derive(Debug)]
@@ -92,6 +92,36 @@ enum ReqKind {
     Send,
     /// Posted receive: slot index into the communicator's receive slab.
     Recv(usize),
+}
+
+/// The point-to-point surface the tuned collective schedules are written
+/// against: exactly the subset of [`Comm`] that [`crate::collectives`]
+/// uses (nonblocking receive + buffered send + completion waits).
+///
+/// Two implementors exist: [`Comm`] (the real fabric — messages move) and
+/// the tracing communicator of [`crate::analysis`] (messages are recorded
+/// as `(src, dst, tag, len)` events and checked, which is how `commcheck`
+/// verifies every schedule without touching the production code paths).
+/// The schedule functions are generic over this trait and monomorphize to
+/// the concrete `Comm` on the training path — zero dispatch cost there.
+pub trait CommOps {
+    /// Request handle returned by [`CommOps::irecv`] (MPI_Request).
+    type Req;
+
+    fn rank(&self) -> usize;
+    fn size(&self) -> usize;
+    /// Buffered send: completes immediately (MPI_Send under the eager
+    /// threshold).
+    fn send(&mut self, to: usize, tag: u64, data: Vec<f32>);
+    /// Blocking receive with (source, tag) matching.
+    fn recv(&mut self, from: usize, tag: u64) -> Vec<f32>;
+    /// Nonblocking receive; completes when a matching message arrives.
+    fn irecv(&mut self, from: usize, tag: u64) -> Self::Req;
+    /// Block until `req` completes; returns its payload.
+    fn wait(&mut self, req: Self::Req) -> Vec<f32>;
+    /// Block until any request completes; removes it from the vec and
+    /// returns `(index_it_was_at, payload)` (MPI_Waitany).
+    fn wait_any(&mut self, reqs: &mut Vec<Self::Req>) -> (usize, Vec<f32>);
 }
 
 /// One rank's endpoint of a communicator.
@@ -597,6 +627,38 @@ impl Comm {
         } else {
             self.finish_collective();
         }
+    }
+}
+
+impl CommOps for Comm {
+    type Req = Request;
+
+    fn rank(&self) -> usize {
+        Comm::rank(self)
+    }
+
+    fn size(&self) -> usize {
+        Comm::size(self)
+    }
+
+    fn send(&mut self, to: usize, tag: u64, data: Vec<f32>) {
+        Comm::send(self, to, tag, data)
+    }
+
+    fn recv(&mut self, from: usize, tag: u64) -> Vec<f32> {
+        Comm::recv(self, from, tag)
+    }
+
+    fn irecv(&mut self, from: usize, tag: u64) -> Request {
+        Comm::irecv(self, from, tag)
+    }
+
+    fn wait(&mut self, req: Request) -> Vec<f32> {
+        Comm::wait(self, req)
+    }
+
+    fn wait_any(&mut self, reqs: &mut Vec<Request>) -> (usize, Vec<f32>) {
+        Comm::wait_any(self, reqs)
     }
 }
 

@@ -116,7 +116,10 @@ impl ServerState {
             .get(&key)
             .is_some_and(|(_, count)| *count >= self.expected_pushes);
         if full {
-            let (buf, _) = self.agg.remove(&key).unwrap();
+            let (buf, _) = self
+                .agg
+                .remove(&key)
+                .unwrap_or_else(|| panic!("sync round completed for key {key} with no aggregate"));
             let w = self.store.get_mut(&key).expect("push before init");
             self.optimizer.update(key, w, &buf);
             *self.rounds.entry(key).or_insert(0) += 1;
@@ -455,7 +458,7 @@ impl Scheduler {
     /// connection-establishment barrier).
     pub fn register(&self, role: Role) -> usize {
         let (lock, cv) = &*self.inner;
-        let mut st = lock.lock().unwrap();
+        let mut st = lock.lock().expect("scheduler state lock poisoned");
         let rank = match role {
             Role::Worker => {
                 st.workers += 1;
@@ -469,7 +472,7 @@ impl Scheduler {
         };
         cv.notify_all();
         while st.workers < st.expect_workers || st.servers < st.expect_servers {
-            st = cv.wait(st).unwrap();
+            st = cv.wait(st).expect("scheduler state lock poisoned at barrier");
         }
         rank
     }
@@ -479,12 +482,12 @@ impl Scheduler {
     /// [`Scheduler::register`].
     pub fn register_as(&self, rank: usize) {
         let (lock, cv) = &*self.inner;
-        let mut st = lock.lock().unwrap();
+        let mut st = lock.lock().expect("scheduler state lock poisoned");
         st.workers += 1;
         st.live.insert(rank);
         cv.notify_all();
         while st.workers < st.expect_workers || st.servers < st.expect_servers {
-            st = cv.wait(st).unwrap();
+            st = cv.wait(st).expect("scheduler state lock poisoned at barrier");
         }
     }
 
@@ -492,20 +495,20 @@ impl Scheduler {
     /// cooperative preemption). Takes effect in the next published view.
     pub fn deregister(&self, rank: usize) {
         let (lock, _) = &*self.inner;
-        lock.lock().unwrap().live.remove(&rank);
+        lock.lock().expect("scheduler state lock poisoned").live.remove(&rank);
     }
 
     /// Admit a late joiner into the live set (no launch barrier: the job
     /// is already running). Takes effect in the next published view.
     pub fn admit(&self, rank: usize) {
         let (lock, _) = &*self.inner;
-        lock.lock().unwrap().live.insert(rank);
+        lock.lock().expect("scheduler state lock poisoned").live.insert(rank);
     }
 
     /// Seal the current live set into a new epoch-numbered view.
     pub fn publish_view(&self) -> MembershipView {
         let (lock, cv) = &*self.inner;
-        let mut st = lock.lock().unwrap();
+        let mut st = lock.lock().expect("scheduler state lock poisoned");
         st.epoch += 1;
         cv.notify_all();
         MembershipView { epoch: st.epoch, workers: st.live.iter().copied().collect() }
@@ -514,7 +517,7 @@ impl Scheduler {
     /// The most recently published view (epoch 0 = launch population).
     pub fn view(&self) -> MembershipView {
         let (lock, _) = &*self.inner;
-        let st = lock.lock().unwrap();
+        let st = lock.lock().expect("scheduler state lock poisoned");
         MembershipView { epoch: st.epoch, workers: st.live.iter().copied().collect() }
     }
 
