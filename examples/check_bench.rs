@@ -1,0 +1,77 @@
+//! Schema validator for the `BENCH_*.json` trajectory files emitted by
+//! `cargo bench --bench kernels` (schema `mxnet-mpi-bench/v1`). CI runs
+//! this against the freshly-regenerated `BENCH_7.json` and fails the
+//! build on any missing section, wrong type, or empty measurement list.
+//!
+//!     cargo run --release --example check_bench -- ../BENCH_7.json
+
+use anyhow::{bail, ensure, Context, Result};
+use mxnet_mpi::jsonlite::{parse_file, Value};
+use std::path::Path;
+
+fn req_num(v: &Value, key: &str) -> Result<f64> {
+    v.req(key)?
+        .as_f64()
+        .with_context(|| format!("{key:?} must be a number"))
+}
+
+fn req_str<'a>(v: &'a Value, key: &str) -> Result<&'a str> {
+    v.req(key)?
+        .as_str()
+        .with_context(|| format!("{key:?} must be a string"))
+}
+
+/// Require a non-empty array of objects, each carrying the given string
+/// keys and (finite, non-negative) numeric keys.
+fn req_rows(doc: &Value, key: &str, strs: &[&str], nums: &[&str]) -> Result<()> {
+    let rows = doc
+        .req(key)?
+        .as_arr()
+        .with_context(|| format!("{key:?} must be an array"))?;
+    ensure!(!rows.is_empty(), "{key:?} must not be empty");
+    for (i, row) in rows.iter().enumerate() {
+        for s in strs {
+            let sv = req_str(row, s).with_context(|| format!("{key}[{i}]"))?;
+            ensure!(!sv.is_empty(), "{key}[{i}].{s} must be non-empty");
+        }
+        for n in nums {
+            let x = req_num(row, n).with_context(|| format!("{key}[{i}]"))?;
+            ensure!(x.is_finite() && x >= 0.0, "{key}[{i}].{n} must be finite and >= 0");
+        }
+    }
+    Ok(())
+}
+
+fn check(path: &Path) -> Result<()> {
+    let doc = parse_file(path).with_context(|| format!("reading {}", path.display()))?;
+    ensure!(
+        req_str(&doc, "schema")? == "mxnet-mpi-bench/v1",
+        "unknown schema (want mxnet-mpi-bench/v1)"
+    );
+    ensure!(req_num(&doc, "issue")? >= 1.0, "issue must be a positive PR number");
+    let mode = req_str(&doc, "mode")?;
+    ensure!(mode == "full" || mode == "smoke", "mode must be full or smoke, got {mode:?}");
+    ensure!(req_num(&doc, "threads")? >= 1.0, "threads must be >= 1");
+    req_rows(&doc, "epoch", &["algo"], &["modeled_epoch_s", "wire_mb_per_iter"])?;
+    req_rows(&doc, "wire_bytes", &["codec"], &["dense_bytes", "wire_bytes"])?;
+    req_rows(
+        &doc,
+        "kernels_us",
+        &["name", "shape"],
+        &["naive_us", "tiled_us", "speedup"],
+    )?;
+    req_rows(&doc, "allreduce_us", &["schedule"], &["bytes", "us"])?;
+    req_rows(&doc, "codec_us", &["codec"], &["n", "encode_us", "decode_us"])?;
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let arg = match std::env::args().nth(1) {
+        Some(a) => a,
+        None => bail!("usage: check_bench <BENCH_N.json>"),
+    };
+    let path = Path::new(&arg);
+    check(path)?;
+    println!("{}: ok (mxnet-mpi-bench/v1)", path.display());
+    Ok(())
+}

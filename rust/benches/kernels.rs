@@ -1,0 +1,466 @@
+//! Compute-plane kernel benchmarks (ISSUE 7): tiled/parallel kernels vs
+//! the seed scalar implementations, codec encode/decode, allreduce by
+//! schedule, and the modeled epoch/wire summary — emitted as
+//! `BENCH_7.json` at the repo root (schema `mxnet-mpi-bench/v1`,
+//! validated in CI by `examples/check_bench.rs`).
+//!
+//!     cargo bench --bench kernels               # full shapes, REPS=7
+//!     BENCH_SMOKE=1 cargo bench --bench kernels # CI short-iteration mode
+//!
+//! The `naive_*` baselines below are verbatim copies of the seed scalar
+//! kernels (pre-parallel `runtime/native.rs`), kept so the before/after
+//! speedup column measures the tiled multi-threaded rewrite against the
+//! exact code it replaced. `benches/KERNEL_TABLE.md` holds a checked-in
+//! reference run of the table this prints.
+
+use mxnet_mpi::compress::{Codec, Compressed};
+use mxnet_mpi::config::{Algo, ExperimentConfig};
+use mxnet_mpi::jsonlite::Value;
+use mxnet_mpi::metrics::Table;
+use mxnet_mpi::mpisim::World;
+use mxnet_mpi::netsim::CostParams;
+use mxnet_mpi::runtime::native;
+use mxnet_mpi::util::Rng;
+use std::time::Instant;
+
+fn smoke() -> bool {
+    std::env::var("BENCH_SMOKE").is_ok()
+}
+
+fn reps() -> usize {
+    if smoke() {
+        3
+    } else {
+        7
+    }
+}
+
+fn median(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.total_cmp(b));
+    xs[xs.len() / 2]
+}
+
+/// Run `f` reps times (plus one warmup); return median seconds.
+fn bench<F: FnMut()>(mut f: F) -> f64 {
+    f();
+    median(
+        (0..reps())
+            .map(|_| {
+                let t = Instant::now();
+                f();
+                t.elapsed().as_secs_f64()
+            })
+            .collect(),
+    )
+}
+
+fn payload(seed: u64, len: usize) -> Vec<f32> {
+    let mut r = Rng::new(seed.wrapping_mul(0x9E37_79B9) | 1);
+    (0..len).map(|_| r.normal() as f32 * 0.7).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Seed scalar baselines (verbatim pre-parallel kernels)
+// ---------------------------------------------------------------------------
+
+fn naive_matmul(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut y = vec![0.0f32; m * n];
+    for i in 0..m {
+        let yrow = &mut y[i * n..(i + 1) * n];
+        for l in 0..k {
+            let a = x[i * k + l];
+            if a != 0.0 {
+                let wrow = &w[l * n..(l + 1) * n];
+                for j in 0..n {
+                    yrow[j] += a * wrow[j];
+                }
+            }
+        }
+    }
+    y
+}
+
+fn naive_matmul_tn(x: &[f32], dy: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut g = vec![0.0f32; k * n];
+    for i in 0..m {
+        let dyrow = &dy[i * n..(i + 1) * n];
+        for l in 0..k {
+            let a = x[i * k + l];
+            if a != 0.0 {
+                let grow = &mut g[l * n..(l + 1) * n];
+                for j in 0..n {
+                    grow[j] += a * dyrow[j];
+                }
+            }
+        }
+    }
+    g
+}
+
+fn naive_matmul_nt(dy: &[f32], w: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    let mut dx = vec![0.0f32; m * k];
+    for i in 0..m {
+        let dyrow = &dy[i * n..(i + 1) * n];
+        for l in 0..k {
+            let wrow = &w[l * n..(l + 1) * n];
+            let mut s = 0.0f32;
+            for j in 0..n {
+                s += dyrow[j] * wrow[j];
+            }
+            dx[i * k + l] = s;
+        }
+    }
+    dx
+}
+
+fn naive_ln_fwd(x: &[f32], scale: &[f32], bias: &[f32], rows: usize, d: usize) -> Vec<f32> {
+    const LN_EPS: f32 = 1e-5;
+    let mut y = vec![0.0f32; rows * d];
+    let dn = d as f32;
+    for i in 0..rows {
+        let row = &x[i * d..(i + 1) * d];
+        let mut mu = 0.0f32;
+        for &v in row {
+            mu += v;
+        }
+        mu /= dn;
+        let mut var = 0.0f32;
+        for &v in row {
+            var += (v - mu) * (v - mu);
+        }
+        var /= dn;
+        let r = 1.0 / (var + LN_EPS).sqrt();
+        for j in 0..d {
+            y[i * d + j] = (row[j] - mu) * r * scale[j] + bias[j];
+        }
+    }
+    y
+}
+
+fn naive_gelu_fwd(x: &[f32]) -> Vec<f32> {
+    let c0 = (2.0f32 / std::f32::consts::PI).sqrt();
+    let mut y = vec![0.0f32; x.len()];
+    for i in 0..x.len() {
+        let v = x[i];
+        let u = c0 * (v + 0.044715 * v * v * v);
+        y[i] = 0.5 * v * (1.0 + u.tanh());
+    }
+    y
+}
+
+fn naive_softmax_xent(logits: &[f32], y: &[i32], rows: usize, v: usize) -> (f32, Vec<f32>) {
+    let mut dl = vec![0.0f32; rows * v];
+    let mut loss = 0.0f64;
+    for i in 0..rows {
+        let row = &logits[i * v..(i + 1) * v];
+        let gold = y[i] as usize;
+        let mut mx = f32::NEG_INFINITY;
+        for &x in row {
+            if x > mx {
+                mx = x;
+            }
+        }
+        let mut z = 0.0f32;
+        for &x in row {
+            z += (x - mx).exp();
+        }
+        loss += (z.ln() + mx - row[gold]) as f64;
+        let drow = &mut dl[i * v..(i + 1) * v];
+        for j in 0..v {
+            drow[j] = (row[j] - mx).exp() / z;
+        }
+        drow[gold] -= 1.0;
+    }
+    let inv = 1.0 / rows as f32;
+    for d in dl.iter_mut() {
+        *d *= inv;
+    }
+    ((loss / rows as f64) as f32, dl)
+}
+
+// ---------------------------------------------------------------------------
+// Sections
+// ---------------------------------------------------------------------------
+
+struct KernelRow {
+    name: &'static str,
+    shape: String,
+    naive_us: f64,
+    tiled_us: f64,
+}
+
+impl KernelRow {
+    fn speedup(&self) -> f64 {
+        self.naive_us / self.tiled_us.max(1e-9)
+    }
+}
+
+/// Per-kernel seed-vs-tiled timings at the seed sizes and the 4–8×
+/// transformer shapes the acceptance table quotes.
+fn bench_kernels() -> Vec<KernelRow> {
+    let mut rows = Vec::new();
+    // (m, k, n): seed-model scale, then transformer scale (batch*seq ×
+    // d_model × d_ff analog). Smoke mode shrinks the large shape so CI
+    // stays fast while exercising the same code paths.
+    let large = if smoke() { (128, 128, 256) } else { (512, 256, 1024) };
+    for (m, k, n) in [(64usize, 64usize, 64usize), large] {
+        let x = payload(1, m * k);
+        let w = payload(2, k * n);
+        let dy = payload(3, m * n);
+        let shape = format!("{m}x{k}x{n}");
+        let naive = bench(|| {
+            naive_matmul(&x, &w, m, k, n);
+        });
+        let tiled = bench(|| {
+            native::matmul(&x, &w, m, k, n);
+        });
+        rows.push(KernelRow {
+            name: "matmul",
+            shape: shape.clone(),
+            naive_us: naive * 1e6,
+            tiled_us: tiled * 1e6,
+        });
+        let naive = bench(|| {
+            naive_matmul_tn(&x, &dy, m, k, n);
+        });
+        let tiled = bench(|| {
+            native::matmul_tn(&x, &dy, m, k, n);
+        });
+        rows.push(KernelRow {
+            name: "matmul_tn",
+            shape: shape.clone(),
+            naive_us: naive * 1e6,
+            tiled_us: tiled * 1e6,
+        });
+        let naive = bench(|| {
+            naive_matmul_nt(&dy, &w, m, n, k);
+        });
+        let tiled = bench(|| {
+            native::matmul_nt(&dy, &w, m, n, k);
+        });
+        rows.push(KernelRow {
+            name: "matmul_nt",
+            shape,
+            naive_us: naive * 1e6,
+            tiled_us: tiled * 1e6,
+        });
+    }
+    let (rl, dl) = if smoke() { (512, 128) } else { (4096, 256) };
+    for (rows_n, d) in [(64usize, 64usize), (rl, dl)] {
+        let x = payload(4, rows_n * d);
+        let scale = payload(5, d);
+        let bias = payload(6, d);
+        let shape = format!("{rows_n}x{d}");
+        let naive = bench(|| {
+            naive_ln_fwd(&x, &scale, &bias, rows_n, d);
+        });
+        let tiled = bench(|| {
+            native::ln_fwd(&x, &scale, &bias, rows_n, d);
+        });
+        rows.push(KernelRow {
+            name: "ln_fwd",
+            shape: shape.clone(),
+            naive_us: naive * 1e6,
+            tiled_us: tiled * 1e6,
+        });
+        let naive = bench(|| {
+            naive_gelu_fwd(&x);
+        });
+        let tiled = bench(|| {
+            native::gelu_fwd(&x);
+        });
+        rows.push(KernelRow {
+            name: "gelu_fwd",
+            shape: shape.clone(),
+            naive_us: naive * 1e6,
+            tiled_us: tiled * 1e6,
+        });
+        let labels: Vec<i32> = (0..rows_n).map(|i| (i % d) as i32).collect();
+        let naive = bench(|| {
+            naive_softmax_xent(&x, &labels, rows_n, d);
+        });
+        let tiled = bench(|| {
+            native::softmax_xent(&x, &labels, rows_n, d);
+        });
+        rows.push(KernelRow {
+            name: "softmax_xent",
+            shape,
+            naive_us: naive * 1e6,
+            tiled_us: tiled * 1e6,
+        });
+    }
+    rows
+}
+
+/// Wall-clock allreduce by pluggable schedule on the real mpisim path.
+fn bench_allreduce() -> Vec<(String, usize, f64)> {
+    let params = CostParams::testbed1();
+    let len = if smoke() { 1 << 12 } else { 1 << 16 };
+    let mut out = Vec::new();
+    for kind in mxnet_mpi::collectives::AlgoKind::DATA_PATH {
+        let pr = params.clone();
+        let s = bench(|| {
+            let comms = World::create(4);
+            let hs: Vec<_> = comms
+                .into_iter()
+                .map(|mut c| {
+                    let pr = pr.clone();
+                    std::thread::spawn(move || {
+                        let mut d = vec![c.rank() as f32; len];
+                        mxnet_mpi::collectives::allreduce_with(kind, &mut c, &mut d, 2, 2, &pr);
+                        d[0]
+                    })
+                })
+                .collect();
+            for h in hs {
+                h.join().unwrap();
+            }
+        });
+        out.push((kind.name().to_string(), len * 4, s * 1e6));
+    }
+    out
+}
+
+/// Encode/decode wall-clock for every registered codec.
+fn bench_codecs() -> Vec<(String, usize, f64, f64)> {
+    let n = if smoke() { 1 << 12 } else { 1 << 18 };
+    let data = payload(7, n);
+    let mut out = Vec::new();
+    for codec in Codec::all() {
+        let built = codec.build(0.01);
+        let enc = bench(|| {
+            built.compress(&data);
+        });
+        let compressed = built.compress(&data);
+        let wire = compressed.to_wire();
+        let dec = bench(|| {
+            Compressed::from_wire(&wire).unwrap().decompress();
+        });
+        out.push((codec.name().to_string(), n, enc * 1e6, dec * 1e6));
+    }
+    out
+}
+
+/// Modeled epoch seconds per registered algorithm (testbed1 analog) and
+/// modeled wire bytes per codec — the trajectory numbers BENCH_*.json
+/// tracks across PRs.
+fn modeled_sections() -> (Vec<Value>, Vec<Value>) {
+    let mut epoch = Vec::new();
+    for algo in Algo::all() {
+        let cfg = ExperimentConfig::testbed1(algo);
+        let s = algo.strategy();
+        let syncs = s.syncs_per_iter(&cfg);
+        let p = cfg.cost_params();
+        let iters = cfg.samples_per_epoch as f64 / (cfg.workers as f64 * cfg.batch as f64);
+        let wire_bytes = if s.pushes_model() {
+            cfg.virtual_model_bytes as f64
+        } else {
+            cfg.build_compressor().wire_bytes(cfg.virtual_model_bytes / 4) as f64
+        };
+        let epoch_s = iters
+            * (cfg.compute_s_per_batch
+                + syncs * (wire_bytes + cfg.virtual_model_bytes as f64) * p.beta_net);
+        epoch.push(Value::obj(vec![
+            ("algo", Value::str(algo.name())),
+            ("modeled_epoch_s", Value::num(epoch_s)),
+            ("wire_mb_per_iter", Value::num(wire_bytes * syncs / (1 << 20) as f64)),
+        ]));
+    }
+    let dense_bytes = 102usize << 20;
+    let wire = Codec::all()
+        .into_iter()
+        .map(|codec| {
+            Value::obj(vec![
+                ("codec", Value::str(codec.name())),
+                ("dense_bytes", Value::num(dense_bytes as f64)),
+                ("wire_bytes", Value::num(codec.build(0.01).wire_bytes(dense_bytes / 4) as f64)),
+            ])
+        })
+        .collect();
+    (epoch, wire)
+}
+
+fn main() {
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    mxnet_mpi::runtime::par::set_threads(0);
+    let mode = if smoke() { "smoke" } else { "full" };
+    println!("== compute-plane kernels, mode={mode}, threads={threads} ==");
+
+    let kernels = bench_kernels();
+    let mut t = Table::new(&["kernel", "shape", "seed us", "tiled us", "speedup"]);
+    for r in &kernels {
+        t.row(vec![
+            r.name.to_string(),
+            r.shape.clone(),
+            format!("{:.1}", r.naive_us),
+            format!("{:.1}", r.tiled_us),
+            format!("{:.2}x", r.speedup()),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let allreduce = bench_allreduce();
+    let codecs = bench_codecs();
+    let (epoch, wire) = modeled_sections();
+
+    let doc = Value::obj(vec![
+        ("schema", Value::str("mxnet-mpi-bench/v1")),
+        ("issue", Value::num(7.0)),
+        ("mode", Value::str(mode)),
+        ("threads", Value::num(threads as f64)),
+        ("epoch", Value::Arr(epoch)),
+        ("wire_bytes", Value::Arr(wire)),
+        (
+            "kernels_us",
+            Value::Arr(
+                kernels
+                    .iter()
+                    .map(|r| {
+                        Value::obj(vec![
+                            ("name", Value::str(r.name)),
+                            ("shape", Value::str(&r.shape)),
+                            ("naive_us", Value::num(r.naive_us)),
+                            ("tiled_us", Value::num(r.tiled_us)),
+                            ("speedup", Value::num(r.speedup())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "allreduce_us",
+            Value::Arr(
+                allreduce
+                    .iter()
+                    .map(|(sched, bytes, us)| {
+                        Value::obj(vec![
+                            ("schedule", Value::str(sched)),
+                            ("bytes", Value::num(*bytes as f64)),
+                            ("us", Value::num(*us)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "codec_us",
+            Value::Arr(
+                codecs
+                    .iter()
+                    .map(|(codec, n, enc, dec)| {
+                        Value::obj(vec![
+                            ("codec", Value::str(codec)),
+                            ("n", Value::num(*n as f64)),
+                            ("encode_us", Value::num(*enc)),
+                            ("decode_us", Value::num(*dec)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+
+    let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_7.json");
+    std::fs::write(&path, doc.to_json_pretty() + "\n").expect("write BENCH_7.json");
+    println!("wrote {}", path.display());
+}

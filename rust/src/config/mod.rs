@@ -68,6 +68,11 @@ pub struct ExperimentConfig {
     /// Sub-chunks per pipelined collective step; 0 = the testbed preset's
     /// value ([`CostParams::pipeline_chunks`]), 1 = blocking schedules.
     pub pipeline_chunks: usize,
+    /// Compute-plane threads for the native kernels: 0 = auto (all
+    /// available parallelism), 1 = the scalar path. Kernel reduction
+    /// orders are fixed per problem size, so results are bitwise
+    /// identical at any setting — a pure performance knob.
+    pub threads: usize,
     /// Gradient codec (the compression plane): "identity" (default, the
     /// bitwise pre-compression paths), "int8" (per-bucket linear
     /// quantization + error feedback) or "topk" (top-k sparsification +
@@ -128,6 +133,7 @@ impl ExperimentConfig {
             fusion_bytes: 4 << 20,
             overlap: true,
             pipeline_chunks: 0,
+            threads: 0,
             compression: "identity".into(),
             topk_ratio: 0.01,
             seed: 42,
@@ -211,6 +217,7 @@ impl ExperimentConfig {
             ("fusion_bytes", Value::num(self.fusion_bytes as f64)),
             ("overlap", Value::Bool(self.overlap)),
             ("pipeline_chunks", Value::num(self.pipeline_chunks as f64)),
+            ("threads", Value::num(self.threads as f64)),
             ("compression", Value::str(&self.compression)),
             ("topk_ratio", Value::num(self.topk_ratio)),
             ("seed", Value::num(self.seed as f64)),
@@ -284,6 +291,7 @@ impl ExperimentConfig {
         c.fusion_bytes = getu("fusion_bytes", c.fusion_bytes as f64)? as usize;
         c.overlap = v.get("overlap").and_then(|x| x.as_bool()).unwrap_or(c.overlap);
         c.pipeline_chunks = getu("pipeline_chunks", c.pipeline_chunks as f64)? as usize;
+        c.threads = getu("threads", c.threads as f64)? as usize;
         c.compression = gets("compression", &c.compression);
         anyhow::ensure!(
             Codec::parse(&c.compression).is_some(),
@@ -404,6 +412,7 @@ mod tests {
             ("workers", r#"{"algo": "mpi-SGD", "workers": -3}"#),
             ("fusion_bytes", r#"{"algo": "mpi-SGD", "fusion_bytes": -4096}"#),
             ("epochs", r#"{"algo": "mpi-SGD", "epochs": -2}"#),
+            ("threads", r#"{"algo": "mpi-SGD", "threads": -2}"#),
         ] {
             let v = crate::jsonlite::parse(json).unwrap();
             let err = ExperimentConfig::from_json(&v).unwrap_err();

@@ -39,8 +39,8 @@
 //! and panics with a clear message.
 
 use crate::collectives::{
-    allreduce_with, compressed_allreduce, fused_allreduce_compressed, tensor_allreduce_with,
-    AlgoKind, HostReduce,
+    allreduce_with, compressed_allreduce, fused_allreduce_compressed_with_arena,
+    tensor_allreduce_with, AlgoKind, FusionArena, HostReduce,
 };
 use crate::compress::{ef_compress, Codec, Compressor, EfState};
 use crate::engine::{Engine, Var};
@@ -195,6 +195,10 @@ pub struct KvWorker {
     /// lossy codec drops this round is carried into the next compression
     /// of the same buffer.
     ef: Arc<Mutex<EfState>>,
+    /// Persistent gather arena for the fused bucket path: sized to the
+    /// largest bucket ever pushed, then reused — zero allocations per
+    /// push once warm ([`FusionArena::grows`] is the CI-asserted hook).
+    arena: Arc<Mutex<FusionArena>>,
 }
 
 /// EF-residual namespaces (disjoint from plain KVStore keys): the master's
@@ -241,7 +245,17 @@ impl KvWorker {
             cost: CostParams::testbed1(),
             codec: Arc::from(Codec::identity().build(0.0)),
             ef: Arc::new(Mutex::new(EfState::new())),
+            arena: Arc::new(Mutex::new(FusionArena::new())),
         }
+    }
+
+    /// Growth count of the fused-path gather arena (the per-push
+    /// allocation regression hook: constant once warmed up).
+    pub fn fusion_arena_grows(&self) -> usize {
+        self.arena
+            .lock()
+            .expect("fusion arena lock poisoned")
+            .grows()
     }
 
     /// Configure the gradient codec (`topk_ratio` is ignored by non-topk
@@ -641,6 +655,7 @@ impl KvWorker {
                 let comm = self.comm.clone().expect("MPI kvstore requires a communicator");
                 let (kind, rings, group, cost) = self.algo_params();
                 let (codec, ef) = self.codec_params();
+                let arena = self.arena.clone();
                 let fusion_bytes = self.fusion_bytes;
                 self.engine.push(
                     move || {
@@ -653,7 +668,7 @@ impl KvWorker {
                             keyed.iter().map(|(k, _)| EF_FUSED | *k as u64).collect();
                         let mut bufs: Vec<Vec<f32>> =
                             keyed.into_iter().map(|(_, v)| v).collect();
-                        fused_allreduce_compressed(
+                        fused_allreduce_compressed_with_arena(
                             kind,
                             &mut *c,
                             &mut bufs,
@@ -664,6 +679,7 @@ impl KvWorker {
                             rings,
                             group,
                             &cost,
+                            &mut arena.lock().expect("fusion arena lock poisoned"),
                         );
                         *slot.lock().expect("pending-result slot lock poisoned") = Some(bufs);
                     },

@@ -39,6 +39,9 @@ fn usage() -> ! {
            --fusion-bytes N       gradient-fusion bucket cap (0 = off)\n\
            --overlap on|off       compute/communication overlap (sim plane)\n\
            --pipeline-chunks N    sub-chunks per pipelined collective step\n\
+           --threads N            compute-plane kernel threads (0 = auto,\n\
+                                  1 = scalar path; results are bitwise\n\
+                                  identical at any setting)\n\
            --compression NAME     gradient codec, one of: {}\n\
            --topk-ratio F         fraction the topk codec keeps, in (0, 1]\n\
            --fault PLAN           scripted churn, e.g. kill:3@200,join@300\n\
@@ -160,6 +163,7 @@ fn build_config(args: &Args) -> Result<ExperimentConfig> {
     ovr!(rings, "rings", usize);
     ovr!(fusion_bytes, "fusion-bytes", usize);
     ovr!(pipeline_chunks, "pipeline-chunks", usize);
+    ovr!(threads, "threads", usize);
     ovr!(topk_ratio, "topk-ratio", f64);
     ovr!(seed, "seed", u64);
     anyhow::ensure!(

@@ -16,6 +16,7 @@
 //! GPUs in the paper).
 
 pub mod native;
+pub mod par;
 pub mod service;
 
 use crate::jsonlite::{self, Value};
@@ -333,11 +334,17 @@ impl Model {
         hyper: &crate::optimizer::SgdHyper,
     ) -> Result<()> {
         anyhow::ensure!(w.len() == g.len() && w.len() == m.len(), "sgd length mismatch");
-        for i in 0..w.len() {
-            let g_eff = hyper.rescale * g[i] + hyper.weight_decay * w[i];
-            m[i] = hyper.momentum * m[i] + g_eff;
-            w[i] -= hyper.lr * m[i];
-        }
+        // Element-parallel: each element's update is independent, so
+        // the partitioning is bitwise-invisible.
+        let work = w.len() * 4;
+        par::par_rows2(w, m, g.len(), work, |e0, wc, mc| {
+            let gs = &g[e0..e0 + wc.len()];
+            for ((wv, mv), &gv) in wc.iter_mut().zip(mc.iter_mut()).zip(gs) {
+                let g_eff = hyper.rescale * gv + hyper.weight_decay * *wv;
+                *mv = hyper.momentum * *mv + g_eff;
+                *wv -= hyper.lr * *mv;
+            }
+        });
         Ok(())
     }
 

@@ -14,127 +14,186 @@
 //! [`SegmentTable`] from `meta.json`, exactly like the AOT calling
 //! convention, so KVStore keys / trainers are unaffected by the backend.
 
+use crate::runtime::par;
 use crate::tensor::SegmentTable;
 
 const LN_EPS: f32 = 1e-5;
 
 // ---------------------------------------------------------------------------
 // Flat-buffer math helpers
+//
+// Every kernel here is parallelized with the `runtime::par` row
+// partitioner under one determinism contract: the summation order of
+// each output element is a pure function of the problem size — threads
+// own disjoint contiguous output blocks and never split a reduction.
+// Results are therefore bitwise identical at any `threads` setting,
+// which is what keeps the cross-plane equivalence properties
+// (tests/strategies.rs, tests/collective_algos.rs) independent of the
+// performance knobs.
 // ---------------------------------------------------------------------------
 
+/// Cache tile depth: k-rows of `w` per tile in [`matmul`], m-rows of
+/// `x` per tile in [`matmul_tn`]. 128 f32 rows at the widths used here
+/// keep a tile L2-resident while a whole chunk of output rows sweeps it.
+const MAT_KC: usize = 128;
+
 /// y[m,n] = x[m,k] @ w[k,n]
-fn matmul(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+///
+/// Row-parallel and k-tiled; per output element the additions run in
+/// ascending `l` exactly like the scalar reference (tiles are visited in
+/// ascending order within each row), so the result is bitwise identical
+/// to the single-threaded untiled kernel.
+pub fn matmul(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     debug_assert_eq!(x.len(), m * k);
     debug_assert_eq!(w.len(), k * n);
     let mut y = vec![0.0f32; m * n];
-    for i in 0..m {
-        let yrow = &mut y[i * n..(i + 1) * n];
-        for l in 0..k {
-            let a = x[i * k + l];
-            if a != 0.0 {
-                let wrow = &w[l * n..(l + 1) * n];
-                for j in 0..n {
-                    yrow[j] += a * wrow[j];
+    if n == 0 {
+        return y;
+    }
+    par::par_rows(&mut y, m, m * k * n, |r0, chunk| {
+        for lb in (0..k).step_by(MAT_KC) {
+            let le = (lb + MAT_KC).min(k);
+            for (ii, yrow) in chunk.chunks_exact_mut(n).enumerate() {
+                let xrow = &x[(r0 + ii) * k + lb..(r0 + ii) * k + le];
+                for (dl, &a) in xrow.iter().enumerate() {
+                    if a != 0.0 {
+                        let wrow = &w[(lb + dl) * n..(lb + dl + 1) * n];
+                        for (yv, &wv) in yrow.iter_mut().zip(wrow) {
+                            *yv += a * wv;
+                        }
+                    }
                 }
             }
         }
-    }
+    });
     y
 }
 
 /// g[k,n] = x^T[k,m] @ dy[m,n] (weight gradient).
-fn matmul_tn(x: &[f32], dy: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+///
+/// Parallel over the `k` output rows, tiled over `m`; per output element
+/// the additions run in ascending `i` — the same order as the scalar
+/// reference, so bitwise identical at any thread count.
+pub fn matmul_tn(x: &[f32], dy: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     debug_assert_eq!(x.len(), m * k);
     debug_assert_eq!(dy.len(), m * n);
     let mut g = vec![0.0f32; k * n];
-    for i in 0..m {
-        let dyrow = &dy[i * n..(i + 1) * n];
-        for l in 0..k {
-            let a = x[i * k + l];
-            if a != 0.0 {
-                let grow = &mut g[l * n..(l + 1) * n];
-                for j in 0..n {
-                    grow[j] += a * dyrow[j];
+    if n == 0 {
+        return g;
+    }
+    par::par_rows(&mut g, k, m * k * n, |l0, chunk| {
+        for ib in (0..m).step_by(MAT_KC) {
+            let ie = (ib + MAT_KC).min(m);
+            for (ll, grow) in chunk.chunks_exact_mut(n).enumerate() {
+                let l = l0 + ll;
+                for i in ib..ie {
+                    let a = x[i * k + l];
+                    if a != 0.0 {
+                        let dyrow = &dy[i * n..(i + 1) * n];
+                        for (gv, &dv) in grow.iter_mut().zip(dyrow) {
+                            *gv += a * dv;
+                        }
+                    }
                 }
             }
         }
-    }
+    });
     g
 }
 
 /// dx[m,k] = dy[m,n] @ w^T[n,k] (input gradient).
-fn matmul_nt(dy: &[f32], w: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+///
+/// Row-parallel dot products with the fixed-lane accumulators of
+/// [`par::dot_lanes`]; the reduction order depends only on `n`, never on
+/// threading.
+pub fn matmul_nt(dy: &[f32], w: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
     debug_assert_eq!(dy.len(), m * n);
     debug_assert_eq!(w.len(), k * n);
     let mut dx = vec![0.0f32; m * k];
-    for i in 0..m {
-        let dyrow = &dy[i * n..(i + 1) * n];
-        for l in 0..k {
-            let wrow = &w[l * n..(l + 1) * n];
-            let mut s = 0.0f32;
-            for j in 0..n {
-                s += dyrow[j] * wrow[j];
-            }
-            dx[i * k + l] = s;
-        }
+    if k == 0 {
+        return dx;
     }
+    par::par_rows(&mut dx, m, m * k * n, |r0, chunk| {
+        for (ii, dxrow) in chunk.chunks_exact_mut(k).enumerate() {
+            let dyrow = &dy[(r0 + ii) * n..(r0 + ii + 1) * n];
+            for (l, dv) in dxrow.iter_mut().enumerate() {
+                *dv = par::dot_lanes(dyrow, &w[l * n..(l + 1) * n]);
+            }
+        }
+    });
     dx
 }
 
-fn add_bias(y: &mut [f32], bias: &[f32], m: usize, n: usize) {
-    for i in 0..m {
-        let row = &mut y[i * n..(i + 1) * n];
-        for j in 0..n {
-            row[j] += bias[j];
-        }
+pub fn add_bias(y: &mut [f32], bias: &[f32], m: usize, n: usize) {
+    if n == 0 {
+        return;
     }
+    par::par_rows(y, m, m * n, |_, chunk| {
+        for row in chunk.chunks_exact_mut(n) {
+            for (v, &bv) in row.iter_mut().zip(bias) {
+                *v += bv;
+            }
+        }
+    });
 }
 
-/// Column sums of dy[m,n] (bias gradient).
-fn col_sum(dy: &[f32], m: usize, n: usize) -> Vec<f32> {
+/// Column sums of dy[m,n] (bias gradient). Parallel over *columns*;
+/// each column still accumulates rows in ascending `i` — bitwise
+/// identical to the scalar reference.
+pub fn col_sum(dy: &[f32], m: usize, n: usize) -> Vec<f32> {
     let mut s = vec![0.0f32; n];
-    for i in 0..m {
-        let row = &dy[i * n..(i + 1) * n];
-        for j in 0..n {
-            s[j] += row[j];
+    par::par_rows(&mut s, n, m * n, |c0, chunk| {
+        for i in 0..m {
+            let row = &dy[i * n + c0..i * n + c0 + chunk.len()];
+            for (sv, &v) in chunk.iter_mut().zip(row) {
+                *sv += v;
+            }
         }
-    }
+    });
     s
 }
 
 /// Mean softmax cross-entropy over `rows` rows of `v` logits.
 /// Returns (mean loss, dlogits = (softmax - onehot)/rows, n_correct).
-fn softmax_xent(logits: &[f32], y: &[i32], rows: usize, v: usize) -> (f32, Vec<f32>, i32) {
+///
+/// Rows are independent, so the gradient parallelizes freely; the f64
+/// loss and correct-count fold stays a sequential pass in row order over
+/// the per-row stats, making the totals partition-independent.
+pub fn softmax_xent(logits: &[f32], y: &[i32], rows: usize, v: usize) -> (f32, Vec<f32>, i32) {
     debug_assert_eq!(logits.len(), rows * v);
     debug_assert_eq!(y.len(), rows);
     let mut dl = vec![0.0f32; rows * v];
+    let mut stats: Vec<(f64, i32)> = vec![(0.0, 0); rows];
+    par::par_rows2(&mut dl, &mut stats, rows, rows * v * 8, |r0, dchunk, schunk| {
+        for (rr, (drow, stat)) in dchunk.chunks_exact_mut(v).zip(schunk.iter_mut()).enumerate() {
+            let i = r0 + rr;
+            let row = &logits[i * v..(i + 1) * v];
+            let gold = y[i] as usize;
+            debug_assert!(gold < v, "label out of range");
+            let mut mx = f32::NEG_INFINITY;
+            let mut arg = 0usize;
+            for (j, &x) in row.iter().enumerate() {
+                if x > mx {
+                    mx = x;
+                    arg = j;
+                }
+            }
+            let mut z = 0.0f32;
+            for &x in row {
+                z += (x - mx).exp();
+            }
+            for (dv, &x) in drow.iter_mut().zip(row) {
+                *dv = (x - mx).exp() / z;
+            }
+            drow[gold] -= 1.0;
+            *stat = ((z.ln() + mx - row[gold]) as f64, (arg == gold) as i32);
+        }
+    });
     let mut loss = 0.0f64;
     let mut correct = 0i32;
-    for i in 0..rows {
-        let row = &logits[i * v..(i + 1) * v];
-        let gold = y[i] as usize;
-        debug_assert!(gold < v, "label out of range");
-        let mut mx = f32::NEG_INFINITY;
-        let mut arg = 0usize;
-        for (j, &x) in row.iter().enumerate() {
-            if x > mx {
-                mx = x;
-                arg = j;
-            }
-        }
-        if arg == gold {
-            correct += 1;
-        }
-        let mut z = 0.0f32;
-        for &x in row {
-            z += (x - mx).exp();
-        }
-        loss += (z.ln() + mx - row[gold]) as f64;
-        let drow = &mut dl[i * v..(i + 1) * v];
-        for j in 0..v {
-            drow[j] = (row[j] - mx).exp() / z;
-        }
-        drow[gold] -= 1.0;
+    for &(l, c) in &stats {
+        loss += l;
+        correct += c;
     }
     let inv = 1.0 / rows as f32;
     for d in dl.iter_mut() {
@@ -145,7 +204,7 @@ fn softmax_xent(logits: &[f32], y: &[i32], rows: usize, v: usize) -> (f32, Vec<f
 
 /// LayerNorm forward over `rows` rows of width `d`.
 /// Returns (y, xhat, rstd) — the backward caches.
-fn ln_fwd(
+pub fn ln_fwd(
     x: &[f32],
     scale: &[f32],
     bias: &[f32],
@@ -156,31 +215,56 @@ fn ln_fwd(
     let mut xhat = vec![0.0f32; rows * d];
     let mut rstd = vec![0.0f32; rows];
     let dn = d as f32;
-    for i in 0..rows {
-        let row = &x[i * d..(i + 1) * d];
-        let mut mu = 0.0f32;
-        for &v in row {
-            mu += v;
-        }
-        mu /= dn;
-        let mut var = 0.0f32;
-        for &v in row {
-            var += (v - mu) * (v - mu);
-        }
-        var /= dn;
-        let r = 1.0 / (var + LN_EPS).sqrt();
-        rstd[i] = r;
-        for j in 0..d {
-            let xh = (row[j] - mu) * r;
-            xhat[i * d + j] = xh;
-            y[i * d + j] = xh * scale[j] + bias[j];
-        }
+    if d == 0 {
+        return (y, xhat, rstd);
     }
+    par::par_rows3(&mut y, &mut xhat, &mut rstd, rows, rows * d * 4, |r0, yc, xc, rc| {
+        for (rr, ((yrow, xhrow), rs)) in yc
+            .chunks_exact_mut(d)
+            .zip(xc.chunks_exact_mut(d))
+            .zip(rc.iter_mut())
+            .enumerate()
+        {
+            let row = &x[(r0 + rr) * d..(r0 + rr + 1) * d];
+            let mu = par::sum_lanes(row) / dn;
+            let var = sumsq_diff_lanes(row, mu) / dn;
+            let r = 1.0 / (var + LN_EPS).sqrt();
+            *rs = r;
+            for (j, (yv, xh)) in yrow.iter_mut().zip(xhrow.iter_mut()).enumerate() {
+                let v = (row[j] - mu) * r;
+                *xh = v;
+                *yv = v * scale[j] + bias[j];
+            }
+        }
+    });
     (y, xhat, rstd)
 }
 
+/// Sum of squared deviations with the fixed-lane order contract of
+/// [`par::sum_lanes`].
+fn sumsq_diff_lanes(row: &[f32], mu: f32) -> f32 {
+    let mut acc = [0.0f32; par::LANES];
+    let mut it = row.chunks_exact(par::LANES);
+    for c in &mut it {
+        for (s, &v) in acc.iter_mut().zip(c) {
+            let dv = v - mu;
+            *s += dv * dv;
+        }
+    }
+    let mut tail = 0.0f32;
+    for &v in it.remainder() {
+        let dv = v - mu;
+        tail += dv * dv;
+    }
+    par::reduce_lanes(&acc) + tail
+}
+
 /// LayerNorm backward. Returns (dx, dscale, dbias).
-fn ln_bwd(
+///
+/// Two passes: `dx` is row-parallel (per-row means use the fixed-lane
+/// order), `dscale`/`dbias` are column-parallel with rows accumulated in
+/// ascending `i` — the scalar reference order per element.
+pub fn ln_bwd(
     dy: &[f32],
     scale: &[f32],
     xhat: &[f32],
@@ -191,54 +275,94 @@ fn ln_bwd(
     let mut dx = vec![0.0f32; rows * d];
     let mut dscale = vec![0.0f32; d];
     let mut dbias = vec![0.0f32; d];
-    let dn = d as f32;
-    for i in 0..rows {
-        let mut mg = 0.0f32;
-        let mut mgx = 0.0f32;
-        for j in 0..d {
-            let dyv = dy[i * d + j];
-            let xh = xhat[i * d + j];
-            let gg = dyv * scale[j];
-            mg += gg;
-            mgx += gg * xh;
-            dscale[j] += dyv * xh;
-            dbias[j] += dyv;
-        }
-        mg /= dn;
-        mgx /= dn;
-        for j in 0..d {
-            let gg = dy[i * d + j] * scale[j];
-            dx[i * d + j] = (gg - mg - xhat[i * d + j] * mgx) * rstd[i];
-        }
+    if d == 0 {
+        return (dx, dscale, dbias);
     }
+    let dn = d as f32;
+    par::par_rows(&mut dx, rows, rows * d * 6, |r0, chunk| {
+        for (rr, dxrow) in chunk.chunks_exact_mut(d).enumerate() {
+            let i = r0 + rr;
+            let dyrow = &dy[i * d..(i + 1) * d];
+            let xrow = &xhat[i * d..(i + 1) * d];
+            let mut accg = [0.0f32; par::LANES];
+            let mut accgx = [0.0f32; par::LANES];
+            let mut iy = dyrow.chunks_exact(par::LANES);
+            let mut ix = xrow.chunks_exact(par::LANES);
+            let mut isc = scale.chunks_exact(par::LANES);
+            for ((cy, cx), cs) in (&mut iy).zip(&mut ix).zip(&mut isc) {
+                for (((sg, sgx), (&dyv, &xh)), &sc) in accg
+                    .iter_mut()
+                    .zip(accgx.iter_mut())
+                    .zip(cy.iter().zip(cx))
+                    .zip(cs)
+                {
+                    let gg = dyv * sc;
+                    *sg += gg;
+                    *sgx += gg * xh;
+                }
+            }
+            let mut tg = 0.0f32;
+            let mut tgx = 0.0f32;
+            let (ry, rx, rs) = (iy.remainder(), ix.remainder(), isc.remainder());
+            for ((&dyv, &xh), &sc) in ry.iter().zip(rx).zip(rs) {
+                let gg = dyv * sc;
+                tg += gg;
+                tgx += gg * xh;
+            }
+            let mg = (par::reduce_lanes(&accg) + tg) / dn;
+            let mgx = (par::reduce_lanes(&accgx) + tgx) / dn;
+            for (j, dv) in dxrow.iter_mut().enumerate() {
+                let gg = dyrow[j] * scale[j];
+                *dv = (gg - mg - xrow[j] * mgx) * rstd[i];
+            }
+        }
+    });
+    par::par_rows2(&mut dscale, &mut dbias, d, rows * d * 2, |c0, sc_chunk, sb_chunk| {
+        for i in 0..rows {
+            let dyrow = &dy[i * d + c0..i * d + c0 + sc_chunk.len()];
+            let xrow = &xhat[i * d + c0..i * d + c0 + sc_chunk.len()];
+            for ((sv, bv), (&dyv, &xh)) in sc_chunk
+                .iter_mut()
+                .zip(sb_chunk.iter_mut())
+                .zip(dyrow.iter().zip(xrow))
+            {
+                *sv += dyv * xh;
+                *bv += dyv;
+            }
+        }
+    });
     (dx, dscale, dbias)
 }
 
 /// GELU (tanh approximation) forward; returns (y, tanh cache).
-fn gelu_fwd(x: &[f32]) -> (Vec<f32>, Vec<f32>) {
+pub fn gelu_fwd(x: &[f32]) -> (Vec<f32>, Vec<f32>) {
     let c0 = (2.0f32 / std::f32::consts::PI).sqrt();
     let mut y = vec![0.0f32; x.len()];
     let mut t = vec![0.0f32; x.len()];
-    for i in 0..x.len() {
-        let v = x[i];
-        let u = c0 * (v + 0.044715 * v * v * v);
-        let th = u.tanh();
-        t[i] = th;
-        y[i] = 0.5 * v * (1.0 + th);
-    }
+    par::par_rows2(&mut y, &mut t, x.len(), x.len() * 16, |e0, yc, tc| {
+        let xs = &x[e0..e0 + yc.len()];
+        for ((yv, tv), &v) in yc.iter_mut().zip(tc.iter_mut()).zip(xs) {
+            let u = c0 * (v + 0.044715 * v * v * v);
+            let th = u.tanh();
+            *tv = th;
+            *yv = 0.5 * v * (1.0 + th);
+        }
+    });
     (y, t)
 }
 
 /// GELU backward: dy -> dx, given the input x and the tanh cache.
-fn gelu_bwd(dy: &[f32], x: &[f32], t: &[f32]) -> Vec<f32> {
+pub fn gelu_bwd(dy: &[f32], x: &[f32], t: &[f32]) -> Vec<f32> {
     let c0 = (2.0f32 / std::f32::consts::PI).sqrt();
     let mut dx = vec![0.0f32; x.len()];
-    for i in 0..x.len() {
-        let v = x[i];
-        let th = t[i];
-        let du = c0 * (1.0 + 3.0 * 0.044715 * v * v);
-        dx[i] = dy[i] * (0.5 * (1.0 + th) + 0.5 * v * (1.0 - th * th) * du);
-    }
+    par::par_rows(&mut dx, x.len(), x.len() * 8, |e0, chunk| {
+        for (i, dv) in chunk.iter_mut().enumerate() {
+            let v = x[e0 + i];
+            let th = t[e0 + i];
+            let du = c0 * (1.0 + 3.0 * 0.044715 * v * v);
+            *dv = dy[e0 + i] * (0.5 * (1.0 + th) + 0.5 * v * (1.0 - th * th) * du);
+        }
+    });
     dx
 }
 
@@ -457,41 +581,50 @@ impl TransformerModel {
             let qkv = matmul(&ln1, p(w, segs, &format!("layer{li}.qkv")), bs, d, 3 * d);
             let mut prob = vec![0.0f32; b * hn * s * s];
             let mut o = vec![0.0f32; bs * d];
-            for bb in 0..b {
-                for h in 0..hn {
-                    for qi in 0..s {
-                        let qoff = (bb * s + qi) * 3 * d + h * hd;
-                        let mut row = vec![0.0f32; qi + 1];
-                        let mut mx = f32::NEG_INFINITY;
-                        for (ki, rv) in row.iter_mut().enumerate() {
-                            let koff = (bb * s + ki) * 3 * d + d + h * hd;
-                            let mut dot = 0.0f32;
-                            for e in 0..hd {
-                                dot += qkv[qoff + e] * qkv[koff + e];
+            // Batch-parallel: every write for batch element bb lands in
+            // bb's own prob/o rows, and the per-(head, query) math is
+            // untouched, so the partitioning cannot change results. The
+            // score scratch is one allocation per chunk, not per query.
+            let aw = b * hn * s * s * hd * 2;
+            par::par_rows2(&mut prob, &mut o, b, aw, |b0, pchunk, ochunk| {
+                let mut sc = vec![0.0f32; s];
+                let pb = pchunk.chunks_exact_mut(hn * s * s);
+                for (bi, (pbb, obb)) in pb.zip(ochunk.chunks_exact_mut(s * d)).enumerate() {
+                    let bb = b0 + bi;
+                    for h in 0..hn {
+                        for qi in 0..s {
+                            let qoff = (bb * s + qi) * 3 * d + h * hd;
+                            let q = &qkv[qoff..qoff + hd];
+                            let row = &mut sc[..qi + 1];
+                            let mut mx = f32::NEG_INFINITY;
+                            for (ki, rv) in row.iter_mut().enumerate() {
+                                let koff = (bb * s + ki) * 3 * d + d + h * hd;
+                                *rv = par::dot_lanes(q, &qkv[koff..koff + hd]) * inv;
+                                mx = mx.max(*rv);
                             }
-                            *rv = dot * inv;
-                            mx = mx.max(*rv);
-                        }
-                        let mut z = 0.0f32;
-                        for rv in row.iter_mut() {
-                            *rv = (*rv - mx).exp();
-                            z += *rv;
-                        }
-                        let pr = &mut prob[((bb * hn + h) * s + qi) * s..][..s];
-                        for (ki, rv) in row.iter().enumerate() {
-                            pr[ki] = rv / z;
-                        }
-                        let ooff = (bb * s + qi) * d + h * hd;
-                        for e in 0..hd {
-                            let mut acc = 0.0f32;
-                            for (ki, pv) in pr[..=qi].iter().enumerate() {
-                                acc += pv * qkv[(bb * s + ki) * 3 * d + 2 * d + h * hd + e];
+                            let mut z = 0.0f32;
+                            for rv in row.iter_mut() {
+                                *rv = (*rv - mx).exp();
+                                z += *rv;
                             }
-                            o[ooff + e] = acc;
+                            let pr = &mut pbb[(h * s + qi) * s..][..s];
+                            for (ki, rv) in row.iter().enumerate() {
+                                pr[ki] = rv / z;
+                            }
+                            // o-row accumulation as an axpy over ki: per
+                            // element e the additions stay in ascending
+                            // ki, matching the scalar dot formulation.
+                            let orow = &mut obb[qi * d + h * hd..qi * d + h * hd + hd];
+                            for (ki, &pv) in pr[..=qi].iter().enumerate() {
+                                let voff = (bb * s + ki) * 3 * d + 2 * d + h * hd;
+                                for (ov, &vv) in orow.iter_mut().zip(&qkv[voff..voff + hd]) {
+                                    *ov += pv * vv;
+                                }
+                            }
                         }
                     }
                 }
-            }
+            });
             let attn = matmul(&o, p(w, segs, &format!("layer{li}.attn_out")), bs, d, d);
             let mut x1 = x;
             for j in 0..bs * d {
@@ -533,20 +666,8 @@ impl TransformerModel {
         }
         let (xf, xhat_f, rstd_f) =
             ln_fwd(&x, p(w, segs, "lnf.scale"), p(w, segs, "lnf.bias"), bs, d);
-        // Tied head: logits = xf @ embed^T.
-        let mut logits = vec![0.0f32; bs * v];
-        for i in 0..bs {
-            let xrow = &xf[i * d..(i + 1) * d];
-            let lrow = &mut logits[i * v..(i + 1) * v];
-            for (t, lv) in lrow.iter_mut().enumerate() {
-                let erow = &embed[t * d..(t + 1) * d];
-                let mut dot = 0.0f32;
-                for dd in 0..d {
-                    dot += xrow[dd] * erow[dd];
-                }
-                *lv = dot;
-            }
-        }
+        // Tied head: logits = xf @ embed^T — the shared NT kernel.
+        let logits = matmul_nt(&xf, embed, bs, d, v);
         TfForward { layers, xf, xhat_f, rstd_f, logits }
     }
 
@@ -574,24 +695,11 @@ impl TransformerModel {
 
         let mut g = vec![0.0f32; segs.total_size()];
 
-        // Tied head: g_embed += dl^T @ xf; dxf = dl @ embed.
-        let mut g_embed = vec![0.0f32; v * d];
-        let mut dxf = vec![0.0f32; bs * d];
-        for i in 0..bs {
-            let dlrow = &dl[i * v..(i + 1) * v];
-            let xrow = &fwd.xf[i * d..(i + 1) * d];
-            let dxrow = &mut dxf[i * d..(i + 1) * d];
-            for (t, &a) in dlrow.iter().enumerate() {
-                if a != 0.0 {
-                    let erow = &embed[t * d..(t + 1) * d];
-                    let grow = &mut g_embed[t * d..(t + 1) * d];
-                    for dd in 0..d {
-                        grow[dd] += a * xrow[dd];
-                        dxrow[dd] += a * erow[dd];
-                    }
-                }
-            }
-        }
+        // Tied head: g_embed += dl^T @ xf; dxf = dl @ embed. Both are
+        // the shared kernels, whose per-element accumulation order (and
+        // zero-skip) matches the fused loop they replace.
+        let mut g_embed = matmul_tn(&dl, &fwd.xf, bs, v, d);
+        let dxf = matmul(&dl, embed, bs, v, d);
         let (mut dx, dsc, dbi) = ln_bwd(
             &dxf,
             p(w, segs, "lnf.scale"),
@@ -637,49 +745,56 @@ impl TransformerModel {
                 &format!("layer{li}.attn_out"),
                 &matmul_tn(&c.o, &dx1, bs, d, d),
             );
-            // Attention core: do_ -> dqkv.
+            // Attention core: do_ -> dqkv. Batch-parallel like the
+            // forward — every dqkv write for batch element bb stays in
+            // bb's own rows, so partitioning cannot race or reorder.
             let mut dqkv = vec![0.0f32; bs * 3 * d];
-            for bb in 0..b {
-                for h in 0..hn {
-                    for qi in 0..s {
-                        let pr = &c.prob[((bb * hn + h) * s + qi) * s..][..s];
-                        let dorow = &do_[(bb * s + qi) * d + h * hd..][..hd];
-                        // dprob and sum(dprob * prob) over the causal range.
-                        let mut dp = vec![0.0f32; qi + 1];
-                        let mut sum_dp_p = 0.0f32;
-                        for (ki, dpv) in dp.iter_mut().enumerate() {
-                            let voff = (bb * s + ki) * 3 * d + 2 * d + h * hd;
-                            let mut acc = 0.0f32;
-                            for e in 0..hd {
-                                acc += dorow[e] * c.qkv[voff + e];
+            let aw = b * hn * s * s * hd * 4;
+            par::par_rows(&mut dqkv, b, aw, |b0, chunk| {
+                let mut dps = vec![0.0f32; s];
+                for (bi, dqb) in chunk.chunks_exact_mut(s * 3 * d).enumerate() {
+                    let bb = b0 + bi;
+                    for h in 0..hn {
+                        for qi in 0..s {
+                            let pr = &c.prob[((bb * hn + h) * s + qi) * s..][..s];
+                            let dorow = &do_[(bb * s + qi) * d + h * hd..][..hd];
+                            // dprob and sum(dprob * prob) over the causal range.
+                            let dp = &mut dps[..qi + 1];
+                            let mut sum_dp_p = 0.0f32;
+                            for (ki, dpv) in dp.iter_mut().enumerate() {
+                                let voff = (bb * s + ki) * 3 * d + 2 * d + h * hd;
+                                let acc = par::dot_lanes(dorow, &c.qkv[voff..voff + hd]);
+                                *dpv = acc;
+                                sum_dp_p += acc * pr[ki];
                             }
-                            *dpv = acc;
-                            sum_dp_p += acc * pr[ki];
-                        }
-                        for ki in 0..=qi {
-                            // dv[ki] += prob * do
-                            let pv = pr[ki];
-                            if pv != 0.0 {
-                                let dvoff = (bb * s + ki) * 3 * d + 2 * d + h * hd;
-                                for e in 0..hd {
-                                    dqkv[dvoff + e] += pv * dorow[e];
+                            for ki in 0..=qi {
+                                // dv[ki] += prob * do
+                                let pv = pr[ki];
+                                if pv != 0.0 {
+                                    let dvrel = ki * 3 * d + 2 * d + h * hd;
+                                    let dvrow = &mut dqb[dvrel..dvrel + hd];
+                                    for (dv, &dov) in dvrow.iter_mut().zip(dorow) {
+                                        *dv += pv * dov;
+                                    }
                                 }
-                            }
-                            // dscore (softmax backward), with the 1/sqrt(hd)
-                            // factor folded in once for both dq and dk.
-                            let ds = pv * (dp[ki] - sum_dp_p) * inv;
-                            if ds != 0.0 {
-                                let qoff = (bb * s + qi) * 3 * d + h * hd;
-                                let koff = (bb * s + ki) * 3 * d + d + h * hd;
-                                for e in 0..hd {
-                                    dqkv[qoff + e] += ds * c.qkv[koff + e];
-                                    dqkv[koff + e] += ds * c.qkv[qoff + e];
+                                // dscore (softmax backward), with the 1/sqrt(hd)
+                                // factor folded in once for both dq and dk.
+                                let ds = pv * (dp[ki] - sum_dp_p) * inv;
+                                if ds != 0.0 {
+                                    let qoff = (bb * s + qi) * 3 * d + h * hd;
+                                    let koff = (bb * s + ki) * 3 * d + d + h * hd;
+                                    let qrel = qi * 3 * d + h * hd;
+                                    let krel = ki * 3 * d + d + h * hd;
+                                    for e in 0..hd {
+                                        dqb[qrel + e] += ds * c.qkv[koff + e];
+                                        dqb[krel + e] += ds * c.qkv[qoff + e];
+                                    }
                                 }
                             }
                         }
                     }
                 }
-            }
+            });
             add_grad(
                 &mut g,
                 segs,

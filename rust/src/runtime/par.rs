@@ -1,0 +1,217 @@
+//! Deterministic thread-parallelism for the native compute plane.
+//!
+//! Every kernel in `runtime::native` partitions its *output* across
+//! threads in fixed-size contiguous row blocks and keeps the summation
+//! order of each output element a pure function of the problem size.
+//! Consequence: results are bitwise identical at any thread count, so
+//! the cross-plane equivalence properties (threaded trainer vs netsim,
+//! MPI vs single-process) hold regardless of the `threads` knob, and the
+//! knob is a pure performance control.
+//!
+//! The building blocks here are:
+//!
+//! - a process-global thread-count knob ([`set_threads`] / [`threads`]),
+//!   0 = auto (all available parallelism), 1 = scalar path;
+//! - a work threshold ([`set_min_work`]) below which kernels stay on the
+//!   calling thread — spawning costs tens of microseconds, so test-sized
+//!   problems must not fan out (property tests lower the threshold to
+//!   force the parallel path at tiny shapes);
+//! - [`par_rows`] / [`par_rows2`] / [`par_rows3`]: run a row-range
+//!   closure over co-partitioned output slices via `std::thread::scope`
+//!   (no dependencies; rayon is not in the image);
+//! - fixed-lane reduction helpers ([`dot_lanes`], [`sum_lanes`],
+//!   [`reduce_lanes`]) whose accumulation order depends only on the
+//!   input length, never on threading — the autovectorizable replacement
+//!   for a single sequential `f32` accumulator.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Default work threshold (inner-loop op count) below which kernels run
+/// on the calling thread. ~2M f32 ops is a few hundred microseconds of
+/// scalar work — an order of magnitude above thread-spawn cost.
+pub const DEFAULT_MIN_WORK: usize = 1 << 21;
+
+static THREADS: AtomicUsize = AtomicUsize::new(0);
+static MIN_WORK: AtomicUsize = AtomicUsize::new(DEFAULT_MIN_WORK);
+
+/// Set the compute-plane thread count. 0 = auto (available parallelism),
+/// 1 = force the scalar path. Results are bitwise independent of this
+/// knob, so flipping it mid-run is harmless.
+pub fn set_threads(n: usize) {
+    THREADS.store(n, Ordering::Relaxed);
+}
+
+/// Effective thread count after resolving 0 = auto.
+pub fn threads() -> usize {
+    match THREADS.load(Ordering::Relaxed) {
+        0 => std::thread::available_parallelism().map_or(1, |n| n.get()),
+        n => n,
+    }
+}
+
+/// Test hook: override the parallelism work threshold so property tests
+/// can drive the multi-threaded path at test-sized shapes. Restore with
+/// [`DEFAULT_MIN_WORK`].
+pub fn set_min_work(n: usize) {
+    MIN_WORK.store(n, Ordering::Relaxed);
+}
+
+fn min_work() -> usize {
+    MIN_WORK.load(Ordering::Relaxed)
+}
+
+/// Run `f` over `rows` rows of three co-partitioned output slices.
+///
+/// Each slice is split into the same contiguous row ranges (widths
+/// derived as `len / rows`; empty slices are allowed) and `f(row0,
+/// chunk_a, chunk_b, chunk_c)` runs once per range. Below the work
+/// threshold — or with one thread — this is a single `f(0, a, b, c)`
+/// call, so `f` must be insensitive to how rows are grouped into calls
+/// (all our kernels are: per-row work is independent, and any in-call
+/// tiling is itself per-row).
+pub fn par_rows3<A, B, C, F>(a: &mut [A], b: &mut [B], c: &mut [C], rows: usize, work: usize, f: F)
+where
+    A: Send,
+    B: Send,
+    C: Send,
+    F: Fn(usize, &mut [A], &mut [B], &mut [C]) + Sync,
+{
+    if rows == 0 {
+        return;
+    }
+    debug_assert_eq!(a.len() % rows, 0);
+    debug_assert_eq!(b.len() % rows, 0);
+    debug_assert_eq!(c.len() % rows, 0);
+    let (wa, wb, wc) = (a.len() / rows, b.len() / rows, c.len() / rows);
+    let t = threads().min(rows);
+    if t <= 1 || work < min_work() {
+        f(0, a, b, c);
+        return;
+    }
+    let per = rows.div_ceil(t);
+    std::thread::scope(|scope| {
+        let f = &f;
+        let (mut ra, mut rb, mut rc) = (a, b, c);
+        let mut row = 0;
+        while row < rows {
+            let take = per.min(rows - row);
+            let (ha, ta) = std::mem::take(&mut ra).split_at_mut(take * wa);
+            let (hb, tb) = std::mem::take(&mut rb).split_at_mut(take * wb);
+            let (hc, tc) = std::mem::take(&mut rc).split_at_mut(take * wc);
+            (ra, rb, rc) = (ta, tb, tc);
+            scope.spawn(move || f(row, ha, hb, hc));
+            row += take;
+        }
+    });
+}
+
+/// Two-slice variant of [`par_rows3`].
+pub fn par_rows2<A, B, F>(a: &mut [A], b: &mut [B], rows: usize, work: usize, f: F)
+where
+    A: Send,
+    B: Send,
+    F: Fn(usize, &mut [A], &mut [B]) + Sync,
+{
+    par_rows3::<A, B, (), _>(a, b, &mut [], rows, work, |r, ca, cb, _| f(r, ca, cb));
+}
+
+/// Single-slice variant of [`par_rows3`].
+pub fn par_rows<A, F>(a: &mut [A], rows: usize, work: usize, f: F)
+where
+    A: Send,
+    F: Fn(usize, &mut [A]) + Sync,
+{
+    par_rows3::<A, (), (), _>(a, &mut [], &mut [], rows, work, |r, ca, _, _| f(r, ca));
+}
+
+/// Lane count for the fixed-order chunked accumulators. Matches one
+/// 256-bit vector of f32 — wide enough for the compiler to vectorize,
+/// fixed so the reduction order never depends on threading.
+pub const LANES: usize = 8;
+
+/// Fold the lane accumulators in a fixed pairwise tree. The order is a
+/// constant of this function — part of the determinism contract.
+pub fn reduce_lanes(acc: &[f32; LANES]) -> f32 {
+    let even = (acc[0] + acc[4]) + (acc[2] + acc[6]);
+    let odd = (acc[1] + acc[5]) + (acc[3] + acc[7]);
+    even + odd
+}
+
+/// Dot product with [`LANES`] parallel accumulators: chunk `i` of 8
+/// elements adds into lanes 0..8, the remainder accumulates
+/// sequentially, and [`reduce_lanes`] folds the lanes. The summation
+/// order depends only on the slice length.
+pub fn dot_lanes(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; LANES];
+    let mut ia = a.chunks_exact(LANES);
+    let mut ib = b.chunks_exact(LANES);
+    for (ca, cb) in (&mut ia).zip(&mut ib) {
+        for ((s, &x), &y) in acc.iter_mut().zip(ca).zip(cb) {
+            *s += x * y;
+        }
+    }
+    let mut tail = 0.0f32;
+    for (&x, &y) in ia.remainder().iter().zip(ib.remainder()) {
+        tail += x * y;
+    }
+    reduce_lanes(&acc) + tail
+}
+
+/// Sum with [`LANES`] parallel accumulators; same order contract as
+/// [`dot_lanes`].
+pub fn sum_lanes(a: &[f32]) -> f32 {
+    let mut acc = [0.0f32; LANES];
+    let mut it = a.chunks_exact(LANES);
+    for ca in &mut it {
+        for (s, &x) in acc.iter_mut().zip(ca) {
+            *s += x;
+        }
+    }
+    let mut tail = 0.0f32;
+    for &x in it.remainder() {
+        tail += x;
+    }
+    reduce_lanes(&acc) + tail
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_rows_covers_all_rows_once() {
+        // 7 rows, width 3: every element written exactly once whatever
+        // the partitioning.
+        let mut out = vec![0.0f32; 21];
+        set_min_work(0);
+        par_rows(&mut out, 7, usize::MAX, |r0, chunk| {
+            for (i, row) in chunk.chunks_exact_mut(3).enumerate() {
+                for (j, v) in row.iter_mut().enumerate() {
+                    *v += ((r0 + i) * 3 + j) as f32 + 1.0;
+                }
+            }
+        });
+        set_min_work(DEFAULT_MIN_WORK);
+        let want: Vec<f32> = (1..=21).map(|v| v as f32).collect();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn lane_helpers_match_exact_integer_sums() {
+        // Integer-valued f32s are exact under any summation order.
+        let a: Vec<f32> = (1..=19).map(|v| v as f32).collect();
+        let b = vec![2.0f32; 19];
+        assert_eq!(sum_lanes(&a), 190.0);
+        assert_eq!(dot_lanes(&a, &b), 380.0);
+    }
+
+    #[test]
+    fn threads_auto_resolves_nonzero() {
+        set_threads(0);
+        assert!(threads() >= 1);
+        set_threads(3);
+        assert_eq!(threads(), 3);
+        set_threads(0);
+    }
+}

@@ -384,6 +384,9 @@ pub fn simulate_with_weights(
     cfg: &ExperimentConfig,
     artifacts_dir: &Path,
 ) -> Result<(RunResult, Vec<f32>)> {
+    // Same knob as the threaded plane; bitwise-invisible by the kernel
+    // determinism contract.
+    crate::runtime::par::set_threads(cfg.threads);
     let rt = Runtime::cpu()?;
     let model = Model::load(&rt, artifacts_dir, &cfg.variant)?;
     let meta: ModelMeta = model.meta.clone();

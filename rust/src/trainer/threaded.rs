@@ -55,6 +55,9 @@ pub fn train_with_weights(
     cfg: &ExperimentConfig,
     artifacts_dir: PathBuf,
 ) -> Result<(RunResult, Vec<f32>)> {
+    // Kernel results are bitwise independent of the thread count, so
+    // applying the knob here cannot perturb the cross-plane properties.
+    crate::runtime::par::set_threads(cfg.threads);
     let service = ModelService::spawn(artifacts_dir, &cfg.variant)?;
     let mut spec = JobSpec::from_config(cfg);
     spec.fault = cfg.fault_plan()?;

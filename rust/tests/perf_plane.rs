@@ -1,0 +1,227 @@
+//! Perf-plane property suite (ISSUE 7): the parallel/tiled kernels must
+//! be *bitwise* equal to the scalar reference at every shape (the
+//! determinism contract that keeps the cross-plane equivalence
+//! properties independent of the `threads` knob), and the zero-copy
+//! fused arena path must be bitwise equal to the allocating copy path
+//! for every registered codec while doing zero allocations per push
+//! once warm.
+
+use mxnet_mpi::collectives::{
+    fused_allreduce_compressed, fused_allreduce_compressed_with_arena, AlgoKind, FusionArena,
+};
+use mxnet_mpi::compress::{Codec, EfState};
+use mxnet_mpi::engine::Engine;
+use mxnet_mpi::kvstore::{KvType, KvWorker};
+use mxnet_mpi::mpisim::{Comm, World};
+use mxnet_mpi::netsim::CostParams;
+use mxnet_mpi::runtime::{native, par};
+use mxnet_mpi::util::Rng;
+use std::sync::Arc;
+use std::thread;
+
+fn run_world<F, R>(size: usize, f: F) -> Vec<R>
+where
+    F: Fn(Comm) -> R + Clone + Send + 'static,
+    R: Send + 'static,
+{
+    let comms = World::create(size);
+    let hs: Vec<_> = comms
+        .into_iter()
+        .map(|c| {
+            let f = f.clone();
+            thread::spawn(move || f(c))
+        })
+        .collect();
+    hs.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+/// Non-integer payload: bitwise equality below is meaningful only if
+/// reordered f32 summation would actually produce different bits.
+fn payload(seed: u64, len: usize) -> Vec<f32> {
+    let mut r = Rng::new(seed.wrapping_mul(0x9E37_79B9) | 1);
+    (0..len).map(|_| r.normal() as f32 * 0.7).collect()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Run `f` once on the scalar path and once with the parallel path
+/// forced (4 threads, zero work threshold), and require bitwise
+/// identity. Restores the global knobs afterwards; concurrent tests in
+/// this binary observing intermediate knob values stay correct because
+/// the knobs are bitwise-invisible — which is exactly the property under
+/// test.
+fn scalar_vs_parallel<T: Fn() -> Vec<f32>>(label: &str, f: T) {
+    par::set_threads(1);
+    let scalar = f();
+    par::set_min_work(0);
+    par::set_threads(4);
+    let parallel = f();
+    par::set_threads(0);
+    par::set_min_work(par::DEFAULT_MIN_WORK);
+    assert_eq!(bits(&scalar), bits(&parallel), "{label}: parallel != scalar");
+}
+
+#[test]
+fn parallel_kernels_match_scalar_bitwise_odd_shapes() {
+    let shapes = [1usize, 3, 17, 64, 130];
+    for &m in &shapes {
+        for &k in &shapes {
+            for &n in &shapes {
+                let x = payload(m as u64 * 31 + k as u64, m * k);
+                let w = payload(k as u64 * 37 + n as u64, k * n);
+                let dy = payload(m as u64 * 41 + n as u64, m * n);
+                let lbl = format!("m={m} k={k} n={n}");
+                scalar_vs_parallel(&format!("matmul {lbl}"), || {
+                    native::matmul(&x, &w, m, k, n)
+                });
+                scalar_vs_parallel(&format!("matmul_tn {lbl}"), || {
+                    native::matmul_tn(&x, &dy, m, k, n)
+                });
+                scalar_vs_parallel(&format!("matmul_nt {lbl}"), || {
+                    native::matmul_nt(&dy, &w, m, n, k)
+                });
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_rowwise_kernels_match_scalar_bitwise() {
+    for &rows in &[1usize, 3, 17, 130] {
+        for &d in &[1usize, 3, 17, 64, 130] {
+            let x = payload(rows as u64 * 13 + d as u64, rows * d);
+            let dy = payload(rows as u64 * 17 + d as u64, rows * d);
+            let scale = payload(d as u64 + 5, d);
+            let bias = payload(d as u64 + 9, d);
+            let lbl = format!("rows={rows} d={d}");
+
+            scalar_vs_parallel(&format!("ln_fwd {lbl}"), || {
+                let (y, xhat, rstd) = native::ln_fwd(&x, &scale, &bias, rows, d);
+                [y, xhat, rstd].concat()
+            });
+            let (_, xhat, rstd) = native::ln_fwd(&x, &scale, &bias, rows, d);
+            scalar_vs_parallel(&format!("ln_bwd {lbl}"), || {
+                let (dx, ds, db) = native::ln_bwd(&dy, &scale, &xhat, &rstd, rows, d);
+                [dx, ds, db].concat()
+            });
+            scalar_vs_parallel(&format!("col_sum {lbl}"), || native::col_sum(&dy, rows, d));
+            scalar_vs_parallel(&format!("add_bias {lbl}"), || {
+                let mut y = x.clone();
+                native::add_bias(&mut y, &bias, rows, d);
+                y
+            });
+            scalar_vs_parallel(&format!("gelu {lbl}"), || {
+                let (y, t) = native::gelu_fwd(&x);
+                let dx = native::gelu_bwd(&dy, &x, &t);
+                [y, t, dx].concat()
+            });
+            let labels: Vec<i32> = (0..rows).map(|i| (i % d) as i32).collect();
+            scalar_vs_parallel(&format!("softmax_xent {lbl}"), || {
+                let (loss, dl, correct) = native::softmax_xent(&x, &labels, rows, d);
+                let mut out = dl;
+                out.push(loss);
+                out.push(correct as f32);
+                out
+            });
+        }
+    }
+}
+
+#[test]
+fn fused_arena_path_matches_copy_path_for_every_codec() {
+    for codec_id in Codec::all() {
+        let params = CostParams::testbed1();
+        let out = run_world(3, move |mut c| {
+            let codec = codec_id.build(0.25);
+            let mut ef_arena = EfState::new();
+            let mut ef_copy = EfState::new();
+            let mut arena = FusionArena::new();
+            let lens = [5usize, 9, 2, 33, 1];
+            let ef_keys: Vec<u64> = (0..lens.len() as u64).collect();
+            let mut grows_after_warmup = 0;
+            for iter in 0..3u64 {
+                let mut bufs_a: Vec<Vec<f32>> = lens
+                    .iter()
+                    .enumerate()
+                    .map(|(k, &l)| payload(iter * 1000 + k as u64 * 10 + c.rank() as u64, l))
+                    .collect();
+                let mut bufs_b = bufs_a.clone();
+                fused_allreduce_compressed_with_arena(
+                    AlgoKind::Ring,
+                    &mut c,
+                    &mut bufs_a,
+                    &ef_keys,
+                    256,
+                    &*codec,
+                    &mut ef_arena,
+                    2,
+                    2,
+                    &params,
+                    &mut arena,
+                );
+                fused_allreduce_compressed(
+                    AlgoKind::Ring,
+                    &mut c,
+                    &mut bufs_b,
+                    &ef_keys,
+                    256,
+                    &*codec,
+                    &mut ef_copy,
+                    2,
+                    2,
+                    &params,
+                );
+                for (k, (a, b)) in bufs_a.iter().zip(&bufs_b).enumerate() {
+                    assert_eq!(
+                        bits(a),
+                        bits(b),
+                        "codec {} iter {iter} key {k}: arena path != copy path",
+                        codec.name()
+                    );
+                }
+                if iter == 0 {
+                    grows_after_warmup = arena.grows();
+                }
+            }
+            (arena.grows(), grows_after_warmup)
+        });
+        for (final_grows, warm_grows) in out {
+            assert_eq!(
+                final_grows, warm_grows,
+                "codec {}: arena grew after warmup",
+                codec_id.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn pushpull_fused_reuses_arena() {
+    // The CI allocation gate: after the first fused push sizes the
+    // arena, later pushes of the same key layout must not grow it —
+    // zero gather allocations per push.
+    let outs = run_world(3, |comm| {
+        let engine = Arc::new(Engine::new(1));
+        let mut kv = KvWorker::create(KvType::SyncMpi, engine, Some(comm), None);
+        kv.algo = AlgoKind::Ring;
+        kv.fusion_bytes = 1 << 20;
+        let push = |kv: &KvWorker, round: usize| {
+            let keyed: Vec<(usize, Vec<f32>)> = (0..6)
+                .map(|k| (k, vec![(round + k + 1) as f32; 7 + k]))
+                .collect();
+            kv.pushpull_fused(keyed).wait()
+        };
+        push(&kv, 0);
+        let warm = kv.fusion_arena_grows();
+        for round in 1..6 {
+            push(&kv, round);
+        }
+        (warm, kv.fusion_arena_grows())
+    });
+    for (warm, after) in outs {
+        assert!(warm >= 1, "first push never sized the arena");
+        assert_eq!(warm, after, "fused path allocated per push");
+    }
+}
