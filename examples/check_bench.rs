@@ -1,9 +1,14 @@
 //! Schema validator for the `BENCH_*.json` trajectory files emitted by
-//! `cargo bench --bench kernels` (schema `mxnet-mpi-bench/v1`). CI runs
-//! this against the freshly-regenerated `BENCH_7.json` and fails the
-//! build on any missing section, wrong type, or empty measurement list.
+//! `cargo bench --bench kernels`. Accepts schema `mxnet-mpi-bench/v1`
+//! (through `BENCH_7.json`) and `mxnet-mpi-bench/v2` (`BENCH_8.json`
+//! onward: v1 plus the `two_tier` device-tier section). CI runs this
+//! against the freshly-regenerated file and fails the build on any
+//! missing section, wrong type, or empty measurement list — and, for v2,
+//! on any `two_tier` row where the inter-node wire bytes are not
+//! *exactly* 1/k of the flat schedule's (the ISSUE-8 acceptance gate,
+//! checked in integer arithmetic).
 //!
-//!     cargo run --release --example check_bench -- ../BENCH_7.json
+//!     cargo run --release --example check_bench -- ../BENCH_8.json
 
 use anyhow::{bail, ensure, Context, Result};
 use mxnet_mpi::jsonlite::{parse_file, Value};
@@ -42,12 +47,57 @@ fn req_rows(doc: &Value, key: &str, strs: &[&str], nums: &[&str]) -> Result<()> 
     Ok(())
 }
 
-fn check(path: &Path) -> Result<()> {
+/// The v2 `two_tier` section: per-k flat-vs-two-tier epoch seconds and
+/// per-tier wire bytes, with the exact-integer 1/k ratio gate.
+fn check_two_tier(doc: &Value) -> Result<()> {
+    req_rows(
+        doc,
+        "two_tier",
+        &[],
+        &[
+            "devices",
+            "flat_epoch_s",
+            "two_tier_epoch_s",
+            "flat_intra_wire_bytes",
+            "flat_inter_wire_bytes",
+            "two_tier_intra_wire_bytes",
+            "two_tier_inter_wire_bytes",
+        ],
+    )?;
+    let rows = doc.req("two_tier")?.as_arr().expect("checked by req_rows");
+    for (i, row) in rows.iter().enumerate() {
+        let k = req_num(row, "devices")? as u64;
+        ensure!(k >= 1, "two_tier[{i}].devices must be >= 1");
+        // Wire bytes are integer-exact by construction; read them back as
+        // u64 so the 1/k gate tolerates no float fuzz.
+        let flat_inter = req_num(row, "flat_inter_wire_bytes")? as u64;
+        let tt_inter = req_num(row, "two_tier_inter_wire_bytes")? as u64;
+        ensure!(
+            tt_inter * k == flat_inter,
+            "two_tier[{i}]: inter wire bytes not exactly 1/k of flat \
+             (k={k}, two-tier {tt_inter} * k != flat {flat_inter})"
+        );
+        let flat_intra = req_num(row, "flat_intra_wire_bytes")? as u64;
+        ensure!(flat_intra == 0, "two_tier[{i}]: flat moves no intra-tier bytes");
+        if k >= 2 {
+            let flat_s = req_num(row, "flat_epoch_s")?;
+            let tt_s = req_num(row, "two_tier_epoch_s")?;
+            ensure!(
+                tt_s < flat_s,
+                "two_tier[{i}]: modeled two-tier epoch {tt_s} not below flat {flat_s} at k={k}"
+            );
+        }
+    }
+    Ok(())
+}
+
+fn check(path: &Path) -> Result<&'static str> {
     let doc = parse_file(path).with_context(|| format!("reading {}", path.display()))?;
-    ensure!(
-        req_str(&doc, "schema")? == "mxnet-mpi-bench/v1",
-        "unknown schema (want mxnet-mpi-bench/v1)"
-    );
+    let schema = match req_str(&doc, "schema")? {
+        "mxnet-mpi-bench/v1" => "mxnet-mpi-bench/v1",
+        "mxnet-mpi-bench/v2" => "mxnet-mpi-bench/v2",
+        other => bail!("unknown schema {other:?} (want mxnet-mpi-bench/v1 or /v2)"),
+    };
     ensure!(req_num(&doc, "issue")? >= 1.0, "issue must be a positive PR number");
     let mode = req_str(&doc, "mode")?;
     ensure!(mode == "full" || mode == "smoke", "mode must be full or smoke, got {mode:?}");
@@ -62,7 +112,10 @@ fn check(path: &Path) -> Result<()> {
     )?;
     req_rows(&doc, "allreduce_us", &["schedule"], &["bytes", "us"])?;
     req_rows(&doc, "codec_us", &["codec"], &["n", "encode_us", "decode_us"])?;
-    Ok(())
+    if schema == "mxnet-mpi-bench/v2" {
+        check_two_tier(&doc)?;
+    }
+    Ok(schema)
 }
 
 fn main() -> Result<()> {
@@ -71,7 +124,7 @@ fn main() -> Result<()> {
         None => bail!("usage: check_bench <BENCH_N.json>"),
     };
     let path = Path::new(&arg);
-    check(path)?;
-    println!("{}: ok (mxnet-mpi-bench/v1)", path.display());
+    let schema = check(path)?;
+    println!("{}: ok ({schema})", path.display());
     Ok(())
 }

@@ -1,0 +1,42 @@
+//! Two-tier device figure (ISSUE 8): modeled epoch time and per-tier
+//! wire bytes, flat vs two-tier reduction, as the per-node device count
+//! sweeps k ∈ {1, 2, 4, 8} over the strategy × codec matrix at
+//! transformer_tiny scale. The flat arms pay k-way NIC contention; the
+//! two-tier schedule reduces the k device buffers on the NVLink-class
+//! fabric first, so only 1/k of the flat inter-node bytes cross the NIC.
+//!
+//!     cargo run --release --example fig_twotier
+
+use mxnet_mpi::metrics::Table;
+use std::path::PathBuf;
+
+fn main() -> anyhow::Result<()> {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let rows = mxnet_mpi::figures::fig_twotier(Some(&root.join("results")))?;
+
+    let mut t = Table::new(&[
+        "strategy",
+        "codec",
+        "devices",
+        "flat epoch_s",
+        "two-tier epoch_s",
+        "speedup",
+        "intra B/node",
+        "inter B/node (flat -> two-tier)",
+    ]);
+    for r in &rows {
+        t.row(vec![
+            r.strategy.clone(),
+            r.codec.clone(),
+            r.devices.to_string(),
+            format!("{:.4}", r.flat_epoch_s),
+            format!("{:.4}", r.two_tier_epoch_s),
+            format!("{:.2}x", r.flat_epoch_s / r.two_tier_epoch_s),
+            r.two_tier_intra_bytes.to_string(),
+            format!("{} -> {}", r.flat_inter_bytes, r.two_tier_inter_bytes),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("CSV -> results/fig_twotier.csv");
+    Ok(())
+}

@@ -1,8 +1,11 @@
-//! Compute-plane kernel benchmarks (ISSUE 7): tiled/parallel kernels vs
-//! the seed scalar implementations, codec encode/decode, allreduce by
-//! schedule, and the modeled epoch/wire summary — emitted as
-//! `BENCH_7.json` at the repo root (schema `mxnet-mpi-bench/v1`,
-//! validated in CI by `examples/check_bench.rs`).
+//! Compute-plane kernel benchmarks (ISSUE 7) plus the ISSUE-8 device
+//! tier: tiled/parallel kernels vs the seed scalar implementations, codec
+//! encode/decode, allreduce by schedule (now including `two_tier`), the
+//! modeled epoch/wire summary, and the flat-vs-two-tier epoch and
+//! per-tier wire-byte table — emitted as `BENCH_8.json` at the repo root
+//! (schema `mxnet-mpi-bench/v2`, validated in CI by
+//! `examples/check_bench.rs`, which also gates on
+//! `inter_wire_bytes(two_tier, k) * k == inter_wire_bytes(flat)` exactly).
 //!
 //!     cargo bench --bench kernels               # full shapes, REPS=7
 //!     BENCH_SMOKE=1 cargo bench --bench kernels # CI short-iteration mode
@@ -380,6 +383,29 @@ fn modeled_sections() -> (Vec<Value>, Vec<Value>) {
     (epoch, wire)
 }
 
+/// The ISSUE-8 device-tier section: flat vs two-tier modeled epoch
+/// seconds and per-tier wire bytes per k, from the same model behind
+/// `fig_twotier` (the mpi-SGD/identity slice — the headline dense
+/// comparison the CI ratio gate checks).
+fn two_tier_section() -> Vec<Value> {
+    mxnet_mpi::figures::fig_twotier(None)
+        .expect("fig_twotier model")
+        .into_iter()
+        .filter(|r| r.strategy == "mpi-SGD" && r.codec == "identity")
+        .map(|r| {
+            Value::obj(vec![
+                ("devices", Value::num(r.devices as f64)),
+                ("flat_epoch_s", Value::num(r.flat_epoch_s)),
+                ("two_tier_epoch_s", Value::num(r.two_tier_epoch_s)),
+                ("flat_intra_wire_bytes", Value::num(r.flat_intra_bytes as f64)),
+                ("flat_inter_wire_bytes", Value::num(r.flat_inter_bytes as f64)),
+                ("two_tier_intra_wire_bytes", Value::num(r.two_tier_intra_bytes as f64)),
+                ("two_tier_inter_wire_bytes", Value::num(r.two_tier_inter_bytes as f64)),
+            ])
+        })
+        .collect()
+}
+
 fn main() {
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     mxnet_mpi::runtime::par::set_threads(0);
@@ -402,14 +428,40 @@ fn main() {
     let allreduce = bench_allreduce();
     let codecs = bench_codecs();
     let (epoch, wire) = modeled_sections();
+    let two_tier = two_tier_section();
+
+    let mut tt = Table::new(&[
+        "devices",
+        "flat epoch_s",
+        "two-tier epoch_s",
+        "intra B/node",
+        "inter B/node (flat -> two-tier)",
+    ]);
+    for row in &two_tier {
+        let get = |k: &str| row.get(k).and_then(Value::as_f64).unwrap_or(0.0);
+        tt.row(vec![
+            format!("{}", get("devices") as u64),
+            format!("{:.4}", get("flat_epoch_s")),
+            format!("{:.4}", get("two_tier_epoch_s")),
+            format!("{}", get("two_tier_intra_wire_bytes") as u64),
+            format!(
+                "{} -> {}",
+                get("flat_inter_wire_bytes") as u64,
+                get("two_tier_inter_wire_bytes") as u64
+            ),
+        ]);
+    }
+    println!("== two-tier device tier (mpi-SGD, identity) ==");
+    println!("{}", tt.render());
 
     let doc = Value::obj(vec![
-        ("schema", Value::str("mxnet-mpi-bench/v1")),
-        ("issue", Value::num(7.0)),
+        ("schema", Value::str("mxnet-mpi-bench/v2")),
+        ("issue", Value::num(8.0)),
         ("mode", Value::str(mode)),
         ("threads", Value::num(threads as f64)),
         ("epoch", Value::Arr(epoch)),
         ("wire_bytes", Value::Arr(wire)),
+        ("two_tier", Value::Arr(two_tier)),
         (
             "kernels_us",
             Value::Arr(
@@ -460,7 +512,7 @@ fn main() {
         ),
     ]);
 
-    let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_7.json");
-    std::fs::write(&path, doc.to_json_pretty() + "\n").expect("write BENCH_7.json");
+    let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_8.json");
+    std::fs::write(&path, doc.to_json_pretty() + "\n").expect("write BENCH_8.json");
     println!("wrote {}", path.display());
 }

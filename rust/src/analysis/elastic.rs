@@ -166,6 +166,7 @@ fn spec_for(workers: usize, clients: usize, plan: FaultPlan, cadence: u64) -> Jo
         fusion_bytes: 0,
         rings: 1,
         group: 2,
+        devices: 1,
         cost: CostParams::testbed1(),
         codec: Codec::identity(),
         topk_ratio: 0.25,

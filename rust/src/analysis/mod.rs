@@ -44,9 +44,9 @@ pub mod trace;
 use crate::collectives::{
     self, compressed_allreduce, fused_allreduce_compressed, fusion_buckets,
     halving_doubling_allreduce_pipelined, hierarchical_allreduce_pipelined,
-    multi_ring_allreduce_pipelined, pow2_floor, AlgoKind, HD_AG_TAG, HD_FOLD_TAG, HD_RS_TAG,
-    HIER_BCAST_TAG, HIER_GATHER_TAG, RING_AG_TAG, RING_RS_TAG, SUBSET_AG_TAG, SUBSET_RS_TAG,
-    TAG_SPACING,
+    multi_ring_allreduce_pipelined, pow2_floor, two_tier_allreduce_pipelined, AlgoKind,
+    DEV_BCAST_TAG, DEV_GATHER_TAG, HD_AG_TAG, HD_FOLD_TAG, HD_RS_TAG, HIER_BCAST_TAG,
+    HIER_GATHER_TAG, RING_AG_TAG, RING_RS_TAG, SUBSET_AG_TAG, SUBSET_RS_TAG, TAG_SPACING,
 };
 use crate::collectives::COMPRESS_TAG;
 use crate::compress::{Codec, EfState};
@@ -189,6 +189,10 @@ pub enum ScheduleId {
     HalvingDoubling,
     /// Two-level hierarchical: group gather → leader subset ring → bcast.
     Hierarchical { group: usize },
+    /// Two-tier device allreduce: ranks are device-ranks, `devices` per
+    /// node — intra-node gather onto the node leader, subset ring over
+    /// leaders, leader broadcast (DEV tag families).
+    TwoTier { devices: usize },
     /// Error-feedback compressed allgather-reduce (identity delegates to
     /// the dense ring, bitwise).
     Compressed { codec: Codec },
@@ -209,6 +213,9 @@ impl ScheduleId {
             ScheduleId::HalvingDoubling,
             ScheduleId::Hierarchical { group: 2 },
             ScheduleId::Hierarchical { group: 3 },
+            ScheduleId::TwoTier { devices: 2 },
+            ScheduleId::TwoTier { devices: 3 },
+            ScheduleId::TwoTier { devices: 4 },
         ];
         for codec in Codec::all() {
             out.push(ScheduleId::Compressed { codec });
@@ -222,6 +229,7 @@ impl ScheduleId {
             ScheduleId::Ring { rings } => format!("ring[x{rings}]"),
             ScheduleId::HalvingDoubling => "halving_doubling".to_string(),
             ScheduleId::Hierarchical { group } => format!("hierarchical[g{group}]"),
+            ScheduleId::TwoTier { devices } => format!("two_tier[k{devices}]"),
             ScheduleId::Compressed { codec } => format!("compressed[{}]", codec.name()),
             ScheduleId::FusedBuckets { fusion_bytes, codec } => {
                 format!("fused[{}B,{}]", fusion_bytes, codec.name())
@@ -263,6 +271,9 @@ impl ScheduleId {
             }
             ScheduleId::Hierarchical { group } => {
                 hierarchical_allreduce_pipelined(comm, &mut bufs[0], *group, chunks)
+            }
+            ScheduleId::TwoTier { devices } => {
+                two_tier_allreduce_pipelined(comm, &mut bufs[0], *devices, chunks)
             }
             ScheduleId::Compressed { codec } => {
                 let mut params = CostParams::testbed1();
@@ -333,6 +344,25 @@ impl ScheduleId {
                     Family { base: HIER_BCAST_TAG, budget: kh, name: "hier-bcast" },
                 ];
                 let leaders = p.div_ceil(g);
+                if leaders > 1 {
+                    let ks = clamp_model(chunks, leaders - 1);
+                    let budget = (leaders - 1) as u64 * ks;
+                    fams.push(Family { base: SUBSET_RS_TAG, budget, name: "subset-rs" });
+                    fams.push(Family { base: SUBSET_AG_TAG, budget, name: "subset-ag" });
+                }
+                fams
+            }
+            ScheduleId::TwoTier { devices } => {
+                // Same step structure as `Hierarchical` (one shared state
+                // machine), modeled independently here with the device
+                // clique in place of the host group and the DEV tag bases.
+                let d = (*devices).clamp(1, p);
+                let kh = clamp_model(chunks.min(len.max(1)), 1);
+                let mut fams = vec![
+                    Family { base: DEV_GATHER_TAG, budget: kh, name: "dev-gather" },
+                    Family { base: DEV_BCAST_TAG, budget: kh, name: "dev-bcast" },
+                ];
+                let leaders = p.div_ceil(d);
                 if leaders > 1 {
                     let ks = clamp_model(chunks, leaders - 1);
                     let budget = (leaders - 1) as u64 * ks;
@@ -953,6 +983,17 @@ mod tests {
     fn ring_family_model_accepts_ring_trace() {
         let id = ScheduleId::Ring { rings: 1 };
         assert!(check_config(&id, 4, 2).is_empty());
+    }
+
+    #[test]
+    fn two_tier_family_model_accepts_two_tier_trace() {
+        // Every device-clique size on a small world, including the
+        // degenerate k=1 (all ranks are leaders: pure subset ring) and a
+        // ragged last node (p=4, k=3).
+        for devices in [1usize, 2, 3, 4] {
+            let id = ScheduleId::TwoTier { devices };
+            assert!(check_config(&id, 4, 2).is_empty(), "devices={devices}");
+        }
     }
 
     #[test]

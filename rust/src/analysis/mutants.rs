@@ -148,6 +148,20 @@ pub fn seeded_mutants() -> Vec<MutantCase> {
             expected: &[CheckKind::Deadlock],
         },
         MutantCase {
+            label: "two-tier/drop-local-bcast",
+            schedule: ScheduleId::TwoTier { devices: 2 },
+            p: 4,
+            chunks: 1,
+            // Rank 0 leads clique {0, 1}: it sends nothing during the
+            // device gather, one subset-RS and one subset-AG message in
+            // the 2-leader ring (sends 0 and 1), then the DEV_BCAST leg
+            // back to rank 1 (send 2). Dropping send 2 is exactly "forget
+            // the local broadcast": rank 1 never learns the global sum
+            // and parks forever on its bcast receive.
+            mutation: Mutation::DropSend { nth: 2 },
+            expected: &[CheckKind::Deadlock],
+        },
+        MutantCase {
             label: "ring/shift-tag-in-family",
             schedule: ScheduleId::Ring { rings: 1 },
             p: 4,

@@ -54,6 +54,8 @@ pub(crate) const HD_FOLD_TAG: u64 = 7 * TAG_SPACING;
 pub(crate) const HIER_GATHER_TAG: u64 = 8 * TAG_SPACING;
 pub(crate) const HIER_BCAST_TAG: u64 = 9 * TAG_SPACING;
 pub(crate) const COMPRESS_TAG: u64 = 10 * TAG_SPACING;
+pub(crate) const DEV_GATHER_TAG: u64 = 11 * TAG_SPACING;
+pub(crate) const DEV_BCAST_TAG: u64 = 12 * TAG_SPACING;
 
 /// Default sub-chunks per pipelined step when no [`CostParams`] is in
 /// scope (the presets carry their own tuned value).
@@ -434,6 +436,57 @@ pub fn hierarchical_allreduce_pipelined<C: CommOps>(
     group: usize,
     chunks: usize,
 ) {
+    gather_ring_bcast(comm, data, group, chunks, "hierarchical", HIER_GATHER_TAG, HIER_BCAST_TAG);
+}
+
+/// Two-tier device allreduce (the MXNet `local` → `dist` kvstore topology,
+/// SNIPPETS.md `multi_node.md`): the communicator's ranks are *device
+/// ranks*, `devices` per node. Each node's devices reduce onto their node
+/// leader over the intra-node fabric (NVLink/shared-host-memory class in
+/// the cost model), the node leaders run the bucket ring across the
+/// network — every inter-node message now carries the payload once per
+/// *node* instead of once per device, the 1/k wire-byte win of
+/// Shi et al. (arXiv:1711.05979) — and leaders broadcast the result back
+/// down the fast fabric. Structurally this is [`hierarchical_allreduce`]
+/// with the group reinterpreted as a device clique, but it is a distinct
+/// [`AlgoKind`] because the two tiers price on different fabrics
+/// ([`sim`]: `alpha_dev`/`beta_dev` intra, uncontended `beta_net` for the
+/// leader ring) and trace as their own schedule family in `commcheck`
+/// ([`DEV_GATHER_TAG`]/[`DEV_BCAST_TAG`]).
+pub fn two_tier_allreduce<C: CommOps>(comm: &mut C, data: &mut [f32], devices: usize) {
+    two_tier_allreduce_pipelined(comm, data, devices, 1);
+}
+
+/// [`two_tier_allreduce`] with k-way chunk pipelining (same streaming
+/// scheme as [`hierarchical_allreduce_pipelined`]; `devices == 1`
+/// degenerates to every rank being its own leader, i.e. the plain subset
+/// ring over the whole communicator — data-wise the flat ring).
+pub fn two_tier_allreduce_pipelined<C: CommOps>(
+    comm: &mut C,
+    data: &mut [f32],
+    devices: usize,
+    chunks: usize,
+) {
+    gather_ring_bcast(comm, data, devices, chunks, "two_tier", DEV_GATHER_TAG, DEV_BCAST_TAG);
+}
+
+/// The shared gather → leader-ring → broadcast state machine behind
+/// [`hierarchical_allreduce_pipelined`] (host groups, HIER tags) and
+/// [`two_tier_allreduce_pipelined`] (device cliques, DEV tags): blocks of
+/// `group` consecutive ranks reduce onto their leader in sub-chunk
+/// streams, leaders run the pipelined subset ring, leaders broadcast
+/// back. One implementation so the correctness-critical step/chunk/fold
+/// logic exists exactly once; the tag bases keep the two schedules in
+/// separate `commcheck` families.
+fn gather_ring_bcast<C: CommOps>(
+    comm: &mut C,
+    data: &mut [f32],
+    group: usize,
+    chunks: usize,
+    schedule: &'static str,
+    gather_tag: u64,
+    bcast_tag: u64,
+) {
     let p = comm.size();
     let r = comm.rank();
     if p == 1 {
@@ -441,7 +494,7 @@ pub fn hierarchical_allreduce_pipelined<C: CommOps>(
     }
     // The benign data-length clamp (no point in empty sub-chunks) happens
     // first; only a tag-window clamp below that is worth reporting.
-    let k = clamp_pipeline_chunks("hierarchical", chunks.max(1).min(data.len().max(1)), 1);
+    let k = clamp_pipeline_chunks(schedule, chunks.max(1).min(data.len().max(1)), 1);
     let n = data.len();
     let g = group.clamp(1, p);
     let leader = r - r % g;
@@ -449,10 +502,10 @@ pub fn hierarchical_allreduce_pipelined<C: CommOps>(
     if r != leader {
         for sub in 0..k {
             let (s, e) = sub_bounds(0, n, k, sub);
-            comm.send(leader, HIER_GATHER_TAG + sub as u64, data[s..e].to_vec());
+            comm.send(leader, gather_tag + sub as u64, data[s..e].to_vec());
         }
         let mut reqs: Vec<C::Req> =
-            (0..k).map(|sub| comm.irecv(leader, HIER_BCAST_TAG + sub as u64)).collect();
+            (0..k).map(|sub| comm.irecv(leader, bcast_tag + sub as u64)).collect();
         let mut meta: Vec<usize> = (0..k).collect();
         while !reqs.is_empty() {
             let (i, incoming) = comm.wait_any(&mut reqs);
@@ -464,7 +517,7 @@ pub fn hierarchical_allreduce_pipelined<C: CommOps>(
     }
     for m in leader + 1..last {
         let mut reqs: Vec<C::Req> =
-            (0..k).map(|sub| comm.irecv(m, HIER_GATHER_TAG + sub as u64)).collect();
+            (0..k).map(|sub| comm.irecv(m, gather_tag + sub as u64)).collect();
         let mut meta: Vec<usize> = (0..k).collect();
         while !reqs.is_empty() {
             let (i, incoming) = comm.wait_any(&mut reqs);
@@ -478,7 +531,7 @@ pub fn hierarchical_allreduce_pipelined<C: CommOps>(
     for m in leader + 1..last {
         for sub in 0..k {
             let (s, e) = sub_bounds(0, n, k, sub);
-            comm.send(m, HIER_BCAST_TAG + sub as u64, data[s..e].to_vec());
+            comm.send(m, bcast_tag + sub as u64, data[s..e].to_vec());
         }
     }
 }
@@ -492,20 +545,34 @@ pub enum AlgoKind {
     HalvingDoubling,
     /// Two-level: intra-group reduce → leader ring → intra-group bcast.
     Hierarchical,
+    /// Two-tier device schedule: intra-node device reduce on the fast
+    /// fabric → node-leader ring over the NIC (payload crosses the
+    /// network once per node, not once per device) → device broadcast.
+    /// Device count comes from [`CostParams::devices`].
+    TwoTier,
     /// Pick per message with the α-β-γ model ([`sim::select_best`]).
     Auto,
 }
 
 impl AlgoKind {
-    /// The three real-data schedules (everything but `Auto`).
-    pub const DATA_PATH: [AlgoKind; 3] =
-        [AlgoKind::Ring, AlgoKind::HalvingDoubling, AlgoKind::Hierarchical];
+    /// The real-data schedules (everything but `Auto`). `TwoTier` is
+    /// deliberately *last*: [`sim::select_best`] keeps the first minimum
+    /// under `min_by(total_cmp)`, so at `devices == 1` — where the
+    /// two-tier price is bitwise the ring price — the tie breaks to the
+    /// flat schedule deterministically.
+    pub const DATA_PATH: [AlgoKind; 4] = [
+        AlgoKind::Ring,
+        AlgoKind::HalvingDoubling,
+        AlgoKind::Hierarchical,
+        AlgoKind::TwoTier,
+    ];
 
     pub fn parse(s: &str) -> Option<Self> {
         Some(match s {
             "ring" => AlgoKind::Ring,
             "hd" | "halving_doubling" | "halving-doubling" => AlgoKind::HalvingDoubling,
             "hierarchical" | "two_level" | "two-level" => AlgoKind::Hierarchical,
+            "two_tier" | "two-tier" | "twotier" => AlgoKind::TwoTier,
             "auto" => AlgoKind::Auto,
             _ => return None,
         })
@@ -516,6 +583,7 @@ impl AlgoKind {
             AlgoKind::Ring => "ring",
             AlgoKind::HalvingDoubling => "halving_doubling",
             AlgoKind::Hierarchical => "hierarchical",
+            AlgoKind::TwoTier => "two_tier",
             AlgoKind::Auto => "auto",
         }
     }
@@ -573,6 +641,21 @@ impl CollectiveAlgo for Hierarchical {
     }
 }
 
+/// Two-tier device allreduce with a fixed per-node device count.
+pub struct TwoTier {
+    pub devices: usize,
+    pub chunks: usize,
+}
+
+impl CollectiveAlgo for TwoTier {
+    fn name(&self) -> &'static str {
+        "two_tier"
+    }
+    fn allreduce(&self, comm: &mut Comm, data: &mut [f32]) {
+        two_tier_allreduce_pipelined(comm, data, self.devices, self.chunks);
+    }
+}
+
 /// Resolve `Auto` for a message of `bytes` across `p` ranks. Returns the
 /// concrete schedule plus the hierarchical group size to run it with: an
 /// autotuned choice uses `params.gpus_per_worker` — the grouping the cost
@@ -609,6 +692,7 @@ pub fn build_algo(
         AlgoKind::Ring => Box::new(BucketRing { rings, chunks }),
         AlgoKind::HalvingDoubling => Box::new(HalvingDoubling { chunks }),
         AlgoKind::Hierarchical => Box::new(Hierarchical { group, chunks }),
+        AlgoKind::TwoTier => Box::new(TwoTier { devices: params.devices.max(1), chunks }),
         AlgoKind::Auto => unreachable!("select_best never returns Auto"),
     }
 }
@@ -631,6 +715,9 @@ pub fn allreduce_with<C: CommOps>(
         AlgoKind::Ring => multi_ring_allreduce_pipelined(comm, data, rings, chunks),
         AlgoKind::HalvingDoubling => halving_doubling_allreduce_pipelined(comm, data, chunks),
         AlgoKind::Hierarchical => hierarchical_allreduce_pipelined(comm, data, group, chunks),
+        AlgoKind::TwoTier => {
+            two_tier_allreduce_pipelined(comm, data, params.devices.max(1), chunks)
+        }
         AlgoKind::Auto => unreachable!("select_best never returns Auto"),
     }
 }
@@ -1378,13 +1465,87 @@ mod tests {
             AlgoKind::Ring,
             AlgoKind::HalvingDoubling,
             AlgoKind::Hierarchical,
+            AlgoKind::TwoTier,
             AlgoKind::Auto,
         ] {
             assert_eq!(AlgoKind::parse(k.name()), Some(k));
         }
         assert_eq!(AlgoKind::parse("hd"), Some(AlgoKind::HalvingDoubling));
         assert_eq!(AlgoKind::parse("two_level"), Some(AlgoKind::Hierarchical));
+        assert_eq!(AlgoKind::parse("two-tier"), Some(AlgoKind::TwoTier));
+        assert_eq!(AlgoKind::parse("twotier"), Some(AlgoKind::TwoTier));
         assert_eq!(AlgoKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn two_tier_matches_sum_all_device_counts() {
+        for p in [1usize, 2, 3, 4, 6, 8] {
+            for devices in [1usize, 2, 3, 4, 8] {
+                for chunks in [1usize, 2] {
+                    let len = 77;
+                    let out = run_world(p, move |mut c| {
+                        let mut d = payload(c.rank(), len);
+                        two_tier_allreduce_pipelined(&mut c, &mut d, devices, chunks);
+                        d
+                    });
+                    let want = expected_sum(p, len);
+                    for d in out {
+                        assert_eq!(d, want, "p={p} devices={devices} chunks={chunks}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn two_tier_bitwise_equals_flat_on_exact_payloads() {
+        // The test payloads are small multiples of 0.25, so every partial
+        // sum is exact in f32 and the fold order cannot matter: the
+        // two-tier result must be *bitwise* the flat ring result at every
+        // device count (the ISSUE-8 order-independence property).
+        for p in [2usize, 4, 6, 8] {
+            for devices in [1usize, 2, 4, 8] {
+                let len = 113;
+                let out = run_world(p, move |mut c| {
+                    let mut flat = payload(c.rank(), len);
+                    let mut tiered = flat.clone();
+                    ring_allreduce(&mut c, &mut flat);
+                    two_tier_allreduce(&mut c, &mut tiered, devices);
+                    (flat, tiered)
+                });
+                for (flat, tiered) in out {
+                    assert_eq!(flat, tiered, "p={p} devices={devices}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn two_tier_composes_with_compression() {
+        use crate::compress::{EfState, TopK};
+        // Per-device-rank EF residuals over the two-tier schedule: all
+        // ranks must agree, and the identity delegate stays covered by
+        // `compressed_allreduce_identity_is_bitwise_plain_path` (TwoTier
+        // is in DATA_PATH).
+        let p = 4;
+        let len = 200;
+        let params = {
+            let mut pr = CostParams::testbed1();
+            pr.devices = 2;
+            pr
+        };
+        let out = run_world(p, move |mut c| {
+            let mut d = payload(c.rank(), len);
+            let mut ef = EfState::new();
+            compressed_allreduce(
+                AlgoKind::TwoTier, &mut c, &mut d,
+                &TopK { ratio: 0.5 }, 7, &mut ef, 2, 2, &params,
+            );
+            d
+        });
+        for d in &out[1..] {
+            assert_eq!(*d, out[0]);
+        }
     }
 
     #[test]

@@ -53,7 +53,23 @@ pub fn network_allreduce_seconds(
 ///   exchanges (ring traffic stays on neighbor links; halving-doubling
 ///   does not — Shi et al., arXiv:1711.05979, §IV);
 /// * hierarchical — intra-group gather+bcast over host memory, plus the
-///   ring over `⌈p/g⌉` leaders with `g = gpus_per_worker`.
+///   ring over `⌈p/g⌉` leaders with `g = gpus_per_worker`;
+/// * two_tier — the device tier: blocks of `params.devices` device ranks
+///   reduce onto their node leader over the intra-node fabric
+///   (`alpha_dev`/`beta_dev`, device-kernel reduction), then the leaders
+///   run the ring over an *uncontended* NIC (they own it exclusively).
+///
+/// **NIC contention**: with `params.devices = k > 1` every node's NIC
+/// carries `k` device ranks' traffic, so the flat schedules (ring,
+/// halving-doubling, hierarchical) pay `k · beta_net` per byte — the same
+/// shared-NIC mechanism as [`Design::BaiduRing`]'s non-topology-aware
+/// ring. The two-tier schedule is precisely the escape: only one leader
+/// per node touches the network, over a 1/k-sized effective payload per
+/// node. At `devices == 1` the contention factor is exactly 1.0 and the
+/// two-tier price is bitwise the ring price (zero intra term, leaders =
+/// everyone), so [`select_best`]'s first-minimum tie-break keeps picking
+/// the flat schedule — `devices == 1` pricing is unchanged from the
+/// pre-device-tier model.
 ///
 /// `Auto` returns the minimum over the data-path schedules at the same
 /// pipeline depth.
@@ -70,7 +86,9 @@ pub fn network_allreduce_seconds_chunked(
     let n = bytes as f64;
     let k = chunks.max(1) as f64;
     let a = params.alpha_net;
-    let b = params.beta_net;
+    // k-device NIC sharing: flat schedules put every device rank's
+    // traffic through its node's single NIC.
+    let b = params.beta_net * params.devices.max(1) as f64;
     let gh = params.gamma_omp;
     match kind {
         AlgoKind::Ring => {
@@ -105,7 +123,54 @@ pub fn network_allreduce_seconds_chunked(
                     + pipelined_step(n, k, a, params.beta_hostmem, 0.0));
             intra + network_allreduce_seconds_chunked(AlgoKind::Ring, leaders, bytes, chunks, params)
         }
+        AlgoKind::TwoTier => {
+            let d = params.devices.clamp(1, p);
+            let df = d as f64;
+            let leaders = (p + d - 1) / d;
+            // Device tier: each non-leader device streams its buffer to
+            // the node leader over the intra-node fabric; the leader's
+            // device-kernel reduction overlaps the remaining sub-chunks.
+            let intra = (df - 1.0)
+                * (pipelined_step(n, k, params.alpha_dev, params.beta_dev, params.gamma_gpu_ibm)
+                    + pipelined_step(n, k, params.alpha_dev, params.beta_dev, 0.0));
+            // Leader ring: one rank per node on the wire — the NIC is
+            // theirs alone, so the leader phase prices at devices = 1.
+            let mut leader_params = params.clone();
+            leader_params.devices = 1;
+            intra
+                + network_allreduce_seconds_chunked(
+                    AlgoKind::Ring,
+                    leaders,
+                    bytes,
+                    chunks,
+                    &leader_params,
+                )
+        }
         AlgoKind::Auto => select_best_chunked(bytes, p, chunks, params).1,
+    }
+}
+
+/// Wire bytes one allreduce of `bytes` moves per node per iteration on
+/// each tier, at the bandwidth-optimal asymptote (ring reduce-scatter +
+/// allgather moves ~`2·n` per participant per tier). Returned as
+/// `(intra_node, inter_node)`:
+///
+/// * flat (`two_tier == false`): every one of the node's `devices` ranks
+///   pushes ~`2n` through the NIC — `(0, 2·n·devices)`;
+/// * two-tier: the `devices - 1` non-leaders move `2n` each on the
+///   device fabric (gather + broadcast), and only the leader's `2n`
+///   crosses the NIC — `(2·n·(devices-1), 2·n)`.
+///
+/// Exact integer accounting, so `inter(two_tier) * devices ==
+/// inter(flat)` holds with no rounding — the ISSUE-8 CI gate in
+/// `examples/check_bench.rs`.
+pub fn tier_wire_bytes(two_tier: bool, devices: usize, bytes: usize) -> (u64, u64) {
+    let k = devices.max(1) as u64;
+    let n = bytes as u64;
+    if two_tier {
+        (2 * n * (k - 1), 2 * n)
+    } else {
+        (0, 2 * n * k)
     }
 }
 
@@ -529,6 +594,86 @@ mod tests {
             let t2 = network_allreduce_seconds(k, 8, 1 << 22, &m);
             assert!(t1 > 0.0 && t2 > t1, "{k:?}");
             assert_eq!(network_allreduce_seconds(k, 1, 1 << 20, &m), 0.0);
+        }
+    }
+
+    #[test]
+    fn two_tier_prices_bitwise_as_ring_at_one_device() {
+        // With devices = 1 the intra term is exactly 0.0 and the leader
+        // ring spans every rank, so the two-tier price must be *bitwise*
+        // the flat ring price — the satellite-4 degeneracy requirement.
+        let m = minsky();
+        for p in [2usize, 3, 8, 16] {
+            for bytes in [1usize << 10, 1 << 16, 64 << 20] {
+                let tt = network_allreduce_seconds(AlgoKind::TwoTier, p, bytes, &m);
+                let ring = network_allreduce_seconds(AlgoKind::Ring, p, bytes, &m);
+                assert_eq!(tt, ring, "p={p} bytes={bytes}");
+            }
+        }
+    }
+
+    #[test]
+    fn select_best_never_two_tier_at_one_device() {
+        // Equal price + first-minimum tie-break: the flat schedule wins
+        // every tie, so the autotuner must never surface TwoTier when
+        // there is no device tier to exploit.
+        let m = minsky();
+        for p in [2usize, 4, 16, 17] {
+            for shift in 8..28 {
+                let (k, _) = select_best(1usize << shift, p, &m);
+                assert_ne!(k, AlgoKind::TwoTier, "p={p} bytes=2^{shift}");
+            }
+        }
+    }
+
+    #[test]
+    fn two_tier_wins_large_messages_with_devices() {
+        // p = 16 device ranks, 4 per node: the flat schedules pay 4-way
+        // NIC contention while two-tier reduces on NVLink first — at
+        // bandwidth-bound sizes two-tier must beat every flat schedule
+        // and the autotuner must pick it.
+        let mut m = minsky();
+        m.devices = 4;
+        let p = 16;
+        let bytes = 64 << 20;
+        let tt = network_allreduce_seconds(AlgoKind::TwoTier, p, bytes, &m);
+        for flat in [AlgoKind::Ring, AlgoKind::HalvingDoubling, AlgoKind::Hierarchical] {
+            let t = network_allreduce_seconds(flat, p, bytes, &m);
+            assert!(tt < t, "{:?}: two_tier {tt} !< {t}", flat);
+        }
+        assert_eq!(select_best(bytes, p, &m).0, AlgoKind::TwoTier);
+    }
+
+    #[test]
+    fn flat_pricing_unchanged_by_device_knob_at_one() {
+        // The presets carry devices = 1; multiplying beta_net by 1.0 is
+        // exact, so every pre-device-tier number regenerates bitwise.
+        let m = minsky();
+        assert_eq!(m.devices, 1);
+        assert_eq!(CostParams::testbed1().devices, 1);
+        let contended = {
+            let mut c = m.clone();
+            c.devices = 2;
+            c
+        };
+        for k in [AlgoKind::Ring, AlgoKind::HalvingDoubling, AlgoKind::Hierarchical] {
+            let base = network_allreduce_seconds(k, 8, 1 << 20, &m);
+            let shared = network_allreduce_seconds(k, 8, 1 << 20, &contended);
+            assert!(shared > base, "{k:?}: contention must cost");
+        }
+    }
+
+    #[test]
+    fn tier_wire_bytes_inter_is_exactly_one_kth() {
+        for devices in 1..=8usize {
+            for bytes in [1usize, 4096, 102 << 20] {
+                let (flat_intra, flat_inter) = tier_wire_bytes(false, devices, bytes);
+                let (tt_intra, tt_inter) = tier_wire_bytes(true, devices, bytes);
+                assert_eq!(flat_intra, 0);
+                // The acceptance gate: exact integer 1/k, no rounding.
+                assert_eq!(tt_inter * devices as u64, flat_inter, "k={devices}");
+                assert_eq!(tt_intra, 2 * bytes as u64 * (devices as u64 - 1));
+            }
         }
     }
 

@@ -53,7 +53,17 @@ pub struct ExperimentConfig {
     pub warmup_iters: usize,
     /// Multi-ring count for tensor collectives.
     pub rings: usize,
-    /// Allreduce schedule: "ring", "halving_doubling", "hierarchical" or
+    /// Devices per worker node (MXNet `local` kvstore tier, ≥ 1): each
+    /// worker splits its batch into `devices` shards of `batch/devices`
+    /// rows, computes one gradient per device, and merges them locally
+    /// before any inter-node traffic. With the `two_tier` collective the
+    /// device tier reduces on the fast intra-node fabric and only node
+    /// leaders touch the NIC (inter-node wire bytes ÷ `devices`); flat
+    /// schedules instead pay `devices`-way NIC contention. 1 = the
+    /// pre-device-tier flat world, bitwise unchanged.
+    pub devices: usize,
+    /// Allreduce schedule: "ring", "halving_doubling", "hierarchical",
+    /// "two_tier" (intra-node device reduce before the inter-node hop) or
     /// "auto" (α-β-γ autotuner, the default — §6 collective layer).
     pub collective: String,
     /// Gradient-fusion bucket cap in bytes (0 disables): consecutive
@@ -129,6 +139,7 @@ impl ExperimentConfig {
             block_momentum: 0.5,
             warmup_iters: 0,
             rings: 2,
+            devices: 1,
             collective: "auto".into(),
             fusion_bytes: 4 << 20,
             overlap: true,
@@ -173,6 +184,7 @@ impl ExperimentConfig {
         if self.pipeline_chunks > 0 {
             p.pipeline_chunks = self.pipeline_chunks;
         }
+        p.devices = self.devices.max(1);
         p
     }
 
@@ -213,6 +225,7 @@ impl ExperimentConfig {
             ("block_momentum", Value::num(self.block_momentum as f64)),
             ("warmup_iters", Value::num(self.warmup_iters as f64)),
             ("rings", Value::num(self.rings as f64)),
+            ("devices", Value::num(self.devices as f64)),
             ("collective", Value::str(&self.collective)),
             ("fusion_bytes", Value::num(self.fusion_bytes as f64)),
             ("overlap", Value::Bool(self.overlap)),
@@ -282,10 +295,21 @@ impl ExperimentConfig {
         c.block_momentum = getn("block_momentum", c.block_momentum as f64) as f32;
         c.warmup_iters = getu("warmup_iters", c.warmup_iters as f64)? as usize;
         c.rings = getu("rings", c.rings as f64)? as usize;
+        // `devices` is a divisor of the per-worker batch and a tier
+        // width: zero is as silently catastrophic as the `servers=-1`
+        // truncation was, so both non-positive cases fail loudly with
+        // the field named (negatives already die inside `getu`).
+        c.devices = getu("devices", c.devices as f64)? as usize;
+        anyhow::ensure!(
+            c.devices >= 1,
+            "config field \"devices\" must be >= 1 (a worker has at least \
+             one device), got {}",
+            c.devices
+        );
         c.collective = gets("collective", &c.collective);
         anyhow::ensure!(
             AlgoKind::parse(&c.collective).is_some(),
-            "unknown collective {:?} (valid: ring, halving_doubling, hierarchical, auto)",
+            "unknown collective {:?} (valid: ring, halving_doubling, hierarchical, two_tier, auto)",
             c.collective
         );
         c.fusion_bytes = getu("fusion_bytes", c.fusion_bytes as f64)? as usize;
@@ -424,6 +448,32 @@ mod tests {
         // Zero stays legal (servers=0 is the pure-MPI mode).
         let v = crate::jsonlite::parse(r#"{"algo": "mpi-SGD", "servers": 0}"#).unwrap();
         assert_eq!(ExperimentConfig::from_json(&v).unwrap().servers, 0);
+    }
+
+    #[test]
+    fn devices_knob_round_trips_and_rejects_non_positive() {
+        let mut c = ExperimentConfig::testbed1(Algo::named("mpi-SGD"));
+        assert_eq!(c.devices, 1); // flat default
+        c.devices = 4;
+        c.collective = "two_tier".into();
+        let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.devices, 4);
+        assert_eq!(c2.collective_kind(), AlgoKind::TwoTier);
+        assert_eq!(c2.cost_params().devices, 4);
+        // devices=0 would divide the batch by zero and truncate the tier
+        // away; devices=-2 would wrap through the usize cast (the PR 3
+        // servers=-1 class). Both must fail with the field named.
+        for json in [
+            r#"{"algo": "mpi-SGD", "devices": 0}"#,
+            r#"{"algo": "mpi-SGD", "devices": -2}"#,
+        ] {
+            let v = crate::jsonlite::parse(json).unwrap();
+            let err = ExperimentConfig::from_json(&v).unwrap_err();
+            assert!(
+                format!("{err:#}").contains("devices"),
+                "error does not name \"devices\": {err:#}"
+            );
+        }
     }
 
     #[test]

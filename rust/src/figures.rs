@@ -6,8 +6,11 @@
 //! (15/17–20) evaluate the §6 cost models. The `examples/` binaries and
 //! the bench harness are thin wrappers around these.
 
-use crate::collectives::sim::{simulate as csim, Design, SimResult};
-use crate::compress::Compressor as _;
+use crate::collectives::sim::{
+    network_allreduce_seconds, simulate as csim, tier_wire_bytes, Design, SimResult,
+};
+use crate::collectives::AlgoKind;
+use crate::compress::Compressor;
 use crate::config::{Algo, ExperimentConfig};
 use crate::metrics::{write_runs_csv, RunResult, Table};
 use crate::netsim::CostParams;
@@ -276,6 +279,168 @@ pub fn fig20(out_dir: Option<&Path>) -> Result<Vec<(usize, f64, f64, f64)>> {
     Ok(rows)
 }
 
+// ---------------------------------------------------------------------------
+// fig_twotier: the ISSUE-8 device-tier payoff figure
+// ---------------------------------------------------------------------------
+
+/// One `fig_twotier` data point: flat vs two-tier at one
+/// (strategy, codec, devices) cell of the matrix.
+#[derive(Debug, Clone)]
+pub struct TwotierRow {
+    pub strategy: String,
+    pub codec: String,
+    /// Devices per node (k).
+    pub devices: usize,
+    /// Modeled epoch seconds with every device rank on the wire (flat).
+    pub flat_epoch_s: f64,
+    /// Modeled epoch seconds with the intra-node tier reducing first.
+    pub two_tier_epoch_s: f64,
+    /// Per-node per-epoch bytes moved on the device fabric (flat: 0).
+    pub flat_intra_bytes: u64,
+    /// Per-node per-epoch bytes through the NIC under the flat schedule.
+    pub flat_inter_bytes: u64,
+    pub two_tier_intra_bytes: u64,
+    /// Exactly `flat_inter_bytes / devices` — the ISSUE-8 CI-gated ratio.
+    pub two_tier_inter_bytes: u64,
+}
+
+/// α-β-γ cost of one EF-compressed allgather-reduce of `dense_bytes`
+/// across `p` ranks whose NICs are shared `contention`-way: one encode,
+/// a (p−1)-step allgather of the codec's wire bytes, decode+fold of every
+/// peer payload, one dense seat — the network portion of
+/// [`crate::collectives::compressed_allreduce`] without the GPU staging
+/// phases (identical in both arms, so they cancel out of the comparison).
+fn lossy_allgather_seconds(
+    p: usize,
+    dense_bytes: usize,
+    codec: &dyn Compressor,
+    contention: usize,
+    params: &CostParams,
+) -> f64 {
+    let n = dense_bytes as f64;
+    let wire = codec.wire_bytes(dense_bytes / 4) as f64;
+    let encode = n * params.gamma_codec;
+    let seat = n * params.gamma_omp + wire * params.gamma_codec;
+    if p <= 1 {
+        return encode + seat;
+    }
+    let pf = p as f64;
+    let b = params.beta_net * contention.max(1) as f64;
+    let net = (pf - 1.0) * (params.alpha_net + wire * b);
+    let fold = (pf - 1.0) * wire * (params.gamma_codec + params.gamma_omp);
+    encode + seat + net + fold
+}
+
+/// The intra-node leg of a *compressed* two-tier reduction: `devices − 1`
+/// member payloads move coded over the device fabric (gather + broadcast
+/// back), each paying one leader-side decode plus a dense fold — the cost
+/// model of `KvWorker::local_merge`'s per-device EF round-trips.
+fn twotier_intra_lossy_seconds(
+    devices: usize,
+    dense_bytes: usize,
+    codec: &dyn Compressor,
+    params: &CostParams,
+) -> f64 {
+    let n = dense_bytes as f64;
+    let wire = codec.wire_bytes(dense_bytes / 4) as f64;
+    devices.saturating_sub(1) as f64
+        * (2.0 * (params.alpha_dev + wire * params.beta_dev)
+            + wire * params.gamma_codec
+            + n * params.gamma_omp)
+}
+
+/// The ISSUE-8 payoff figure: modeled epoch time and per-tier wire bytes,
+/// flat vs two-tier, as the per-node device count k sweeps {1, 2, 4, 8}
+/// over a strategy × codec matrix at transformer_tiny scale (~1M-param
+/// f32 gradient payload). Per-device batch is b/k in *both* arms, so
+/// compute is identical and the comparison isolates the communication
+/// plane: flat puts every device rank's traffic through its node's shared
+/// NIC (k-way `beta_net` contention, best flat schedule per cell), while
+/// two-tier reduces the k device buffers on the NVLink-class fabric first
+/// and sends one leader stream per node. `mpi-ESGD` syncs every
+/// `interval` (8) iterations instead of every iteration, scaling both
+/// arms' comm alike. CSV: `fig_twotier.csv`.
+pub fn fig_twotier(out_dir: Option<&Path>) -> Result<Vec<TwotierRow>> {
+    const NODES: usize = 4;
+    // transformer_tiny-scale payload: ~1M f32 parameters.
+    const BYTES: usize = 4 << 20;
+    const ITERS: u64 = 96;
+    // Per-device fwd+bwd seconds at the full per-worker batch (k = 1).
+    const COMPUTE_S: f64 = 0.05;
+    const TOPK_RATIO: f64 = 0.05;
+    const ESGD_INTERVAL: u64 = 8;
+    let params = CostParams::minsky();
+    let strategies: [(&str, u64); 3] =
+        [("mpi-SGD", 1), ("mpi-ASGD", 1), ("mpi-ESGD", ESGD_INTERVAL)];
+    let mut rows = Vec::new();
+    for (strategy, sync_every) in strategies {
+        for codec in crate::compress::Codec::all() {
+            let boxed = codec.build(TOPK_RATIO);
+            for k in [1usize, 2, 4, 8] {
+                let p = NODES * k;
+                let mut pk = params.clone();
+                pk.devices = k;
+                let (flat_comm, tt_comm) = if boxed.is_identity() {
+                    // Flat gets its best schedule per cell; two-tier is
+                    // priced by the same α-β-γ model (contended flat legs,
+                    // uncontended leader ring).
+                    let flat = [AlgoKind::Ring, AlgoKind::HalvingDoubling, AlgoKind::Hierarchical]
+                        .into_iter()
+                        .map(|kind| network_allreduce_seconds(kind, p, BYTES, &pk))
+                        .fold(f64::INFINITY, f64::min);
+                    (flat, network_allreduce_seconds(AlgoKind::TwoTier, p, BYTES, &pk))
+                } else {
+                    let flat = lossy_allgather_seconds(p, BYTES, boxed.as_ref(), k, &params);
+                    let tt = twotier_intra_lossy_seconds(k, BYTES, boxed.as_ref(), &params)
+                        + lossy_allgather_seconds(NODES, BYTES, boxed.as_ref(), 1, &params);
+                    (flat, tt)
+                };
+                let syncs = ITERS / sync_every;
+                let compute = ITERS as f64 * COMPUTE_S / k as f64;
+                let payload = if boxed.is_identity() {
+                    BYTES
+                } else {
+                    boxed.wire_bytes(BYTES / 4)
+                };
+                let (fi, fe) = tier_wire_bytes(false, k, payload);
+                let (ti, te) = tier_wire_bytes(true, k, payload);
+                rows.push(TwotierRow {
+                    strategy: strategy.to_string(),
+                    codec: codec.name().to_string(),
+                    devices: k,
+                    flat_epoch_s: compute + syncs as f64 * flat_comm,
+                    two_tier_epoch_s: compute + syncs as f64 * tt_comm,
+                    flat_intra_bytes: fi * syncs,
+                    flat_inter_bytes: fe * syncs,
+                    two_tier_intra_bytes: ti * syncs,
+                    two_tier_inter_bytes: te * syncs,
+                });
+            }
+        }
+    }
+    if let Some(dir) = out_dir {
+        let mut csv = crate::metrics::Csv::create(
+            &dir.join("fig_twotier.csv"),
+            "strategy,codec,devices,flat_epoch_s,two_tier_epoch_s,\
+             flat_intra_bytes,flat_inter_bytes,two_tier_intra_bytes,two_tier_inter_bytes",
+        )?;
+        for r in &rows {
+            csv.row(&[
+                r.strategy.clone(),
+                r.codec.clone(),
+                r.devices.to_string(),
+                format!("{:.6}", r.flat_epoch_s),
+                format!("{:.6}", r.two_tier_epoch_s),
+                r.flat_intra_bytes.to_string(),
+                r.flat_inter_bytes.to_string(),
+                r.two_tier_intra_bytes.to_string(),
+                r.two_tier_inter_bytes.to_string(),
+            ])?;
+        }
+    }
+    Ok(rows)
+}
+
 /// One Fig. 15 data point: virtual epoch seconds for ResNet-50-scale
 /// training at `nodes` Minsky nodes (2 workers/node), pure MPI.
 ///
@@ -418,6 +583,39 @@ mod tests {
         // Mid-size messages show the ~6x factor (3-10 accepted).
         let (_, _, _, f) = rows[2]; // 16 MB
         assert!(f > 3.0 && f < 10.0, "factor {f}");
+    }
+
+    #[test]
+    fn fig_twotier_beats_flat_for_k_ge_2_and_inter_bytes_are_one_kth() {
+        let rows = fig_twotier(None).unwrap();
+        // Full matrix: 3 strategies x every registered codec x 4 k values.
+        assert_eq!(rows.len(), 3 * crate::compress::Codec::all().len() * 4);
+        for r in &rows {
+            let tag = format!("{}/{} k={}", r.strategy, r.codec, r.devices);
+            // The acceptance gate: exact integer 1/k on the NIC.
+            assert_eq!(
+                r.two_tier_inter_bytes * r.devices as u64,
+                r.flat_inter_bytes,
+                "{tag}"
+            );
+            assert_eq!(r.flat_intra_bytes, 0, "{tag}");
+            if r.devices >= 2 {
+                // The payoff claim: strictly faster at every matrix cell.
+                assert!(
+                    r.two_tier_epoch_s < r.flat_epoch_s,
+                    "{tag}: two-tier {} !< flat {}",
+                    r.two_tier_epoch_s,
+                    r.flat_epoch_s
+                );
+                assert!(r.two_tier_intra_bytes > 0, "{tag}");
+            } else {
+                // k = 1: no device tier to exploit — two-tier must never
+                // *appear* to win (satellite 4's no-false-win rule).
+                assert!(r.two_tier_epoch_s >= r.flat_epoch_s - 1e-12, "{tag}");
+                assert_eq!(r.two_tier_inter_bytes, r.flat_inter_bytes, "{tag}");
+                assert_eq!(r.two_tier_intra_bytes, 0, "{tag}");
+            }
+        }
     }
 
     #[test]

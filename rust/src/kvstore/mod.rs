@@ -185,6 +185,9 @@ pub struct KvWorker {
     pub fusion_bytes: usize,
     /// Cost-model constants the `Auto` schedule tunes against.
     pub cost: CostParams,
+    /// Devices per worker (k): the local tier [`KvWorker::local_merge`]
+    /// folds k per-device buffers before any wire hop. 1 = no device tier.
+    pub devices: usize,
     /// Gradient codec (the compression plane). Identity (the default)
     /// keeps every path bitwise on the pre-compression implementation;
     /// lossy codecs shrink both hops — the intra-client exchange runs the
@@ -208,6 +211,61 @@ const EF_MASTER: u64 = 1 << 40;
 const EF_FUSED: u64 = 1 << 41;
 /// Whole-model intra-client allreduce ([`KvWorker::client_allreduce`]).
 const EF_CLIENT: u64 = 1 << 42;
+/// Per-device residuals of the intra-node local tier
+/// ([`device_local_merge`]): device d of owner o keys its residual at
+/// `EF_DEVICE | o << 8 | d`.
+const EF_DEVICE: u64 = 1 << 43;
+
+/// Base EF key for `owner`'s device residuals (device d uses base + d;
+/// the 8-bit shift leaves room for 256 devices per owner).
+pub fn device_ef_base(owner: u64) -> u64 {
+    debug_assert!(owner < (1 << 35), "owner id overflows the EF_DEVICE namespace");
+    EF_DEVICE | (owner << 8)
+}
+
+/// The local tier of the two-tier kvstore (MXNet's `local` store folded
+/// under the `dist` tier, §2.3 topology): merge the k per-device gradient
+/// buffers of one worker into the single leader-side buffer that crosses
+/// the inter-node hop. Buffers are row-mean gradients over b/k-row device
+/// shards, so the merge averages them (fold in device order, then one
+/// scale) — the result is the same estimator as a full-b-row step.
+///
+/// With a lossy codec each device's buffer goes through its own EF
+/// round-trip first (residual key `base_key + d`), mirroring real MXNet's
+/// 2-bit compression applied at local-kvstore merge time with per-device
+/// residual state. A single buffer (k = 1) is returned untouched — bitwise
+/// the pre-device-tier path, codec or not: the device tier does not exist,
+/// so no device residual may be minted.
+pub fn device_local_merge(
+    mut bufs: Vec<Vec<f32>>,
+    codec: &dyn Compressor,
+    ef: &mut EfState,
+    base_key: u64,
+) -> Vec<f32> {
+    assert!(!bufs.is_empty(), "device_local_merge needs at least one device buffer");
+    if bufs.len() == 1 {
+        return bufs.pop().expect("len checked above");
+    }
+    let k = bufs.len();
+    let mut acc: Option<Vec<f32>> = None;
+    for (d, buf) in bufs.into_iter().enumerate() {
+        let contrib = if codec.is_identity() {
+            buf
+        } else {
+            crate::compress::ef_roundtrip(codec, base_key + d as u64, &buf, ef)
+        };
+        match &mut acc {
+            None => acc = Some(contrib),
+            Some(a) => crate::tensor::add_assign(a, &contrib),
+        }
+    }
+    let mut out = acc.expect("k >= 2 buffers folded");
+    let inv = 1.0f32 / k as f32;
+    for v in out.iter_mut() {
+        *v *= inv;
+    }
+    out
+}
 
 impl KvWorker {
     /// Create a worker endpoint. `comm` is its communicator inside its MPI
@@ -243,6 +301,7 @@ impl KvWorker {
             group: 2,
             fusion_bytes: 0,
             cost: CostParams::testbed1(),
+            devices: 1,
             codec: Arc::from(Codec::identity().build(0.0)),
             ef: Arc::new(Mutex::new(EfState::new())),
             arena: Arc::new(Mutex::new(FusionArena::new())),
@@ -270,6 +329,15 @@ impl KvWorker {
     }
 
     /// Configure the collective layer in one call (used by the launcher).
+    ///
+    /// The worker communicator spans node *leaders* — one rank per worker
+    /// — so the device tier never runs on the wire here: `two_tier`'s
+    /// intra leg is the in-process [`KvWorker::local_merge`] and its inter
+    /// leg IS the flat ring over this comm. The wire schedule is mapped
+    /// accordingly and priced as the leader tier (`devices = 1`): k-way
+    /// NIC contention models k device *ranks* behind one NIC, which this
+    /// comm by construction cannot have. `cost.devices` carries k into
+    /// [`KvWorker::devices`] for the local tier before the reset.
     pub fn configure_collective(
         &mut self,
         algo: AlgoKind,
@@ -278,11 +346,28 @@ impl KvWorker {
         fusion_bytes: usize,
         cost: CostParams,
     ) {
-        self.algo = algo;
+        self.algo = if algo == AlgoKind::TwoTier { AlgoKind::Ring } else { algo };
         self.n_rings = rings.max(1);
         self.group = group.max(1);
         self.fusion_bytes = fusion_bytes;
+        self.devices = cost.devices.max(1);
+        let mut cost = cost;
+        cost.devices = 1;
         self.cost = cost;
+    }
+
+    /// The local tier: average this worker's k per-device gradient buffers
+    /// into the one leader buffer that enters the wire schedules, through
+    /// the worker's codec with per-device EF residuals (see
+    /// [`device_local_merge`]). `owner` scopes the residual keys — pass a
+    /// stable per-(worker, buffer) id such as the KVStore key.
+    pub fn local_merge(&self, bufs: Vec<Vec<f32>>, owner: u64) -> Vec<f32> {
+        device_local_merge(
+            bufs,
+            &*self.codec,
+            &mut self.ef.lock().expect("EF-residual state lock poisoned"),
+            device_ef_base(owner),
+        )
     }
 
     /// Capture the collective parameters for use inside an engine op.
@@ -1354,6 +1439,63 @@ mod tests {
             assert_eq!(h.join().unwrap(), vec![-2.0, 4.0, -0.5]);
         }
         group.shutdown();
+    }
+
+    #[test]
+    fn device_local_merge_averages_and_single_buffer_is_untouched() {
+        let codec = Codec::identity().build(0.0);
+        let mut ef = EfState::new();
+        // k = 1: bitwise identity, no residual minted.
+        let solo = vec![vec![0.1f32, -2.5, 3.75]];
+        let out = device_local_merge(solo.clone(), &*codec, &mut ef, device_ef_base(0));
+        assert_eq!(out, solo[0]);
+        // k = 3 identity: exact mean (payloads chosen exact in f32).
+        let bufs = vec![vec![1.0f32, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]];
+        let out = device_local_merge(bufs, &*codec, &mut ef, device_ef_base(0));
+        assert_eq!(out, vec![3.0, 4.0]);
+        assert!(ef.residual(device_ef_base(0)).is_none(), "identity mints no residuals");
+    }
+
+    #[test]
+    fn device_local_merge_keeps_per_device_residuals() {
+        // A lossy codec must accumulate residual state per device key:
+        // merging twice with int8 leaves k residual buffers, one per
+        // device, under the owner's EF_DEVICE base.
+        let codec = Codec::named("int8").build(0.0);
+        let mut ef = EfState::new();
+        let base = device_ef_base(7);
+        for _ in 0..2 {
+            let bufs = vec![vec![0.3f32, -1.7, 0.01, 2.0], vec![1.1, 0.0, -0.5, 0.25]];
+            let out = device_local_merge(bufs, &*codec, &mut ef, base);
+            assert_eq!(out.len(), 4);
+        }
+        assert!(ef.residual(base).is_some(), "device 0 residual");
+        assert!(ef.residual(base + 1).is_some(), "device 1 residual");
+        assert!(ef.residual(base + 2).is_none(), "no phantom third device");
+    }
+
+    #[test]
+    fn two_tier_wire_schedule_maps_to_leader_ring() {
+        // The worker comm is already the leader tier: configuring
+        // two_tier must put the flat ring on the wire, record k for the
+        // local tier, and price the wire at devices = 1.
+        let engine = Arc::new(Engine::new(1));
+        let comms = World::create(1);
+        let mut kv = KvWorker::create(
+            KvType::SyncMpi,
+            engine,
+            Some(comms.into_iter().next().unwrap()),
+            None,
+        );
+        let mut cost = CostParams::testbed1();
+        cost.devices = 4;
+        kv.configure_collective(AlgoKind::TwoTier, 2, 2, 0, cost);
+        assert_eq!(kv.algo, AlgoKind::Ring);
+        assert_eq!(kv.devices, 4);
+        assert_eq!(kv.cost.devices, 1);
+        // And the local tier averages through the worker's codec state.
+        let merged = kv.local_merge(vec![vec![2.0f32, 4.0], vec![6.0, 8.0]], 0);
+        assert_eq!(merged, vec![4.0, 6.0]);
     }
 
     #[test]

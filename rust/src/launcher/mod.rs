@@ -38,6 +38,9 @@ pub struct JobSpec {
     pub rings: usize,
     /// Group size for the hierarchical schedule.
     pub group: usize,
+    /// Devices per worker (k): each worker's kvstore runs the local tier
+    /// over k per-device buffers before the wire hop (1 = no device tier).
+    pub devices: usize,
     /// Cost-model constants the `Auto` schedule tunes against.
     pub cost: CostParams,
     /// Gradient codec (the compression plane; identity = uncompressed).
@@ -69,6 +72,7 @@ impl JobSpec {
             fusion_bytes: 0,
             rings: 2,
             group: 2,
+            devices: 1,
             cost: CostParams::testbed1(),
             codec: Codec::identity(),
             topk_ratio: 0.01,
@@ -91,6 +95,9 @@ impl JobSpec {
         spec.codec = cfg.codec();
         spec.topk_ratio = cfg.topk_ratio;
         spec.group = spec.cost.gpus_per_worker.max(1);
+        // cfg.cost_params() already stamps devices into spec.cost; the
+        // spec-level copy is what the hub's epoch views hand out.
+        spec.devices = cfg.devices.max(1);
         // Membership epochs ride the *strategy's* declared sync cadence
         // (every iteration for sync modes, the lazy INTERVAL for
         // ESGD/Local SGD/BMUF) — the ElasticHub schedule keys off the
@@ -141,6 +148,10 @@ pub struct EpochView {
     pub joined: Vec<usize>,
     /// This worker's cumulative straggle factor (>= 1.0).
     pub straggle: f64,
+    /// Devices per worker (k) in the rebuilt world: churn composes with
+    /// the device tier — a surviving worker keeps all k device shards, so
+    /// views carry the count every renormalization can rely on.
+    pub devices: usize,
 }
 
 /// A survivor's (or joiner's) barrier result: the view plus its endpoint
@@ -188,6 +199,8 @@ pub struct ElasticHub {
     cv: Condvar,
     epochs: Vec<EpochPlan>,
     mpi: bool,
+    /// Devices per worker, stamped into every epoch view.
+    devices: usize,
     sched: Scheduler,
     /// Control endpoint used to retarget `expected_pushes` (None when the
     /// job runs serverless pure MPI).
@@ -299,6 +312,7 @@ impl ElasticHub {
             cv: Condvar::new(),
             epochs,
             mpi: spec.ktype.is_mpi(),
+            devices: spec.devices.max(1),
             sched,
             ps_ctl,
         })
@@ -483,6 +497,7 @@ impl ElasticHub {
                     members: members.clone(),
                     joined: plan.joins.clone(),
                     straggle: straggle_of(rank),
+                    devices: self.devices,
                 };
                 st.outbox.insert(rank, Handout { view, comm });
             }
@@ -727,6 +742,7 @@ mod tests {
             fusion_bytes: 0,
             rings: 2,
             group: 2,
+            devices: 1,
             cost: CostParams::testbed1(),
             codec: Codec::identity(),
             topk_ratio: 0.01,

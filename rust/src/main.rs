@@ -35,7 +35,10 @@ fn usage() -> ! {
            --epochs N --batch-epochs SAMPLES --lr F --alpha F --interval N\n\
            --block-momentum F     BMUF block momentum eta (default 0.5)\n\
            --warmup-iters N       local-sgd post-local warmup iterations\n\
-           --collective ring|halving_doubling|hierarchical|auto\n\
+           --collective ring|halving_doubling|hierarchical|two_tier|auto\n\
+           --devices K            devices per worker (>= 1); batches split\n\
+                                  into K shards of b/K and two_tier reduces\n\
+                                  locally before the inter-node hop\n\
            --fusion-bytes N       gradient-fusion bucket cap (0 = off)\n\
            --overlap on|off       compute/communication overlap (sim plane)\n\
            --pipeline-chunks N    sub-chunks per pipelined collective step\n\
@@ -131,7 +134,7 @@ fn build_config(args: &Args) -> Result<ExperimentConfig> {
     if let Some(v) = args.get("collective") {
         anyhow::ensure!(
             mxnet_mpi::collectives::AlgoKind::parse(v).is_some(),
-            "unknown collective {v:?} (valid: ring, halving_doubling, hierarchical, auto)"
+            "unknown collective {v:?} (valid: ring, halving_doubling, hierarchical, two_tier, auto)"
         );
         cfg.collective = v.into();
     }
@@ -161,6 +164,7 @@ fn build_config(args: &Args) -> Result<ExperimentConfig> {
     ovr!(block_momentum, "block-momentum", f32);
     ovr!(warmup_iters, "warmup-iters", usize);
     ovr!(rings, "rings", usize);
+    ovr!(devices, "devices", usize);
     ovr!(fusion_bytes, "fusion-bytes", usize);
     ovr!(pipeline_chunks, "pipeline-chunks", usize);
     ovr!(threads, "threads", usize);
@@ -170,6 +174,13 @@ fn build_config(args: &Args) -> Result<ExperimentConfig> {
         cfg.topk_ratio.is_finite() && cfg.topk_ratio > 0.0 && cfg.topk_ratio <= 1.0,
         "--topk-ratio must be in (0, 1], got {}",
         cfg.topk_ratio
+    );
+    // Same class of loud rejection as the servers=-1 fix: `--devices -2`
+    // already fails in num() (usize parse), so only zero reaches here.
+    anyhow::ensure!(
+        cfg.devices >= 1,
+        "--devices must be >= 1 (a worker has at least one device), got {}",
+        cfg.devices
     );
     if let Some(v) = args.get("overlap") {
         cfg.overlap = v != "off" && v != "false" && v != "0";
@@ -254,6 +265,13 @@ fn main() -> Result<()> {
             mxnet_mpi::figures::print_acc_vs_time("Churn (kill+straggle)", &runs);
             let runs = mxnet_mpi::figures::fig_compress(&artifacts, &out, epochs)?;
             mxnet_mpi::figures::print_acc_vs_time("Compression (acc vs time)", &runs);
+            for r in mxnet_mpi::figures::fig_twotier(Some(&out))? {
+                println!(
+                    "fig_twotier {:<10} {:<8} k={}: flat {:.4}s two-tier {:.4}s (inter {} -> {} B)",
+                    r.strategy, r.codec, r.devices, r.flat_epoch_s, r.two_tier_epoch_s,
+                    r.flat_inter_bytes, r.two_tier_inter_bytes
+                );
+            }
         }
         "collectives" => {
             for mb in [4usize, 16, 64] {
@@ -383,6 +401,19 @@ mod tests {
         let err =
             build_config(&Args::parse(&argv(&["--topk-ratio", "0"]))).unwrap_err();
         assert!(format!("{err:#}").contains("topk-ratio"), "{err:#}");
+    }
+
+    #[test]
+    fn devices_flag_overrides_and_rejects_zero() {
+        let args = Args::parse(&argv(&["--devices", "4", "--collective", "two_tier"]));
+        let cfg = build_config(&args).unwrap();
+        assert_eq!(cfg.devices, 4);
+        assert_eq!(cfg.collective, "two_tier");
+        let err = build_config(&Args::parse(&argv(&["--devices", "0"]))).unwrap_err();
+        assert!(format!("{err:#}").contains("devices"), "{err:#}");
+        // A negative count fails in num() with the flag named, like --workers -3.
+        let err = build_config(&Args::parse(&argv(&["--devices", "-2"]))).unwrap_err();
+        assert!(format!("{err:#}").contains("devices"), "{err:#}");
     }
 
     #[test]

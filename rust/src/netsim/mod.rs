@@ -57,6 +57,21 @@ pub struct CostParams {
     pub gpu_sync: f64,
     /// GPUs per node-tensor (2 per Minsky socket-worker).
     pub gpus_per_worker: usize,
+    /// Per-message latency on the intra-node device fabric
+    /// (NVLink/shared-host-memory class), seconds. Sub-microsecond-class:
+    /// device peers share a coherent fabric, no NIC or switch traversal.
+    pub alpha_dev: f64,
+    /// Intra-node device fabric bandwidth, s/byte (NVLink-class on
+    /// Minsky, host-shared-memory class on testbed1). No incast term:
+    /// the fabric is a crossbar/coherent bus, not a TCP ingress.
+    pub beta_dev: f64,
+    /// Devices per worker node sharing one NIC (MXNet `local` kvstore
+    /// tier, SNIPPETS.md `multi_node.md`): k device ranks behind one
+    /// inter-node link. Flat schedules pay `devices`-way NIC contention
+    /// on `beta_net`; the two-tier schedule reduces locally first so only
+    /// node leaders touch the NIC. Presets use 1 (flat world, all
+    /// pre-device-tier pricing bitwise unchanged).
+    pub devices: usize,
     /// Fabric-contention surcharge on the per-byte cost of recursive
     /// halving-doubling: its distance-2^k exchanges cross shared switch
     /// links, while bucket-ring traffic stays on neighbor links (Shi et
@@ -101,6 +116,9 @@ impl CostParams {
             beta_h2d: 1.0 / 16.0e9, // PCIe-class staging copy
             gpu_sync: 20e-6,
             gpus_per_worker: 2,
+            alpha_dev: 1.0e-6,
+            beta_dev: 1.0 / 40.0e9, // NVLink-class device fabric
+            devices: 1,
             gamma_codec: 1.0 / 8.0e9,
             hd_contention: 0.3,
             pipeline_chunks: 4,
@@ -125,6 +143,9 @@ impl CostParams {
             beta_h2d: 1.0 / 10.0e9,
             gpu_sync: 25e-6,
             gpus_per_worker: 2,
+            alpha_dev: 1.2e-6,
+            beta_dev: 1.0 / 25.6e9, // host-shared-memory-class fabric
+            devices: 1,
             gamma_codec: 1.0 / 5.0e9,
             hd_contention: 0.35,
             pipeline_chunks: 4,

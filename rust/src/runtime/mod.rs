@@ -310,6 +310,64 @@ impl Model {
         }
     }
 
+    /// Forward+backward over a short batch of `rows` rows — the per-device
+    /// shard path of the device tier (each of k devices sees b/k rows).
+    /// `rows == batch_size()` is bitwise the plain [`grad_step`]. Every
+    /// native kernel parameterizes on the model's batch field, so a short
+    /// batch is a cheap re-dimensioned clone, not padded inputs.
+    ///
+    /// [`grad_step`]: Model::grad_step
+    pub fn grad_step_rows(
+        &self,
+        params: &[f32],
+        x: &XData,
+        y: &[i32],
+        rows: usize,
+    ) -> Result<(f32, Vec<f32>)> {
+        let full = self.meta.batch_size();
+        if rows == full {
+            return self.grad_step(params, x, y);
+        }
+        anyhow::ensure!(
+            rows >= 1 && rows <= full,
+            "rows {rows} outside 1..={full} for variant {}",
+            self.meta.variant
+        );
+        anyhow::ensure!(
+            params.len() == self.meta.params,
+            "params length {} != {}",
+            params.len(),
+            self.meta.params
+        );
+        // Per-row element counts: x_shape = [batch, dim/seq], y_shape =
+        // [batch] (MLP) or [batch, seq] (LM) — drop the batch dimension.
+        let per_x: usize = self.meta.x_shape.iter().skip(1).map(|&d| d as usize).product();
+        let per_y: usize = self.meta.y_shape.iter().skip(1).map(|&d| d as usize).product();
+        let got_x = match x {
+            XData::F32(d) => d.len(),
+            XData::I32(d) => d.len(),
+        };
+        anyhow::ensure!(got_x == rows * per_x, "x length {got_x} != {rows}x{per_x}");
+        anyhow::ensure!(
+            y.len() == rows * per_y,
+            "labels length {} != {rows}x{per_y}",
+            y.len()
+        );
+        match (&self.native, x) {
+            (NativeModel::Mlp(m), XData::F32(d)) => {
+                let mut short = m.clone();
+                short.batch = rows;
+                Ok(short.grad_step(&self.meta.segments, params, d, y))
+            }
+            (NativeModel::Transformer(t), XData::I32(d)) => {
+                let mut short = t.clone();
+                short.batch = rows;
+                Ok(short.grad_step(&self.meta.segments, params, d, y))
+            }
+            _ => bail!("x dtype mismatch for variant {}", self.meta.variant),
+        }
+    }
+
     /// Evaluation: returns (loss, #correct predictions in batch).
     pub fn eval_step(&self, params: &[f32], x: &XData, y: &[i32]) -> Result<(f32, i32)> {
         self.check_inputs(params, x, y)?;

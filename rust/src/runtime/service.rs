@@ -18,6 +18,9 @@ enum Req {
         params: Vec<f32>,
         x: XData,
         y: Vec<i32>,
+        /// `None` = compiled batch; `Some(r)` = short per-device shard of
+        /// r rows (the device tier splits b into k shards of b/k).
+        rows: Option<usize>,
         reply: Sender<Result<(f32, Vec<f32>)>>,
     },
     Eval {
@@ -87,8 +90,12 @@ impl ModelService {
                 };
                 while let Ok(req) = rx.recv() {
                     match req {
-                        Req::Grad { params, x, y, reply } => {
-                            let _ = reply.send(model.grad_step(&params, &x, &y));
+                        Req::Grad { params, x, y, rows, reply } => {
+                            let r = match rows {
+                                None => model.grad_step(&params, &x, &y),
+                                Some(rows) => model.grad_step_rows(&params, &x, &y, rows),
+                            };
+                            let _ = reply.send(r);
                         }
                         Req::Eval { params, x, y, reply } => {
                             let _ = reply.send(model.eval_step(&params, &x, &y));
@@ -135,7 +142,23 @@ impl ModelHandle {
     pub fn grad_step(&self, params: &[f32], x: XData, y: Vec<i32>) -> Result<(f32, Vec<f32>)> {
         let (reply, rx) = channel();
         self.tx
-            .send(Req::Grad { params: params.to_vec(), x, y, reply })
+            .send(Req::Grad { params: params.to_vec(), x, y, rows: None, reply })
+            .context("pjrt service gone")?;
+        rx.recv().context("pjrt service dropped request")?
+    }
+
+    /// Short-batch gradient over `rows` rows — one device's shard of the
+    /// worker batch when the device tier is on (`devices > 1`).
+    pub fn grad_step_rows(
+        &self,
+        params: &[f32],
+        x: XData,
+        y: Vec<i32>,
+        rows: usize,
+    ) -> Result<(f32, Vec<f32>)> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Req::Grad { params: params.to_vec(), x, y, rows: Some(rows), reply })
             .context("pjrt service gone")?;
         rx.recv().context("pjrt service dropped request")?
     }

@@ -77,6 +77,46 @@ impl TrainData {
     }
 }
 
+/// The compute half of the device tier, shared by both planes so their
+/// shard math cannot drift: split one worker batch of `batch` rows into
+/// `devices` contiguous per-device shards (device d gets the
+/// [`chunk_bounds`](crate::collectives::chunk_bounds) rows, same
+/// partition as every other k-way split in the repo) and run `grad` on
+/// each shard. `grad` receives `(x, y, rows)` with `rows` ≤ `batch`.
+///
+/// Returns the per-device row-mean gradients in device order plus the
+/// mean of the per-device losses — [`device_local_merge`] then averages
+/// the gradients into the leader buffer, reconstructing the same
+/// estimator as one full-`batch` step. `devices == 1` takes the exact
+/// legacy path: one full batch, one grad call, buffers untouched.
+///
+/// [`device_local_merge`]: crate::kvstore::device_local_merge
+pub fn device_grad_shards(
+    data: &TrainData,
+    start: u64,
+    batch: usize,
+    devices: usize,
+    mut grad: impl FnMut(XData, Vec<i32>, usize) -> Result<(f32, Vec<f32>)>,
+) -> Result<(f32, Vec<Vec<f32>>)> {
+    let k = devices.max(1).min(batch.max(1));
+    if k == 1 {
+        let (x, y) = data.batch(start, batch);
+        let (loss, g) = grad(x, y, batch)?;
+        return Ok((loss, vec![g]));
+    }
+    let mut bufs = Vec::with_capacity(k);
+    let mut loss = 0.0f32;
+    for d in 0..k {
+        let (s, e) = crate::collectives::chunk_bounds(batch, k, d);
+        let rows = e - s;
+        let (x, y) = data.batch(start + s as u64, rows);
+        let (l, g) = grad(x, y, rows)?;
+        loss += l;
+        bufs.push(g);
+    }
+    Ok((loss / k as f32, bufs))
+}
+
 /// Validation loss/accuracy over `eval_samples` held-out samples — the
 /// one shared implementation both execution planes call (they used to
 /// carry separate copies; a drift here would silently skew every figure).

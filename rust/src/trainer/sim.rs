@@ -269,8 +269,20 @@ impl<'a> Sim<'a> {
     /// the launch population this is the identity mapping, and after
     /// churn a joiner gets its own shard instead of aliasing worker 0's
     /// through `Shard::batch_start`'s modulo wrap.
-    fn client_grad(&self, c: usize, iter: u64, w: &[f32]) -> Result<(f32, Vec<f32>)> {
+    ///
+    /// With `devices = k > 1` each member's batch is split into k shards
+    /// of b/k rows through the shared [`device_grad_shards`] helper and
+    /// merged by [`device_local_merge`] against this plane's EF state —
+    /// the same shard math and fold order as the threaded worker loop, so
+    /// the cross-plane bitwise property extends to the device tier.
+    /// `&mut self` only for the per-device EF residuals; `devices == 1`
+    /// is the exact legacy path (full-batch grad, merge untouched).
+    ///
+    /// [`device_grad_shards`]: crate::trainer::device_grad_shards
+    /// [`device_local_merge`]: crate::kvstore::device_local_merge
+    fn client_grad(&mut self, c: usize, iter: u64, w: &[f32]) -> Result<(f32, Vec<f32>)> {
         let batch = self.model.meta.batch_size();
+        let devices = self.cfg.devices.max(1);
         let epoch = iter / self.iters_per_epoch;
         let b_in_epoch = iter % self.iters_per_epoch;
         let mut all_live: Vec<usize> = self
@@ -279,10 +291,10 @@ impl<'a> Sim<'a> {
             .flat_map(|cl| cl.members.iter().copied())
             .collect();
         all_live.sort_unstable();
-        let members = &self.clients[c].members;
+        let members = self.clients[c].members.clone();
         let mut sum: Vec<f32> = Vec::new();
         let mut loss_sum = 0.0f32;
-        for &worker in members {
+        for &worker in &members {
             let shard_index = all_live
                 .iter()
                 .position(|&id| id == worker)
@@ -294,8 +306,20 @@ impl<'a> Sim<'a> {
                 batch,
                 epoch,
             };
-            let (x, y) = self.data.batch(shard.batch_start(b_in_epoch), batch);
-            let (loss, g) = self.model.grad_step(w, &x, &y)?;
+            let model = &self.model;
+            let (loss, dev_grads) = crate::trainer::device_grad_shards(
+                &self.data,
+                shard.batch_start(b_in_epoch),
+                batch,
+                devices,
+                |x, y, rows| model.grad_step_rows(w, &x, &y, rows),
+            )?;
+            let g = crate::kvstore::device_local_merge(
+                dev_grads,
+                &*self.codec,
+                &mut self.ef,
+                crate::kvstore::device_ef_base(shard_index as u64),
+            );
             loss_sum += loss;
             if sum.is_empty() {
                 sum = g;

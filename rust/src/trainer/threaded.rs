@@ -213,9 +213,20 @@ fn worker_loop(
             std::thread::sleep(STRAGGLE_BASE.mul_f64(straggle - 1.0));
         }
         {
-            let (x, y) = data.batch(shard.batch_start(b as u64), batch);
-            let (loss, grads) = model.grad_step(&w, x, y)?;
+            // Device tier: the worker batch is split into k shards of b/k
+            // rows, one real gradient per device (b/k-row kernels), then
+            // the local tier merges them into the one leader buffer the
+            // wire schedules see. devices == 1 is the exact legacy path:
+            // one full-batch grad_step, merge untouched.
+            let (loss, dev_grads) = crate::trainer::device_grad_shards(
+                &data,
+                shard.batch_start(b as u64),
+                batch,
+                cfg.devices,
+                |x, y, rows| model.grad_step_rows(&w, x, y, rows),
+            )?;
             train_loss_sum += loss as f64;
+            let grads = ctx.kv.local_merge(dev_grads, shard_worker as u64);
 
             // The one strategy dispatch of the loop: everything between
             // this gradient and the next batch belongs to the algorithm.

@@ -62,6 +62,7 @@ fn all_algorithms_match_ring_baseline() {
                 AlgoKind::Ring,
                 AlgoKind::HalvingDoubling,
                 AlgoKind::Hierarchical,
+                AlgoKind::TwoTier,
                 AlgoKind::Auto,
             ] {
                 let pr = params.clone();
@@ -81,6 +82,44 @@ fn all_algorithms_match_ring_baseline() {
             }
         }
     }
+}
+
+#[test]
+fn two_tier_matches_ring_at_every_device_and_thread_count() {
+    // ISSUE-8 acceptance: the two-tier schedule must be bitwise identical
+    // to the flat ring on order-independent payloads at every device count
+    // (including k=1, k not dividing p, and k >= p) and every compute
+    // thread count. Integer payloads make f32 sums exact, so any
+    // reassociation the device tier introduced would show up as a diff.
+    let mut case = 5000u64;
+    for threads in [1usize, 4] {
+        mxnet_mpi::runtime::par::set_threads(threads);
+        for p in [2usize, 4, 8] {
+            for devices in [1usize, 2, 3, 4, 8] {
+                for len in [0usize, 1, 257] {
+                    case += 1;
+                    let want = ring_oracle(case, p, len);
+                    let mut params = CostParams::testbed1();
+                    params.devices = devices;
+                    params.pipeline_chunks = 3;
+                    let pr = params.clone();
+                    let out = run_world(p, move |mut c| {
+                        let mut d = payload(case, c.rank(), len);
+                        allreduce_with(AlgoKind::TwoTier, &mut c, &mut d, 2, 2, &pr);
+                        d
+                    });
+                    for (r, d) in out.iter().enumerate() {
+                        assert_eq!(
+                            d[..],
+                            want[..],
+                            "two_tier p={p} k={devices} len={len} threads={threads} rank={r}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+    mxnet_mpi::runtime::par::set_threads(0);
 }
 
 #[test]
@@ -105,8 +144,9 @@ fn randomized_fused_buckets_match_ring_baseline() {
             AlgoKind::Ring,
             AlgoKind::HalvingDoubling,
             AlgoKind::Hierarchical,
+            AlgoKind::TwoTier,
             AlgoKind::Auto,
-        ][rng.below(4) as usize];
+        ][rng.below(5) as usize];
 
         let want: Vec<Vec<f32>> = lens
             .iter()

@@ -163,6 +163,7 @@ fn launcher_runs_many_small_jobs_without_leaking() {
             fusion_bytes: 1 << 20,
             rings: 2,
             group: 2,
+            devices: 1,
             cost: CostParams::testbed1(),
             codec: mxnet_mpi::compress::Codec::identity(),
             topk_ratio: 0.01,

@@ -129,6 +129,133 @@ fn prop_sync_strategies_bitwise_identical_across_planes() {
     }
 }
 
+/// ISSUE-8 satellite: the cross-plane bitwise property must survive the
+/// device tier. With `devices = 4` every worker batch is split into four
+/// b/4-row shards, each shard's gradient computed separately, and the
+/// shards merged by the shared `device_local_merge` fold — on *both*
+/// planes, in the same order — so weight trajectories stay bitwise equal
+/// for every registered synchronous strategy.
+#[test]
+fn prop_sync_strategies_bitwise_identical_across_planes_with_devices() {
+    for algo in Algo::all() {
+        if !algo.strategy().synchronous() {
+            continue;
+        }
+        let shapes = shapes_for(algo);
+        for case in 0..2u64 {
+            let mut rng = Rng::new(0xDE71CE ^ case ^ (algo.name().len() as u64) << 8);
+            let (workers, clients, servers) =
+                shapes[rng.below(shapes.len() as u64) as usize];
+            let mut cfg = tiny(algo, workers, clients, servers, 2 + rng.below(2));
+            cfg.devices = 4; // mlp_tiny batch 8 -> four 2-row device shards
+            cfg.epochs = 2;
+            cfg.lr = 0.1;
+            cfg.momentum = [0.0f32, 0.3][rng.below(2) as usize];
+            cfg.interval = 1 + rng.below(3) as usize;
+            cfg.seed = 4000 + case;
+            let label = format!(
+                "{} case {case}: w={workers} c={clients} s={servers} devices=4",
+                algo.name()
+            );
+
+            let (t_run, t_w) =
+                mxnet_mpi::trainer::threaded::train_with_weights(&cfg, artifacts())
+                    .unwrap_or_else(|e| panic!("{label}: threaded failed: {e}"));
+            let (s_run, s_w) =
+                mxnet_mpi::trainer::sim::simulate_with_weights(&cfg, &artifacts())
+                    .unwrap_or_else(|e| panic!("{label}: sim failed: {e}"));
+
+            assert_eq!(t_run.records.len(), s_run.records.len(), "{label}");
+            for (tr, sr) in t_run.records.iter().zip(&s_run.records) {
+                assert!(
+                    tr.val_loss.to_bits() == sr.val_loss.to_bits(),
+                    "{label}: epoch {} val_loss {} vs {}",
+                    tr.epoch,
+                    tr.val_loss,
+                    sr.val_loss
+                );
+            }
+            assert_eq!(t_w.len(), s_w.len(), "{label}");
+            for (i, (a, b)) in t_w.iter().zip(&s_w).enumerate() {
+                assert!(
+                    a.to_bits() == b.to_bits(),
+                    "{label}: weight {i} diverged: {a} vs {b}"
+                );
+            }
+        }
+    }
+}
+
+/// One row of MXNet's kvstore-type table (SNIPPETS.md §KVStore), derived
+/// from configured state rather than re-hardcoded: `#ex per device` from
+/// the device-tier batch split (b/k), `#ex per update` from the
+/// strategy's declared §5 mini-batch, and `max delay` from the
+/// strategy's synchrony flag.
+fn kvstore_table_row(
+    cfg: &ExperimentConfig,
+) -> (usize, usize, usize, usize, &'static str) {
+    let s = cfg.algo.strategy();
+    (
+        cfg.devices,
+        cfg.workers,
+        cfg.batch / cfg.devices.max(1),
+        s.mini_batch(cfg),
+        if s.synchronous() { "0" } else { "inf" },
+    )
+}
+
+/// ISSUE-8 satellite: reproduce the MXNet two-level-KVStore table
+/// (SNIPPETS.md) as assertions against the configured state — for batch
+/// b = 8, k = 4 devices, n = 3 workers:
+///
+/// | kvstore type | #devices | #workers | #ex per device | #ex per update | max delay |
+/// |--------------|----------|----------|----------------|----------------|-----------|
+/// | `local`      | k        | 1        | b / k          | b              | 0         |
+/// | `dist_sync`  | k        | n        | b / k          | b × n          | 0         |
+/// | `dist_async` | k        | n        | b / k          | b              | inf       |
+///
+/// The same table is mirrored in README.md's device-tier section, pinned
+/// here so docs and accounting cannot drift.
+#[test]
+fn kvstore_type_table_matches_mxnet_docs() {
+    use mxnet_mpi::kvstore::KvType;
+    let (b, k, n) = (8usize, 4usize, 3usize);
+
+    // `local`: one machine, k devices, no PS — the device tier alone.
+    let mut local = tiny(Algo::named("mpi-SGD"), 1, 1, 0, 2);
+    local.batch = b;
+    local.devices = k;
+    assert_eq!(kvstore_table_row(&local), (k, 1, b / k, b, "0"));
+
+    // `dist_sync`: n workers, every update aggregates all n batches.
+    let mut dist_sync = tiny(Algo::named("dist-SGD"), n, n, 1, 2);
+    dist_sync.batch = b;
+    dist_sync.devices = k;
+    assert_eq!(dist_sync.algo.kv_type(), KvType::DistSync);
+    assert_eq!(kvstore_table_row(&dist_sync), (k, n, b / k, b * n, "0"));
+
+    // `dist_async`: n workers, each update is one worker's batch, delay
+    // unbounded.
+    let mut dist_async = tiny(Algo::named("dist-ASGD"), n, n, 1, 2);
+    dist_async.batch = b;
+    dist_async.devices = k;
+    assert_eq!(dist_async.algo.kv_type(), KvType::DistAsync);
+    assert_eq!(kvstore_table_row(&dist_async), (k, n, b / k, b, "inf"));
+
+    // The README mirror: same rows, same columns.
+    let readme = std::fs::read_to_string(
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../README.md"),
+    )
+    .expect("README.md at the repo root");
+    for row in [
+        "| `local`      | k | 1 | b / k | b     | 0         |",
+        "| `dist_sync`  | k | n | b / k | b × n | 0         |",
+        "| `dist_async` | k | n | b / k | b     | inf       |",
+    ] {
+        assert!(readme.contains(row), "README.md kvstore table is missing row {row:?}");
+    }
+}
+
 /// Both new communication-avoiding strategies learn on both planes with a
 /// genuinely lazy sync schedule.
 #[test]
