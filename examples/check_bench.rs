@@ -1,14 +1,19 @@
 //! Schema validator for the `BENCH_*.json` trajectory files emitted by
 //! `cargo bench --bench kernels`. Accepts schema `mxnet-mpi-bench/v1`
-//! (through `BENCH_7.json`) and `mxnet-mpi-bench/v2` (`BENCH_8.json`
-//! onward: v1 plus the `two_tier` device-tier section). CI runs this
-//! against the freshly-regenerated file and fails the build on any
-//! missing section, wrong type, or empty measurement list — and, for v2,
-//! on any `two_tier` row where the inter-node wire bytes are not
+//! (through `BENCH_7.json`), `mxnet-mpi-bench/v2` (`BENCH_8.json`: v1
+//! plus the `two_tier` device-tier section), and `mxnet-mpi-bench/v3`
+//! (`BENCH_9.json` onward: v2 plus the `cluster` goodput sweep). CI runs
+//! this against the freshly-regenerated file and fails the build on any
+//! missing section, wrong type, or empty measurement list — and, for
+//! v2+, on any `two_tier` row where the inter-node wire bytes are not
 //! *exactly* 1/k of the flat schedule's (the ISSUE-8 acceptance gate,
-//! checked in integer arithmetic).
+//! checked in integer arithmetic); for v3, additionally on any `cluster`
+//! row where the node-pool conservation integers are off (`free +
+//! allocated` must equal the pool at every audited event, zero double
+//! bookings) or where elastic goodput falls below static — strictly
+//! above it at the highest swept arrival rate (the ISSUE-9 gate).
 //!
-//!     cargo run --release --example check_bench -- ../BENCH_8.json
+//!     cargo run --release --example check_bench -- ../BENCH_9.json
 
 use anyhow::{bail, ensure, Context, Result};
 use mxnet_mpi::jsonlite::{parse_file, Value};
@@ -91,12 +96,72 @@ fn check_two_tier(doc: &Value) -> Result<()> {
     Ok(())
 }
 
+/// The v3 `cluster` section: static-vs-elastic goodput per arrival rate
+/// plus the integer pool-conservation audit.
+fn check_cluster(doc: &Value) -> Result<()> {
+    req_rows(
+        doc,
+        "cluster",
+        &[],
+        &[
+            "arrival_interval_s",
+            "jobs",
+            "pool_nodes",
+            "static_makespan_s",
+            "elastic_makespan_s",
+            "static_goodput",
+            "elastic_goodput",
+            "total_samples",
+            "alloc_free_min",
+            "alloc_free_max",
+            "double_booked",
+        ],
+    )?;
+    let rows = doc.req("cluster")?.as_arr().expect("checked by req_rows");
+    let mut min_interval = f64::INFINITY;
+    let mut gain_at_min = f64::NAN;
+    for (i, row) in rows.iter().enumerate() {
+        // The conservation ledger is integer-exact by construction; no
+        // float fuzz tolerated.
+        let pool = req_num(row, "pool_nodes")? as u64;
+        let fmin = req_num(row, "alloc_free_min")? as u64;
+        let fmax = req_num(row, "alloc_free_max")? as u64;
+        ensure!(
+            fmin == pool && fmax == pool,
+            "cluster[{i}]: node pool not conserved — free+allocated ranged \
+             {fmin}..={fmax} on a {pool}-node pool"
+        );
+        let booked = req_num(row, "double_booked")? as u64;
+        ensure!(booked == 0, "cluster[{i}]: {booked} double-booked node claims");
+        ensure!(req_num(row, "total_samples")? > 0.0, "cluster[{i}]: no useful samples");
+        let st = req_num(row, "static_goodput")?;
+        let el = req_num(row, "elastic_goodput")?;
+        ensure!(
+            el >= st,
+            "cluster[{i}]: elastic goodput {el} below static {st} — elastic \
+             allocation must never lose"
+        );
+        let interval = req_num(row, "arrival_interval_s")?;
+        if interval < min_interval {
+            min_interval = interval;
+            gain_at_min = el - st;
+        }
+    }
+    ensure!(
+        gain_at_min > 0.0,
+        "cluster: elastic goodput not strictly above static at the highest \
+         arrival rate (interval {min_interval}s)"
+    );
+    Ok(())
+}
+
 fn check(path: &Path) -> Result<&'static str> {
     let doc = parse_file(path).with_context(|| format!("reading {}", path.display()))?;
     let schema = match req_str(&doc, "schema")? {
         "mxnet-mpi-bench/v1" => "mxnet-mpi-bench/v1",
         "mxnet-mpi-bench/v2" => "mxnet-mpi-bench/v2",
-        other => bail!("unknown schema {other:?} (want mxnet-mpi-bench/v1 or /v2)"),
+        "mxnet-mpi-bench/v3" => "mxnet-mpi-bench/v3",
+        other => bail!("unknown schema {other:?} (want mxnet-mpi-bench/v1, /v2, or /v3)"),
     };
     ensure!(req_num(&doc, "issue")? >= 1.0, "issue must be a positive PR number");
     let mode = req_str(&doc, "mode")?;
@@ -112,8 +177,11 @@ fn check(path: &Path) -> Result<&'static str> {
     )?;
     req_rows(&doc, "allreduce_us", &["schedule"], &["bytes", "us"])?;
     req_rows(&doc, "codec_us", &["codec"], &["n", "encode_us", "decode_us"])?;
-    if schema == "mxnet-mpi-bench/v2" {
+    if schema == "mxnet-mpi-bench/v2" || schema == "mxnet-mpi-bench/v3" {
         check_two_tier(&doc)?;
+    }
+    if schema == "mxnet-mpi-bench/v3" {
+        check_cluster(&doc)?;
     }
     Ok(schema)
 }

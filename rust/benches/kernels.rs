@@ -1,11 +1,13 @@
 //! Compute-plane kernel benchmarks (ISSUE 7) plus the ISSUE-8 device
-//! tier: tiled/parallel kernels vs the seed scalar implementations, codec
-//! encode/decode, allreduce by schedule (now including `two_tier`), the
-//! modeled epoch/wire summary, and the flat-vs-two-tier epoch and
-//! per-tier wire-byte table — emitted as `BENCH_8.json` at the repo root
-//! (schema `mxnet-mpi-bench/v2`, validated in CI by
+//! tier and the ISSUE-9 cluster authority: tiled/parallel kernels vs the
+//! seed scalar implementations, codec encode/decode, allreduce by
+//! schedule (now including `two_tier`), the modeled epoch/wire summary,
+//! the flat-vs-two-tier epoch and per-tier wire-byte table, and the
+//! static-vs-elastic cluster goodput sweep — emitted as `BENCH_9.json` at
+//! the repo root (schema `mxnet-mpi-bench/v3`, validated in CI by
 //! `examples/check_bench.rs`, which also gates on
-//! `inter_wire_bytes(two_tier, k) * k == inter_wire_bytes(flat)` exactly).
+//! `inter_wire_bytes(two_tier, k) * k == inter_wire_bytes(flat)` exactly
+//! and on the cluster node-pool conservation integers).
 //!
 //!     cargo bench --bench kernels               # full shapes, REPS=7
 //!     BENCH_SMOKE=1 cargo bench --bench kernels # CI short-iteration mode
@@ -406,6 +408,31 @@ fn two_tier_section() -> Vec<Value> {
         .collect()
 }
 
+/// The ISSUE-9 cluster section: the `fig_cluster` arrival-rate sweep —
+/// aggregate goodput under static vs elastic allocation plus the integer
+/// pool-conservation audit the CI gate checks exactly.
+fn cluster_section() -> Vec<Value> {
+    mxnet_mpi::figures::fig_cluster(None)
+        .expect("fig_cluster model")
+        .into_iter()
+        .map(|r| {
+            Value::obj(vec![
+                ("arrival_interval_s", Value::num(r.arrival_interval_s)),
+                ("jobs", Value::num(r.jobs as f64)),
+                ("pool_nodes", Value::num(r.pool_nodes as f64)),
+                ("static_makespan_s", Value::num(r.static_makespan_s)),
+                ("elastic_makespan_s", Value::num(r.elastic_makespan_s)),
+                ("static_goodput", Value::num(r.static_goodput)),
+                ("elastic_goodput", Value::num(r.elastic_goodput)),
+                ("total_samples", Value::num(r.total_samples as f64)),
+                ("alloc_free_min", Value::num(r.alloc_free_min as f64)),
+                ("alloc_free_max", Value::num(r.alloc_free_max as f64)),
+                ("double_booked", Value::num(r.double_booked as f64)),
+            ])
+        })
+        .collect()
+}
+
 fn main() {
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     mxnet_mpi::runtime::par::set_threads(0);
@@ -454,14 +481,38 @@ fn main() {
     println!("== two-tier device tier (mpi-SGD, identity) ==");
     println!("{}", tt.render());
 
+    let cluster = cluster_section();
+    let mut ct = Table::new(&[
+        "interval_s",
+        "jobs",
+        "pool",
+        "static goodput",
+        "elastic goodput",
+        "gain",
+    ]);
+    for row in &cluster {
+        let get = |k: &str| row.get(k).and_then(Value::as_f64).unwrap_or(0.0);
+        ct.row(vec![
+            format!("{}", get("arrival_interval_s")),
+            format!("{}", get("jobs") as u64),
+            format!("{}", get("pool_nodes") as u64),
+            format!("{:.2}", get("static_goodput")),
+            format!("{:.2}", get("elastic_goodput")),
+            format!("{:.2}x", get("elastic_goodput") / get("static_goodput").max(1e-12)),
+        ]);
+    }
+    println!("== cluster goodput: static vs elastic allocation ==");
+    println!("{}", ct.render());
+
     let doc = Value::obj(vec![
-        ("schema", Value::str("mxnet-mpi-bench/v2")),
-        ("issue", Value::num(8.0)),
+        ("schema", Value::str("mxnet-mpi-bench/v3")),
+        ("issue", Value::num(9.0)),
         ("mode", Value::str(mode)),
         ("threads", Value::num(threads as f64)),
         ("epoch", Value::Arr(epoch)),
         ("wire_bytes", Value::Arr(wire)),
         ("two_tier", Value::Arr(two_tier)),
+        ("cluster", Value::Arr(cluster)),
         (
             "kernels_us",
             Value::Arr(
@@ -512,7 +563,7 @@ fn main() {
         ),
     ]);
 
-    let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_8.json");
-    std::fs::write(&path, doc.to_json_pretty() + "\n").expect("write BENCH_8.json");
+    let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_9.json");
+    std::fs::write(&path, doc.to_json_pretty() + "\n").expect("write BENCH_9.json");
     println!("wrote {}", path.display());
 }

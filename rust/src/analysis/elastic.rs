@@ -21,6 +21,7 @@
 
 use super::trace::{run_traced, TraceEvent};
 use super::{CheckKind, Diagnostic, Report, ScheduleId};
+use crate::cluster::{simulate as cluster_simulate, AllocPolicy, ArrivalPlan, ClusterSpec};
 use crate::collectives::AlgoKind;
 use crate::compress::{Codec, EfState};
 use crate::kvstore::KvType;
@@ -514,6 +515,164 @@ pub fn check_elastic() -> Report {
     report
 }
 
+// ---------------------------------------------------------------------------
+// Multi-job cluster view (PR 9)
+// ---------------------------------------------------------------------------
+
+/// Cluster scenarios checked by [`check_cluster`]: pool size × arrival
+/// plan, each run under both allocation policies. The plans are chosen so
+/// the elastic runs exercise grow, shrink, queueing behind a grown
+/// allocation, and heterogeneous codecs on one pool.
+const CLUSTER_SCENARIOS: &[(usize, &str)] = &[
+    (4, "mpi-SGD:2x3@0,mpi-SGD:2x2@6"),
+    (6, "mpi-SGD:2x8@0,mpi-SGD:6x2@9"),
+    (8, "mpi-SGD:2x4@0,mpi-SGD:4x3@30,mpi-ESGD.int8:2x4@45"),
+];
+
+/// The multi-job extension of the elastic model check: run each cluster
+/// scenario on virtual time under both allocation policies and verify
+///
+/// * **pool conservation** — `free + allocated == nodes` at every audited
+///   event and no node is ever double-booked,
+/// * **plan validity** — every synthesized churn schedule, re-rendered
+///   through the `--fault` grammar, passes the full single-job
+///   [`check_plan`] (table equivalence, trace safety, split rule), and an
+///   [`ElasticHub`] built from the job's own launch spec reproduces the
+///   authority's width trajectory on the epoch grid,
+/// * **policy contracts** — static allocation synthesizes no churn and
+///   never moves a job off its gang width; no policy shrinks a job below
+///   its gang; total useful samples are fixed by the arrival plan alone.
+pub fn check_cluster() -> Report {
+    let mut report = Report::default();
+    for &(nodes, plan_str) in CLUSTER_SCENARIOS {
+        let mut totals: Vec<u64> = Vec::new();
+        for policy in [AllocPolicy::Static, AllocPolicy::Elastic] {
+            report.configs_checked += 1;
+            let diag = |detail: String| Diagnostic {
+                schedule: format!("cluster[{nodes}n/{}] {plan_str}", policy.name()),
+                p: nodes,
+                chunks: 0,
+                len: 0,
+                kind: CheckKind::ClusterPool,
+                detail,
+            };
+            let plan = match ArrivalPlan::parse(plan_str) {
+                Ok(p) => p,
+                Err(e) => {
+                    report
+                        .diagnostics
+                        .push(diag(format!("arrival plan failed to parse: {e:#}")));
+                    continue;
+                }
+            };
+            let n_jobs = plan.jobs.len();
+            let mut cspec = ClusterSpec::with_defaults(nodes, policy, plan);
+            cspec.iters_per_epoch = 4;
+            cspec.batch = 8;
+            cspec.compute_s = 1.0;
+            cspec.bytes = 1 << 20;
+            let out = match cluster_simulate(&cspec) {
+                Ok(o) => o,
+                Err(e) => {
+                    report.diagnostics.push(diag(format!("simulate failed: {e:#}")));
+                    continue;
+                }
+            };
+            if out.audit.double_booked != 0 {
+                report.diagnostics.push(diag(format!(
+                    "{} double-booked node claims across {} audit snapshots",
+                    out.audit.double_booked, out.audit.snapshots
+                )));
+            }
+            if out.audit.alloc_free_min != nodes || out.audit.alloc_free_max != nodes {
+                report.diagnostics.push(diag(format!(
+                    "pool not conserved: free+allocated ranged {}..={} on a {nodes}-node pool",
+                    out.audit.alloc_free_min, out.audit.alloc_free_max
+                )));
+            }
+            if out.jobs.len() != n_jobs {
+                report
+                    .diagnostics
+                    .push(diag(format!("only {} of {n_jobs} jobs completed", out.jobs.len())));
+                continue;
+            }
+            totals.push(out.total_samples);
+            for j in &out.jobs {
+                if j.widths.first() != Some(&j.base_workers)
+                    || j.widths.iter().any(|&w| w < j.base_workers)
+                {
+                    report.diagnostics.push(diag(format!(
+                        "{}: width trajectory {:?} undercuts the gang width {}",
+                        j.name, j.widths, j.base_workers
+                    )));
+                }
+                if policy == AllocPolicy::Static && !j.fault.is_empty() {
+                    report.diagnostics.push(diag(format!(
+                        "{}: static allocation synthesized churn: {}",
+                        j.name,
+                        j.fault.render()
+                    )));
+                }
+                if j.fault.is_empty() {
+                    continue;
+                }
+                // Feed the synthesized plan back through the single-job
+                // model check, via the real grammar round-trip.
+                check_plan(
+                    j.base_workers,
+                    1,
+                    cspec.iters_per_epoch,
+                    &j.fault.render(),
+                    &mut report,
+                );
+                // And the hub replaying the job's own launch spec must
+                // land on the authority's widths, on the epoch grid.
+                match ElasticHub::new(&j.spec, Scheduler::new(0, 0), None) {
+                    Err(e) => report.diagnostics.push(diag(format!(
+                        "{}: hub rejected the synthesized launch spec: {e:#}",
+                        j.name
+                    ))),
+                    Ok(hub) => {
+                        for e in 0..hub.n_epochs() as u64 {
+                            let Some(b) = hub.boundary_iter(e) else { continue };
+                            if (b + 1) % cspec.iters_per_epoch != 0 {
+                                report.diagnostics.push(diag(format!(
+                                    "{}: epoch {e} boundary {b} is off the {}-iteration grid",
+                                    j.name, cspec.iters_per_epoch
+                                )));
+                                continue;
+                            }
+                            let idx = ((b + 1) / cspec.iters_per_epoch) as usize;
+                            let w = hub.members_after(e).len();
+                            if j.widths.get(idx) != Some(&w) {
+                                report.diagnostics.push(diag(format!(
+                                    "{}: hub width {w} at epoch index {idx} diverges from \
+                                     the authority's trajectory {:?}",
+                                    j.name, j.widths
+                                )));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        if totals.len() == 2 && totals[0] != totals[1] {
+            report.diagnostics.push(Diagnostic {
+                schedule: format!("cluster[{nodes}n] {plan_str}"),
+                p: nodes,
+                chunks: 0,
+                len: 0,
+                kind: CheckKind::ClusterPool,
+                detail: format!(
+                    "total useful samples depend on the policy: static {} vs elastic {}",
+                    totals[0], totals[1]
+                ),
+            });
+        }
+    }
+    report
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -537,5 +696,14 @@ mod tests {
         let report = check_elastic();
         assert!(report.ok(), "elastic diagnostics: {:?}", report.diagnostics);
         assert!(report.configs_checked > 100);
+    }
+
+    #[test]
+    fn cluster_pool_sweep_is_clean() {
+        let report = check_cluster();
+        assert!(report.ok(), "cluster diagnostics: {:?}", report.diagnostics);
+        // Both policies over every scenario, plus one single-job model
+        // check per synthesized plan.
+        assert!(report.configs_checked >= 2 * 3);
     }
 }

@@ -32,6 +32,11 @@
 //! 4. **Elastic-epoch safety** — exhaustive small-world model checking of
 //!    `FaultPlan` × `ElasticHub` in [`elastic`], including the
 //!    negative-color `Comm::split` rule.
+//! 5. **Cluster-pool conservation** — the multi-job view: deterministic
+//!    cluster sims under both allocation policies, checking the integer
+//!    node-pool ledger, feeding every *synthesized* churn plan back
+//!    through the single-job elastic model check, and holding the
+//!    authority to its own width trajectory ([`elastic::check_cluster`]).
 //!
 //! The verifier is itself verified: [`mutants`] injects schedule bugs
 //! (drop a send, shift a tag, truncate a chunk, leak a request) and the
@@ -109,6 +114,9 @@ pub enum CheckKind {
     EngineDag,
     /// A key no bucket covers: its `Pending` var would never be signaled.
     PendingVar,
+    /// The cluster authority broke the node-pool ledger, synthesized an
+    /// invalid churn plan, or diverged from its own width trajectory.
+    ClusterPool,
 }
 
 impl CheckKind {
@@ -124,6 +132,7 @@ impl CheckKind {
             CheckKind::SplitRule => "split-rule",
             CheckKind::EngineDag => "engine-dag",
             CheckKind::PendingVar => "pending-var",
+            CheckKind::ClusterPool => "cluster-pool",
         }
     }
 }
@@ -967,11 +976,13 @@ pub fn check_engine_plans() -> Report {
 }
 
 /// Everything `mxnet-mpi commcheck` gates on: the schedule matrix, the
-/// engine-plan checks, and the exhaustive elastic-epoch model check.
+/// engine-plan checks, the exhaustive elastic-epoch model check, and the
+/// multi-job cluster-pool check.
 pub fn full_report() -> Report {
     let mut report = check_schedules();
     report.merge(check_engine_plans());
     report.merge(elastic::check_elastic());
+    report.merge(elastic::check_cluster());
     report
 }
 

@@ -1,0 +1,938 @@
+//! Cluster authority — multi-tenant job queue, gang scheduling, and
+//! elastic autoscaling over a shared node pool (ROADMAP item 3).
+//!
+//! The paper's pitch (§1–§2) is that the loosely coupled PS *task* model
+//! makes MPI-style training practical in a shared cloud — but every layer
+//! below this one runs exactly one job per process. This module promotes
+//! [`crate::ps::Scheduler`] + [`crate::launcher::ElasticHub`] to a cluster
+//! authority:
+//!
+//! * an **admission queue** of heterogeneous jobs (strategy, codec and
+//!   device count per job, scripted by the [`ArrivalPlan`] grammar),
+//! * a bounded **node pool** with **gang placement** — a job's ranks are
+//!   placed all-or-nothing, never a partial world,
+//! * an **elastic policy** that grows jobs into idle capacity and shrinks
+//!   them back to their gang width under contention, by *synthesizing*
+//!   `join`/`kill` [`FaultEvent`]s at epoch boundaries — the PR 3 churn
+//!   machinery is the mechanism, this is only the policy layer on top.
+//!
+//! Two planes, same split as everywhere else in the repo:
+//! [`simulate`] runs the authority on virtual time (epochs priced by the
+//! α-β-γ model with [`contended_allreduce_seconds`] tenancy pricing) and
+//! emits each job's synthesized [`FaultPlan`]; [`execute`] then replays
+//! those plans for real — every job launched through
+//! [`crate::launcher::launch_with`] against a per-job quorum on one
+//! [`ClusterScheduler`], so a cluster running exactly one job takes the
+//! identical code path (and produces bitwise-identical results) to a plain
+//! [`crate::launcher::launch`].
+
+use crate::collectives::sim::contended_allreduce_seconds;
+use crate::collectives::AlgoKind;
+use crate::compress::Codec;
+use crate::config::{Algo, ExperimentConfig};
+use crate::launcher::{launch_with, JobSpec, WorkerCtx};
+use crate::netsim::CostParams;
+use crate::ps::{ClusterScheduler, FaultEvent, FaultKind, FaultPlan};
+use anyhow::{ensure, Context, Result};
+use std::collections::{BTreeMap, VecDeque};
+
+/// Job index into [`ArrivalPlan::jobs`]; also the authority's job id.
+pub type JobId = usize;
+
+/// `topk` keep-ratio used for cluster jobs that pick the top-k codec.
+pub const CLUSTER_TOPK_RATIO: f64 = 0.05;
+
+// ---------------------------------------------------------------------------
+// ArrivalPlan — the `--arrivals` grammar
+// ---------------------------------------------------------------------------
+
+/// One job submission in an arrival plan: which strategy/codec/device
+/// shape it wants, its gang width in nodes (one worker per node), how many
+/// epochs of work it brings, and when it arrives on the cluster clock.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobRequest {
+    pub algo: Algo,
+    pub codec: Codec,
+    /// Devices per worker (the PR 8 two-tier k).
+    pub devices: usize,
+    /// Gang width: nodes requested, placed all-or-nothing.
+    pub workers: usize,
+    /// Epochs of work *at the gang width* (total samples scale with it).
+    pub epochs: u64,
+    /// Arrival time on the cluster clock, seconds.
+    pub arrival_s: f64,
+}
+
+/// A scripted job-arrival schedule, the cluster-level analogue of the
+/// [`FaultPlan`] grammar. Comma-separated events:
+///
+/// ```text
+/// ALGO[.CODEC[.DEVICES]]:WxE@T
+/// ```
+///
+/// `ALGO` is a registered MPI strategy, `CODEC` a registered compressor
+/// (default `identity`), `DEVICES` the per-worker device count (default
+/// 1); `W` nodes arrive wanting `E` epochs of work at second `T`. E.g.
+/// `mpi-SGD:4x6@0,mpi-ESGD.int8:2x6@120,mpi-SGD.topk.2:2x4@240`. Jobs are
+/// kept sorted by arrival time (stable for ties).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ArrivalPlan {
+    pub jobs: Vec<JobRequest>,
+}
+
+impl ArrivalPlan {
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    /// Parse the `--arrivals` grammar; empty string = no jobs.
+    pub fn parse(s: &str) -> Result<Self> {
+        let mut jobs = Vec::new();
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            jobs.push(Self::parse_job(part).with_context(|| {
+                format!("bad arrival event {part:?} (grammar: ALGO[.CODEC[.DEVICES]]:WxE@T)")
+            })?);
+        }
+        jobs.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
+        Ok(Self { jobs })
+    }
+
+    fn parse_job(part: &str) -> Result<JobRequest> {
+        let (head, at) = part.split_once('@').context("missing '@arrival-seconds'")?;
+        let arrival_s: f64 = at.trim().parse().context("arrival seconds")?;
+        ensure!(
+            arrival_s.is_finite() && arrival_s >= 0.0,
+            "arrival must be a finite non-negative time, got {arrival_s}"
+        );
+        let (desc, shape) = head.rsplit_once(':').context("missing ':WxE' job shape")?;
+        let (w, e) = shape.split_once('x').context("job shape must be 'WxE' (workers x epochs)")?;
+        let workers: usize = w.trim().parse().context("workers")?;
+        let epochs: u64 = e.trim().parse().context("epochs")?;
+        ensure!(workers >= 1, "job needs at least 1 worker");
+        ensure!(epochs >= 1, "job needs at least 1 epoch of work");
+        let mut fields = desc.split('.');
+        let algo_name = fields.next().unwrap_or_default().trim();
+        let algo = Algo::parse(algo_name).with_context(|| {
+            format!("unknown algorithm {algo_name:?} (registered: {})", Algo::names().join(", "))
+        })?;
+        ensure!(
+            algo.is_mpi(),
+            "cluster jobs must use an MPI strategy (got {:?}): elastic grow/shrink \
+             rebuilds client worlds, which dist modes do not have",
+            algo.name()
+        );
+        let codec = match fields.next() {
+            Some(c) => Codec::parse(c.trim()).with_context(|| {
+                format!("unknown codec {:?} (registered: {})", c.trim(), Codec::names().join(", "))
+            })?,
+            None => Codec::identity(),
+        };
+        let devices = match fields.next() {
+            Some(d) => {
+                let k: usize = d.trim().parse().context("devices")?;
+                ensure!(k >= 1, "devices must be >= 1, got {k}");
+                k
+            }
+            None => 1,
+        };
+        ensure!(
+            fields.next().is_none(),
+            "too many '.'-separated fields (grammar: ALGO[.CODEC[.DEVICES]])"
+        );
+        Ok(JobRequest { algo, codec, devices, workers, epochs, arrival_s })
+    }
+
+    /// Canonical string form; [`ArrivalPlan::parse`] round-trips it.
+    pub fn render(&self) -> String {
+        self.jobs
+            .iter()
+            .map(|j| {
+                format!(
+                    "{}.{}.{}:{}x{}@{}",
+                    j.algo.name(),
+                    j.codec.name(),
+                    j.devices,
+                    j.workers,
+                    j.epochs,
+                    j.arrival_s
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ClusterSpec — the authority's knobs
+// ---------------------------------------------------------------------------
+
+/// Node-allocation policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllocPolicy {
+    /// Jobs hold exactly their gang width from admission to completion —
+    /// the one-job-per-partition cloud baseline.
+    Static,
+    /// At its own epoch boundaries a job grows into idle nodes (queue
+    /// empty) and shrinks back to its gang width under contention (queue
+    /// non-empty), via synthesized join/kill events.
+    Elastic,
+}
+
+impl AllocPolicy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "static" => Some(Self::Static),
+            "elastic" => Some(Self::Elastic),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Static => "static",
+            Self::Elastic => "elastic",
+        }
+    }
+}
+
+/// The shared cluster: a bounded node pool, an allocation policy, the
+/// scripted arrivals, and the workload/cost constants every job's epochs
+/// are priced with on the virtual-time plane.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    /// Node-pool size; one worker rank per node.
+    pub nodes: usize,
+    pub policy: AllocPolicy,
+    pub plan: ArrivalPlan,
+    /// Iterations per membership epoch (every job's `reconfig_every`):
+    /// grow/shrink/admission decisions land only on these boundaries.
+    pub iters_per_epoch: u64,
+    /// Samples one worker processes per iteration.
+    pub batch: usize,
+    /// Compute seconds per iteration per worker.
+    pub compute_s: f64,
+    /// Dense gradient payload per sync, bytes.
+    pub bytes: usize,
+    pub cost: CostParams,
+}
+
+impl ClusterSpec {
+    /// A spec with the repo's default workload constants (testbed1 cost
+    /// model, 8-iteration epochs, 4 MB gradients) — the CLI entry point.
+    pub fn with_defaults(nodes: usize, policy: AllocPolicy, plan: ArrivalPlan) -> Self {
+        Self {
+            nodes,
+            policy,
+            plan,
+            iters_per_epoch: 8,
+            batch: 32,
+            compute_s: 2.0,
+            bytes: 4 << 20,
+            cost: CostParams::testbed1(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Outcomes
+// ---------------------------------------------------------------------------
+
+/// One job's completed trajectory through the cluster.
+#[derive(Debug, Clone)]
+pub struct JobOutcome {
+    pub id: JobId,
+    /// `j{id}` — stable display name.
+    pub name: String,
+    pub algo: Algo,
+    pub codec: Codec,
+    pub devices: usize,
+    /// The gang width it was admitted at (and never shrunk below).
+    pub base_workers: usize,
+    pub arrival_s: f64,
+    pub admitted_s: f64,
+    pub finished_s: f64,
+    /// Useful samples credited toward goodput (== the job's target).
+    pub samples: u64,
+    /// Job-local iterations executed (`widths.len() * iters_per_epoch`).
+    pub iters: u64,
+    /// Worker count during each membership epoch, in order.
+    pub widths: Vec<usize>,
+    /// The synthesized churn schedule (empty under [`AllocPolicy::Static`]
+    /// or when the job never grew) — valid [`FaultPlan`] grammar, accepted
+    /// by [`crate::launcher::ElasticHub::new`].
+    pub fault: FaultPlan,
+    /// Ready-to-launch spec: gang width, one client, serverless MPI, the
+    /// synthesized plan, `reconfig_every = iters_per_epoch`.
+    pub spec: JobSpec,
+}
+
+/// Integer conservation ledger over every pool mutation: after each event
+/// the authority cross-checks its per-job placement lists against the
+/// pool's owner ledger. `free + allocated` must equal the pool size at
+/// every snapshot (min == max == nodes) and no node may ever be claimed
+/// by two jobs or owned without a claimant (`double_booked == 0`).
+#[derive(Debug, Clone, Copy)]
+pub struct PoolAudit {
+    pub snapshots: usize,
+    pub alloc_free_min: usize,
+    pub alloc_free_max: usize,
+    pub double_booked: usize,
+}
+
+/// What a full cluster run produced.
+#[derive(Debug, Clone)]
+pub struct ClusterOutcome {
+    pub policy: AllocPolicy,
+    pub nodes: usize,
+    /// Completed jobs, by id.
+    pub jobs: Vec<JobOutcome>,
+    /// Last completion time on the cluster clock.
+    pub makespan_s: f64,
+    /// Useful samples across all jobs (fixed by the plan, not the policy).
+    pub total_samples: u64,
+    pub audit: PoolAudit,
+}
+
+impl ClusterOutcome {
+    /// Aggregate goodput: useful samples per second of cluster time.
+    pub fn goodput(&self) -> f64 {
+        self.total_samples as f64 / self.makespan_s.max(f64::MIN_POSITIVE)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Virtual-time simulation
+// ---------------------------------------------------------------------------
+
+/// Build the launchable [`JobSpec`] for a request + synthesized plan.
+fn job_spec(cluster: &ClusterSpec, req: &JobRequest, fault: FaultPlan) -> JobSpec {
+    let mut spec = JobSpec::from_algo(req.algo, req.workers, 0, 1);
+    spec.devices = req.devices;
+    spec.codec = req.codec;
+    spec.topk_ratio = CLUSTER_TOPK_RATIO;
+    let mut cost = cluster.cost.clone();
+    cost.devices = req.devices;
+    spec.cost = cost;
+    spec.collective = if req.devices >= 2 { AlgoKind::TwoTier } else { AlgoKind::Ring };
+    spec.fault = fault;
+    spec.reconfig_every = cluster.iters_per_epoch;
+    spec
+}
+
+/// Wall seconds of one membership epoch for a job running `width` ranks
+/// co-located with `tenants` jobs: compute per iteration, plus one
+/// contention-priced allreduce per strategy sync boundary. The payload is
+/// the job's codec's wire size (heterogeneous codecs pay heterogeneous
+/// wire bytes, exactly like the single-job planes).
+fn epoch_seconds(
+    spec: &ClusterSpec,
+    req: &JobRequest,
+    sync_every: u64,
+    width: usize,
+    tenants: usize,
+) -> f64 {
+    let payload = if req.codec.is_identity() {
+        spec.bytes
+    } else {
+        req.codec.build(CLUSTER_TOPK_RATIO).wire_bytes((spec.bytes / 4).max(1))
+    };
+    let kind = if req.devices >= 2 { AlgoKind::TwoTier } else { AlgoKind::Ring };
+    let mut cost = spec.cost.clone();
+    cost.devices = req.devices;
+    let comm = contended_allreduce_seconds(kind, width, payload, tenants, &cost);
+    let syncs = spec.iters_per_epoch.div_ceil(sync_every.max(1));
+    spec.iters_per_epoch as f64 * spec.compute_s + syncs as f64 * comm
+}
+
+/// A job currently holding nodes.
+struct Running {
+    id: JobId,
+    sync_every: u64,
+    /// Owned node ids (the job's side of the conservation ledger).
+    nodes: Vec<usize>,
+    /// Live ps_ranks ascending; mirrors [`crate::launcher::ElasticHub`]'s
+    /// replay of the synthesized plan (joins allocate from `workers` up,
+    /// shrinks kill the highest live ranks).
+    live_ranks: Vec<usize>,
+    next_join_rank: usize,
+    iters_done: u64,
+    samples_done: u64,
+    target: u64,
+    epoch_end_s: f64,
+    admitted_s: f64,
+    widths: Vec<usize>,
+    events: Vec<FaultEvent>,
+}
+
+struct Sim<'a> {
+    spec: &'a ClusterSpec,
+    /// Pool ledger: node -> owning job.
+    owner: Vec<Option<JobId>>,
+    queue: VecDeque<JobId>,
+    running: BTreeMap<JobId, Running>,
+    finished: BTreeMap<JobId, JobOutcome>,
+    clock: f64,
+    audit: PoolAudit,
+}
+
+impl Sim<'_> {
+    fn free_count(&self) -> usize {
+        self.owner.iter().filter(|o| o.is_none()).count()
+    }
+
+    /// Gang-allocate `n` nodes to `id`, all-or-nothing, lowest ids first.
+    fn alloc(&mut self, id: JobId, n: usize) -> Option<Vec<usize>> {
+        let free: Vec<usize> = (0..self.owner.len()).filter(|&i| self.owner[i].is_none()).collect();
+        if free.len() < n {
+            return None;
+        }
+        let taken = free[..n].to_vec();
+        for &node in &taken {
+            self.owner[node] = Some(id);
+        }
+        Some(taken)
+    }
+
+    fn release(&mut self, nodes: &[usize]) {
+        for &node in nodes {
+            self.owner[node] = None;
+        }
+    }
+
+    /// Admit queued jobs FIFO while the head's gang fits. Head-of-line
+    /// blocking is deliberate: admission order is part of the contract,
+    /// and both policies pay it identically.
+    fn try_admit(&mut self) {
+        while let Some(&id) = self.queue.front() {
+            let req = &self.spec.plan.jobs[id];
+            if self.free_count() < req.workers {
+                break;
+            }
+            self.queue.pop_front();
+            let nodes = self.alloc(id, req.workers).expect("gang fit just checked");
+            let sync_every =
+                req.algo.strategy().sync_every(&ExperimentConfig::testbed1(req.algo)).max(1);
+            let tenants = self.running.len() + 1;
+            let dur = epoch_seconds(self.spec, req, sync_every, req.workers, tenants);
+            let target =
+                req.epochs * self.spec.iters_per_epoch * req.workers as u64 * self.spec.batch as u64;
+            self.running.insert(
+                id,
+                Running {
+                    id,
+                    sync_every,
+                    nodes,
+                    live_ranks: (0..req.workers).collect(),
+                    next_join_rank: req.workers,
+                    iters_done: 0,
+                    samples_done: 0,
+                    target,
+                    epoch_end_s: self.clock + dur,
+                    admitted_s: self.clock,
+                    widths: vec![req.workers],
+                    events: Vec::new(),
+                },
+            );
+        }
+    }
+
+    fn arrival(&mut self, id: JobId) {
+        self.queue.push_back(id);
+        self.try_admit();
+    }
+
+    /// One job's epoch boundary: credit the finished epoch, complete or
+    /// apply the elastic policy, re-admit, and price the next epoch.
+    fn boundary(&mut self, id: JobId) {
+        let mut r = self.running.remove(&id).expect("boundary fired for a live job");
+        let req = &self.spec.plan.jobs[id];
+        let width = r.live_ranks.len();
+        r.iters_done += self.spec.iters_per_epoch;
+        let epoch_samples = self.spec.iters_per_epoch * width as u64 * self.spec.batch as u64;
+        r.samples_done = (r.samples_done + epoch_samples).min(r.target);
+
+        if r.samples_done >= r.target {
+            let nodes = std::mem::take(&mut r.nodes);
+            self.release(&nodes);
+            let outcome = self.outcome_of(r);
+            self.finished.insert(id, outcome);
+            self.try_admit();
+            return;
+        }
+
+        if self.spec.policy == AllocPolicy::Elastic {
+            let at_iter = r.iters_done - 1; // this boundary's iteration
+            if !self.queue.is_empty() && width > req.workers {
+                // Contention: fail-stop the grown ranks at this boundary
+                // and hand their nodes back (highest ranks die, matching
+                // the hub's replay of the synthesized kills).
+                let give = width - req.workers;
+                let mut released = Vec::with_capacity(give);
+                for _ in 0..give {
+                    let rank = r.live_ranks.pop().expect("shrink keeps the gang");
+                    r.events.push(FaultEvent { at_iter, kind: FaultKind::Kill { rank } });
+                    released.push(r.nodes.pop().expect("rank had a node"));
+                }
+                self.release(&released);
+            } else if self.queue.is_empty() {
+                // Idle capacity: grow into every free node.
+                let free = self.free_count();
+                if free > 0 {
+                    let grown = self.alloc(id, free).expect("free nodes just counted");
+                    for node in grown {
+                        r.events.push(FaultEvent { at_iter, kind: FaultKind::Join { client: None } });
+                        r.live_ranks.push(r.next_join_rank);
+                        r.next_join_rank += 1;
+                        r.nodes.push(node);
+                    }
+                }
+            }
+        }
+
+        let new_width = r.live_ranks.len();
+        r.widths.push(new_width);
+        r.epoch_end_s = f64::INFINITY; // repriced below, after admissions
+        let sync_every = r.sync_every;
+        self.running.insert(id, r);
+        self.try_admit();
+        let tenants = self.running.len();
+        let dur = epoch_seconds(self.spec, req, sync_every, new_width, tenants);
+        let r = self.running.get_mut(&id).expect("just reinserted");
+        r.epoch_end_s = self.clock + dur;
+    }
+
+    fn outcome_of(&self, r: Running) -> JobOutcome {
+        let req = &self.spec.plan.jobs[r.id];
+        let fault = FaultPlan { events: r.events };
+        let spec = job_spec(self.spec, req, fault.clone());
+        JobOutcome {
+            id: r.id,
+            name: format!("j{}", r.id),
+            algo: req.algo,
+            codec: req.codec,
+            devices: req.devices,
+            base_workers: req.workers,
+            arrival_s: req.arrival_s,
+            admitted_s: r.admitted_s,
+            finished_s: self.clock,
+            samples: r.target,
+            iters: r.iters_done,
+            widths: r.widths,
+            fault,
+            spec,
+        }
+    }
+
+    /// Cross-check the per-job placement lists against the owner ledger
+    /// and fold the result into the integer conservation audit.
+    fn audit_snapshot(&mut self) {
+        let mut claimed: Vec<Option<JobId>> = vec![None; self.owner.len()];
+        let mut booked = 0usize;
+        let mut bad = 0usize;
+        for r in self.running.values() {
+            for &node in &r.nodes {
+                if claimed[node].is_some() {
+                    bad += 1; // node claimed by two jobs
+                }
+                claimed[node] = Some(r.id);
+                if self.owner[node] != Some(r.id) {
+                    bad += 1; // ledger disagrees with the job's claim
+                }
+                booked += 1;
+            }
+        }
+        for (node, owner) in self.owner.iter().enumerate() {
+            if owner.is_some() && claimed[node] != *owner {
+                bad += 1; // owned node nobody claims (leak)
+            }
+        }
+        let total = self.free_count() + booked;
+        self.audit.snapshots += 1;
+        self.audit.alloc_free_min = self.audit.alloc_free_min.min(total);
+        self.audit.alloc_free_max = self.audit.alloc_free_max.max(total);
+        self.audit.double_booked += bad;
+    }
+}
+
+/// Run the cluster authority on virtual time: admit the arrival plan's
+/// jobs onto the node pool, price every epoch with the contention-aware
+/// α-β-γ model, apply the allocation policy at epoch boundaries, and
+/// return each job's trajectory with its synthesized churn plan.
+pub fn simulate(spec: &ClusterSpec) -> Result<ClusterOutcome> {
+    ensure!(spec.nodes >= 1, "cluster needs at least 1 node, got {}", spec.nodes);
+    ensure!(spec.iters_per_epoch >= 1, "iters_per_epoch must be >= 1");
+    ensure!(spec.batch >= 1, "batch must be >= 1");
+    ensure!(
+        spec.compute_s.is_finite() && spec.compute_s > 0.0,
+        "compute seconds per iteration must be finite and positive, got {}",
+        spec.compute_s
+    );
+    ensure!(!spec.plan.is_empty(), "arrival plan is empty: nothing to schedule");
+    for (id, req) in spec.plan.jobs.iter().enumerate() {
+        ensure!(
+            req.workers <= spec.nodes,
+            "job j{id} wants a gang of {} nodes but the pool has only {} — \
+             it could never be placed",
+            req.workers,
+            spec.nodes
+        );
+    }
+
+    let mut order: Vec<JobId> = (0..spec.plan.jobs.len()).collect();
+    order.sort_by(|&a, &b| {
+        spec.plan.jobs[a].arrival_s.total_cmp(&spec.plan.jobs[b].arrival_s).then(a.cmp(&b))
+    });
+
+    let mut sim = Sim {
+        spec,
+        owner: vec![None; spec.nodes],
+        queue: VecDeque::new(),
+        running: BTreeMap::new(),
+        finished: BTreeMap::new(),
+        clock: 0.0,
+        audit: PoolAudit {
+            snapshots: 0,
+            alloc_free_min: usize::MAX,
+            alloc_free_max: 0,
+            double_booked: 0,
+        },
+    };
+    sim.audit_snapshot();
+
+    let mut next = 0usize;
+    while next < order.len() || !sim.running.is_empty() {
+        let arrival = order.get(next).map(|&id| (spec.plan.jobs[id].arrival_s, id));
+        let boundary = sim
+            .running
+            .values()
+            .map(|r| (r.epoch_end_s, r.id))
+            .min_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        match (arrival, boundary) {
+            // Arrivals first on ties: a boundary's policy decision must
+            // see every job already submitted at that instant.
+            (Some((ta, id)), Some((tb, _))) if ta <= tb => {
+                sim.clock = ta;
+                sim.arrival(id);
+                next += 1;
+            }
+            (_, Some((tb, id))) => {
+                sim.clock = tb;
+                sim.boundary(id);
+            }
+            (Some((ta, id)), None) => {
+                sim.clock = ta;
+                sim.arrival(id);
+                next += 1;
+            }
+            (None, None) => unreachable!("loop condition"),
+        }
+        sim.audit_snapshot();
+    }
+    ensure!(sim.queue.is_empty(), "internal: queued jobs left unplaced");
+
+    let jobs: Vec<JobOutcome> = sim.finished.into_values().collect();
+    let makespan_s = jobs.iter().map(|j| j.finished_s).fold(0.0, f64::max);
+    let total_samples = jobs.iter().map(|j| j.samples).sum();
+    Ok(ClusterOutcome {
+        policy: spec.policy,
+        nodes: spec.nodes,
+        jobs,
+        makespan_s,
+        total_samples,
+        audit: sim.audit,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Threaded execution — replay the synthesized plans for real
+// ---------------------------------------------------------------------------
+
+/// What a worker thread knows about the cluster job it runs inside.
+#[derive(Debug, Clone)]
+pub struct JobTicket {
+    pub id: JobId,
+    pub name: String,
+    /// Total job-local iterations (from the virtual-time trajectory).
+    pub iters: u64,
+}
+
+/// Run the cluster for real: [`simulate`] first, then launch every job's
+/// synthesized [`JobSpec`] concurrently through
+/// [`crate::launcher::launch_with`], each against its own quorum on one
+/// shared [`ClusterScheduler`]. Returns the virtual-time outcome plus each
+/// job's per-worker results (outcome order).
+pub fn execute<F, R>(spec: &ClusterSpec, worker_fn: F) -> Result<(ClusterOutcome, Vec<Vec<R>>)>
+where
+    F: Fn(&JobTicket, WorkerCtx) -> R + Clone + Send + 'static,
+    R: Send + 'static,
+{
+    let outcome = simulate(spec)?;
+    let registry = ClusterScheduler::new();
+    let mut handles = Vec::with_capacity(outcome.jobs.len());
+    for job in &outcome.jobs {
+        let sched = registry.register_job(job.id as u64, job.spec.workers, job.spec.servers)?;
+        let ticket = JobTicket { id: job.id, name: job.name.clone(), iters: job.iters };
+        let jspec = job.spec.clone();
+        let f = worker_fn.clone();
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("cluster-{}", job.name))
+                .spawn(move || launch_with(&jspec, move |ctx| f(&ticket, ctx), sched))
+                .expect("spawn cluster job"),
+        );
+    }
+    let mut results = Vec::with_capacity(handles.len());
+    for (handle, job) in handles.into_iter().zip(&outcome.jobs) {
+        let job_result = handle
+            .join()
+            .expect("cluster job panicked")
+            .with_context(|| format!("cluster job {} failed to launch", job.name))?;
+        registry.finish_job(job.id as u64);
+        results.push(job_result);
+    }
+    Ok((outcome, results))
+}
+
+/// Reference cluster worker: one allreduce per iteration, following the
+/// synthesized membership boundaries exactly like the single-job elastic
+/// protocol. Returns (iterations run, final allreduce sum).
+pub fn allreduce_probe(ticket: &JobTicket, ctx: WorkerCtx) -> (u64, f32) {
+    let total = ticket.iters;
+    let Some(hub) = ctx.hub.clone() else {
+        // Static trajectory: the plain launch path, no boundaries.
+        let mut last = 0.0;
+        for _ in 0..total {
+            last = ctx.kv.pushpull(0, vec![1.0]).wait()[0];
+        }
+        return (total, last);
+    };
+    let mut epochs_done = ctx.join_view.as_ref().map_or(0, |v| v.epoch);
+    let mut iter = ctx.join_view.as_ref().map_or(0, |v| v.boundary_iter + 1);
+    let mut ran = 0;
+    let mut last = 0.0;
+    while iter < total {
+        last = ctx.kv.pushpull(0, vec![1.0]).wait()[0];
+        ran += 1;
+        if hub.boundary_iter(epochs_done) == Some(iter) {
+            ctx.kv.wait_all();
+            if hub.dying_at(epochs_done).contains(&ctx.ps_rank) {
+                return (ran, last);
+            }
+            let handout = hub.reconfigure(ctx.ps_rank);
+            epochs_done = handout.view.epoch;
+            if let Some(comm) = handout.comm {
+                drop(ctx.kv.replace_comm(comm));
+            }
+        }
+        iter += 1;
+    }
+    (ran, last)
+}
+
+// ---------------------------------------------------------------------------
+// Tests
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::launcher::{launch, ElasticHub};
+    use crate::ps::Scheduler;
+
+    fn plan(s: &str) -> ArrivalPlan {
+        ArrivalPlan::parse(s).unwrap()
+    }
+
+    /// Small, fast spec: pure-arithmetic epochs on the virtual plane.
+    fn spec(nodes: usize, policy: AllocPolicy, arrivals: &str) -> ClusterSpec {
+        let mut s = ClusterSpec::with_defaults(nodes, policy, plan(arrivals));
+        s.iters_per_epoch = 4;
+        s.batch = 8;
+        s.compute_s = 1.0;
+        s.bytes = 1 << 20;
+        s
+    }
+
+    #[test]
+    fn arrival_plan_parses_and_round_trips() {
+        let p = plan("mpi-SGD:4x6@0, mpi-ESGD.int8:2x6@120,mpi-SGD.topk.2:2x4@60");
+        assert_eq!(p.jobs.len(), 3);
+        // Sorted by arrival: the topk job moved to the middle.
+        assert_eq!(p.jobs[1].codec, Codec::named("topk"));
+        assert_eq!(p.jobs[1].devices, 2);
+        assert_eq!(p.jobs[1].arrival_s, 60.0);
+        assert_eq!(p.jobs[2].codec, Codec::named("int8"));
+        assert_eq!(p.jobs[0].workers, 4);
+        assert_eq!(p.jobs[0].epochs, 6);
+        assert_eq!(p.jobs[0].codec, Codec::identity());
+        assert_eq!(p.jobs[0].devices, 1);
+        assert_eq!(ArrivalPlan::parse(&p.render()).unwrap(), p);
+        assert!(ArrivalPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn arrival_plan_rejects_garbage() {
+        for bad in [
+            "mpi-SGD:4x6",          // missing @arrival
+            "mpi-SGD:4@0",          // missing epochs
+            "mpi-SGD:0x6@0",        // zero workers
+            "mpi-SGD:4x0@0",        // zero epochs
+            "nosuch-algo:4x6@0",    // unregistered strategy
+            "dist-SGD:4x6@0",       // dist mode: no client worlds to rebuild
+            "mpi-SGD.nosuch:4x6@0", // unregistered codec
+            "mpi-SGD.int8.0:4x6@0", // zero devices
+            "mpi-SGD:4x6@-5",       // negative arrival
+            "mpi-SGD.int8.2.9:4x6@0", // too many fields
+        ] {
+            assert!(ArrivalPlan::parse(bad).is_err(), "{bad:?} parsed");
+        }
+    }
+
+    #[test]
+    fn gang_placement_is_all_or_nothing() {
+        // Pool of 4; two 3-wide gangs arriving together: the second must
+        // wait for the first to finish — never a partial 1-node world.
+        let out = simulate(&spec(4, AllocPolicy::Static, "mpi-SGD:3x2@0,mpi-SGD:3x2@0")).unwrap();
+        let (a, b) = (&out.jobs[0], &out.jobs[1]);
+        assert_eq!(a.admitted_s, 0.0);
+        assert_eq!(b.admitted_s, a.finished_s, "gang waits for a full 3-node hole");
+        assert!(a.widths.iter().all(|&w| w == 3));
+        assert!(b.widths.iter().all(|&w| w == 3));
+        assert_eq!(out.audit.double_booked, 0);
+        assert_eq!(out.audit.alloc_free_min, 4);
+        assert_eq!(out.audit.alloc_free_max, 4);
+    }
+
+    #[test]
+    fn pool_conserved_across_admit_complete_and_shrink() {
+        // Elastic churn on a contended pool: grow, shrink, complete — the
+        // integer ledger must balance after every event.
+        let out = simulate(&spec(
+            8,
+            AllocPolicy::Elastic,
+            "mpi-SGD:2x4@0,mpi-SGD:4x3@30,mpi-ESGD.int8:2x4@45",
+        ))
+        .unwrap();
+        assert!(out.audit.snapshots > 0);
+        assert_eq!(out.audit.double_booked, 0, "a node was double-booked");
+        assert_eq!(out.audit.alloc_free_min, 8, "nodes leaked from the pool");
+        assert_eq!(out.audit.alloc_free_max, 8, "nodes conjured into the pool");
+        assert_eq!(out.jobs.len(), 3);
+    }
+
+    #[test]
+    fn static_policy_never_synthesizes_churn() {
+        let out =
+            simulate(&spec(8, AllocPolicy::Static, "mpi-SGD:2x3@0,mpi-SGD:2x3@10")).unwrap();
+        for j in &out.jobs {
+            assert!(j.fault.is_empty(), "{} got churn under static allocation", j.name);
+            assert!(j.widths.iter().all(|&w| w == j.base_workers));
+        }
+    }
+
+    #[test]
+    fn elastic_grows_into_idle_nodes_and_shrinks_under_contention() {
+        // j0 alone on 6 nodes grows past its gang of 2; when j1's arrival
+        // queues behind the grown allocation, j0 must shrink back to its
+        // gang width at its next boundary so j1's gang fits.
+        let out =
+            simulate(&spec(6, AllocPolicy::Elastic, "mpi-SGD:2x8@0,mpi-SGD:6x2@9")).unwrap();
+        let j0 = &out.jobs[0];
+        assert!(j0.widths.iter().any(|&w| w > 2), "j0 never grew: {:?}", j0.widths);
+        let joins = j0.fault.n_joins();
+        let kills = j0.fault.events.len() - joins;
+        assert!(joins > 0, "no synthesized joins: {}", j0.fault.render());
+        assert!(kills > 0, "no synthesized kills: {}", j0.fault.render());
+        // Post-shrink the gang width is restored, never undercut.
+        assert!(j0.widths.iter().all(|&w| w >= 2));
+        let j1 = &out.jobs[1];
+        assert_eq!(j1.widths, vec![6; j1.widths.len()]);
+        // Faster than static on the same plan: that's the whole point.
+        let st = simulate(&spec(6, AllocPolicy::Static, "mpi-SGD:2x8@0,mpi-SGD:6x2@9")).unwrap();
+        assert!(out.makespan_s < st.makespan_s, "{} vs {}", out.makespan_s, st.makespan_s);
+    }
+
+    #[test]
+    fn synthesized_plans_are_valid_elastic_hub_schedules() {
+        // The policy layer reuses the PR 3 machinery: every synthesized
+        // plan must be accepted by ElasticHub::new, and the hub's epoch
+        // tables must reproduce the authority's recorded widths.
+        let out = simulate(&spec(
+            8,
+            AllocPolicy::Elastic,
+            "mpi-SGD:2x5@0,mpi-SGD:4x3@20,mpi-SGD.topk:2x4@40",
+        ))
+        .unwrap();
+        let ipe = 4u64;
+        for j in &out.jobs {
+            let hub = ElasticHub::new(&j.spec, Scheduler::new(0, 0), None)
+                .unwrap_or_else(|e| panic!("{}: plan {:?} rejected: {e}", j.name, j.fault.render()));
+            for e in 0..hub.n_epochs() as u64 {
+                let b = hub.boundary_iter(e).unwrap();
+                assert_eq!((b + 1) % ipe, 0, "boundary off the epoch grid");
+                let epoch_idx = ((b + 1) / ipe) as usize;
+                assert_eq!(
+                    hub.members_after(e).len(),
+                    j.widths[epoch_idx],
+                    "{}: hub width diverges from the authority at epoch {epoch_idx}",
+                    j.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn single_job_cluster_is_bitwise_identical_to_plain_launch() {
+        // Pool == gang width: no growth possible, the synthesized plan is
+        // empty, and the cluster path must be bit-for-bit the plain
+        // single-job launch.
+        let cspec = spec(3, AllocPolicy::Elastic, "mpi-SGD:3x2@0");
+        let (outcome, results) = execute(&cspec, allreduce_probe).unwrap();
+        assert_eq!(outcome.jobs.len(), 1);
+        let job = &outcome.jobs[0];
+        assert!(job.fault.is_empty(), "alone at full pool: nothing to synthesize");
+        let direct = launch(&job.spec, {
+            let ticket = JobTicket { id: 0, name: "j0".into(), iters: job.iters };
+            move |ctx| allreduce_probe(&ticket, ctx)
+        })
+        .unwrap();
+        assert_eq!(results[0], direct, "cluster path diverged from plain launch");
+        // And the payload is the expected full-world allreduce sum.
+        for &(ran, last) in &results[0] {
+            assert_eq!(ran, job.iters);
+            assert_eq!(last, 3.0);
+        }
+    }
+
+    #[test]
+    fn execute_runs_concurrent_jobs_with_synthesized_churn() {
+        // Two jobs on 4 nodes: j0 grows to 4 while alone, then shrinks
+        // back to its gang when j1 queues; both replay their synthesized
+        // plans on real threads against per-job quorums on one
+        // ClusterScheduler.
+        let cspec = spec(4, AllocPolicy::Elastic, "mpi-SGD:2x6@0,mpi-SGD:4x2@9");
+        let (outcome, results) = execute(&cspec, allreduce_probe).unwrap();
+        assert_eq!(results.len(), 2);
+        let j0 = &outcome.jobs[0];
+        let joins = j0.fault.n_joins();
+        let kills = j0.fault.events.len() - joins;
+        assert!(joins > 0 && kills > 0, "j0 should have grown and shrunk");
+        // One result per launched rank: gang + synthesized joiners.
+        assert_eq!(results[0].len(), j0.base_workers + joins);
+        // Ranks that survive to the end run every planned iteration, and
+        // their final allreduce sums the last epoch's world.
+        let (ran0, last0) = results[0][0];
+        assert_eq!(ran0, j0.iters);
+        assert_eq!(last0, j0.widths.last().map(|&w| w as f32).unwrap());
+        let j1 = &outcome.jobs[1];
+        assert!(j1.fault.is_empty(), "j1 fills the pool: nothing to synthesize");
+        for &(ran, last) in &results[1] {
+            assert_eq!(ran, j1.iters);
+            assert_eq!(last, 4.0);
+        }
+    }
+}

@@ -199,6 +199,22 @@ pub fn select_best_chunked(
         .expect("non-empty algorithm set")
 }
 
+/// [`network_allreduce_seconds`] for a job co-located with `tenants`
+/// running jobs on one cluster (the authority's contention pricing,
+/// ISSUE 9): the allreduce is modeled on the `tenants`-way partitioned
+/// fabric of [`CostParams::contended`] — bandwidth terms inflate with
+/// tenancy, per-message latency does not. `tenants <= 1` is exactly the
+/// uncontended model.
+pub fn contended_allreduce_seconds(
+    kind: AlgoKind,
+    p: usize,
+    bytes: usize,
+    tenants: usize,
+    params: &CostParams,
+) -> f64 {
+    network_allreduce_seconds(kind, p, bytes, &params.contended(tenants))
+}
+
 // ---------------------------------------------------------------------------
 // Compute/communication overlap (DAG-embedded collectives)
 // ---------------------------------------------------------------------------
@@ -497,6 +513,19 @@ mod tests {
                 .unwrap();
             assert_eq!(best.design_label, "ring-IBMGpu(2)", "at {bytes}: {res:?}");
         }
+    }
+
+    #[test]
+    fn contended_allreduce_prices_tenancy_monotonically() {
+        let m = minsky();
+        let (p, bytes) = (8, 16 << 20);
+        let solo = contended_allreduce_seconds(AlgoKind::Ring, p, bytes, 1, &m);
+        assert_eq!(solo, network_allreduce_seconds(AlgoKind::Ring, p, bytes, &m));
+        let two = contended_allreduce_seconds(AlgoKind::Ring, p, bytes, 2, &m);
+        let four = contended_allreduce_seconds(AlgoKind::Ring, p, bytes, 4, &m);
+        assert!(solo < two && two < four, "{solo} {two} {four}");
+        // Single-rank jobs never touch the shared fabric: free at any tenancy.
+        assert_eq!(contended_allreduce_seconds(AlgoKind::Ring, 1, bytes, 4, &m), 0.0);
     }
 
     #[test]

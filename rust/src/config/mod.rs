@@ -112,6 +112,16 @@ pub struct ExperimentConfig {
     /// `straggle:R@NxF`, `join@N`, `join:C@N`, comma-separated; empty =
     /// static job). MPI modes only — elasticity is the hybrid's story.
     pub fault: String,
+    /// Shared node-pool size for the cluster authority (one worker rank
+    /// per node).
+    pub cluster_nodes: usize,
+    /// Cluster allocation policy: "static" (jobs hold exactly their gang)
+    /// or "elastic" (grow into idle nodes, shrink under contention).
+    pub cluster_policy: String,
+    /// Scripted job arrivals (the `--arrivals` grammar:
+    /// `ALGO[.CODEC[.DEVICES]]:WxE@T`, comma-separated; empty = no
+    /// cluster workload). The cluster-level analogue of `fault`.
+    pub arrivals: String,
 }
 
 impl ExperimentConfig {
@@ -158,6 +168,9 @@ impl ExperimentConfig {
             eval_samples: 512,
             virtual_model_bytes: 102 << 20, // ResNet-50 f32 params
             fault: String::new(),
+            cluster_nodes: 8,
+            cluster_policy: "elastic".into(),
+            arrivals: String::new(),
         }
     }
 
@@ -165,6 +178,19 @@ impl ExperimentConfig {
     /// empty).
     pub fn fault_plan(&self) -> Result<FaultPlan> {
         FaultPlan::parse(&self.fault)
+    }
+
+    /// Parsed cluster allocation policy; unknown strings fall back to
+    /// elastic (the JSON/CLI boundaries reject unknown names outright).
+    pub fn alloc_policy(&self) -> crate::cluster::AllocPolicy {
+        crate::cluster::AllocPolicy::parse(&self.cluster_policy)
+            .unwrap_or(crate::cluster::AllocPolicy::Elastic)
+    }
+
+    /// Parsed job-arrival schedule (`Ok` of an empty plan when `arrivals`
+    /// is empty).
+    pub fn arrival_plan(&self) -> Result<crate::cluster::ArrivalPlan> {
+        crate::cluster::ArrivalPlan::parse(&self.arrivals)
     }
 
     pub fn workers_per_client(&self) -> usize {
@@ -242,6 +268,9 @@ impl ExperimentConfig {
             ("eval_samples", Value::num(self.eval_samples as f64)),
             ("virtual_model_bytes", Value::num(self.virtual_model_bytes as f64)),
             ("fault", Value::str(&self.fault)),
+            ("cluster_nodes", Value::num(self.cluster_nodes as f64)),
+            ("cluster_policy", Value::str(&self.cluster_policy)),
+            ("arrivals", Value::str(&self.arrivals)),
         ])
     }
 
@@ -343,6 +372,23 @@ impl ExperimentConfig {
         // mid-launch.
         c.fault_plan()
             .with_context(|| format!("config field \"fault\" = {:?}", c.fault))?;
+        c.cluster_nodes = getu("cluster_nodes", c.cluster_nodes as f64)? as usize;
+        anyhow::ensure!(
+            c.cluster_nodes >= 1,
+            "config field \"cluster_nodes\" must be >= 1 (the pool needs a node), got {}",
+            c.cluster_nodes
+        );
+        c.cluster_policy = gets("cluster_policy", &c.cluster_policy);
+        anyhow::ensure!(
+            crate::cluster::AllocPolicy::parse(&c.cluster_policy).is_some(),
+            "unknown cluster_policy {:?} (valid: static, elastic)",
+            c.cluster_policy
+        );
+        c.arrivals = gets("arrivals", &c.arrivals);
+        // Same boundary discipline as `fault`: a malformed arrival grammar
+        // dies here with the field named, not mid-schedule.
+        c.arrival_plan()
+            .with_context(|| format!("config field \"arrivals\" = {:?}", c.arrivals))?;
         Ok(c)
     }
 
@@ -519,6 +565,35 @@ mod tests {
         // Malformed grammar rejected at the JSON boundary.
         c.fault = "explode:1@5".into();
         assert!(ExperimentConfig::from_json(&c.to_json()).is_err());
+    }
+
+    #[test]
+    fn cluster_knobs_round_trip_and_validate() {
+        let mut c = ExperimentConfig::testbed1(Algo::named("mpi-SGD"));
+        assert_eq!(c.cluster_nodes, 8);
+        assert_eq!(c.alloc_policy(), crate::cluster::AllocPolicy::Elastic);
+        assert!(c.arrival_plan().unwrap().is_empty());
+        c.cluster_nodes = 16;
+        c.cluster_policy = "static".into();
+        c.arrivals = "mpi-SGD:4x6@0,mpi-ESGD.int8:2x6@120".into();
+        let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.cluster_nodes, 16);
+        assert_eq!(c2.alloc_policy(), crate::cluster::AllocPolicy::Static);
+        assert_eq!(c2.arrival_plan().unwrap().jobs.len(), 2);
+        // Unknown policy and malformed arrival grammar die at the JSON
+        // boundary with the field named.
+        c.cluster_policy = "greedy".into();
+        let err = ExperimentConfig::from_json(&c.to_json()).unwrap_err();
+        assert!(format!("{err:#}").contains("cluster_policy"));
+        c.cluster_policy = "elastic".into();
+        c.arrivals = "mpi-SGD:4x6".into();
+        let err = ExperimentConfig::from_json(&c.to_json()).unwrap_err();
+        assert!(format!("{err:#}").contains("arrivals"));
+        // A zero-node pool could never place a gang.
+        c.arrivals = String::new();
+        c.cluster_nodes = 0;
+        let err = ExperimentConfig::from_json(&c.to_json()).unwrap_err();
+        assert!(format!("{err:#}").contains("cluster_nodes"));
     }
 
     #[test]

@@ -16,7 +16,7 @@ use crate::kvstore::{KvType, KvWorker};
 use crate::mpisim::{Comm, World};
 use crate::netsim::CostParams;
 use crate::ps::{FaultKind, FaultPlan, PsClient, Role, Scheduler, ServerGroup, SyncMode};
-use anyhow::{ensure, Result};
+use anyhow::{ensure, Context, Result};
 use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::sync::{Arc, Condvar, Mutex};
 
@@ -212,7 +212,18 @@ impl ElasticHub {
     /// the plan is inconsistent: killing a rank that is not live, or
     /// leaving an epoch with no survivors.
     pub fn new(spec: &JobSpec, sched: Scheduler, ps_ctl: Option<PsClient>) -> Result<Self> {
-        let wpc = spec.workers / spec.clients.max(1);
+        ensure!(
+            spec.clients >= 1,
+            "elastic job needs at least 1 client, got clients={}",
+            spec.clients
+        );
+        ensure!(
+            spec.workers % spec.clients == 0,
+            "workers must divide evenly into clients: workers={} clients={}",
+            spec.workers,
+            spec.clients
+        );
+        let wpc = spec.workers / spec.clients;
         let cadence = spec.reconfig_every.max(1);
         // Live set evolves as we walk the plan.
         let mut live: BTreeMap<usize, usize> =
@@ -587,27 +598,49 @@ pub struct WorkerCtx {
 /// With a non-empty `spec.fault` the job is *elastic*: an [`ElasticHub`]
 /// is wired into every [`WorkerCtx`] and one extra worker thread is
 /// pre-spawned per planned join, parked until its admission epoch.
-pub fn launch<F, R>(spec: &JobSpec, worker_fn: F) -> Vec<R>
+///
+/// Errors on an inconsistent spec or fault plan ([`ElasticHub::new`]'s
+/// diagnostics — which name the offending rank and iteration — propagate
+/// verbatim).
+pub fn launch<F, R>(spec: &JobSpec, worker_fn: F) -> Result<Vec<R>>
 where
     F: Fn(WorkerCtx) -> R + Clone + Send + 'static,
     R: Send + 'static,
 {
-    assert!(spec.workers >= 1);
-    assert!(spec.clients >= 1 && spec.clients <= spec.workers);
-    assert_eq!(
-        spec.workers % spec.clients,
-        0,
-        "workers must divide evenly into clients"
+    // One-job-per-process: the job owns its private scheduler, exactly as
+    // before the cluster authority existed.
+    launch_with(spec, worker_fn, Scheduler::new(spec.workers, spec.servers))
+}
+
+/// [`launch`] against a caller-supplied [`Scheduler`] — the seam the
+/// cluster authority uses to run several jobs against per-job quorums
+/// registered on one [`crate::ps::ClusterScheduler`]. A plain [`launch`]
+/// is exactly `launch_with(spec, f, Scheduler::new(workers, servers))`,
+/// so a cluster running one job takes the identical code path.
+pub fn launch_with<F, R>(spec: &JobSpec, worker_fn: F, scheduler: Scheduler) -> Result<Vec<R>>
+where
+    F: Fn(WorkerCtx) -> R + Clone + Send + 'static,
+    R: Send + 'static,
+{
+    ensure!(spec.workers >= 1, "job needs at least 1 worker");
+    ensure!(
+        spec.clients >= 1 && spec.clients <= spec.workers,
+        "clients must be in 1..=workers: workers={} clients={}",
+        spec.workers,
+        spec.clients
     );
-    assert!(
+    ensure!(
+        spec.workers % spec.clients == 0,
+        "workers must divide evenly into clients: workers={} clients={}",
+        spec.workers,
+        spec.clients
+    );
+    ensure!(
         spec.fault.is_empty() || spec.ktype.is_mpi(),
         "fault plans require an MPI kvstore type: elasticity is the \
          PS+MPI hybrid's story, dist modes have no client worlds to rebuild"
     );
     let wpc = spec.workers / spec.clients;
-
-    // 1. Scheduler first (§4.1.2): it must be up before anyone connects.
-    let scheduler = Scheduler::new(spec.workers, spec.servers);
 
     // 2. PS servers (skipped entirely for pure-MPI jobs).
     let servers = if spec.servers > 0 {
@@ -623,18 +656,24 @@ where
         None
     };
 
-    // 2b. Elastic control plane (only when the plan scripts churn).
+    // 2b. Elastic control plane (only when the plan scripts churn). A bad
+    // plan surfaces the hub's own diagnostic (rank + iteration) verbatim.
     let hub: Option<Arc<ElasticHub>> = if spec.fault.is_empty() {
         None
     } else {
-        Some(Arc::new(
-            ElasticHub::new(
-                spec,
-                scheduler.handle(),
-                servers.as_ref().map(|g| g.client()),
-            )
-            .expect("invalid fault plan for this job"),
-        ))
+        match ElasticHub::new(
+            spec,
+            scheduler.handle(),
+            servers.as_ref().map(|g| g.client()),
+        ) {
+            Ok(hub) => Some(Arc::new(hub)),
+            Err(e) => {
+                if let Some(group) = servers {
+                    group.shutdown();
+                }
+                return Err(e.context("invalid fault plan for this job"));
+            }
+        }
     };
 
     // 3. One MPI_COMM_WORLD per client (each client is a separate mpirun
@@ -722,7 +761,7 @@ where
     if let Some(group) = servers {
         group.shutdown();
     }
-    results.into_iter().map(|(_, r)| r).collect()
+    Ok(results.into_iter().map(|(_, r)| r).collect())
 }
 
 #[cfg(test)]
@@ -757,7 +796,8 @@ mod tests {
         let out = launch(&spec, |ctx| {
             let v = ctx.kv.pushpull(0, vec![1.0, (ctx.ps_rank + 1) as f32]).wait();
             v
-        });
+        })
+        .unwrap();
         assert_eq!(out.len(), 4);
         for v in out {
             assert_eq!(v, vec![4.0, 10.0]);
@@ -770,7 +810,8 @@ mod tests {
         let out = launch(&spec, |ctx| {
             let v = ctx.kv.pushpull(0, vec![1.0]).wait();
             (ctx.client_id, ctx.mpi_rank, v[0])
-        });
+        })
+        .unwrap();
         // Each client has 2 workers: allreduce sums within the client only.
         for (client, rank, sum) in out {
             assert!(client < 2 && rank < 2);
@@ -793,7 +834,8 @@ mod tests {
             }
             ctx.kv.push(0, vec![1.0]);
             ctx.kv.pull(0).wait()[0]
-        });
+        })
+        .unwrap();
         for v in out {
             assert_eq!(v, -3.0);
         }
@@ -814,7 +856,8 @@ mod tests {
             }
             ctx.kv.push(0, vec![1.0]);
             ctx.kv.pull(0).wait()[0]
-        });
+        })
+        .unwrap();
         // 2 clients x client-sum 2.0 => server applies w = 0 - 4.
         for v in out {
             assert_eq!(v, -4.0);
@@ -822,10 +865,26 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "divide evenly")]
     fn uneven_clients_rejected() {
         let spec = mpi_spec(5, 2);
-        launch(&spec, |_| ());
+        let err = launch(&spec, |_| ()).unwrap_err().to_string();
+        assert!(
+            err.contains("divide evenly") && err.contains("workers=5") && err.contains("clients=2"),
+            "error must name both values: {err}"
+        );
+    }
+
+    #[test]
+    fn hub_rejects_non_divisible_workers_clients() {
+        let mut spec = mpi_spec(5, 2);
+        spec.fault = FaultPlan::parse("kill:1@0").unwrap();
+        let err = ElasticHub::new(&spec, Scheduler::new(0, 0), None)
+            .unwrap_err()
+            .to_string();
+        assert!(
+            err.contains("workers=5") && err.contains("clients=2"),
+            "error must name both values: {err}"
+        );
     }
 
     // -- elasticity ---------------------------------------------------------
@@ -865,7 +924,7 @@ mod tests {
         // would deadlock waiting on the dead rank forever).
         let mut spec = mpi_spec(4, 1);
         spec.fault = FaultPlan::parse("kill:3@1").unwrap();
-        let out = launch(&spec, |ctx| elastic_worker(ctx, 4));
+        let out = launch(&spec, |ctx| elastic_worker(ctx, 4)).unwrap();
         assert_eq!(out.len(), 4);
         for (rank, (ran, last)) in out.iter().enumerate() {
             if rank == 3 {
@@ -883,7 +942,7 @@ mod tests {
         // 2 ranks + a joiner at iter 1: iterations 2..4 sum over 3 ranks.
         let mut spec = mpi_spec(2, 1);
         spec.fault = FaultPlan::parse("join@1").unwrap();
-        let out = launch(&spec, |ctx| elastic_worker(ctx, 4));
+        let out = launch(&spec, |ctx| elastic_worker(ctx, 4)).unwrap();
         assert_eq!(out.len(), 3);
         for (rank, (ran, last)) in out.iter().enumerate() {
             if rank == 2 {
@@ -902,7 +961,7 @@ mod tests {
         // for client 1; client 0 goes 2 -> 1 -> 2.
         let mut spec = mpi_spec(4, 2);
         spec.fault = FaultPlan::parse("kill:1@0,join@1").unwrap();
-        let out = launch(&spec, |ctx| elastic_worker(ctx, 4));
+        let out = launch(&spec, |ctx| elastic_worker(ctx, 4)).unwrap();
         assert_eq!(out.len(), 5);
         let (ran1, _) = out[1];
         assert_eq!(ran1, 1); // killed at the iter-0 boundary
@@ -949,7 +1008,8 @@ mod tests {
             // Iter 1: the 2 survivors push (aggregate 2.0), pull.
             ctx.kv.push(0, vec![1.0]);
             (v0, ctx.kv.pull(0).wait()[0])
-        });
+        })
+        .unwrap();
         assert_eq!(out[0].0, -3.0);
         assert_eq!(out[1].0, -3.0);
         assert!(out[2].1.is_nan());
@@ -961,10 +1021,21 @@ mod tests {
     fn fault_plan_on_dist_mode_rejected() {
         let mut spec = JobSpec::from_algo(Algo::named("dist-SGD"), 2, 1, 2);
         spec.fault = FaultPlan::parse("kill:1@0").unwrap();
-        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            launch(&spec, |_| ());
-        }));
-        assert!(result.is_err());
+        let err = launch(&spec, |_| ()).unwrap_err().to_string();
+        assert!(err.contains("MPI kvstore type"), "got: {err}");
+    }
+
+    #[test]
+    fn launch_propagates_hub_diagnostic_with_rank_and_iteration() {
+        // Killing a never-live rank: the surfaced error must carry the
+        // hub's own diagnostic, not a detail-free launcher panic.
+        let mut spec = mpi_spec(2, 1);
+        spec.fault = FaultPlan::parse("kill:7@3").unwrap();
+        let err = format!("{:#}", launch(&spec, |_| ()).unwrap_err());
+        assert!(
+            err.contains("kills rank 7") && err.contains("iter 3"),
+            "error must name the rank and iteration: {err}"
+        );
     }
 
     #[test]

@@ -32,6 +32,7 @@
 #![allow(clippy::too_many_arguments)]
 
 pub mod analysis;
+pub mod cluster;
 pub mod collectives;
 pub mod compress;
 pub mod config;

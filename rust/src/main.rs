@@ -15,10 +15,14 @@
 //!           (deadlock / tag-window / coverage / elastic-epoch / engine
 //!           plans) and prove the verifier on the seeded-mutant suite.
 //!           Exits non-zero on any finding — the CI gate.
+//!   cluster --nodes 8 --policy elastic --arrivals mpi-SGD:4x6@0,...
+//!           Run the multi-tenant cluster authority on a scripted job
+//!           arrival plan and compare static vs elastic goodput.
 //!   info
 //!           Show artifact metadata and testbed presets.
 
 use anyhow::{bail, Context, Result};
+use mxnet_mpi::cluster::{simulate, AllocPolicy, ArrivalPlan, ClusterSpec};
 use mxnet_mpi::config::{Algo, ExperimentConfig};
 use mxnet_mpi::metrics::Table;
 use std::path::PathBuf;
@@ -27,7 +31,7 @@ fn usage() -> ! {
     // The algorithm list is derived from the registry, so this text can
     // never drift from the set of runnable strategies.
     eprintln!(
-        "usage: mxnet-mpi <train|sim|figures|collectives|commcheck|info> [flags]\n\
+        "usage: mxnet-mpi <train|sim|figures|collectives|commcheck|cluster|info> [flags]\n\
          flags for train/sim:\n\
            --algo NAME            one of: {} (case-insensitive)\n\
            --variant NAME         model variant (default mlp)\n\
@@ -51,7 +55,15 @@ fn usage() -> ! {
                                   (kill:R@N | straggle:R@NxF | join[:C]@N)\n\
            --config FILE.json     load an ExperimentConfig (flags override)\n\
            --artifacts DIR        (default ./artifacts)\n\
-           --out DIR              results dir (default ./results)",
+           --out DIR              results dir (default ./results)\n\
+         flags for cluster:\n\
+           --nodes N              shared node-pool size (default 8)\n\
+           --policy static|elastic  allocation policy (default elastic)\n\
+           --arrivals PLAN        scripted job arrivals, comma-separated\n\
+                                  ALGO[.CODEC[.DEVICES]]:WxE@T — W nodes\n\
+                                  arrive wanting E epochs at second T,\n\
+                                  e.g. mpi-SGD:4x6@0,mpi-ESGD.int8:2x6@120\n\
+           --epoch-iters N        iterations per membership epoch (default 8)",
         Algo::names().join(", "),
         mxnet_mpi::compress::Codec::names().join(", ")
     );
@@ -193,6 +205,33 @@ fn build_config(args: &Args) -> Result<ExperimentConfig> {
     Ok(cfg)
 }
 
+/// Assemble the cluster authority's spec from CLI flags over config
+/// defaults (`--config` respected like train/sim).
+fn build_cluster_spec(args: &Args) -> Result<ClusterSpec> {
+    let cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::load(std::path::Path::new(path))?,
+        None => ExperimentConfig::testbed1(Algo::named("mpi-SGD")),
+    };
+    let nodes = args.num::<usize>("nodes")?.unwrap_or(cfg.cluster_nodes);
+    let policy_name = args.get("policy").unwrap_or(&cfg.cluster_policy);
+    let policy = AllocPolicy::parse(policy_name).with_context(|| {
+        format!("unknown --policy {policy_name:?} (valid: static, elastic)")
+    })?;
+    let arrivals = args.get("arrivals").unwrap_or(&cfg.arrivals);
+    let plan = ArrivalPlan::parse(arrivals)
+        .with_context(|| format!("bad --arrivals {arrivals:?}"))?;
+    anyhow::ensure!(
+        !plan.is_empty(),
+        "no jobs to schedule: pass --arrivals ALGO[.CODEC[.DEVICES]]:WxE@T,..."
+    );
+    let mut spec = ClusterSpec::with_defaults(nodes, policy, plan);
+    if let Some(n) = args.num::<u64>("epoch-iters")? {
+        anyhow::ensure!(n >= 1, "--epoch-iters must be >= 1, got {n}");
+        spec.iters_per_epoch = n;
+    }
+    Ok(spec)
+}
+
 fn print_run(run: &mxnet_mpi::metrics::RunResult) {
     let mut t = Table::new(&["epoch", "time_s", "train_loss", "val_loss", "val_acc"]);
     for r in &run.records {
@@ -328,6 +367,60 @@ fn main() -> Result<()> {
                 outcomes.len()
             );
         }
+        "cluster" => {
+            let spec = build_cluster_spec(&args)?;
+            println!(
+                "cluster: {} nodes, {} policy, {} job(s)",
+                spec.nodes,
+                spec.policy.name(),
+                spec.plan.jobs.len()
+            );
+            let run = simulate(&spec)?;
+            let mut t = Table::new(&[
+                "job", "algo", "codec", "dev", "gang", "arrive_s", "admit_s", "finish_s",
+                "widths", "samples",
+            ]);
+            for j in &run.jobs {
+                let widths: Vec<String> = j.widths.iter().map(|w| w.to_string()).collect();
+                t.row(vec![
+                    j.name.clone(),
+                    j.algo.name().to_string(),
+                    j.codec.name().to_string(),
+                    j.devices.to_string(),
+                    j.base_workers.to_string(),
+                    format!("{:.0}", j.arrival_s),
+                    format!("{:.0}", j.admitted_s),
+                    format!("{:.0}", j.finished_s),
+                    widths.join(">"),
+                    j.samples.to_string(),
+                ]);
+            }
+            println!("{}", t.render());
+            println!(
+                "pool audit: {} snapshots, conservation [{}, {}] of {} nodes, {} double-bookings",
+                run.audit.snapshots,
+                run.audit.alloc_free_min,
+                run.audit.alloc_free_max,
+                run.nodes,
+                run.audit.double_booked
+            );
+            // Both policies on the same plan: the elasticity headline.
+            let mut other = spec.clone();
+            other.policy = match spec.policy {
+                AllocPolicy::Static => AllocPolicy::Elastic,
+                AllocPolicy::Elastic => AllocPolicy::Static,
+            };
+            let alt = simulate(&other)?;
+            println!(
+                "{}: makespan {:.0}s, goodput {:.1} samples/s | {}: makespan {:.0}s, goodput {:.1} samples/s",
+                spec.policy.name(),
+                run.makespan_s,
+                run.goodput(),
+                other.policy.name(),
+                alt.makespan_s,
+                alt.goodput()
+            );
+        }
         "info" => {
             let meta = mxnet_mpi::jsonlite::parse_file(&artifacts.join("meta.json"))?;
             let mut t = Table::new(&["variant", "params", "batch", "keys"]);
@@ -414,6 +507,31 @@ mod tests {
         // A negative count fails in num() with the flag named, like --workers -3.
         let err = build_config(&Args::parse(&argv(&["--devices", "-2"]))).unwrap_err();
         assert!(format!("{err:#}").contains("devices"), "{err:#}");
+    }
+
+    #[test]
+    fn cluster_flags_build_a_spec_and_reject_garbage() {
+        let args = Args::parse(&argv(&[
+            "--nodes", "6", "--policy", "static",
+            "--arrivals", "mpi-SGD:2x4@0,mpi-ESGD.int8:2x4@30",
+            "--epoch-iters", "4",
+        ]));
+        let spec = build_cluster_spec(&args).unwrap();
+        assert_eq!(spec.nodes, 6);
+        assert_eq!(spec.policy, AllocPolicy::Static);
+        assert_eq!(spec.plan.jobs.len(), 2);
+        assert_eq!(spec.iters_per_epoch, 4);
+        // Unknown policy, malformed plan and an empty plan all die loudly.
+        let err = build_cluster_spec(&Args::parse(&argv(&[
+            "--policy", "greedy", "--arrivals", "mpi-SGD:2x4@0",
+        ])))
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("--policy"), "{err:#}");
+        let err = build_cluster_spec(&Args::parse(&argv(&["--arrivals", "mpi-SGD:2x4"])))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("--arrivals"), "{err:#}");
+        let err = build_cluster_spec(&Args::parse(&argv(&[]))).unwrap_err();
+        assert!(format!("{err:#}").contains("no jobs"), "{err:#}");
     }
 
     #[test]

@@ -172,6 +172,22 @@ impl CostParams {
         };
         self.reconfig_alpha + barrier + bootstrap
     }
+
+    /// Price this parameter set on a fabric shared by `tenants` co-located
+    /// jobs (the cluster authority's contention model, ISSUE 9): the
+    /// inter-node bandwidth terms — MPI verbs (`beta_net`) and the
+    /// TCP-class PS transport (`beta_ps`) — are partitioned `tenants`
+    /// ways, so each job sees 1/t of the shared links. Per-message latency
+    /// (`alpha_net`) and everything intra-node (device fabric, host
+    /// memory, GPU paths) are unshared and unchanged; `tenants <= 1` is
+    /// the identity.
+    pub fn contended(&self, tenants: usize) -> Self {
+        let t = tenants.max(1) as f64;
+        let mut p = self.clone();
+        p.beta_net *= t;
+        p.beta_ps *= t;
+        p
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -535,6 +551,23 @@ mod tests {
         let serverless = p.reconfig_seconds(12, 102 << 20, 0);
         assert!(serverless < with_join);
         assert!(serverless > plain);
+    }
+
+    #[test]
+    fn contended_scales_only_shared_wire_bandwidth() {
+        let p = CostParams::testbed1();
+        let c1 = p.contended(1);
+        assert_eq!(c1.beta_net, p.beta_net);
+        assert_eq!(c1.beta_ps, p.beta_ps);
+        let c3 = p.contended(3);
+        assert_eq!(c3.beta_net, 3.0 * p.beta_net);
+        assert_eq!(c3.beta_ps, 3.0 * p.beta_ps);
+        // Latency and intra-node terms are per-job resources: unchanged.
+        assert_eq!(c3.alpha_net, p.alpha_net);
+        assert_eq!(c3.beta_dev, p.beta_dev);
+        assert_eq!(c3.gamma_host, p.gamma_host);
+        // tenants=0 clamps to the identity, not to a free fabric.
+        assert_eq!(p.contended(0).beta_net, p.beta_net);
     }
 
     #[test]

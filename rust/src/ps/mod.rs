@@ -19,7 +19,7 @@
 
 use anyhow::{bail, Context, Result};
 use crate::optimizer::Optimizer;
-use std::collections::{BTreeSet, HashMap};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -527,6 +527,75 @@ impl Scheduler {
 }
 
 // ---------------------------------------------------------------------------
+// ClusterScheduler — one authority, many jobs (ISSUE 9)
+// ---------------------------------------------------------------------------
+
+/// Multi-job front end over [`Scheduler`]: the cluster authority's
+/// registration service. Each admitted job gets its *own* [`Scheduler`]
+/// (its own launch quorum, live set, and membership epochs) keyed by job
+/// id, so one job's barrier can never block another's and per-job churn
+/// stays per-job. This is the piece that promotes the paper's per-job
+/// scheduler (§4.1.2) to a shared-cluster service: the launcher connects a
+/// job's ranks to the quorum registered here instead of minting a private
+/// scheduler per process.
+#[derive(Clone, Default)]
+pub struct ClusterScheduler {
+    jobs: Arc<Mutex<BTreeMap<u64, Scheduler>>>,
+}
+
+impl ClusterScheduler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a job and mint its private quorum (`expect_workers` +
+    /// `expect_servers` must connect before the job's launch barrier
+    /// opens). Errors loudly on a duplicate id: a double-registered job
+    /// would silently share (and corrupt) another job's live set.
+    pub fn register_job(
+        &self,
+        job: u64,
+        expect_workers: usize,
+        expect_servers: usize,
+    ) -> anyhow::Result<Scheduler> {
+        let mut jobs = self.jobs.lock().expect("cluster scheduler lock poisoned");
+        anyhow::ensure!(
+            !jobs.contains_key(&job),
+            "job {job} is already registered with the cluster scheduler"
+        );
+        let sched = Scheduler::new(expect_workers, expect_servers);
+        jobs.insert(job, sched.handle());
+        Ok(sched)
+    }
+
+    /// Retire a completed job; returns whether it was registered.
+    pub fn finish_job(&self, job: u64) -> bool {
+        self.jobs.lock().expect("cluster scheduler lock poisoned").remove(&job).is_some()
+    }
+
+    /// Registered job ids, ascending.
+    pub fn job_ids(&self) -> Vec<u64> {
+        self.jobs.lock().expect("cluster scheduler lock poisoned").keys().copied().collect()
+    }
+
+    /// A job's most recent membership view (None if not registered).
+    pub fn view(&self, job: u64) -> Option<MembershipView> {
+        self.jobs.lock().expect("cluster scheduler lock poisoned").get(&job).map(|s| s.view())
+    }
+
+    /// Live workers summed across every registered job — the authority's
+    /// cluster-wide occupancy count.
+    pub fn live_workers(&self) -> usize {
+        self.jobs
+            .lock()
+            .expect("cluster scheduler lock poisoned")
+            .values()
+            .map(|s| s.view().workers.len())
+            .sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
 // FaultPlan — scripted churn (config/CLI: `--fault kill:3@200,join@300`)
 // ---------------------------------------------------------------------------
 
@@ -924,5 +993,37 @@ mod tests {
         let mut ranks: Vec<usize> = hs.into_iter().map(|h| h.join().unwrap()).collect();
         ranks.sort();
         assert_eq!(ranks, vec![0, 1, 2, 100]);
+    }
+
+    #[test]
+    fn cluster_scheduler_quorums_are_independent_per_job() {
+        // Job 7's 2-worker barrier must open while job 9 (expecting 3) is
+        // still short — one job's stragglers never block another job.
+        let cluster = ClusterScheduler::new();
+        let j7 = cluster.register_job(7, 2, 0).unwrap();
+        let _j9 = cluster.register_job(9, 3, 0).unwrap();
+        let hs: Vec<_> = (0..2)
+            .map(|r| {
+                let s = j7.handle();
+                thread::spawn(move || s.register_as(r))
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap(); // returns => job 7's barrier opened
+        }
+        assert_eq!(cluster.view(7).unwrap().workers, vec![0, 1]);
+        assert_eq!(cluster.view(9).unwrap().workers, Vec::<usize>::new());
+        assert_eq!(cluster.live_workers(), 2);
+        assert_eq!(cluster.job_ids(), vec![7, 9]);
+        assert!(cluster.finish_job(9));
+        assert!(!cluster.finish_job(9));
+    }
+
+    #[test]
+    fn cluster_scheduler_rejects_duplicate_job_ids() {
+        let cluster = ClusterScheduler::new();
+        cluster.register_job(1, 2, 0).unwrap();
+        let err = cluster.register_job(1, 4, 0).unwrap_err().to_string();
+        assert!(err.contains("already registered"), "{err}");
     }
 }

@@ -88,7 +88,7 @@ pub fn train_with_weights(
     let cfg2 = cfg.clone();
     let results = launch(&spec, move |ctx| {
         worker_loop(&cfg2, handle.clone(), ctx)
-    });
+    })?;
 
     // Worker 0 carries the validation records.
     let (records, w) = results.into_iter().next().unwrap()?;

@@ -149,7 +149,8 @@ fn joiner_bootstraps_bitwise_identical_to_survivors() {
             }
         }
         w
-    });
+    })
+    .unwrap();
     assert_eq!(out.len(), 4);
     let reference = &out[0];
     for (rank, w) in out.iter().enumerate() {

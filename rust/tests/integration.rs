@@ -176,7 +176,8 @@ fn launcher_runs_many_small_jobs_without_leaking() {
             }
             ctx.kv.push(0, vec![1.0; 8]);
             ctx.kv.pull(0).wait()[0]
-        });
+        })
+        .unwrap();
         assert_eq!(out.len(), 4);
     }
 }
