@@ -44,6 +44,8 @@
 
 pub mod elastic;
 pub mod mutants;
+pub mod racecheck;
+pub mod sched;
 pub mod trace;
 
 use crate::collectives::{

@@ -1,0 +1,988 @@
+//! racecheck — deterministic concurrency model checker for the threaded
+//! plane (the concurrency sibling of commcheck).
+//!
+//! commcheck verifies *what* the communication schedules send, but it runs
+//! on a single-threaded tracing fabric and is blind to interleavings. This
+//! module drives the virtual scheduler in [`super::sched`] over the crate's
+//! real concurrency protocols — the engine worker pool, mpisim slot
+//! matching / split rendezvous / request cancellation, the kvstore
+//! Pending/engine-var handoff, and the PS quorum barrier — exploring
+//! bounded-world schedules (2–4 threads, the shapes commcheck already
+//! sweeps) and reporting:
+//!
+//! - **deadlock** — all threads blocked with no wakeup avenue left;
+//! - **lost wakeup** — a waiter parked while its predicate held;
+//! - **lock-order inversion** — a cycle in the class-level lock-order graph
+//!   accumulated across a scenario's executions;
+//! - **non-determinism** — two schedules of the same scenario producing
+//!   different digests (the determinism contract made checkable);
+//! - **panic / step-limit / stall** — a thread unwound, livelocked, or
+//!   escaped the scheduler.
+//!
+//! Exploration is preorder DFS with replay over the decision tape: the
+//! first execution takes choice 0 everywhere, then untried sibling choices
+//! are stacked shallowest-on-top and each prefix replayed, exhausting the
+//! schedule tree or the per-world execution budget, followed by seeded
+//! random walks to spot-check beyond the horizon. Every diagnostic carries
+//! a *replayable
+//! seed* (`rc1:<scenario>:w<world>:<tape>`): feeding it back through
+//! [`replay`] (CLI: `mxnet-mpi racecheck --seed`) reproduces the identical
+//! interleaving and diagnostic bit for bit.
+//!
+//! Like commcheck, the verifier is itself verified: [`run_mutant_suite`]
+//! runs seeded concurrency bugs (a `notify_one` where `notify_all` is
+//! required, a missing notify, a `while` collapsed to `if`, a swapped lock
+//! order, an unordered last-writer-wins, a channel cycle) that racecheck
+//! must catch with the expected diagnostic class or the CI gate fails.
+
+use super::sched::{run_execution, Event, ExecConfig, ExecReport};
+use crate::engine::Engine;
+use crate::kvstore::{KvType, KvWorker};
+use crate::mpisim::World;
+use crate::ps::{ClusterScheduler, Role};
+use crate::util::sync;
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+// ---------------------------------------------------------------------------
+// Diagnostics
+// ---------------------------------------------------------------------------
+
+/// Diagnostic class a finding (or a seeded mutant) belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RaceKind {
+    Deadlock,
+    LostWakeup,
+    LockOrder,
+    NonDeterminism,
+    Panic,
+    StepLimit,
+    Stalled,
+}
+
+impl RaceKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RaceKind::Deadlock => "deadlock",
+            RaceKind::LostWakeup => "lost-wakeup",
+            RaceKind::LockOrder => "lock-order",
+            RaceKind::NonDeterminism => "non-determinism",
+            RaceKind::Panic => "panic",
+            RaceKind::StepLimit => "step-limit",
+            RaceKind::Stalled => "stalled",
+        }
+    }
+}
+
+/// One confirmed finding, with the seed that replays it.
+#[derive(Debug, Clone)]
+pub struct RaceDiagnostic {
+    pub scenario: String,
+    pub world: usize,
+    pub kind: RaceKind,
+    pub detail: String,
+    /// Replayable schedule seed (`rc1:<scenario>:w<world>:<tape>`).
+    pub seed: String,
+}
+
+impl fmt::Display for RaceDiagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "[{}] {} (world {}): {} [replay: --seed {}]",
+            self.kind.name(),
+            self.scenario,
+            self.world,
+            self.detail,
+            self.seed
+        )
+    }
+}
+
+/// Aggregate result of a racecheck run.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    pub scenarios: usize,
+    pub worlds: usize,
+    pub executions: usize,
+    pub diagnostics: Vec<RaceDiagnostic>,
+}
+
+impl Report {
+    pub fn ok(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+}
+
+/// Exploration budget per (scenario, world) pair.
+#[derive(Debug, Clone)]
+pub struct Budget {
+    /// Systematic executions (preorder DFS over the schedule tree).
+    pub dfs: usize,
+    /// Seeded random walks past the DFS horizon.
+    pub random: usize,
+    /// Per-execution schedule-point cap (livelock guard).
+    pub step_cap: usize,
+}
+
+impl Default for Budget {
+    fn default() -> Self {
+        Self { dfs: 192, random: 32, step_cap: 20_000 }
+    }
+}
+
+impl Budget {
+    /// Small budget for unit tests (still catches every seeded mutant).
+    pub fn quick() -> Self {
+        Self { dfs: 48, random: 8, step_cap: 20_000 }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Replayable seeds
+// ---------------------------------------------------------------------------
+
+/// Encode a schedule seed: `rc1:<scenario>:w<world>:<c0,c1,...>` (`-` for
+/// the empty tape).
+pub fn format_seed(scenario: &str, world: usize, tape: &[u32]) -> String {
+    let t = if tape.is_empty() {
+        "-".to_string()
+    } else {
+        tape.iter().map(|c| c.to_string()).collect::<Vec<_>>().join(",")
+    };
+    format!("rc1:{scenario}:w{world}:{t}")
+}
+
+/// Decode a schedule seed back into (scenario, world, tape).
+pub fn parse_seed(seed: &str) -> Result<(String, usize, Vec<u32>), String> {
+    let mut parts = seed.splitn(4, ':');
+    let magic = parts.next().unwrap_or_default();
+    if magic != "rc1" {
+        return Err(format!("bad seed {seed:?}: expected 'rc1:' prefix"));
+    }
+    let name = parts.next().ok_or_else(|| format!("bad seed {seed:?}: missing scenario"))?;
+    let world = parts
+        .next()
+        .and_then(|w| w.strip_prefix('w'))
+        .and_then(|w| w.parse::<usize>().ok())
+        .ok_or_else(|| format!("bad seed {seed:?}: missing 'w<world>' field"))?;
+    let tape_s = parts.next().ok_or_else(|| format!("bad seed {seed:?}: missing tape"))?;
+    let tape = if tape_s == "-" {
+        Vec::new()
+    } else {
+        tape_s
+            .split(',')
+            .map(|c| c.trim().parse::<u32>())
+            .collect::<Result<Vec<u32>, _>>()
+            .map_err(|e| format!("bad seed {seed:?}: tape entry: {e}"))?
+    };
+    Ok((name.to_string(), world, tape))
+}
+
+// ---------------------------------------------------------------------------
+// Scenario table — the ported protocols under check
+// ---------------------------------------------------------------------------
+
+type Body = fn(usize) -> Vec<u64>;
+
+struct Scenario {
+    name: &'static str,
+    /// World sizes to sweep (meaning is per-scenario: engine worker count,
+    /// MPI ranks, PS workers).
+    worlds: &'static [usize],
+    body: Body,
+}
+
+fn scenarios() -> &'static [Scenario] {
+    &[
+        Scenario { name: "engine-pool", worlds: &[1, 2, 3], body: sc_engine_pool },
+        Scenario { name: "engine-wait-var", worlds: &[1, 2], body: sc_engine_wait_var },
+        Scenario { name: "mpisim-p2p", worlds: &[2, 3], body: sc_mpisim_p2p },
+        Scenario { name: "mpisim-split", worlds: &[2, 3], body: sc_mpisim_split },
+        Scenario { name: "mpisim-wait-any", worlds: &[2, 3], body: sc_mpisim_wait_any },
+        Scenario { name: "kvstore-pending", worlds: &[1, 2], body: sc_kvstore_pending },
+        Scenario { name: "ps-quorum", worlds: &[1, 2], body: sc_ps_quorum },
+    ]
+}
+
+/// Names of all checkable scenarios (for `--scenario` validation).
+pub fn scenario_names() -> Vec<&'static str> {
+    scenarios().iter().map(|s| s.name).collect()
+}
+
+/// Engine worker pool: `world` workers racing over the (state, worker_cv,
+/// idle_cv) triple. Non-commutative updates on per-var cells must come out
+/// identical under every schedule (the engine serializes per-var FIFO).
+fn sc_engine_pool(world: usize) -> Vec<u64> {
+    let engine = Arc::new(Engine::new(world));
+    let cells: Vec<Arc<AtomicU64>> = (0..2).map(|_| Arc::new(AtomicU64::new(1))).collect();
+    let vars: Vec<_> = cells.iter().map(|_| engine.new_var()).collect();
+    for step in 0..3u64 {
+        for (i, cell) in cells.iter().enumerate() {
+            let c = cell.clone();
+            let k = 3 + step + i as u64;
+            engine.push(
+                move || {
+                    // Exclusive by the engine's per-var serialization; the
+                    // op body has no schedule point, so load/store is
+                    // atomic from the model's view.
+                    let v = c.load(Ordering::SeqCst);
+                    c.store(v.wrapping_mul(k).wrapping_add(1), Ordering::SeqCst);
+                },
+                &[],
+                &[vars[i]],
+            );
+        }
+    }
+    engine.wait_all();
+    cells.iter().map(|c| c.load(Ordering::SeqCst)).collect()
+}
+
+/// `Engine::wait_var` handoff: an op chain `a -> b` observed mid-flight.
+/// After `wait_var(b)` both ops must have landed, under every schedule.
+fn sc_engine_wait_var(world: usize) -> Vec<u64> {
+    let engine = Arc::new(Engine::new(world));
+    let a = engine.new_var();
+    let b = engine.new_var();
+    let cell = Arc::new(AtomicU64::new(0));
+    let (c1, c2) = (cell.clone(), cell.clone());
+    engine.push(
+        move || {
+            c1.fetch_add(5, Ordering::SeqCst);
+        },
+        &[],
+        &[a],
+    );
+    engine.push(
+        move || {
+            c2.fetch_add(11, Ordering::SeqCst);
+        },
+        &[a],
+        &[b],
+    );
+    engine.wait_var(b);
+    let after_b = cell.load(Ordering::SeqCst);
+    engine.wait_all();
+    vec![after_b, cell.load(Ordering::SeqCst)]
+}
+
+/// mpisim point-to-point ring: posted-receive slot matching under traffic,
+/// plus the Request-drop cancellation path (an irecv nobody answers is
+/// dropped while messages are in flight).
+fn sc_mpisim_p2p(world: usize) -> Vec<u64> {
+    let comms = World::create(world);
+    let ranks: Vec<_> = comms
+        .into_iter()
+        .enumerate()
+        .map(|(r, mut comm)| {
+            sync::Builder::new()
+                .name(format!("rank-{r}"))
+                .spawn(move || {
+                    let n = comm.size();
+                    let next = (r + 1) % n;
+                    let prev = (r + n - 1) % n;
+                    let dropped = comm.irecv(prev, 7); // never matched
+                    let req = comm.irecv(prev, 1);
+                    comm.send(next, 1, vec![r as f32, 1.0]);
+                    drop(dropped); // MPI_Cancel path, mid-traffic
+                    let got = comm.wait(req);
+                    got.iter().map(|&x| x.to_bits() as u64).sum::<u64>()
+                })
+                .expect("spawn rank thread")
+        })
+        .collect();
+    ranks.into_iter().map(|h| h.join().expect("rank thread")).collect()
+}
+
+/// `Comm::split` rendezvous: every rank splits twice with alternating
+/// colors; subcommunicator shapes must be schedule-independent.
+fn sc_mpisim_split(world: usize) -> Vec<u64> {
+    let comms = World::create(world);
+    let ranks: Vec<_> = comms
+        .into_iter()
+        .enumerate()
+        .map(|(r, mut comm)| {
+            sync::Builder::new()
+                .name(format!("rank-{r}"))
+                .spawn(move || {
+                    let mut digest = Vec::new();
+                    for round in 0..2usize {
+                        let color = ((r + round) % 2) as i64;
+                        match comm.split(color, r) {
+                            Some(sub) => {
+                                digest.push(sub.size() as u64);
+                                digest.push(sub.rank() as u64);
+                            }
+                            None => digest.push(u64::MAX),
+                        }
+                    }
+                    digest
+                })
+                .expect("spawn rank thread")
+        })
+        .collect();
+    ranks.into_iter().flat_map(|h| h.join().expect("rank thread")).collect()
+}
+
+/// `Comm::wait_any` under racing senders. Completion *order* is genuinely
+/// schedule-dependent, so the digest is the sorted multiset of payloads —
+/// which must be schedule-independent (nothing lost, nothing duplicated).
+fn sc_mpisim_wait_any(world: usize) -> Vec<u64> {
+    let mut comms = World::create(world).into_iter();
+    let mut c0 = comms.next().expect("rank 0");
+    let senders: Vec<_> = comms
+        .enumerate()
+        .map(|(i, mut comm)| {
+            let r = i + 1;
+            sync::Builder::new()
+                .name(format!("rank-{r}"))
+                .spawn(move || {
+                    for k in 0..2u64 {
+                        comm.send(0, 1, vec![(r as f32) * 10.0 + k as f32]);
+                    }
+                })
+                .expect("spawn sender thread")
+        })
+        .collect();
+    let mut reqs = Vec::new();
+    for r in 1..world {
+        for _ in 0..2 {
+            reqs.push(c0.irecv(r, 1));
+        }
+    }
+    let mut got: Vec<u64> = Vec::new();
+    while !reqs.is_empty() {
+        let (_, data) = c0.wait_any(&mut reqs);
+        got.push(data[0].to_bits() as u64);
+    }
+    got.sort_unstable();
+    for h in senders {
+        h.join().expect("sender thread");
+    }
+    got
+}
+
+/// kvstore Pending/engine-var handoff: a `pull` issued between two pushes
+/// must observe exactly the first one (push-order serialization through
+/// the engine var), under every schedule.
+fn sc_kvstore_pending(world: usize) -> Vec<u64> {
+    let engine = Arc::new(Engine::new(world));
+    let kv = KvWorker::create(KvType::Local, engine, None, None);
+    kv.init(0, vec![1.0, 2.0], true);
+    kv.push(0, vec![0.5, 0.25]);
+    let pending = kv.pull(0);
+    kv.push(0, vec![1.0, 1.0]);
+    let got = pending.wait();
+    kv.wait_all();
+    got.iter().map(|&x| x.to_bits() as u64).collect()
+}
+
+/// PS quorum: `world` workers plus one server registering against a
+/// ClusterScheduler-minted quorum; the launch barrier must release
+/// everyone, and membership churn must publish a deterministic view.
+fn sc_ps_quorum(world: usize) -> Vec<u64> {
+    let cluster = ClusterScheduler::new();
+    let sched = cluster.register_job(1, world, 1).expect("register job 1");
+    let server = {
+        let s = sched.handle();
+        sync::Builder::new()
+            .name("ps-server".to_string())
+            .spawn(move || s.register(Role::Server))
+            .expect("spawn server thread")
+    };
+    let workers: Vec<_> = (0..world)
+        .map(|w| {
+            let s = sched.handle();
+            sync::Builder::new()
+                .name(format!("ps-worker-{w}"))
+                .spawn(move || s.register_as(w))
+                .expect("spawn worker thread")
+        })
+        .collect();
+    for h in workers {
+        h.join().expect("worker thread");
+    }
+    server.join().expect("server thread");
+    sched.deregister(0);
+    let v1 = cluster.view(1).expect("job 1 registered");
+    sched.admit(world);
+    let v2 = sched.publish_view();
+    let mut digest = vec![v1.epoch, v2.epoch, cluster.live_workers() as u64];
+    digest.extend(v2.workers.iter().map(|&w| w as u64));
+    digest
+}
+
+// ---------------------------------------------------------------------------
+// Exploration
+// ---------------------------------------------------------------------------
+
+fn run_one(body: Body, world: usize, tape: Vec<u32>, rng_seed: Option<u64>, step_cap: usize) -> ExecReport {
+    run_execution(move || body(world), ExecConfig { tape, rng_seed, step_cap })
+}
+
+fn diag_from_event(scenario: &str, world: usize, seed: String, ev: &Event) -> RaceDiagnostic {
+    let (kind, detail) = match ev {
+        Event::Deadlock { detail } => (RaceKind::Deadlock, detail.clone()),
+        Event::LostWakeup { thread, cv } => (
+            RaceKind::LostWakeup,
+            format!("{thread} was parked on {cv} with its predicate already true; no notify could have woken it"),
+        ),
+        Event::Panic { thread, msg } => (RaceKind::Panic, format!("{thread} panicked: {msg}")),
+        Event::StepLimit { steps } => (
+            RaceKind::StepLimit,
+            format!("exceeded {steps} schedule points (livelock?)"),
+        ),
+        Event::Stalled => (
+            RaceKind::Stalled,
+            "a checked thread blocked outside the scheduler's control".to_string(),
+        ),
+    };
+    RaceDiagnostic { scenario: scenario.to_string(), world, kind, detail, seed }
+}
+
+/// Find a cycle in the class-level lock-order graph; returns the cycle
+/// path (first node repeated at the end) if one exists.
+fn find_cycle(edges: &BTreeSet<(&'static str, &'static str)>) -> Option<Vec<&'static str>> {
+    let mut adj: BTreeMap<&'static str, Vec<&'static str>> = BTreeMap::new();
+    for &(a, b) in edges {
+        adj.entry(a).or_default().push(b);
+        adj.entry(b).or_default();
+    }
+    #[derive(Clone, Copy, PartialEq)]
+    enum Color {
+        White,
+        Grey,
+        Black,
+    }
+    fn visit(
+        n: &'static str,
+        adj: &BTreeMap<&'static str, Vec<&'static str>>,
+        color: &mut BTreeMap<&'static str, Color>,
+        path: &mut Vec<&'static str>,
+    ) -> Option<Vec<&'static str>> {
+        color.insert(n, Color::Grey);
+        path.push(n);
+        for &m in &adj[n] {
+            match color[m] {
+                Color::Grey => {
+                    let start = path.iter().position(|&p| p == m).expect("grey node on path");
+                    let mut cycle = path[start..].to_vec();
+                    cycle.push(m);
+                    return Some(cycle);
+                }
+                Color::White => {
+                    if let Some(c) = visit(m, adj, color, path) {
+                        return Some(c);
+                    }
+                }
+                Color::Black => {}
+            }
+        }
+        path.pop();
+        color.insert(n, Color::Black);
+        None
+    }
+    let nodes: Vec<&'static str> = adj.keys().copied().collect();
+    let mut color: BTreeMap<&'static str, Color> =
+        nodes.iter().map(|&n| (n, Color::White)).collect();
+    let mut path = Vec::new();
+    for &n in &nodes {
+        if color[n] == Color::White {
+            if let Some(c) = visit(n, &adj, &mut color, &mut path) {
+                return Some(c);
+            }
+        }
+    }
+    None
+}
+
+/// Cross-execution state a scenario's exploration accumulates: the first
+/// clean digest (with its seed, for non-determinism reports) and the union
+/// of observed lock-order edges.
+#[derive(Default)]
+struct Accum {
+    baseline: Option<(Vec<u64>, String)>,
+    edges: BTreeSet<(&'static str, &'static str)>,
+}
+
+/// Judge one execution: first kernel event wins; otherwise check the
+/// accumulated lock-order graph for cycles, then the digest against the
+/// baseline.
+fn judge(scenario: &str, world: usize, r: &ExecReport, acc: &mut Accum) -> Option<RaceDiagnostic> {
+    let seed = format_seed(scenario, world, &r.taken);
+    if let Some(ev) = r.events.first() {
+        return Some(diag_from_event(scenario, world, seed, ev));
+    }
+    acc.edges.extend(r.edges.iter().copied());
+    if let Some(cycle) = find_cycle(&acc.edges) {
+        return Some(RaceDiagnostic {
+            scenario: scenario.to_string(),
+            world,
+            kind: RaceKind::LockOrder,
+            detail: format!("lock-order cycle: {}", cycle.join(" -> ")),
+            seed,
+        });
+    }
+    if let Some(d) = &r.digest {
+        match &acc.baseline {
+            None => acc.baseline = Some((d.clone(), seed)),
+            Some((b, bseed)) if b != d => {
+                return Some(RaceDiagnostic {
+                    scenario: scenario.to_string(),
+                    world,
+                    kind: RaceKind::NonDeterminism,
+                    detail: format!("digest {d:?} differs from baseline {b:?} (baseline seed {bseed})"),
+                    seed,
+                });
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+struct Explored {
+    execs: usize,
+    diag: Option<RaceDiagnostic>,
+}
+
+/// Explore one (scenario, world): preorder DFS over the schedule tree —
+/// untried sibling choices are stacked shallowest-on-top, so the search
+/// dives consecutively along early divergences (the "park the waiter
+/// before the notify" shapes are reached within ~depth executions) before
+/// exhausting deep tail variations — then seeded random walks past the
+/// systematic horizon. Stops at the first diagnostic: exploration past a
+/// confirmed finding only costs budget.
+fn explore(scenario: &str, world: usize, body: Body, budget: &Budget) -> Explored {
+    let mut acc = Accum::default();
+    let mut execs = 0usize;
+    let mut frontier: Vec<Vec<u32>> = vec![Vec::new()];
+    while execs < budget.dfs {
+        let Some(tape) = frontier.pop() else { break };
+        let forced = tape.len();
+        let r = run_one(body, world, tape, None, budget.step_cap);
+        execs += 1;
+        if let Some(d) = judge(scenario, world, &r, &mut acc) {
+            return Explored { execs, diag: Some(d) };
+        }
+        // Stack the untried siblings of every free (un-forced) decision,
+        // deepest pushed first: the next pop takes the shallowest new
+        // deviation with its smallest untried choice (preorder).
+        for i in (forced..r.taken.len()).rev() {
+            for c in ((r.taken[i] + 1)..r.options[i]).rev() {
+                let mut t = r.taken[..i].to_vec();
+                t.push(c);
+                frontier.push(t);
+            }
+        }
+    }
+    for s in 0..budget.random {
+        let seed = 0x5EED_0000_u64.wrapping_add(s as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let r = run_one(body, world, Vec::new(), Some(seed), budget.step_cap);
+        execs += 1;
+        if let Some(d) = judge(scenario, world, &r, &mut acc) {
+            return Explored { execs, diag: Some(d) };
+        }
+    }
+    Explored { execs, diag: None }
+}
+
+/// Model-check every ported protocol at every swept world size. `filter`
+/// restricts to a single scenario name (CLI `--scenario`).
+pub fn run_racecheck(budget: &Budget, filter: Option<&str>) -> Report {
+    let mut report = Report::default();
+    for sc in scenarios() {
+        if filter.is_some_and(|f| f != sc.name) {
+            continue;
+        }
+        report.scenarios += 1;
+        for &w in sc.worlds {
+            report.worlds += 1;
+            let ex = explore(sc.name, w, sc.body, budget);
+            report.executions += ex.execs;
+            if let Some(d) = ex.diag {
+                report.diagnostics.push(d);
+                break; // first diagnostic per scenario; move on
+            }
+        }
+    }
+    report
+}
+
+// ---------------------------------------------------------------------------
+// Seeded-mutant suite — the verifier verified
+// ---------------------------------------------------------------------------
+
+struct Mutant {
+    label: &'static str,
+    expected: &'static [RaceKind],
+    body: Body,
+}
+
+fn mutants() -> &'static [Mutant] {
+    &[
+        Mutant {
+            label: "notify-one-shutdown",
+            expected: &[RaceKind::LostWakeup],
+            body: mut_notify_one_shutdown,
+        },
+        Mutant {
+            label: "missed-notify",
+            expected: &[RaceKind::LostWakeup],
+            body: mut_missed_notify,
+        },
+        Mutant { label: "if-not-while", expected: &[RaceKind::Panic], body: mut_if_not_while },
+        Mutant {
+            label: "swapped-lock-order",
+            expected: &[RaceKind::LockOrder],
+            body: mut_swapped_lock_order,
+        },
+        Mutant {
+            label: "nondet-outcome",
+            expected: &[RaceKind::NonDeterminism],
+            body: mut_nondet_outcome,
+        },
+        Mutant { label: "channel-cycle", expected: &[RaceKind::Deadlock], body: mut_channel_cycle },
+    ]
+}
+
+/// A broadcast gated behind `notify_one`: with both waiters parked, one
+/// never wakes.
+fn mut_notify_one_shutdown(_world: usize) -> Vec<u64> {
+    let pair = Arc::new((sync::Mutex::named(false, "mut.flag"), sync::Condvar::named("mut.cv")));
+    let waiters: Vec<_> = (0..2)
+        .map(|i| {
+            let p = pair.clone();
+            sync::Builder::new()
+                .name(format!("waiter-{i}"))
+                .spawn(move || {
+                    let (m, cv) = &*p;
+                    let mut g = m.lock().expect("flag lock");
+                    while !*g {
+                        g = cv.wait(g).expect("flag lock");
+                    }
+                })
+                .expect("spawn waiter")
+        })
+        .collect();
+    {
+        let (m, cv) = &*pair;
+        *m.lock().expect("flag lock") = true;
+        cv.notify_one(); // seeded bug: shutdown broadcast needs notify_all
+    }
+    for h in waiters {
+        h.join().expect("waiter");
+    }
+    vec![1]
+}
+
+/// The predicate is set but the notify is forgotten entirely.
+fn mut_missed_notify(_world: usize) -> Vec<u64> {
+    let pair = Arc::new((sync::Mutex::named(false, "mut.flag"), sync::Condvar::named("mut.cv")));
+    let p = pair.clone();
+    let w = sync::Builder::new()
+        .name("waiter".to_string())
+        .spawn(move || {
+            let (m, cv) = &*p;
+            let mut g = m.lock().expect("flag lock");
+            while !*g {
+                g = cv.wait(g).expect("flag lock");
+            }
+        })
+        .expect("spawn waiter");
+    {
+        let (m, _cv) = &*pair;
+        *m.lock().expect("flag lock") = true; // seeded bug: no notify after the write
+    }
+    w.join().expect("waiter");
+    vec![1]
+}
+
+/// A consumer whose `while` predicate loop collapsed to `if`: woken without
+/// the item it raced another consumer for, it pops an empty queue.
+fn mut_if_not_while(_world: usize) -> Vec<u64> {
+    let q = Arc::new((
+        sync::Mutex::named(Vec::<u64>::new(), "mut.queue"),
+        sync::Condvar::named("mut.queue_cv"),
+    ));
+    let qa = q.clone();
+    let a = sync::Builder::new()
+        .name("consumer-while".to_string())
+        .spawn(move || {
+            let (m, cv) = &*qa;
+            let mut g = m.lock().expect("queue lock");
+            while g.is_empty() {
+                g = cv.wait(g).expect("queue lock");
+            }
+            g.pop().expect("non-empty after while re-check")
+        })
+        .expect("spawn consumer");
+    let qb = q.clone();
+    let b = sync::Builder::new()
+        .name("consumer-if".to_string())
+        .spawn(move || {
+            let (m, cv) = &*qb;
+            let mut g = m.lock().expect("queue lock");
+            if g.is_empty() {
+                // seeded bug: no re-check after waking
+                g = cv.wait(g).expect("queue lock");
+            }
+            g.pop().expect("woken with an empty queue")
+        })
+        .expect("spawn consumer");
+    {
+        let (m, cv) = &*q;
+        for item in [1u64, 2] {
+            m.lock().expect("queue lock").push(item);
+            cv.notify_all();
+        }
+    }
+    let x = a.join().expect("consumer-while");
+    let y = b.join().expect("consumer-if");
+    vec![x + y]
+}
+
+/// Two threads taking the same two locks in opposite orders.
+fn mut_swapped_lock_order(_world: usize) -> Vec<u64> {
+    let a = Arc::new(sync::Mutex::named(0u64, "mut.a"));
+    let b = Arc::new(sync::Mutex::named(0u64, "mut.b"));
+    let (a2, b2) = (a.clone(), b.clone());
+    let t = sync::Builder::new()
+        .name("inverted".to_string())
+        .spawn(move || {
+            let mut gb = b2.lock().expect("lock b"); // seeded bug: b-then-a
+            let mut ga = a2.lock().expect("lock a");
+            *ga += 1;
+            *gb += 1;
+        })
+        .expect("spawn inverted");
+    {
+        let mut ga = a.lock().expect("lock a");
+        let mut gb = b.lock().expect("lock b");
+        *ga += 1;
+        *gb += 1;
+    }
+    t.join().expect("inverted");
+    let x = *a.lock().expect("lock a");
+    let y = *b.lock().expect("lock b");
+    vec![x, y]
+}
+
+/// Unordered last-writer-wins: the final value depends on the schedule.
+fn mut_nondet_outcome(_world: usize) -> Vec<u64> {
+    let cell = Arc::new(sync::Mutex::named(0u64, "mut.cell"));
+    let writers: Vec<_> = (1..=2u64)
+        .map(|i| {
+            let c = cell.clone();
+            sync::Builder::new()
+                .name(format!("writer-{i}"))
+                .spawn(move || {
+                    *c.lock().expect("cell lock") = i; // seeded bug: no ordering
+                })
+                .expect("spawn writer")
+        })
+        .collect();
+    for h in writers {
+        h.join().expect("writer");
+    }
+    let v = *cell.lock().expect("cell lock");
+    vec![v]
+}
+
+/// Two threads each receiving what only the other would send.
+fn mut_channel_cycle(_world: usize) -> Vec<u64> {
+    let (tx_a, rx_a) = sync::channel_named::<u8>("mut.chan_a");
+    let (tx_b, rx_b) = sync::channel_named::<u8>("mut.chan_b");
+    let t = sync::Builder::new()
+        .name("peer".to_string())
+        .spawn(move || {
+            let v = rx_b.recv().unwrap_or(0);
+            let _ = tx_a.send(v);
+        })
+        .expect("spawn peer");
+    let v = rx_a.recv().unwrap_or(0); // seeded bug: recv-before-send cycle
+    let _ = tx_b.send(v);
+    let _ = t.join();
+    vec![u64::from(v)]
+}
+
+/// Outcome of one seeded mutant run.
+#[derive(Debug)]
+pub struct MutantOutcome {
+    pub label: &'static str,
+    pub expected: &'static [RaceKind],
+    /// Diagnostic classes racecheck actually reported.
+    pub found: Vec<RaceKind>,
+    pub diag: Option<RaceDiagnostic>,
+    /// A diagnostic of an expected class was reported.
+    pub caught: bool,
+}
+
+/// Run every seeded mutant; each must be caught with its expected
+/// diagnostic class (the gate fails on any escape).
+pub fn run_mutant_suite(budget: &Budget) -> Vec<MutantOutcome> {
+    // Exploration stops at the first catch, so a deeper floor costs
+    // nothing when the mutant is caught early — and it keeps the seeded
+    // bugs inside the systematic horizon even under Budget::quick().
+    let budget = Budget {
+        dfs: budget.dfs.max(192),
+        random: budget.random.max(16),
+        step_cap: budget.step_cap,
+    };
+    mutants()
+        .iter()
+        .map(|m| {
+            let name = format!("mutant/{}", m.label);
+            let ex = explore(&name, 2, m.body, &budget);
+            let found: Vec<RaceKind> = ex.diag.iter().map(|d| d.kind).collect();
+            let caught = found.iter().any(|k| m.expected.contains(k));
+            MutantOutcome { label: m.label, expected: m.expected, found, diag: ex.diag, caught }
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Replay
+// ---------------------------------------------------------------------------
+
+fn find_body(name: &str) -> Option<(Body, bool)> {
+    if let Some(sc) = scenarios().iter().find(|s| s.name == name) {
+        return Some((sc.body, false));
+    }
+    let label = name.strip_prefix("mutant/")?;
+    mutants().iter().find(|m| m.label == label).map(|m| (m.body, true))
+}
+
+/// Replay a schedule seed: re-runs the scenario under the exact decision
+/// tape and reproduces the diagnostic bit for bit. A baseline (empty-tape)
+/// execution is run first so the cross-execution detectors — digest
+/// comparison and lock-order accumulation — judge the replayed schedule
+/// the same way exploration did.
+pub fn replay(seed: &str, step_cap: usize) -> Result<(Report, Vec<u32>), String> {
+    let (name, world, tape) = parse_seed(seed)?;
+    let (body, _is_mutant) =
+        find_body(&name).ok_or_else(|| format!("unknown scenario {name:?} in seed"))?;
+    let mut acc = Accum::default();
+    let mut report =
+        Report { scenarios: 1, worlds: 1, executions: 0, diagnostics: Vec::new() };
+    // Baseline pass (events ignored: it only seeds the cross-execution
+    // detectors; if the empty tape itself fails, the replayed tape will
+    // reproduce that failure below).
+    let base = run_one(body, world, Vec::new(), None, step_cap);
+    report.executions += 1;
+    if base.events.is_empty() {
+        let _ = judge(&name, world, &base, &mut acc);
+    } else {
+        acc.edges.extend(base.edges.iter().copied());
+    }
+    let r = run_one(body, world, tape, None, step_cap);
+    report.executions += 1;
+    if let Some(d) = judge(&name, world, &r, &mut acc) {
+        report.diagnostics.push(d);
+    }
+    Ok((report, r.taken))
+}
+
+// ---------------------------------------------------------------------------
+// Tests
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seed_grammar_round_trips() {
+        let s = format_seed("engine-pool", 3, &[0, 2, 1]);
+        assert_eq!(s, "rc1:engine-pool:w3:0,2,1");
+        assert_eq!(parse_seed(&s).expect("parse"), ("engine-pool".to_string(), 3, vec![0, 2, 1]));
+        let empty = format_seed("mutant/channel-cycle", 2, &[]);
+        assert_eq!(empty, "rc1:mutant/channel-cycle:w2:-");
+        assert_eq!(
+            parse_seed(&empty).expect("parse"),
+            ("mutant/channel-cycle".to_string(), 2, vec![])
+        );
+        assert!(parse_seed("bogus").is_err());
+        assert!(parse_seed("rc1:x:3:-").is_err(), "world field must be 'w<n>'");
+    }
+
+    #[test]
+    fn lock_order_cycle_detection() {
+        let mut edges = BTreeSet::new();
+        edges.insert(("a", "b"));
+        edges.insert(("b", "c"));
+        assert!(find_cycle(&edges).is_none());
+        edges.insert(("c", "a"));
+        let cycle = find_cycle(&edges).expect("cycle");
+        assert_eq!(cycle.first(), cycle.last());
+        assert!(cycle.len() >= 3);
+    }
+
+    #[test]
+    fn clean_scenarios_pass_quick_budget() {
+        let budget = Budget::quick();
+        let report = run_racecheck(&budget, None);
+        assert_eq!(report.scenarios, scenarios().len());
+        assert!(report.executions > 0);
+        assert!(
+            report.ok(),
+            "expected clean run, got: {}",
+            report
+                .diagnostics
+                .iter()
+                .map(|d| d.to_string())
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+    }
+
+    #[test]
+    fn every_seeded_mutant_is_caught() {
+        let budget = Budget::quick();
+        for out in run_mutant_suite(&budget) {
+            assert!(
+                out.caught,
+                "mutant {} escaped: expected one of {:?}, found {:?}",
+                out.label, out.expected, out.found
+            );
+        }
+    }
+
+    #[test]
+    fn replayed_seed_reproduces_diagnostic_bitwise() {
+        let budget = Budget::quick();
+        let outcomes = run_mutant_suite(&budget);
+        for label in ["channel-cycle", "swapped-lock-order", "nondet-outcome"] {
+            let out = outcomes
+                .iter()
+                .find(|o| o.label == label)
+                .expect("mutant in suite");
+            let diag = out.diag.as_ref().expect("mutant diagnostic");
+            let (report, taken) = replay(&diag.seed, 20_000).expect("replay");
+            assert_eq!(
+                report.diagnostics.len(),
+                1,
+                "{label}: replay must reproduce exactly the diagnostic"
+            );
+            assert_eq!(
+                report.diagnostics[0].to_string(),
+                diag.to_string(),
+                "{label}: replayed diagnostic must be bitwise identical"
+            );
+            // And the interleaving itself is identical: the replayed tape
+            // re-derives the seed it was fed.
+            let (name, world, _) = parse_seed(&diag.seed).expect("parse");
+            assert_eq!(format_seed(&name, world, &taken), diag.seed);
+        }
+    }
+
+    #[test]
+    fn scenario_filter_limits_the_sweep() {
+        let budget = Budget { dfs: 4, random: 0, step_cap: 20_000 };
+        let report = run_racecheck(&budget, Some("engine-pool"));
+        assert_eq!(report.scenarios, 1);
+        assert_eq!(report.worlds, 3);
+    }
+}

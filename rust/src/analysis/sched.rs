@@ -1,0 +1,917 @@
+//! Deterministic virtual scheduler for racecheck (CHESS-style stateless
+//! model checking).
+//!
+//! A *checked execution* runs real OS threads, but serialized: at most one
+//! thread is ever running, and it runs exactly until its next *visible
+//! operation* (lock, condvar wait/notify, channel send/recv, join — the
+//! hooks in [`crate::util::sync`]). At that point it parks on a private
+//! gate and the coordinator picks the next thread to grant from the set of
+//! *enabled* ones (a lock is enabled iff free, a recv iff a message is
+//! buffered or all senders are gone, a join iff the child exited). Every
+//! point where more than one option exists consumes one entry from a
+//! *decision tape*; replaying the same tape replays the same interleaving
+//! bit for bit, which is what racecheck's replayable seeds are.
+//!
+//! Detectors built into the kernel:
+//! - **Deadlock**: no enabled thread, no waiter left to probe.
+//! - **Lost wakeup**: at quiescence the coordinator delivers a *spurious
+//!   wake* to a condvar waiter. A correct waiter re-checks its predicate
+//!   and re-parks (`while`-loop protocol); a waiter that instead proceeds
+//!   had a true predicate with no notify in flight — nothing could ever
+//!   have woken it — and is reported.
+//! - **Lock-order edges**: every acquire-while-holding records a
+//!   class-level edge; racecheck checks the accumulated graph for cycles.
+//! - **Panic**: any checked thread that unwinds is recorded (first panic
+//!   wins the diagnostic; the execution keeps being scheduled so sibling
+//!   threads can drain).
+//!
+//! Aborted executions (deadlock, step limit, stall) release every parked
+//! thread into *pass-through mode*: all shim hooks become no-ops for that
+//! session and the threads fall back to plain `std` blocking. Genuinely
+//! deadlocked threads then block in `std` forever and are leaked — bounded,
+//! because exploration stops at the first diagnostic. Shim objects must not
+//! outlive the execution that first registered them (scenarios construct
+//! all state inside the checked body, so this holds by construction).
+
+use crate::util::Rng;
+use std::cell::RefCell;
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar as StdCondvar, Mutex as StdMutex, OnceLock};
+use std::time::Duration;
+
+/// Watchdog for a single grant: if the running thread does not come back to
+/// a schedule point within this long, the kernel assumes it blocked inside
+/// a real primitive (an invariant violation) and aborts the execution
+/// instead of hanging CI.
+const WATCHDOG: Duration = Duration::from_secs(10);
+
+// ---------------------------------------------------------------------------
+// Public result types
+// ---------------------------------------------------------------------------
+
+/// A fact the kernel established during one execution.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Event {
+    /// All live threads blocked with every wakeup avenue exhausted.
+    Deadlock { detail: String },
+    /// `thread` was parked on `cv` while its predicate held: no pending
+    /// notify could ever have woken it (detected by the spurious-wake
+    /// probe at quiescence).
+    LostWakeup { thread: String, cv: String },
+    /// A checked thread unwound.
+    Panic { thread: String, msg: String },
+    /// The execution exceeded the per-execution schedule-point budget
+    /// (livelock guard).
+    StepLimit { steps: usize },
+    /// A checked thread blocked outside the kernel's control (internal
+    /// invariant violation — should never fire).
+    Stalled,
+}
+
+/// Per-execution knobs.
+pub struct ExecConfig {
+    /// Decision tape to replay; choices beyond its end default to 0 (or to
+    /// random draws when `rng_seed` is set).
+    pub tape: Vec<u32>,
+    /// Seed for random-walk choices past the tape end.
+    pub rng_seed: Option<u64>,
+    /// Schedule-point budget (livelock guard).
+    pub step_cap: usize,
+}
+
+impl Default for ExecConfig {
+    fn default() -> Self {
+        Self { tape: Vec::new(), rng_seed: None, step_cap: 50_000 }
+    }
+}
+
+/// What one checked execution did.
+#[derive(Debug, Clone)]
+pub struct ExecReport {
+    pub events: Vec<Event>,
+    /// Scenario digest (the body's return value); `None` when the
+    /// execution was aborted before the main thread could finish.
+    pub digest: Option<Vec<u64>>,
+    /// The decision actually taken at each branch point (>= 2 options);
+    /// feeding this back as the tape replays the execution exactly.
+    pub taken: Vec<u32>,
+    /// Number of options at each branch point (for DFS backtracking).
+    pub options: Vec<u32>,
+    /// Schedule points granted.
+    pub steps: usize,
+    /// Class-level lock-order edges observed (held -> acquired).
+    pub edges: Vec<(&'static str, &'static str)>,
+    pub aborted: bool,
+}
+
+// ---------------------------------------------------------------------------
+// Kernel state
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Grant {
+    Proceed,
+    /// Session aborted: fall back to plain `std` behavior.
+    Freed,
+    RecvData,
+    RecvClosed,
+    TryData,
+    TryEmpty,
+    TryClosed,
+}
+
+struct Gate {
+    slot: StdMutex<Option<Grant>>,
+    cv: StdCondvar,
+}
+
+impl Gate {
+    fn new() -> Self {
+        Self { slot: StdMutex::new(None), cv: StdCondvar::new() }
+    }
+
+    fn park(&self) -> Grant {
+        let mut slot = self.slot.lock().expect("racecheck gate poisoned");
+        loop {
+            if let Some(g) = slot.take() {
+                return g;
+            }
+            slot = self.cv.wait(slot).expect("racecheck gate poisoned");
+        }
+    }
+
+    fn open(&self, g: Grant) {
+        *self.slot.lock().expect("racecheck gate poisoned") = Some(g);
+        self.cv.notify_one();
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Op {
+    Begin,
+    Lock(u32),
+    Send(u32),
+    Recv(u32),
+    TryRecv(u32),
+    NotifyOne(u32),
+    NotifyAll(u32),
+    Join(usize),
+    CvWait { cv: u32, m: u32 },
+}
+
+enum ThState {
+    Running,
+    Decision(Op),
+    CvWaiting { cv: u32, m: u32 },
+    Exited,
+}
+
+struct Th {
+    name: String,
+    gate: Arc<Gate>,
+    state: ThState,
+    /// Virtually held mutexes (for lock-order edges and diagnostics).
+    held: Vec<u32>,
+    /// Already probed-and-re-parked in the current wait episode.
+    probed: bool,
+    /// Set when probe-woken: the cv to compare the thread's next visible
+    /// op against (re-wait on the same cv = benign; anything else = lost
+    /// wakeup).
+    probe_watch: Option<u32>,
+}
+
+enum ObjKind {
+    Mutex { holder: Option<usize>, class: &'static str },
+    Cv,
+    Chan { len: usize, senders: usize },
+}
+
+struct Obj {
+    label: String,
+    kind: ObjKind,
+}
+
+#[derive(Default)]
+struct Chooser {
+    tape: Vec<u32>,
+    rng: Option<Rng>,
+    options: Vec<u32>,
+    taken: Vec<u32>,
+}
+
+impl Chooser {
+    /// Pick one of `n` options. Only real branch points (n >= 2) consume
+    /// tape and are recorded.
+    fn choose(&mut self, n: u32) -> u32 {
+        if n <= 1 {
+            return 0;
+        }
+        let pos = self.taken.len();
+        let c = if pos < self.tape.len() {
+            self.tape[pos].min(n - 1)
+        } else if let Some(r) = &mut self.rng {
+            r.below(n as u64) as u32
+        } else {
+            0
+        };
+        self.options.push(n);
+        self.taken.push(c);
+        c
+    }
+}
+
+struct Kernel {
+    threads: Vec<Th>,
+    objs: Vec<Obj>,
+    class_counts: BTreeMap<&'static str, usize>,
+    chooser: Chooser,
+    running: Option<usize>,
+    live: usize,
+    steps: usize,
+    step_cap: usize,
+    events: Vec<Event>,
+    edges: BTreeSet<(&'static str, &'static str)>,
+}
+
+pub(crate) struct Session {
+    kernel: StdMutex<Kernel>,
+    /// Coordinator wakeup: signaled whenever `running` drops to `None`.
+    wake: StdCondvar,
+    aborted: AtomicBool,
+}
+
+/// Per-thread handle to a session; installed in TLS by [`run_checked`].
+pub(crate) struct ThreadCtl {
+    sess: Arc<Session>,
+    tid: usize,
+    gate: Arc<Gate>,
+}
+
+thread_local! {
+    static CTL: RefCell<Option<Arc<ThreadCtl>>> = const { RefCell::new(None) };
+}
+
+fn cur() -> Option<Arc<ThreadCtl>> {
+    CTL.with(|c| c.borrow().clone())
+}
+
+/// Current thread is checked and its session is still live.
+fn with_ctl() -> Option<Arc<ThreadCtl>> {
+    let ctl = cur()?;
+    if ctl.sess.aborted.load(Ordering::Acquire) {
+        None
+    } else {
+        Some(ctl)
+    }
+}
+
+enum Reg {
+    Mutex(&'static str),
+    Cv,
+    Chan,
+}
+
+fn reg_obj(k: &mut Kernel, vid: &OnceLock<u32>, class: &'static str, reg: Reg) -> u32 {
+    if let Some(&id) = vid.get() {
+        return id;
+    }
+    let n = k.class_counts.entry(class).or_insert(0);
+    let label = format!("{class}#{n}");
+    *n += 1;
+    let id = k.objs.len() as u32;
+    let kind = match reg {
+        Reg::Mutex(c) => ObjKind::Mutex { holder: None, class: c },
+        Reg::Cv => ObjKind::Cv,
+        Reg::Chan => ObjKind::Chan { len: 0, senders: 1 },
+    };
+    k.objs.push(Obj { label, kind });
+    let _ = vid.set(id);
+    id
+}
+
+impl ThreadCtl {
+    pub(crate) fn tid(&self) -> usize {
+        self.tid
+    }
+
+    fn kernel(&self) -> std::sync::MutexGuard<'_, Kernel> {
+        self.sess.kernel.lock().expect("racecheck kernel poisoned")
+    }
+
+    fn register(&self, vid: &OnceLock<u32>, class: &'static str, reg: Reg) -> u32 {
+        reg_obj(&mut self.kernel(), vid, class, reg)
+    }
+
+    /// Post a visible op, hand control to the coordinator, park until
+    /// granted (or freed by an abort).
+    fn decide(&self, op: Op) -> Grant {
+        {
+            let mut k = self.kernel();
+            if self.sess.aborted.load(Ordering::Acquire) {
+                return Grant::Freed;
+            }
+            // Probe-watch observation: a probe-woken waiter that does
+            // anything but re-park on the same cv had a true predicate
+            // while parked — a lost wakeup.
+            if let Some(watch) = k.threads[self.tid].probe_watch.take() {
+                let benign = matches!(op, Op::CvWait { cv, .. } if cv == watch);
+                if benign {
+                    k.threads[self.tid].probed = true;
+                } else {
+                    let ev = Event::LostWakeup {
+                        thread: k.threads[self.tid].name.clone(),
+                        cv: k.objs[watch as usize].label.clone(),
+                    };
+                    k.events.push(ev);
+                }
+            }
+            k.threads[self.tid].state = match op {
+                Op::CvWait { cv, m } => ThState::CvWaiting { cv, m },
+                _ => ThState::Decision(op),
+            };
+            k.running = None;
+            self.sess.wake.notify_one();
+        }
+        self.gate.park()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Hooks called by util::sync (all no-ops on unchecked threads)
+// ---------------------------------------------------------------------------
+
+pub(crate) fn on_lock(vid: &OnceLock<u32>, class: &'static str) {
+    let Some(ctl) = with_ctl() else { return };
+    let id = ctl.register(vid, class, Reg::Mutex(class));
+    let _ = ctl.decide(Op::Lock(id));
+}
+
+/// Eager release (not a schedule point: releases only enable others).
+pub(crate) fn on_unlock(vid: &OnceLock<u32>) {
+    let Some(ctl) = with_ctl() else { return };
+    let Some(&id) = vid.get() else { return };
+    let mut k = ctl.kernel();
+    if let ObjKind::Mutex { holder, .. } = &mut k.objs[id as usize].kind {
+        if *holder == Some(ctl.tid) {
+            *holder = None;
+            k.threads[ctl.tid].held.retain(|&h| h != id);
+        }
+    }
+}
+
+/// True iff the virtual condvar protocol should be used for a wait.
+pub(crate) fn virtual_wait_applicable() -> bool {
+    with_ctl().is_some()
+}
+
+/// Park on `cv` having already released mutex `m`; returns once a notify
+/// (or the quiescence probe) woke this thread *and* the virtual lock on
+/// `m` was re-granted. The caller then re-acquires the `std` mutex raw.
+pub(crate) fn on_cv_wait(vid: &OnceLock<u32>, class: &'static str, m: u32) {
+    let Some(ctl) = with_ctl() else { return };
+    let cv = ctl.register(vid, class, Reg::Cv);
+    let _ = ctl.decide(Op::CvWait { cv, m });
+}
+
+pub(crate) fn on_notify(vid: &OnceLock<u32>, class: &'static str, all: bool) {
+    let Some(ctl) = with_ctl() else { return };
+    let cv = ctl.register(vid, class, Reg::Cv);
+    let _ = ctl.decide(if all { Op::NotifyAll(cv) } else { Op::NotifyOne(cv) });
+}
+
+pub(crate) fn on_send(vid: &OnceLock<u32>, class: &'static str) {
+    let Some(ctl) = with_ctl() else { return };
+    let id = ctl.register(vid, class, Reg::Chan);
+    let _ = ctl.decide(Op::Send(id));
+}
+
+/// The `std` send failed (receiver gone): retract the queue increment.
+pub(crate) fn on_send_failed(vid: &OnceLock<u32>) {
+    let Some(ctl) = with_ctl() else { return };
+    let Some(&id) = vid.get() else { return };
+    let mut k = ctl.kernel();
+    if let ObjKind::Chan { len, .. } = &mut k.objs[id as usize].kind {
+        *len = len.saturating_sub(1);
+    }
+}
+
+pub(crate) fn on_sender_clone(vid: &OnceLock<u32>, class: &'static str) {
+    let Some(ctl) = with_ctl() else { return };
+    let id = ctl.register(vid, class, Reg::Chan);
+    let mut k = ctl.kernel();
+    if let ObjKind::Chan { senders, .. } = &mut k.objs[id as usize].kind {
+        *senders += 1;
+    }
+}
+
+/// Eager sender-count decrement (can only enable receivers).
+pub(crate) fn on_sender_drop(vid: &OnceLock<u32>, class: &'static str) {
+    let Some(ctl) = with_ctl() else { return };
+    let id = ctl.register(vid, class, Reg::Chan);
+    let mut k = ctl.kernel();
+    if let ObjKind::Chan { senders, .. } = &mut k.objs[id as usize].kind {
+        *senders = senders.saturating_sub(1);
+    }
+}
+
+pub(crate) enum RecvGrant {
+    Std,
+    Data,
+    Closed,
+}
+
+pub(crate) fn on_recv(vid: &OnceLock<u32>, class: &'static str) -> RecvGrant {
+    let Some(ctl) = with_ctl() else { return RecvGrant::Std };
+    let id = ctl.register(vid, class, Reg::Chan);
+    match ctl.decide(Op::Recv(id)) {
+        Grant::RecvData => RecvGrant::Data,
+        Grant::RecvClosed => RecvGrant::Closed,
+        _ => RecvGrant::Std,
+    }
+}
+
+pub(crate) enum TryGrant {
+    Std,
+    Data,
+    Empty,
+    Closed,
+}
+
+pub(crate) fn on_try_recv(vid: &OnceLock<u32>, class: &'static str) -> TryGrant {
+    let Some(ctl) = with_ctl() else { return TryGrant::Std };
+    let id = ctl.register(vid, class, Reg::Chan);
+    match ctl.decide(Op::TryRecv(id)) {
+        Grant::TryData => TryGrant::Data,
+        Grant::TryEmpty => TryGrant::Empty,
+        Grant::TryClosed => TryGrant::Closed,
+        _ => TryGrant::Std,
+    }
+}
+
+pub(crate) fn on_join(tid: usize) {
+    let Some(ctl) = with_ctl() else { return };
+    let _ = ctl.decide(Op::Join(tid));
+}
+
+/// Register a child thread of the current checked thread. `None` when the
+/// spawner is unchecked (or the session aborted): spawn plain.
+pub(crate) fn spawn_ctl(name: String) -> Option<Arc<ThreadCtl>> {
+    let ctl = with_ctl()?;
+    let mut k = ctl.kernel();
+    let tid = k.threads.len();
+    let gate = Arc::new(Gate::new());
+    k.threads.push(Th {
+        name,
+        gate: gate.clone(),
+        state: ThState::Decision(Op::Begin),
+        held: Vec::new(),
+        probed: false,
+        probe_watch: None,
+    });
+    k.live += 1;
+    Some(Arc::new(ThreadCtl { sess: ctl.sess.clone(), tid, gate }))
+}
+
+/// Thread body wrapper for checked threads: installs the control block,
+/// waits for the Begin grant, runs `f`, and reports the exit (with the
+/// panic message, if any) to the kernel before unwinding onward.
+pub(crate) fn run_checked<F, T>(ctl: Arc<ThreadCtl>, f: F) -> T
+where
+    F: FnOnce() -> T,
+{
+    enter(ctl);
+    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+    exit_current(res.as_ref().err().map(|p| panic_msg(&**p)));
+    match res {
+        Ok(v) => v,
+        Err(p) => std::panic::resume_unwind(p),
+    }
+}
+
+fn enter(ctl: Arc<ThreadCtl>) {
+    let gate = ctl.gate.clone();
+    CTL.with(|c| *c.borrow_mut() = Some(ctl));
+    let _ = gate.park(); // Begin grant (or Freed)
+}
+
+fn exit_current(panic: Option<String>) {
+    let Some(ctl) = CTL.with(|c| c.borrow_mut().take()) else { return };
+    if ctl.sess.aborted.load(Ordering::Acquire) {
+        return;
+    }
+    let mut k = ctl.kernel();
+    if let Some(watch) = k.threads[ctl.tid].probe_watch.take() {
+        let ev = Event::LostWakeup {
+            thread: k.threads[ctl.tid].name.clone(),
+            cv: k.objs[watch as usize].label.clone(),
+        };
+        k.events.push(ev);
+    }
+    if let Some(msg) = panic {
+        let ev = Event::Panic { thread: k.threads[ctl.tid].name.clone(), msg };
+        k.events.push(ev);
+    }
+    k.threads[ctl.tid].state = ThState::Exited;
+    k.live -= 1;
+    k.running = None;
+    ctl.sess.wake.notify_one();
+}
+
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic".to_string()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator
+// ---------------------------------------------------------------------------
+
+fn op_enabled(k: &Kernel, op: Op) -> bool {
+    match op {
+        Op::Begin | Op::Send(_) | Op::TryRecv(_) | Op::NotifyOne(_) | Op::NotifyAll(_) => true,
+        Op::Lock(m) => matches!(&k.objs[m as usize].kind, ObjKind::Mutex { holder: None, .. }),
+        Op::Recv(c) => match &k.objs[c as usize].kind {
+            ObjKind::Chan { len, senders } => *len > 0 || *senders == 0,
+            _ => false,
+        },
+        Op::Join(t) => matches!(k.threads[t].state, ThState::Exited),
+        Op::CvWait { .. } => false, // never posted as a Decision
+    }
+}
+
+fn mutex_class(k: &Kernel, m: u32) -> &'static str {
+    match &k.objs[m as usize].kind {
+        ObjKind::Mutex { class, .. } => class,
+        _ => "?",
+    }
+}
+
+fn grant_lock(k: &mut Kernel, t: usize, m: u32) {
+    let m_class = mutex_class(k, m);
+    let held = k.threads[t].held.clone();
+    for h in held {
+        let hc = mutex_class(k, h);
+        if hc != m_class {
+            k.edges.insert((hc, m_class));
+        }
+    }
+    if let ObjKind::Mutex { holder, .. } = &mut k.objs[m as usize].kind {
+        *holder = Some(t);
+    }
+    k.threads[t].held.push(m);
+}
+
+fn cv_waiters(k: &Kernel, cv: u32) -> Vec<usize> {
+    (0..k.threads.len())
+        .filter(|&t| matches!(k.threads[t].state, ThState::CvWaiting { cv: c, .. } if c == cv))
+        .collect()
+}
+
+fn wake_waiter(k: &mut Kernel, w: usize) {
+    let m = match k.threads[w].state {
+        ThState::CvWaiting { m, .. } => m,
+        _ => unreachable!("waking a thread that is not cv-waiting"),
+    };
+    k.threads[w].state = ThState::Decision(Op::Lock(m));
+    k.threads[w].probed = false;
+}
+
+fn apply_op(k: &mut Kernel, t: usize) -> Grant {
+    let op = match k.threads[t].state {
+        ThState::Decision(op) => op,
+        _ => unreachable!("granting a thread without a posted decision"),
+    };
+    match op {
+        Op::Begin | Op::Join(_) => Grant::Proceed,
+        Op::Lock(m) => {
+            grant_lock(k, t, m);
+            Grant::Proceed
+        }
+        Op::Send(c) => {
+            if let ObjKind::Chan { len, .. } = &mut k.objs[c as usize].kind {
+                *len += 1;
+            }
+            Grant::Proceed
+        }
+        Op::Recv(c) => {
+            if let ObjKind::Chan { len, .. } = &mut k.objs[c as usize].kind {
+                if *len > 0 {
+                    *len -= 1;
+                    return Grant::RecvData;
+                }
+            }
+            Grant::RecvClosed
+        }
+        Op::TryRecv(c) => {
+            if let ObjKind::Chan { len, senders } = &mut k.objs[c as usize].kind {
+                if *len > 0 {
+                    *len -= 1;
+                    Grant::TryData
+                } else if *senders == 0 {
+                    Grant::TryClosed
+                } else {
+                    Grant::TryEmpty
+                }
+            } else {
+                Grant::TryEmpty
+            }
+        }
+        Op::NotifyOne(cv) => {
+            let ws = cv_waiters(k, cv);
+            if !ws.is_empty() {
+                let i = k.chooser.choose(ws.len() as u32) as usize;
+                wake_waiter(k, ws[i]);
+            }
+            Grant::Proceed
+        }
+        Op::NotifyAll(cv) => {
+            for w in cv_waiters(k, cv) {
+                wake_waiter(k, w);
+            }
+            Grant::Proceed
+        }
+        Op::CvWait { .. } => unreachable!("cv-wait is never granted as a decision"),
+    }
+}
+
+fn describe_blocked(k: &Kernel) -> String {
+    let mut parts = Vec::new();
+    for th in &k.threads {
+        let desc = match &th.state {
+            ThState::Exited => continue,
+            ThState::Running => "running".to_string(),
+            ThState::CvWaiting { cv, .. } => {
+                format!("waiting on {} (wakeups exhausted)", k.objs[*cv as usize].label)
+            }
+            ThState::Decision(op) => match op {
+                Op::Lock(m) => format!("blocked locking {}", k.objs[*m as usize].label),
+                Op::Recv(c) => format!("blocked receiving on {}", k.objs[*c as usize].label),
+                Op::Join(t) => format!("joining {}", k.threads[*t].name),
+                other => format!("at {other:?}"),
+            },
+        };
+        let held = if th.held.is_empty() {
+            String::new()
+        } else {
+            let names: Vec<&str> =
+                th.held.iter().map(|&h| k.objs[h as usize].label.as_str()).collect();
+            format!(" [holds {}]", names.join(", "))
+        };
+        parts.push(format!("{}: {desc}{held}", th.name));
+    }
+    parts.join("; ")
+}
+
+fn abort_locked(sess: &Session, k: &mut Kernel) {
+    sess.aborted.store(true, Ordering::Release);
+    for th in &k.threads {
+        if !matches!(th.state, ThState::Exited) {
+            th.gate.open(Grant::Freed);
+        }
+    }
+}
+
+fn coordinate(sess: &Arc<Session>) {
+    let mut k = sess.kernel.lock().expect("racecheck kernel poisoned");
+    loop {
+        // Wait for the granted thread to come back to a schedule point.
+        while k.running.is_some() {
+            let (guard, timeout) = sess
+                .wake
+                .wait_timeout(k, WATCHDOG)
+                .expect("racecheck kernel poisoned");
+            k = guard;
+            if timeout.timed_out() && k.running.is_some() {
+                k.events.push(Event::Stalled);
+                abort_locked(sess, &mut k);
+                return;
+            }
+        }
+        if k.live == 0 {
+            return;
+        }
+        if k.steps >= k.step_cap {
+            let steps = k.steps;
+            k.events.push(Event::StepLimit { steps });
+            abort_locked(sess, &mut k);
+            return;
+        }
+        let enabled: Vec<usize> = (0..k.threads.len())
+            .filter(|&t| match k.threads[t].state {
+                ThState::Decision(op) => op_enabled(&k, op),
+                _ => false,
+            })
+            .collect();
+        if enabled.is_empty() {
+            // Quiescence: deliver a spurious wake to an unprobed waiter
+            // (deterministic: lowest tid), else it is a deadlock.
+            let probe = (0..k.threads.len()).find(|&t| {
+                matches!(k.threads[t].state, ThState::CvWaiting { .. }) && !k.threads[t].probed
+            });
+            if let Some(t) = probe {
+                let cv = match k.threads[t].state {
+                    ThState::CvWaiting { cv, .. } => cv,
+                    _ => unreachable!(),
+                };
+                let m = match k.threads[t].state {
+                    ThState::CvWaiting { m, .. } => m,
+                    _ => unreachable!(),
+                };
+                k.threads[t].state = ThState::Decision(Op::Lock(m));
+                k.threads[t].probe_watch = Some(cv);
+                continue;
+            }
+            let detail = describe_blocked(&k);
+            k.events.push(Event::Deadlock { detail });
+            abort_locked(sess, &mut k);
+            return;
+        }
+        let pick = enabled[k.chooser.choose(enabled.len() as u32) as usize];
+        let grant = apply_op(&mut k, pick);
+        k.threads[pick].state = ThState::Running;
+        k.running = Some(pick);
+        k.steps += 1;
+        let gate = k.threads[pick].gate.clone();
+        gate.open(grant);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Execution driver
+// ---------------------------------------------------------------------------
+
+/// Run `body` as the main thread of one checked execution under `cfg`'s
+/// decision tape. The body's `Vec<u64>` return value is the scenario
+/// digest used by the non-determinism detector.
+pub fn run_execution<F>(body: F, cfg: ExecConfig) -> ExecReport
+where
+    F: FnOnce() -> Vec<u64> + Send + 'static,
+{
+    let sess = Arc::new(Session {
+        kernel: StdMutex::new(Kernel {
+            threads: Vec::new(),
+            objs: Vec::new(),
+            class_counts: BTreeMap::new(),
+            chooser: Chooser {
+                tape: cfg.tape,
+                rng: cfg.rng_seed.map(Rng::new),
+                options: Vec::new(),
+                taken: Vec::new(),
+            },
+            running: None,
+            live: 0,
+            steps: 0,
+            step_cap: cfg.step_cap,
+            events: Vec::new(),
+            edges: BTreeSet::new(),
+        }),
+        wake: StdCondvar::new(),
+        aborted: AtomicBool::new(false),
+    });
+
+    let gate = Arc::new(Gate::new());
+    {
+        let mut k = sess.kernel.lock().expect("racecheck kernel poisoned");
+        k.threads.push(Th {
+            name: "main".to_string(),
+            gate: gate.clone(),
+            state: ThState::Decision(Op::Begin),
+            held: Vec::new(),
+            probed: false,
+            probe_watch: None,
+        });
+        k.live = 1;
+    }
+    let ctl = Arc::new(ThreadCtl { sess: sess.clone(), tid: 0, gate });
+
+    let handle = std::thread::Builder::new()
+        .name("racecheck-main".to_string())
+        .spawn(move || run_checked(ctl, body))
+        .expect("spawn racecheck main thread");
+
+    coordinate(&sess);
+
+    let aborted = sess.aborted.load(Ordering::Acquire);
+    let digest = if aborted {
+        drop(handle); // leaked/pass-through threads; do not block on them
+        None
+    } else {
+        handle.join().ok()
+    };
+
+    let k = sess.kernel.lock().expect("racecheck kernel poisoned");
+    ExecReport {
+        events: k.events.clone(),
+        digest,
+        taken: k.chooser.taken.clone(),
+        options: k.chooser.options.clone(),
+        steps: k.steps,
+        edges: k.edges.iter().cloned().collect(),
+        aborted,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::sync;
+    use std::sync::atomic::AtomicU64;
+
+    fn counter_body() -> Vec<u64> {
+        let n = Arc::new(AtomicU64::new(0));
+        let hs: Vec<_> = (0..2)
+            .map(|_| {
+                let n = n.clone();
+                sync::spawn(move || {
+                    n.fetch_add(1, Ordering::SeqCst);
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().expect("worker");
+        }
+        vec![n.load(Ordering::SeqCst)]
+    }
+
+    #[test]
+    fn clean_execution_completes_with_digest() {
+        let r = run_execution(counter_body, ExecConfig::default());
+        assert!(r.events.is_empty(), "unexpected events: {:?}", r.events);
+        assert_eq!(r.digest, Some(vec![2]));
+        assert!(!r.aborted);
+        assert!(r.steps > 0);
+    }
+
+    #[test]
+    fn same_tape_same_schedule() {
+        let a = run_execution(counter_body, ExecConfig::default());
+        let b = run_execution(
+            counter_body,
+            ExecConfig { tape: a.taken.clone(), ..ExecConfig::default() },
+        );
+        assert_eq!(a.taken, b.taken);
+        assert_eq!(a.options, b.options);
+        assert_eq!(a.steps, b.steps);
+        assert_eq!(a.digest, b.digest);
+    }
+
+    #[test]
+    fn channel_cycle_is_a_deadlock() {
+        let r = run_execution(
+            || {
+                let (tx_a, rx_a) = sync::channel_named::<u8>("test.a");
+                let (tx_b, rx_b) = sync::channel_named::<u8>("test.b");
+                let t = sync::Builder::new()
+                    .name("peer".to_string())
+                    .spawn(move || {
+                        let v = rx_b.recv().unwrap_or(0);
+                        let _ = tx_a.send(v);
+                    })
+                    .expect("spawn");
+                // Main waits for the peer, the peer waits for main: cycle.
+                let v = rx_a.recv().unwrap_or(0);
+                let _ = tx_b.send(v);
+                let _ = t.join();
+                vec![]
+            },
+            ExecConfig::default(),
+        );
+        assert!(r.aborted);
+        assert!(
+            r.events.iter().any(|e| matches!(e, Event::Deadlock { .. })),
+            "expected deadlock, got {:?}",
+            r.events
+        );
+    }
+
+    #[test]
+    fn mutex_handoff_and_lock_edges() {
+        let r = run_execution(
+            || {
+                let a = Arc::new(sync::Mutex::named(0u64, "test.outer"));
+                let b = Arc::new(sync::Mutex::named(0u64, "test.inner"));
+                let (a2, b2) = (a.clone(), b.clone());
+                let t = sync::spawn(move || {
+                    let mut ga = a2.lock().expect("outer");
+                    let mut gb = b2.lock().expect("inner");
+                    *ga += 1;
+                    *gb += 2;
+                });
+                t.join().expect("worker");
+                let va = *a.lock().expect("outer");
+                let vb = *b.lock().expect("inner");
+                vec![va, vb]
+            },
+            ExecConfig::default(),
+        );
+        assert!(r.events.is_empty(), "unexpected events: {:?}", r.events);
+        assert_eq!(r.digest, Some(vec![1, 2]));
+        assert!(r.edges.contains(&("test.outer", "test.inner")), "edges: {:?}", r.edges);
+    }
+}

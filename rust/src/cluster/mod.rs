@@ -413,7 +413,10 @@ impl Sim<'_> {
                 break;
             }
             self.queue.pop_front();
-            let nodes = self.alloc(id, req.workers).expect("gang fit just checked");
+            let workers = req.workers;
+            let nodes = self
+                .alloc(id, workers)
+                .unwrap_or_else(|| panic!("job {id}: gang of {workers} no longer fits after the free-count check"));
             let sync_every =
                 req.algo.strategy().sync_every(&ExperimentConfig::testbed1(req.algo)).max(1);
             let tenants = self.running.len() + 1;
@@ -448,7 +451,10 @@ impl Sim<'_> {
     /// One job's epoch boundary: credit the finished epoch, complete or
     /// apply the elastic policy, re-admit, and price the next epoch.
     fn boundary(&mut self, id: JobId) {
-        let mut r = self.running.remove(&id).expect("boundary fired for a live job");
+        let mut r = self
+            .running
+            .remove(&id)
+            .unwrap_or_else(|| panic!("epoch boundary fired for job {id}, which is not running"));
         let req = &self.spec.plan.jobs[id];
         let width = r.live_ranks.len();
         r.iters_done += self.spec.iters_per_epoch;
@@ -473,16 +479,25 @@ impl Sim<'_> {
                 let give = width - req.workers;
                 let mut released = Vec::with_capacity(give);
                 for _ in 0..give {
-                    let rank = r.live_ranks.pop().expect("shrink keeps the gang");
+                    let rank = r
+                        .live_ranks
+                        .pop()
+                        .unwrap_or_else(|| panic!("job {id}: elastic shrink emptied the gang"));
                     r.events.push(FaultEvent { at_iter, kind: FaultKind::Kill { rank } });
-                    released.push(r.nodes.pop().expect("rank had a node"));
+                    released.push(
+                        r.nodes
+                            .pop()
+                            .unwrap_or_else(|| panic!("job {id}: rank {rank} had no backing node")),
+                    );
                 }
                 self.release(&released);
             } else if self.queue.is_empty() {
                 // Idle capacity: grow into every free node.
                 let free = self.free_count();
                 if free > 0 {
-                    let grown = self.alloc(id, free).expect("free nodes just counted");
+                    let grown = self
+                        .alloc(id, free)
+                        .unwrap_or_else(|| panic!("job {id}: {free} free nodes vanished before the grow"));
                     for node in grown {
                         r.events.push(FaultEvent { at_iter, kind: FaultKind::Join { client: None } });
                         r.live_ranks.push(r.next_join_rank);
@@ -501,7 +516,10 @@ impl Sim<'_> {
         self.try_admit();
         let tenants = self.running.len();
         let dur = epoch_seconds(self.spec, req, sync_every, new_width, tenants);
-        let r = self.running.get_mut(&id).expect("just reinserted");
+        let r = self
+            .running
+            .get_mut(&id)
+            .unwrap_or_else(|| panic!("job {id} vanished between reinsertion and epoch repricing"));
         r.epoch_end_s = self.clock + dur;
     }
 
@@ -682,14 +700,14 @@ where
             std::thread::Builder::new()
                 .name(format!("cluster-{}", job.name))
                 .spawn(move || launch_with(&jspec, move |ctx| f(&ticket, ctx), sched))
-                .expect("spawn cluster job"),
+                .unwrap_or_else(|e| panic!("spawn thread for cluster job {}: {e}", job.name)),
         );
     }
     let mut results = Vec::with_capacity(handles.len());
     for (handle, job) in handles.into_iter().zip(&outcome.jobs) {
         let job_result = handle
             .join()
-            .expect("cluster job panicked")
+            .unwrap_or_else(|_| panic!("cluster job {} (id {}) panicked", job.name, job.id))
             .with_context(|| format!("cluster job {} failed to launch", job.name))?;
         registry.finish_job(job.id as u64);
         results.push(job_result);

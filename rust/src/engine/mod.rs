@@ -9,9 +9,9 @@
 //! var, in push (program) order** — MXNET's exact rule — and runs ready
 //! operations on a small thread pool.
 
+use crate::util::sync::{Builder, Condvar, JoinHandle, Mutex};
 use std::collections::VecDeque;
-use std::sync::{Arc, Condvar, Mutex};
-use std::thread;
+use std::sync::Arc;
 
 /// A dependency tag ("variable") — identifies a piece of state, e.g. one
 /// KVStore key's gradient buffer. Cheap to copy.
@@ -50,17 +50,24 @@ struct Shared {
 /// The threaded dependency engine.
 pub struct Engine {
     shared: Arc<(Mutex<Shared>, Condvar, Condvar)>, // (state, worker_cv, idle_cv)
-    workers: Vec<thread::JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
 }
 
 impl Engine {
     /// Create an engine with `threads` worker threads (>= 1).
     pub fn new(threads: usize) -> Self {
-        let shared = Arc::new((Mutex::new(Shared::default()), Condvar::new(), Condvar::new()));
+        let shared = Arc::new((
+            Mutex::named(Shared::default(), "engine.state"),
+            Condvar::named("engine.worker_cv"),
+            Condvar::named("engine.idle_cv"),
+        ));
         let workers = (0..threads.max(1))
-            .map(|_| {
+            .map(|i| {
                 let sh = shared.clone();
-                thread::spawn(move || Self::worker_loop(&sh))
+                Builder::new()
+                    .name(format!("engine-worker-{i}"))
+                    .spawn(move || Self::worker_loop(&sh))
+                    .expect("spawn engine worker thread")
             })
             .collect();
         Self { shared, workers }
@@ -70,17 +77,22 @@ impl Engine {
         let (lock, worker_cv, idle_cv) = &**sh;
         loop {
             let (op_id, func) = {
-                let mut st = lock.lock().unwrap();
+                let mut st = lock.lock().expect("engine state lock poisoned in worker");
                 loop {
                     if let Some(id) = st.ready.pop_front() {
-                        let op = st.ops[id].as_mut().unwrap();
-                        let f = op.func.take().unwrap();
+                        let op = st.ops[id]
+                            .as_mut()
+                            .unwrap_or_else(|| panic!("engine op {id} vanished from the slot table"));
+                        let f = op
+                            .func
+                            .take()
+                            .unwrap_or_else(|| panic!("engine op {id} ready without a function (double grant?)"));
                         break (id, f);
                     }
                     if st.shutdown {
                         return;
                     }
-                    st = worker_cv.wait(st).unwrap();
+                    st = worker_cv.wait(st).expect("engine state lock poisoned at worker_cv");
                 }
             };
             // A panicking op must not wedge the engine: dependencies are
@@ -97,8 +109,10 @@ impl Engine {
                 eprintln!("engine op panicked: {msg}");
             }
             // Release dependencies and grant successors.
-            let mut st = lock.lock().unwrap();
-            let op = st.ops[op_id].take().unwrap();
+            let mut st = lock.lock().expect("engine state lock poisoned at op completion");
+            let op = st.ops[op_id]
+                .take()
+                .unwrap_or_else(|| panic!("engine op {op_id} completed twice"));
             st.free_slots.push(op_id);
             let mut to_grant: Vec<Var> = Vec::new();
             for v in &op.read {
@@ -142,7 +156,9 @@ impl Engine {
             } else {
                 vs.running_reads += 1;
             }
-            let op = st.ops[op_id].as_mut().unwrap();
+            let op = st.ops[op_id]
+                .as_mut()
+                .unwrap_or_else(|| panic!("engine op {op_id} granted a dependency after completion"));
             op.pending -= 1;
             if op.pending == 0 {
                 st.ready.push_back(op_id);
@@ -153,7 +169,7 @@ impl Engine {
     /// Allocate a new dependency variable.
     pub fn new_var(&self) -> Var {
         let (lock, ..) = &*self.shared;
-        let mut st = lock.lock().unwrap();
+        let mut st = lock.lock().expect("engine state lock poisoned in new_var");
         st.vars.push(VarState::default());
         Var(st.vars.len() - 1)
     }
@@ -176,7 +192,7 @@ impl Engine {
         read_v.dedup();
 
         let (lock, worker_cv, _) = &*self.shared;
-        let mut st = lock.lock().unwrap();
+        let mut st = lock.lock().expect("engine state lock poisoned in push");
         let pending = read_v.len() + mut_v.len();
         let op = OpState {
             func: Some(Box::new(func)),
@@ -217,9 +233,9 @@ impl Engine {
     /// `WaitForAll`).
     pub fn wait_all(&self) {
         let (lock, _, idle_cv) = &*self.shared;
-        let mut st = lock.lock().unwrap();
+        let mut st = lock.lock().expect("engine state lock poisoned in wait_all");
         while st.outstanding > 0 {
-            st = idle_cv.wait(st).unwrap();
+            st = idle_cv.wait(st).expect("engine state lock poisoned at idle_cv");
         }
     }
 
@@ -231,13 +247,13 @@ impl Engine {
     /// operation rather than a parked reply channel.
     pub fn wait_var(&self, v: Var) {
         let (lock, _, idle_cv) = &*self.shared;
-        let mut st = lock.lock().unwrap();
+        let mut st = lock.lock().expect("engine state lock poisoned in wait_var");
         loop {
             let vs = &st.vars[v.0];
             if vs.queue.is_empty() && !vs.running_write && vs.running_reads == 0 {
                 return;
             }
-            st = idle_cv.wait(st).unwrap();
+            st = idle_cv.wait(st).expect("engine state lock poisoned at idle_cv");
         }
     }
 }
@@ -247,7 +263,7 @@ impl Drop for Engine {
         self.wait_all();
         {
             let (lock, worker_cv, _) = &*self.shared;
-            let mut st = lock.lock().unwrap();
+            let mut st = lock.lock().expect("engine state lock poisoned at shutdown");
             st.shutdown = true;
             worker_cv.notify_all();
         }

@@ -49,9 +49,9 @@ use crate::netsim::CostParams;
 use crate::optimizer::Optimizer;
 use crate::ps::{Key, PsClient};
 use crate::tensor::NodeTensor;
+use crate::util::sync::{channel, channel_named, Mutex, Receiver};
 use std::collections::HashMap;
-use std::sync::mpsc::{channel, Receiver};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 /// KVStore flavor (KVStore.create("type"), §4.2.1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -120,7 +120,7 @@ impl<T> Pending<T> {
     /// producing op must fill. The op MUST be pushed with every var in
     /// `vars` among its read/mutate dependencies.
     fn engine_backed(engine: Arc<Engine>, vars: Vec<Var>) -> (Self, Arc<Mutex<Option<T>>>) {
-        let slot = Arc::new(Mutex::new(None));
+        let slot = Arc::new(Mutex::named(None, "kv.pending_slot"));
         (Pending(PendingInner::Engine { slot: slot.clone(), engine, vars }), slot)
     }
 
@@ -289,13 +289,13 @@ impl KvWorker {
         Self {
             ktype,
             engine,
-            comm: comm.map(|c| Arc::new(Mutex::new(c))),
-            ps: ps.map(|p| Arc::new(Mutex::new(p))),
-            local: Arc::new(Mutex::new(HashMap::new())),
-            local_pre_init: Arc::new(Mutex::new(HashMap::new())),
-            ckpt_local: Mutex::new(HashMap::new()),
+            comm: comm.map(|c| Arc::new(Mutex::named(c, "kv.comm"))),
+            ps: ps.map(|p| Arc::new(Mutex::named(p, "kv.ps"))),
+            local: Arc::new(Mutex::named(HashMap::new(), "kv.local")),
+            local_pre_init: Arc::new(Mutex::named(HashMap::new(), "kv.pre_init")),
+            ckpt_local: Mutex::named(HashMap::new(), "kv.ckpt"),
             comm_var,
-            key_vars: Mutex::new(HashMap::new()),
+            key_vars: Mutex::named(HashMap::new(), "kv.key_vars"),
             n_rings: 2,
             algo: AlgoKind::Ring,
             group: 2,
@@ -303,8 +303,8 @@ impl KvWorker {
             cost: CostParams::testbed1(),
             devices: 1,
             codec: Arc::from(Codec::identity().build(0.0)),
-            ef: Arc::new(Mutex::new(EfState::new())),
-            arena: Arc::new(Mutex::new(FusionArena::new())),
+            ef: Arc::new(Mutex::named(EfState::new(), "kv.ef")),
+            arena: Arc::new(Mutex::named(FusionArena::new(), "kv.arena")),
         }
     }
 
@@ -774,15 +774,18 @@ impl KvWorker {
                 pending
             }
             _ => {
-                let (reply, rx) = channel();
+                let (reply, rx) = channel_named("kv.reply");
                 let pends: Vec<Pending<Vec<f32>>> = keyed
                     .into_iter()
                     .map(|(k, v)| self.pushpull(k, v))
                     .collect();
-                std::thread::spawn(move || {
-                    let out: Vec<Vec<f32>> = pends.into_iter().map(|p| p.wait()).collect();
-                    let _ = reply.send(out);
-                });
+                crate::util::sync::Builder::new()
+                    .name("kv-fused-reply".to_string())
+                    .spawn(move || {
+                        let out: Vec<Vec<f32>> = pends.into_iter().map(|p| p.wait()).collect();
+                        let _ = reply.send(out);
+                    })
+                    .expect("spawn fused-reply thread");
                 Pending::channel(rx)
             }
         }

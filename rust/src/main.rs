@@ -15,6 +15,13 @@
 //!           (deadlock / tag-window / coverage / elastic-epoch / engine
 //!           plans) and prove the verifier on the seeded-mutant suite.
 //!           Exits non-zero on any finding — the CI gate.
+//!   racecheck [--scenario S] [--max-execs N] [--seed SEED]
+//!           Dynamically model-check the threaded plane's concurrency
+//!           protocols under systematically explored interleavings and
+//!           prove the checker on its own seeded-mutant suite. A failure
+//!           prints a replayable schedule seed; `--seed` re-runs exactly
+//!           that interleaving. Exits non-zero on any finding — the
+//!           second CI gate.
 //!   cluster --nodes 8 --policy elastic --arrivals mpi-SGD:4x6@0,...
 //!           Run the multi-tenant cluster authority on a scripted job
 //!           arrival plan and compare static vs elastic goodput.
@@ -31,7 +38,7 @@ fn usage() -> ! {
     // The algorithm list is derived from the registry, so this text can
     // never drift from the set of runnable strategies.
     eprintln!(
-        "usage: mxnet-mpi <train|sim|figures|collectives|commcheck|cluster|info> [flags]\n\
+        "usage: mxnet-mpi <train|sim|figures|collectives|commcheck|racecheck|cluster|info> [flags]\n\
          flags for train/sim:\n\
            --algo NAME            one of: {} (case-insensitive)\n\
            --variant NAME         model variant (default mlp)\n\
@@ -63,7 +70,12 @@ fn usage() -> ! {
                                   ALGO[.CODEC[.DEVICES]]:WxE@T — W nodes\n\
                                   arrive wanting E epochs at second T,\n\
                                   e.g. mpi-SGD:4x6@0,mpi-ESGD.int8:2x6@120\n\
-           --epoch-iters N        iterations per membership epoch (default 8)",
+           --epoch-iters N        iterations per membership epoch (default 8)\n\
+         flags for racecheck:\n\
+           --scenario NAME        check one scenario (default: all)\n\
+           --max-execs N          systematic executions per (scenario, world)\n\
+           --seed SEED            replay one recorded interleaving\n\
+                                  (rc1:<scenario>:w<world>:<tape>)",
         Algo::names().join(", "),
         mxnet_mpi::compress::Codec::names().join(", ")
     );
@@ -363,6 +375,92 @@ fn main() -> Result<()> {
             println!(
                 "commcheck: OK ({} configurations clean, {}/{} seeded mutants caught)",
                 report.configs_checked,
+                outcomes.len(),
+                outcomes.len()
+            );
+        }
+        "racecheck" => {
+            use mxnet_mpi::analysis::racecheck;
+            let mut budget = racecheck::Budget::default();
+            if let Some(n) = args.num::<usize>("max-execs")? {
+                anyhow::ensure!(n > 0, "flag --max-execs: must be >= 1");
+                budget.dfs = n;
+                budget.random = (n / 6).max(1);
+            }
+            if let Some(seed) = args.get("seed") {
+                // Replay mode: re-run exactly one recorded interleaving.
+                println!("racecheck: replaying {seed}");
+                let (report, taken) = racecheck::replay(seed, budget.step_cap)
+                    .map_err(|e| anyhow::anyhow!("racecheck --seed: {e}"))?;
+                for d in &report.diagnostics {
+                    println!("  FINDING {d}");
+                }
+                if report.ok() {
+                    println!("racecheck: replay ran clean (schedule {taken:?})");
+                    return Ok(());
+                }
+                bail!("racecheck replay reproduced {} finding(s)", report.diagnostics.len());
+            }
+            let filter = args.get("scenario");
+            match filter {
+                Some(s) => println!("racecheck: model-checking scenario {s}..."),
+                None => println!(
+                    "racecheck: model-checking {} concurrency scenarios...",
+                    racecheck::scenario_names().len()
+                ),
+            }
+            let report = racecheck::run_racecheck(&budget, filter);
+            anyhow::ensure!(
+                report.scenarios > 0,
+                "racecheck: no scenario matches filter {:?} (known: {})",
+                filter.unwrap_or(""),
+                racecheck::scenario_names().join(", ")
+            );
+            println!(
+                "racecheck: {} scenario(s), {} world size(s), {} interleavings explored",
+                report.scenarios, report.worlds, report.executions
+            );
+            for d in &report.diagnostics {
+                println!("  FINDING {d}");
+            }
+            if filter.is_some() {
+                // Scoped run: report just the filtered sweep, skip mutants.
+                if !report.ok() {
+                    bail!("racecheck failed: {} finding(s)", report.diagnostics.len());
+                }
+                println!("racecheck: OK ({} interleavings clean)", report.executions);
+                return Ok(());
+            }
+            let outcomes = racecheck::run_mutant_suite(&budget);
+            let mut escaped = 0usize;
+            for o in &outcomes {
+                let found: Vec<&str> = o.found.iter().map(|k| k.name()).collect();
+                if o.caught {
+                    println!("  mutant {:<24} caught ({})", o.label, found.join(", "));
+                    if let Some(d) = &o.diag {
+                        println!("    {d}");
+                    }
+                } else {
+                    escaped += 1;
+                    let expected: Vec<&str> = o.expected.iter().map(|k| k.name()).collect();
+                    println!(
+                        "  mutant {:<24} ESCAPED: expected one of [{}], found [{}]",
+                        o.label,
+                        expected.join(", "),
+                        found.join(", ")
+                    );
+                }
+            }
+            if !report.ok() || escaped > 0 {
+                bail!(
+                    "racecheck failed: {} finding(s), {} escaped mutant(s)",
+                    report.diagnostics.len(),
+                    escaped
+                );
+            }
+            println!(
+                "racecheck: OK ({} interleavings clean, {}/{} seeded mutants caught)",
+                report.executions,
                 outcomes.len(),
                 outcomes.len()
             );

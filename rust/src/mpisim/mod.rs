@@ -17,8 +17,8 @@
 //! *on top of* these request primitives, exactly like OpenMPI's tuned
 //! layer).
 
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
-use std::sync::{Arc, Condvar, Mutex};
+use crate::util::sync::{channel_named, Condvar, Mutex, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
 
 /// A tagged message. `data` is the payload; collectives reserve the high
 /// tag bit and a per-collective sequence number so user traffic can never
@@ -81,7 +81,7 @@ impl Request {
 impl Drop for Request {
     fn drop(&mut self) {
         if let (ReqKind::Recv(slot), Some(cancel)) = (self.kind, &self.cancel) {
-            cancel.lock().unwrap().push(slot);
+            cancel.lock().expect("cancel list lock poisoned").push(slot);
         }
     }
 }
@@ -221,14 +221,17 @@ struct SplitState {
 impl SplitHub {
     fn new(size: usize) -> Self {
         Self {
-            m: Mutex::new(SplitState {
-                entries: (0..size).map(|_| None).collect(),
-                outbox: (0..size).map(|_| None).collect(),
-                arrived: 0,
-                collected: 0,
-                distributing: false,
-            }),
-            cv: Condvar::new(),
+            m: Mutex::named(
+                SplitState {
+                    entries: (0..size).map(|_| None).collect(),
+                    outbox: (0..size).map(|_| None).collect(),
+                    arrived: 0,
+                    collected: 0,
+                    distributing: false,
+                },
+                "mpisim.split",
+            ),
+            cv: Condvar::named("mpisim.split_cv"),
         }
     }
 }
@@ -241,7 +244,8 @@ impl World {
     /// thread.
     pub fn create(size: usize) -> Vec<Comm> {
         assert!(size > 0);
-        let (txs, rxs): (Vec<_>, Vec<_>) = (0..size).map(|_| channel()).unzip();
+        let (txs, rxs): (Vec<_>, Vec<_>) =
+            (0..size).map(|_| channel_named("mpisim.mailbox")).unzip();
         let split_hub = Arc::new(SplitHub::new(size));
         rxs.into_iter()
             .enumerate()
@@ -255,7 +259,7 @@ impl World {
                 free_slots: Vec::new(),
                 post_seq: 0,
                 coll_seq: 0,
-                cancelled: Arc::new(Mutex::new(Vec::new())),
+                cancelled: Arc::new(Mutex::named(Vec::new(), "mpisim.cancelled")),
                 split_hub: split_hub.clone(),
             })
             .collect()
@@ -298,10 +302,10 @@ impl Comm {
             };
         }
         let hub = self.split_hub.clone();
-        let mut st = hub.m.lock().unwrap();
+        let mut st = hub.m.lock().expect("split hub lock poisoned");
         // A previous split round may still be distributing: wait it out.
         while st.distributing {
-            st = hub.cv.wait(st).unwrap();
+            st = hub.cv.wait(st).expect("split hub lock poisoned mid-round");
         }
         st.entries[self.rank] = Some((color, key));
         st.arrived += 1;
@@ -337,7 +341,7 @@ impl Comm {
             hub.cv.notify_all();
         } else {
             while !st.distributing {
-                st = hub.cv.wait(st).unwrap();
+                st = hub.cv.wait(st).expect("split hub lock poisoned at rendezvous");
             }
         }
         let out = st.outbox[self.rank].take();
@@ -400,7 +404,8 @@ impl Comm {
     /// from the posted queue; a matched-but-unwaited payload is discarded
     /// with the request.
     fn reclaim_cancelled(&mut self) {
-        let slots: Vec<usize> = std::mem::take(&mut *self.cancelled.lock().unwrap());
+        let slots: Vec<usize> =
+            std::mem::take(&mut *self.cancelled.lock().expect("cancel list lock poisoned"));
         for s in slots {
             if self.posted[s].take().is_some() {
                 self.free_slots.push(s);

@@ -19,10 +19,9 @@
 
 use anyhow::{bail, Context, Result};
 use crate::optimizer::Optimizer;
+use crate::util::sync::{channel_named, Builder, Condvar, JoinHandle, Mutex, Receiver, Sender};
 use std::collections::{BTreeMap, BTreeSet, HashMap};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
+use std::sync::Arc;
 
 pub type Key = usize;
 
@@ -243,7 +242,7 @@ impl ServerGroup {
         let mut txs = Vec::new();
         let mut threads = Vec::new();
         for s in 0..n_servers {
-            let (tx, rx) = channel();
+            let (tx, rx) = channel_named("ps.server");
             let state = ServerState {
                 mode,
                 expected_pushes: expected_pushes.max(1),
@@ -258,10 +257,10 @@ impl ServerGroup {
                 blobs: HashMap::new(),
             };
             threads.push(
-                std::thread::Builder::new()
+                Builder::new()
                     .name(format!("ps-server-{s}"))
                     .spawn(move || state.run(rx))
-                    .expect("spawn server"),
+                    .expect("spawn ps server thread"),
             );
             txs.push(tx);
         }
@@ -346,7 +345,7 @@ impl PsClient {
     /// ZPull: fetch the value of `key`; in sync mode waits until the round
     /// containing this worker's last push has been applied.
     pub fn pull(&mut self, key: Key) -> Vec<f32> {
-        let (reply, rx) = channel();
+        let (reply, rx) = channel_named("ps.reply");
         let after_round = *self.push_rounds.get(&key).unwrap_or(&0);
         self.server(key)
             .send(ServerMsg::Pull { key, after_round, reply })
@@ -383,7 +382,7 @@ impl PsClient {
 
     /// Fetch a checkpoint blob; `None` if nothing was ever saved there.
     pub fn load_blob(&self, key: Key) -> Option<Vec<f32>> {
-        let (reply, rx) = channel();
+        let (reply, rx) = channel_named("ps.reply");
         self.server(key)
             .send(ServerMsg::LoadBlob { key, reply })
             .expect("server gone");
@@ -409,7 +408,7 @@ impl PsClient {
 /// [`MembershipView`] that the launcher turns into rebuilt per-client
 /// worlds and a recomputed sync quorum.
 pub struct Scheduler {
-    inner: Arc<(Mutex<SchedState>, std::sync::Condvar)>,
+    inner: Arc<(Mutex<SchedState>, Condvar)>,
 }
 
 #[derive(Default)]
@@ -443,12 +442,15 @@ impl Scheduler {
     pub fn new(expect_workers: usize, expect_servers: usize) -> Self {
         Self {
             inner: Arc::new((
-                Mutex::new(SchedState {
-                    expect_workers,
-                    expect_servers,
-                    ..Default::default()
-                }),
-                std::sync::Condvar::new(),
+                Mutex::named(
+                    SchedState {
+                        expect_workers,
+                        expect_servers,
+                        ..Default::default()
+                    },
+                    "ps.sched",
+                ),
+                Condvar::named("ps.sched_cv"),
             )),
         }
     }
@@ -538,14 +540,20 @@ impl Scheduler {
 /// scheduler (§4.1.2) to a shared-cluster service: the launcher connects a
 /// job's ranks to the quorum registered here instead of minting a private
 /// scheduler per process.
-#[derive(Clone, Default)]
+#[derive(Clone)]
 pub struct ClusterScheduler {
     jobs: Arc<Mutex<BTreeMap<u64, Scheduler>>>,
 }
 
+impl Default for ClusterScheduler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl ClusterScheduler {
     pub fn new() -> Self {
-        Self::default()
+        Self { jobs: Arc::new(Mutex::named(BTreeMap::new(), "cluster.jobs")) }
     }
 
     /// Register a job and mint its private quorum (`expect_workers` +

@@ -1,8 +1,11 @@
-//! Small shared utilities: deterministic PRNG and stats helpers.
+//! Small shared utilities: deterministic PRNG, stats helpers, and the
+//! [`sync`] shim the threaded plane is built on.
 //!
 //! We use our own SplitMix64-style generator instead of the `rand` crate so
 //! that synthetic data, worker jitter and experiment seeds are bit-stable
 //! across platforms and crate upgrades.
+
+pub mod sync;
 
 /// SplitMix64 — tiny, fast, deterministic PRNG (Steele et al.).
 #[derive(Debug, Clone)]

@@ -1,0 +1,434 @@
+//! Synchronization shim: `std::sync` re-exports that the racecheck virtual
+//! scheduler can intercept.
+//!
+//! Every type here wraps its `std` counterpart and is API-compatible with
+//! it (`LockResult`, poisoning, `mpsc` error types). On a normal thread the
+//! wrappers delegate straight to `std` — the only extra work is one
+//! thread-local read per visible operation — so production behavior,
+//! including bitwise results, is unchanged. On a thread registered with the
+//! virtual scheduler ([`crate::analysis::sched`]), each *visible* operation
+//! (lock, condvar wait/notify, channel send/recv, spawn/join) first asks
+//! the scheduler for permission, which serializes threads and lets the
+//! model checker enumerate interleavings deterministically.
+//!
+//! The soundness invariant: a checked thread never blocks inside a `std`
+//! primitive. The scheduler grants a virtual lock before the `std` lock is
+//! touched (so the `std` acquisition cannot contend), condvar waiters park
+//! on scheduler gates instead of the real condvar, and channel receives are
+//! only granted when the virtual queue length proves a message is already
+//! buffered.
+
+use crate::analysis::sched;
+use std::fmt;
+use std::sync::mpsc::{RecvError, SendError, TryRecvError};
+use std::sync::{LockResult, OnceLock, PoisonError};
+
+// ---------------------------------------------------------------------------
+// Mutex
+// ---------------------------------------------------------------------------
+
+/// `std::sync::Mutex` wrapper with a racecheck hook and a lock-order class
+/// name (used by the lock-order-inversion detector).
+pub struct Mutex<T: ?Sized> {
+    vid: OnceLock<u32>,
+    class: &'static str,
+    inner: std::sync::Mutex<T>,
+}
+
+impl<T> Mutex<T> {
+    pub fn new(value: T) -> Self {
+        Self::named(value, "mutex")
+    }
+
+    /// Like [`Mutex::new`] but names the lock-order class this mutex
+    /// belongs to (e.g. `"engine.state"`). All mutexes of one class are one
+    /// node in racecheck's lock-order graph.
+    pub fn named(value: T, class: &'static str) -> Self {
+        Self { vid: OnceLock::new(), class, inner: std::sync::Mutex::new(value) }
+    }
+
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        sched::on_lock(&self.vid, self.class);
+        wrap_lock(self, self.inner.lock())
+    }
+
+    pub fn into_inner(self) -> LockResult<T> {
+        self.inner.into_inner()
+    }
+
+    pub fn get_mut(&mut self) -> LockResult<&mut T> {
+        self.inner.get_mut()
+    }
+}
+
+impl<T: Default> Default for Mutex<T> {
+    fn default() -> Self {
+        Self::new(T::default())
+    }
+}
+
+impl<T: ?Sized> fmt::Debug for Mutex<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Mutex").field("class", &self.class).finish_non_exhaustive()
+    }
+}
+
+fn wrap_lock<'a, T>(
+    lock: &'a Mutex<T>,
+    res: LockResult<std::sync::MutexGuard<'a, T>>,
+) -> LockResult<MutexGuard<'a, T>> {
+    match res {
+        Ok(g) => Ok(MutexGuard { lock, inner: Some(g) }),
+        Err(p) => Err(PoisonError::new(MutexGuard { lock, inner: Some(p.into_inner()) })),
+    }
+}
+
+/// Guard for [`Mutex`]; releases the virtual lock (if any) on drop, after
+/// the `std` guard.
+pub struct MutexGuard<'a, T: ?Sized> {
+    lock: &'a Mutex<T>,
+    inner: Option<std::sync::MutexGuard<'a, T>>,
+}
+
+impl<T: ?Sized> std::ops::Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard already split")
+    }
+}
+
+impl<T: ?Sized> std::ops::DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard already split")
+    }
+}
+
+impl<T: ?Sized> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        if let Some(g) = self.inner.take() {
+            drop(g); // std release first, then the virtual one
+            sched::on_unlock(&self.lock.vid);
+        }
+    }
+}
+
+impl<'a, T> MutexGuard<'a, T> {
+    /// Hand back the raw `std` guard without emitting a virtual unlock
+    /// (used by the pass-through condvar path, which keeps holding).
+    fn split(mut self) -> (&'a Mutex<T>, std::sync::MutexGuard<'a, T>) {
+        let lock = self.lock;
+        let inner = self.inner.take().expect("guard already split");
+        std::mem::forget(self);
+        (lock, inner)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Condvar
+// ---------------------------------------------------------------------------
+
+/// `std::sync::Condvar` wrapper. In checked mode, waiters park on scheduler
+/// gates and notifies are schedule points (with a which-waiter choice for
+/// `notify_one`); the real condvar is still signaled so that threads
+/// released into pass-through mode after an aborted execution block in
+/// `std` instead of spinning.
+pub struct Condvar {
+    vid: OnceLock<u32>,
+    class: &'static str,
+    inner: std::sync::Condvar,
+}
+
+impl Condvar {
+    pub fn new() -> Self {
+        Self::named("condvar")
+    }
+
+    /// Named variant; the class labels diagnostics (e.g. `"engine.worker_cv"`).
+    pub fn named(class: &'static str) -> Self {
+        Self { vid: OnceLock::new(), class, inner: std::sync::Condvar::new() }
+    }
+
+    pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        let m_vid = guard.lock.vid.get().copied();
+        match m_vid {
+            Some(m) if sched::virtual_wait_applicable() => {
+                let lock = guard.lock;
+                drop(guard); // std unlock + virtual release, atomically from the model's view
+                sched::on_cv_wait(&self.vid, self.class, m);
+                // Granted (or released into pass-through): the scheduler
+                // already holds the virtual lock for us, so re-acquire raw.
+                wrap_lock(lock, lock.inner.lock())
+            }
+            _ => {
+                // Plain production path (also: unregistered mutex, aborted
+                // session): a real condvar wait, keeping the virtual hold.
+                let (lock, inner) = guard.split();
+                wrap_lock(lock, self.inner.wait(inner))
+            }
+        }
+    }
+
+    pub fn notify_one(&self) {
+        sched::on_notify(&self.vid, self.class, false);
+        self.inner.notify_one();
+    }
+
+    pub fn notify_all(&self) {
+        sched::on_notify(&self.vid, self.class, true);
+        self.inner.notify_all();
+    }
+}
+
+impl Default for Condvar {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl fmt::Debug for Condvar {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Condvar").field("class", &self.class).finish_non_exhaustive()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// mpsc channel
+// ---------------------------------------------------------------------------
+
+struct ChanMeta {
+    vid: OnceLock<u32>,
+    class: &'static str,
+}
+
+/// `std::sync::mpsc::channel` with racecheck hooks. The virtual scheduler
+/// tracks queue length and live-sender count, so a checked `recv` is only
+/// granted when a message is provably buffered (or all senders are gone).
+pub fn channel<T>() -> (Sender<T>, Receiver<T>) {
+    channel_named("chan")
+}
+
+/// Named variant; the class labels diagnostics (e.g. `"mpisim.mailbox"`).
+pub fn channel_named<T>(class: &'static str) -> (Sender<T>, Receiver<T>) {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let meta = std::sync::Arc::new(ChanMeta { vid: OnceLock::new(), class });
+    (Sender { inner: tx, meta: meta.clone() }, Receiver { inner: rx, meta })
+}
+
+pub struct Sender<T> {
+    inner: std::sync::mpsc::Sender<T>,
+    meta: std::sync::Arc<ChanMeta>,
+}
+
+impl<T> Sender<T> {
+    pub fn send(&self, value: T) -> Result<(), SendError<T>> {
+        sched::on_send(&self.meta.vid, self.meta.class);
+        let res = self.inner.send(value);
+        if res.is_err() {
+            // Receiver is gone; retract the optimistic queue accounting.
+            sched::on_send_failed(&self.meta.vid);
+        }
+        res
+    }
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        sched::on_sender_clone(&self.meta.vid, self.meta.class);
+        Self { inner: self.inner.clone(), meta: self.meta.clone() }
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        sched::on_sender_drop(&self.meta.vid, self.meta.class);
+    }
+}
+
+impl<T> fmt::Debug for Sender<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Sender").field("class", &self.meta.class).finish_non_exhaustive()
+    }
+}
+
+pub struct Receiver<T> {
+    inner: std::sync::mpsc::Receiver<T>,
+    meta: std::sync::Arc<ChanMeta>,
+}
+
+impl<T> Receiver<T> {
+    pub fn recv(&self) -> Result<T, RecvError> {
+        match sched::on_recv(&self.meta.vid, self.meta.class) {
+            sched::RecvGrant::Std => self.inner.recv(),
+            sched::RecvGrant::Data => {
+                Ok(self.inner.recv().expect("virtual channel accounting out of sync"))
+            }
+            sched::RecvGrant::Closed => Err(RecvError),
+        }
+    }
+
+    pub fn try_recv(&self) -> Result<T, TryRecvError> {
+        match sched::on_try_recv(&self.meta.vid, self.meta.class) {
+            sched::TryGrant::Std => self.inner.try_recv(),
+            sched::TryGrant::Data => {
+                Ok(self.inner.try_recv().expect("virtual channel accounting out of sync"))
+            }
+            sched::TryGrant::Empty => Err(TryRecvError::Empty),
+            sched::TryGrant::Closed => Err(TryRecvError::Disconnected),
+        }
+    }
+}
+
+impl<T> fmt::Debug for Receiver<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Receiver").field("class", &self.meta.class).finish_non_exhaustive()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Threads
+// ---------------------------------------------------------------------------
+
+/// `std::thread::JoinHandle` wrapper; a checked `join` is a schedule point
+/// that only becomes enabled once the child has exited, so the underlying
+/// `std` join never blocks a checked thread.
+pub struct JoinHandle<T> {
+    inner: std::thread::JoinHandle<T>,
+    vtid: Option<usize>,
+}
+
+impl<T> JoinHandle<T> {
+    pub fn join(self) -> std::thread::Result<T> {
+        if let Some(tid) = self.vtid {
+            sched::on_join(tid);
+        }
+        self.inner.join()
+    }
+}
+
+impl<T> fmt::Debug for JoinHandle<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("JoinHandle").field("vtid", &self.vtid).finish_non_exhaustive()
+    }
+}
+
+/// `std::thread::Builder` lookalike. Threads spawned from a checked thread
+/// are registered with the same scheduler session; everything else goes
+/// straight to `std`.
+pub struct Builder {
+    name: Option<String>,
+}
+
+impl Builder {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Self {
+        Self { name: None }
+    }
+
+    pub fn name(mut self, name: String) -> Self {
+        self.name = Some(name);
+        self
+    }
+
+    pub fn spawn<F, T>(self, f: F) -> std::io::Result<JoinHandle<T>>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        let name = self.name.unwrap_or_else(|| "sync-worker".to_string());
+        let b = std::thread::Builder::new().name(name.clone());
+        match sched::spawn_ctl(name) {
+            Some(ctl) => {
+                let vtid = ctl.tid();
+                let inner = b.spawn(move || sched::run_checked(ctl, f))?;
+                Ok(JoinHandle { inner, vtid: Some(vtid) })
+            }
+            None => {
+                let inner = b.spawn(f)?;
+                Ok(JoinHandle { inner, vtid: None })
+            }
+        }
+    }
+}
+
+/// `std::thread::spawn` lookalike (unnamed).
+pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    Builder::new().spawn(f).expect("failed to spawn thread")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    // All tests here run unchecked, i.e. exercise the production
+    // pass-through path: behavior must be indistinguishable from std.
+
+    #[test]
+    fn mutex_and_condvar_pass_through() {
+        let pair = Arc::new((Mutex::named(false, "test.flag"), Condvar::named("test.cv")));
+        let p2 = pair.clone();
+        let h = spawn(move || {
+            let (m, cv) = &*p2;
+            *m.lock().unwrap() = true;
+            cv.notify_all();
+        });
+        let (m, cv) = &*pair;
+        let mut g = m.lock().unwrap();
+        while !*g {
+            g = cv.wait(g).unwrap();
+        }
+        drop(g);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn channel_pass_through_matches_std_semantics() {
+        let (tx, rx) = channel();
+        tx.send(7u32).unwrap();
+        assert_eq!(rx.try_recv().unwrap(), 7);
+        assert_eq!(rx.try_recv(), Err(TryRecvError::Empty));
+        let tx2 = tx.clone();
+        drop(tx);
+        drop(tx2);
+        assert_eq!(rx.recv(), Err(RecvError));
+    }
+
+    #[test]
+    fn send_to_dropped_receiver_errors() {
+        let (tx, rx) = channel();
+        drop(rx);
+        assert!(tx.send(1u8).is_err());
+    }
+
+    #[test]
+    fn poisoning_propagates_like_std() {
+        let m = Arc::new(Mutex::new(0u32));
+        let m2 = m.clone();
+        let h = spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        });
+        assert!(h.join().is_err());
+        assert!(m.lock().is_err(), "poisoned lock must surface the PoisonError");
+        // And the data is still reachable through the error, like std.
+        let g = m.lock();
+        let v = match g {
+            Err(p) => *p.into_inner(),
+            Ok(g) => *g,
+        };
+        assert_eq!(v, 0);
+    }
+
+    #[test]
+    fn named_builder_spawns() {
+        let h = Builder::new()
+            .name("named-test".into())
+            .spawn(|| std::thread::current().name().map(|s| s.to_string()))
+            .unwrap();
+        assert_eq!(h.join().unwrap().as_deref(), Some("named-test"));
+    }
+}

@@ -393,3 +393,84 @@ fn prop_data_batches_match_samples() {
         }
     }
 }
+
+/// Property (regression, satellite of the racecheck PR): `wait_any` is
+/// fair across posting orders — it drains every posted request exactly
+/// once, the returned index always names the request that actually
+/// completed, and a request whose sender stays silent until every other
+/// payload has been consumed still completes (no starvation, no spin).
+/// Pure test: `wait_any` itself is deliberately unmodified.
+#[test]
+fn prop_wait_any_fair_across_posting_orders() {
+    for case in 0..CASES {
+        let p = 2 + (case % 4) as usize; // 2..=5 ranks, rank 0 receives
+        let per = 1 + (case % 3) as usize; // messages per sender
+        // With >= 2 senders, the highest rank holds its sends until told.
+        let late = if p > 2 { Some(p - 1) } else { None };
+        let results = run_world(p, move |mut c| {
+            let rank = c.rank();
+            if rank != 0 {
+                let mut rng = Rng::new(0xFA1A ^ (case * 131 + rank as u64));
+                let mut tags: Vec<u64> = (0..per).map(|j| (rank * 16 + j) as u64).collect();
+                for i in (1..tags.len()).rev() {
+                    let j = rng.below((i + 1) as u64) as usize;
+                    tags.swap(i, j);
+                }
+                if Some(rank) == late {
+                    c.recv(0, 7); // the go-signal: everyone else drained
+                }
+                for tag in tags {
+                    c.send(0, tag, vec![rank as f32, tag as f32]);
+                }
+                return Vec::new();
+            }
+            // Rank 0: post one irecv per expected message, in a shuffled
+            // order, then drain everything through wait_any.
+            let mut rng = Rng::new(0x9A17 ^ case * 7919);
+            let mut roster: Vec<(usize, u64)> = (1..p)
+                .flat_map(|s| (0..per).map(move |j| (s, (s * 16 + j) as u64)))
+                .collect();
+            for i in (1..roster.len()).rev() {
+                let j = rng.below((i + 1) as u64) as usize;
+                roster.swap(i, j);
+            }
+            let mut reqs: Vec<Request> = Vec::new();
+            let mut expect: Vec<(usize, u64)> = Vec::new();
+            for &(s, tag) in &roster {
+                reqs.push(c.irecv(s, tag));
+                expect.push((s, tag));
+            }
+            let mut got: Vec<(usize, u64)> = Vec::new();
+            let late_count = late.map_or(0, |_| per);
+            while reqs.len() > late_count {
+                let (i, data) = c.wait_any(&mut reqs);
+                let (s, tag) = expect.remove(i);
+                assert_ne!(
+                    Some(s),
+                    late,
+                    "case {case}: wait_any returned a request whose message was never sent"
+                );
+                assert_eq!(data, vec![s as f32, tag as f32], "case {case}: index/payload mismatch");
+                got.push((s, tag));
+            }
+            if let Some(ls) = late {
+                c.send(ls, 7, Vec::new());
+                while !reqs.is_empty() {
+                    let (i, data) = c.wait_any(&mut reqs);
+                    let (s, tag) = expect.remove(i);
+                    assert_eq!(s, ls, "case {case}: only late-sender requests should remain");
+                    assert_eq!(data, vec![s as f32, tag as f32], "case {case}");
+                    got.push((s, tag));
+                }
+            }
+            got
+        });
+        let mut got = results.into_iter().next().expect("rank 0 result");
+        got.sort_unstable();
+        let mut want: Vec<(usize, u64)> = (1..p)
+            .flat_map(|s| (0..per).map(move |j| (s, (s * 16 + j) as u64)))
+            .collect();
+        want.sort_unstable();
+        assert_eq!(got, want, "case {case}: every payload exactly once");
+    }
+}

@@ -1,0 +1,83 @@
+//! Integration tests for the racecheck gate: the library sweep stays
+//! clean at integration budgets, the CLI gate passes end to end, and a
+//! printed schedule seed round-trips through `--seed` reproducing the
+//! diagnostic bit for bit.
+
+use mxnet_mpi::analysis::racecheck::{
+    run_mutant_suite, run_racecheck, scenario_names, Budget,
+};
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_mxnet-mpi"))
+}
+
+#[test]
+fn every_scenario_is_clean_under_integration_budget() {
+    let budget = Budget { dfs: 96, random: 16, step_cap: 20_000 };
+    let report = run_racecheck(&budget, None);
+    assert_eq!(report.scenarios, scenario_names().len());
+    assert!(report.executions > 0);
+    let lines: Vec<String> = report.diagnostics.iter().map(|d| d.to_string()).collect();
+    assert!(report.ok(), "racecheck found real findings:\n{}", lines.join("\n"));
+}
+
+#[test]
+fn cli_gate_passes_and_proves_its_mutants() {
+    let out = bin()
+        .args(["racecheck", "--max-execs", "48"])
+        .output()
+        .expect("run mxnet-mpi racecheck");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "racecheck gate failed:\n{stdout}\n{stderr}");
+    assert!(stdout.contains("racecheck: OK"), "missing OK summary:\n{stdout}");
+    assert!(stdout.contains("seeded mutants caught"), "missing mutant tally:\n{stdout}");
+    assert!(!stdout.contains("ESCAPED"), "a seeded mutant escaped:\n{stdout}");
+}
+
+#[test]
+fn cli_scenario_filter_scopes_the_sweep() {
+    let out = bin()
+        .args(["racecheck", "--scenario", "engine-wait-var", "--max-execs", "24"])
+        .output()
+        .expect("run mxnet-mpi racecheck");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "filtered racecheck failed:\n{stdout}");
+    assert!(stdout.contains("1 scenario(s)"), "filter did not scope the sweep:\n{stdout}");
+
+    let out = bin()
+        .args(["racecheck", "--scenario", "no-such-scenario"])
+        .output()
+        .expect("run mxnet-mpi racecheck");
+    assert!(!out.status.success(), "an unknown scenario name must be an error");
+}
+
+#[test]
+fn printed_seed_round_trips_through_cli_bitwise() {
+    // Harvest a real diagnostic (and its printed seed) from a seeded
+    // mutant, then feed the seed back through the CLI: the replay must
+    // exit non-zero and print the byte-identical diagnostic line.
+    let outcomes = run_mutant_suite(&Budget::quick());
+    let o = outcomes
+        .iter()
+        .find(|o| o.label == "channel-cycle")
+        .expect("channel-cycle mutant registered");
+    assert!(o.caught, "channel-cycle mutant escaped the quick budget");
+    let diag = o.diag.as_ref().expect("caught mutant carries a diagnostic");
+    let expected_line = format!("  FINDING {diag}");
+
+    let out = bin()
+        .args(["racecheck", "--seed", &diag.seed])
+        .output()
+        .expect("run mxnet-mpi racecheck --seed");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        !out.status.success(),
+        "replaying a failing seed must exit non-zero:\n{stdout}"
+    );
+    assert!(
+        stdout.lines().any(|l| l == expected_line),
+        "replay must reproduce the diagnostic bitwise\nwant: {expected_line}\ngot:\n{stdout}"
+    );
+}
